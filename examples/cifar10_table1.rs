@@ -1,0 +1,62 @@
+//! Table I (paper §V-B): CIFAR-10-class inference on the Zynq-7020 —
+//! resources and latency of our backbone + linear head vs the published
+//! literature rows, plus the per-layer breakdown and the §IV-B "12×12 is
+//! the max alongside HDMI" capacity argument.
+//!
+//! Run: `cargo run --release --example cifar10_table1`.
+
+use anyhow::Result;
+use pefsl::cli::commands::{render_table1, table1_rows};
+use pefsl::dse::{build_backbone_graph, BackboneSpec};
+use pefsl::resources::{demonstrator_resources, max_array_with_hdmi};
+use pefsl::tarch::Tarch;
+use pefsl::tcompiler::compile;
+
+fn main() -> Result<()> {
+    let rows = table1_rows()?;
+    println!("{}", render_table1(&rows));
+
+    // Per-layer latency breakdown of the "Ours" row.
+    let tarch = Tarch::z7020_12x12_50mhz();
+    let spec = BackboneSpec { head_classes: Some(10), ..BackboneSpec::headline() };
+    let g = build_backbone_graph(&spec, 7)?;
+    let p = compile(&g, &tarch)?;
+    println!("per-layer breakdown (array 12, 50 MHz):");
+    println!("  {:<14} {:>10} {:>9} {:>12}", "layer", "cycles", "ms", "MACs");
+    for l in &p.layers {
+        println!(
+            "  {:<14} {:>10} {:>9.3} {:>12}",
+            l.name,
+            l.est_cycles,
+            tarch.cycles_to_ms(l.est_cycles),
+            l.macs
+        );
+    }
+    println!(
+        "  TOTAL {} cycles = {:.1} ms (paper: 35.9 ms)\n",
+        p.est_total_cycles,
+        p.est_latency_ms()
+    );
+
+    // Capacity argument of §IV-B.
+    println!("Z7020 capacity sweep (accelerator + HDMI, with routing margin):");
+    for r in [8usize, 10, 12, 13, 14] {
+        let mut t = Tarch::z7020_12x12();
+        t.array_size = r;
+        let res = demonstrator_resources(&t);
+        println!(
+            "  {r:>2}×{r:<2}: LUT {:>6} FF {:>6} BRAM {:>3} DSP {:>3}  fits: {}",
+            res.lut,
+            res.ff,
+            res.bram36,
+            res.dsp,
+            res.fits_z7020()
+        );
+    }
+    println!(
+        "max array alongside HDMI: {}×{} (paper picks 12×12)",
+        max_array_with_hdmi(),
+        max_array_with_hdmi()
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Design-space exploration (paper §V-A / Fig. 5): compiles the full
+//! hyperparameter grid on several tarchs, joins the trained accuracy axis,
+//! prints both Fig. 5 panels, and adds the two ablations the paper calls
+//! out — array size (8×8 vs 12×12) and clock (50 vs 125 MHz).
+//!
+//! Run: `cargo run --release --example dse_sweep`.
+
+use anyhow::Result;
+use pefsl::dse::{fig5_rows, join_accuracy, render_table};
+use pefsl::json;
+use pefsl::tarch::Tarch;
+
+fn main() -> Result<()> {
+    let acc_path = pefsl::artifacts_dir().join("dse_results.json");
+    let acc = if acc_path.exists() {
+        Some(json::from_file(&acc_path)?)
+    } else {
+        eprintln!("note: {} missing — latency axis only", acc_path.display());
+        None
+    };
+
+    // -- Fig. 5 top (32×32) and bottom (84×84) on the paper's tarch -------
+    let tarch = Tarch::z7020_12x12();
+    for test_size in [32usize, 84] {
+        let mut rows = fig5_rows(&tarch, test_size)?;
+        if let Some(doc) = &acc {
+            join_accuracy(&mut rows, doc);
+        }
+        println!("{}", render_table(&rows, test_size));
+
+        // Pareto frontier (the paper's "top-left corner" discussion).
+        let mut frontier: Vec<&pefsl::dse::DseRow> = Vec::new();
+        let mut sorted: Vec<&pefsl::dse::DseRow> = rows.iter().collect();
+        sorted.sort_by_key(|r| r.cycles);
+        let acc_of = |r: &pefsl::dse::DseRow| {
+            if test_size == 32 { r.acc_test32 } else { r.acc_test84 }
+        };
+        let mut best = f64::MIN;
+        for r in sorted {
+            if let Some(a) = acc_of(r) {
+                if a > best {
+                    best = a;
+                    frontier.push(r);
+                }
+            }
+        }
+        if !frontier.is_empty() {
+            println!("Pareto frontier ({test_size}×{test_size}):");
+            for r in &frontier {
+                println!(
+                    "  {:<40} {:>8.2} ms  acc {:.3}",
+                    r.spec.name(),
+                    r.latency_ms,
+                    acc_of(r).unwrap()
+                );
+            }
+            println!();
+        }
+    }
+
+    // -- ablation: array size --------------------------------------------
+    println!("Ablation — array size (headline config):");
+    for (name, t) in [("8x8", Tarch::z7020_8x8()), ("12x12", Tarch::z7020_12x12())] {
+        let rows = fig5_rows(&t, 32)?;
+        let headline = rows
+            .iter()
+            .find(|r| r.spec.depth == 9 && r.spec.feature_maps == 16 && r.spec.strided)
+            .unwrap();
+        println!(
+            "  {name:>6}: {:>10} cycles = {:>7.2} ms  (PE util {:.1}%)",
+            headline.cycles,
+            headline.latency_ms,
+            100.0 * headline.macs as f64
+                / (headline.cycles as f64 * (t.array_size * t.array_size) as f64)
+        );
+    }
+
+    // -- ablation: clock ----------------------------------------------------
+    println!("Ablation — clock (same program, Table I vs demonstrator):");
+    for t in [Tarch::z7020_12x12_50mhz(), Tarch::z7020_12x12()] {
+        let rows = fig5_rows(&t, 32)?;
+        let headline = rows
+            .iter()
+            .find(|r| r.spec.depth == 9 && r.spec.feature_maps == 16 && r.spec.strided)
+            .unwrap();
+        println!("  {:>5.0} MHz: {:>7.2} ms", t.clock_mhz, headline.latency_ms);
+    }
+    Ok(())
+}

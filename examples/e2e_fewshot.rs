@@ -1,0 +1,130 @@
+//! End-to-end driver: proves all layers compose on a real small workload.
+//!
+//! The pipeline this example exercises, end to end:
+//!
+//! 1. **Build-time (already done by `make artifacts`)**: the JAX L2 model
+//!    (with L1 Pallas kernels) is trained on the synthetic few-shot dataset
+//!    for a few hundred steps (loss curve in `artifacts/train_log.json`),
+//!    BN-folded, quantized to Q8.8, exported as graph + weights, and AOT
+//!    lowered to HLO text.
+//! 2. **This binary**: verifies the loss curve decreased, loads the graph,
+//!    compiles it for the paper's tarch, checks PJRT-vs-simulator feature
+//!    parity, serves a batch of frames through the full demonstrator loop
+//!    (camera → preproc → backbone → NCM), and runs the paper's episodic
+//!    evaluation over the deployed features — reporting latency,
+//!    throughput, power and accuracy in one place (EXPERIMENTS.md quotes
+//!    this output verbatim).
+//!
+//! Run: `cargo run --release --example e2e_fewshot`.
+
+use anyhow::{bail, Context, Result};
+use pefsl::coordinator::{DemoConfig, Demonstrator, SimBackend};
+use pefsl::fewshot::{evaluate, EpisodeConfig, FeatureBank};
+use pefsl::graph::import_files;
+use pefsl::json::{self, Value};
+use pefsl::runtime::Runtime;
+use pefsl::sim::Simulator;
+use pefsl::tarch::Tarch;
+use pefsl::tcompiler::compile;
+use pefsl::util::tensorio::read_tensor;
+use pefsl::video::DisplaySink;
+
+fn main() -> Result<()> {
+    let dir = pefsl::artifacts_dir();
+    println!("=== PEFSL end-to-end driver ===\nartifacts: {}\n", dir.display());
+
+    // -- 1. training actually happened and converged ----------------------
+    let log = json::from_file(dir.join("train_log.json"))
+        .context("train_log.json — run `make artifacts` first")?;
+    let losses = log.req_arr("loss")?;
+    let first = losses.first().and_then(Value::as_f64).unwrap_or(0.0);
+    let last = losses.last().and_then(Value::as_f64).unwrap_or(f64::MAX);
+    println!("[1] training: {} logged points, loss {:.3} → {:.3}", losses.len(), first, last);
+    if last >= first {
+        bail!("training loss did not decrease ({first} → {last})");
+    }
+    if let Some(evals) = log.get("eval").and_then(Value::as_arr) {
+        for e in evals {
+            println!(
+                "    step {:>4}: val 5w1s = {:.3}",
+                e.get("step").and_then(Value::as_i64).unwrap_or(-1),
+                e.get("val_acc_5w1s").and_then(Value::as_f64).unwrap_or(f64::NAN)
+            );
+        }
+    }
+
+    // -- 2. deploy: compile for the accelerator ---------------------------
+    let graph = import_files(dir.join("graph.json"), dir.join("weights.bin"))?;
+    let tarch = Tarch::z7020_12x12();
+    let program = compile(&graph, &tarch)?;
+    println!(
+        "\n[2] deploy: {} → {} ({} instrs, modeled {:.2} ms accelerator, PE util {:.1}%)",
+        graph.name,
+        tarch.name,
+        program.instrs.len(),
+        program.est_latency_ms(),
+        program.est_utilization() * 100.0
+    );
+
+    // -- 3. numeric parity: PJRT f32 vs bit-exact Q8.8 sim ----------------
+    let input = read_tensor(dir.join("testvec_input.bin"))?;
+    let img_elems: usize = input.shape[1..].iter().product();
+    let img = &input.as_f32()?[..img_elems];
+    let dims = vec![1, input.shape[1], input.shape[2], input.shape[3]];
+
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![img_elems])?;
+    let f32_feats = &exe.run_f32(&[(img, &dims)])?[0];
+    let mut sim = Simulator::new(&program, &graph);
+    let sim_out = sim.run_f32(img)?;
+    let max_err = f32_feats
+        .iter()
+        .zip(&sim_out.output_f32)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("[3] parity: max |pjrt_f32 − sim_q8.8| = {max_err:.4}");
+    if max_err > 0.15 {
+        bail!("quantization gap too large: {max_err}");
+    }
+
+    // -- 4. serve: the demonstrator loop on the deployed model ------------
+    let backend = SimBackend::new(graph, &tarch)?;
+    let cfg = DemoConfig { tarch: tarch.clone(), max_frames: 0, ..Default::default() };
+    let mut demo = Demonstrator::new(cfg, backend, DisplaySink::Null);
+    let t0 = std::time::Instant::now();
+    let report = demo.run_scripted(3, 32)?;
+    let wall = t0.elapsed();
+    println!(
+        "\n[4] serve: {} frames in {:.2} s host wall ({:.1} frames/s host)\n\
+         \x20   modeled: {:.1} FPS, {:.2} ms inference, {:.2} W, {:.2} h battery; live acc {:.3}",
+        report.frames,
+        wall.as_secs_f64(),
+        report.frames as f64 / wall.as_secs_f64(),
+        report.modeled_fps,
+        report.inference_ms_mean,
+        report.power_w,
+        report.battery_hours,
+        report.accuracy.unwrap_or(f64::NAN)
+    );
+
+    // -- 5. evaluate: the paper's protocol over deployed features ---------
+    let bank = FeatureBank::from_tensors(
+        &read_tensor(dir.join("novel_features.bin"))?,
+        &read_tensor(dir.join("novel_labels.bin"))?,
+    )?;
+    let e1 = evaluate(&bank, &EpisodeConfig { n_episodes: 600, ..Default::default() }, true)?;
+    let e5 = evaluate(
+        &bank,
+        &EpisodeConfig { n_shots: 5, n_queries: 10, n_episodes: 300, ..Default::default() },
+        true,
+    )?;
+    println!(
+        "\n[5] evaluate (deployed Q8.8 features, novel split):\n\
+         \x20   5-way 1-shot: {:.4} ± {:.4} (paper: 0.54 on MiniImageNet)\n\
+         \x20   5-way 5-shot: {:.4} ± {:.4}",
+        e1.accuracy, e1.ci95, e5.accuracy, e5.ci95
+    );
+
+    println!("\ne2e OK — all five stages composed.");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Quickstart: the 60-second tour of the PEFSL stack.
+//!
+//! Loads the AOT artifacts (trained backbone), runs one image through
+//! (a) the PJRT f32 reference and (b) the bit-exact accelerator simulator,
+//! compares features, then does a tiny few-shot enrollment + classification
+//! with the NCM head — the whole paper pipeline in one file.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::{Context, Result};
+use pefsl::graph::import_files;
+use pefsl::ncm::NcmClassifier;
+use pefsl::runtime::Runtime;
+use pefsl::sim::Simulator;
+use pefsl::tarch::Tarch;
+use pefsl::tcompiler::compile;
+use pefsl::util::tensorio::read_tensor;
+
+fn main() -> Result<()> {
+    let dir = pefsl::artifacts_dir();
+    println!("artifacts: {}", dir.display());
+
+    // ---- load the deployed graph + a test image -------------------------
+    let graph = import_files(dir.join("graph.json"), dir.join("weights.bin"))
+        .context("run `make artifacts` first")?;
+    let input = read_tensor(dir.join("testvec_input.bin"))?;
+    let img_elems: usize = input.shape[1..].iter().product();
+    let img = &input.as_f32()?[..img_elems];
+    println!(
+        "backbone: {} ({} weights, {} ops, feature dim {})",
+        graph.name,
+        graph.total_weight_elems(),
+        graph.ops.len(),
+        graph.feature_dim
+    );
+
+    // ---- (a) f32 reference via PJRT -------------------------------------
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![img_elems])?;
+    let dims = vec![1, input.shape[1], input.shape[2], input.shape[3]];
+    let f32_feats = &exe.run_f32(&[(img, &dims)])?[0];
+    println!("pjrt features[0..4]  = {:?}", &f32_feats[..4]);
+
+    // ---- (b) bit-exact Q8.8 accelerator simulation ----------------------
+    let tarch = Tarch::z7020_12x12();
+    let program = compile(&graph, &tarch)?;
+    let mut sim = Simulator::new(&program, &graph);
+    let result = sim.run_f32(img)?;
+    println!("sim  features[0..4]  = {:?}", &result.output_f32[..4]);
+    println!(
+        "sim  latency: {} cycles = {:.2} ms @ {} MHz (paper: 30 ms incl. driver)",
+        result.cycles,
+        result.latency_ms,
+        tarch.clock_mhz
+    );
+    let max_err = f32_feats
+        .iter()
+        .zip(&result.output_f32)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max)
+        ;
+    println!("max |f32 − Q8.8| = {max_err:.4}  (quantization error)");
+
+    // ---- few-shot: enroll 1 shot per class, classify queries ------------
+    let feats = read_tensor(dir.join("novel_features.bin"))?;
+    let labels = read_tensor(dir.join("novel_labels.bin"))?;
+    let bank = pefsl::fewshot::FeatureBank::from_tensors(&feats, &labels)?;
+    let mut ncm = NcmClassifier::new(bank.dim).with_base_mean(bank.mean_feature())?;
+    let mut hits = 0;
+    let mut total = 0;
+    for way in 0..5 {
+        let c = ncm.add_class(format!("class{way}"));
+        ncm.enroll(c, &bank.by_class[way][0])?; // 1 shot
+    }
+    for (way, samples) in bank.by_class.iter().take(5).enumerate() {
+        for q in samples.iter().skip(1).take(10) {
+            if ncm.classify(q)?.class_idx == way {
+                hits += 1;
+            }
+            total += 1;
+        }
+    }
+    println!("few-shot sanity: {hits}/{total} queries correct (5-way 1-shot)");
+    println!("quickstart OK");
+    Ok(())
+}

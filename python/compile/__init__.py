@@ -1,0 +1,5 @@
+"""PEFSL build-time Python package (L1 kernels + L2 model + AOT export).
+
+Nothing in here runs on the request path: ``make artifacts`` invokes
+``compile.aot`` once, and the Rust binary consumes ``artifacts/`` afterwards.
+"""

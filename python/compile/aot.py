@@ -1,0 +1,326 @@
+"""AOT artifact builder — the only Python entry point (`make artifacts`).
+
+Runs ONCE at build time; the Rust binary is self-contained afterwards.
+Produces, under ``artifacts/``:
+
+  model.hlo.txt          folded backbone inference (jnp backend) — headline cfg
+  model_pallas.hlo.txt   same graph through the L1 Pallas kernels (interpret)
+  ncm.hlo.txt            NCM distance head (queries × centroids → dists)
+  graph.json             tcompiler input: op list + shapes (headline cfg)
+  weights.bin            named Q8.8 weight records ("PFT1" format)
+  testvec_input.bin      one preprocessed input image batch
+  testvec_feat_f32.bin   expected f32 features for testvec_input
+  testvec_feat_q.bin     expected quantization-aware features
+  novel_features.bin     quantized-model features for the novel split
+  novel_labels.bin       class ids for novel_features rows
+  train_log.json         loss curve + val accuracies of the headline training
+  dse_results.json       accuracy rows of the Fig. 5 sweep (latency filled by rust)
+  manifest.json          index of everything above + config hashes
+
+HLO is emitted as TEXT (never .serialize()): xla_extension 0.5.1 rejects
+jax≥0.5 64-bit-id protos; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import fewshot as FS
+from . import model as M
+from . import train as T
+from .export import save_graph, save_named_tensors, save_tensor
+from .quantize import QFormat, forward_folded_quant
+
+HEADLINE = M.BackboneConfig(depth=9, feature_maps=16, strided=True, image_size=32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the crate-compatible path).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big weight literals as ``constant({...})``, which the rust-side text
+    parser would silently fill with zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8 emits source_end_line/column metadata the 0.5.1 HLO text
+    # parser rejects; drop metadata entirely (it is debug-only).
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_backbone(folded, cfg: M.BackboneConfig, backend: M.Backend, batch: int = 1) -> str:
+    """Lower folded inference to HLO text with weights baked in as constants.
+
+    Baking (closure capture) keeps the Rust call signature to a single image
+    tensor — mirroring the deployed bitstream where weights live in DRAM,
+    loaded once.
+    """
+    spec = jax.ShapeDtypeStruct((batch, cfg.image_size, cfg.image_size, cfg.in_channels), jnp.float32)
+
+    def fn(x):
+        return (M.forward_folded(folded, x, cfg, backend=backend),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_ncm(n_ways: int, dim: int, max_queries: int) -> str:
+    """Lower the NCM distance computation (ref path — tiny tensors)."""
+    from .kernels import ref as kref
+
+    qspec = jax.ShapeDtypeStruct((max_queries, dim), jnp.float32)
+    cspec = jax.ShapeDtypeStruct((n_ways, dim), jnp.float32)
+
+    def fn(q, c):
+        return (kref.ncm_distances_ref(q, c),)
+
+    return to_hlo_text(jax.jit(fn).lower(qspec, cspec))
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def export_novel_features(params, folded, splits, cfg, out_dir, fmt=QFormat()):
+    """Quant-model features for the novel split → rust fewshot eval."""
+    novel = splits["novel"].resized(cfg.image_size)
+    nc, pc = novel.n_classes, novel.per_class
+    flat = novel.images.reshape(nc * pc, cfg.image_size, cfg.image_size, 3)
+    fwd = jax.jit(lambda x: forward_folded_quant(folded, x, cfg, fmt))
+    feats = []
+    for i in range(0, len(flat), 64):
+        feats.append(np.asarray(fwd(jnp.asarray(flat[i : i + 64]))))
+    feats = np.concatenate(feats)
+    labels = np.repeat(np.arange(nc, dtype=np.int32), pc)
+    save_tensor(os.path.join(out_dir, "novel_features.bin"), feats.astype(np.float32))
+    save_tensor(os.path.join(out_dir, "novel_labels.bin"), labels)
+    return feats.shape
+
+
+def run_dse_sweep(splits, out_path: str, full: bool, steps: int, verbose: bool):
+    """Fig. 5 accuracy axis: train each config on a reduced budget, evaluate
+    5-way 1-shot at test resolutions 32 and 84.
+
+    The paper sweeps depth×{16,32,64}fm×{32,84,100}train×{strided,maxpool}
+    exhaustively on GPUs; on the CPU build box the default sweep covers
+    fm∈{16,32} and train∈{32,84} (the corners that carry Fig. 5's takeaways)
+    and ``--full-dse`` unlocks the rest. Latency (the x-axis) is computed for
+    ALL paper configs by the Rust tcompiler — see `cargo bench --bench
+    fig5_dse`.
+    """
+    fms = (16, 32, 64) if full else (16, 32)
+    train_sizes = (32, 84, 100) if full else (32, 84)
+    rows = []
+    for depth in (9, 12):
+        for fm in fms:
+            for ts in train_sizes:
+                for strided in (True, False):
+                    cfg = M.BackboneConfig(depth=depth, feature_maps=fm,
+                                           strided=strided, image_size=ts)
+                    # Cost-normalized step budget: big configs get fewer steps.
+                    rel_cost = (fm / 16) ** 2 * (ts / 32) ** 2
+                    csteps = max(30, int(steps / max(1.0, rel_cost ** 0.5)))
+                    tcfg = T.TrainConfig(steps=csteps, batch=32, eval_every=10**9,
+                                         seed=42)
+                    t0 = time.time()
+                    params, _, _ = T.train_backbone(cfg, tcfg, splits, verbose=False)
+                    base_mean = FS.compute_base_mean(params, splits["base"].resized(ts), cfg)
+                    row = {
+                        "depth": depth, "feature_maps": fm, "train_size": ts,
+                        "strided": strided, "steps": csteps,
+                        "params": M.count_params(params), "macs_32": None,
+                    }
+                    for test_size in (32, 84):
+                        ecfg = M.BackboneConfig(depth=depth, feature_maps=fm,
+                                                strided=strided, image_size=test_size)
+                        acc, ci = FS.evaluate(
+                            params, splits["novel"].resized(test_size), ecfg,
+                            FS.EpisodeConfig(n_episodes=150), base_mean)
+                        row[f"acc_test{test_size}"] = round(acc, 4)
+                        row[f"ci95_test{test_size}"] = round(ci, 4)
+                    row["train_seconds"] = round(time.time() - t0, 1)
+                    rows.append(row)
+                    if verbose:
+                        print(f"[dse] {cfg.name}: steps={csteps} "
+                              f"acc32={row['acc_test32']:.3f} acc84={row['acc_test84']:.3f} "
+                              f"({row['train_seconds']}s)", flush=True)
+    with open(out_path, "w") as f:
+        json.dump({"protocol": {"episodes": 150, "ways": 5, "shots": 1,
+                                "reduced_budget": not full},
+                   "rows": rows}, f, indent=1)
+    return rows
+
+
+def regen_hlo(out: str) -> None:
+    """Re-lower the HLO artifacts from saved folded weights (no training).
+
+    Used when only the lowering pipeline changed (``--hlo-only``).
+    """
+    from .export import load_named_tensors
+
+    cfg = HEADLINE
+    named = load_named_tensors(os.path.join(out, "weights_f32.bin"))
+    folded = {"blocks": []}
+    for b in range(cfg.n_blocks):
+        fb = {}
+        for cname in ("conv1", "conv2", "conv3", "short"):
+            fb[cname] = {
+                "w": jnp.asarray(named[f"b{b}.{cname}.w"]),
+                "b": jnp.asarray(named[f"b{b}.{cname}.b"]),
+            }
+        folded["blocks"].append(fb)
+    print("[aot] re-lowering HLO from saved folded weights", flush=True)
+    with open(os.path.join(out, "model.hlo.txt"), "w") as f:
+        f.write(lower_backbone(folded, cfg, M.Backend.jnp(), batch=1))
+    with open(os.path.join(out, "model_pallas.hlo.txt"), "w") as f:
+        f.write(lower_backbone(folded, cfg, M.Backend.pallas(), batch=1))
+    with open(os.path.join(out, "ncm.hlo.txt"), "w") as f:
+        f.write(lower_ncm(n_ways=5, dim=cfg.feature_dim, max_queries=16))
+    # refresh manifest hashes
+    mpath = os.path.join(out, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for name in ("model.hlo.txt", "model_pallas.hlo.txt", "ncm.hlo.txt"):
+            p = os.path.join(out, name)
+            manifest["files"][name] = {"sha256": _sha256(p), "bytes": os.path.getsize(p)}
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print("[aot] hlo regen done", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="PEFSL AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--hlo-only", action="store_true",
+                    help="re-lower HLO from saved folded weights (no training)")
+    ap.add_argument("--steps", type=int, default=300, help="headline training steps")
+    ap.add_argument("--dse-steps", type=int, default=80, help="per-config DSE step budget")
+    ap.add_argument("--per-class", type=int, default=60, help="images per synthetic class")
+    ap.add_argument("--skip-dse", action="store_true", help="skip the Fig. 5 accuracy sweep")
+    ap.add_argument("--full-dse", action="store_true", help="full paper sweep (slow)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: tiny training + tiny dataset (CI)")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    t_start = time.time()
+
+    if args.hlo_only:
+        regen_hlo(out)
+        return
+
+    if args.quick:
+        args.steps, args.dse_steps, args.per_class = 30, 0, 24
+
+    cfg = HEADLINE
+    fmt = QFormat()
+
+    print(f"[aot] generating synthetic few-shot splits (per_class={args.per_class})", flush=True)
+    splits = D.build_splits(per_class=args.per_class, res=D.NATIVE_RES)
+
+    print(f"[aot] training headline backbone {cfg.name} for {args.steps} steps", flush=True)
+    tcfg = T.TrainConfig(steps=args.steps, eval_every=max(50, args.steps // 3))
+    params, heads, log = T.train_backbone(
+        cfg, tcfg, splits, log_path=os.path.join(out, "train_log.json"))
+
+    print("[aot] evaluating novel-split 5-way 1-shot (f32 + Q8.8)", flush=True)
+    base_mean = FS.compute_base_mean(params, splits["base"].resized(cfg.image_size), cfg)
+    acc_f32, ci_f32 = FS.evaluate(params, splits["novel"].resized(cfg.image_size), cfg,
+                                  FS.EpisodeConfig(n_episodes=300), base_mean)
+
+    folded = M.fold_bn(params)
+
+    print("[aot] exporting graph.json + weights.bin", flush=True)
+    save_graph(os.path.join(out, "graph.json"), os.path.join(out, "weights.bin"),
+               folded, cfg, fmt)
+
+    # Folded f32 weights (HLO regen + the PJRT weight-feeding path).
+    folded_named = {}
+    for b, fb in enumerate(folded["blocks"]):
+        for cname in ("conv1", "conv2", "conv3", "short"):
+            folded_named[f"b{b}.{cname}.w"] = np.asarray(fb[cname]["w"], np.float32)
+            folded_named[f"b{b}.{cname}.b"] = np.asarray(fb[cname]["b"], np.float32)
+    save_named_tensors(os.path.join(out, "weights_f32.bin"), folded_named)
+
+    print("[aot] lowering HLO text artifacts", flush=True)
+    hlo_jnp = lower_backbone(folded, cfg, M.Backend.jnp(), batch=1)
+    with open(os.path.join(out, "model.hlo.txt"), "w") as f:
+        f.write(hlo_jnp)
+    hlo_pallas = lower_backbone(folded, cfg, M.Backend.pallas(), batch=1)
+    with open(os.path.join(out, "model_pallas.hlo.txt"), "w") as f:
+        f.write(hlo_pallas)
+    with open(os.path.join(out, "ncm.hlo.txt"), "w") as f:
+        f.write(lower_ncm(n_ways=5, dim=cfg.feature_dim, max_queries=16))
+
+    print("[aot] exporting test vectors", flush=True)
+    rng = np.random.default_rng(3)
+    x, _ = D.sample_batch(splits["novel"].resized(cfg.image_size), 4, rng)
+    feat_f32 = np.asarray(M.forward_folded(folded, jnp.asarray(x), cfg))
+    feat_q = np.asarray(forward_folded_quant(folded, jnp.asarray(x), cfg, fmt))
+    save_tensor(os.path.join(out, "testvec_input.bin"), x.astype(np.float32))
+    save_tensor(os.path.join(out, "testvec_feat_f32.bin"), feat_f32.astype(np.float32))
+    save_tensor(os.path.join(out, "testvec_feat_q.bin"), feat_q.astype(np.float32))
+
+    print("[aot] exporting novel-split features for rust eval", flush=True)
+    export_novel_features(params, folded, splits, cfg, out, fmt)
+
+    dse_rows = None
+    if not args.skip_dse and args.dse_steps > 0:
+        print("[aot] running Fig. 5 DSE accuracy sweep", flush=True)
+        dse_rows = run_dse_sweep(splits, os.path.join(out, "dse_results.json"),
+                                 args.full_dse, args.dse_steps, verbose=True)
+
+    manifest = {
+        "created_unix": int(time.time()),
+        "headline_config": cfg.name,
+        "backbone": {"depth": cfg.depth, "feature_maps": cfg.feature_maps,
+                     "strided": cfg.strided, "image_size": cfg.image_size,
+                     "feature_dim": cfg.feature_dim,
+                     "params": M.count_params(params),
+                     "macs": M.count_macs(cfg)},
+        "qformat": {"total_bits": fmt.total_bits, "frac_bits": fmt.frac_bits},
+        "accuracy": {"novel_5w1s_f32": round(acc_f32, 4), "ci95": round(ci_f32, 4)},
+        "dataset": {"kind": "synthetic-miniimagenet", "per_class": args.per_class,
+                    "splits": {"base": D.N_BASE, "val": D.N_VAL, "novel": D.N_NOVEL}},
+        "files": {},
+        "build_seconds": None,
+    }
+    for name in ("model.hlo.txt", "model_pallas.hlo.txt", "ncm.hlo.txt", "graph.json",
+                 "weights.bin", "testvec_input.bin", "testvec_feat_f32.bin",
+                 "testvec_feat_q.bin", "novel_features.bin", "novel_labels.bin",
+                 "train_log.json"):
+        p = os.path.join(out, name)
+        if os.path.exists(p):
+            manifest["files"][name] = {"sha256": _sha256(p), "bytes": os.path.getsize(p)}
+    if dse_rows is not None:
+        manifest["files"]["dse_results.json"] = {
+            "sha256": _sha256(os.path.join(out, "dse_results.json")),
+            "bytes": os.path.getsize(os.path.join(out, "dse_results.json")),
+        }
+    manifest["build_seconds"] = round(time.time() - t_start, 1)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {manifest['build_seconds']}s → {out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""Synthetic MiniImageNet substitute (see DESIGN.md §2).
+
+MiniImageNet is ImageNet-derived and cannot be shipped; this module builds a
+procedural few-shot dataset with the *same structure*: disjoint base /
+validation / novel class splits (64/16/20 by default), N images per class at
+84×84, resizable to the train/test resolutions of the paper's Fig. 5 sweep.
+
+Each class is a latent parameter vector (shape family, two-color palette,
+texture frequency/orientation, scale) and each sample draws per-instance
+jitter (position, rotation, color noise, background). Intra-class variance is
+large enough that NCM over a *random* backbone does clearly worse than over a
+trained one, which is what the DSE accuracy axis needs to rank architectures.
+
+Everything is pure numpy (build-time only) and fully seeded.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# Split sizes mirror MiniImageNet.
+N_BASE, N_VAL, N_NOVEL = 64, 16, 20
+NATIVE_RES = 84
+
+
+@dataclass(frozen=True)
+class ClassSpec:
+    """Latent generative parameters of one synthetic class."""
+
+    shape: int          # 0 disk, 1 square, 2 triangle, 3 ring, 4 cross, 5 stripes-blob
+    fg: tuple[float, float, float]
+    bg: tuple[float, float, float]
+    tex_freq: float     # texture spatial frequency (cycles per image)
+    tex_angle: float    # texture orientation, radians
+    tex_amp: float      # texture amplitude
+    scale: float        # object radius as a fraction of the image
+    squash: float       # anisotropy of the object
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence(seed))
+
+
+def make_class_specs(n_classes: int, seed: int) -> list[ClassSpec]:
+    """Draw class latents. Classes differ in shape family and palette."""
+    rng = _rng(seed)
+    specs = []
+    for c in range(n_classes):
+        # Narrow, overlapping palettes: class identity must come from the
+        # *combination* of shape × texture × palette, not color alone —
+        # otherwise NCM over any backbone saturates and the DSE accuracy
+        # axis cannot rank architectures.
+        fg = tuple(rng.uniform(0.35, 0.85, 3).round(4))
+        bg = tuple(rng.uniform(0.15, 0.5, 3).round(4))
+        specs.append(
+            ClassSpec(
+                shape=int(rng.integers(0, 6)),
+                fg=fg,
+                bg=bg,
+                tex_freq=float(rng.uniform(3.0, 14.0)),
+                tex_angle=float(rng.uniform(0, np.pi)),
+                tex_amp=float(rng.uniform(0.15, 0.5)),
+                scale=float(rng.uniform(0.2, 0.38)),
+                squash=float(rng.uniform(0.6, 1.0)),
+            )
+        )
+    return specs
+
+
+def _shape_mask(shape: int, xx, yy, scale: float, squash: float) -> np.ndarray:
+    """Signed membership mask of the object in [-1,1]² coordinates."""
+    x, y = xx / scale, yy / (scale * squash)
+    r = np.sqrt(x * x + y * y)
+    if shape == 0:                       # disk
+        return (r < 1.0).astype(np.float32)
+    if shape == 1:                       # square
+        return ((np.abs(x) < 1.0) & (np.abs(y) < 1.0)).astype(np.float32)
+    if shape == 2:                       # triangle
+        return ((y > -0.8) & (np.abs(x) < (1.0 - (y + 0.8) / 1.8))).astype(np.float32)
+    if shape == 3:                       # ring
+        return ((r < 1.0) & (r > 0.55)).astype(np.float32)
+    if shape == 4:                       # cross
+        return ((np.abs(x) < 0.35) | (np.abs(y) < 0.35)).astype(np.float32) * (r < 1.3)
+    # stripes-blob: disk modulated by a coarse square wave
+    stripe = (np.sin(x * 4.0) > 0).astype(np.float32)
+    return (r < 1.0).astype(np.float32) * (0.4 + 0.6 * stripe)
+
+
+def render_sample(spec: ClassSpec, rng: np.random.Generator, res: int = NATIVE_RES) -> np.ndarray:
+    """One HWC float32 image in [0,1] with per-sample jitter."""
+    # Per-sample nuisance parameters — deliberately aggressive so that
+    # few-shot accuracy depends on the backbone quality (see DESIGN.md §2).
+    cx, cy = rng.uniform(-0.3, 0.3, 2)
+    theta = rng.uniform(0, 2 * np.pi)
+    scale = spec.scale * rng.uniform(0.7, 1.35)
+    phase = rng.uniform(0, 2 * np.pi)
+    fg_jit = rng.uniform(-0.18, 0.18, 3)        # per-sample hue drift
+    bg_jit = rng.uniform(-0.12, 0.12, 3)
+    illum = rng.uniform(0.75, 1.25)             # global illumination
+
+    lin = np.linspace(-1.0, 1.0, res, dtype=np.float32)
+    yy, xx = np.meshgrid(lin, lin, indexing="ij")
+    xr = (xx - cx) * np.cos(theta) + (yy - cy) * np.sin(theta)
+    yr = -(xx - cx) * np.sin(theta) + (yy - cy) * np.cos(theta)
+
+    mask = _shape_mask(spec.shape, xr, yr, scale, spec.squash)
+
+    # Distractor object of a random shape/position (never informative).
+    dx, dy = rng.uniform(-0.8, 0.8, 2)
+    dshape = int(rng.integers(0, 6))
+    dmask = _shape_mask(dshape, xx - dx, yy - dy, 0.15, 1.0)
+    dcol = rng.uniform(0.1, 0.9, 3)
+
+    # Class texture (oriented sinusoid) + per-sample phase, in *object*
+    # coordinates so it rotates with the object.
+    ta = spec.tex_angle
+    carrier = np.sin(
+        spec.tex_freq * np.pi * (xr * np.cos(ta) + yr * np.sin(ta)) + phase
+    ).astype(np.float32)
+    tex = 1.0 + spec.tex_amp * carrier
+
+    # Low-frequency background clutter.
+    bfx, bfy, bph = rng.uniform(1.0, 3.0), rng.uniform(1.0, 3.0), rng.uniform(0, 6.28)
+    clutter = 0.08 * np.sin(bfx * np.pi * xx + bfy * np.pi * yy + bph).astype(np.float32)
+
+    img = np.empty((res, res, 3), np.float32)
+    for ch in range(3):
+        fg = np.clip(spec.fg[ch] + fg_jit[ch], 0.05, 1.0) * tex
+        bg = np.clip(spec.bg[ch] + bg_jit[ch], 0.0, 1.0) + clutter
+        img[..., ch] = np.where(mask > 0, fg * mask + bg * (1 - mask), bg)
+        img[..., ch] = np.where((dmask > 0) & (mask == 0), dcol[ch], img[..., ch])
+
+    img *= illum
+    img += rng.normal(0.0, 0.06, img.shape).astype(np.float32)   # sensor noise
+    return np.clip(img, 0.0, 1.0)
+
+
+def resize_bilinear(img: np.ndarray, out: int) -> np.ndarray:
+    """Simple bilinear resize HWC → out×out (align_corners=False convention).
+
+    The Rust ``video::preproc`` module implements the same formula; pytest
+    exports vectors to check parity.
+    """
+    h, w, c = img.shape
+    if h == out and w == out:
+        return img.copy()
+    ys = (np.arange(out, dtype=np.float32) + 0.5) * (h / out) - 0.5
+    xs = (np.arange(out, dtype=np.float32) + 0.5) * (w / out) - 0.5
+    ys = np.clip(ys, 0, h - 1)
+    xs = np.clip(xs, 0, w - 1)
+    y0 = np.floor(ys).astype(np.int32)
+    x0 = np.floor(xs).astype(np.int32)
+    y1 = np.minimum(y0 + 1, h - 1)
+    x1 = np.minimum(x0 + 1, w - 1)
+    wy = (ys - y0)[:, None, None]
+    wx = (xs - x0)[None, :, None]
+    top = img[y0][:, x0] * (1 - wx) + img[y0][:, x1] * wx
+    bot = img[y1][:, x0] * (1 - wx) + img[y1][:, x1] * wx
+    return (top * (1 - wy) + bot * wy).astype(np.float32)
+
+
+@dataclass
+class FewShotDataset:
+    """Images grouped by class for one split; images are [n, H, W, 3] f32."""
+
+    images: np.ndarray    # [n_classes, per_class, res, res, 3]
+    split: str
+
+    @property
+    def n_classes(self) -> int:
+        return self.images.shape[0]
+
+    @property
+    def per_class(self) -> int:
+        return self.images.shape[1]
+
+    def resized(self, res: int) -> "FewShotDataset":
+        if res == self.images.shape[2]:
+            return self
+        nc, pc = self.images.shape[:2]
+        out = np.empty((nc, pc, res, res, 3), np.float32)
+        for c in range(nc):
+            for i in range(pc):
+                out[c, i] = resize_bilinear(self.images[c, i], res)
+        return FewShotDataset(images=out, split=self.split)
+
+
+def build_splits(
+    per_class: int = 60,
+    res: int = NATIVE_RES,
+    seed: int = 1234,
+    n_base: int = N_BASE,
+    n_val: int = N_VAL,
+    n_novel: int = N_NOVEL,
+) -> dict[str, FewShotDataset]:
+    """Generate base/val/novel splits with disjoint class latents.
+
+    MiniImageNet has 600 images/class; we default to 60 to keep build-time
+    training tractable on CPU — the ratio of information is preserved and the
+    count is configurable (EXPERIMENTS.md records what each run used).
+    """
+    total = n_base + n_val + n_novel
+    specs = make_class_specs(total, seed)
+    rng = _rng(seed + 1)
+
+    def render_split(split_specs, split_name, offset):
+        imgs = np.empty((len(split_specs), per_class, res, res, 3), np.float32)
+        for c, spec in enumerate(split_specs):
+            # Per-class child RNG so splits are independent of each other.
+            crng = _rng(seed + 1000 + offset + c)
+            for i in range(per_class):
+                imgs[c, i] = render_sample(spec, crng, res)
+        return FewShotDataset(images=imgs, split=split_name)
+
+    return {
+        "base": render_split(specs[:n_base], "base", 0),
+        "val": render_split(specs[n_base : n_base + n_val], "val", n_base),
+        "novel": render_split(specs[n_base + n_val :], "novel", n_base + n_val),
+    }
+
+
+def sample_batch(
+    ds: FewShotDataset, batch: int, rng: np.random.Generator
+) -> tuple[np.ndarray, np.ndarray]:
+    """Uniform (image, class-label) batch from a split, for training."""
+    cls = rng.integers(0, ds.n_classes, batch)
+    idx = rng.integers(0, ds.per_class, batch)
+    return ds.images[cls, idx], cls.astype(np.int32)
+
+
+def sample_episode(
+    ds: FewShotDataset,
+    rng: np.random.Generator,
+    n_ways: int = 5,
+    n_shots: int = 1,
+    n_queries: int = 15,
+):
+    """One few-shot episode: (support [W*S,...], support_y, query [W*Q,...], query_y).
+
+    Labels are episode-local (0..ways-1) as in standard inductive evaluation.
+    """
+    if n_ways > ds.n_classes:
+        raise ValueError(f"{n_ways} ways > {ds.n_classes} classes in split")
+    ways = rng.choice(ds.n_classes, n_ways, replace=False)
+    need = n_shots + n_queries
+    if need > ds.per_class:
+        raise ValueError(f"need {need} images/class, split has {ds.per_class}")
+    sup, sy, qry, qy = [], [], [], []
+    for w, c in enumerate(ways):
+        sel = rng.choice(ds.per_class, need, replace=False)
+        sup.append(ds.images[c, sel[:n_shots]])
+        qry.append(ds.images[c, sel[n_shots:]])
+        sy += [w] * n_shots
+        qy += [w] * n_queries
+    return (
+        np.concatenate(sup),
+        np.array(sy, np.int32),
+        np.concatenate(qry),
+        np.array(qy, np.int32),
+    )

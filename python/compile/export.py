@@ -1,0 +1,159 @@
+"""Export path: BN-folded backbone → graph JSON + weight binary + test vectors.
+
+This replaces the paper's ONNX → onnx-simplifier → Tensil front-end: the
+graph JSON is an already-simplified, topologically ordered op list (BN folded,
+pads explicit) that the Rust ``graph`` module imports and the ``tcompiler``
+schedules onto the systolic array.
+
+Binary tensor format ("PFT1"), shared with ``rust/src/util/tensorio.rs``:
+
+    magic   4 bytes  b"PFT1"
+    dtype   u8       0 = f32, 1 = i16, 2 = i32
+    ndim    u8
+    pad     2 bytes  zero
+    dims    ndim × u32 LE
+    data    row-major, LE
+
+A weights file is a sequence of named records:
+
+    name_len u16 LE | name utf-8 | tensor (PFT1)
+"""
+
+import io
+import json
+import struct
+
+import numpy as np
+
+from . import model as M
+from .quantize import QFormat, quantize_folded
+
+_DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.int16): 1, np.dtype(np.int32): 2}
+
+
+def write_tensor(buf: io.BufferedIOBase, arr: np.ndarray) -> None:
+    # ascontiguousarray promotes 0-d to 1-d; restore the original shape.
+    arr = np.ascontiguousarray(arr).reshape(np.shape(arr))
+    code = _DTYPE_CODES.get(arr.dtype)
+    if code is None:
+        raise ValueError(f"unsupported dtype {arr.dtype}")
+    buf.write(b"PFT1")
+    buf.write(struct.pack("<BBH", code, arr.ndim, 0))
+    for d in arr.shape:
+        buf.write(struct.pack("<I", d))
+    buf.write(arr.tobytes())
+
+
+def save_tensor(path: str, arr: np.ndarray) -> None:
+    with open(path, "wb") as f:
+        write_tensor(f, arr)
+
+
+def save_named_tensors(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        for name, arr in tensors.items():
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            write_tensor(f, arr)
+
+
+def read_tensor(buf: io.BufferedIOBase) -> np.ndarray:
+    """Read one PFT1 tensor (inverse of :func:`write_tensor`)."""
+    magic = buf.read(4)
+    if magic != b"PFT1":
+        raise ValueError(f"bad magic {magic!r}")
+    code, ndim, _pad = struct.unpack("<BBH", buf.read(4))
+    dtypes = {0: np.float32, 1: np.int16, 2: np.int32}
+    if code not in dtypes:
+        raise ValueError(f"bad dtype code {code}")
+    dims = [struct.unpack("<I", buf.read(4))[0] for _ in range(ndim)]
+    n = int(np.prod(dims)) if dims else 1
+    dt = np.dtype(dtypes[code]).newbyteorder("<")
+    data = np.frombuffer(buf.read(n * dt.itemsize), dtype=dt)
+    return data.reshape(tuple(dims))
+
+
+def load_named_tensors(path: str) -> dict[str, np.ndarray]:
+    """Read a named-tensor file (inverse of :func:`save_named_tensors`)."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        while True:
+            hdr = f.read(2)
+            if not hdr:
+                break
+            (nlen,) = struct.unpack("<H", hdr)
+            name = f.read(nlen).decode("utf-8")
+            out[name] = read_tensor(f)
+    return out
+
+
+def export_graph(folded: M.Params, cfg: M.BackboneConfig, fmt: QFormat = QFormat()) -> tuple[dict, dict[str, np.ndarray]]:
+    """Lower the folded backbone to (graph-json dict, named weight tensors).
+
+    Ops (all NHWC / HWIO):
+      conv2d  {input, output, weights, bias, stride, padding, relu}
+      add     {input, input2, output, relu}
+      maxpool {input, output, size}
+      gap     {input, output}
+    """
+    q = quantize_folded(folded, fmt)
+    ops: list[dict] = []
+    tensors: dict[str, np.ndarray] = {}
+    stride_last = 2 if cfg.strided else 1
+
+    cur = "input"
+    h = cfg.image_size
+    cin = cfg.in_channels
+    for b, (fb, qb, cout) in enumerate(zip(folded["blocks"], q["blocks"], cfg.widths)):
+        pre = f"b{b}"
+
+        def conv(name, inp, out, qrec, stride, padding, relu):
+            wkey, bkey = f"{name}.w", f"{name}.b"
+            tensors[wkey] = qrec["w_int"].astype(np.int16)
+            tensors[bkey] = qrec["b_int"].astype(np.int32)  # bias in Q8.8 codes, widened
+            ops.append({
+                "op": "conv2d", "name": name, "input": inp, "output": out,
+                "weights": wkey, "bias": bkey, "stride": stride,
+                "padding": padding, "relu": relu,
+            })
+
+        conv(f"{pre}.conv1", cur, f"{pre}.a1", qb["conv1"], 1, 1, True)
+        conv(f"{pre}.conv2", f"{pre}.a1", f"{pre}.a2", qb["conv2"], 1, 1, True)
+        conv(f"{pre}.conv3", f"{pre}.a2", f"{pre}.a3", qb["conv3"], stride_last, 1, False)
+        conv(f"{pre}.short", cur, f"{pre}.sc", qb["short"], stride_last, 0, False)
+        ops.append({"op": "add", "name": f"{pre}.add", "input": f"{pre}.a3",
+                    "input2": f"{pre}.sc", "output": f"{pre}.out", "relu": True})
+        cur = f"{pre}.out"
+        if not cfg.strided:
+            ops.append({"op": "maxpool", "name": f"{pre}.pool", "input": cur,
+                        "output": f"{pre}.pooled", "size": 2})
+            cur = f"{pre}.pooled"
+            h = h // 2
+        else:
+            h = (h + 1) // 2
+        cin = cout
+
+    ops.append({"op": "gap", "name": "gap", "input": cur, "output": "features"})
+
+    graph = {
+        "name": cfg.name,
+        "format": {"total_bits": fmt.total_bits, "frac_bits": fmt.frac_bits},
+        "input": {"name": "input", "shape": [1, cfg.image_size, cfg.image_size, cfg.in_channels]},
+        "output": {"name": "features", "dim": cfg.feature_dim},
+        "backbone": {
+            "depth": cfg.depth, "feature_maps": cfg.feature_maps,
+            "strided": cfg.strided, "image_size": cfg.image_size,
+            "widths": list(cfg.widths),
+        },
+        "ops": ops,
+    }
+    return graph, tensors
+
+
+def save_graph(path_json: str, path_weights: str, folded: M.Params,
+               cfg: M.BackboneConfig, fmt: QFormat = QFormat()) -> None:
+    graph, tensors = export_graph(folded, cfg, fmt)
+    with open(path_json, "w") as f:
+        json.dump(graph, f, indent=1)
+    save_named_tensors(path_weights, tensors)

@@ -1,0 +1,113 @@
+"""Few-shot NCM evaluation (inductive, paper §II).
+
+EASY-style protocol: features from the frozen backbone are centered (with the
+mean feature of the base split) and L2-normalized, centroids are the mean of
+the support features per way, and queries are classified by nearest centroid
+(squared L2 — equivalently cosine after normalization).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from .kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class EpisodeConfig:
+    n_ways: int = 5
+    n_shots: int = 1
+    n_queries: int = 15
+    n_episodes: int = 600
+
+
+def normalize_features(feats: jnp.ndarray, base_mean: jnp.ndarray | None) -> jnp.ndarray:
+    """Center by the base-split mean feature, then L2-normalize."""
+    if base_mean is not None:
+        feats = feats - base_mean
+    norms = jnp.linalg.norm(feats, axis=1, keepdims=True)
+    return feats / jnp.maximum(norms, 1e-8)
+
+
+def ncm_classify(
+    support: jnp.ndarray,
+    support_y: np.ndarray,
+    queries: jnp.ndarray,
+    n_ways: int,
+) -> jnp.ndarray:
+    """Predicted way for each (already normalized) query feature."""
+    centroids = jnp.stack(
+        [jnp.mean(support[support_y == w], axis=0) for w in range(n_ways)]
+    )
+    dists = kref.ncm_distances_ref(queries, centroids)
+    return jnp.argmin(dists, axis=1)
+
+
+def _extract_features(params, imgs: np.ndarray, cfg: M.BackboneConfig, batch: int = 128):
+    """Run the frozen backbone over a numpy image stack in batches."""
+    fwd = jax.jit(lambda p, x: M.forward(p, x, cfg, training=False)[0])
+    chunks = []
+    for i in range(0, len(imgs), batch):
+        chunks.append(fwd(params, jnp.asarray(imgs[i : i + batch])))
+    return jnp.concatenate(chunks)
+
+
+def compute_base_mean(params, base: D.FewShotDataset, cfg: M.BackboneConfig,
+                      max_images: int = 512, seed: int = 7) -> jnp.ndarray:
+    """Mean backbone feature over (a sample of) the base split."""
+    rng = np.random.default_rng(seed)
+    imgs, _ = D.sample_batch(base, min(max_images, base.n_classes * base.per_class), rng)
+    feats = _extract_features(params, imgs, cfg)
+    return jnp.mean(feats, axis=0)
+
+
+def evaluate(
+    params,
+    split: D.FewShotDataset,
+    cfg: M.BackboneConfig,
+    episode_cfg: EpisodeConfig = EpisodeConfig(),
+    base_mean: jnp.ndarray | None = None,
+    seed: int = 99,
+) -> tuple[float, float]:
+    """Mean accuracy and 95% CI half-width over episodes.
+
+    Features for the whole split are extracted once (the split is small);
+    episodes then index into the feature matrix — same trick EASY uses.
+    """
+    nc, pc = split.n_classes, split.per_class
+    e = episode_cfg
+    if e.n_shots + e.n_queries > pc:
+        raise ValueError(
+            f"episode needs {e.n_shots}+{e.n_queries} images/class, split has {pc}; "
+            f"shrink n_queries (e.g. EpisodeConfig(n_queries={pc - e.n_shots}))")
+    if e.n_ways > nc:
+        raise ValueError(f"{e.n_ways} ways > {nc} classes in split")
+    flat = split.images.reshape(nc * pc, *split.images.shape[2:])
+    feats = _extract_features(params, flat, cfg).reshape(nc, pc, -1)
+    feats = normalize_features(feats.reshape(nc * pc, -1), base_mean).reshape(nc, pc, -1)
+    feats_np = np.asarray(feats)
+
+    rng = np.random.default_rng(seed)
+    accs = np.empty(e.n_episodes, np.float64)
+    for ep in range(e.n_episodes):
+        ways = rng.choice(nc, e.n_ways, replace=False)
+        acc_hits = 0
+        centroids = np.empty((e.n_ways, feats_np.shape[-1]), np.float32)
+        queries, qy = [], []
+        for w, c in enumerate(ways):
+            sel = rng.choice(pc, e.n_shots + e.n_queries, replace=False)
+            centroids[w] = feats_np[c, sel[: e.n_shots]].mean(axis=0)
+            queries.append(feats_np[c, sel[e.n_shots :]])
+            qy += [w] * e.n_queries
+        q = np.concatenate(queries)
+        qy = np.array(qy)
+        d = ((q[:, None, :] - centroids[None, :, :]) ** 2).sum(-1)
+        pred = d.argmin(1)
+        accs[ep] = float((pred == qy).mean())
+    mean = float(accs.mean())
+    ci95 = float(1.96 * accs.std(ddof=1) / np.sqrt(e.n_episodes))
+    return mean, ci95

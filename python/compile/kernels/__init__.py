@@ -1,0 +1,22 @@
+"""L1 — Pallas kernels for the PEFSL backbone hot path.
+
+Every kernel has a pure-jnp oracle in :mod:`ref` and is tested against it by
+``python/tests/``. Kernels are lowered with ``interpret=True`` because the CPU
+PJRT client (the Rust runtime) cannot execute Mosaic custom-calls; on a real
+TPU the same BlockSpecs target the MXU directly (see DESIGN.md
+§Hardware-Adaptation for the Tensil-systolic-array ↔ MXU mapping).
+"""
+
+from .matmul import matmul_pallas, MatmulConfig
+from .conv2d import conv2d_pallas, im2col
+from .ncm import ncm_distances_pallas
+from .quant import fake_quant_pallas
+
+__all__ = [
+    "matmul_pallas",
+    "MatmulConfig",
+    "conv2d_pallas",
+    "im2col",
+    "ncm_distances_pallas",
+    "fake_quant_pallas",
+]

@@ -1,0 +1,66 @@
+"""Conv2D as im2col + the blocked systolic matmul kernel.
+
+This mirrors exactly how Tensil (and most systolic accelerators) execute
+convolutions: the input feature map is unfolded into patch rows (im2col,
+done by the DMA/DataMove engine on the FPGA), and a single weight-stationary
+matmul against the ``[kh*kw*cin, cout]`` filter matrix produces the output
+feature map.  The Rust ``tcompiler`` performs the same lowering, so cycle
+counts and numerics line up layer-for-layer with this kernel.
+
+Layout: NHWC activations, HWIO weights (the export layout consumed by the
+Rust graph importer as well).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import MatmulConfig, matmul_pallas
+
+
+def im2col(
+    x: jax.Array, kh: int, kw: int, stride: int, padding: int
+) -> tuple[jax.Array, int, int]:
+    """Unfold NHWC ``x`` into patch rows.
+
+    Returns ``(patches[N*OH*OW, kh*kw*C], oh, ow)``.  Static shapes only —
+    this runs under jit at build time with concrete dims.
+    """
+    n, h, w, c = x.shape
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+
+    # Gather kh*kw shifted views; cheap at trace time, fuses into one copy.
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            view = xp[:, di : di + (oh - 1) * stride + 1 : stride,
+                         dj : dj + (ow - 1) * stride + 1 : stride, :]
+            cols.append(view)
+    # [N, OH, OW, kh*kw, C] -> [N*OH*OW, kh*kw*C]
+    patches = jnp.stack(cols, axis=3).reshape(n * oh * ow, kh * kw * c)
+    return patches, oh, ow
+
+
+def conv2d_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    stride: int = 1,
+    padding: int = 1,
+    config: MatmulConfig = MatmulConfig(),
+    interpret: bool = True,
+) -> jax.Array:
+    """NHWC conv2d via im2col + :func:`matmul_pallas`.
+
+    ``x``: [N, H, W, Cin]; ``w``: [KH, KW, Cin, Cout] → [N, OH, OW, Cout].
+    """
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d_pallas expects NHWC/HWIO, got {x.shape}, {w.shape}")
+    kh, kw, cin, cout = w.shape
+    if x.shape[3] != cin:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    n = x.shape[0]
+    patches, oh, ow = im2col(x, kh, kw, stride, padding)
+    wm = w.reshape(kh * kw * cin, cout)
+    y = matmul_pallas(patches, wm, config=config, interpret=interpret)
+    return y.reshape(n, oh, ow, cout)

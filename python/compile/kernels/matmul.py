@@ -1,0 +1,133 @@
+"""Blocked matmul Pallas kernel — the systolic-array analogue.
+
+The Tensil accelerator executes every conv/linear layer as a sequence of
+weight-stationary systolic matmuls over Q8.8 operands with 32-bit
+accumulators.  On TPU the same role is played by the MXU: this kernel tiles
+``A[M,K] @ B[K,N]`` into (bm, bk) × (bk, bn) blocks held in VMEM (the BRAM /
+"local memory" analogue) and accumulates in f32 scratch across the K grid
+dimension — exactly the HBM↔VMEM schedule Tensil expresses as DRAM↔local
+DataMove instructions.
+
+Block sizes default to MXU-friendly multiples; callers with small shapes
+(e.g. the 3×3×16 conv tiles of ResNet-9 at 32×32) get automatically clamped
+blocks so the kernel stays a *single* source of truth for all layer sizes.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclass(frozen=True)
+class MatmulConfig:
+    """Block-shape configuration for :func:`matmul_pallas`.
+
+    Defaults target the 128×128 MXU; small problems are clamped per-call.
+    ``bm/bn/bk`` mirror Tensil's local-memory tile sizes (``.tarch``
+    ``localDepth`` / ``accumulatorDepth``).
+    """
+
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+
+    def clamp(self, m: int, k: int, n: int) -> "MatmulConfig":
+        """Shrink blocks to the (padded) problem size to avoid VMEM waste."""
+        return MatmulConfig(
+            bm=min(self.bm, _round_up(m, 8)),
+            bn=min(self.bn, _round_up(n, 8)),
+            bk=min(self.bk, _round_up(k, 8)),
+        )
+
+    def vmem_bytes(self, itemsize: int = 4) -> int:
+        """Estimated VMEM footprint: A tile + B tile + out tile + acc tile.
+
+        Used by DESIGN.md's roofline estimate; interpret-mode wallclock is
+        not a TPU proxy, the footprint/utilization model is.
+        """
+        return itemsize * (
+            self.bm * self.bk + self.bk * self.bn + 2 * self.bm * self.bn
+        )
+
+    def mxu_utilization(self, m: int, k: int, n: int) -> float:
+        """Fraction of issued MXU MACs that are useful (non-padding)."""
+        mp, kp, np_ = (_round_up(m, self.bm), _round_up(k, self.bk), _round_up(n, self.bn))
+        cfg = self.clamp(m, k, n)
+        mp, kp, np_ = (_round_up(m, cfg.bm), _round_up(k, cfg.bk), _round_up(n, cfg.bn))
+        return (m * k * n) / float(mp * kp * np_)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) dimension.
+
+    ``acc_ref`` is VMEM scratch persisting across the K iterations of one
+    (i, j) tile — the "accumulator memory" of the systolic array.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    config: MatmulConfig = MatmulConfig(),
+    interpret: bool = True,
+) -> jax.Array:
+    """``a[M,K] @ b[K,N]`` with f32 accumulation, as a Pallas kernel.
+
+    Inputs are zero-padded to block multiples (zeros contribute nothing to
+    the accumulation), the kernel runs on the padded problem, and the result
+    is sliced back — the same padding Tensil inserts when a layer does not
+    fill the PE array.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul_pallas expects 2-D operands, got {a.shape} @ {b.shape}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    if m == 0 or k == 0 or n == 0:
+        return jnp.zeros((m, n), jnp.float32)
+
+    cfg = config.clamp(m, k, n)
+    mp, kp, np_ = _round_up(m, cfg.bm), _round_up(k, cfg.bk), _round_up(n, cfg.bn)
+    a_p = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+
+    n_k = kp // cfg.bk
+    grid = (mp // cfg.bm, np_ // cfg.bn, n_k)
+
+    out = pl.pallas_call(
+        partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.bm, cfg.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((cfg.bk, cfg.bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]

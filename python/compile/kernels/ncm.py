@@ -1,0 +1,55 @@
+"""NCM (nearest class mean) distance Pallas kernel.
+
+The few-shot classifier of the paper: squared-L2 distances between query
+feature vectors and class centroids.  Expanded as
+``‖q‖² − 2 q·cᵀ + ‖c‖²`` so the inner product rides the same MXU matmul the
+backbone uses; norms are computed per-block in VPU lanes.
+
+Shapes are tiny (Q ≤ a few hundred queries, W = ways ≤ 20, D = feature dim
+≤ 1024), so a single-block kernel suffices; BlockSpec padding handles the
+non-multiple dims.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _ncm_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)            # [Q, 1]
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T          # [1, W]
+    o_ref[...] = qn - 2.0 * jnp.dot(q, c.T, preferred_element_type=jnp.float32) + cn
+
+
+def ncm_distances_pallas(
+    queries: jax.Array, centroids: jax.Array, interpret: bool = True
+) -> jax.Array:
+    """Pairwise squared-L2 distances ``[Q, W]``.
+
+    ``queries``: [Q, D]; ``centroids``: [W, D].  Padding the D axis with
+    zeros changes nothing; padded Q/W rows are sliced away.
+    """
+    if queries.ndim != 2 or centroids.ndim != 2:
+        raise ValueError(f"expected 2-D, got {queries.shape}, {centroids.shape}")
+    if queries.shape[1] != centroids.shape[1]:
+        raise ValueError(f"dim mismatch: {queries.shape} vs {centroids.shape}")
+    q, d = queries.shape
+    w, _ = centroids.shape
+    qp, wp, dp = _round_up(q, 8), _round_up(w, 8), _round_up(d, 8)
+    q_p = jnp.pad(queries.astype(jnp.float32), ((0, qp - q), (0, dp - d)))
+    c_p = jnp.pad(centroids.astype(jnp.float32), ((0, wp - w), (0, dp - d)))
+
+    out = pl.pallas_call(
+        _ncm_kernel,
+        out_shape=jax.ShapeDtypeStruct((qp, wp), jnp.float32),
+        interpret=interpret,
+    )(q_p, c_p)
+    return out[:q, :w]

@@ -1,0 +1,51 @@
+"""Fake-quantization Pallas kernel for Qm.n fixed point.
+
+The deployed accelerator computes in 16-bit fixed point with 8 integer bits
+(Q8.8, the paper's format).  This kernel models that numeric on the training
+side: scale by 2^frac_bits, round half-away-from-zero (what the Rust
+``fixed`` module implements in hardware), saturate to the signed range, and
+rescale.  Training stays in f32; quantization-aware *evaluation* uses this to
+predict on-accelerator accuracy, and pytest checks bit-parity against the
+Rust simulator through exported vectors.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fake_quant_kernel(x_ref, o_ref, *, frac_bits: int, total_bits: int):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.float32(1 << frac_bits)
+    lo = jnp.float32(-(1 << (total_bits - 1)))
+    hi = jnp.float32((1 << (total_bits - 1)) - 1)
+    scaled = x * scale
+    # Round half away from zero: matches rust fixed::Fixed::from_f32.
+    rounded = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    clamped = jnp.clip(rounded, lo, hi)
+    o_ref[...] = clamped / scale
+
+
+def fake_quant_pallas(
+    x: jax.Array,
+    frac_bits: int = 8,
+    total_bits: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantize-dequantize ``x`` to Q(total-frac).(frac) fixed point."""
+    if not 0 < frac_bits < total_bits <= 32:
+        raise ValueError(f"bad Q format: Q{total_bits - frac_bits}.{frac_bits}")
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    npad = (n + 127) // 128 * 128
+    flat = jnp.pad(flat, (0, npad - n)).reshape(npad // 128, 128)
+
+    out = pl.pallas_call(
+        partial(_fake_quant_kernel, frac_bits=frac_bits, total_bits=total_bits),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=interpret,
+    )(flat)
+    return out.reshape(-1)[:n].reshape(orig_shape)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest (``python/tests/test_kernels.py``) asserts allclose between each
+kernel and its oracle across a hypothesis-driven sweep of shapes/strides.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """f32 matmul reference."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 1) -> jax.Array:
+    """NHWC/HWIO conv2d via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def ncm_distances_ref(queries: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Naive pairwise squared-L2 distances [Q, W]."""
+    diff = queries[:, None, :].astype(jnp.float32) - centroids[None, :, :].astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def fake_quant_ref(x: jax.Array, frac_bits: int = 8, total_bits: int = 16) -> jax.Array:
+    """Quantize-dequantize with round-half-away-from-zero + saturation."""
+    scale = float(1 << frac_bits)
+    lo = float(-(1 << (total_bits - 1)))
+    hi = float((1 << (total_bits - 1)) - 1)
+    scaled = x.astype(jnp.float32) * scale
+    rounded = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    return jnp.clip(rounded, lo, hi) / scale
+
+
+def maxpool2x2_ref(x: jax.Array) -> jax.Array:
+    """2×2/2 max-pool, NHWC."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def global_avg_pool_ref(x: jax.Array) -> jax.Array:
+    """NHWC → [N, C] global average pool (the backbone's embedding head)."""
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,304 @@
+"""L2 — ResNet-9 / ResNet-12 few-shot backbones in pure JAX.
+
+Architecture per the paper's Fig. 2 and [Bendou et al., EASY]:
+
+* ResNet-12 = 4 residual blocks; ResNet-9 = the same with the last block
+  removed (3 blocks).
+* Each block: 3 × (conv3×3 → BN → ReLU[1,2 only]) with an identity shortcut
+  through a conv1×1 + BN, then ReLU, then downsampling (2×2 max-pool, or the
+  last conv of the block runs with stride 2 — the ``strided`` variant).
+* The first block has ``feature_maps`` output channels; subsequent blocks
+  scale ×2.5 / ×5 / ×10 as in EASY's ResNet-12 (16 → 40 → 80 → 160), here
+  rounded: widths = fm · [1, 2.5, 5, 10] (int).  The paper's Fig. 2 shows the
+  16-fm ResNet-9; hyperparameters (depth, fm, pooling, image size) span
+  Fig. 5's design space.
+* Embedding = global average pool of the last block's output.
+
+Parameters are plain pytrees (dicts), BN is trained with batch statistics and
+folded into convs at export time (the accelerator has no BN unit — Tensil
+gets a BN-folded ONNX graph the same way).
+
+The forward is written against a *backend* of primitive ops so the same
+model definition runs in (a) pure-jnp mode for fast training, and (b) Pallas
+mode where convs/matmuls go through the L1 kernels — proving the kernels
+compose into the full network (and giving aot.py a Pallas-lowered variant).
+"""
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d_pallas, matmul_pallas
+from .kernels import ref as kref
+
+Params = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class BackboneConfig:
+    """Hyperparameters of the design space (paper §III-B)."""
+
+    depth: int = 9                 # 9 or 12
+    feature_maps: int = 16         # width of the first block (16/32/64 in Fig. 5)
+    strided: bool = True           # strided conv vs 2×2 max-pool downsampling
+    image_size: int = 32           # train/test input resolution (32/84/100)
+    in_channels: int = 3
+
+    def __post_init__(self):
+        if self.depth not in (9, 12):
+            raise ValueError(f"depth must be 9 or 12, got {self.depth}")
+        if self.feature_maps < 1:
+            raise ValueError("feature_maps must be >= 1")
+        if self.image_size < 8:
+            raise ValueError("image_size must be >= 8 (4 pooling stages need room)")
+
+    @property
+    def n_blocks(self) -> int:
+        return 3 if self.depth == 9 else 4
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        """Per-block output channels: fm·[1, 2.5, 5, 10] as in EASY."""
+        scale = (1.0, 2.5, 5.0, 10.0)
+        return tuple(int(round(self.feature_maps * s)) for s in scale[: self.n_blocks])
+
+    @property
+    def feature_dim(self) -> int:
+        return self.widths[-1]
+
+    @property
+    def name(self) -> str:
+        pool = "strided" if self.strided else "maxpool"
+        return f"resnet{self.depth}_fm{self.feature_maps}_{pool}_s{self.image_size}"
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout):
+    """He-normal init for conv kernels (HWIO)."""
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def _bn_init(c):
+    return {
+        "scale": jnp.ones((c,), jnp.float32),
+        "bias": jnp.zeros((c,), jnp.float32),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def init_params(key: jax.Array, cfg: BackboneConfig) -> Params:
+    """Initialize backbone parameters as a nested dict pytree."""
+    params: Params = {"blocks": []}
+    cin = cfg.in_channels
+    for b, cout in enumerate(cfg.widths):
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        block = {
+            "conv1": _conv_init(k1, 3, 3, cin, cout), "bn1": _bn_init(cout),
+            "conv2": _conv_init(k2, 3, 3, cout, cout), "bn2": _bn_init(cout),
+            "conv3": _conv_init(k3, 3, 3, cout, cout), "bn3": _bn_init(cout),
+            "short": _conv_init(k4, 1, 1, cin, cout), "bn_s": _bn_init(cout),
+        }
+        params["blocks"].append(block)
+        cin = cout
+    return params
+
+
+def init_heads(key: jax.Array, cfg: BackboneConfig, n_classes: int) -> Params:
+    """Classification + rotation-pretext heads used only during training."""
+    k1, k2 = jax.random.split(key)
+    d = cfg.feature_dim
+    std = (1.0 / d) ** 0.5
+    return {
+        "cls_w": jax.random.normal(k1, (d, n_classes), jnp.float32) * std,
+        "cls_b": jnp.zeros((n_classes,), jnp.float32),
+        "rot_w": jax.random.normal(k2, (d, 4), jnp.float32) * std,
+        "rot_b": jnp.zeros((4,), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Backend:
+    """Primitive-op vtable so the same forward runs jnp or Pallas."""
+
+    conv2d: Callable  # (x, w, stride, padding) -> y
+    matmul: Callable  # (a, b) -> c
+
+    @staticmethod
+    def jnp() -> "Backend":
+        return Backend(
+            conv2d=lambda x, w, stride, padding: kref.conv2d_ref(x, w, stride, padding),
+            matmul=kref.matmul_ref,
+        )
+
+    @staticmethod
+    def pallas() -> "Backend":
+        return Backend(
+            conv2d=lambda x, w, stride, padding: conv2d_pallas(x, w, stride=stride, padding=padding),
+            matmul=matmul_pallas,
+        )
+
+
+def batch_norm(x: jax.Array, bn: Params, training: bool, eps: float = 1e-5):
+    """BN over NHWC; returns (y, batch_stats) — caller maintains EMA."""
+    if training:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+    else:
+        mean, var = bn["mean"], bn["var"]
+    y = (x - mean) / jnp.sqrt(var + eps) * bn["scale"] + bn["bias"]
+    return y, (mean, var)
+
+
+def _block_forward(x, block, strided: bool, training: bool, backend: Backend):
+    """One residual block per Fig. 2. Returns (y, [batch_stats × 4])."""
+    stride_last = 2 if strided else 1
+
+    h, s1 = batch_norm(backend.conv2d(x, block["conv1"], 1, 1), block["bn1"], training)
+    h = jax.nn.relu(h)
+    h, s2 = batch_norm(backend.conv2d(h, block["conv2"], 1, 1), block["bn2"], training)
+    h = jax.nn.relu(h)
+    h, s3 = batch_norm(backend.conv2d(h, block["conv3"], stride_last, 1), block["bn3"], training)
+
+    sc, ss = batch_norm(backend.conv2d(x, block["short"], stride_last, 0), block["bn_s"], training)
+    y = jax.nn.relu(h + sc)
+    if not strided:
+        y = kref.maxpool2x2_ref(y)
+    return y, (s1, s2, s3, ss)
+
+
+def forward(
+    params: Params,
+    x: jax.Array,
+    cfg: BackboneConfig,
+    training: bool = False,
+    backend: Backend | None = None,
+):
+    """Backbone forward: NHWC images → (features [N, D], batch_stats).
+
+    ``training=True`` uses batch statistics (and returns them for EMA
+    updates); ``training=False`` uses the stored running stats.
+    """
+    backend = backend or Backend.jnp()
+    stats = []
+    h = x
+    for block in params["blocks"]:
+        h, s = _block_forward(h, block, cfg.strided, training, backend)
+        stats.append(s)
+    feats = kref.global_avg_pool_ref(h)
+    return feats, stats
+
+
+def forward_heads(heads: Params, feats: jax.Array, backend: Backend | None = None):
+    """Training heads: (class logits, rotation logits)."""
+    backend = backend or Backend.jnp()
+    cls = backend.matmul(feats, heads["cls_w"]) + heads["cls_b"]
+    rot = backend.matmul(feats, heads["rot_w"]) + heads["rot_b"]
+    return cls, rot
+
+
+def update_bn_ema(params: Params, stats, momentum: float = 0.9) -> Params:
+    """Fold freshly computed batch statistics into the running estimates."""
+    new_blocks = []
+    for block, bstats in zip(params["blocks"], stats):
+        nb = dict(block)
+        for name, (mean, var) in zip(("bn1", "bn2", "bn3", "bn_s"), bstats):
+            bn = dict(nb[name])
+            bn["mean"] = momentum * bn["mean"] + (1 - momentum) * mean
+            bn["var"] = momentum * bn["var"] + (1 - momentum) * var
+            nb[name] = bn
+        new_blocks.append(nb)
+    return {**params, "blocks": new_blocks}
+
+
+# --------------------------------------------------------------------------
+# BN folding (export path — the accelerator has no BN unit)
+# --------------------------------------------------------------------------
+
+def fold_bn(params: Params, eps: float = 1e-5) -> Params:
+    """Fold BN into conv weights + bias: w' = w·γ/σ, b' = β − μ·γ/σ.
+
+    Returns a pytree of blocks with keys conv{1,2,3}/short → {"w", "b"}; the
+    folded network (conv+bias → relu …) is numerically identical to the
+    BN (inference-mode) network, which pytest verifies.
+    """
+    folded = {"blocks": []}
+    for block in params["blocks"]:
+        fb = {}
+        for conv_name, bn_name in (("conv1", "bn1"), ("conv2", "bn2"),
+                                   ("conv3", "bn3"), ("short", "bn_s")):
+            bn = block[bn_name]
+            inv_sigma = bn["scale"] / jnp.sqrt(bn["var"] + eps)
+            fb[conv_name] = {
+                "w": block[conv_name] * inv_sigma[None, None, None, :],
+                "b": bn["bias"] - bn["mean"] * inv_sigma,
+            }
+        folded["blocks"].append(fb)
+    return folded
+
+
+def forward_folded(
+    folded: Params,
+    x: jax.Array,
+    cfg: BackboneConfig,
+    backend: Backend | None = None,
+) -> jax.Array:
+    """Inference forward through the BN-folded network (deployment graph).
+
+    This is the exact computation the Rust tcompiler/sim executes in Q8.8;
+    aot.py lowers this function (jnp and Pallas backends) to HLO text.
+    """
+    backend = backend or Backend.jnp()
+    stride_last = 2 if cfg.strided else 1
+    h = x
+    for fb in folded["blocks"]:
+        a = jax.nn.relu(backend.conv2d(h, fb["conv1"]["w"], 1, 1) + fb["conv1"]["b"])
+        a = jax.nn.relu(backend.conv2d(a, fb["conv2"]["w"], 1, 1) + fb["conv2"]["b"])
+        a = backend.conv2d(a, fb["conv3"]["w"], stride_last, 1) + fb["conv3"]["b"]
+        sc = backend.conv2d(h, fb["short"]["w"], stride_last, 0) + fb["short"]["b"]
+        h = jax.nn.relu(a + sc)
+        if not cfg.strided:
+            h = kref.maxpool2x2_ref(h)
+    return kref.global_avg_pool_ref(h)
+
+
+def count_params(params: Params) -> int:
+    """Total scalar parameter count (reported in DSE results)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return int(sum(leaf.size for leaf in leaves))
+
+
+def count_macs(cfg: BackboneConfig) -> int:
+    """Multiply-accumulate count of the folded inference graph.
+
+    Used as the x-axis sanity check for the tcompiler cycle model: on an
+    ideal r×r array, cycles ≈ MACs / r² + overheads.
+    """
+    macs = 0
+    h = cfg.image_size
+    cin = cfg.in_channels
+    for cout in cfg.widths:
+        macs += 9 * cin * cout * h * h     # conv1 (3×3, stride 1, same res)
+        macs += 9 * cout * cout * h * h    # conv2
+        if cfg.strided:
+            oh = (h + 1) // 2              # stride-2 conv: ceil(h/2)
+            macs += 9 * cout * cout * oh * oh   # conv3 @ stride 2
+            macs += cin * cout * oh * oh        # 1×1 shortcut @ stride 2
+            h = oh
+        else:
+            macs += 9 * cout * cout * h * h     # conv3 @ full res
+            macs += cin * cout * h * h          # 1×1 shortcut @ full res
+            h = h // 2                          # 2×2 max-pool
+        cin = cout
+    return macs

@@ -1,0 +1,99 @@
+"""Post-training quantization to the accelerator's Q8.8 fixed point.
+
+The deployed Tensil-like accelerator computes in 16-bit fixed point with
+8 integer bits (paper §IV-B).  We quantize the BN-folded weights/biases and
+model activation quantization between layers with the fake-quant kernel; the
+Rust ``sim`` is the bit-exact integer reference, and
+``tests/test_quant_parity.py`` checks this float-side model against it via
+exported vectors.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import ref as kref
+
+TOTAL_BITS = 16
+FRAC_BITS = 8  # Q8.8: 8 integer bits (incl. sign by convention of the paper)
+
+
+@dataclass(frozen=True)
+class QFormat:
+    total_bits: int = TOTAL_BITS
+    frac_bits: int = FRAC_BITS
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def min_int(self) -> int:
+        return -(1 << (self.total_bits - 1))
+
+    @property
+    def max_int(self) -> int:
+        return (1 << (self.total_bits - 1)) - 1
+
+    def quantize_int(self, x: np.ndarray) -> np.ndarray:
+        """f32 → int16 codes (round half away from zero, saturate)."""
+        scaled = np.asarray(x, np.float64) * self.scale
+        rounded = np.sign(scaled) * np.floor(np.abs(scaled) + 0.5)
+        return np.clip(rounded, self.min_int, self.max_int).astype(np.int32)
+
+    def dequantize(self, codes: np.ndarray) -> np.ndarray:
+        return codes.astype(np.float32) / self.scale
+
+    def fake_quant(self, x):
+        return kref.fake_quant_ref(x, self.frac_bits, self.total_bits)
+
+
+def quantize_folded(folded: M.Params, fmt: QFormat = QFormat()) -> dict:
+    """Quantize a BN-folded backbone to integer codes.
+
+    Returns ``{"blocks": [{conv1: {w_int, b_int}, ...}]}`` with int32 numpy
+    arrays holding Q8.8 codes (biases are pre-shifted to the accumulator's
+    Q16.16 at load time by the Rust side).
+    """
+    out = {"blocks": []}
+    for fb in folded["blocks"]:
+        qb = {}
+        for name in ("conv1", "conv2", "conv3", "short"):
+            qb[name] = {
+                "w_int": fmt.quantize_int(np.asarray(fb[name]["w"])),
+                "b_int": fmt.quantize_int(np.asarray(fb[name]["b"])),
+            }
+        out["blocks"].append(qb)
+    return out
+
+
+def forward_folded_quant(
+    folded: M.Params,
+    x: jnp.ndarray,
+    cfg: M.BackboneConfig,
+    fmt: QFormat = QFormat(),
+) -> jnp.ndarray:
+    """Quantization-aware inference: weights and inter-layer activations are
+    fake-quantized to Q8.8, accumulation stays wide (as in the hardware's
+    32-bit accumulators).  Predicts on-accelerator accuracy from Python.
+    """
+    def q(t):
+        return fmt.fake_quant(t)
+
+    stride_last = 2 if cfg.strided else 1
+    h = q(x)
+    for fb in folded["blocks"]:
+        w1, b1 = q(fb["conv1"]["w"]), q(fb["conv1"]["b"])
+        w2, b2 = q(fb["conv2"]["w"]), q(fb["conv2"]["b"])
+        w3, b3 = q(fb["conv3"]["w"]), q(fb["conv3"]["b"])
+        ws, bs = q(fb["short"]["w"]), q(fb["short"]["b"])
+        a = q(jnp.maximum(kref.conv2d_ref(h, w1, 1, 1) + b1, 0.0))
+        a = q(jnp.maximum(kref.conv2d_ref(a, w2, 1, 1) + b2, 0.0))
+        a3 = kref.conv2d_ref(a, w3, stride_last, 1) + b3
+        sc = kref.conv2d_ref(h, ws, stride_last, 0) + bs
+        h = q(jnp.maximum(a3 + sc, 0.0))
+        if not cfg.strided:
+            h = kref.maxpool2x2_ref(h)
+    return q(kref.global_avg_pool_ref(h))

@@ -1,0 +1,165 @@
+"""EASY-style backbone training (paper §II / [3], [8]).
+
+Loss = cross-entropy on base classes + λ · cross-entropy on a 4-way rotation
+pretext head (each batch image gets a random 0/90/180/270 rotation; the head
+must predict which).  Cosine-annealed SGD with momentum; BN running stats via
+EMA.  The backbone is frozen afterwards — few-shot inference only ever uses
+the GAP feature vector.
+
+CPU-friendly defaults (the build box has no accelerator); the loss curve and
+eval accuracies land in ``artifacts/train_log.json`` for EXPERIMENTS.md.
+"""
+
+import json
+import math
+import time
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import fewshot as FS
+from . import model as M
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 300
+    batch: int = 64
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    rot_lambda: float = 0.5          # pretext loss weight
+    label_smoothing: float = 0.1
+    bn_momentum: float = 0.9
+    eval_every: int = 100
+    seed: int = 42
+
+
+def _smooth_ce(logits: jnp.ndarray, labels: jnp.ndarray, smoothing: float) -> jnp.ndarray:
+    n = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits)
+    on = 1.0 - smoothing
+    off = smoothing / (n - 1) if n > 1 else 0.0
+    target = jnp.full_like(logp, off).at[jnp.arange(len(labels)), labels].set(on)
+    return -jnp.mean(jnp.sum(target * logp, axis=-1))
+
+
+def rotate_batch(x: jnp.ndarray, rots: jnp.ndarray) -> jnp.ndarray:
+    """Rotate each NHWC image by rots[i] × 90°. k=1 is rot90 in the HW plane."""
+    r0 = x
+    r1 = jnp.rot90(x, k=1, axes=(1, 2))
+    r2 = jnp.rot90(x, k=2, axes=(1, 2))
+    r3 = jnp.rot90(x, k=3, axes=(1, 2))
+    stacked = jnp.stack([r0, r1, r2, r3])                   # [4, N, H, W, C]
+    return stacked[rots, jnp.arange(x.shape[0])]
+
+
+def loss_fn(params, heads, x, y, rots, cfg: M.BackboneConfig, tcfg: TrainConfig):
+    feats, stats = M.forward(params, x, cfg, training=True)
+    cls_logits, rot_logits = M.forward_heads(heads, feats)
+    cls_loss = _smooth_ce(cls_logits, y, tcfg.label_smoothing)
+    rot_loss = _smooth_ce(rot_logits, rots, 0.0)
+    acc = jnp.mean((jnp.argmax(cls_logits, -1) == y).astype(jnp.float32))
+    return cls_loss + tcfg.rot_lambda * rot_loss, (stats, cls_loss, rot_loss, acc)
+
+
+def _sgd_update(tree, grads, vel, lr, momentum, wd):
+    """SGD + momentum + decoupled weight decay over a pytree."""
+    def upd(p, g, v):
+        v2 = momentum * v + g + wd * p
+        return p - lr * v2, v2
+    flat_p, treedef = jax.tree_util.tree_flatten(tree)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_v = jax.tree_util.tree_leaves(vel)
+    new_p, new_v = zip(*[upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)])
+    return jax.tree_util.tree_unflatten(treedef, new_p), jax.tree_util.tree_unflatten(treedef, new_v)
+
+
+def train_backbone(
+    cfg: M.BackboneConfig,
+    tcfg: TrainConfig = TrainConfig(),
+    splits: dict | None = None,
+    log_path: str | None = None,
+    verbose: bool = True,
+):
+    """Train a backbone; returns (params, heads, log_dict)."""
+    splits = splits or D.build_splits(res=D.NATIVE_RES)
+    base = splits["base"].resized(cfg.image_size)
+    val = splits["val"].resized(cfg.image_size)
+
+    key = jax.random.PRNGKey(tcfg.seed)
+    kp, kh = jax.random.split(key)
+    params = M.init_params(kp, cfg)
+    heads = M.init_heads(kh, cfg, base.n_classes)
+
+    # BN stats ride inside params but must not receive gradient updates:
+    # zero their grads via a mask applied to the grad pytree.
+    def zero_bn(tree, like):
+        def walk(node, ref, in_bn=False):
+            if isinstance(node, dict):
+                return {k: walk(v, ref[k], in_bn or k.startswith("bn")) for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v, r, in_bn) for v, r in zip(node, ref)]
+            return jnp.zeros_like(node) if in_bn else node
+        return walk(tree, like)
+
+    vel_p = jax.tree_util.tree_map(jnp.zeros_like, params)
+    vel_h = jax.tree_util.tree_map(jnp.zeros_like, heads)
+
+    @jax.jit
+    def step_fn(params, heads, vel_p, vel_h, x, y, rots, lr):
+        (loss, (stats, cls_l, rot_l, acc)), grads = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(params, heads, x, y, rots, cfg, tcfg)
+        gp, gh = grads
+        gp = zero_bn(gp, params)
+        params2, vel_p2 = _sgd_update(params, gp, vel_p, lr, tcfg.momentum, tcfg.weight_decay)
+        heads2, vel_h2 = _sgd_update(heads, gh, vel_h, lr, tcfg.momentum, tcfg.weight_decay)
+        params2 = M.update_bn_ema(params2, stats, tcfg.bn_momentum)
+        return params2, heads2, vel_p2, vel_h2, loss, cls_l, rot_l, acc
+
+    rng = np.random.default_rng(tcfg.seed)
+    log = {
+        "config": {"backbone": asdict(cfg), "train": asdict(tcfg)},
+        "steps": [], "loss": [], "cls_loss": [], "rot_loss": [], "train_acc": [],
+        "eval": [],
+    }
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        lr = tcfg.lr * 0.5 * (1 + math.cos(math.pi * step / tcfg.steps))
+        x, y = D.sample_batch(base, tcfg.batch, rng)
+        rots = rng.integers(0, 4, tcfg.batch)
+        xj = rotate_batch(jnp.asarray(x), jnp.asarray(rots))
+        params, heads, vel_p, vel_h, loss, cls_l, rot_l, acc = step_fn(
+            params, heads, vel_p, vel_h, xj, jnp.asarray(y), jnp.asarray(rots), lr
+        )
+        if step % 10 == 0 or step == tcfg.steps - 1:
+            log["steps"].append(step)
+            log["loss"].append(float(loss))
+            log["cls_loss"].append(float(cls_l))
+            log["rot_loss"].append(float(rot_l))
+            log["train_acc"].append(float(acc))
+            if verbose:
+                print(f"[train {cfg.name}] step {step:4d} lr {lr:.4f} "
+                      f"loss {float(loss):.4f} cls {float(cls_l):.4f} "
+                      f"rot {float(rot_l):.4f} acc {float(acc):.3f}", flush=True)
+        if (step + 1) % tcfg.eval_every == 0 or step == tcfg.steps - 1:
+            base_mean = FS.compute_base_mean(params, base, cfg)
+            ecfg = FS.EpisodeConfig(
+                n_ways=min(5, val.n_classes),
+                n_queries=min(15, val.per_class - 1),
+                n_episodes=100)
+            vacc, ci = FS.evaluate(params, val, cfg, ecfg, base_mean)
+            log["eval"].append({"step": step, "val_acc_5w1s": vacc, "ci95": ci})
+            if verbose:
+                print(f"[eval  {cfg.name}] step {step:4d} val 5w1s {vacc:.3f} ±{ci:.3f}",
+                      flush=True)
+    log["wall_seconds"] = time.time() - t0
+
+    if log_path:
+        with open(log_path, "w") as f:
+            json.dump(log, f, indent=1)
+    return params, heads, log

@@ -1,0 +1,116 @@
+"""AOT lowering pipeline: HLO text completeness (no elided constants, no
+unsupported metadata), hlo-only regen path, tensor reader roundtrip."""
+
+import io
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import lower_backbone, lower_ncm, to_hlo_text
+from compile.export import load_named_tensors, read_tensor, save_named_tensors, write_tensor
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestHloText:
+    @pytest.fixture(scope="class")
+    def hlo(self):
+        cfg = M.BackboneConfig(depth=9, feature_maps=3, strided=True, image_size=12)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        return lower_backbone(M.fold_bn(params), cfg, M.Backend.jnp())
+
+    def test_no_elided_constants(self, hlo):
+        """The default printer elides big literals as '{...}' — the rust
+        parser would silently zero-fill them (the bug fixed in aot.py)."""
+        assert "constant({...})" not in hlo
+        assert "{..." not in hlo
+
+    def test_no_unparseable_metadata(self, hlo):
+        # xla_extension 0.5.1 rejects source_end_line / source_end_column
+        assert "source_end_line" not in hlo
+        assert "source_end_column" not in hlo
+
+    def test_single_image_parameter(self, hlo):
+        head = hlo.splitlines()[0]
+        assert "f32[1,12,12,3]" in head
+        assert "HloModule" in head
+
+    def test_weights_are_baked(self, hlo):
+        # with fm=3 the first conv is f32[3,3,3,3]: its literal must appear
+        assert "f32[3,3,3,3]" in hlo
+
+    def test_ncm_lowering(self):
+        hlo = lower_ncm(n_ways=5, dim=8, max_queries=4)
+        assert "HloModule" in hlo
+        assert "f32[4,8]" in hlo and "f32[5,8]" in hlo
+
+    def test_simple_fn_roundtrip_values(self):
+        """to_hlo_text preserves constants numerically (parse-free check:
+        the decimal digits of a distinctive constant appear in the text)."""
+        w = jnp.asarray([[1.5, -2.25], [3.125, 0.0625]])
+
+        def fn(x):
+            return (x @ w,)
+
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((1, 2), jnp.float32))
+        text = to_hlo_text(lowered)
+        for token in ["1.5", "-2.25", "3.125", "0.0625"]:
+            assert token in text, f"constant {token} missing from HLO text"
+
+
+class TestNamedTensorRoundtrip:
+    def test_roundtrip(self, tmp_path):
+        tensors = {
+            "a.w": np.random.default_rng(0).standard_normal((3, 4)).astype(np.float32),
+            "b.b": np.arange(5, dtype=np.int32),
+            "c.w": np.arange(-3, 3, dtype=np.int16),
+        }
+        p = tmp_path / "t.bin"
+        save_named_tensors(str(p), tensors)
+        back = load_named_tensors(str(p))
+        assert set(back) == set(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+            assert back[k].dtype == tensors[k].dtype
+
+    def test_reader_rejects_bad_magic(self):
+        buf = io.BytesIO(b"NOPE" + b"\x00" * 8)
+        with pytest.raises(ValueError):
+            read_tensor(buf)
+
+    def test_reader_matches_writer_scalar(self):
+        buf = io.BytesIO()
+        write_tensor(buf, np.float32(2.5).reshape(()))
+        buf.seek(0)
+        got = read_tensor(buf)
+        assert got.shape == ()
+        assert got == np.float32(2.5)
+
+
+@pytest.mark.slow
+class TestHloOnlyRegen:
+    def test_regen_from_saved_weights(self, tmp_path):
+        """The --hlo-only path: train-free re-lowering from weights_f32.bin
+        produces loadable HLO identical in structure to the full path."""
+        from compile.aot import regen_hlo
+        from compile.export import save_named_tensors as snt
+
+        cfg = M.BackboneConfig(depth=9, feature_maps=16, strided=True, image_size=32)
+        params = M.init_params(jax.random.PRNGKey(1), cfg)
+        folded = M.fold_bn(params)
+        named = {}
+        for b, fb in enumerate(folded["blocks"]):
+            for cname in ("conv1", "conv2", "conv3", "short"):
+                named[f"b{b}.{cname}.w"] = np.asarray(fb[cname]["w"], np.float32)
+                named[f"b{b}.{cname}.b"] = np.asarray(fb[cname]["b"], np.float32)
+        snt(str(tmp_path / "weights_f32.bin"), named)
+
+        regen_hlo(str(tmp_path))
+        for name in ("model.hlo.txt", "model_pallas.hlo.txt", "ncm.hlo.txt"):
+            text = (tmp_path / name).read_text()
+            assert "HloModule" in text
+            assert "{..." not in text

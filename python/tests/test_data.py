@@ -1,0 +1,114 @@
+"""Synthetic dataset properties: determinism, split disjointness (by latent),
+episode structure, resize correctness."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+
+
+@pytest.fixture(scope="module")
+def small_splits():
+    return D.build_splits(per_class=8, res=32, seed=7, n_base=6, n_val=3, n_novel=4)
+
+
+class TestGeneration:
+    def test_split_shapes(self, small_splits):
+        assert small_splits["base"].images.shape == (6, 8, 32, 32, 3)
+        assert small_splits["val"].images.shape == (3, 8, 32, 32, 3)
+        assert small_splits["novel"].images.shape == (4, 8, 32, 32, 3)
+
+    def test_deterministic(self):
+        a = D.build_splits(per_class=3, res=16, seed=5, n_base=2, n_val=1, n_novel=1)
+        b = D.build_splits(per_class=3, res=16, seed=5, n_base=2, n_val=1, n_novel=1)
+        np.testing.assert_array_equal(a["base"].images, b["base"].images)
+
+    def test_seed_changes_data(self):
+        a = D.build_splits(per_class=3, res=16, seed=5, n_base=2, n_val=1, n_novel=1)
+        b = D.build_splits(per_class=3, res=16, seed=6, n_base=2, n_val=1, n_novel=1)
+        assert not np.array_equal(a["base"].images, b["base"].images)
+
+    def test_pixel_range(self, small_splits):
+        img = small_splits["base"].images
+        assert img.min() >= 0.0 and img.max() <= 1.0
+
+    def test_intra_class_tighter_than_inter_class(self, small_splits):
+        """The few-shot signal exists: same-class images are more similar."""
+        imgs = small_splits["base"].images
+        intra, inter = [], []
+        for c in range(imgs.shape[0]):
+            intra.append(np.mean((imgs[c, 0] - imgs[c, 1]) ** 2))
+            other = (c + 1) % imgs.shape[0]
+            inter.append(np.mean((imgs[c, 0] - imgs[other, 0]) ** 2))
+        assert np.mean(intra) < np.mean(inter)
+
+    def test_class_specs_distinct(self):
+        specs = D.make_class_specs(20, seed=1)
+        assert len({(s.shape, s.fg) for s in specs}) > 10
+
+
+class TestResize:
+    def test_identity(self):
+        img = np.random.default_rng(0).random((16, 16, 3)).astype(np.float32)
+        out = D.resize_bilinear(img, 16)
+        np.testing.assert_array_equal(out, img)
+
+    def test_shape(self):
+        img = np.zeros((84, 84, 3), np.float32)
+        assert D.resize_bilinear(img, 32).shape == (32, 32, 3)
+        assert D.resize_bilinear(img, 100).shape == (100, 100, 3)
+
+    def test_constant_preserved(self):
+        img = np.full((84, 84, 3), 0.37, np.float32)
+        out = D.resize_bilinear(img, 32)
+        np.testing.assert_allclose(out, 0.37, atol=1e-6)
+
+    @given(res_in=st.sampled_from([16, 21, 84]), res_out=st.sampled_from([8, 32, 100]))
+    @settings(max_examples=6, deadline=None)
+    def test_range_preserved(self, res_in, res_out):
+        img = np.random.default_rng(1).random((res_in, res_in, 3)).astype(np.float32)
+        out = D.resize_bilinear(img, res_out)
+        assert out.min() >= img.min() - 1e-6 and out.max() <= img.max() + 1e-6
+
+    def test_dataset_resized(self, small_splits):
+        r = small_splits["base"].resized(16)
+        assert r.images.shape == (6, 8, 16, 16, 3)
+        # resized() with same res is a no-op copy
+        same = small_splits["base"].resized(32)
+        assert same.images.shape[2] == 32
+
+
+class TestEpisodes:
+    def test_structure(self, small_splits):
+        rng = np.random.default_rng(0)
+        sup, sy, qry, qy = D.sample_episode(small_splits["novel"], rng,
+                                            n_ways=3, n_shots=2, n_queries=4)
+        assert sup.shape[0] == 6 and qry.shape[0] == 12
+        assert sorted(set(sy)) == [0, 1, 2]
+        assert np.bincount(sy).tolist() == [2, 2, 2]
+        assert np.bincount(qy).tolist() == [4, 4, 4]
+
+    def test_support_query_disjoint(self, small_splits):
+        rng = np.random.default_rng(1)
+        sup, sy, qry, qy = D.sample_episode(small_splits["novel"], rng,
+                                            n_ways=2, n_shots=1, n_queries=3)
+        # no support image appears among the queries
+        for s in sup:
+            assert not any(np.array_equal(s, q) for q in qry)
+
+    def test_too_many_ways_raises(self, small_splits):
+        rng = np.random.default_rng(2)
+        with pytest.raises(ValueError):
+            D.sample_episode(small_splits["novel"], rng, n_ways=99)
+
+    def test_too_many_shots_raises(self, small_splits):
+        rng = np.random.default_rng(3)
+        with pytest.raises(ValueError):
+            D.sample_episode(small_splits["novel"], rng, n_shots=5, n_queries=5)
+
+    def test_batch_sampling(self, small_splits):
+        rng = np.random.default_rng(4)
+        x, y = D.sample_batch(small_splits["base"], 17, rng)
+        assert x.shape == (17, 32, 32, 3)
+        assert y.shape == (17,) and y.max() < 6

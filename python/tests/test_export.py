@@ -1,0 +1,141 @@
+"""Export format: PFT1 tensor binary roundtrip (vs a reference reader here;
+rust/src/util/tensorio.rs parses the same bytes), graph JSON structure, and
+HLO lowering smoke."""
+
+import io
+import json
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.export import export_graph, save_graph, save_named_tensors, save_tensor, write_tensor
+
+jax.config.update("jax_platform_name", "cpu")
+
+_DTYPES = {0: np.float32, 1: np.int16, 2: np.int32}
+
+
+def read_tensor(buf) -> np.ndarray:
+    """Reference PFT1 reader (mirrors rust/src/util/tensorio.rs)."""
+    magic = buf.read(4)
+    assert magic == b"PFT1", magic
+    code, ndim, _pad = struct.unpack("<BBH", buf.read(4))
+    dims = [struct.unpack("<I", buf.read(4))[0] for _ in range(ndim)]
+    dt = np.dtype(_DTYPES[code]).newbyteorder("<")
+    n = int(np.prod(dims)) if dims else 1
+    data = np.frombuffer(buf.read(n * dt.itemsize), dtype=dt)
+    return data.reshape(tuple(dims))
+
+
+class TestTensorIO:
+    @pytest.mark.parametrize("arr", [
+        np.arange(12, dtype=np.float32).reshape(3, 4),
+        np.arange(-5, 5, dtype=np.int16),
+        np.arange(8, dtype=np.int32).reshape(2, 2, 2),
+        np.float32(3.5).reshape(()),
+    ])
+    def test_roundtrip(self, arr):
+        buf = io.BytesIO()
+        write_tensor(buf, arr)
+        buf.seek(0)
+        got = read_tensor(buf)
+        np.testing.assert_array_equal(got, arr)
+        assert got.shape == arr.shape
+
+    def test_unsupported_dtype(self):
+        with pytest.raises(ValueError):
+            write_tensor(io.BytesIO(), np.zeros(3, np.float64))
+
+    def test_named_records(self, tmp_path):
+        path = tmp_path / "w.bin"
+        tensors = {"a.w": np.ones((2, 3), np.int16), "b.b": np.zeros(4, np.int32)}
+        save_named_tensors(str(path), tensors)
+        with open(path, "rb") as f:
+            for expect_name, expect in tensors.items():
+                (nlen,) = struct.unpack("<H", f.read(2))
+                name = f.read(nlen).decode()
+                assert name == expect_name
+                np.testing.assert_array_equal(read_tensor(f), expect)
+
+    def test_save_tensor_file(self, tmp_path):
+        p = tmp_path / "t.bin"
+        save_tensor(str(p), np.arange(6, dtype=np.float32))
+        with open(p, "rb") as f:
+            np.testing.assert_array_equal(read_tensor(f), np.arange(6, dtype=np.float32))
+
+
+class TestGraphExport:
+    @pytest.fixture(scope="class")
+    def exported(self):
+        cfg = M.BackboneConfig(depth=9, feature_maps=4, strided=True, image_size=16)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        folded = M.fold_bn(params)
+        graph, tensors = export_graph(folded, cfg)
+        return cfg, graph, tensors
+
+    def test_op_count(self, exported):
+        cfg, graph, _ = exported
+        # per block: 4 convs + 1 add; +1 gap; strided → no pools
+        assert len(graph["ops"]) == cfg.n_blocks * 5 + 1
+
+    def test_maxpool_variant_has_pools(self):
+        cfg = M.BackboneConfig(depth=9, feature_maps=4, strided=False, image_size=16)
+        params = M.init_params(jax.random.PRNGKey(1), cfg)
+        graph, _ = export_graph(M.fold_bn(params), cfg)
+        pools = [o for o in graph["ops"] if o["op"] == "maxpool"]
+        assert len(pools) == cfg.n_blocks
+
+    def test_ssa_dataflow(self, exported):
+        """Every op input is either the graph input or a previous output."""
+        _, graph, _ = exported
+        available = {graph["input"]["name"]}
+        for op in graph["ops"]:
+            assert op["input"] in available, f"{op['name']} uses undefined {op['input']}"
+            if "input2" in op:
+                assert op["input2"] in available
+            available.add(op["output"])
+        assert graph["output"]["name"] in available
+
+    def test_weights_referenced_exist(self, exported):
+        _, graph, tensors = exported
+        for op in graph["ops"]:
+            if op["op"] == "conv2d":
+                assert op["weights"] in tensors
+                assert op["bias"] in tensors
+
+    def test_weight_dtypes(self, exported):
+        _, graph, tensors = exported
+        for name, t in tensors.items():
+            if name.endswith(".w"):
+                assert t.dtype == np.int16
+            else:
+                assert t.dtype == np.int32
+
+    def test_save_graph_files(self, exported, tmp_path):
+        cfg, _, _ = exported
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        save_graph(str(tmp_path / "g.json"), str(tmp_path / "w.bin"),
+                   M.fold_bn(params), cfg)
+        with open(tmp_path / "g.json") as f:
+            g = json.load(f)
+        assert g["backbone"]["depth"] == 9
+        assert (tmp_path / "w.bin").stat().st_size > 0
+
+
+class TestHloLowering:
+    def test_backbone_hlo_text(self):
+        from compile.aot import lower_backbone
+        cfg = M.BackboneConfig(depth=9, feature_maps=2, strided=True, image_size=8)
+        params = M.init_params(jax.random.PRNGKey(2), cfg)
+        hlo = lower_backbone(M.fold_bn(params), cfg, M.Backend.jnp())
+        assert "HloModule" in hlo
+        assert "convolution" in hlo
+
+    def test_ncm_hlo_text(self):
+        from compile.aot import lower_ncm
+        hlo = lower_ncm(n_ways=5, dim=16, max_queries=4)
+        assert "HloModule" in hlo

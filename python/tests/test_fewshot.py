@@ -1,0 +1,78 @@
+"""NCM few-shot evaluation invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import fewshot as FS
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestNormalize:
+    def test_unit_norm(self):
+        f = jnp.asarray(np.random.default_rng(0).standard_normal((10, 8), dtype=np.float32))
+        n = FS.normalize_features(f, None)
+        np.testing.assert_allclose(np.linalg.norm(n, axis=1), 1.0, atol=1e-5)
+
+    def test_centering_applied(self):
+        f = jnp.ones((4, 3))
+        n = FS.normalize_features(f, jnp.ones((3,)) * 0.5)
+        np.testing.assert_allclose(np.linalg.norm(n, axis=1), 1.0, atol=1e-5)
+
+    def test_zero_vector_safe(self):
+        n = FS.normalize_features(jnp.zeros((2, 4)), None)
+        assert bool(jnp.all(jnp.isfinite(n)))
+
+
+class TestNcmClassify:
+    def test_perfect_separation(self):
+        sup = jnp.asarray(np.eye(3, 8, dtype=np.float32))
+        sy = np.array([0, 1, 2])
+        pred = FS.ncm_classify(sup, sy, sup, n_ways=3)
+        np.testing.assert_array_equal(pred, [0, 1, 2])
+
+    def test_multi_shot_centroid(self):
+        rng = np.random.default_rng(1)
+        base = rng.standard_normal((2, 8)).astype(np.float32) * 10
+        sup = np.concatenate([base[0] + rng.normal(0, 0.1, (3, 8)),
+                              base[1] + rng.normal(0, 0.1, (3, 8))]).astype(np.float32)
+        sy = np.array([0, 0, 0, 1, 1, 1])
+        q = jnp.asarray(base + rng.normal(0, 0.1, (2, 8)).astype(np.float32))
+        pred = FS.ncm_classify(jnp.asarray(sup), sy, q, n_ways=2)
+        np.testing.assert_array_equal(pred, [0, 1])
+
+
+class TestEvaluate:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        splits = D.build_splits(per_class=10, res=16, seed=3,
+                                n_base=6, n_val=3, n_novel=5)
+        cfg = M.BackboneConfig(depth=9, feature_maps=4, strided=True, image_size=16)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        return splits, cfg, params
+
+    def test_accuracy_in_range_and_above_chance(self, setup):
+        """Even an untrained backbone beats 1/ways chance on synthetic data
+        (colors/shapes survive random projections)."""
+        splits, cfg, params = setup
+        acc, ci = FS.evaluate(params, splits["novel"], cfg,
+                              FS.EpisodeConfig(n_ways=5, n_queries=8, n_episodes=60))
+        assert 0.0 <= acc <= 1.0
+        assert ci >= 0.0
+        assert acc > 0.2  # chance = 0.2
+
+    def test_seed_reproducible(self, setup):
+        splits, cfg, params = setup
+        e = FS.EpisodeConfig(n_ways=3, n_queries=8, n_episodes=20)
+        a1 = FS.evaluate(params, splits["novel"], cfg, e, seed=11)
+        a2 = FS.evaluate(params, splits["novel"], cfg, e, seed=11)
+        assert a1 == a2
+
+    def test_base_mean_shape(self, setup):
+        splits, cfg, params = setup
+        bm = FS.compute_base_mean(params, splits["base"], cfg, max_images=16)
+        assert bm.shape == (cfg.feature_dim,)

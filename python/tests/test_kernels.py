@@ -1,0 +1,185 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/paddings; assert_allclose against ref.py.
+This is the CORE correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    MatmulConfig,
+    conv2d_pallas,
+    fake_quant_pallas,
+    im2col,
+    matmul_pallas,
+    ncm_distances_pallas,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------- matmul ---
+
+class TestMatmul:
+    @given(m=st.integers(1, 40), k=st.integers(1, 40), n=st.integers(1, 40),
+           seed=st.integers(0, 2**31))
+    @settings(**_SETTINGS)
+    def test_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _rand(rng, m, k), _rand(rng, k, n)
+        got = matmul_pallas(a, b, MatmulConfig(bm=16, bn=16, bk=16))
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_multi_k_block_accumulation(self):
+        """K spanning several blocks exercises the scratch accumulator."""
+        rng = np.random.default_rng(0)
+        a, b = _rand(rng, 16, 100), _rand(rng, 100, 8)
+        got = matmul_pallas(a, b, MatmulConfig(bm=8, bn=8, bk=16))
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_large_blocks_clamped(self):
+        rng = np.random.default_rng(1)
+        a, b = _rand(rng, 5, 7), _rand(rng, 7, 3)
+        got = matmul_pallas(a, b)  # default 128-blocks clamp to problem
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_shape_errors(self):
+        rng = np.random.default_rng(2)
+        with pytest.raises(ValueError):
+            matmul_pallas(_rand(rng, 4, 5), _rand(rng, 6, 3))
+        with pytest.raises(ValueError):
+            matmul_pallas(_rand(rng, 4), _rand(rng, 4, 3))
+
+    def test_zero_dim(self):
+        out = matmul_pallas(jnp.zeros((0, 4)), jnp.zeros((4, 3)))
+        assert out.shape == (0, 3)
+
+    def test_mxu_utilization_model(self):
+        cfg = MatmulConfig(bm=8, bn=8, bk=8)
+        assert cfg.mxu_utilization(8, 8, 8) == 1.0
+        assert cfg.mxu_utilization(4, 8, 8) == pytest.approx(0.5)
+        assert cfg.vmem_bytes() > 0
+
+
+# ---------------------------------------------------------------- conv2d ---
+
+class TestConv2d:
+    @given(
+        n=st.integers(1, 2), h=st.integers(4, 12), c_in=st.integers(1, 8),
+        c_out=st.integers(1, 8), stride=st.sampled_from([1, 2]),
+        k=st.sampled_from([1, 3]), seed=st.integers(0, 2**31),
+    )
+    @settings(**_SETTINGS)
+    def test_matches_lax_conv(self, n, h, c_in, c_out, stride, k, seed):
+        rng = np.random.default_rng(seed)
+        pad = 1 if k == 3 else 0
+        x = _rand(rng, n, h, h, c_in)
+        w = _rand(rng, k, k, c_in, c_out)
+        got = conv2d_pallas(x, w, stride=stride, padding=pad,
+                            config=MatmulConfig(bm=16, bn=16, bk=16))
+        want = ref.conv2d_ref(x, w, stride=stride, padding=pad)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_im2col_shapes(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 2, 8, 8, 3)
+        patches, oh, ow = im2col(x, 3, 3, 1, 1)
+        assert (oh, ow) == (8, 8)
+        assert patches.shape == (2 * 8 * 8, 9 * 3)
+        patches, oh, ow = im2col(x, 3, 3, 2, 1)
+        assert (oh, ow) == (4, 4)
+
+    def test_im2col_stride2_odd(self):
+        """Odd spatial dims with stride 2 — the ResNet downsampling case."""
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 1, 21, 21, 4)
+        w = _rand(rng, 3, 3, 4, 6)
+        got = conv2d_pallas(x, w, stride=2, padding=1)
+        want = ref.conv2d_ref(x, w, stride=2, padding=1)
+        assert got.shape == want.shape == (1, 11, 11, 6)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_channel_mismatch_raises(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(ValueError):
+            conv2d_pallas(_rand(rng, 1, 8, 8, 3), _rand(rng, 3, 3, 4, 8))
+
+
+# ------------------------------------------------------------------- ncm ---
+
+class TestNcm:
+    @given(q=st.integers(1, 30), w=st.integers(1, 12), d=st.integers(1, 64),
+           seed=st.integers(0, 2**31))
+    @settings(**_SETTINGS)
+    def test_matches_ref(self, q, w, d, seed):
+        rng = np.random.default_rng(seed)
+        queries, cents = _rand(rng, q, d), _rand(rng, w, d)
+        got = ncm_distances_pallas(queries, cents)
+        want = ref.ncm_distances_ref(queries, cents)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_self_distance_zero(self):
+        rng = np.random.default_rng(5)
+        x = _rand(rng, 4, 16)
+        d = ncm_distances_pallas(x, x)
+        np.testing.assert_allclose(jnp.diagonal(d), jnp.zeros(4), atol=1e-4)
+
+    def test_argmin_matches_nearest(self):
+        rng = np.random.default_rng(6)
+        cents = _rand(rng, 5, 8)
+        queries = cents + 0.01 * _rand(rng, 5, 8)
+        pred = jnp.argmin(ncm_distances_pallas(queries, cents), axis=1)
+        np.testing.assert_array_equal(pred, jnp.arange(5))
+
+    def test_dim_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            ncm_distances_pallas(jnp.zeros((3, 4)), jnp.zeros((2, 5)))
+
+
+# ----------------------------------------------------------------- quant ---
+
+class TestFakeQuant:
+    @given(n=st.integers(1, 300), seed=st.integers(0, 2**31),
+           frac=st.sampled_from([4, 8, 12]))
+    @settings(**_SETTINGS)
+    def test_matches_ref(self, n, seed, frac):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.uniform(-200, 200, n).astype(np.float32))
+        got = fake_quant_pallas(x, frac_bits=frac)
+        want = ref.fake_quant_ref(x, frac_bits=frac)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_exact_grid_values_fixed(self):
+        """Values already on the Q8.8 grid are unchanged."""
+        x = jnp.asarray([0.0, 1.0, -1.0, 0.5, 127.99609375, -128.0])
+        np.testing.assert_allclose(fake_quant_pallas(x), x, atol=0)
+
+    def test_saturation(self):
+        x = jnp.asarray([1000.0, -1000.0])
+        got = fake_quant_pallas(x)
+        np.testing.assert_allclose(got, [32767 / 256.0, -32768 / 256.0])
+
+    def test_rounding_half_away(self):
+        # 0.001953125 = 0.5/256 → rounds away from zero to 1/256.
+        x = jnp.asarray([0.5 / 256.0, -0.5 / 256.0])
+        got = fake_quant_pallas(x)
+        np.testing.assert_allclose(got, [1 / 256.0, -1 / 256.0])
+
+    def test_preserves_shape(self):
+        x = jnp.zeros((3, 5, 7))
+        assert fake_quant_pallas(x).shape == (3, 5, 7)
+
+    def test_bad_format_raises(self):
+        with pytest.raises(ValueError):
+            fake_quant_pallas(jnp.zeros(4), frac_bits=16, total_bits=16)

@@ -1,0 +1,158 @@
+"""L2 model invariants: shapes, BN folding parity, Pallas-backend parity,
+MAC/param counts, config validation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_cfg(**kw):
+    base = dict(depth=9, feature_maps=4, strided=True, image_size=16)
+    base.update(kw)
+    return M.BackboneConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+class TestConfig:
+    def test_widths_resnet9(self):
+        cfg = M.BackboneConfig(depth=9, feature_maps=16)
+        assert cfg.widths == (16, 40, 80)
+        assert cfg.feature_dim == 80
+
+    def test_widths_resnet12(self):
+        cfg = M.BackboneConfig(depth=12, feature_maps=16)
+        assert cfg.widths == (16, 40, 80, 160)
+
+    def test_name_roundtrip(self):
+        cfg = M.BackboneConfig(depth=12, feature_maps=32, strided=False, image_size=84)
+        assert cfg.name == "resnet12_fm32_maxpool_s84"
+
+    @pytest.mark.parametrize("bad", [dict(depth=10), dict(feature_maps=0), dict(image_size=4)])
+    def test_invalid(self, bad):
+        with pytest.raises(ValueError):
+            tiny_cfg(**bad)
+
+
+class TestForward:
+    def test_feature_shape(self, tiny):
+        cfg, params = tiny
+        x = jnp.zeros((2, cfg.image_size, cfg.image_size, 3))
+        feats, stats = M.forward(params, x, cfg)
+        assert feats.shape == (2, cfg.feature_dim)
+        assert len(stats) == cfg.n_blocks
+
+    @pytest.mark.parametrize("depth,strided,size", [(9, True, 32), (9, False, 32),
+                                                    (12, True, 32), (12, False, 16)])
+    def test_all_variants_run(self, depth, strided, size):
+        cfg = M.BackboneConfig(depth=depth, feature_maps=4, strided=strided, image_size=size)
+        params = M.init_params(jax.random.PRNGKey(1), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, size, size, 3))
+        feats, _ = M.forward(params, x, cfg)
+        assert feats.shape == (1, cfg.feature_dim)
+        assert bool(jnp.all(jnp.isfinite(feats)))
+
+    def test_maxpool_and_strided_same_feature_dim(self):
+        """Paper §III-B(c): stride-2 and 2×2 pool are equivalent dimension-wise."""
+        f = {}
+        for strided in (True, False):
+            cfg = tiny_cfg(strided=strided)
+            params = M.init_params(jax.random.PRNGKey(3), cfg)
+            x = jnp.zeros((1, 16, 16, 3))
+            f[strided], _ = M.forward(params, x, cfg)
+        assert f[True].shape == f[False].shape
+
+    def test_training_returns_batch_stats(self, tiny):
+        cfg, params = tiny
+        x = jax.random.normal(jax.random.PRNGKey(4), (4, 16, 16, 3))
+        _, stats = M.forward(params, x, cfg, training=True)
+        mean, var = stats[0][0]
+        assert mean.shape == (cfg.widths[0],)
+        assert bool(jnp.all(var >= 0))
+
+
+class TestHeads:
+    def test_logit_shapes(self, tiny):
+        cfg, params = tiny
+        heads = M.init_heads(jax.random.PRNGKey(5), cfg, n_classes=10)
+        feats = jnp.zeros((3, cfg.feature_dim))
+        cls, rot = M.forward_heads(heads, feats)
+        assert cls.shape == (3, 10)
+        assert rot.shape == (3, 4)
+
+
+class TestBnFold:
+    def test_fold_matches_inference_forward(self, tiny):
+        """BN-folded network ≡ inference-mode BN network (headline invariant:
+        the deployed graph computes the same function)."""
+        cfg, params = tiny
+        # Make running stats non-trivial first.
+        x = jax.random.normal(jax.random.PRNGKey(6), (8, 16, 16, 3))
+        _, stats = M.forward(params, x, cfg, training=True)
+        params = M.update_bn_ema(params, stats, momentum=0.0)  # adopt batch stats
+
+        want, _ = M.forward(params, x, cfg, training=False)
+        folded = M.fold_bn(params)
+        got = M.forward_folded(folded, x, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_folded_param_structure(self, tiny):
+        cfg, params = tiny
+        folded = M.fold_bn(params)
+        assert len(folded["blocks"]) == cfg.n_blocks
+        b0 = folded["blocks"][0]
+        assert set(b0) == {"conv1", "conv2", "conv3", "short"}
+        assert b0["conv1"]["w"].shape == (3, 3, 3, cfg.widths[0])
+        assert b0["conv1"]["b"].shape == (cfg.widths[0],)
+
+
+class TestPallasBackend:
+    def test_folded_forward_pallas_matches_jnp(self):
+        """L1→L2 composition: the whole folded net through Pallas kernels."""
+        cfg = tiny_cfg(image_size=12, feature_maps=3)
+        params = M.init_params(jax.random.PRNGKey(7), cfg)
+        folded = M.fold_bn(params)
+        x = jax.random.normal(jax.random.PRNGKey(8), (1, 12, 12, 3))
+        want = M.forward_folded(folded, x, cfg, backend=M.Backend.jnp())
+        got = M.forward_folded(folded, x, cfg, backend=M.Backend.pallas())
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+class TestCounts:
+    def test_param_count_formula_resnet9(self):
+        cfg = tiny_cfg()
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        n = M.count_params(params)
+        # Manual: per block 3×(3·3·cin/cout) convs + 1×1 shortcut + 4 BN × 4c
+        expected = 0
+        cin = 3
+        for cout in cfg.widths:
+            expected += 9 * cin * cout + 9 * cout * cout * 2 + cin * cout
+            expected += 4 * 4 * cout  # scale/bias/mean/var × 4 BN layers
+            cin = cout
+        assert n == expected
+
+    def test_macs_monotonic_in_width_and_size(self):
+        base = M.count_macs(M.BackboneConfig(depth=9, feature_maps=16, image_size=32))
+        wider = M.count_macs(M.BackboneConfig(depth=9, feature_maps=32, image_size=32))
+        bigger = M.count_macs(M.BackboneConfig(depth=9, feature_maps=16, image_size=84))
+        deeper = M.count_macs(M.BackboneConfig(depth=12, feature_maps=16, image_size=32))
+        assert wider > 3 * base          # ~4× in width²
+        assert bigger > 6 * base         # ~6.9× in res²
+        assert deeper > base
+
+    def test_strided_fewer_macs_than_maxpool(self):
+        """Paper §V-A: strided convs reduce operations vs max-pool."""
+        s = M.count_macs(M.BackboneConfig(depth=9, feature_maps=16, strided=True))
+        p = M.count_macs(M.BackboneConfig(depth=9, feature_maps=16, strided=False))
+        assert s < p

@@ -1,0 +1,74 @@
+"""Quantization: integer codes roundtrip, quant-aware forward stays close to
+f32 for in-range activations, saturation handled."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.quantize import QFormat, forward_folded_quant, quantize_folded
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestQFormat:
+    def test_q88_constants(self):
+        f = QFormat()
+        assert f.scale == 256
+        assert f.min_int == -32768 and f.max_int == 32767
+
+    def test_quantize_int_exact(self):
+        f = QFormat()
+        np.testing.assert_array_equal(f.quantize_int(np.array([1.0, -1.0, 0.5])),
+                                      [256, -256, 128])
+
+    def test_round_half_away(self):
+        f = QFormat()
+        np.testing.assert_array_equal(
+            f.quantize_int(np.array([0.5 / 256, -0.5 / 256, 1.5 / 256])),
+            [1, -1, 2])
+
+    def test_saturate(self):
+        f = QFormat()
+        np.testing.assert_array_equal(f.quantize_int(np.array([1e6, -1e6])),
+                                      [32767, -32768])
+
+    def test_roundtrip_error_bound(self):
+        f = QFormat()
+        rng = np.random.default_rng(0)
+        x = rng.uniform(-100, 100, 1000).astype(np.float32)
+        err = np.abs(f.dequantize(f.quantize_int(x)) - x)
+        assert err.max() <= 0.5 / 256 + 1e-7
+
+
+class TestQuantizedForward:
+    @pytest.fixture(scope="class")
+    def folded(self):
+        cfg = M.BackboneConfig(depth=9, feature_maps=4, strided=True, image_size=16)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        return cfg, M.fold_bn(params)
+
+    def test_close_to_f32(self, folded):
+        cfg, f = folded
+        x = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
+        y32 = M.forward_folded(f, x, cfg)
+        yq = forward_folded_quant(f, x, cfg)
+        # Q8.8 activation grid is 1/256 ≈ 4e-3; a 3-block net accumulates a
+        # few steps of that.
+        assert float(jnp.max(jnp.abs(y32 - yq))) < 0.15
+
+    def test_output_on_grid(self, folded):
+        cfg, f = folded
+        x = jax.random.uniform(jax.random.PRNGKey(2), (1, 16, 16, 3))
+        yq = np.asarray(forward_folded_quant(f, x, cfg))
+        codes = yq * 256.0
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+    def test_quantize_folded_structure(self, folded):
+        cfg, f = folded
+        q = quantize_folded(f)
+        assert len(q["blocks"]) == cfg.n_blocks
+        w = q["blocks"][0]["conv1"]["w_int"]
+        assert w.dtype == np.int32
+        assert w.min() >= -32768 and w.max() <= 32767

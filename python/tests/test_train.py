@@ -1,0 +1,89 @@
+"""Training routine smoke + invariants: loss decreases, rotation batch is a
+true rotation, BN EMA updates, gradients leave BN stats alone."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestRotateBatch:
+    def test_rot0_identity(self):
+        x = jnp.asarray(np.random.default_rng(0).random((3, 8, 8, 3), dtype=np.float32))
+        out = T.rotate_batch(x, jnp.zeros(3, jnp.int32))
+        np.testing.assert_array_equal(out, x)
+
+    def test_rot_k_matches_rot90(self):
+        x = jnp.asarray(np.random.default_rng(1).random((4, 8, 8, 3), dtype=np.float32))
+        rots = jnp.asarray([0, 1, 2, 3])
+        out = T.rotate_batch(x, rots)
+        for i, k in enumerate([0, 1, 2, 3]):
+            np.testing.assert_array_equal(out[i], jnp.rot90(x[i], k=k, axes=(0, 1)))
+
+    def test_four_rotations_cycle(self):
+        x = jnp.asarray(np.random.default_rng(2).random((1, 6, 6, 3), dtype=np.float32))
+        y = x
+        for _ in range(4):
+            y = T.rotate_batch(y, jnp.asarray([1]))
+        np.testing.assert_allclose(y, x, atol=1e-7)
+
+
+class TestSmoothCE:
+    def test_matches_plain_ce_when_no_smoothing(self):
+        logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 3.0, 0.5]])
+        labels = jnp.asarray([0, 1])
+        got = T._smooth_ce(logits, labels, 0.0)
+        want = -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(2), labels])
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_smoothing_increases_loss_on_confident_correct(self):
+        logits = jnp.asarray([[10.0, -10.0]])
+        labels = jnp.asarray([0])
+        assert T._smooth_ce(logits, labels, 0.1) > T._smooth_ce(logits, labels, 0.0)
+
+
+@pytest.mark.slow
+class TestTrainLoop:
+    @pytest.fixture(scope="class")
+    def run(self, tmp_path_factory):
+        splits = D.build_splits(per_class=12, res=16, seed=9,
+                                n_base=8, n_val=4, n_novel=4)
+        cfg = M.BackboneConfig(depth=9, feature_maps=4, strided=True, image_size=16)
+        tcfg = T.TrainConfig(steps=40, batch=16, eval_every=40, seed=0)
+        log_path = tmp_path_factory.mktemp("t") / "log.json"
+        params, heads, log = T.train_backbone(cfg, tcfg, splits,
+                                              log_path=str(log_path), verbose=False)
+        return cfg, params, heads, log, log_path
+
+    def test_loss_decreases(self, run):
+        _, _, _, log, _ = run
+        first, last = log["loss"][0], log["loss"][-1]
+        assert last < first, f"loss did not decrease: {first} -> {last}"
+
+    def test_log_written(self, run):
+        import json
+        *_, log_path = run
+        with open(log_path) as f:
+            j = json.load(f)
+        assert j["steps"] and len(j["loss"]) == len(j["steps"])
+        assert j["eval"], "eval entries missing"
+
+    def test_bn_stats_moved_from_init(self, run):
+        _, params, _, _, _ = run
+        bn = params["blocks"][0]["bn1"]
+        assert not np.allclose(np.asarray(bn["mean"]), 0.0)
+
+    def test_params_finite(self, run):
+        _, params, heads, _, _ = run
+        for leaf in jax.tree_util.tree_leaves(params) + jax.tree_util.tree_leaves(heads):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+    def test_train_acc_above_chance(self, run):
+        _, _, _, log, _ = run
+        assert log["train_acc"][-1] > 1.0 / 8  # 8 base classes

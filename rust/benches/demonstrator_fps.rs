@@ -1,0 +1,106 @@
+//! Bench: the demonstrator frame loop (paper §IV-B: **16 FPS, 30 ms, 6.2 W,
+//! 5.75 h**) — runs the scripted live demo on the sim backend and checks
+//! the modeled system figures, then times host-side stages.
+//!
+//! Run: `cargo bench --bench demonstrator_fps`.
+
+use pefsl::coordinator::{DemoConfig, Demonstrator, SimBackend};
+use pefsl::graph::import_files;
+use pefsl::tarch::Tarch;
+use pefsl::util::bench::{bench, BenchConfig};
+use pefsl::video::{CameraConfig, DisplaySink, Preprocessor, SyntheticCamera};
+
+fn main() {
+    let dir = pefsl::artifacts_dir();
+    let tarch = Tarch::z7020_12x12();
+
+    // Prefer the real trained artifact; fall back to a synthetic backbone.
+    let graph = if dir.join("graph.json").exists() {
+        import_files(dir.join("graph.json"), dir.join("weights.bin")).expect("artifacts")
+    } else {
+        eprintln!("note: no artifacts — using synthetic headline backbone");
+        pefsl::dse::build_backbone_graph(&pefsl::dse::BackboneSpec::headline(), 7).unwrap()
+    };
+
+    let backend = SimBackend::new(graph, &tarch).expect("compile backend");
+    let cfg = DemoConfig { tarch: tarch.clone(), max_frames: 0, ..Default::default() };
+    let mut demo = Demonstrator::new(cfg, backend, DisplaySink::Null);
+    let report = demo.run_scripted(3, 24).expect("demo run");
+
+    println!(
+        "demonstrator: modeled_fps={:.1} (paper 16) inference={:.2} ms (paper 30) \
+         power={:.2} W (paper 6.2) battery={:.2} h (paper 5.75) live-acc={:.3}",
+        report.modeled_fps,
+        report.inference_ms_mean,
+        report.power_w,
+        report.battery_hours,
+        report.accuracy.unwrap_or(f64::NAN),
+    );
+    assert!((report.modeled_fps - 16.0).abs() < 2.5, "fps {}", report.modeled_fps);
+    assert!((report.inference_ms_mean - 30.0).abs() < 5.0, "inference {}", report.inference_ms_mean);
+    assert!((report.power_w - 6.2).abs() < 0.8, "power {}", report.power_w);
+    assert!((report.battery_hours - 5.75).abs() < 1.0, "battery {}", report.battery_hours);
+
+    // Host-side stage timings.
+    let bcfg = BenchConfig::quick();
+    let mut cam = SyntheticCamera::new(CameraConfig::default());
+    bench("demo/camera_capture_160x120", &bcfg, || {
+        std::hint::black_box(cam.capture());
+    });
+    let frame = cam.capture();
+    let pre = Preprocessor::new(32);
+    bench("demo/preprocess_resize_to_32", &bcfg, || {
+        std::hint::black_box(pre.run(&frame));
+    });
+    bench("demo/full_frame_step_sim_backend", &bcfg, || {
+        demo.step().unwrap();
+    });
+
+    // Ablation (paper §IV-B future work): NCM on CPU vs on the FPGA.
+    // CPU-NCM on the ARM is modeled by SystemModel::ncm_ms_per_mac; the
+    // FPGA variant lowers the distance computation onto the systolic array
+    // (ncm::fpga) and reports its modeled cycles.
+    let mut rng = pefsl::util::Prng::new(4);
+    let dim = 80;
+    let cents: Vec<Vec<f32>> = (0..5)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+            v.iter_mut().for_each(|x| *x /= n);
+            v
+        })
+        .collect();
+    let fpga_ncm = pefsl::ncm::fpga::FpgaNcm::new(&cents, &tarch).expect("fpga ncm");
+    let sys = pefsl::coordinator::SystemModel::default();
+    let cpu_ncm_ms = sys.ncm_ms_per_mac * (dim * 5) as f64;
+    println!(
+        "ablation ncm-placement: CPU(ARM model) {:.4} ms vs FPGA {:.4} ms ({} cycles) per query",
+        cpu_ncm_ms,
+        fpga_ncm.latency_ms(),
+        fpga_ncm.cycles_per_query()
+    );
+    let q = cents[2].clone();
+    bench("demo/ncm_fpga_classify_sim", &bcfg, || {
+        std::hint::black_box(fpga_ncm.classify(&q).unwrap());
+    });
+
+    // Ablation: serial PYNQ driver loop (the paper's 16 FPS) vs a
+    // two-stage pipeline overlapping CPU work with the accelerator.
+    let graph2 = if dir.join("graph.json").exists() {
+        import_files(dir.join("graph.json"), dir.join("weights.bin")).unwrap()
+    } else {
+        pefsl::dse::build_backbone_graph(&pefsl::dse::BackboneSpec::headline(), 7).unwrap()
+    };
+    let mut backend2 = SimBackend::new(graph2, &tarch).unwrap();
+    let pcfg = pefsl::coordinator::PipelineConfig { tarch: tarch.clone(), ..Default::default() };
+    let pr = pefsl::coordinator::run_pipelined(&pcfg, &mut backend2, 2, 24).unwrap();
+    println!(
+        "ablation serial-vs-pipelined: serial {:.1} FPS (paper's loop) → pipelined {:.1} FPS \
+         (host {:.1} f/s, acc {:.3})",
+        pr.serial_fps,
+        pr.pipelined_fps,
+        pr.host_fps,
+        pr.accuracy.unwrap_or(f64::NAN)
+    );
+    assert!(pr.pipelined_fps > pr.serial_fps);
+}

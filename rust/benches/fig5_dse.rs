@@ -1,0 +1,75 @@
+//! Bench: regenerate **Fig. 5** — the accuracy/latency design-space
+//! exploration (paper §V-A).
+//!
+//! For both deployed resolutions (32×32 top panel, 84×84 bottom panel),
+//! compiles every configuration of the paper's grid on the z7020-12×12
+//! tarch, prints latency (cycles → ms @ 125 MHz) joined with the accuracy
+//! axis from `artifacts/dse_results.json`, and asserts the paper's
+//! qualitative orderings.  Also times the compiler itself.
+//!
+//! Run: `cargo bench --bench fig5_dse` (env `PEFSL_TEST_SIZE=84` for the
+//! bottom panel only).
+
+use pefsl::dse::{fig5_rows, join_accuracy, render_table};
+use pefsl::json;
+use pefsl::tarch::Tarch;
+use pefsl::util::bench::{bench, BenchConfig};
+
+fn main() {
+    let tarch = Tarch::z7020_12x12();
+    let sizes: Vec<usize> = match std::env::var("PEFSL_TEST_SIZE") {
+        Ok(s) => vec![s.parse().expect("PEFSL_TEST_SIZE must be an integer")],
+        Err(_) => vec![32, 84],
+    };
+
+    let acc = {
+        let p = pefsl::artifacts_dir().join("dse_results.json");
+        if p.exists() {
+            Some(json::from_file(&p).expect("parse dse_results.json"))
+        } else {
+            eprintln!("note: no dse_results.json — latency axis only");
+            None
+        }
+    };
+
+    for &size in &sizes {
+        let mut rows = fig5_rows(&tarch, size).expect("sweep");
+        if let Some(doc) = &acc {
+            join_accuracy(&mut rows, doc);
+        }
+        println!("\n{}", render_table(&rows, size));
+
+        // Paper take-aways as assertions (shape of the result, §V-A):
+        let get = |d: usize, fm: usize, s: bool| {
+            rows.iter()
+                .find(|r| r.spec.depth == d && r.spec.feature_maps == fm && r.spec.strided == s)
+                .unwrap()
+        };
+        assert!(get(9, 16, true).cycles < get(9, 16, false).cycles, "strided faster");
+        assert!(get(9, 16, true).cycles < get(12, 16, true).cycles, "shallower faster");
+        assert!(get(9, 16, true).cycles < get(9, 64, true).cycles, "narrower faster");
+        if size == 32 {
+            if let (Some(a9), Some(a12)) = (get(9, 16, true).acc_test32, get(12, 16, true).acc_test32) {
+                println!("takeaway: R9 acc {a9:.3} vs R12 acc {a12:.3} at 32×32 (paper: R9 ≥ R12)");
+            }
+            let headline = get(9, 16, true);
+            println!(
+                "headline: {} = {:.2} ms accelerator (paper: 30 ms driver-visible)",
+                headline.spec.name(),
+                headline.latency_ms
+            );
+        }
+    }
+
+    // Compiler throughput (the DSE inner loop the paper automates with
+    // Tensil's compiler).
+    let cfg = BenchConfig::quick();
+    bench("fig5/compile_headline_config", &cfg, || {
+        let g = pefsl::dse::build_backbone_graph(&pefsl::dse::BackboneSpec::headline(), 7).unwrap();
+        let p = pefsl::tcompiler::compile(&g, &tarch).unwrap();
+        std::hint::black_box(p.est_total_cycles);
+    });
+    bench("fig5/full_grid_sweep_32", &cfg, || {
+        std::hint::black_box(fig5_rows(&tarch, 32).unwrap());
+    });
+}

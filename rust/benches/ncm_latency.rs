@@ -1,0 +1,58 @@
+//! Bench: NCM classifier latency — the CPU-side stage of the demonstrator
+//! (paper §IV-B runs NCM on the ARM; a future version moves it to the
+//! FPGA).  Measures enroll + classify across ways/shots/dims, validating
+//! that NCM is negligible next to the 30 ms backbone (the paper's implicit
+//! claim when it leaves NCM on the CPU).
+//!
+//! Run: `cargo bench --bench ncm_latency`.
+
+use pefsl::ncm::NcmClassifier;
+use pefsl::util::bench::{bench, BenchConfig};
+use pefsl::util::Prng;
+
+fn feat(rng: &mut Prng, dim: usize) -> Vec<f32> {
+    (0..dim).map(|_| rng.normal()).collect()
+}
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let mut rng = Prng::new(3);
+
+    for (ways, shots, dim) in [(5usize, 1usize, 80usize), (5, 5, 80), (20, 1, 80), (5, 1, 640)] {
+        let mut ncm = NcmClassifier::new(dim);
+        for w in 0..ways {
+            let c = ncm.add_class(format!("c{w}"));
+            for _ in 0..shots {
+                ncm.enroll(c, &feat(&mut rng, dim)).unwrap();
+            }
+        }
+        let q = feat(&mut rng, dim);
+        let r = bench(
+            &format!("ncm/classify_w{ways}_s{shots}_d{dim}"),
+            &cfg,
+            || {
+                std::hint::black_box(ncm.classify(&q).unwrap());
+            },
+        );
+        // NCM must stay far below the 30 ms inference budget.
+        assert!(r.mean_ms() < 1.0, "NCM classify {} ms", r.mean_ms());
+    }
+
+    let mut ncm = NcmClassifier::new(80);
+    let c = ncm.add_class("x");
+    let f = feat(&mut rng, 80);
+    bench("ncm/enroll_d80", &cfg, || {
+        ncm.enroll(c, &f).unwrap();
+    });
+
+    // batch distances (the episodic evaluation hot loop)
+    let mut ncm = NcmClassifier::new(80);
+    for w in 0..5 {
+        let c = ncm.add_class(format!("c{w}"));
+        ncm.enroll(c, &feat(&mut rng, 80)).unwrap();
+    }
+    let queries: Vec<Vec<f32>> = (0..75).map(|_| feat(&mut rng, 80)).collect();
+    bench("ncm/batch_75_queries_5_ways", &cfg, || {
+        std::hint::black_box(ncm.distances(&queries).unwrap());
+    });
+}

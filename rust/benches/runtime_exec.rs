@@ -1,0 +1,62 @@
+//! Bench: PJRT runtime execution latency — the f32 reference path of the
+//! demonstrator (load AOT HLO once, execute per frame).  §Perf target:
+//! ≤ 5 ms/frame for the 32×32 ResNet-9 on this host.
+//!
+//! Run: `cargo bench --bench runtime_exec` (requires `make artifacts`).
+
+use pefsl::runtime::Runtime;
+use pefsl::util::bench::{bench, BenchConfig};
+use pefsl::util::tensorio::read_tensor;
+
+fn main() {
+    let dir = pefsl::artifacts_dir();
+    if !dir.join("model.hlo.txt").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt client");
+    let input_t = read_tensor(dir.join("testvec_input.bin")).expect("test vector");
+    let dims: Vec<usize> = vec![1, input_t.shape[1], input_t.shape[2], input_t.shape[3]];
+    let img_elems: usize = dims.iter().product();
+    let img = &input_t.as_f32().unwrap()[..img_elems];
+
+    let cfg = BenchConfig::default();
+
+    let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![img_elems]).unwrap();
+    let r = bench("runtime/backbone_jnp_hlo_exec", &cfg, || {
+        std::hint::black_box(exe.run_f32(&[(img, &dims)]).unwrap());
+    });
+    assert!(r.mean_ms() < 50.0, "PJRT exec {} ms", r.mean_ms());
+    println!("runtime: jnp backbone {:.3} ms/frame (§Perf target ≤ 5 ms)", r.mean_ms());
+
+    // The Pallas-lowered variant of the same network.
+    if dir.join("model_pallas.hlo.txt").exists() {
+        let exe_p = rt.load_hlo_text(dir.join("model_pallas.hlo.txt"), vec![img_elems]).unwrap();
+        bench("runtime/backbone_pallas_hlo_exec", &cfg, || {
+            std::hint::black_box(exe_p.run_f32(&[(img, &dims)]).unwrap());
+        });
+    }
+
+    // NCM head.
+    if dir.join("ncm.hlo.txt").exists() {
+        let manifest = pefsl::json::from_file(dir.join("manifest.json")).unwrap();
+        let fdim = manifest
+            .path(&["backbone", "feature_dim"])
+            .and_then(pefsl::json::Value::as_usize)
+            .unwrap_or(80);
+        let exe_n = rt.load_hlo_text(dir.join("ncm.hlo.txt"), vec![16 * fdim, 5 * fdim]).unwrap();
+        let q = vec![0.1f32; 16 * fdim];
+        let c = vec![0.2f32; 5 * fdim];
+        bench("runtime/ncm_hlo_exec_16q_5w", &cfg, || {
+            std::hint::black_box(
+                exe_n.run_f32(&[(&q, &[16, fdim]), (&c, &[5, fdim])]).unwrap(),
+            );
+        });
+    }
+
+    // Compile-time cost (startup, amortized once per process).
+    let quick = BenchConfig::quick();
+    bench("runtime/load_and_compile_hlo", &quick, || {
+        std::hint::black_box(rt.load_hlo_text(dir.join("model.hlo.txt"), vec![img_elems]).unwrap());
+    });
+}

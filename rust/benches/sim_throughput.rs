@@ -1,0 +1,67 @@
+//! Bench: cycle-accurate simulator throughput — how fast the L3 substrate
+//! simulates FPGA work (the §Perf target: simulate the 15 ms headline
+//! inference in far less than a second of host time), plus scaling across
+//! array sizes and network widths.
+//!
+//! Run: `cargo bench --bench sim_throughput`.
+
+use pefsl::dse::{build_backbone_graph, BackboneSpec};
+use pefsl::sim::Simulator;
+use pefsl::tarch::Tarch;
+use pefsl::tcompiler::compile;
+use pefsl::util::bench::{bench, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::quick();
+
+    // Headline workload: ResNet-9/16fm @ 32×32 on 12×12 array.
+    let spec = BackboneSpec::headline();
+    let g = build_backbone_graph(&spec, 7).unwrap();
+    let tarch = Tarch::z7020_12x12();
+    let program = compile(&g, &tarch).unwrap();
+    let input = vec![0.3f32; 32 * 32 * 3];
+
+    let r = bench("sim/headline_resnet9_fm16_32x32", &cfg, || {
+        let mut sim = Simulator::new(&program, &g);
+        std::hint::black_box(sim.run_f32(&input).unwrap());
+    });
+    let modeled_ms = tarch.cycles_to_ms(program.est_total_cycles);
+    let ratio = modeled_ms / r.mean_ms();
+    println!(
+        "sim speed: {:.2} ms modeled FPGA time simulated in {:.2} ms host → {:.1}× realtime",
+        modeled_ms,
+        r.mean_ms(),
+        ratio
+    );
+
+    // Scaling: smaller array → more tiles → more instructions.
+    for array in [8usize, 12, 16] {
+        let mut t = Tarch::z7020_12x12();
+        t.array_size = array;
+        t.name = format!("z7020-{array}x{array}");
+        let p = compile(&g, &t).unwrap();
+        let g2 = g.clone();
+        bench(&format!("sim/array_{array}x{array}"), &cfg, || {
+            let mut sim = Simulator::new(&p, &g2);
+            std::hint::black_box(sim.run_f32(&input).unwrap());
+        });
+    }
+
+    // Width scaling (fm 4 → 16).
+    for fm in [4usize, 8, 16] {
+        let s = BackboneSpec { feature_maps: fm, ..spec };
+        let gw = build_backbone_graph(&s, 9).unwrap();
+        let p = compile(&gw, &tarch).unwrap();
+        bench(&format!("sim/width_fm{fm}"), &cfg, || {
+            let mut sim = Simulator::new(&p, &gw);
+            std::hint::black_box(sim.run_f32(&input).unwrap());
+        });
+    }
+
+    // Compiler throughput on the biggest Fig. 5 config.
+    let big = BackboneSpec { depth: 12, feature_maps: 64, strided: false, image_size: 84, head_classes: None };
+    bench("sim/compile_biggest_fig5_config", &cfg, || {
+        let gb = build_backbone_graph(&big, 1).unwrap();
+        std::hint::black_box(compile(&gb, &tarch).unwrap().est_total_cycles);
+    });
+}

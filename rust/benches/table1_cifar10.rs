@@ -1,0 +1,40 @@
+//! Bench: regenerate **Table I** — CIFAR-10-class inference on the Z7020
+//! (paper §V-B): resources + latency of our ResNet-9/16fm + linear head at
+//! array size 12, 50 MHz, against the literature rows.
+//!
+//! Run: `cargo bench --bench table1_cifar10`.
+
+use pefsl::cli::commands::{render_table1, table1_rows};
+use pefsl::dse::{build_backbone_graph, BackboneSpec};
+use pefsl::tarch::Tarch;
+use pefsl::tcompiler::compile;
+use pefsl::util::bench::{bench, BenchConfig};
+
+fn main() {
+    let rows = table1_rows().expect("table1 rows");
+    println!("{}", render_table1(&rows));
+
+    let ours = rows.last().unwrap();
+    // Shape checks vs the paper's row (15 667 LUT / 59 BRAM / 9 819 FF /
+    // 159 DSP / 35.9 ms):
+    assert_eq!(ours.dsp, 159, "DSP calibration");
+    assert_eq!(ours.bram36, 59, "BRAM calibration");
+    assert!((ours.latency_ms - 35.9).abs() < 8.0, "latency {} vs 35.9 ms", ours.latency_ms);
+    // Comparable resource class to other Z7020 works: fewer LUTs than the
+    // binarized/hls4ml designs, more DSPs (16-bit multipliers).
+    assert!(ours.lut < rows[0].lut);
+    assert!(ours.dsp > rows[1].dsp);
+    println!("table1: shape checks OK (who-wins relations hold)");
+
+    // Time the generation pipeline itself.
+    let cfg = BenchConfig::quick();
+    let tarch = Tarch::z7020_12x12_50mhz();
+    let spec = BackboneSpec { head_classes: Some(10), ..BackboneSpec::headline() };
+    bench("table1/compile_cifar10_backbone", &cfg, || {
+        let g = build_backbone_graph(&spec, 7).unwrap();
+        std::hint::black_box(compile(&g, &tarch).unwrap().est_total_cycles);
+    });
+    bench("table1/resource_model", &cfg, || {
+        std::hint::black_box(pefsl::resources::accelerator_resources(&tarch));
+    });
+}

@@ -1,0 +1,105 @@
+//! Tiny `--flag value` argument parser.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed `--key value` / `--switch` arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            if key.is_empty() {
+                bail!("bare '--'");
+            }
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                args.values.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                args.switches.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.values.contains_key(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn key_values() {
+        let a = parse(&["--frames", "10", "--tarch", "z7020-8x8"]);
+        assert_eq!(a.get("frames"), Some("10"));
+        assert_eq!(a.get_usize("frames", 0).unwrap(), 10);
+        assert_eq!(a.get_str("tarch", "x"), "z7020-8x8");
+    }
+
+    #[test]
+    fn switches() {
+        let a = parse(&["--verbose", "--frames", "3"]);
+        assert!(a.has("verbose"));
+        assert!(a.has("frames"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_str("s", "d"), "d");
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse(&["--n", "xyz"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(&["oops".to_string()]).is_err());
+    }
+}

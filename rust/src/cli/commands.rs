@@ -1,0 +1,327 @@
+//! CLI command implementations.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{DemoConfig, Demonstrator, PjrtBackend, SimBackend};
+use crate::dse::{fig5_rows, join_accuracy, BackboneSpec};
+use crate::fewshot::{evaluate, EpisodeConfig, FeatureBank};
+use crate::graph::import_files;
+use crate::json::{self, Value};
+use crate::power::system_power;
+use crate::resources::{accelerator_resources, demonstrator_resources};
+use crate::runtime::Runtime;
+use crate::tarch::Tarch;
+use crate::tcompiler::compile;
+use crate::util::tensorio::read_tensor;
+use crate::video::DisplaySink;
+
+use super::args::Args;
+
+fn tarch_from(args: &Args) -> Result<Tarch> {
+    Tarch::preset(args.get_str("tarch", "z7020-12x12"))
+}
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    args.get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(crate::artifacts_dir)
+}
+
+/// `pefsl demo` — run the scripted live demonstrator.
+pub fn demo(args: &Args) -> Result<i32> {
+    let tarch = tarch_from(args)?;
+    let frames = args.get_u64("frames", 64)?;
+    let shots = args.get_usize("shots", 3)?;
+    let dir = artifacts_dir(args);
+    let backend_kind = args.get_str("backend", "sim");
+
+    let cfg = DemoConfig { tarch: tarch.clone(), max_frames: frames, ..Default::default() };
+    let sink = if args.has("quiet") { DisplaySink::Null } else { DisplaySink::Stderr { stride: 8 } };
+
+    let report = match backend_kind {
+        "sim" => {
+            let g = import_files(dir.join("graph.json"), dir.join("weights.bin"))
+                .context("load graph artifacts (run `make artifacts` first)")?;
+            let mut demo = Demonstrator::new(cfg, SimBackend::new(g, &tarch)?, sink);
+            demo.run_scripted(shots, frames)?
+        }
+        "pjrt" => {
+            let manifest = json::from_file(dir.join("manifest.json"))?;
+            let size = manifest.path(&["backbone", "image_size"]).and_then(Value::as_usize).unwrap_or(32);
+            let fdim = manifest.path(&["backbone", "feature_dim"]).and_then(Value::as_usize).unwrap_or(80);
+            let rt = Runtime::cpu()?;
+            let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![size * size * 3])?;
+            let backend = PjrtBackend::new(exe, vec![1, size, size, 3], fdim);
+            let mut demo = Demonstrator::new(DemoConfig { input_size: size, ..cfg }, backend, sink);
+            demo.run_scripted(shots, frames)?
+        }
+        other => anyhow::bail!("unknown backend '{other}' (sim|pjrt)"),
+    };
+
+    println!(
+        "demo[{}]: frames={} modeled_fps={:.1} inference={:.2}ms host_p50={:.0}µs \
+         power={:.2}W battery={:.2}h accuracy={}",
+        backend_kind,
+        report.frames,
+        report.modeled_fps,
+        report.inference_ms_mean,
+        report.host_us_p50,
+        report.power_w,
+        report.battery_hours,
+        report.accuracy.map(|a| format!("{:.3}", a)).unwrap_or_else(|| "n/a".into()),
+    );
+    Ok(0)
+}
+
+/// `pefsl dse` — Fig. 5 table.
+pub fn dse(args: &Args) -> Result<i32> {
+    let tarch = tarch_from(args)?;
+    let test_size = args.get_usize("test-size", 32)?;
+    let mut rows = fig5_rows(&tarch, test_size)?;
+    let dir = artifacts_dir(args);
+    let acc_path = dir.join("dse_results.json");
+    if acc_path.exists() {
+        let doc = json::from_file(&acc_path)?;
+        let joined = join_accuracy(&mut rows, &doc);
+        eprintln!("joined {} accuracy cells from {}", joined, acc_path.display());
+    } else {
+        eprintln!("note: {} not found — latency only", acc_path.display());
+    }
+    print!("{}", crate::dse::render_table(&rows, test_size));
+    if let Some(path) = args.get("json") {
+        let mut arr = Vec::new();
+        for r in &rows {
+            let mut o = Value::obj();
+            o.set("config", r.spec.name())
+                .set("depth", r.spec.depth)
+                .set("feature_maps", r.spec.feature_maps)
+                .set("strided", r.spec.strided)
+                .set("test_size", test_size)
+                .set("cycles", r.cycles)
+                .set("latency_ms", r.latency_ms)
+                .set("macs", r.macs);
+            if let Some(a) = r.acc_test32 {
+                o.set("acc_test32", a);
+            }
+            if let Some(a) = r.acc_test84 {
+                o.set("acc_test84", a);
+            }
+            arr.push(o);
+        }
+        json::to_file(path, &Value::Arr(arr))?;
+    }
+    Ok(0)
+}
+
+/// `pefsl compile` — per-layer cycle report of a graph artifact.
+pub fn compile_cmd(args: &Args) -> Result<i32> {
+    let tarch = tarch_from(args)?;
+    let dir = artifacts_dir(args);
+    let graph_path = args.get("graph").map(Into::into).unwrap_or_else(|| dir.join("graph.json"));
+    let weights_path = args.get("weights").map(Into::into).unwrap_or_else(|| dir.join("weights.bin"));
+    let g = import_files(graph_path, weights_path)?;
+    let p = compile(&g, &tarch)?;
+    println!("program {}: {} instrs, {} layers", p.name, p.instrs.len(), p.layers.len());
+    println!("{:<16} {:>6} {:>12} {:>10} {:>12}", "layer", "kind", "cycles", "ms", "MACs");
+    for l in &p.layers {
+        println!(
+            "{:<16} {:>6} {:>12} {:>10.3} {:>12}",
+            l.name,
+            format!("{:?}", l.kind),
+            l.est_cycles,
+            tarch.cycles_to_ms(l.est_cycles),
+            l.macs
+        );
+    }
+    println!(
+        "TOTAL: {} cycles = {:.2} ms @ {} MHz | {:.1} MMACs | PE util {:.1}%",
+        p.est_total_cycles,
+        p.est_latency_ms(),
+        tarch.clock_mhz,
+        p.total_macs() as f64 / 1e6,
+        p.est_utilization() * 100.0
+    );
+    println!("cycles by instruction kind:");
+    for (kind, cycles, count) in crate::sim::trace::cycles_by_kind(&p) {
+        println!("  {:<12} {:>12} cycles ({:>6} instrs, {:>5.1}%)",
+                 kind, cycles, count, 100.0 * cycles as f64 / p.est_total_cycles as f64);
+    }
+    if let Some(path) = args.get("trace") {
+        let f = std::fs::File::create(path)?;
+        crate::sim::trace::write_chrome_trace(&p, std::io::BufWriter::new(f))?;
+        println!("chrome trace written to {path}");
+    }
+    Ok(0)
+}
+
+/// `pefsl simulate` — run the bit-exact simulation on the test vector.
+pub fn simulate(args: &Args) -> Result<i32> {
+    let tarch = tarch_from(args)?;
+    let dir = artifacts_dir(args);
+    let g = import_files(dir.join("graph.json"), dir.join("weights.bin"))?;
+    let input = read_tensor(dir.join("testvec_input.bin"))?;
+    let imgs = input.as_f32()?;
+    let img_len: usize = input.shape[1..].iter().product();
+    let want = read_tensor(dir.join("testvec_feat_q.bin"))?;
+    let want_f = want.as_f32()?;
+    let fdim = want.shape[1];
+
+    let program = compile(&g, &tarch)?;
+    let mut max_err = 0f32;
+    let mut cycles = 0u64;
+    let n = input.shape[0];
+    for i in 0..n {
+        let mut sim = crate::sim::Simulator::new(&program, &g);
+        let r = sim.run_f32(&imgs[i * img_len..(i + 1) * img_len])?;
+        cycles = r.cycles;
+        for (got, want) in r.output_f32.iter().zip(&want_f[i * fdim..(i + 1) * fdim]) {
+            max_err = max_err.max((got - want).abs());
+        }
+    }
+    println!(
+        "simulated {n} images: {} cycles = {:.2} ms @ {} MHz; max |err| vs python quant model = {:.5}",
+        cycles,
+        tarch.cycles_to_ms(cycles),
+        tarch.clock_mhz,
+        max_err
+    );
+    Ok(if max_err < 0.1 { 0 } else { 1 })
+}
+
+/// `pefsl resources` — Table I style resource + power report.
+pub fn resources_cmd(args: &Args) -> Result<i32> {
+    let tarch = tarch_from(args)?;
+    let acc = accelerator_resources(&tarch);
+    let full = demonstrator_resources(&tarch);
+    println!("tarch {} ({}×{} @ {} MHz, {})", tarch.name, tarch.array_size, tarch.array_size, tarch.clock_mhz, tarch.qformat);
+    println!("{:<22} {:>8} {:>8} {:>8} {:>8}", "", "LUT", "FF", "BRAM36", "DSP");
+    println!("{:<22} {:>8} {:>8} {:>8} {:>8}", "accelerator", acc.lut, acc.ff, acc.bram36, acc.dsp);
+    println!("{:<22} {:>8} {:>8} {:>8} {:>8}", "accelerator+HDMI", full.lut, full.ff, full.bram36, full.dsp);
+    println!("fits z7020 (with routing margin): {}", full.fits_z7020());
+    let p = system_power(&tarch, 0.5);
+    println!(
+        "power @ 50% duty: total {:.2} W (PS {:.2} + PLstat {:.2} + PLdyn {:.2} + screen {:.2} + cam {:.2}); battery {:.2} h",
+        p.total_w(), p.ps_w, p.pl_static_w, p.pl_dynamic_w, p.screen_w, p.camera_w,
+        p.battery_hours_demo_pack()
+    );
+    Ok(0)
+}
+
+/// `pefsl eval` — few-shot evaluation over exported novel features.
+pub fn eval(args: &Args) -> Result<i32> {
+    let dir = artifacts_dir(args);
+    let features = read_tensor(dir.join("novel_features.bin"))
+        .context("novel_features.bin (run `make artifacts`)")?;
+    let labels = read_tensor(dir.join("novel_labels.bin"))?;
+    let bank = FeatureBank::from_tensors(&features, &labels)?;
+    let cfg = EpisodeConfig {
+        n_ways: args.get_usize("ways", 5)?,
+        n_shots: args.get_usize("shots", 1)?,
+        n_queries: args.get_usize("queries", 15)?,
+        n_episodes: args.get_usize("episodes", 600)?,
+        seed: args.get_u64("seed", 99)?,
+    };
+    let r = evaluate(&bank, &cfg, true)?;
+    println!(
+        "novel-split NCM (deployed Q8.8 features): {}-way {}-shot = {:.4} ± {:.4} ({} episodes)",
+        cfg.n_ways, cfg.n_shots, r.accuracy, r.ci95, r.n_episodes
+    );
+    Ok(0)
+}
+
+/// `pefsl table1` — the CIFAR-10 Z7020 comparison (Table I).
+pub fn table1(_args: &Args) -> Result<i32> {
+    let rows = table1_rows()?;
+    println!("{}", render_table1(&rows));
+    Ok(0)
+}
+
+/// One Table I row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub work: String,
+    pub prec_bits: String,
+    pub lut: u32,
+    pub bram36: u32,
+    pub ff: Option<u32>,
+    pub dsp: u32,
+    pub latency_ms: f64,
+    pub acc_pct: Option<f64>,
+}
+
+/// Literature rows are constants from the paper's Table I (they are
+/// baselines reported by other works, not re-runs); the "Ours" row is
+/// regenerated live from our compiler + resource model.
+pub fn table1_rows() -> Result<Vec<Table1Row>> {
+    let lit = vec![
+        Table1Row { work: "[21] hls4ml".into(), prec_bits: "8-12".into(), lut: 28_544, bram36: 42, ff: Some(49_215), dsp: 4, latency_ms: 27.3, acc_pct: Some(87.0) },
+        Table1Row { work: "[21] FINN".into(), prec_bits: "1".into(), lut: 24_502, bram36: 100, ff: Some(34_354), dsp: 0, latency_ms: 1.5, acc_pct: Some(87.0) },
+        Table1Row { work: "[22]".into(), prec_bits: "1-2".into(), lut: 23_436, bram36: 135, ff: None, dsp: 53, latency_ms: 1.1, acc_pct: Some(86.0) },
+        Table1Row { work: "[23]".into(), prec_bits: "16".into(), lut: 15_200, bram36: 523, ff: Some(41), dsp: 167, latency_ms: 109.0, acc_pct: None },
+    ];
+    // Ours: ResNet-9/16fm + 10-class head on 32×32×3 (CIFAR-10 shape),
+    // array size 12 at 50 MHz (paper: "array size of 12 at 50 MHz").
+    let tarch = Tarch::z7020_12x12_50mhz();
+    let spec = BackboneSpec { head_classes: Some(10), ..BackboneSpec::headline() };
+    let g = crate::dse::build_backbone_graph(&spec, 7)?;
+    let p = compile(&g, &tarch)?;
+    let res = accelerator_resources(&tarch);
+    let mut rows = lit;
+    rows.push(Table1Row {
+        work: "Ours (reproduced)".into(),
+        prec_bits: "16".into(),
+        lut: res.lut,
+        bram36: res.bram36,
+        ff: Some(res.ff),
+        dsp: res.dsp,
+        latency_ms: p.est_latency_ms(),
+        acc_pct: None, // CIFAR-10 accuracy is not reproducible without CIFAR; see EXPERIMENTS.md
+    });
+    Ok(rows)
+}
+
+pub fn render_table1(rows: &[Table1Row]) -> String {
+    let mut out = String::from(
+        "TABLE I — CIFAR-10 inference on Z7020\n\
+         Work                Prec[b]     LUT  BRAM36      FF   DSP  Latency[ms]  Acc[%]\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<19} {:>7} {:>7} {:>7} {:>7} {:>5} {:>12.1} {:>7}\n",
+            r.work,
+            r.prec_bits,
+            r.lut,
+            r.bram36,
+            r.ff.map(|v| v.to_string()).unwrap_or_else(|| "—".into()),
+            r.dsp,
+            r.latency_ms,
+            r.acc_pct.map(|v| format!("{v:.0}")).unwrap_or_else(|| "—".into()),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_ours_in_literature_band() {
+        let rows = table1_rows().unwrap();
+        let ours = rows.last().unwrap();
+        // resource class comparable to Table I's "Ours" row
+        assert!((ours.dsp as i64 - 159).abs() <= 10, "dsp {}", ours.dsp);
+        assert_eq!(ours.bram36, 59);
+        // latency within the order of magnitude the paper reports (35.9 ms)
+        assert!(ours.latency_ms > 5.0 && ours.latency_ms < 150.0, "{} ms", ours.latency_ms);
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let rows = table1_rows().unwrap();
+        let t = render_table1(&rows);
+        assert_eq!(t.lines().count(), 2 + rows.len());
+        assert!(t.contains("FINN"));
+        assert!(t.contains("Ours"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Command-line interface of the `pefsl` binary (hand-rolled; the offline
+//! vendor set has no `clap`).
+//!
+//! ```text
+//! pefsl demo       --frames 64 --tarch z7020-12x12 [--backend sim|pjrt]
+//! pefsl dse        --test-size 32 [--tarch NAME] [--json PATH]
+//! pefsl compile    [--graph PATH --weights PATH] [--tarch NAME]
+//! pefsl simulate   [--graph PATH --weights PATH] [--tarch NAME]
+//! pefsl resources  [--tarch NAME]
+//! pefsl eval       [--episodes N --ways W --shots S]
+//! pefsl table1     (CIFAR-10 comparison harness)
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use anyhow::Result;
+
+/// Binary entry point.
+pub fn main_entry() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Dispatch a command line; returns process exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+        print!("{}", usage());
+        return Ok(if argv.is_empty() { 2 } else { 0 });
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "demo" => commands::demo(&args),
+        "dse" => commands::dse(&args),
+        "compile" => commands::compile_cmd(&args),
+        "simulate" => commands::simulate(&args),
+        "resources" => commands::resources_cmd(&args),
+        "eval" => commands::eval(&args),
+        "table1" => commands::table1(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            Ok(2)
+        }
+    }
+}
+
+pub fn usage() -> String {
+    "pefsl — embedded few-shot learning deployment pipeline (PEFSL reproduction)\n\
+     \n\
+     USAGE: pefsl <COMMAND> [OPTIONS]\n\
+     \n\
+     COMMANDS:\n\
+     \x20 demo        run the live demonstrator (synthetic camera → backbone → NCM)\n\
+     \x20 dse         design-space exploration table (Fig. 5)\n\
+     \x20 compile     compile a graph.json for a tarch, print per-layer cycles\n\
+     \x20 simulate    run the bit-exact accelerator simulation on a test vector\n\
+     \x20 resources   FPGA resource + power report (Table I row)\n\
+     \x20 eval        few-shot episode evaluation over exported features\n\
+     \x20 table1      CIFAR-10 Z7020 comparison (Table I)\n\
+     \n\
+     COMMON OPTIONS:\n\
+     \x20 --tarch NAME       z7020-8x8 | z7020-12x12 | z7020-12x12-50mhz\n\
+     \x20 --artifacts DIR    artifact directory (default: ./artifacts)\n\
+     \x20 --frames N         demo frames (default 64)\n\
+     \x20 --backend B        sim | pjrt (default sim)\n\
+     \x20 --test-size N      dse deployed resolution: 32 | 84\n\
+     \x20 --episodes N --ways W --shots S --queries Q   eval protocol\n\
+     \x20 --json PATH        also write results as JSON\n"
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_exits_zero() {
+        assert_eq!(run(&sv(&["--help"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn empty_usage_exit_2() {
+        assert_eq!(run(&sv(&[])).unwrap(), 2);
+    }
+
+    #[test]
+    fn unknown_command_exit_2() {
+        assert_eq!(run(&sv(&["frobnicate"])).unwrap(), 2);
+    }
+
+    #[test]
+    fn resources_runs_without_artifacts() {
+        assert_eq!(run(&sv(&["resources", "--tarch", "z7020-12x12"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn dse_runs_without_artifacts() {
+        assert_eq!(run(&sv(&["dse", "--test-size", "32"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn bad_tarch_errors() {
+        assert!(run(&sv(&["resources", "--tarch", "nope"])).is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Inference backends: the simulated accelerator (bit-exact Q8.8 +
+//! modeled FPGA latency) and the PJRT f32 reference.
+
+use anyhow::Result;
+
+use crate::graph::Graph;
+use crate::runtime::Executable;
+use crate::sim::Simulator;
+use crate::tcompiler::Program;
+
+/// A backbone inference engine used by the demonstrator.
+pub trait Backend {
+    /// NHWC batch-1 f32 image → feature vector.
+    fn features(&mut self, input: &[f32]) -> Result<Vec<f32>>;
+
+    /// Modeled on-device latency for the last inference, if the backend
+    /// has a hardware model (the sim does; PJRT reports wall time only).
+    fn modeled_latency_ms(&self) -> Option<f64>;
+
+    fn name(&self) -> &str;
+
+    fn feature_dim(&self) -> usize;
+}
+
+/// Bit-exact accelerator simulation backend.
+pub struct SimBackend {
+    program: Program,
+    graph: Graph,
+    last_latency_ms: Option<f64>,
+    feature_dim: usize,
+}
+
+impl SimBackend {
+    pub fn new(graph: Graph, tarch: &crate::tarch::Tarch) -> Result<Self> {
+        let program = crate::tcompiler::compile(&graph, tarch)?;
+        let feature_dim = graph.feature_dim;
+        Ok(SimBackend { program, graph, last_latency_ms: None, feature_dim })
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+}
+
+impl Backend for SimBackend {
+    fn features(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut sim = Simulator::new(&self.program, &self.graph);
+        let r = sim.run_f32(input)?;
+        self.last_latency_ms = Some(r.latency_ms);
+        Ok(r.output_f32)
+    }
+
+    fn modeled_latency_ms(&self) -> Option<f64> {
+        self.last_latency_ms
+    }
+
+    fn name(&self) -> &str {
+        "sim"
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+}
+
+/// PJRT f32 backend over an AOT HLO artifact.
+pub struct PjrtBackend {
+    exe: Executable,
+    input_dims: Vec<usize>,
+    feature_dim: usize,
+}
+
+impl PjrtBackend {
+    /// `input_dims` is the NHWC input shape of the lowered module.
+    pub fn new(exe: Executable, input_dims: Vec<usize>, feature_dim: usize) -> Self {
+        PjrtBackend { exe, input_dims, feature_dim }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn features(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.exe.run_f32(&[(input, &self.input_dims)])?;
+        Ok(outs.into_iter().next().unwrap_or_default())
+    }
+
+    fn modeled_latency_ms(&self) -> Option<f64> {
+        None
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{build_backbone_graph, BackboneSpec};
+    use crate::tarch::Tarch;
+
+    #[test]
+    fn sim_backend_runs() {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 1).unwrap();
+        let mut b = SimBackend::new(g, &Tarch::z7020_8x8()).unwrap();
+        assert_eq!(b.feature_dim(), 20);
+        let f = b.features(&vec![0.4; 16 * 16 * 3]).unwrap();
+        assert_eq!(f.len(), 20);
+        assert!(b.modeled_latency_ms().unwrap() > 0.0);
+        assert_eq!(b.name(), "sim");
+    }
+
+    #[test]
+    fn sim_backend_deterministic() {
+        let spec = BackboneSpec { image_size: 12, feature_maps: 3, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 2).unwrap();
+        let mut b = SimBackend::new(g, &Tarch::z7020_8x8()).unwrap();
+        let x = vec![0.25; 12 * 12 * 3];
+        assert_eq!(b.features(&x).unwrap(), b.features(&x).unwrap());
+    }
+}

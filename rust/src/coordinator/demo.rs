@@ -1,0 +1,378 @@
+//! The live demonstrator loop + state machine (paper §IV-B).
+//!
+//! Mirrors the PYNQ demo flow: the user points the camera at an object,
+//! presses "new class"/"add shot" to enroll support examples, and the
+//! system then classifies every frame against the enrolled classes,
+//! overlaying prediction/confidence/FPS on screen.  Commands arrive on a
+//! channel (the buttons); the loop is a plain single-threaded driver as on
+//! the board, with a threaded front-end available via `run_threaded`.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::{Counters, LatencyStats};
+use crate::ncm::NcmClassifier;
+use crate::power::system_power;
+use crate::tarch::Tarch;
+use crate::video::{CameraConfig, DisplaySink, Hud, Preprocessor, SyntheticCamera};
+
+use super::backend::Backend;
+use super::system_model::SystemModel;
+
+/// Button presses / control events of the live demo.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    /// Register a new class with a label and switch enrolment to it.
+    NewClass(String),
+    /// Enroll the current frame as a shot of class `idx`.
+    Enroll(usize),
+    /// Clear all classes.
+    Reset,
+    /// Point the synthetic camera at another scene.
+    SetScene(usize),
+    /// Stop the loop.
+    Quit,
+}
+
+/// Demonstrator configuration.
+#[derive(Clone, Debug)]
+pub struct DemoConfig {
+    pub camera: CameraConfig,
+    /// Backbone input resolution.
+    pub input_size: usize,
+    pub tarch: Tarch,
+    pub system: SystemModel,
+    /// Frames to run (0 = until Quit).
+    pub max_frames: u64,
+}
+
+impl Default for DemoConfig {
+    fn default() -> Self {
+        DemoConfig {
+            camera: CameraConfig::default(),
+            input_size: 32,
+            tarch: Tarch::z7020_12x12(),
+            system: SystemModel::default(),
+            max_frames: 64,
+        }
+    }
+}
+
+/// End-of-run report (the numbers EXPERIMENTS.md records).
+#[derive(Clone, Debug)]
+pub struct DemoReport {
+    pub frames: u64,
+    /// Modeled system FPS (paper's 16-FPS figure).
+    pub modeled_fps: f64,
+    /// Modeled inference latency stats (paper's 30-ms figure), ms.
+    pub inference_ms_mean: f64,
+    /// Host wall-clock per frame (this machine, not the PYNQ), µs.
+    pub host_us_p50: f64,
+    pub host_us_p95: f64,
+    /// Modeled system power at the measured duty cycle.
+    pub power_w: f64,
+    pub battery_hours: f64,
+    /// Live classification accuracy vs camera ground truth (classify mode).
+    pub accuracy: Option<f64>,
+    pub counters: Counters,
+}
+
+/// The demonstrator.
+pub struct Demonstrator<B: Backend> {
+    cfg: DemoConfig,
+    camera: SyntheticCamera,
+    pre: Preprocessor,
+    ncm: NcmClassifier,
+    backend: B,
+    pub sink: DisplaySink,
+    counters: Counters,
+    host_lat: LatencyStats,
+    accel_ms: Vec<f64>,
+    hits: u64,
+    judged: u64,
+    /// scene id → enrolled class idx (ground-truth mapping for accuracy).
+    scene_to_class: Vec<Option<usize>>,
+}
+
+impl<B: Backend> Demonstrator<B> {
+    pub fn new(cfg: DemoConfig, backend: B, sink: DisplaySink) -> Self {
+        let camera = SyntheticCamera::new(cfg.camera.clone());
+        let pre = Preprocessor::new(cfg.input_size);
+        let ncm = NcmClassifier::new(backend.feature_dim());
+        let n_scenes = camera.n_scenes();
+        Demonstrator {
+            cfg,
+            camera,
+            pre,
+            ncm,
+            backend,
+            sink,
+            counters: Counters::default(),
+            host_lat: LatencyStats::new(4096),
+            accel_ms: Vec::new(),
+            hits: 0,
+            judged: 0,
+            scene_to_class: vec![None; n_scenes],
+        }
+    }
+
+    /// Handle one control command.
+    pub fn handle(&mut self, cmd: Command) -> Result<bool> {
+        match cmd {
+            Command::NewClass(label) => {
+                let idx = self.ncm.add_class(label);
+                self.scene_to_class[self.camera.scene()] = Some(idx);
+                Ok(true)
+            }
+            Command::Enroll(idx) => {
+                let frame = self.camera.capture();
+                self.counters.frames_in += 1;
+                let x = self.pre.run(&frame);
+                let feat = self.backend.features(&x)?;
+                self.counters.inferences += 1;
+                self.ncm.enroll(idx, &feat)?;
+                self.counters.enrollments += 1;
+                self.scene_to_class[frame.scene] = Some(idx);
+                Ok(true)
+            }
+            Command::Reset => {
+                self.ncm.reset();
+                self.scene_to_class.iter_mut().for_each(|s| *s = None);
+                self.counters.resets += 1;
+                Ok(true)
+            }
+            Command::SetScene(s) => {
+                self.camera.set_scene(s);
+                Ok(true)
+            }
+            Command::Quit => Ok(false),
+        }
+    }
+
+    /// Process one classification frame.
+    pub fn step(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let frame = self.camera.capture();
+        self.counters.frames_in += 1;
+        let x = self.pre.run(&frame);
+        let feat = self.backend.features(&x)?;
+        self.counters.inferences += 1;
+
+        let accel_ms = self.backend.modeled_latency_ms().unwrap_or(0.0);
+        self.accel_ms.push(accel_ms);
+
+        let (pred_label, confidence) = if self.ncm.has_enrolled() {
+            let p = self.ncm.classify(&feat)?;
+            if let Some(want) = self.scene_to_class[frame.scene] {
+                self.judged += 1;
+                if p.class_idx == want {
+                    self.hits += 1;
+                }
+            }
+            (
+                self.ncm.class_label(p.class_idx).unwrap_or("?").to_string(),
+                p.confidence,
+            )
+        } else {
+            ("—".to_string(), 0.0)
+        };
+
+        self.host_lat.record(t0.elapsed());
+        self.counters.frames_out += 1;
+
+        let m = &self.cfg.system;
+        let cam_px = self.cfg.camera.w * self.cfg.camera.h;
+        let tgt_px = self.cfg.input_size * self.cfg.input_size;
+        let fdim = self.backend.feature_dim();
+        let ncls = self.ncm.n_classes();
+        let fps = m.fps(accel_ms, cam_px, tgt_px, fdim, ncls);
+        let duty = m.duty(accel_ms, cam_px, tgt_px, fdim, ncls);
+        let power = system_power(&self.cfg.tarch, duty).total_w();
+
+        let hud = Hud {
+            frame_seq: frame.seq,
+            prediction: Some(pred_label),
+            confidence,
+            fps,
+            latency_ms: m.inference_ms(accel_ms),
+            power_w: power,
+            classes: (0..self.ncm.n_classes())
+                .map(|i| (self.ncm.class_label(i).unwrap_or("?").to_string(), self.ncm.shot_count(i)))
+                .collect(),
+            mode: if self.ncm.has_enrolled() { "classify" } else { "idle" }.into(),
+        };
+        self.sink.present(&hud);
+        Ok(())
+    }
+
+    /// Run the frame loop, draining commands between frames.
+    pub fn run(&mut self, commands: mpsc::Receiver<Command>) -> Result<DemoReport> {
+        let mut frames = 0u64;
+        loop {
+            while let Ok(cmd) = commands.try_recv() {
+                if !self.handle(cmd)? {
+                    return Ok(self.report());
+                }
+            }
+            self.step()?;
+            frames += 1;
+            if self.cfg.max_frames > 0 && frames >= self.cfg.max_frames {
+                return Ok(self.report());
+            }
+        }
+    }
+
+    /// Scripted session: enroll one shot per scene then classify frames —
+    /// the canonical demo flow used by examples and benches.
+    pub fn run_scripted(&mut self, shots_per_scene: usize, classify_frames: u64) -> Result<DemoReport> {
+        let n_scenes = self.camera.n_scenes();
+        for scene in 0..n_scenes {
+            self.handle(Command::SetScene(scene))?;
+            self.handle(Command::NewClass(format!("obj{scene}")))?;
+            for _ in 0..shots_per_scene {
+                let idx = self.scene_to_class[scene].unwrap();
+                self.handle(Command::Enroll(idx))?;
+            }
+        }
+        for f in 0..classify_frames {
+            self.handle(Command::SetScene((f % n_scenes as u64) as usize))?;
+            self.step()?;
+        }
+        Ok(self.report())
+    }
+
+    pub fn report(&self) -> DemoReport {
+        let accel_mean = if self.accel_ms.is_empty() {
+            0.0
+        } else {
+            self.accel_ms.iter().sum::<f64>() / self.accel_ms.len() as f64
+        };
+        let m = &self.cfg.system;
+        let cam_px = self.cfg.camera.w * self.cfg.camera.h;
+        let tgt_px = self.cfg.input_size * self.cfg.input_size;
+        let fdim = self.backend.feature_dim();
+        let ncls = self.ncm.n_classes().max(1);
+        let duty = m.duty(accel_mean, cam_px, tgt_px, fdim, ncls);
+        let power = system_power(&self.cfg.tarch, duty);
+        DemoReport {
+            frames: self.counters.frames_out,
+            modeled_fps: m.fps(accel_mean, cam_px, tgt_px, fdim, ncls),
+            inference_ms_mean: m.inference_ms(accel_mean),
+            host_us_p50: self.host_lat.p50_us(),
+            host_us_p95: self.host_lat.p95_us(),
+            power_w: power.total_w(),
+            battery_hours: power.battery_hours_demo_pack(),
+            accuracy: if self.judged > 0 { Some(self.hits as f64 / self.judged as f64) } else { None },
+            counters: self.counters.clone(),
+        }
+    }
+}
+
+/// Run the demo with a command script applied from a second thread
+/// (exercises the channel path the physical buttons use).
+pub fn run_threaded<B: Backend + Send>(
+    mut demo: Demonstrator<B>,
+    script: Vec<Command>,
+) -> Result<DemoReport> {
+    let (tx, rx) = mpsc::channel();
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            for cmd in script {
+                if tx.send(cmd).is_err() {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        });
+        demo.run(rx)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SimBackend;
+    use crate::dse::{build_backbone_graph, BackboneSpec};
+
+    fn tiny_demo(max_frames: u64) -> Demonstrator<SimBackend> {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 5).unwrap();
+        let tarch = Tarch::z7020_8x8();
+        let backend = SimBackend::new(g, &tarch).unwrap();
+        let cfg = DemoConfig {
+            camera: CameraConfig { n_scenes: 3, seed: 11, ..Default::default() },
+            input_size: 16,
+            tarch,
+            max_frames,
+            ..Default::default()
+        };
+        Demonstrator::new(cfg, backend, DisplaySink::Buffer(Vec::new()))
+    }
+
+    #[test]
+    fn scripted_session_produces_report() {
+        let mut demo = tiny_demo(0);
+        let report = demo.run_scripted(2, 9).unwrap();
+        assert_eq!(report.frames, 9);
+        assert_eq!(report.counters.enrollments, 6);
+        assert!(report.modeled_fps > 0.0);
+        assert!(report.inference_ms_mean > 0.0);
+        assert!(report.power_w > 3.0 && report.power_w < 10.0);
+        assert!(report.accuracy.is_some());
+        assert!(!demo.sink.lines().is_empty());
+    }
+
+    #[test]
+    fn enrolled_scenes_mostly_recognized() {
+        // A random fm4@16 backbone is too weak to separate scenes; use a
+        // slightly larger random backbone (fm8 @ 24px) for a stable margin.
+        let spec = BackboneSpec { image_size: 24, feature_maps: 8, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 5).unwrap();
+        let tarch = Tarch::z7020_8x8();
+        let backend = SimBackend::new(g, &tarch).unwrap();
+        let cfg = DemoConfig {
+            camera: CameraConfig { n_scenes: 3, seed: 11, ..Default::default() },
+            input_size: 24,
+            tarch,
+            max_frames: 0,
+            ..Default::default()
+        };
+        let mut demo = Demonstrator::new(cfg, backend, DisplaySink::Buffer(Vec::new()));
+        let report = demo.run_scripted(3, 30).unwrap();
+        // even an untrained random backbone separates these synthetic
+        // scenes reasonably; just require better than chance
+        let acc = report.accuracy.unwrap();
+        assert!(acc > 1.0 / 3.0, "live accuracy {acc}");
+    }
+
+    #[test]
+    fn reset_clears_classes() {
+        let mut demo = tiny_demo(4);
+        demo.handle(Command::NewClass("a".into())).unwrap();
+        demo.handle(Command::Enroll(0)).unwrap();
+        demo.handle(Command::Reset).unwrap();
+        demo.step().unwrap(); // classify with no classes → idle mode, no panic
+        assert_eq!(demo.report().counters.resets, 1);
+    }
+
+    #[test]
+    fn quit_command_stops_loop() {
+        let demo = tiny_demo(0); // unlimited frames — must stop via Quit
+        let report = run_threaded(demo, vec![Command::Quit]).unwrap();
+        assert!(report.frames < 1000);
+    }
+
+    #[test]
+    fn command_channel_enrolls() {
+        let demo = tiny_demo(200); // generous frame budget so the script lands
+        let script = vec![
+            Command::NewClass("x".into()),
+            Command::Enroll(0),
+            Command::SetScene(1),
+        ];
+        let report = run_threaded(demo, script).unwrap();
+        assert!(report.counters.enrollments >= 1);
+    }
+}

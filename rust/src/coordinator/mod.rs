@@ -1,0 +1,21 @@
+//! The demonstrator coordinator (paper §IV-B, Fig. 4): the frame loop that
+//! on the PYNQ-Z1 runs camera → CPU preprocessing → FPGA backbone → CPU NCM
+//! → HDMI overlay, plus the live-demo state machine (enroll / classify /
+//! reset buttons).
+//!
+//! Two inference backends expose the same trait: [`SimBackend`] executes
+//! the compiled accelerator program bit-exactly (and yields the *modeled
+//! FPGA latency* from its cycle count), [`PjrtBackend`] runs the AOT f32
+//! HLO via PJRT (numeric reference).  The system-time model converts
+//! modeled FPGA + ARM costs into the paper's FPS accounting, calibrated to
+//! §IV-B's 16 FPS at 30 ms inference.
+
+mod backend;
+mod demo;
+mod pipeline;
+mod system_model;
+
+pub use backend::{Backend, PjrtBackend, SimBackend};
+pub use demo::{run_threaded, Command, DemoConfig, DemoReport, Demonstrator};
+pub use pipeline::{run_pipelined, PipelineConfig, PipelineReport};
+pub use system_model::SystemModel;

@@ -1,0 +1,120 @@
+//! System-time model: converts modeled accelerator cycles plus ARM-side
+//! costs into the demonstrator's inference latency, frame time and FPS.
+//!
+//! Calibration (paper §IV-B + Table I): the compiled headline backbone
+//! takes ≈15.3 ms of accelerator time at 125 MHz (the same program gives
+//! ≈38 ms at Table I's 50 MHz, matching its 35.9 ms row).  The paper's
+//! "30 ms latency" is the *driver-visible* inference time — accelerator
+//! plus PYNQ DMA/driver overhead (~14 ms) — and its 16 FPS implies
+//! ≈62.5 ms per frame, i.e. another ≈33 ms of capture/resize/NCM/HDMI
+//! overlay on the dual Cortex-A9.  The components below decompose that
+//! budget so DSE configurations move latency and FPS realistically.
+
+/// ARM Cortex-A9 side cost model (milliseconds).
+#[derive(Clone, Copy, Debug)]
+pub struct SystemModel {
+    /// Frame capture + format conversion per camera pixel (ms / pixel).
+    pub capture_ms_per_px: f64,
+    /// Bilinear resize cost per *output* pixel (ms / pixel).
+    pub resize_ms_per_px: f64,
+    /// NCM classify cost per (feature dim × class) MAC (ms / MAC).
+    pub ncm_ms_per_mac: f64,
+    /// PYNQ driver overhead per inference: buffer staging + DMA descriptors
+    /// (included in the paper's 30 ms "latency").
+    pub driver_ms: f64,
+    /// HUD/overlay rendering + framebuffer copy per frame.
+    pub overlay_ms: f64,
+}
+
+impl Default for SystemModel {
+    fn default() -> Self {
+        // Calibrated to §IV-B: 30 ms inference and 16 FPS with the 160×120
+        // camera, 32×32 backbone input, 80-d features, 5 classes.
+        SystemModel {
+            capture_ms_per_px: 3.2e-4,  // 160×120 → ~6.1 ms
+            resize_ms_per_px: 2.5e-3,   // 32×32 → ~2.6 ms
+            ncm_ms_per_mac: 2.0e-5,     // 80×5 → ~0.008 ms
+            driver_ms: 14.0,
+            overlay_ms: 24.5,
+        }
+    }
+}
+
+impl SystemModel {
+    /// Driver-visible inference latency: accelerator + PYNQ driver.
+    /// This is the quantity the paper reports as "a latency of 30 ms".
+    pub fn inference_ms(&self, accel_ms: f64) -> f64 {
+        accel_ms + self.driver_ms
+    }
+
+    /// CPU-side milliseconds per frame (including the driver overhead).
+    pub fn cpu_ms(&self, cam_px: usize, target_px: usize, feat_dim: usize, n_classes: usize) -> f64 {
+        self.capture_ms_per_px * cam_px as f64
+            + self.resize_ms_per_px * target_px as f64
+            + self.ncm_ms_per_mac * (feat_dim * n_classes.max(1)) as f64
+            + self.driver_ms
+            + self.overlay_ms
+    }
+
+    /// Total modeled frame time (CPU work serialized with the accelerator,
+    /// as in the single-threaded PYNQ driver loop).
+    pub fn frame_ms(&self, accel_ms: f64, cam_px: usize, target_px: usize,
+                    feat_dim: usize, n_classes: usize) -> f64 {
+        accel_ms + self.cpu_ms(cam_px, target_px, feat_dim, n_classes)
+    }
+
+    pub fn fps(&self, accel_ms: f64, cam_px: usize, target_px: usize,
+               feat_dim: usize, n_classes: usize) -> f64 {
+        1000.0 / self.frame_ms(accel_ms, cam_px, target_px, feat_dim, n_classes)
+    }
+
+    /// Compute duty cycle of the PE array (accelerator fraction of the
+    /// frame), feeding the power model.
+    pub fn duty(&self, accel_ms: f64, cam_px: usize, target_px: usize,
+                feat_dim: usize, n_classes: usize) -> f64 {
+        accel_ms / self.frame_ms(accel_ms, cam_px, target_px, feat_dim, n_classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CAM: usize = 160 * 120;
+    const TGT: usize = 32 * 32;
+    /// Accelerator latency of the compiled headline program at 125 MHz.
+    const HEADLINE_ACCEL_MS: f64 = 15.3;
+
+    #[test]
+    fn paper_inference_latency_30ms() {
+        let m = SystemModel::default();
+        let inf = m.inference_ms(HEADLINE_ACCEL_MS);
+        assert!((inf - 30.0).abs() < 2.0, "inference {inf} ms");
+    }
+
+    #[test]
+    fn paper_fps_16() {
+        let m = SystemModel::default();
+        let fps = m.fps(HEADLINE_ACCEL_MS, CAM, TGT, 80, 5);
+        assert!((fps - 16.0).abs() < 1.2, "fps {fps}");
+    }
+
+    #[test]
+    fn faster_inference_more_fps() {
+        let m = SystemModel::default();
+        assert!(m.fps(5.0, CAM, TGT, 80, 5) > m.fps(HEADLINE_ACCEL_MS, CAM, TGT, 80, 5));
+    }
+
+    #[test]
+    fn duty_in_unit_range() {
+        let m = SystemModel::default();
+        let d = m.duty(HEADLINE_ACCEL_MS, CAM, TGT, 80, 5);
+        assert!(d > 0.1 && d < 0.5, "duty {d}");
+    }
+
+    #[test]
+    fn bigger_input_costs_more_cpu() {
+        let m = SystemModel::default();
+        assert!(m.cpu_ms(CAM, 84 * 84, 80, 5) > m.cpu_ms(CAM, TGT, 80, 5));
+    }
+}

@@ -1,0 +1,224 @@
+//! Programmatic backbone graph construction (same topology as
+//! `python/compile/model.py` / `export.py`), with synthetic weights — used
+//! by the DSE latency sweep and the Table I harness, where only *shapes*
+//! matter for cycle counts and resources.
+
+use anyhow::Result;
+
+use crate::fixed::QFormat;
+use crate::graph::{infer_shapes, Graph, Op};
+use crate::util::tensorio::Tensor;
+use crate::util::Prng;
+
+/// Backbone hyperparameters (paper §III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackboneSpec {
+    pub depth: usize,        // 9 or 12
+    pub feature_maps: usize, // width of block 1
+    pub strided: bool,       // strided conv vs max-pool
+    pub image_size: usize,   // input resolution
+    /// Optional classification head (Table I: 10 CIFAR classes).
+    pub head_classes: Option<usize>,
+}
+
+impl BackboneSpec {
+    pub fn headline() -> Self {
+        BackboneSpec { depth: 9, feature_maps: 16, strided: true, image_size: 32, head_classes: None }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        if self.depth == 9 { 3 } else { 4 }
+    }
+
+    /// Per-block widths: fm·[1, 2.5, 5, 10] (EASY convention, same as L2).
+    pub fn widths(&self) -> Vec<usize> {
+        [1.0, 2.5, 5.0, 10.0][..self.n_blocks()]
+            .iter()
+            .map(|s| (self.feature_maps as f64 * s).round() as usize)
+            .collect()
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "resnet{}_fm{}_{}_s{}{}",
+            self.depth,
+            self.feature_maps,
+            if self.strided { "strided" } else { "maxpool" },
+            self.image_size,
+            self.head_classes.map(|c| format!("_head{c}")).unwrap_or_default()
+        )
+    }
+}
+
+fn rand_weights(rng: &mut Prng, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    // Small codes; values are irrelevant for timing but keep the graph
+    // simulable without overflow. One PRNG draw per element (the DSE sweep
+    // builds multi-million-element fm64 graphs — `normal()` would cost 12
+    // draws each; see EXPERIMENTS.md §Perf).
+    let data: Vec<i16> = (0..n)
+        .map(|_| {
+            // zero-mean triangular distribution from one 64-bit draw
+            let bits = rng.next_u64();
+            ((bits & 0x3F) as i16 + ((bits >> 6) & 0x3F) as i16) - 63
+        })
+        .collect();
+    Tensor::i16(shape, data)
+}
+
+/// Build a full backbone graph with synthetic Q8.8 weights.
+pub fn build_backbone_graph(spec: &BackboneSpec, seed: u64) -> Result<Graph> {
+    if spec.depth != 9 && spec.depth != 12 {
+        anyhow::bail!("depth must be 9 or 12, got {}", spec.depth);
+    }
+    let mut rng = Prng::new(seed);
+    let mut ops = Vec::new();
+    let mut weights = std::collections::HashMap::new();
+    let stride_last = if spec.strided { 2 } else { 1 };
+
+    let mut cur = "input".to_string();
+    let mut cin = 3usize;
+    for (b, &cout) in spec.widths().iter().enumerate() {
+        let pre = format!("b{b}");
+        let conv = |name: &str, input: &str, output: &str, kh: usize, cin: usize,
+                        cout: usize, stride: usize, padding: usize, relu: bool,
+                        ops: &mut Vec<Op>,
+                        weights: &mut std::collections::HashMap<String, Tensor>,
+                        rng: &mut Prng| {
+            let w = format!("{name}.w");
+            let bias = format!("{name}.b");
+            weights.insert(w.clone(), rand_weights(rng, vec![kh, kh, cin, cout]));
+            weights.insert(bias.clone(), Tensor::i32(vec![cout], vec![0; cout]));
+            ops.push(Op::Conv2d {
+                name: name.to_string(),
+                input: input.to_string(),
+                output: output.to_string(),
+                weights: w,
+                bias,
+                stride,
+                padding,
+                relu,
+            });
+        };
+        conv(&format!("{pre}.conv1"), &cur, &format!("{pre}.a1"), 3, cin, cout, 1, 1, true, &mut ops, &mut weights, &mut rng);
+        conv(&format!("{pre}.conv2"), &format!("{pre}.a1"), &format!("{pre}.a2"), 3, cout, cout, 1, 1, true, &mut ops, &mut weights, &mut rng);
+        conv(&format!("{pre}.conv3"), &format!("{pre}.a2"), &format!("{pre}.a3"), 3, cout, cout, stride_last, 1, false, &mut ops, &mut weights, &mut rng);
+        conv(&format!("{pre}.short"), &cur, &format!("{pre}.sc"), 1, cin, cout, stride_last, 0, false, &mut ops, &mut weights, &mut rng);
+        ops.push(Op::Add {
+            name: format!("{pre}.add"),
+            input: format!("{pre}.a3"),
+            input2: format!("{pre}.sc"),
+            output: format!("{pre}.out"),
+            relu: true,
+        });
+        cur = format!("{pre}.out");
+        if !spec.strided {
+            ops.push(Op::MaxPool {
+                name: format!("{pre}.pool"),
+                input: cur.clone(),
+                output: format!("{pre}.pooled"),
+                size: 2,
+            });
+            cur = format!("{pre}.pooled");
+        }
+        cin = cout;
+    }
+    ops.push(Op::Gap { name: "gap".into(), input: cur.clone(), output: "features".into() });
+    let mut output_name = "features".to_string();
+    let mut feature_dim = *spec.widths().last().unwrap();
+    if let Some(classes) = spec.head_classes {
+        weights.insert("head.w".into(), rand_weights(&mut rng, vec![feature_dim, classes]));
+        weights.insert("head.b".into(), Tensor::i32(vec![classes], vec![0; classes]));
+        ops.push(Op::Dense {
+            name: "head".into(),
+            input: "features".into(),
+            output: "logits".into(),
+            weights: "head.w".into(),
+            bias: "head.b".into(),
+            relu: false,
+        });
+        output_name = "logits".into();
+        feature_dim = classes;
+    }
+
+    let mut g = Graph {
+        name: spec.name(),
+        qformat: QFormat::default(),
+        input_name: "input".into(),
+        input_shape: [1, spec.image_size, spec.image_size, 3],
+        output_name,
+        feature_dim,
+        ops,
+        weights,
+        shapes: Default::default(),
+        meta: crate::json::Value::Null,
+    };
+    infer_shapes(&mut g)?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tarch::Tarch;
+    use crate::tcompiler::compile;
+
+    #[test]
+    fn headline_builds_and_compiles() {
+        let g = build_backbone_graph(&BackboneSpec::headline(), 1).unwrap();
+        // ResNet-9 widths 16/40/80 → GAP feature dim 80
+        assert_eq!(g.feature_dim, 80);
+        let p = compile(&g, &Tarch::z7020_12x12()).unwrap();
+        assert!(p.est_total_cycles > 0);
+    }
+
+    #[test]
+    fn widths_match_python_model() {
+        let s9 = BackboneSpec { depth: 9, feature_maps: 16, strided: true, image_size: 32, head_classes: None };
+        assert_eq!(s9.widths(), vec![16, 40, 80]);
+        let s12 = BackboneSpec { depth: 12, ..s9 };
+        assert_eq!(s12.widths(), vec![16, 40, 80, 160]);
+    }
+
+    #[test]
+    fn all_paper_configs_build() {
+        // estimate_cycles == compile().est_total_cycles (asserted in
+        // tcompiler::estimate); use the closed form here so the full
+        // 36-config grid stays fast in debug builds.
+        for depth in [9, 12] {
+            for fm in [16, 32, 64] {
+                for size in [32, 84, 100] {
+                    for strided in [true, false] {
+                        let spec = BackboneSpec { depth, feature_maps: fm, strided, image_size: size, head_classes: None };
+                        let g = build_backbone_graph(&spec, 0).unwrap();
+                        let (cycles, per_layer) =
+                            crate::tcompiler::estimate_cycles(&g, &Tarch::z7020_12x12()).unwrap();
+                        assert!(cycles > 0, "{}", spec.name());
+                        assert_eq!(per_layer.len(), g.ops.len());
+                    }
+                }
+            }
+        }
+        // and one representative full compile
+        let g = build_backbone_graph(&BackboneSpec::headline(), 0).unwrap();
+        assert!(compile(&g, &Tarch::z7020_12x12()).unwrap().est_total_cycles > 0);
+    }
+
+    #[test]
+    fn head_adds_dense_layer() {
+        let spec = BackboneSpec { head_classes: Some(10), ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 0).unwrap();
+        assert_eq!(g.feature_dim, 10);
+        assert!(g.ops.iter().any(|o| matches!(o, crate::graph::Op::Dense { .. })));
+    }
+
+    #[test]
+    fn graph_simulable() {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 3).unwrap();
+        let input = vec![0.5f32; 16 * 16 * 3];
+        let r = crate::sim::simulate_f32(&g, &Tarch::z7020_8x8(), &input).unwrap();
+        assert_eq!(r.output_f32.len(), 20); // 4·5
+        assert!(r.cycles > 0);
+    }
+}

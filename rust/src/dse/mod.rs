@@ -1,0 +1,14 @@
+//! Design-space exploration driver (paper §V-A, Fig. 5).
+//!
+//! Sweeps the paper's hyperparameter grid — depth ∈ {9, 12}, feature maps ∈
+//! {16, 32, 64}, train image size ∈ {32, 84, 100}, strided vs max-pool —
+//! compiles every configuration with `tcompiler` to get its cycle count
+//! (the Fig. 5 x-axis; latency is shape-only, no trained weights needed)
+//! and joins the accuracy axis from `artifacts/dse_results.json` (produced
+//! by the python training sweep).
+
+mod builder;
+mod sweep;
+
+pub use builder::{build_backbone_graph, BackboneSpec};
+pub use sweep::{fig5_rows, join_accuracy, render_table, DseRow};

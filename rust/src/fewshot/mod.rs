@@ -1,0 +1,263 @@
+//! Rust-side few-shot episode evaluation over exported novel-split features
+//! (`artifacts/novel_features.bin` / `novel_labels.bin`).
+//!
+//! Replays the paper's inductive protocol — W ways, S shots, Q queries,
+//! NCM over frozen features — entirely in the deployed stack, so the
+//! accuracy number in the demo HUD and in EXPERIMENTS.md comes from the
+//! same code path that serves the camera.
+
+use anyhow::{bail, Result};
+
+use crate::ncm::NcmClassifier;
+use crate::util::tensorio::Tensor;
+use crate::util::Prng;
+
+/// Feature bank grouped by class.
+#[derive(Clone, Debug)]
+pub struct FeatureBank {
+    /// features[class][sample] = feature vector
+    pub by_class: Vec<Vec<Vec<f32>>>,
+    pub dim: usize,
+}
+
+impl FeatureBank {
+    /// Build from flat tensors: features [N, D] f32 and labels [N] i32.
+    pub fn from_tensors(features: &Tensor, labels: &Tensor) -> Result<FeatureBank> {
+        if features.shape.len() != 2 {
+            bail!("features must be [N, D], got {:?}", features.shape);
+        }
+        let (n, d) = (features.shape[0], features.shape[1]);
+        let f = features.as_f32()?;
+        let l = labels.as_i32()?;
+        if l.len() != n {
+            bail!("labels len {} != features rows {n}", l.len());
+        }
+        let n_classes = l.iter().copied().max().unwrap_or(-1) + 1;
+        if n_classes <= 0 {
+            bail!("no classes in label tensor");
+        }
+        let mut by_class = vec![Vec::new(); n_classes as usize];
+        for i in 0..n {
+            let c = l[i];
+            if c < 0 {
+                bail!("negative label at row {i}");
+            }
+            by_class[c as usize].push(f[i * d..(i + 1) * d].to_vec());
+        }
+        if by_class.iter().any(|v| v.is_empty()) {
+            bail!("some classes have no samples");
+        }
+        Ok(FeatureBank { by_class, dim: d })
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.by_class.len()
+    }
+
+    pub fn per_class_min(&self) -> usize {
+        self.by_class.iter().map(Vec::len).min().unwrap_or(0)
+    }
+
+    /// Mean feature across all samples (NCM centering vector).
+    pub fn mean_feature(&self) -> Vec<f32> {
+        let mut sum = vec![0f64; self.dim];
+        let mut count = 0usize;
+        for class in &self.by_class {
+            for f in class {
+                for (s, x) in sum.iter_mut().zip(f) {
+                    *s += *x as f64;
+                }
+                count += 1;
+            }
+        }
+        sum.into_iter().map(|s| (s / count.max(1) as f64) as f32).collect()
+    }
+}
+
+/// Episode protocol parameters (paper: 5-way 1-shot, thousands of episodes).
+#[derive(Clone, Copy, Debug)]
+pub struct EpisodeConfig {
+    pub n_ways: usize,
+    pub n_shots: usize,
+    pub n_queries: usize,
+    pub n_episodes: usize,
+    pub seed: u64,
+}
+
+impl Default for EpisodeConfig {
+    fn default() -> Self {
+        EpisodeConfig { n_ways: 5, n_shots: 1, n_queries: 15, n_episodes: 600, seed: 99 }
+    }
+}
+
+/// Evaluation result.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    /// 95% CI half-width over episodes.
+    pub ci95: f64,
+    pub n_episodes: usize,
+}
+
+/// Run the episodic NCM evaluation.
+pub fn evaluate(bank: &FeatureBank, cfg: &EpisodeConfig, center: bool) -> Result<EvalResult> {
+    if cfg.n_ways > bank.n_classes() {
+        bail!("{} ways > {} classes", cfg.n_ways, bank.n_classes());
+    }
+    if cfg.n_shots + cfg.n_queries > bank.per_class_min() {
+        bail!(
+            "need {} samples/class, bank has {}",
+            cfg.n_shots + cfg.n_queries,
+            bank.per_class_min()
+        );
+    }
+    let base_mean = if center { Some(bank.mean_feature()) } else { None };
+    let mut rng = Prng::new(cfg.seed);
+    let mut accs = Vec::with_capacity(cfg.n_episodes);
+
+    for _ in 0..cfg.n_episodes {
+        let ways = rng.choose_distinct(bank.n_classes(), cfg.n_ways);
+        let mut ncm = NcmClassifier::new(bank.dim);
+        if let Some(m) = &base_mean {
+            ncm = ncm.with_base_mean(m.clone())?;
+        }
+        let mut queries: Vec<(usize, Vec<f32>)> = Vec::new();
+        for (w, &class) in ways.iter().enumerate() {
+            let slot = ncm.add_class(format!("w{w}"));
+            let samples = &bank.by_class[class];
+            let picks = rng.choose_distinct(samples.len(), cfg.n_shots + cfg.n_queries);
+            for &p in picks.iter().take(cfg.n_shots) {
+                ncm.enroll(slot, &samples[p])?;
+            }
+            for &p in picks.iter().skip(cfg.n_shots) {
+                queries.push((w, samples[p].clone()));
+            }
+        }
+        let mut hits = 0usize;
+        for (want, q) in &queries {
+            if ncm.classify(q)?.class_idx == *want {
+                hits += 1;
+            }
+        }
+        accs.push(hits as f64 / queries.len() as f64);
+    }
+
+    let n = accs.len() as f64;
+    let mean = accs.iter().sum::<f64>() / n;
+    let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / (n - 1.0).max(1.0);
+    Ok(EvalResult { accuracy: mean, ci95: 1.96 * (var / n).sqrt(), n_episodes: accs.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Bank with well-separated classes: class c points along axis c.
+    fn separable_bank(n_classes: usize, per_class: usize, dim: usize, noise: f32) -> FeatureBank {
+        let mut rng = Prng::new(5);
+        let by_class = (0..n_classes)
+            .map(|c| {
+                (0..per_class)
+                    .map(|_| {
+                        let mut f = vec![0f32; dim];
+                        f[c % dim] = 3.0;
+                        for x in f.iter_mut() {
+                            *x += noise * rng.normal();
+                        }
+                        f
+                    })
+                    .collect()
+            })
+            .collect();
+        FeatureBank { by_class, dim }
+    }
+
+    #[test]
+    fn separable_bank_near_perfect() {
+        let bank = separable_bank(8, 10, 16, 0.05);
+        let cfg = EpisodeConfig { n_episodes: 50, n_queries: 5, ..Default::default() };
+        let r = evaluate(&bank, &cfg, true).unwrap();
+        assert!(r.accuracy > 0.95, "acc {}", r.accuracy);
+        assert_eq!(r.n_episodes, 50);
+    }
+
+    #[test]
+    fn random_bank_near_chance() {
+        let mut rng = Prng::new(9);
+        let by_class = (0..10)
+            .map(|_| (0..8).map(|_| (0..16).map(|_| rng.normal()).collect()).collect())
+            .collect();
+        let bank = FeatureBank { by_class, dim: 16 };
+        let cfg = EpisodeConfig { n_ways: 5, n_episodes: 100, n_queries: 5, ..Default::default() };
+        let r = evaluate(&bank, &cfg, false).unwrap();
+        assert!((r.accuracy - 0.2).abs() < 0.12, "acc {}", r.accuracy);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let bank = separable_bank(6, 8, 8, 0.5);
+        let cfg = EpisodeConfig { n_episodes: 30, n_queries: 4, ..Default::default() };
+        let a = evaluate(&bank, &cfg, true).unwrap();
+        let b = evaluate(&bank, &cfg, true).unwrap();
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+
+    #[test]
+    fn too_many_ways_rejected() {
+        let bank = separable_bank(3, 8, 8, 0.1);
+        let cfg = EpisodeConfig { n_ways: 5, ..Default::default() };
+        assert!(evaluate(&bank, &cfg, true).is_err());
+    }
+
+    #[test]
+    fn from_tensors_roundtrip() {
+        let features = Tensor::f32(vec![4, 2], vec![1.0, 0.0, 1.1, 0.0, 0.0, 1.0, 0.0, 0.9]);
+        let labels = Tensor::i32(vec![4], vec![0, 0, 1, 1]);
+        let bank = FeatureBank::from_tensors(&features, &labels).unwrap();
+        assert_eq!(bank.n_classes(), 2);
+        assert_eq!(bank.per_class_min(), 2);
+        assert_eq!(bank.dim, 2);
+    }
+
+    #[test]
+    fn from_tensors_validates() {
+        let features = Tensor::f32(vec![2, 2], vec![0.0; 4]);
+        let labels = Tensor::i32(vec![3], vec![0, 0, 1]);
+        assert!(FeatureBank::from_tensors(&features, &labels).is_err());
+        // class gap (labels 0 and 2, class 1 empty)
+        let labels = Tensor::i32(vec![2], vec![0, 2]);
+        assert!(FeatureBank::from_tensors(&features, &labels).is_err());
+    }
+
+    #[test]
+    fn mean_feature_correct() {
+        let bank = FeatureBank {
+            by_class: vec![vec![vec![1.0, 3.0]], vec![vec![3.0, 5.0]]],
+            dim: 2,
+        };
+        assert_eq!(bank.mean_feature(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn more_shots_help_on_noisy_bank() {
+        let bank = separable_bank(8, 20, 8, 1.2);
+        let one = evaluate(
+            &bank,
+            &EpisodeConfig { n_shots: 1, n_episodes: 120, n_queries: 5, ..Default::default() },
+            true,
+        )
+        .unwrap();
+        let five = evaluate(
+            &bank,
+            &EpisodeConfig { n_shots: 5, n_episodes: 120, n_queries: 5, ..Default::default() },
+            true,
+        )
+        .unwrap();
+        assert!(
+            five.accuracy >= one.accuracy - 0.02,
+            "5-shot {} should beat 1-shot {}",
+            five.accuracy,
+            one.accuracy
+        );
+    }
+}

@@ -1,0 +1,197 @@
+//! Q-format fixed-point arithmetic — the accelerator's number system.
+//!
+//! The paper deploys in 16-bit fixed point with 8 integer bits (Q8.8); the
+//! Tensil-like PE array multiplies Q8.8 operands into 32-bit accumulators
+//! (Q16.16) and rescales back to Q8.8 on writeback with round-half-away and
+//! saturation.  `python/compile/quantize.py` implements the same rounding on
+//! the float side; `tests/test_quant_parity` (rust) checks the two agree.
+
+use std::fmt;
+
+/// Runtime-parameterized Q format (total bits ≤ 16 stored in i16 codes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    pub total_bits: u8,
+    pub frac_bits: u8,
+}
+
+impl Default for QFormat {
+    /// The paper's deployment format: 16 bits, 8 fractional.
+    fn default() -> Self {
+        QFormat { total_bits: 16, frac_bits: 8 }
+    }
+}
+
+impl QFormat {
+    pub fn new(total_bits: u8, frac_bits: u8) -> Self {
+        assert!(frac_bits < total_bits && total_bits <= 16,
+                "bad Q format: Q{}.{}", total_bits as i16 - frac_bits as i16, frac_bits);
+        QFormat { total_bits, frac_bits }
+    }
+
+    pub fn scale(&self) -> i32 {
+        1 << self.frac_bits
+    }
+
+    pub fn min_code(&self) -> i32 {
+        -(1 << (self.total_bits - 1))
+    }
+
+    pub fn max_code(&self) -> i32 {
+        (1 << (self.total_bits - 1)) - 1
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> f32 {
+        self.max_code() as f32 / self.scale() as f32
+    }
+
+    /// f32 → code with round-half-away-from-zero + saturation.
+    pub fn quantize(&self, x: f32) -> i16 {
+        let scaled = x as f64 * self.scale() as f64;
+        let rounded = if scaled >= 0.0 { (scaled + 0.5).floor() } else { (scaled - 0.5).ceil() };
+        rounded.clamp(self.min_code() as f64, self.max_code() as f64) as i16
+    }
+
+    /// code → f32.
+    pub fn dequantize(&self, code: i16) -> f32 {
+        code as f32 / self.scale() as f32
+    }
+
+    /// Saturating narrowing of a wide accumulator (Q(2·frac)) back to codes.
+    ///
+    /// `acc` holds a sum of code×code products, i.e. scale² fractional bits;
+    /// writeback divides by `scale` with round-half-away, then saturates —
+    /// exactly the accelerator's SIMD writeback stage.
+    pub fn narrow_acc(&self, acc: i64) -> i16 {
+        let scale = self.scale() as i64;
+        let half = scale / 2;
+        let rounded = if acc >= 0 { (acc + half) / scale } else { (acc - half) / scale };
+        rounded.clamp(self.min_code() as i64, self.max_code() as i64) as i16
+    }
+
+    /// Quantize an f32 slice into codes.
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i16> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Dequantize a code slice.
+    pub fn dequantize_slice(&self, codes: &[i16]) -> Vec<f32> {
+        codes.iter().map(|&c| self.dequantize(c)).collect()
+    }
+}
+
+impl fmt::Display for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Q{}.{}", self.total_bits - self.frac_bits, self.frac_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    const Q: QFormat = QFormat { total_bits: 16, frac_bits: 8 };
+
+    #[test]
+    fn exact_values() {
+        assert_eq!(Q.quantize(1.0), 256);
+        assert_eq!(Q.quantize(-1.0), -256);
+        assert_eq!(Q.quantize(0.5), 128);
+        assert_eq!(Q.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn round_half_away_from_zero() {
+        assert_eq!(Q.quantize(0.5 / 256.0), 1);
+        assert_eq!(Q.quantize(-0.5 / 256.0), -1);
+        assert_eq!(Q.quantize(1.5 / 256.0), 2);
+        assert_eq!(Q.quantize(-1.5 / 256.0), -2);
+        // below half rounds toward zero
+        assert_eq!(Q.quantize(0.49 / 256.0), 0);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(Q.quantize(1e9), 32767);
+        assert_eq!(Q.quantize(-1e9), -32768);
+        assert_eq!(Q.quantize(127.996), 32767);
+    }
+
+    #[test]
+    fn roundtrip_error_half_ulp() {
+        check(11, 500, |rng| {
+            let x = rng.f32_range(-120.0, 120.0);
+            let err = (Q.dequantize(Q.quantize(x)) - x).abs();
+            assert!(err <= 0.5 / 256.0 + 1e-6, "x={x} err={err}");
+        });
+    }
+
+    #[test]
+    fn quantize_monotonic() {
+        check(12, 300, |rng| {
+            let a = rng.f32_range(-100.0, 100.0);
+            let b = rng.f32_range(-100.0, 100.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(Q.quantize(lo) <= Q.quantize(hi));
+        });
+    }
+
+    #[test]
+    fn narrow_acc_matches_scalar_path() {
+        // acc = code(a)*code(b) narrowed ≡ quantize(deq(a)*deq(b)) within 1 ulp
+        check(13, 500, |rng| {
+            let a = Q.quantize(rng.f32_range(-8.0, 8.0));
+            let b = Q.quantize(rng.f32_range(-8.0, 8.0));
+            let acc = a as i64 * b as i64;
+            let narrowed = Q.narrow_acc(acc);
+            let float_path = Q.quantize(Q.dequantize(a) * Q.dequantize(b));
+            assert!((narrowed as i32 - float_path as i32).abs() <= 1,
+                    "a={a} b={b} narrowed={narrowed} float={float_path}");
+        });
+    }
+
+    #[test]
+    fn narrow_acc_rounding_sign_symmetric() {
+        assert_eq!(Q.narrow_acc(128), 1); // exactly half → away from zero
+        assert_eq!(Q.narrow_acc(-128), -1);
+        assert_eq!(Q.narrow_acc(127), 0);
+        assert_eq!(Q.narrow_acc(-127), 0);
+    }
+
+    #[test]
+    fn narrow_acc_saturates() {
+        assert_eq!(Q.narrow_acc(i64::MAX / 4), 32767);
+        assert_eq!(Q.narrow_acc(i64::MIN / 4), -32768);
+    }
+
+    #[test]
+    fn other_formats() {
+        let q4 = QFormat::new(8, 4);
+        assert_eq!(q4.quantize(1.0), 16);
+        assert_eq!(q4.max_code(), 127);
+        assert_eq!(q4.min_code(), -128);
+        assert_eq!(q4.to_string(), "Q4.4");
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_format_panics() {
+        QFormat::new(16, 16);
+    }
+
+    #[test]
+    fn slice_helpers() {
+        let xs = [0.0f32, 1.0, -0.5];
+        let codes = Q.quantize_slice(&xs);
+        assert_eq!(codes, vec![0, 256, -128]);
+        let back = Q.dequantize_slice(&codes);
+        assert_eq!(back, vec![0.0, 1.0, -0.5]);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(QFormat::default().to_string(), "Q8.8");
+    }
+}

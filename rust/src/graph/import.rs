@@ -1,0 +1,207 @@
+//! graph.json + weights.bin → validated [`Graph`].
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fixed::QFormat;
+use crate::json::{self, Value};
+use crate::util::tensorio::{read_named_tensors, Data};
+
+use super::ir::{Graph, Op};
+use super::shape::infer_shapes;
+
+fn parse_op(v: &Value) -> Result<Op> {
+    let kind = v.req_str("op")?;
+    let name = v.req_str("name")?.to_string();
+    let input = v.req_str("input")?.to_string();
+    let output = v.req_str("output")?.to_string();
+    Ok(match kind {
+        "conv2d" => Op::Conv2d {
+            weights: v.req_str("weights")?.to_string(),
+            bias: v.req_str("bias")?.to_string(),
+            stride: v.req_usize("stride")?,
+            padding: v.req_usize("padding")?,
+            relu: v.req_bool("relu")?,
+            name, input, output,
+        },
+        "add" => Op::Add {
+            input2: v.req_str("input2")?.to_string(),
+            relu: v.req_bool("relu")?,
+            name, input, output,
+        },
+        "maxpool" => Op::MaxPool { size: v.req_usize("size")?, name, input, output },
+        "gap" => Op::Gap { name, input, output },
+        "dense" => Op::Dense {
+            weights: v.req_str("weights")?.to_string(),
+            bias: v.req_str("bias")?.to_string(),
+            relu: v.req_bool("relu")?,
+            name, input, output,
+        },
+        "relu" => Op::Relu { name, input, output },
+        other => bail!("unknown op kind '{other}' (op '{name}')"),
+    })
+}
+
+/// Import from already-parsed JSON + named tensors.
+pub fn import(doc: &Value, tensors: Vec<(String, crate::util::tensorio::Tensor)>) -> Result<Graph> {
+    let name = doc.req_str("name")?.to_string();
+
+    let fmt_obj = doc.get("format").context("missing 'format'")?;
+    let qformat = QFormat::new(
+        fmt_obj.req_usize("total_bits")? as u8,
+        fmt_obj.req_usize("frac_bits")? as u8,
+    );
+
+    let input = doc.get("input").context("missing 'input'")?;
+    let input_name = input.req_str("name")?.to_string();
+    let shape_arr = input.req_arr("shape")?;
+    if shape_arr.len() != 4 {
+        bail!("input shape must be NHWC (4 dims), got {}", shape_arr.len());
+    }
+    let mut input_shape = [0usize; 4];
+    for (i, d) in shape_arr.iter().enumerate() {
+        input_shape[i] = d.as_usize().context("bad input dim")?;
+    }
+
+    let output = doc.get("output").context("missing 'output'")?;
+    let output_name = output.req_str("name")?.to_string();
+    let feature_dim = output.req_usize("dim")?;
+
+    let ops = doc
+        .req_arr("ops")?
+        .iter()
+        .map(parse_op)
+        .collect::<Result<Vec<_>>>()?;
+    if ops.is_empty() {
+        bail!("graph has no ops");
+    }
+
+    let mut weights = HashMap::new();
+    for (wname, t) in tensors {
+        match (&t.data, wname.ends_with(".w")) {
+            (Data::I16(_), true) | (Data::I32(_), false) => {}
+            _ => bail!("tensor '{wname}' has unexpected dtype for its role"),
+        }
+        if weights.insert(wname.clone(), t).is_some() {
+            bail!("duplicate weight tensor '{wname}'");
+        }
+    }
+
+    let meta = doc.get("backbone").cloned().unwrap_or(Value::Null);
+
+    let mut g = Graph {
+        name, qformat, input_name, input_shape, output_name, feature_dim,
+        ops, weights, shapes: HashMap::new(), meta,
+    };
+    infer_shapes(&mut g)?;
+    Ok(g)
+}
+
+/// Import from file paths (the `artifacts/` layout).
+pub fn import_files(graph_json: impl AsRef<Path>, weights_bin: impl AsRef<Path>) -> Result<Graph> {
+    let doc = json::from_file(graph_json)?;
+    let tensors = read_named_tensors(weights_bin)?;
+    import(&doc, tensors)
+}
+
+#[cfg(test)]
+pub mod testutil {
+    //! Builders for synthetic graphs used across the crate's tests.
+    use super::*;
+    use crate::util::tensorio::Tensor;
+
+    /// A tiny valid single-conv graph: input [1,h,h,cin] → conv3×3 → gap.
+    pub fn tiny_conv_graph(h: usize, cin: usize, cout: usize, stride: usize) -> (Value, Vec<(String, Tensor)>) {
+        let mut doc = json::parse(&format!(
+            r#"{{
+              "name": "tiny",
+              "format": {{"total_bits": 16, "frac_bits": 8}},
+              "input": {{"name": "input", "shape": [1, {h}, {h}, {cin}]}},
+              "output": {{"name": "features", "dim": {cout}}},
+              "ops": [
+                {{"op": "conv2d", "name": "c1", "input": "input", "output": "a1",
+                  "weights": "c1.w", "bias": "c1.b", "stride": {stride},
+                  "padding": 1, "relu": true}},
+                {{"op": "gap", "name": "gap", "input": "a1", "output": "features"}}
+              ]
+            }}"#
+        ))
+        .unwrap();
+        let _ = &mut doc;
+        let w = Tensor::i16(vec![3, 3, cin, cout], vec![64; 9 * cin * cout]); // 0.25 each
+        let b = Tensor::i32(vec![cout], vec![0; cout]);
+        (doc, vec![("c1.w".into(), w), ("c1.b".into(), b)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::tiny_conv_graph;
+    use super::*;
+
+    #[test]
+    fn tiny_graph_imports() {
+        let (doc, tensors) = tiny_conv_graph(8, 3, 4, 1);
+        let g = import(&doc, tensors).unwrap();
+        assert_eq!(g.ops.len(), 2);
+        assert_eq!(g.shape("a1").unwrap(), &[1, 8, 8, 4]);
+        assert_eq!(g.shape("features").unwrap(), &[1, 4]);
+        assert_eq!(g.qformat.frac_bits, 8);
+    }
+
+    #[test]
+    fn strided_shapes() {
+        let (doc, tensors) = tiny_conv_graph(8, 3, 4, 2);
+        let g = import(&doc, tensors).unwrap();
+        assert_eq!(g.shape("a1").unwrap(), &[1, 4, 4, 4]);
+    }
+
+    #[test]
+    fn missing_weight_rejected() {
+        let (doc, mut tensors) = tiny_conv_graph(8, 3, 4, 1);
+        tensors.remove(0);
+        let err = import(&doc, tensors).unwrap_err().to_string();
+        assert!(err.contains("c1.w"), "{err}");
+    }
+
+    #[test]
+    fn channel_mismatch_rejected() {
+        let (doc, mut tensors) = tiny_conv_graph(8, 3, 4, 1);
+        tensors[0].1 = crate::util::tensorio::Tensor::i16(vec![3, 3, 5, 4], vec![0; 180]);
+        let err = import(&doc, tensors).unwrap_err().to_string();
+        assert!(err.contains("channels"), "{err}");
+    }
+
+    #[test]
+    fn wrong_dtype_rejected() {
+        let (doc, mut tensors) = tiny_conv_graph(8, 3, 4, 1);
+        // weights must be i16
+        tensors[0].1 = crate::util::tensorio::Tensor::i32(vec![3, 3, 3, 4], vec![0; 108]);
+        assert!(import(&doc, tensors).is_err());
+    }
+
+    #[test]
+    fn undefined_input_rejected() {
+        let (mut doc, tensors) = tiny_conv_graph(8, 3, 4, 1);
+        // point the conv at a tensor that doesn't exist
+        if let Value::Obj(m) = &mut doc {
+            if let Some(Value::Arr(ops)) = m.get_mut("ops") {
+                if let Value::Obj(op) = &mut ops[0] {
+                    op.insert("input".into(), Value::Str("ghost".into()));
+                }
+            }
+        }
+        let err = import(&doc, tensors).unwrap_err().to_string();
+        assert!(err.contains("ghost"), "{err}");
+    }
+
+    #[test]
+    fn macs_counted() {
+        let (doc, tensors) = tiny_conv_graph(8, 3, 4, 1);
+        let g = import(&doc, tensors).unwrap();
+        // 3*3*3 * (1*8*8*4) = 27 * 256
+        assert_eq!(g.total_macs(), 27 * 256);
+    }
+}

@@ -1,0 +1,141 @@
+//! Graph data structures.
+
+use std::collections::HashMap;
+
+use crate::fixed::QFormat;
+use crate::util::tensorio::Tensor;
+
+/// One operation. All activations are NHWC; conv weights are HWIO i16 codes
+/// and biases i32 codes (Q8.8).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Conv2d {
+        name: String,
+        input: String,
+        output: String,
+        weights: String,
+        bias: String,
+        stride: usize,
+        padding: usize,
+        relu: bool,
+    },
+    /// Elementwise residual add (+ optional fused ReLU).
+    Add {
+        name: String,
+        input: String,
+        input2: String,
+        output: String,
+        relu: bool,
+    },
+    /// `size`×`size` max-pool with matching stride (the paper only uses 2).
+    MaxPool {
+        name: String,
+        input: String,
+        output: String,
+        size: usize,
+    },
+    /// Global average pool NHWC → [N, C].
+    Gap { name: String, input: String, output: String },
+    /// Fully connected layer over [N, K] features (the CIFAR-10 head of
+    /// Table I). Weights are [K, M] i16 codes, bias [M] i32 codes.
+    Dense {
+        name: String,
+        input: String,
+        output: String,
+        weights: String,
+        bias: String,
+        relu: bool,
+    },
+    /// Standalone ReLU (accepted on import; fused away by `simplify`).
+    Relu { name: String, input: String, output: String },
+}
+
+impl Op {
+    pub fn name(&self) -> &str {
+        match self {
+            Op::Conv2d { name, .. }
+            | Op::Add { name, .. }
+            | Op::MaxPool { name, .. }
+            | Op::Gap { name, .. }
+            | Op::Relu { name, .. }
+            | Op::Dense { name, .. } => name,
+        }
+    }
+
+    pub fn output(&self) -> &str {
+        match self {
+            Op::Conv2d { output, .. }
+            | Op::Add { output, .. }
+            | Op::MaxPool { output, .. }
+            | Op::Gap { output, .. }
+            | Op::Relu { output, .. }
+            | Op::Dense { output, .. } => output,
+        }
+    }
+
+    pub fn inputs(&self) -> Vec<&str> {
+        match self {
+            Op::Conv2d { input, .. } | Op::MaxPool { input, .. } | Op::Gap { input, .. }
+            | Op::Relu { input, .. } | Op::Dense { input, .. } => vec![input],
+            Op::Add { input, input2, .. } => vec![input, input2],
+        }
+    }
+}
+
+/// An imported, validated model graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub qformat: QFormat,
+    pub input_name: String,
+    /// NHWC input shape.
+    pub input_shape: [usize; 4],
+    pub output_name: String,
+    pub feature_dim: usize,
+    pub ops: Vec<Op>,
+    /// Weight/bias tensors by name (i16 weights, i32 biases).
+    pub weights: HashMap<String, Tensor>,
+    /// Activation shapes by tensor name — filled by `infer_shapes`.
+    pub shapes: HashMap<String, Vec<usize>>,
+    /// Backbone metadata passed through from export (depth, fm, ...).
+    pub meta: crate::json::Value,
+}
+
+impl Graph {
+    /// Look up a weight tensor, with a contextual error.
+    pub fn weight(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.weights
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight tensor '{name}'"))
+    }
+
+    /// Shape of an activation tensor (after `infer_shapes`).
+    pub fn shape(&self, name: &str) -> anyhow::Result<&[usize]> {
+        self.shapes
+            .get(name)
+            .map(Vec::as_slice)
+            .ok_or_else(|| anyhow::anyhow!("unknown tensor '{name}'"))
+    }
+
+    /// Total multiply-accumulates of all convs (for cycle-model sanity).
+    pub fn total_macs(&self) -> u64 {
+        let mut macs = 0u64;
+        for op in &self.ops {
+            if let Op::Conv2d { weights, output, .. } = op {
+                let w = &self.weights[weights];
+                // HWIO
+                let (kh, kw, cin, _cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+                if let Some(os) = self.shapes.get(output) {
+                    let spatial: usize = os.iter().product();
+                    macs += (kh * kw * cin * spatial) as u64;
+                }
+            }
+        }
+        macs
+    }
+
+    /// Sum of weight elements (deployment footprint).
+    pub fn total_weight_elems(&self) -> usize {
+        self.weights.values().map(|t| t.numel()).sum()
+    }
+}

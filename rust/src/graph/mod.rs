@@ -1,0 +1,17 @@
+//! NN graph IR — the Rust side of the ONNX→Tensil front-end.
+//!
+//! `python/compile/export.py` emits an already BN-folded, topologically
+//! ordered op list (`graph.json`) plus quantized weights (`weights.bin`).
+//! This module imports both, runs shape inference + validation, and offers
+//! the simplification passes the paper gets from `onnx-simplifier`
+//! (standalone-ReLU fusion, dead-op elimination).
+
+mod import;
+mod ir;
+mod shape;
+mod simplify;
+
+pub use import::{import, import_files};
+pub use ir::{Graph, Op};
+pub use shape::infer_shapes;
+pub use simplify::simplify;

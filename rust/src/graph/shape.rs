@@ -1,0 +1,135 @@
+//! Shape inference + structural validation over the op list.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::ir::{Graph, Op};
+
+/// Conv output spatial size: floor((h + 2p − k) / s) + 1.
+pub fn conv_out(h: usize, k: usize, stride: usize, padding: usize) -> usize {
+    (h + 2 * padding - k) / stride + 1
+}
+
+/// Infer activation shapes for every tensor; validates SSA ordering,
+/// channel agreement with weights, and op-specific constraints.
+pub fn infer_shapes(g: &mut Graph) -> Result<()> {
+    let mut shapes: HashMap<String, Vec<usize>> = HashMap::new();
+    shapes.insert(g.input_name.clone(), g.input_shape.to_vec());
+
+    for op in &g.ops {
+        for input in op.inputs() {
+            if !shapes.contains_key(input) {
+                bail!("op '{}' reads undefined tensor '{}'", op.name(), input);
+            }
+        }
+        if shapes.contains_key(op.output()) {
+            bail!("op '{}' redefines tensor '{}'", op.name(), op.output());
+        }
+        let out_shape = match op {
+            Op::Conv2d { name, input, weights, bias, stride, padding, .. } => {
+                let ins = &shapes[input];
+                if ins.len() != 4 {
+                    bail!("conv '{name}': input must be NHWC, got {ins:?}");
+                }
+                let w = g.weights.get(weights)
+                    .ok_or_else(|| anyhow::anyhow!("conv '{name}': missing weights '{weights}'"))?;
+                if w.shape.len() != 4 {
+                    bail!("conv '{name}': weights must be HWIO, got {:?}", w.shape);
+                }
+                let (kh, kw, cin, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+                if ins[3] != cin {
+                    bail!("conv '{name}': input channels {} != weight cin {}", ins[3], cin);
+                }
+                let b = g.weights.get(bias)
+                    .ok_or_else(|| anyhow::anyhow!("conv '{name}': missing bias '{bias}'"))?;
+                if b.numel() != cout {
+                    bail!("conv '{name}': bias len {} != cout {}", b.numel(), cout);
+                }
+                if *stride == 0 {
+                    bail!("conv '{name}': stride 0");
+                }
+                if ins[1] + 2 * padding < kh || ins[2] + 2 * padding < kw {
+                    bail!("conv '{name}': kernel {kh}x{kw} larger than padded input {ins:?}");
+                }
+                vec![ins[0], conv_out(ins[1], kh, *stride, *padding),
+                     conv_out(ins[2], kw, *stride, *padding), cout]
+            }
+            Op::Add { name, input, input2, .. } => {
+                let a = &shapes[input];
+                let b = &shapes[input2];
+                if a != b {
+                    bail!("add '{name}': shape mismatch {a:?} vs {b:?}");
+                }
+                a.clone()
+            }
+            Op::MaxPool { name, input, size, .. } => {
+                let ins = &shapes[input];
+                if ins.len() != 4 {
+                    bail!("maxpool '{name}': input must be NHWC");
+                }
+                if *size == 0 || ins[1] < *size || ins[2] < *size {
+                    bail!("maxpool '{name}': size {size} invalid for {ins:?}");
+                }
+                vec![ins[0], ins[1] / size, ins[2] / size, ins[3]]
+            }
+            Op::Gap { name, input, .. } => {
+                let ins = &shapes[input];
+                if ins.len() != 4 {
+                    bail!("gap '{name}': input must be NHWC");
+                }
+                vec![ins[0], ins[3]]
+            }
+            Op::Relu { input, .. } => shapes[input].clone(),
+            Op::Dense { name, input, weights, bias, .. } => {
+                let ins = &shapes[input];
+                if ins.len() != 2 {
+                    bail!("dense '{name}': input must be [N, K], got {ins:?}");
+                }
+                let w = g.weights.get(weights)
+                    .ok_or_else(|| anyhow::anyhow!("dense '{name}': missing weights '{weights}'"))?;
+                if w.shape.len() != 2 || w.shape[0] != ins[1] {
+                    bail!("dense '{name}': weights {:?} incompatible with input {ins:?}", w.shape);
+                }
+                let b = g.weights.get(bias)
+                    .ok_or_else(|| anyhow::anyhow!("dense '{name}': missing bias '{bias}'"))?;
+                if b.numel() != w.shape[1] {
+                    bail!("dense '{name}': bias len {} != out dim {}", b.numel(), w.shape[1]);
+                }
+                vec![ins[0], w.shape[1]]
+            }
+        };
+        shapes.insert(op.output().to_string(), out_shape);
+    }
+
+    let out = shapes.get(&g.output_name)
+        .ok_or_else(|| anyhow::anyhow!("graph output '{}' never produced", g.output_name))?;
+    if *out.last().unwrap_or(&0) != g.feature_dim {
+        bail!("output dim {:?} != declared feature_dim {}", out, g.feature_dim);
+    }
+    g.shapes = shapes;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_formula() {
+        assert_eq!(conv_out(32, 3, 1, 1), 32); // same-pad
+        assert_eq!(conv_out(32, 3, 2, 1), 16); // strided
+        assert_eq!(conv_out(21, 3, 2, 1), 11); // odd input, ceil(21/2)
+        assert_eq!(conv_out(32, 1, 2, 0), 16); // 1×1 shortcut
+        assert_eq!(conv_out(21, 1, 2, 0), 11);
+    }
+
+    #[test]
+    fn strided_conv3_and_shortcut_align() {
+        // The ResNet block invariant: 3×3/s2/p1 and 1×1/s2/p0 agree for all
+        // the paper's resolutions (and odd sizes).
+        for h in [8, 11, 16, 21, 32, 42, 84, 100] {
+            assert_eq!(conv_out(h, 3, 2, 1), conv_out(h, 1, 2, 0), "h={h}");
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Graph simplification — the `onnx-simplifier` stage of the paper's
+//! pipeline: fuse standalone ReLUs into producers, eliminate dead ops.
+
+use std::collections::{HashMap, HashSet};
+
+use super::ir::{Graph, Op};
+
+/// Simplification statistics for logging/tests.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct SimplifyStats {
+    pub relus_fused: usize,
+    pub dead_removed: usize,
+}
+
+/// Run all passes to fixpoint. Shapes are re-derived afterwards by the
+/// caller if needed (passes here never change live tensor shapes).
+pub fn simplify(g: &mut Graph) -> SimplifyStats {
+    let mut stats = SimplifyStats::default();
+    loop {
+        let fused = fuse_relu(g);
+        let dead = remove_dead(g);
+        stats.relus_fused += fused;
+        stats.dead_removed += dead;
+        if fused == 0 && dead == 0 {
+            break;
+        }
+    }
+    stats
+}
+
+/// Fuse `Relu` ops into a preceding `Conv2d`/`Add` producer when the relu is
+/// the *sole* consumer of the producer's output.
+fn fuse_relu(g: &mut Graph) -> usize {
+    // consumer count per tensor
+    let mut uses: HashMap<String, usize> = HashMap::new();
+    for op in &g.ops {
+        for i in op.inputs() {
+            *uses.entry(i.to_string()).or_default() += 1;
+        }
+    }
+    let producer_of: HashMap<String, usize> = g
+        .ops
+        .iter()
+        .enumerate()
+        .map(|(i, op)| (op.output().to_string(), i))
+        .collect();
+
+    let mut fused_idx: Option<(usize, usize)> = None; // (relu_idx, producer_idx)
+    for (ri, op) in g.ops.iter().enumerate() {
+        if let Op::Relu { input, .. } = op {
+            if uses.get(input).copied() != Some(1) {
+                continue; // producer output used elsewhere; can't fuse
+            }
+            if let Some(&pi) = producer_of.get(input) {
+                match &g.ops[pi] {
+                    Op::Conv2d { relu: false, .. } | Op::Add { relu: false, .. } => {
+                        fused_idx = Some((ri, pi));
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    if let Some((ri, pi)) = fused_idx {
+        let relu_out = g.ops[ri].output().to_string();
+        match &mut g.ops[pi] {
+            Op::Conv2d { relu, output, .. } | Op::Add { relu, output, .. } => {
+                *relu = true;
+                *output = relu_out.clone();
+            }
+            _ => unreachable!(),
+        }
+        // keep shape table coherent for the renamed output
+        if let Some(s) = g.shapes.get(&relu_out).cloned() {
+            g.shapes.insert(g.ops[pi].output().to_string(), s);
+        }
+        g.ops.remove(ri);
+        1 + fuse_relu(g) // continue until no more fusions this pass
+    } else {
+        0
+    }
+}
+
+/// Remove ops whose outputs are never consumed and are not the graph output.
+fn remove_dead(g: &mut Graph) -> usize {
+    let mut live: HashSet<String> = HashSet::new();
+    live.insert(g.output_name.clone());
+    // walk backwards: an op is live if its output is live
+    let mut removed = 0;
+    loop {
+        let before = live.len();
+        for op in &g.ops {
+            if live.contains(op.output()) {
+                for i in op.inputs() {
+                    live.insert(i.to_string());
+                }
+            }
+        }
+        if live.len() == before {
+            break;
+        }
+    }
+    let n0 = g.ops.len();
+    g.ops.retain(|op| live.contains(op.output()));
+    removed += n0 - g.ops.len();
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::import::{import, testutil::tiny_conv_graph};
+    use super::*;
+    use crate::json::{parse, Value};
+    use crate::util::tensorio::Tensor;
+
+    fn graph_with_standalone_relu() -> Graph {
+        let doc = parse(
+            r#"{
+              "name": "t", "format": {"total_bits": 16, "frac_bits": 8},
+              "input": {"name": "input", "shape": [1, 4, 4, 1]},
+              "output": {"name": "features", "dim": 2},
+              "ops": [
+                {"op": "conv2d", "name": "c1", "input": "input", "output": "pre",
+                 "weights": "c1.w", "bias": "c1.b", "stride": 1, "padding": 1, "relu": false},
+                {"op": "relu", "name": "r1", "input": "pre", "output": "post"},
+                {"op": "gap", "name": "gap", "input": "post", "output": "features"}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let tensors = vec![
+            ("c1.w".into(), Tensor::i16(vec![3, 3, 1, 2], vec![10; 18])),
+            ("c1.b".into(), Tensor::i32(vec![2], vec![0, 0])),
+        ];
+        import(&doc, tensors).unwrap()
+    }
+
+    #[test]
+    fn relu_fuses_into_conv() {
+        let mut g = graph_with_standalone_relu();
+        let stats = simplify(&mut g);
+        assert_eq!(stats.relus_fused, 1);
+        assert_eq!(g.ops.len(), 2);
+        match &g.ops[0] {
+            Op::Conv2d { relu, output, .. } => {
+                assert!(*relu);
+                assert_eq!(output, "post");
+            }
+            other => panic!("expected conv, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dead_op_removed() {
+        let (doc, mut tensors) = tiny_conv_graph(8, 3, 4, 1);
+        // add an unused second conv by re-importing a doc with an extra op
+        let doc_txt = crate::json::to_string_pretty(&doc);
+        let doc_txt = doc_txt.replace(
+            "\"ops\": [",
+            r#""ops": [
+                {"op": "conv2d", "name": "dead", "input": "input", "output": "unused",
+                 "weights": "d.w", "bias": "d.b", "stride": 1, "padding": 1, "relu": true},"#,
+        );
+        tensors.push(("d.w".into(), Tensor::i16(vec![3, 3, 3, 2], vec![0; 54])));
+        tensors.push(("d.b".into(), Tensor::i32(vec![2], vec![0, 0])));
+        let mut g = import(&parse(&doc_txt).unwrap(), tensors).unwrap();
+        assert_eq!(g.ops.len(), 3);
+        let stats = simplify(&mut g);
+        assert_eq!(stats.dead_removed, 1);
+        assert_eq!(g.ops.len(), 2);
+        assert!(g.ops.iter().all(|o| o.name() != "dead"));
+        let _: &Value = &g.meta; // meta survives
+    }
+
+    #[test]
+    fn already_simplified_is_noop() {
+        let (doc, tensors) = tiny_conv_graph(8, 3, 4, 1);
+        let mut g = import(&doc, tensors).unwrap();
+        let stats = simplify(&mut g);
+        assert_eq!(stats, SimplifyStats::default());
+        assert_eq!(g.ops.len(), 2);
+    }
+}

@@ -1,0 +1,30 @@
+//! Minimal JSON parser/writer (offline vendor set has no `serde_json`).
+//!
+//! Supports the full JSON grammar minus exotic escapes; numbers are f64.
+//! Used for `artifacts/graph.json`, `manifest.json`, `dse_results.json`,
+//! and for emitting result tables from examples/benches.
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+pub use write::to_string_pretty;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Parse a JSON file into a [`Value`].
+pub fn from_file(path: impl AsRef<Path>) -> Result<Value> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    parse(&text).with_context(|| format!("parse {}", path.display()))
+}
+
+/// Write a [`Value`] to a file, pretty-printed.
+pub fn to_file(path: impl AsRef<Path>, v: &Value) -> Result<()> {
+    std::fs::write(path, to_string_pretty(v))?;
+    Ok(())
+}

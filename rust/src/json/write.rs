@@ -1,0 +1,126 @@
+//! JSON serialization (pretty, deterministic key order via BTreeMap).
+
+use super::value::Value;
+
+/// Serialize with 1-space indent (matches python `json.dump(indent=1)` layout
+/// closely enough for diffing).
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, 0, &mut out);
+    out.push('\n');
+    out
+}
+
+fn write_value(v: &Value, indent: usize, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(x) => write_number(*x, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                push_indent(indent + 1, out);
+                write_value(item, indent + 1, out);
+            }
+            out.push('\n');
+            push_indent(indent, out);
+            out.push(']');
+        }
+        Value::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                push_indent(indent + 1, out);
+                write_string(k, out);
+                out.push_str(": ");
+                write_value(val, indent + 1, out);
+            }
+            out.push('\n');
+            push_indent(indent, out);
+            out.push('}');
+        }
+    }
+}
+
+fn push_indent(n: usize, out: &mut String) {
+    for _ in 0..n {
+        out.push(' ');
+    }
+}
+
+fn write_number(x: f64, out: &mut String) {
+    if x.is_finite() && x == x.trunc() && x.abs() < 1e15 {
+        out.push_str(&format!("{}", x as i64));
+    } else if x.is_finite() {
+        out.push_str(&format!("{x}"));
+    } else {
+        out.push_str("null"); // JSON has no NaN/Inf
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse::parse;
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_parser() {
+        let doc = r#"{"a": [1, 2.5, "x\ny"], "b": {"c": true, "d": null}}"#;
+        let v = parse(doc).unwrap();
+        let text = to_string_pretty(&v);
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn integers_have_no_decimal_point() {
+        let mut v = Value::obj();
+        v.set("n", 42i64);
+        assert!(to_string_pretty(&v).contains("\"n\": 42"));
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        let v = Value::Num(f64::NAN);
+        assert_eq!(to_string_pretty(&v).trim(), "null");
+    }
+
+    #[test]
+    fn deterministic_key_order() {
+        let mut v = Value::obj();
+        v.set("z", 1i64).set("a", 2i64);
+        let text = to_string_pretty(&v);
+        assert!(text.find("\"a\"").unwrap() < text.find("\"z\"").unwrap());
+    }
+}

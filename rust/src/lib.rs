@@ -1,0 +1,48 @@
+//! # PEFSL — embedded few-shot learning deployment pipeline (reproduction)
+//!
+//! Rust reimplementation of the PEFSL system (Grativol et al., 2024): a
+//! pipeline that takes a trained few-shot backbone and deploys it onto a
+//! (simulated) FPGA SoC systolic-array accelerator, plus the live
+//! camera→backbone→NCM demonstrator the paper ships on a PYNQ-Z1.
+//!
+//! Layer map (see DESIGN.md):
+//! * L1/L2 live in `python/` (Pallas kernels + JAX model, AOT → `artifacts/`).
+//! * L3 is this crate: substrates (`json`, `fixed`, `graph`, `tarch`),
+//!   the Tensil-equivalent compiler (`tcompiler`) + cycle-accurate
+//!   simulator (`sim`), FPGA cost models (`resources`, `power`), the PJRT
+//!   runtime (`runtime`), and the demonstrator (`video`, `ncm`,
+//!   `coordinator`, `dse`, `cli`).
+
+pub mod cli;
+pub mod coordinator;
+pub mod dse;
+pub mod fewshot;
+pub mod fixed;
+pub mod graph;
+pub mod json;
+pub mod metrics;
+pub mod ncm;
+pub mod power;
+pub mod resources;
+pub mod runtime;
+pub mod sim;
+pub mod tarch;
+pub mod tcompiler;
+pub mod util;
+pub mod video;
+
+/// Default artifact directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$PEFSL_ARTIFACTS`, else `artifacts/`
+/// relative to the current directory or the crate root.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PEFSL_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from(ARTIFACTS_DIR);
+    if cwd.exists() {
+        return cwd;
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR)
+}

@@ -1,0 +1,9 @@
+//! `pefsl` binary — the L3 coordinator CLI.
+//!
+//! Subcommands (see `pefsl --help`): `demo`, `dse`, `compile`, `simulate`,
+//! `resources`, `eval`, `table1`. Python never runs here: the binary is
+//! self-contained once `make artifacts` has produced the AOT outputs.
+
+fn main() {
+    pefsl::cli::main_entry();
+}

@@ -1,0 +1,127 @@
+//! Runtime metrics: counters and latency histograms (p50/p95/p99) for the
+//! demonstrator loop and benches.
+
+use std::time::Duration;
+
+/// Streaming latency recorder with exact quantiles over a bounded window.
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+    capacity: usize,
+    total_count: u64,
+    sum_us: f64,
+}
+
+impl LatencyStats {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        LatencyStats { samples_us: Vec::with_capacity(capacity), capacity, total_count: 0, sum_us: 0.0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.total_count += 1;
+        self.sum_us += us;
+        if self.samples_us.len() == self.capacity {
+            // reservoir-free: overwrite round-robin (recent window)
+            let idx = (self.total_count as usize - 1) % self.capacity;
+            self.samples_us[idx] = us;
+        } else {
+            self.samples_us.push(us);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total_count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total_count == 0 { 0.0 } else { self.sum_us / self.total_count as f64 }
+    }
+
+    /// Exact quantile over the retained window; q in [0,1].
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        v[idx]
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        self.quantile_us(0.95)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.quantile_us(0.99)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs",
+            self.total_count, self.mean_us(), self.p50_us(), self.p95_us(), self.p99_us()
+        )
+    }
+}
+
+/// Monotonic event counter set for pipeline stages.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub frames_dropped: u64,
+    pub inferences: u64,
+    pub enrollments: u64,
+    pub resets: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_exact_small() {
+        let mut s = LatencyStats::new(100);
+        for us in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0] {
+            s.record_us(us);
+        }
+        assert_eq!(s.p50_us(), 6.0); // round(9*0.5)=5 → v[5]=6.0 (0-indexed)
+        assert_eq!(s.quantile_us(0.0), 1.0);
+        assert_eq!(s.quantile_us(1.0), 10.0);
+        assert!((s.mean_us() - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_overwrites_but_count_grows() {
+        let mut s = LatencyStats::new(4);
+        for i in 0..10 {
+            s.record_us(i as f64);
+        }
+        assert_eq!(s.count(), 10);
+        assert!(s.quantile_us(1.0) <= 9.0);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let s = LatencyStats::new(8);
+        assert_eq!(s.p50_us(), 0.0);
+        assert_eq!(s.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn record_duration() {
+        let mut s = LatencyStats::new(8);
+        s.record(Duration::from_millis(2));
+        assert!((s.mean_us() - 2000.0).abs() < 1.0);
+    }
+}

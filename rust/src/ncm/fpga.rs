@@ -1,0 +1,198 @@
+//! NCM on the accelerator — the paper's stated future work (§IV-B: "In the
+//! current version of the pipeline, the NCM classifier is implemented on
+//! the CPU side, in a future version we intend to move it to the FPGA").
+//!
+//! The distance computation is lowered onto the systolic array as a dense
+//! layer: for L2-normalized query `q` and centroids `C[W, D]`,
+//!
+//! ```text
+//! argmin_w ‖q − c_w‖²  =  argmin_w (‖q‖² − 2 q·c_w + ‖c_w‖²)
+//!                      =  argmin_w (−2 q·c_w + ‖c_w‖²)      (‖q‖² constant)
+//! ```
+//!
+//! so a `Dense` layer with weights `−2·Cᵀ` and bias `‖c_w‖²` computes a
+//! score whose argmin is the NCM decision; only the W-way argmin remains on
+//! the CPU.  `bench demonstrator_fps`'s ablation compares CPU-NCM vs
+//! FPGA-NCM latency on the modeled ARM/accelerator.
+
+use anyhow::{bail, Result};
+
+use crate::fixed::QFormat;
+use crate::graph::{infer_shapes, Graph, Op};
+use crate::sim::Simulator;
+use crate::tarch::Tarch;
+use crate::tcompiler::{compile, Program};
+use crate::util::tensorio::Tensor;
+
+/// Centroids compiled into an accelerator program.
+pub struct FpgaNcm {
+    graph: Graph,
+    program: Program,
+    n_ways: usize,
+    qformat: QFormat,
+}
+
+/// Build the NCM-distance graph for a fixed set of (normalized) centroids.
+pub fn build_ncm_graph(centroids: &[Vec<f32>], qformat: QFormat) -> Result<Graph> {
+    if centroids.is_empty() {
+        bail!("no centroids");
+    }
+    let dim = centroids[0].len();
+    if centroids.iter().any(|c| c.len() != dim) {
+        bail!("centroid dims differ");
+    }
+    let n_ways = centroids.len();
+
+    // weights[k, w] = −2 · C[w][k]  (Q8.8 codes; |c_i| ≤ 1 ⇒ |−2c| ≤ 2 fits)
+    let mut w_codes = vec![0i16; dim * n_ways];
+    for (w, c) in centroids.iter().enumerate() {
+        for (k, &v) in c.iter().enumerate() {
+            w_codes[k * n_ways + w] = qformat.quantize(-2.0 * v);
+        }
+    }
+    // bias[w] = ‖c_w‖² in Q8.8 codes
+    let b_codes: Vec<i32> = centroids
+        .iter()
+        .map(|c| qformat.quantize(c.iter().map(|x| x * x).sum::<f32>()) as i32)
+        .collect();
+
+    let mut weights = std::collections::HashMap::new();
+    weights.insert("ncm.w".to_string(), Tensor::i16(vec![dim, n_ways], w_codes));
+    weights.insert("ncm.b".to_string(), Tensor::i32(vec![n_ways], b_codes));
+
+    let mut g = Graph {
+        name: format!("ncm_{n_ways}w_{dim}d"),
+        qformat,
+        input_name: "query".into(),
+        // dense expects [N, K]; model the query as a 1×1 image is not
+        // needed — graph input is 4-D NHWC for convs, but dense reads
+        // [N, K]: use a [1, 1, 1, dim] input + gap? Simpler: input is
+        // [1, dim] directly; shape inference accepts dense on 2-D input.
+        input_shape: [1, 1, 1, dim],
+        output_name: "scores".into(),
+        feature_dim: n_ways,
+        ops: vec![
+            Op::Gap { name: "flatten".into(), input: "query".into(), output: "qvec".into() },
+            Op::Dense {
+                name: "ncm".into(),
+                input: "qvec".into(),
+                output: "scores".into(),
+                weights: "ncm.w".into(),
+                bias: "ncm.b".into(),
+                relu: false,
+            },
+        ],
+        weights,
+        shapes: Default::default(),
+        meta: crate::json::Value::Null,
+    };
+    infer_shapes(&mut g)?;
+    Ok(g)
+}
+
+impl FpgaNcm {
+    /// Compile centroids for a target architecture.
+    pub fn new(centroids: &[Vec<f32>], tarch: &Tarch) -> Result<FpgaNcm> {
+        let graph = build_ncm_graph(centroids, tarch.qformat)?;
+        let program = compile(&graph, tarch)?;
+        Ok(FpgaNcm { n_ways: centroids.len(), qformat: tarch.qformat, graph, program })
+    }
+
+    pub fn n_ways(&self) -> usize {
+        self.n_ways
+    }
+
+    /// Modeled accelerator cycles per query.
+    pub fn cycles_per_query(&self) -> u64 {
+        self.program.est_total_cycles
+    }
+
+    /// Modeled accelerator latency per query (ms).
+    pub fn latency_ms(&self) -> f64 {
+        self.program.est_latency_ms()
+    }
+
+    /// Classify one normalized query: (way, score). Lower score = nearer.
+    pub fn classify(&self, query: &[f32]) -> Result<(usize, f32)> {
+        let mut sim = Simulator::new(&self.program, &self.graph);
+        let r = sim.run_f32(query)?;
+        let (best, score) = r
+            .output_f32
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .ok_or_else(|| anyhow::anyhow!("empty scores"))?;
+        let _ = self.qformat;
+        Ok((best, *score))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ncm::NcmClassifier;
+    use crate::util::Prng;
+
+    fn normalized(rng: &mut Prng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+        v.iter_mut().for_each(|x| *x /= n);
+        v
+    }
+
+    #[test]
+    fn matches_cpu_ncm_decision() {
+        let mut rng = Prng::new(31);
+        let dim = 80;
+        let cents: Vec<Vec<f32>> = (0..5).map(|_| normalized(&mut rng, dim)).collect();
+        let tarch = Tarch::z7020_12x12();
+        let fpga = FpgaNcm::new(&cents, &tarch).unwrap();
+
+        // CPU reference (no centering, queries pre-normalized)
+        let mut cpu = NcmClassifier::new(dim);
+        for (i, c) in cents.iter().enumerate() {
+            let s = cpu.add_class(format!("c{i}"));
+            cpu.enroll(s, c).unwrap();
+        }
+
+        let mut agree = 0;
+        let n = 40;
+        for _ in 0..n {
+            let q = normalized(&mut rng, dim);
+            let (fw, _) = fpga.classify(&q).unwrap();
+            let cw = cpu.classify(&q).unwrap().class_idx;
+            if fw == cw {
+                agree += 1;
+            }
+        }
+        // Q8.8 rounding may flip near-ties; demand ≥ 90% agreement.
+        assert!(agree * 10 >= n * 9, "agreement {agree}/{n}");
+    }
+
+    #[test]
+    fn exact_centroid_query_wins() {
+        let mut rng = Prng::new(32);
+        let cents: Vec<Vec<f32>> = (0..4).map(|_| normalized(&mut rng, 16)).collect();
+        let fpga = FpgaNcm::new(&cents, &Tarch::z7020_8x8()).unwrap();
+        for (w, c) in cents.iter().enumerate() {
+            assert_eq!(fpga.classify(c).unwrap().0, w, "centroid {w}");
+        }
+    }
+
+    #[test]
+    fn latency_modeled_and_small() {
+        let mut rng = Prng::new(33);
+        let cents: Vec<Vec<f32>> = (0..5).map(|_| normalized(&mut rng, 80)).collect();
+        let fpga = FpgaNcm::new(&cents, &Tarch::z7020_12x12()).unwrap();
+        assert!(fpga.cycles_per_query() > 0);
+        // NCM is tiny next to the 1.9M-cycle backbone
+        assert!(fpga.cycles_per_query() < 10_000, "{}", fpga.cycles_per_query());
+    }
+
+    #[test]
+    fn rejects_empty_and_ragged() {
+        assert!(build_ncm_graph(&[], QFormat::default()).is_err());
+        let ragged = vec![vec![0.0; 4], vec![0.0; 5]];
+        assert!(build_ncm_graph(&ragged, QFormat::default()).is_err());
+    }
+}

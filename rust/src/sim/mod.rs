@@ -1,0 +1,648 @@
+//! Cycle-accurate functional simulator of the systolic-array accelerator.
+//!
+//! Executes a [`Program`] instruction-by-instruction over real Q8.8 data:
+//! the same instruction stream the cost model prices is interpreted here,
+//! so latency and numerics come from one artifact — the PE array does
+//! i16×i16→i32 MACs into 64-bit accumulators, SIMD writeback applies
+//! bias + ReLU + round-half-away requantization (`QFormat::narrow_acc`),
+//! exactly what the Tensil RTL does on the FPGA.
+//!
+//! This is the bit-exact reference for the deployed bitstream; Python's
+//! `forward_folded_quant` approximates it in float and the parity test in
+//! `rust/tests/artifact_parity.rs` bounds the difference.
+//!
+//! §Perf notes: per-layer weight/bias slices are resolved once at
+//! simulator construction (not per element); the MatMul inner loop swaps
+//! activation buffers out of the tensor map to avoid per-instruction
+//! clones, pre-decomposes the k-range into (ky, kx, ci) per tile, and
+//! accumulates over the weight-tile row slice — see EXPERIMENTS.md §Perf.
+
+pub mod trace;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fixed::QFormat;
+use crate::graph::Graph;
+use crate::tcompiler::{instr_cycles, ConvGeom, CostModel, Instr, LayerKind, Program, TensorSlot};
+
+/// Result of simulating one inference.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Output tensor (feature vector) as Q8.8 codes.
+    pub output_codes: Vec<i16>,
+    /// Output dequantized to f32.
+    pub output_f32: Vec<f32>,
+    /// Total dynamic cycles.
+    pub cycles: u64,
+    /// Per-layer dynamic cycles (index-aligned with `Program::layers`).
+    pub layer_cycles: Vec<u64>,
+    /// Wall latency at the tarch clock, in milliseconds.
+    pub latency_ms: f64,
+    /// Instructions executed.
+    pub instr_count: u64,
+}
+
+impl SimResult {
+    /// MAC utilization achieved: useful MACs / (cycles × PE count).
+    pub fn utilization(&self, program: &Program) -> f64 {
+        let peak = self.cycles as f64
+            * (program.tarch.array_size * program.tarch.array_size) as f64;
+        if peak == 0.0 { 0.0 } else { program.total_macs() as f64 / peak }
+    }
+}
+
+/// Per-layer data resolved once at construction: weight/bias slices and
+/// the conv geometry, so the instruction loop never touches hash maps.
+struct LayerData<'a> {
+    weights: Option<&'a [i16]>,
+    bias: Option<&'a [i32]>,
+    geom: Option<ConvGeom>,
+    kind: LayerKind,
+    inputs: Vec<u32>,
+    output: u32,
+    /// cout of the weight matrix (row stride for conv HWIO indexing).
+    cout: usize,
+}
+
+/// Accelerator state: activation buffers + accumulator + loaded weight tile.
+pub struct Simulator<'a> {
+    program: &'a Program,
+    cost: CostModel,
+    qformat: QFormat,
+    layers: Vec<LayerData<'a>>,
+    /// Activation buffers by tensor id (Q8.8 codes), NHWC row-major.
+    acts: HashMap<u32, Vec<i16>>,
+    /// Accumulator memory: acc_depth rows × array_size columns, i64.
+    acc: Vec<i64>,
+    /// Currently loaded weight tile (kt×nt), kt-major.
+    wtile: Vec<i16>,
+    wtile_dims: (usize, usize),
+    /// Pre-computed instruction costs (same stream every run).
+    instr_costs: Vec<u64>,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(program: &'a Program, graph: &'a Graph) -> Self {
+        let acc_len = program.tarch.accumulator_depth * program.tarch.array_size;
+        // Resolve weight/bias slices once.
+        let mut layers = Vec::with_capacity(program.layers.len());
+        for meta in &program.layers {
+            let mut weights = None;
+            let mut bias = None;
+            let mut cout = 0;
+            if matches!(meta.kind, LayerKind::Conv | LayerKind::Dense) {
+                for op in &graph.ops {
+                    if op.name() == meta.name {
+                        if let crate::graph::Op::Conv2d { weights: w, bias: b, .. }
+                        | crate::graph::Op::Dense { weights: w, bias: b, .. } = op
+                        {
+                            let wt = &graph.weights[w];
+                            cout = *wt.shape.last().unwrap();
+                            weights = wt.as_i16().ok();
+                            bias = graph.weights[b].as_i32().ok();
+                        }
+                        break;
+                    }
+                }
+            }
+            layers.push(LayerData {
+                weights,
+                bias,
+                geom: meta.geom.clone(),
+                kind: meta.kind,
+                inputs: meta.inputs.clone(),
+                output: meta.output,
+                cout,
+            });
+        }
+        let cost = CostModel::new(program.tarch.clone());
+        let instr_costs = program
+            .instrs
+            .iter()
+            .map(|i| instr_cycles(&cost, i, &program.layers))
+            .collect();
+        Simulator {
+            program,
+            cost,
+            qformat: program.qformat,
+            layers,
+            acts: HashMap::new(),
+            acc: vec![0; acc_len],
+            wtile: Vec::new(),
+            wtile_dims: (0, 0),
+            instr_costs,
+        }
+    }
+
+    /// Run one inference on an f32 NHWC input image (quantized internally).
+    pub fn run_f32(&mut self, input: &[f32]) -> Result<SimResult> {
+        let q = self.qformat;
+        let codes: Vec<i16> = input.iter().map(|&x| q.quantize(x)).collect();
+        self.run_codes(&codes)
+    }
+
+    /// Run one inference on pre-quantized input codes.
+    pub fn run_codes(&mut self, input: &[i16]) -> Result<SimResult> {
+        let expected: usize = match &self.program.tensors[self.program.input_tensor as usize] {
+            TensorSlot::Activation { shape, .. } => shape.iter().product(),
+            _ => bail!("program input is not an activation"),
+        };
+        if input.len() != expected {
+            bail!("input has {} elements, program expects {}", input.len(), expected);
+        }
+        self.acts.clear();
+        self.acts.insert(self.program.input_tensor, input.to_vec());
+
+        // Pre-materialize all activation buffers.
+        for (i, slot) in self.program.tensors.iter().enumerate() {
+            if let TensorSlot::Activation { shape, .. } = slot {
+                let id = i as u32;
+                if id != self.program.input_tensor {
+                    self.acts.insert(id, vec![0i16; shape.iter().product()]);
+                }
+            }
+        }
+
+        let mut cycles = 0u64;
+        let mut layer_cycles = vec![0u64; self.program.layers.len()];
+        let mut instr_count = 0u64;
+
+        for (idx, instr) in self.program.instrs.iter().enumerate() {
+            let c = self.instr_costs[idx];
+            cycles += c;
+            layer_cycles[instr.layer() as usize] += c;
+            instr_count += 1;
+            self.execute(instr).with_context(|| format!("executing {instr:?}"))?;
+        }
+
+        let out = self
+            .acts
+            .get(&self.program.output_tensor)
+            .context("output tensor never written")?
+            .clone();
+        let q = self.qformat;
+        Ok(SimResult {
+            output_f32: out.iter().map(|&c| q.dequantize(c)).collect(),
+            output_codes: out,
+            cycles,
+            layer_cycles,
+            latency_ms: self.program.tarch.cycles_to_ms(cycles),
+            instr_count,
+        })
+    }
+
+    /// Temporarily remove an activation buffer (borrow-splitting helper).
+    fn take_act(&mut self, id: u32) -> Result<Vec<i16>> {
+        self.acts
+            .remove(&id)
+            .ok_or_else(|| anyhow::anyhow!("activation tensor {id} missing"))
+    }
+
+    fn execute(&mut self, instr: &Instr) -> Result<()> {
+        let r = self.program.tarch.array_size;
+        match instr {
+            Instr::LoadWeights { layer, k0, kt, n0, nt } => {
+                let ld = &self.layers[*layer as usize];
+                let w = ld.weights.context("layer has no weights")?;
+                self.wtile.clear();
+                self.wtile.reserve(kt * nt);
+                match ld.kind {
+                    LayerKind::Conv => {
+                        let g = ld.geom.as_ref().unwrap();
+                        // HWIO: element [ky, kx, ci, n]; k = ((ky·kw)+kx)·cin+ci
+                        for dk in 0..*kt {
+                            let k = k0 + dk;
+                            let ci = k % g.cin;
+                            let kx = (k / g.cin) % g.kw;
+                            let ky = k / (g.cin * g.kw);
+                            let base = ((ky * g.kw + kx) * g.cin + ci) * ld.cout + n0;
+                            self.wtile.extend_from_slice(&w[base..base + nt]);
+                        }
+                    }
+                    LayerKind::Dense => {
+                        for dk in 0..*kt {
+                            let base = (k0 + dk) * ld.cout + n0;
+                            self.wtile.extend_from_slice(&w[base..base + nt]);
+                        }
+                    }
+                    other => bail!("LoadWeights on non-matmul layer {other:?}"),
+                }
+                self.wtile_dims = (*kt, *nt);
+                Ok(())
+            }
+            Instr::MatMul { layer, m0, rows, k0, kt, n0: _, nt, accumulate } => {
+                if self.wtile_dims != (*kt, *nt) {
+                    bail!("matmul tile {kt}×{nt} but loaded {:?}", self.wtile_dims);
+                }
+                let ld = &self.layers[*layer as usize];
+                let input_id = ld.inputs[0];
+                let kind = ld.kind;
+                let geom = ld.geom.clone();
+                let input = self.take_act(input_id)?;
+                let acc = &mut self.acc;
+                let wtile = &self.wtile;
+
+                match kind {
+                    LayerKind::Dense => {
+                        // single logical row: m indexes nothing spatial
+                        for row in 0..*rows {
+                            let acc_base = row * r;
+                            if !accumulate {
+                                acc[acc_base..acc_base + nt].fill(0);
+                            }
+                            for dk in 0..*kt {
+                                let x = input[k0 + dk] as i64;
+                                if x == 0 {
+                                    continue;
+                                }
+                                let wrow = &wtile[dk * nt..dk * nt + nt];
+                                for dn in 0..*nt {
+                                    acc[acc_base + dn] += x * wrow[dn] as i64;
+                                }
+                            }
+                        }
+                    }
+                    LayerKind::Conv => {
+                        let g = geom.as_ref().unwrap();
+                        // Pre-decompose the k-range into (ky, kx, ci).
+                        let decomp: Vec<(usize, usize, usize)> = (0..*kt)
+                            .map(|dk| {
+                                let k = k0 + dk;
+                                (k / (g.cin * g.kw), (k / g.cin) % g.kw, k % g.cin)
+                            })
+                            .collect();
+                        for row in 0..*rows {
+                            let m = m0 + row;
+                            let oy = m / g.out_w;
+                            let ox = m % g.out_w;
+                            let acc_base = row * r;
+                            if !accumulate {
+                                acc[acc_base..acc_base + nt].fill(0);
+                            }
+                            let iy0 = (oy * g.stride) as isize - g.padding as isize;
+                            let ix0 = (ox * g.stride) as isize - g.padding as isize;
+                            for (dk, &(ky, kx, ci)) in decomp.iter().enumerate() {
+                                let iy = iy0 + ky as isize;
+                                let ix = ix0 + kx as isize;
+                                if iy < 0 || ix < 0 || iy >= g.in_h as isize || ix >= g.in_w as isize {
+                                    continue;
+                                }
+                                let x = input[(iy as usize * g.in_w + ix as usize) * g.cin + ci] as i64;
+                                if x == 0 {
+                                    continue;
+                                }
+                                let wrow = &wtile[dk * nt..dk * nt + nt];
+                                for dn in 0..*nt {
+                                    acc[acc_base + dn] += x * wrow[dn] as i64;
+                                }
+                            }
+                        }
+                    }
+                    other => bail!("MatMul on non-matmul layer {other:?}"),
+                }
+                self.acts.insert(input_id, input);
+                Ok(())
+            }
+            Instr::Writeback { layer, m0, rows, n0, nt, relu } => {
+                let q = self.qformat;
+                let ld = &self.layers[*layer as usize];
+                let bias = ld.bias.context("layer has no bias")?;
+                let n_total = ld.geom.as_ref().map(|g| g.cout).unwrap_or(*nt);
+                let out_id = ld.output;
+                let out = self
+                    .acts
+                    .get_mut(&out_id)
+                    .ok_or_else(|| anyhow::anyhow!("output tensor {out_id} missing"))?;
+                for row in 0..*rows {
+                    let m = m0 + row;
+                    let acc_base = row * r;
+                    for dn in 0..*nt {
+                        let n = n0 + dn;
+                        // bias codes are Q8.8; accumulator is Q16.16
+                        let a = self.acc[acc_base + dn] + ((bias[n] as i64) << q.frac_bits);
+                        let mut v = q.narrow_acc(a);
+                        if *relu && v < 0 {
+                            v = 0;
+                        }
+                        out[m * n_total + n] = v;
+                    }
+                }
+                Ok(())
+            }
+            Instr::AddAct { layer, len, relu } => {
+                let ld = &self.layers[*layer as usize];
+                let (a_id, b_id, out_id) = (ld.inputs[0], ld.inputs[1], ld.output);
+                let a = self.take_act(a_id)?;
+                let b = self.take_act(b_id)?;
+                if a.len() != *len || b.len() != *len {
+                    bail!("addact len mismatch: {} vs {} vs {len}", a.len(), b.len());
+                }
+                {
+                    let out = self
+                        .acts
+                        .get_mut(&out_id)
+                        .ok_or_else(|| anyhow::anyhow!("output tensor {out_id} missing"))?;
+                    for i in 0..*len {
+                        let s = (a[i] as i32 + b[i] as i32)
+                            .clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+                        out[i] = if *relu && s < 0 { 0 } else { s };
+                    }
+                }
+                self.acts.insert(a_id, a);
+                self.acts.insert(b_id, b);
+                Ok(())
+            }
+            Instr::MaxPool { layer, size } => {
+                let ld = &self.layers[*layer as usize];
+                let g = ld.geom.clone().unwrap();
+                let in_id = ld.inputs[0];
+                let out_id = ld.output;
+                let input = self.take_act(in_id)?;
+                {
+                    let out = self.acts.get_mut(&out_id).unwrap();
+                    for oy in 0..g.out_h {
+                        for ox in 0..g.out_w {
+                            for c in 0..g.cin {
+                                let mut mx = i16::MIN;
+                                for dy in 0..*size {
+                                    for dx in 0..*size {
+                                        let iy = oy * size + dy;
+                                        let ix = ox * size + dx;
+                                        mx = mx.max(input[(iy * g.in_w + ix) * g.cin + c]);
+                                    }
+                                }
+                                out[(oy * g.out_w + ox) * g.cin + c] = mx;
+                            }
+                        }
+                    }
+                }
+                self.acts.insert(in_id, input);
+                Ok(())
+            }
+            Instr::Gap { layer } => {
+                let ld = &self.layers[*layer as usize];
+                let g = ld.geom.clone().unwrap();
+                let in_id = ld.inputs[0];
+                let out_id = ld.output;
+                let input = self.take_act(in_id)?;
+                {
+                    let out = self.acts.get_mut(&out_id).unwrap();
+                    let area = (g.in_h * g.in_w) as i64;
+                    let half = area / 2;
+                    for c in 0..g.cin {
+                        let mut sum = 0i64;
+                        for p in 0..(g.in_h * g.in_w) {
+                            sum += input[p * g.cin + c] as i64;
+                        }
+                        // round-half-away division (SIMD divider)
+                        let v = if sum >= 0 { (sum + half) / area } else { (sum - half) / area };
+                        out[c] = v.clamp(i16::MIN as i64, i16::MAX as i64) as i16;
+                    }
+                }
+                self.acts.insert(in_id, input);
+                Ok(())
+            }
+        }
+    }
+
+    /// Cost model in use (for external reporting).
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+}
+
+/// Convenience: compile + simulate in one call.
+pub fn simulate_f32(graph: &Graph, tarch: &crate::tarch::Tarch, input: &[f32]) -> Result<SimResult> {
+    let program = crate::tcompiler::compile(graph, tarch)?;
+    Simulator::new(&program, graph).run_f32(input)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::import;
+    use crate::json::parse;
+    use crate::tarch::Tarch;
+    use crate::util::tensorio::Tensor;
+    use crate::util::Prng;
+
+    /// Reference f32 conv (NHWC/HWIO) for cross-checking the simulator.
+    fn conv_ref(
+        x: &[f32], h: usize, w: usize, cin: usize,
+        wt: &[f32], kh: usize, kw: usize, cout: usize,
+        stride: usize, pad: usize, bias: &[f32], relu: bool,
+    ) -> Vec<f32> {
+        let oh = (h + 2 * pad - kh) / stride + 1;
+        let ow = (w + 2 * pad - kw) / stride + 1;
+        let mut out = vec![0f32; oh * ow * cout];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for n in 0..cout {
+                    let mut acc = bias[n];
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                continue;
+                            }
+                            for ci in 0..cin {
+                                acc += x[(iy as usize * w + ix as usize) * cin + ci]
+                                    * wt[((ky * kw + kx) * cin + ci) * cout + n];
+                            }
+                        }
+                    }
+                    out[(oy * ow + ox) * cout + n] = if relu { acc.max(0.0) } else { acc };
+                }
+            }
+        }
+        out
+    }
+
+    fn build_graph(
+        h: usize, cin: usize, cout: usize, stride: usize, relu: bool,
+        w_codes: Vec<i16>, b_codes: Vec<i32>, with_gap: bool,
+    ) -> Graph {
+        let ops = if with_gap {
+            format!(
+                r#"[
+                  {{"op": "conv2d", "name": "c1", "input": "input", "output": "a1",
+                    "weights": "c1.w", "bias": "c1.b", "stride": {stride},
+                    "padding": 1, "relu": {relu}}},
+                  {{"op": "gap", "name": "gap", "input": "a1", "output": "features"}}
+                ]"#
+            )
+        } else {
+            format!(
+                r#"[
+                  {{"op": "conv2d", "name": "c1", "input": "input", "output": "features",
+                    "weights": "c1.w", "bias": "c1.b", "stride": {stride},
+                    "padding": 1, "relu": {relu}}}
+                ]"#
+            )
+        };
+        let doc = parse(&format!(
+            r#"{{
+              "name": "t", "format": {{"total_bits": 16, "frac_bits": 8}},
+              "input": {{"name": "input", "shape": [1, {h}, {h}, {cin}]}},
+              "output": {{"name": "features", "dim": {cout}}},
+              "ops": {ops}
+            }}"#
+        ))
+        .unwrap();
+        import(
+            &doc,
+            vec![
+                ("c1.w".into(), Tensor::i16(vec![3, 3, cin, cout], w_codes)),
+                ("c1.b".into(), Tensor::i32(vec![cout], b_codes)),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn conv_matches_float_reference() {
+        let mut rng = Prng::new(42);
+        let (h, cin, cout) = (8, 3, 5);
+        let q = QFormat::default();
+        let w_f: Vec<f32> = (0..9 * cin * cout).map(|_| rng.normal() * 0.2).collect();
+        let b_f: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let x_f: Vec<f32> = (0..h * h * cin).map(|_| rng.f32()).collect();
+
+        let w_codes: Vec<i16> = w_f.iter().map(|&v| q.quantize(v)).collect();
+        let b_codes: Vec<i32> = b_f.iter().map(|&v| q.quantize(v) as i32).collect();
+        let g = build_graph(h, cin, cout, 1, false, w_codes.clone(), b_codes.clone(), false);
+
+        let r = simulate_f32(&g, &Tarch::z7020_8x8(), &x_f).unwrap();
+
+        // float reference over the *quantized* weights/inputs
+        let wq: Vec<f32> = w_codes.iter().map(|&c| q.dequantize(c)).collect();
+        let bq: Vec<f32> = b_codes.iter().map(|&c| c as f32 / 256.0).collect();
+        let xq: Vec<f32> = x_f.iter().map(|&v| q.dequantize(q.quantize(v))).collect();
+        let want = conv_ref(&xq, h, h, cin, &wq, 3, 3, cout, 1, 1, &bq, false);
+
+        assert_eq!(r.output_f32.len(), want.len());
+        for (got, want) in r.output_f32.iter().zip(&want) {
+            assert!((got - want).abs() <= 1.0 / 256.0 + 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn strided_conv_matches_reference() {
+        let mut rng = Prng::new(43);
+        let (h, cin, cout) = (9, 2, 3); // odd size exercises edge handling
+        let q = QFormat::default();
+        let w_codes: Vec<i16> = (0..9 * cin * cout).map(|_| q.quantize(rng.normal() * 0.3)).collect();
+        let b_codes: Vec<i32> = (0..cout).map(|_| q.quantize(rng.normal() * 0.1) as i32).collect();
+        let x_f: Vec<f32> = (0..h * h * cin).map(|_| rng.f32()).collect();
+        let g = build_graph(h, cin, cout, 2, true, w_codes.clone(), b_codes.clone(), false);
+        let r = simulate_f32(&g, &Tarch::z7020_12x12(), &x_f).unwrap();
+
+        let wq: Vec<f32> = w_codes.iter().map(|&c| q.dequantize(c)).collect();
+        let bq: Vec<f32> = b_codes.iter().map(|&c| c as f32 / 256.0).collect();
+        let xq: Vec<f32> = x_f.iter().map(|&v| q.dequantize(q.quantize(v))).collect();
+        let want = conv_ref(&xq, h, h, cin, &wq, 3, 3, cout, 2, 1, &bq, true);
+        for (got, want) in r.output_f32.iter().zip(&want) {
+            assert!((got - want).abs() <= 1.0 / 256.0 + 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn random_conv_chains_match_reference_property() {
+        // Property: for random shapes/strides, the simulator's conv output
+        // equals the f32 reference over quantized operands within 1 LSB.
+        crate::util::proptest::check(77, 12, |rng| {
+            let h = rng.range(5, 14);
+            let cin = rng.range(1, 5);
+            let cout = rng.range(1, 7);
+            let stride = 1 + rng.range(0, 2);
+            let q = QFormat::default();
+            let w_codes: Vec<i16> =
+                (0..9 * cin * cout).map(|_| q.quantize(rng.normal() * 0.3)).collect();
+            let b_codes: Vec<i32> =
+                (0..cout).map(|_| q.quantize(rng.normal() * 0.2) as i32).collect();
+            let x: Vec<f32> = (0..h * h * cin).map(|_| rng.f32()).collect();
+            let g = build_graph(h, cin, cout, stride, false, w_codes.clone(), b_codes.clone(), false);
+            let r = simulate_f32(&g, &Tarch::z7020_8x8(), &x).unwrap();
+            let wq: Vec<f32> = w_codes.iter().map(|&c| q.dequantize(c)).collect();
+            let bq: Vec<f32> = b_codes.iter().map(|&c| c as f32 / 256.0).collect();
+            let xq: Vec<f32> = x.iter().map(|&v| q.dequantize(q.quantize(v))).collect();
+            let want = conv_ref(&xq, h, h, cin, &wq, 3, 3, cout, stride, 1, &bq, false);
+            for (got, want) in r.output_f32.iter().zip(&want) {
+                assert!((got - want).abs() <= 1.0 / 256.0 + 1e-6,
+                        "h={h} cin={cin} cout={cout} s={stride}: {got} vs {want}");
+            }
+        });
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        let q = QFormat::default();
+        // all-negative weights force negative pre-activation
+        let w_codes = vec![q.quantize(-1.0); 9];
+        let b_codes = vec![0i32];
+        let g = build_graph(4, 1, 1, 1, true, w_codes, b_codes, false);
+        let x = vec![1.0f32; 16];
+        let r = simulate_f32(&g, &Tarch::z7020_8x8(), &x).unwrap();
+        assert!(r.output_f32.iter().all(|&v| v >= 0.0));
+        assert!(r.output_codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn gap_averages() {
+        let q = QFormat::default();
+        // identity-ish conv: center tap = 1, others 0 → conv(x)=x
+        let mut w_codes = vec![0i16; 9];
+        w_codes[4] = q.quantize(1.0); // center of 3×3, cin=cout=1
+        let g = build_graph(4, 1, 1, 1, false, w_codes, vec![0i32], true);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
+        let r = simulate_f32(&g, &Tarch::z7020_8x8(), &x).unwrap();
+        let mean = x.iter().sum::<f32>() / 16.0;
+        assert_eq!(r.output_f32.len(), 1);
+        assert!((r.output_f32[0] - mean).abs() < 1.0 / 256.0 + 1e-6);
+    }
+
+    #[test]
+    fn cycles_positive_and_match_estimate() {
+        let mut rng = Prng::new(44);
+        let q = QFormat::default();
+        let w: Vec<i16> = (0..9 * 3 * 4).map(|_| q.quantize(rng.normal())).collect();
+        let g = build_graph(16, 3, 4, 1, true, w, vec![0; 4], true);
+        let t = Tarch::z7020_8x8();
+        let program = crate::tcompiler::compile(&g, &t).unwrap();
+        let mut sim = Simulator::new(&program, &g);
+        let x: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.f32()).collect();
+        let r = sim.run_codes(&q.quantize_slice(&x)).unwrap();
+        assert!(r.cycles > 0);
+        // dynamic cycles == static estimate (same cost model, same stream)
+        assert_eq!(r.cycles, program.est_total_cycles);
+        assert_eq!(r.layer_cycles.len(), 2);
+        assert!(r.layer_cycles.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn input_size_validated() {
+        let g = build_graph(4, 1, 1, 1, false, vec![0; 9], vec![0], false);
+        let program = crate::tcompiler::compile(&g, &Tarch::z7020_8x8()).unwrap();
+        let mut sim = Simulator::new(&program, &g);
+        assert!(sim.run_codes(&[0i16; 3]).is_err());
+    }
+
+    #[test]
+    fn deterministic_and_reusable() {
+        let mut rng = Prng::new(45);
+        let q = QFormat::default();
+        let w: Vec<i16> = (0..9 * 2 * 2).map(|_| q.quantize(rng.normal())).collect();
+        let g = build_graph(6, 2, 2, 1, true, w, vec![10, -10], false);
+        let x: Vec<f32> = (0..6 * 6 * 2).map(|_| rng.f32()).collect();
+        let program = crate::tcompiler::compile(&g, &Tarch::z7020_8x8()).unwrap();
+        // one simulator reused across runs must give identical results
+        let mut sim = Simulator::new(&program, &g);
+        let a = sim.run_f32(&x).unwrap();
+        let b = sim.run_f32(&x).unwrap();
+        assert_eq!(a.output_codes, b.output_codes);
+        assert_eq!(a.cycles, b.cycles);
+    }
+}

@@ -1,0 +1,163 @@
+//! Instruction-timeline tracing: export a compiled program's schedule as
+//! Chrome-trace JSON (`chrome://tracing` / Perfetto) — per-layer lanes,
+//! one slice per instruction, cycle-accurate begin/duration.
+//!
+//! `pefsl compile --trace out.json` writes one; the DSE workflow uses it
+//! to see *where* a configuration's cycles go (weight reloads vs streaming
+//! vs writeback), which is how the cost-model calibration in
+//! EXPERIMENTS.md §Calibration was validated.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::json::Value;
+use crate::tcompiler::{instr_cycles, CostModel, Instr, Program};
+
+/// One traced slice.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Lane = layer index (rendered as a "thread").
+    pub layer: u32,
+    pub start_cycle: u64,
+    pub dur_cycles: u64,
+}
+
+/// Build the serialized instruction timeline of a program.
+pub fn trace_program(program: &Program) -> Vec<TraceEvent> {
+    let model = CostModel::new(program.tarch.clone());
+    let mut t = 0u64;
+    let mut events = Vec::with_capacity(program.instrs.len());
+    for instr in &program.instrs {
+        let dur = instr_cycles(&model, instr, &program.layers);
+        events.push(TraceEvent {
+            name: instr_label(instr),
+            layer: instr.layer(),
+            start_cycle: t,
+            dur_cycles: dur,
+        });
+        t += dur;
+    }
+    events
+}
+
+fn instr_label(i: &Instr) -> String {
+    match i {
+        Instr::LoadWeights { kt, nt, .. } => format!("LoadWeights {kt}x{nt}"),
+        Instr::MatMul { rows, kt, nt, .. } => format!("MatMul {rows}r {kt}x{nt}"),
+        Instr::Writeback { rows, nt, .. } => format!("Writeback {rows}r x{nt}"),
+        Instr::AddAct { len, .. } => format!("AddAct {len}"),
+        Instr::MaxPool { size, .. } => format!("MaxPool {size}x{size}"),
+        Instr::Gap { .. } => "Gap".to_string(),
+    }
+}
+
+/// Aggregate cycles per instruction kind (the calibration view).
+pub fn cycles_by_kind(program: &Program) -> Vec<(String, u64, usize)> {
+    let model = CostModel::new(program.tarch.clone());
+    let mut agg: std::collections::BTreeMap<&'static str, (u64, usize)> = Default::default();
+    for instr in &program.instrs {
+        let kind = match instr {
+            Instr::LoadWeights { .. } => "LoadWeights",
+            Instr::MatMul { .. } => "MatMul",
+            Instr::Writeback { .. } => "Writeback",
+            Instr::AddAct { .. } => "AddAct",
+            Instr::MaxPool { .. } => "MaxPool",
+            Instr::Gap { .. } => "Gap",
+        };
+        let c = instr_cycles(&model, instr, &program.layers);
+        let e = agg.entry(kind).or_default();
+        e.0 += c;
+        e.1 += 1;
+    }
+    agg.into_iter().map(|(k, (c, n))| (k.to_string(), c, n)).collect()
+}
+
+/// Write Chrome-trace JSON. Timestamps are microseconds at the tarch clock
+/// (so the trace shows real modeled time).
+pub fn write_chrome_trace(program: &Program, mut w: impl Write) -> Result<()> {
+    let events = trace_program(program);
+    let us_per_cycle = 1.0 / program.tarch.clock_mhz; // µs per cycle
+    let mut arr = Vec::with_capacity(events.len() + program.layers.len());
+
+    // lane metadata: layer names
+    for (i, layer) in program.layers.iter().enumerate() {
+        let mut args = Value::obj();
+        args.set("name", format!("{} ({:?})", layer.name, layer.kind));
+        let mut meta = Value::obj();
+        meta.set("ph", "M")
+            .set("pid", 1usize)
+            .set("tid", i)
+            .set("name", "thread_name")
+            .set("args", args);
+        arr.push(meta);
+    }
+
+    for e in &events {
+        let mut ev = Value::obj();
+        ev.set("ph", "X")
+            .set("pid", 1usize)
+            .set("tid", e.layer as usize)
+            .set("name", e.name.as_str())
+            .set("ts", e.start_cycle as f64 * us_per_cycle)
+            .set("dur", (e.dur_cycles as f64 * us_per_cycle).max(0.001));
+        arr.push(ev);
+    }
+    w.write_all(crate::json::to_string_pretty(&Value::Arr(arr)).as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{build_backbone_graph, BackboneSpec};
+    use crate::tarch::Tarch;
+    use crate::tcompiler::compile;
+
+    fn tiny_program() -> Program {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 1).unwrap();
+        compile(&g, &Tarch::z7020_8x8()).unwrap()
+    }
+
+    #[test]
+    fn timeline_is_contiguous_and_total_matches() {
+        let p = tiny_program();
+        let events = trace_program(&p);
+        assert_eq!(events.len(), p.instrs.len());
+        let mut t = 0;
+        for e in &events {
+            assert_eq!(e.start_cycle, t, "gap before {:?}", e.name);
+            t += e.dur_cycles;
+        }
+        assert_eq!(t, p.est_total_cycles);
+    }
+
+    #[test]
+    fn kind_aggregation_covers_all_cycles() {
+        let p = tiny_program();
+        let agg = cycles_by_kind(&p);
+        let total: u64 = agg.iter().map(|(_, c, _)| c).sum();
+        assert_eq!(total, p.est_total_cycles);
+        assert!(agg.iter().any(|(k, _, _)| k == "MatMul"));
+        assert!(agg.iter().any(|(k, _, _)| k == "LoadWeights"));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let p = tiny_program();
+        let mut buf = Vec::new();
+        write_chrome_trace(&p, &mut buf).unwrap();
+        let doc = crate::json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        let arr = doc.as_arr().unwrap();
+        assert!(arr.len() > p.layers.len());
+        // every non-meta event has ts/dur
+        let slices: Vec<_> = arr
+            .iter()
+            .filter(|e| e.get("ph").and_then(crate::json::Value::as_str) == Some("X"))
+            .collect();
+        assert_eq!(slices.len(), p.instrs.len());
+        assert!(slices.iter().all(|e| e.get("ts").is_some() && e.get("dur").is_some()));
+    }
+}

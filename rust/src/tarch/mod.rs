@@ -1,0 +1,213 @@
+//! Accelerator architecture description — the `.tarch` file of the Tensil
+//! flow (paper §IV-A): systolic array size, data format, on-chip memory
+//! depths, clock.  Consumed by `tcompiler` (tiling + cycle model), `sim`
+//! (functional execution), `resources` (LUT/BRAM/FF/DSP) and `power`.
+
+use anyhow::{bail, Result};
+
+use crate::fixed::QFormat;
+use crate::json::Value;
+
+/// Architecture parameters of the systolic-array accelerator.
+///
+/// Memory depths are in *vectors* of `array_size` scalars, mirroring
+/// Tensil's `localDepth`/`accumulatorDepth` convention.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tarch {
+    pub name: String,
+    /// PE array is `array_size × array_size`.
+    pub array_size: usize,
+    /// Fixed-point format of weights/activations (accumulators are 32-bit).
+    pub qformat: QFormat,
+    pub clock_mhz: f64,
+    /// Local (BRAM) scratchpad depth, in vectors.
+    pub local_depth: usize,
+    /// Accumulator memory depth, in vectors.
+    pub accumulator_depth: usize,
+    /// DRAM→local bandwidth in *scalars per cycle* (AXI width / data bits).
+    pub dram_scalars_per_cycle: usize,
+    /// Whether DMA overlaps compute (double-buffered local memory).
+    pub double_buffered: bool,
+    /// Fixed per-instruction decode/issue overhead in cycles.
+    pub instr_overhead: u64,
+}
+
+impl Tarch {
+    /// Tensil's stock PYNQ-Z1 architecture: 8×8 array, 16-bit fixed point.
+    pub fn z7020_8x8() -> Tarch {
+        Tarch {
+            name: "z7020-8x8".into(),
+            array_size: 8,
+            qformat: QFormat::default(),
+            clock_mhz: 125.0,
+            local_depth: 8192,
+            accumulator_depth: 1024,
+            // Effective DDR3 bandwidth seen by the im2col gather path: the
+            // 64-bit AXI HP port streams 4 scalars/cycle peak, but short
+            // strided bursts + refresh + arbitration land near 1 (this is
+            // the calibration that reproduces the paper's Table I latency;
+            // see EXPERIMENTS.md §Calibration).
+            dram_scalars_per_cycle: 1,
+            double_buffered: true,
+            instr_overhead: 4,
+        }
+    }
+
+    /// The paper's demonstrator: array grown to 12×12 — "the highest
+    /// possible value to fit in the FPGA alongside the HDMI controller"
+    /// (§IV-B) — at 125 MHz.
+    pub fn z7020_12x12() -> Tarch {
+        Tarch { name: "z7020-12x12".into(), array_size: 12, ..Tarch::z7020_8x8() }
+    }
+
+    /// Table I configuration: same 12×12 array clocked at 50 MHz.
+    pub fn z7020_12x12_50mhz() -> Tarch {
+        Tarch {
+            name: "z7020-12x12-50mhz".into(),
+            array_size: 12,
+            clock_mhz: 50.0,
+            ..Tarch::z7020_8x8()
+        }
+    }
+
+    /// Named preset lookup (CLI `--tarch`).
+    pub fn preset(name: &str) -> Result<Tarch> {
+        Ok(match name {
+            "z7020-8x8" => Tarch::z7020_8x8(),
+            "z7020-12x12" => Tarch::z7020_12x12(),
+            "z7020-12x12-50mhz" => Tarch::z7020_12x12_50mhz(),
+            other => bail!("unknown tarch preset '{other}' \
+                            (have: z7020-8x8, z7020-12x12, z7020-12x12-50mhz)"),
+        })
+    }
+
+    /// Validate parameter sanity.
+    pub fn validate(&self) -> Result<()> {
+        if self.array_size == 0 || self.array_size > 256 {
+            bail!("array_size {} out of range", self.array_size);
+        }
+        if self.clock_mhz <= 0.0 || self.clock_mhz > 1000.0 {
+            bail!("clock {} MHz implausible", self.clock_mhz);
+        }
+        if self.local_depth < 2 * self.array_size {
+            bail!("local_depth {} too small for double-buffered tiles", self.local_depth);
+        }
+        if self.accumulator_depth == 0 {
+            bail!("accumulator_depth 0");
+        }
+        if self.dram_scalars_per_cycle == 0 {
+            bail!("dram_scalars_per_cycle 0");
+        }
+        Ok(())
+    }
+
+    /// Seconds for a cycle count at this clock.
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_mhz * 1e6)
+    }
+
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        self.cycles_to_seconds(cycles) * 1e3
+    }
+
+    /// Peak MACs/second of the PE array.
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        (self.array_size * self.array_size) as f64 * self.clock_mhz * 1e6
+    }
+
+    /// Parse from a JSON value (the `.tarch`-equivalent file format).
+    pub fn from_json(v: &Value) -> Result<Tarch> {
+        let t = Tarch {
+            name: v.req_str("name")?.to_string(),
+            array_size: v.req_usize("array_size")?,
+            qformat: QFormat::new(
+                v.get("data_bits").and_then(Value::as_usize).unwrap_or(16) as u8,
+                v.get("frac_bits").and_then(Value::as_usize).unwrap_or(8) as u8,
+            ),
+            clock_mhz: v.get("clock_mhz").and_then(Value::as_f64).unwrap_or(125.0),
+            local_depth: v.get("local_depth").and_then(Value::as_usize).unwrap_or(8192),
+            accumulator_depth: v.get("accumulator_depth").and_then(Value::as_usize).unwrap_or(1024),
+            dram_scalars_per_cycle: v.get("dram_scalars_per_cycle").and_then(Value::as_usize).unwrap_or(4),
+            double_buffered: v.get("double_buffered").and_then(Value::as_bool).unwrap_or(true),
+            instr_overhead: v.get("instr_overhead").and_then(Value::as_i64).unwrap_or(4) as u64,
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Serialize to JSON (for manifests and DSE outputs).
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("name", self.name.as_str())
+            .set("array_size", self.array_size)
+            .set("data_bits", self.qformat.total_bits as usize)
+            .set("frac_bits", self.qformat.frac_bits as usize)
+            .set("clock_mhz", self.clock_mhz)
+            .set("local_depth", self.local_depth)
+            .set("accumulator_depth", self.accumulator_depth)
+            .set("dram_scalars_per_cycle", self.dram_scalars_per_cycle)
+            .set("double_buffered", self.double_buffered)
+            .set("instr_overhead", self.instr_overhead as usize);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_valid() {
+        for t in [Tarch::z7020_8x8(), Tarch::z7020_12x12(), Tarch::z7020_12x12_50mhz()] {
+            t.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn paper_demonstrator_params() {
+        let t = Tarch::z7020_12x12();
+        assert_eq!(t.array_size, 12);
+        assert_eq!(t.clock_mhz, 125.0);
+        assert_eq!(t.qformat.total_bits, 16);
+        assert_eq!(t.qformat.frac_bits, 8);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert_eq!(Tarch::preset("z7020-12x12").unwrap().array_size, 12);
+        assert!(Tarch::preset("nope").is_err());
+    }
+
+    #[test]
+    fn cycle_conversion() {
+        let t = Tarch::z7020_12x12();
+        // 125 MHz: 125k cycles = 1 ms
+        assert!((t.cycles_to_ms(125_000) - 1.0).abs() < 1e-9);
+        let t50 = Tarch::z7020_12x12_50mhz();
+        assert!((t50.cycles_to_ms(50_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_macs() {
+        let t = Tarch::z7020_12x12();
+        assert_eq!(t.peak_macs_per_sec(), 144.0 * 125e6);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Tarch::z7020_12x12();
+        let v = t.to_json();
+        let back = Tarch::from_json(&v).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let mut t = Tarch::z7020_8x8();
+        t.array_size = 0;
+        assert!(t.validate().is_err());
+        let mut t = Tarch::z7020_8x8();
+        t.local_depth = 4;
+        assert!(t.validate().is_err());
+    }
+}

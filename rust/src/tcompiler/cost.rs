@@ -1,0 +1,162 @@
+//! Instruction timing model.
+//!
+//! Calibration anchors (documented in DESIGN.md §2 and EXPERIMENTS.md):
+//! the paper reports 30 ms for the headline ResNet-9/16fm/32×32 on the
+//! 12×12 array @125 MHz (§V-B) and 35.9 ms for the same backbone + linear
+//! head @50 MHz (Table I).  Those two imply 1.8–3.8 M cycles for this
+//! workload; the model below (PE fill/drain, DMA bandwidth, weight reload
+//! per accumulator chunk, instruction overhead) lands in that band without
+//! per-layer fudge factors, and — more importantly for Fig. 5 — scales
+//! correctly with array size, image size, width and depth.
+
+use crate::tarch::Tarch;
+
+use super::isa::Instr;
+
+/// Cycle cost model over a [`Tarch`].
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub tarch: Tarch,
+}
+
+impl CostModel {
+    pub fn new(tarch: Tarch) -> Self {
+        CostModel { tarch }
+    }
+
+    /// DMA cycles to move `scalars` 16-bit scalars DRAM↔local.
+    pub fn dma_cycles(&self, scalars: usize) -> u64 {
+        scalars.div_ceil(self.tarch.dram_scalars_per_cycle) as u64
+    }
+
+    /// Combine compute and DMA phases per the buffering mode.
+    fn combine(&self, compute: u64, dma: u64) -> u64 {
+        if self.tarch.double_buffered {
+            compute.max(dma)
+        } else {
+            compute + dma
+        }
+    }
+
+    /// Cycles of one instruction.
+    pub fn cycles(&self, i: &Instr) -> u64 {
+        let r = self.tarch.array_size as u64;
+        let oh = self.tarch.instr_overhead;
+        match i {
+            Instr::LoadWeights { kt, nt, .. } => {
+                // kt column loads into the array; tile streamed from DRAM.
+                let compute = *kt as u64 + 1;
+                let dma = self.dma_cycles(kt * nt);
+                oh + self.combine(compute, dma)
+            }
+            Instr::MatMul { rows, kt, nt, .. } => {
+                // systolic: rows stream + pipeline fill/drain of kt+nt
+                let compute = *rows as u64 + *kt as u64 + *nt as u64;
+                // activations staged from DRAM (im2col gather): rows×kt reads
+                let dma = self.dma_cycles(rows * kt);
+                oh + self.combine(compute, dma)
+            }
+            Instr::Writeback { rows, nt, .. } => {
+                // SIMD bias+relu+requant one acc row per cycle; results out.
+                let compute = *rows as u64 + 1;
+                let dma = self.dma_cycles(rows * nt);
+                oh + self.combine(compute, dma)
+            }
+            Instr::AddAct { len, .. } => {
+                // SIMD array_size lanes; two reads + one write per element.
+                let compute = (*len as u64).div_ceil(r);
+                let dma = self.dma_cycles(3 * len);
+                oh + self.combine(compute, dma)
+            }
+            Instr::MaxPool { layer: _, size } => {
+                // charged per output element: size² comparisons / lane
+                // (the executor attaches the geometry; cost uses meta)
+                // NOTE: filled in via `instr_cycles` which has layer meta.
+                let _ = size;
+                oh // placeholder, see instr_cycles
+            }
+            Instr::Gap { .. } => oh, // placeholder, see instr_cycles
+        }
+    }
+}
+
+/// Full instruction cost, including pool/gap which need layer geometry.
+pub fn instr_cycles(model: &CostModel, i: &Instr, layers: &[super::isa::LayerMeta]) -> u64 {
+    let r = model.tarch.array_size as u64;
+    let oh = model.tarch.instr_overhead;
+    match i {
+        Instr::MaxPool { layer, size } => {
+            let meta = &layers[*layer as usize];
+            let out_elems: usize = meta
+                .geom
+                .as_ref()
+                .map(|g| g.out_h * g.out_w * g.cout)
+                .unwrap_or(0);
+            let compute = (out_elems as u64 * (*size as u64) * (*size as u64)).div_ceil(r);
+            let dma = model.dma_cycles(out_elems * size * size + out_elems);
+            oh + if model.tarch.double_buffered { compute.max(dma) } else { compute + dma }
+        }
+        Instr::Gap { layer } => {
+            let meta = &layers[*layer as usize];
+            let in_elems: usize = meta
+                .geom
+                .as_ref()
+                .map(|g| g.in_h * g.in_w * g.cin)
+                .unwrap_or(0);
+            let compute = (in_elems as u64).div_ceil(r);
+            let dma = model.dma_cycles(in_elems);
+            oh + if model.tarch.double_buffered { compute.max(dma) } else { compute + dma }
+        }
+        other => model.cycles(other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tarch::Tarch;
+
+    fn model() -> CostModel {
+        CostModel::new(Tarch::z7020_12x12())
+    }
+
+    #[test]
+    fn dma_rounds_up() {
+        let m = model();
+        let bw = m.tarch.dram_scalars_per_cycle;
+        assert_eq!(m.dma_cycles(1), 1);
+        assert_eq!(m.dma_cycles(bw), 1);
+        assert_eq!(m.dma_cycles(bw + 1), 2);
+        assert_eq!(m.dma_cycles(3 * bw), 3);
+    }
+
+    #[test]
+    fn matmul_cost_scales_with_rows() {
+        let m = model();
+        let small = m.cycles(&Instr::MatMul {
+            layer: 0, m0: 0, rows: 64, k0: 0, kt: 12, n0: 0, nt: 12, accumulate: false,
+        });
+        let big = m.cycles(&Instr::MatMul {
+            layer: 0, m0: 0, rows: 640, k0: 0, kt: 12, n0: 0, nt: 12, accumulate: false,
+        });
+        assert!(big > 8 * small / 2, "{small} vs {big}");
+    }
+
+    #[test]
+    fn double_buffering_never_slower() {
+        let mut t = Tarch::z7020_12x12();
+        t.double_buffered = false;
+        let serial = CostModel::new(t.clone());
+        t.double_buffered = true;
+        let overlapped = CostModel::new(t);
+        let i = Instr::MatMul { layer: 0, m0: 0, rows: 256, k0: 0, kt: 12, n0: 0, nt: 12, accumulate: true };
+        assert!(overlapped.cycles(&i) <= serial.cycles(&i));
+    }
+
+    #[test]
+    fn load_weights_charges_dma() {
+        let m = model();
+        let c = m.cycles(&Instr::LoadWeights { layer: 0, k0: 0, kt: 12, n0: 0, nt: 12 });
+        assert!(c >= 12 + m.tarch.instr_overhead);
+    }
+}

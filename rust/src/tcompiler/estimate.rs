@@ -1,0 +1,152 @@
+//! Closed-form cycle estimation — the DSE fast path.
+//!
+//! Replays the exact tile loops of `lower::schedule_matmul` and sums the
+//! same instruction costs WITHOUT materializing the instruction stream
+//! (which allocates tens of MB for the big Fig. 5 configs).  Guaranteed
+//! equal to `compile(...).est_total_cycles` — asserted by tests here and
+//! exercised by every DSE sweep.
+
+use anyhow::Result;
+
+use crate::graph::{Graph, Op};
+use crate::tarch::Tarch;
+
+use super::cost::CostModel;
+use super::isa::{ConvGeom, Instr};
+
+/// Per-layer + total cycle estimate, no instruction materialization.
+pub fn estimate_cycles(g: &Graph, tarch: &Tarch) -> Result<(u64, Vec<u64>)> {
+    tarch.validate()?;
+    let model = CostModel::new(tarch.clone());
+    let r = tarch.array_size;
+    let mut per_layer = Vec::with_capacity(g.ops.len());
+
+    for op in &g.ops {
+        let cycles = match op {
+            Op::Conv2d { input, output, weights, stride, padding, .. } => {
+                let ins = g.shape(input)?;
+                let outs = g.shape(output)?;
+                let w = g.weight(weights)?;
+                let geom = ConvGeom {
+                    in_h: ins[1], in_w: ins[2], cin: ins[3],
+                    kh: w.shape[0], kw: w.shape[1],
+                    stride: *stride, padding: *padding,
+                    out_h: outs[1], out_w: outs[2], cout: outs[3],
+                };
+                matmul_schedule_cycles(&model, &geom, r, tarch.accumulator_depth)
+            }
+            Op::Dense { weights, .. } => {
+                let w = g.weight(weights)?;
+                let geom = ConvGeom {
+                    in_h: 1, in_w: 1, cin: w.shape[0],
+                    kh: 1, kw: 1, stride: 1, padding: 0,
+                    out_h: 1, out_w: 1, cout: w.shape[1],
+                };
+                matmul_schedule_cycles(&model, &geom, r, tarch.accumulator_depth)
+            }
+            Op::Add { output, .. } => {
+                let len: usize = g.shape(output)?.iter().product();
+                model.cycles(&Instr::AddAct { layer: 0, len, relu: true })
+            }
+            Op::MaxPool { output, size, .. } => {
+                let outs = g.shape(output)?;
+                pool_cycles(&model, outs[1] * outs[2] * outs[3], *size)
+            }
+            Op::Gap { input, .. } => {
+                let ins = g.shape(input)?;
+                gap_cycles(&model, ins[1] * ins[2] * ins[3])
+            }
+            Op::Relu { name, .. } => {
+                anyhow::bail!("standalone relu '{name}': run graph::simplify first")
+            }
+        };
+        per_layer.push(cycles);
+    }
+    Ok((per_layer.iter().sum(), per_layer))
+}
+
+/// Mirror of `lower::schedule_matmul`'s loop structure, cost-only.
+fn matmul_schedule_cycles(model: &CostModel, geom: &ConvGeom, r: usize, acc_depth: usize) -> u64 {
+    let (m, k, n) = (geom.m(), geom.k(), geom.n());
+    let chunk = acc_depth.min(m).max(1);
+    let mut total = 0u64;
+    let mut m0 = 0;
+    while m0 < m {
+        let rows = chunk.min(m - m0);
+        let mut n0 = 0;
+        while n0 < n {
+            let nt = r.min(n - n0);
+            let mut k0 = 0;
+            while k0 < k {
+                let kt = r.min(k - k0);
+                total += model.cycles(&Instr::LoadWeights { layer: 0, k0, kt, n0, nt });
+                total += model.cycles(&Instr::MatMul {
+                    layer: 0, m0, rows, k0, kt, n0, nt, accumulate: k0 > 0,
+                });
+                k0 += kt;
+            }
+            total += model.cycles(&Instr::Writeback { layer: 0, m0, rows, n0, nt, relu: true });
+            n0 += nt;
+        }
+        m0 += rows;
+    }
+    total
+}
+
+/// MaxPool cost, matching `cost::instr_cycles`'s formula.
+fn pool_cycles(model: &CostModel, out_elems: usize, size: usize) -> u64 {
+    let r = model.tarch.array_size as u64;
+    let oh = model.tarch.instr_overhead;
+    let compute = (out_elems as u64 * (size as u64) * (size as u64)).div_ceil(r);
+    let dma = model.dma_cycles(out_elems * size * size + out_elems);
+    oh + if model.tarch.double_buffered { compute.max(dma) } else { compute + dma }
+}
+
+/// Gap cost, matching `cost::instr_cycles`'s formula.
+fn gap_cycles(model: &CostModel, in_elems: usize) -> u64 {
+    let r = model.tarch.array_size as u64;
+    let oh = model.tarch.instr_overhead;
+    let compute = (in_elems as u64).div_ceil(r);
+    let dma = model.dma_cycles(in_elems);
+    oh + if model.tarch.double_buffered { compute.max(dma) } else { compute + dma }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{build_backbone_graph, BackboneSpec};
+    use crate::tcompiler::compile;
+
+    #[test]
+    fn estimate_equals_full_compile() {
+        for spec in [
+            BackboneSpec::headline(),
+            BackboneSpec { strided: false, ..BackboneSpec::headline() },
+            BackboneSpec { depth: 12, feature_maps: 8, strided: false, image_size: 21, head_classes: Some(10) },
+        ] {
+            let g = build_backbone_graph(&spec, 3).unwrap();
+            for tarch in [Tarch::z7020_8x8(), Tarch::z7020_12x12()] {
+                let p = compile(&g, &tarch).unwrap();
+                let (total, per_layer) = estimate_cycles(&g, &tarch).unwrap();
+                assert_eq!(total, p.est_total_cycles, "{} on {}", spec.name(), tarch.name);
+                assert_eq!(per_layer.len(), p.layers.len());
+                for (e, l) in per_layer.iter().zip(&p.layers) {
+                    assert_eq!(*e, l.est_cycles, "layer {} of {}", l.name, spec.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_much_faster_than_compile() {
+        let spec = BackboneSpec { depth: 12, feature_maps: 64, strided: false, image_size: 84, head_classes: None };
+        let g = build_backbone_graph(&spec, 1).unwrap();
+        let t = Tarch::z7020_12x12();
+        let t0 = std::time::Instant::now();
+        let (total, _) = estimate_cycles(&g, &t).unwrap();
+        let est_time = t0.elapsed();
+        assert!(total > 0);
+        // the whole point: well under the full compile's hundreds of ms
+        assert!(est_time.as_millis() < 100, "estimate took {est_time:?}");
+    }
+}

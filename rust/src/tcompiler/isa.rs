@@ -1,0 +1,161 @@
+//! Instruction set of the simulated accelerator.
+//!
+//! Addresses are tensor-id + element offsets (the DRAM address map is the
+//! tensor table itself); tiles are expressed in matrix coordinates of the
+//! layer's im2col view.  This keeps instructions independent of any host
+//! allocator while still letting the cost model charge every DMA byte.
+
+use crate::fixed::QFormat;
+use crate::tarch::Tarch;
+
+/// Conv-as-matmul geometry of one layer (im2col view).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvGeom {
+    /// Input activation NHWC.
+    pub in_h: usize,
+    pub in_w: usize,
+    pub cin: usize,
+    /// Kernel.
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub padding: usize,
+    /// Output spatial.
+    pub out_h: usize,
+    pub out_w: usize,
+    pub cout: usize,
+}
+
+impl ConvGeom {
+    /// im2col matrix dims: `[m, k] × [k, n]`.
+    pub fn m(&self) -> usize {
+        self.out_h * self.out_w
+    }
+
+    pub fn k(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    pub fn n(&self) -> usize {
+        self.cout
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.m() * self.k() * self.n()) as u64
+    }
+}
+
+/// What a layer is, for reporting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Dense,
+    Add,
+    MaxPool,
+    Gap,
+}
+
+/// Per-layer metadata attached to the program.
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Index of input tensor(s) in the program's tensor table.
+    pub inputs: Vec<u32>,
+    pub output: u32,
+    /// Conv/dense geometry (None for elementwise/pool layers).
+    pub geom: Option<ConvGeom>,
+    /// Static cycle estimate from the cost model.
+    pub est_cycles: u64,
+    pub macs: u64,
+}
+
+/// One accelerator instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instr {
+    /// Load a `kt×nt` tile of the layer's weight matrix into the PE array.
+    LoadWeights { layer: u32, k0: usize, kt: usize, n0: usize, nt: usize },
+    /// Stream im2col rows `[m0, m0+rows)` through the array against the
+    /// loaded tile, accumulating columns `[n0, n0+nt)` into the accumulator
+    /// rows `[0, rows)`. `accumulate=false` clears first.
+    MatMul {
+        layer: u32,
+        m0: usize,
+        rows: usize,
+        k0: usize,
+        kt: usize,
+        n0: usize,
+        nt: usize,
+        accumulate: bool,
+    },
+    /// SIMD writeback: bias + (ReLU) + requantize accumulator rows into the
+    /// output tensor at columns `[n0, n0+nt)`.
+    Writeback { layer: u32, m0: usize, rows: usize, n0: usize, nt: usize, relu: bool },
+    /// Elementwise saturating add of two activation tensors (+ReLU).
+    AddAct { layer: u32, len: usize, relu: bool },
+    /// 2-D max-pool on NHWC codes.
+    MaxPool { layer: u32, size: usize },
+    /// Global average pool NHWC → [1, C] with round-half-away division.
+    Gap { layer: u32 },
+}
+
+impl Instr {
+    pub fn layer(&self) -> u32 {
+        match self {
+            Instr::LoadWeights { layer, .. }
+            | Instr::MatMul { layer, .. }
+            | Instr::Writeback { layer, .. }
+            | Instr::AddAct { layer, .. }
+            | Instr::MaxPool { layer, .. }
+            | Instr::Gap { layer, .. } => *layer,
+        }
+    }
+}
+
+/// Tensor-table entry: either a weight (from the artifact) or an activation
+/// buffer the executor materializes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorSlot {
+    /// Name into `Graph::weights`.
+    Weight(String),
+    /// Activation with NHWC (or [N,C]) shape.
+    Activation { name: String, shape: Vec<usize> },
+}
+
+/// A compiled program: instruction stream + metadata.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub name: String,
+    pub tarch: Tarch,
+    pub qformat: QFormat,
+    pub instrs: Vec<Instr>,
+    pub layers: Vec<LayerMeta>,
+    pub tensors: Vec<TensorSlot>,
+    /// Tensor-table index of the graph input / output.
+    pub input_tensor: u32,
+    pub output_tensor: u32,
+    /// Static total-cycle estimate (Σ layer estimates).
+    pub est_total_cycles: u64,
+}
+
+impl Program {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// MAC utilization at the static estimate: useful MACs / (cycles · PEs).
+    pub fn est_utilization(&self) -> f64 {
+        let peak = self.est_total_cycles as f64
+            * (self.tarch.array_size * self.tarch.array_size) as f64;
+        if peak == 0.0 {
+            0.0
+        } else {
+            self.total_macs() as f64 / peak
+        }
+    }
+
+    /// Estimated latency in milliseconds at the tarch clock.
+    pub fn est_latency_ms(&self) -> f64 {
+        self.tarch.cycles_to_ms(self.est_total_cycles)
+    }
+}

@@ -1,0 +1,358 @@
+//! Graph → Program lowering: tiling, scheduling, memory checks, static cost.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::graph::{Graph, Op};
+use crate::tarch::Tarch;
+
+use super::cost::{instr_cycles, CostModel};
+use super::isa::{ConvGeom, Instr, LayerKind, LayerMeta, Program, TensorSlot};
+
+/// Compile a graph for a target architecture.
+///
+/// Batch must be 1 (the accelerator processes one frame per invocation, as
+/// on the PYNQ demonstrator); the coordinator batches at frame granularity.
+pub fn compile(g: &Graph, tarch: &Tarch) -> Result<Program> {
+    tarch.validate()?;
+    if g.input_shape[0] != 1 {
+        bail!("accelerator programs are batch-1 (got N={})", g.input_shape[0]);
+    }
+    if g.qformat != tarch.qformat {
+        bail!("graph qformat {} != tarch qformat {}", g.qformat, tarch.qformat);
+    }
+
+    let mut tensors: Vec<TensorSlot> = Vec::new();
+    let mut tensor_ids: HashMap<String, u32> = HashMap::new();
+    let intern_act = |name: &str, shape: Vec<usize>, tensors: &mut Vec<TensorSlot>,
+                          tensor_ids: &mut HashMap<String, u32>| -> u32 {
+        if let Some(&id) = tensor_ids.get(name) {
+            return id;
+        }
+        let id = tensors.len() as u32;
+        tensors.push(TensorSlot::Activation { name: name.to_string(), shape });
+        tensor_ids.insert(name.to_string(), id);
+        id
+    };
+
+    let input_tensor = intern_act(&g.input_name, g.input_shape.to_vec(), &mut tensors, &mut tensor_ids);
+
+    let r = tarch.array_size;
+    let model = CostModel::new(tarch.clone());
+    let mut instrs: Vec<Instr> = Vec::new();
+    let mut layers: Vec<LayerMeta> = Vec::new();
+
+    for op in &g.ops {
+        let layer_id = layers.len() as u32;
+        let mut layer_instrs: Vec<Instr> = Vec::new();
+        let meta = match op {
+            Op::Conv2d { name, input, output, weights, stride, padding, relu, .. } => {
+                let ins = g.shape(input)?.to_vec();
+                let outs = g.shape(output)?.to_vec();
+                let w = g.weight(weights)?;
+                let geom = ConvGeom {
+                    in_h: ins[1], in_w: ins[2], cin: ins[3],
+                    kh: w.shape[0], kw: w.shape[1],
+                    stride: *stride, padding: *padding,
+                    out_h: outs[1], out_w: outs[2], cout: outs[3],
+                };
+                check_fits(tarch, &geom)?;
+                let in_id = tensor_ids[input.as_str()];
+                let out_id = intern_act(output, outs, &mut tensors, &mut tensor_ids);
+                schedule_matmul(&geom, r, tarch.accumulator_depth, layer_id, *relu, &mut layer_instrs);
+                let macs = geom.macs();
+                LayerMeta {
+                    name: name.clone(), kind: LayerKind::Conv,
+                    inputs: vec![in_id], output: out_id,
+                    geom: Some(geom), est_cycles: 0, macs,
+                }
+            }
+            Op::Dense { name, input, output, weights, relu, .. } => {
+                let ins = g.shape(input)?.to_vec();
+                let outs = g.shape(output)?.to_vec();
+                let w = g.weight(weights)?;
+                // dense == 1×1 conv on a 1×1 "image" with cin=K, cout=M
+                let geom = ConvGeom {
+                    in_h: 1, in_w: 1, cin: w.shape[0],
+                    kh: 1, kw: 1, stride: 1, padding: 0,
+                    out_h: 1, out_w: 1, cout: w.shape[1],
+                };
+                let in_id = tensor_ids[input.as_str()];
+                let out_id = intern_act(output, outs, &mut tensors, &mut tensor_ids);
+                schedule_matmul(&geom, r, tarch.accumulator_depth, layer_id, *relu, &mut layer_instrs);
+                let macs = (ins[1] * w.shape[1]) as u64;
+                LayerMeta {
+                    name: name.clone(), kind: LayerKind::Dense,
+                    inputs: vec![in_id], output: out_id,
+                    geom: Some(geom), est_cycles: 0, macs,
+                }
+            }
+            Op::Add { name, input, input2, output, relu } => {
+                let shape = g.shape(output)?.to_vec();
+                let len: usize = shape.iter().product();
+                let a = tensor_ids[input.as_str()];
+                let b = tensor_ids[input2.as_str()];
+                let out_id = intern_act(output, shape, &mut tensors, &mut tensor_ids);
+                layer_instrs.push(Instr::AddAct { layer: layer_id, len, relu: *relu });
+                LayerMeta {
+                    name: name.clone(), kind: LayerKind::Add,
+                    inputs: vec![a, b], output: out_id,
+                    geom: None, est_cycles: 0, macs: 0,
+                }
+            }
+            Op::MaxPool { name, input, output, size } => {
+                let ins = g.shape(input)?.to_vec();
+                let outs = g.shape(output)?.to_vec();
+                let geom = ConvGeom {
+                    in_h: ins[1], in_w: ins[2], cin: ins[3],
+                    kh: *size, kw: *size, stride: *size, padding: 0,
+                    out_h: outs[1], out_w: outs[2], cout: outs[3],
+                };
+                let in_id = tensor_ids[input.as_str()];
+                let out_id = intern_act(output, outs, &mut tensors, &mut tensor_ids);
+                layer_instrs.push(Instr::MaxPool { layer: layer_id, size: *size });
+                LayerMeta {
+                    name: name.clone(), kind: LayerKind::MaxPool,
+                    inputs: vec![in_id], output: out_id,
+                    geom: Some(geom), est_cycles: 0, macs: 0,
+                }
+            }
+            Op::Gap { name, input, output } => {
+                let ins = g.shape(input)?.to_vec();
+                let outs = g.shape(output)?.to_vec();
+                let geom = ConvGeom {
+                    in_h: ins[1], in_w: ins[2], cin: ins[3],
+                    kh: ins[1], kw: ins[2], stride: 1, padding: 0,
+                    out_h: 1, out_w: 1, cout: ins[3],
+                };
+                let in_id = tensor_ids[input.as_str()];
+                let out_id = intern_act(output, outs, &mut tensors, &mut tensor_ids);
+                layer_instrs.push(Instr::Gap { layer: layer_id });
+                LayerMeta {
+                    name: name.clone(), kind: LayerKind::Gap,
+                    inputs: vec![in_id], output: out_id,
+                    geom: Some(geom), est_cycles: 0, macs: 0,
+                }
+            }
+            Op::Relu { name, .. } => {
+                bail!("standalone relu '{name}' not supported by the accelerator; \
+                       run graph::simplify first");
+            }
+        };
+        let mut meta = meta;
+        // Build the temporary layer view ONCE per layer (not per
+        // instruction) — pool/gap costs need the layer's own geometry.
+        let tmp = with_tmp(&layers, &meta);
+        meta.est_cycles = layer_instrs.iter().map(|i| instr_cycles(&model, i, &tmp)).sum();
+        instrs.extend(layer_instrs);
+        layers.push(meta);
+    }
+
+    // weight tensors join the table after activations (ids stable per name)
+    for op in &g.ops {
+        match op {
+            Op::Conv2d { weights, bias, .. } | Op::Dense { weights, bias, .. } => {
+                for wname in [weights, bias] {
+                    if !tensor_ids.contains_key(wname.as_str()) {
+                        let id = tensors.len() as u32;
+                        tensors.push(TensorSlot::Weight(wname.clone()));
+                        tensor_ids.insert(wname.clone(), id);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let output_tensor = *tensor_ids
+        .get(g.output_name.as_str())
+        .ok_or_else(|| anyhow::anyhow!("output tensor '{}' not produced", g.output_name))?;
+
+    let est_total_cycles = layers.iter().map(|l| l.est_cycles).sum();
+    Ok(Program {
+        name: format!("{}@{}", g.name, tarch.name),
+        tarch: tarch.clone(),
+        qformat: g.qformat,
+        instrs,
+        layers,
+        tensors,
+        input_tensor,
+        output_tensor,
+        est_total_cycles,
+    })
+}
+
+/// The cost of pool/gap needs the layer's own meta; build a temporary view.
+fn with_tmp<'a>(layers: &'a [LayerMeta], cur: &'a LayerMeta) -> Vec<LayerMeta> {
+    let mut v: Vec<LayerMeta> = layers.to_vec();
+    v.push(cur.clone());
+    v
+}
+
+/// Reject layers whose single im2col row exceeds local memory (`Tensil`
+/// would spill; we conservatively require one row tile + one weight tile).
+fn check_fits(tarch: &Tarch, geom: &ConvGeom) -> Result<()> {
+    let r = tarch.array_size;
+    // one weight tile (r×r) + one activation row strip (r wide) double-buffered
+    let needed_vectors = 2 * r + 4;
+    if tarch.local_depth < needed_vectors {
+        bail!(
+            "local memory too small: {} vectors < {} needed for {}×{} tiles",
+            tarch.local_depth, needed_vectors, r, r
+        );
+    }
+    if geom.k() == 0 || geom.n() == 0 || geom.m() == 0 {
+        bail!("degenerate conv geometry {geom:?}");
+    }
+    Ok(())
+}
+
+/// Emit the tiled matmul schedule for one conv/dense layer.
+///
+/// Loop order (Tensil's): for each accumulator-sized row chunk → for each
+/// n-tile → for each k-tile { LoadWeights; MatMul } → Writeback.
+fn schedule_matmul(
+    geom: &ConvGeom,
+    r: usize,
+    acc_depth: usize,
+    layer: u32,
+    relu: bool,
+    out: &mut Vec<Instr>,
+) {
+    let (m, k, n) = (geom.m(), geom.k(), geom.n());
+    let chunk = acc_depth.min(m).max(1);
+    let mut m0 = 0;
+    while m0 < m {
+        let rows = chunk.min(m - m0);
+        let mut n0 = 0;
+        while n0 < n {
+            let nt = r.min(n - n0);
+            let mut k0 = 0;
+            let mut first = true;
+            while k0 < k {
+                let kt = r.min(k - k0);
+                out.push(Instr::LoadWeights { layer, k0, kt, n0, nt });
+                out.push(Instr::MatMul {
+                    layer, m0, rows, k0, kt, n0, nt, accumulate: !first,
+                });
+                first = false;
+                k0 += kt;
+            }
+            out.push(Instr::Writeback { layer, m0, rows, n0, nt, relu });
+            n0 += nt;
+        }
+        m0 += rows;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::import;
+    use crate::json::parse;
+    use crate::util::tensorio::Tensor;
+
+    fn tiny_graph(h: usize, cin: usize, cout: usize, stride: usize) -> Graph {
+        let doc = parse(&format!(
+            r#"{{
+              "name": "tiny", "format": {{"total_bits": 16, "frac_bits": 8}},
+              "input": {{"name": "input", "shape": [1, {h}, {h}, {cin}]}},
+              "output": {{"name": "features", "dim": {cout}}},
+              "ops": [
+                {{"op": "conv2d", "name": "c1", "input": "input", "output": "a1",
+                  "weights": "c1.w", "bias": "c1.b", "stride": {stride},
+                  "padding": 1, "relu": true}},
+                {{"op": "gap", "name": "gap", "input": "a1", "output": "features"}}
+              ]
+            }}"#
+        ))
+        .unwrap();
+        let tensors = vec![
+            ("c1.w".into(), Tensor::i16(vec![3, 3, cin, cout], vec![64; 9 * cin * cout])),
+            ("c1.b".into(), Tensor::i32(vec![cout], vec![0; cout])),
+        ];
+        import(&doc, tensors).unwrap()
+    }
+
+    #[test]
+    fn compiles_tiny_graph() {
+        let g = tiny_graph(8, 3, 4, 1);
+        let p = compile(&g, &Tarch::z7020_8x8()).unwrap();
+        assert_eq!(p.layers.len(), 2);
+        assert!(p.est_total_cycles > 0);
+        assert!(!p.instrs.is_empty());
+        // conv: k=27, n=4 → 4 k-tiles (8-wide), 1 n-tile, 1 m-chunk
+        let loads = p.instrs.iter().filter(|i| matches!(i, Instr::LoadWeights { .. })).count();
+        assert_eq!(loads, 4);
+        let wbs = p.instrs.iter().filter(|i| matches!(i, Instr::Writeback { .. })).count();
+        assert_eq!(wbs, 1);
+    }
+
+    #[test]
+    fn first_matmul_clears_then_accumulates() {
+        let g = tiny_graph(8, 3, 4, 1);
+        let p = compile(&g, &Tarch::z7020_8x8()).unwrap();
+        let mms: Vec<_> = p.instrs.iter().filter_map(|i| match i {
+            Instr::MatMul { accumulate, .. } => Some(*accumulate),
+            _ => None,
+        }).collect();
+        assert_eq!(mms[0], false);
+        assert!(mms[1..].iter().all(|&a| a));
+    }
+
+    #[test]
+    fn tile_bounds_respected() {
+        let g = tiny_graph(16, 5, 7, 2);
+        let t = Tarch::z7020_12x12();
+        let p = compile(&g, &t).unwrap();
+        for i in &p.instrs {
+            match i {
+                Instr::LoadWeights { k0, kt, n0, nt, .. } => {
+                    assert!(kt <= &t.array_size && nt <= &t.array_size);
+                    assert!(k0 + kt <= 45 && n0 + nt <= 7); // k=3*3*5, n=7
+                }
+                Instr::MatMul { rows, .. } => assert!(*rows <= t.accumulator_depth),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_array_fewer_cycles() {
+        let g = tiny_graph(32, 16, 32, 1);
+        let c8 = compile(&g, &Tarch::z7020_8x8()).unwrap().est_total_cycles;
+        let c12 = compile(&g, &Tarch::z7020_12x12()).unwrap().est_total_cycles;
+        assert!(c12 < c8, "12×12 ({c12}) should beat 8×8 ({c8})");
+    }
+
+    #[test]
+    fn strided_cheaper_than_dense_output() {
+        let s1 = compile(&tiny_graph(32, 8, 8, 1), &Tarch::z7020_12x12()).unwrap();
+        let s2 = compile(&tiny_graph(32, 8, 8, 2), &Tarch::z7020_12x12()).unwrap();
+        assert!(s2.est_total_cycles < s1.est_total_cycles);
+    }
+
+    #[test]
+    fn batch_gt1_rejected() {
+        let mut g = tiny_graph(8, 3, 4, 1);
+        g.input_shape[0] = 2;
+        assert!(compile(&g, &Tarch::z7020_8x8()).is_err());
+    }
+
+    #[test]
+    fn utilization_sane() {
+        let g = tiny_graph(32, 16, 32, 1);
+        let p = compile(&g, &Tarch::z7020_12x12()).unwrap();
+        let u = p.est_utilization();
+        assert!(u > 0.001 && u <= 1.0, "utilization {u}");
+    }
+
+    #[test]
+    fn qformat_mismatch_rejected() {
+        let g = tiny_graph(8, 3, 4, 1);
+        let mut t = Tarch::z7020_8x8();
+        t.qformat = crate::fixed::QFormat::new(8, 4);
+        assert!(compile(&g, &t).is_err());
+    }
+}

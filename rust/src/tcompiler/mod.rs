@@ -1,0 +1,23 @@
+//! Tensil-equivalent compiler: lower a [`crate::graph::Graph`] onto a
+//! [`crate::tarch::Tarch`] systolic-array accelerator.
+//!
+//! Convolutions are executed as im2col matmuls on the weight-stationary PE
+//! array (exactly Tensil's lowering): the `[KH·KW·Cin, Cout]` filter matrix
+//! is tiled into `array_size × array_size` blocks that are loaded into the
+//! array, and output rows stream through, accumulating in the accumulator
+//! memory, before a SIMD writeback stage applies bias + ReLU + requantize.
+//!
+//! The compiler emits a [`Program`] = instruction stream + static per-layer
+//! cycle estimates (`LayerReport`).  The same instructions are *executed* by
+//! [`crate::sim`], giving bit-exact Q8.8 outputs and the dynamic cycle count
+//! used for every latency number in the paper's figures.
+
+mod cost;
+mod estimate;
+mod isa;
+mod lower;
+
+pub use cost::{instr_cycles, CostModel};
+pub use estimate::estimate_cycles;
+pub use isa::{ConvGeom, Instr, LayerKind, LayerMeta, Program, TensorSlot};
+pub use lower::compile;

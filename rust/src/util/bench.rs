@@ -1,0 +1,142 @@
+//! Criterion-style micro-bench harness (the offline vendor set has no
+//! `criterion`).  Used by every `rust/benches/*.rs` target
+//! (`harness = false`): warmup, adaptive iteration count, mean ± stddev,
+//! throughput, and a one-line report formatted like criterion's.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{:>10} {:>10} {:>10}]  ({} iters)",
+            self.name,
+            super::timer::fmt_duration(self.min),
+            super::timer::fmt_duration(self.mean),
+            super::timer::fmt_duration(self.max),
+            self.iters
+        )
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn per_second(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Bench configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick settings for slow end-to-end benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(800),
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Run a closure under the harness; prints the report line and returns it.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup + iteration-time estimate.
+    let wstart = Instant::now();
+    let mut wcount = 0u64;
+    while wstart.elapsed() < cfg.warmup || wcount < 1 {
+        f();
+        wcount += 1;
+    }
+    let est = wstart.elapsed().as_secs_f64() / wcount as f64;
+    let target_iters = ((cfg.measure.as_secs_f64() / est.max(1e-9)) as u64)
+        .clamp(cfg.min_iters, cfg.max_iters);
+
+    let mut samples = Vec::with_capacity(target_iters as usize);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+
+    let n = samples.len() as f64;
+    let mean_s = samples.iter().map(Duration::as_secs_f64).sum::<f64>() / n;
+    let var = samples
+        .iter()
+        .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n.max(1.0);
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: target_iters,
+        mean: Duration::from_secs_f64(mean_s),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: *samples.iter().min().unwrap(),
+        max: *samples.iter().max().unwrap(),
+    };
+    println!("{}", result.report());
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let r = bench("noop-ish", &cfg, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.mean && r.mean <= r.max);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_iters: 2,
+            max_iters: 10,
+        };
+        let r = bench("xyzzy", &cfg, || {});
+        assert!(r.report().contains("xyzzy"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Small shared substrates: deterministic PRNG, tensor file I/O, a tiny
+//! property-test helper (offline vendor set has no `proptest`), and timing.
+
+pub mod bench;
+pub mod prng;
+pub mod proptest;
+pub mod tensorio;
+pub mod timer;
+
+pub use prng::Prng;
+pub use tensorio::{read_named_tensors, read_tensor, write_tensor, Tensor};
+pub use timer::Stopwatch;

@@ -1,0 +1,58 @@
+//! Tiny property-testing harness (the offline vendor set has no `proptest`).
+//!
+//! `check(seed, cases, f)` runs `f(&mut Prng)` `cases` times with derived
+//! seeds; on panic it reports the failing case seed so the case reproduces
+//! with `check_one(seed, f)`.
+
+use super::prng::Prng;
+
+/// Run `f` against `cases` generated inputs. Panics with the failing case
+/// seed on the first failure.
+pub fn check<F: Fn(&mut Prng) + std::panic::RefUnwindSafe>(seed: u64, cases: u32, f: F) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x100000001B3).wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Prng::new(case_seed);
+            f(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (case_seed={case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn check_one<F: FnOnce(&mut Prng)>(case_seed: u64, f: F) {
+    let mut rng = Prng::new(case_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 50, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check(2, 50, |rng| {
+                assert!(rng.below(10) < 5, "too big");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("case_seed="), "{msg}");
+    }
+}

@@ -1,0 +1,301 @@
+//! PFT1 tensor binary format — the python↔rust interchange for weights,
+//! test vectors and feature dumps (see `python/compile/export.py`):
+//!
+//! ```text
+//! magic  4 bytes  b"PFT1"
+//! dtype  u8       0 = f32, 1 = i16, 2 = i32
+//! ndim   u8
+//! pad    u16      zero
+//! dims   ndim × u32 LE
+//! data   row-major, LE
+//! ```
+//!
+//! A *named tensor file* is a sequence of `u16 name_len | name | tensor`.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element storage of a loaded tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I16(Vec<i16>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I16(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A dense row-major tensor with shape metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i16(shape: Vec<usize>, data: Vec<i16>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::I16(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Borrow as f32 slice; errors if the dtype differs.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", dtype_name(other)),
+        }
+    }
+
+    pub fn as_i16(&self) -> Result<&[i16]> {
+        match &self.data {
+            Data::I16(v) => Ok(v),
+            other => bail!("expected i16 tensor, got {:?}", dtype_name(other)),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {:?}", dtype_name(other)),
+        }
+    }
+}
+
+fn dtype_name(d: &Data) -> &'static str {
+    match d {
+        Data::F32(_) => "f32",
+        Data::I16(_) => "i16",
+        Data::I32(_) => "i32",
+    }
+}
+
+fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("short read")?;
+    Ok(buf)
+}
+
+/// Parse one tensor from a reader.
+pub fn read_tensor_from(r: &mut impl Read) -> Result<Tensor> {
+    let magic = read_exact(r, 4)?;
+    if magic != b"PFT1" {
+        bail!("bad magic {:?} (expected PFT1)", magic);
+    }
+    let hdr = read_exact(r, 4)?;
+    let (code, ndim) = (hdr[0], hdr[1] as usize);
+    if ndim > 8 {
+        bail!("implausible ndim {ndim}");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        let d = read_exact(r, 4)?;
+        shape.push(u32::from_le_bytes([d[0], d[1], d[2], d[3]]) as usize);
+    }
+    let n: usize = shape.iter().product();
+    let data = match code {
+        0 => {
+            let raw = read_exact(r, n * 4)?;
+            Data::F32(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+        }
+        1 => {
+            let raw = read_exact(r, n * 2)?;
+            Data::I16(raw.chunks_exact(2).map(|c| i16::from_le_bytes([c[0], c[1]])).collect())
+        }
+        2 => {
+            let raw = read_exact(r, n * 4)?;
+            Data::I32(raw.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+        }
+        other => bail!("unknown dtype code {other}"),
+    };
+    Ok(Tensor { shape, data })
+}
+
+/// Read a single-tensor file.
+pub fn read_tensor(path: impl AsRef<Path>) -> Result<Tensor> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    read_tensor_from(&mut r).with_context(|| format!("parse {}", path.display()))
+}
+
+/// Write one tensor to a writer.
+pub fn write_tensor_to(w: &mut impl Write, t: &Tensor) -> Result<()> {
+    w.write_all(b"PFT1")?;
+    let code = match &t.data {
+        Data::F32(_) => 0u8,
+        Data::I16(_) => 1,
+        Data::I32(_) => 2,
+    };
+    w.write_all(&[code, t.shape.len() as u8, 0, 0])?;
+    for &d in &t.shape {
+        w.write_all(&(d as u32).to_le_bytes())?;
+    }
+    match &t.data {
+        Data::F32(v) => {
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Data::I16(v) => {
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Data::I32(v) => {
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Write a single-tensor file.
+pub fn write_tensor(path: impl AsRef<Path>, t: &Tensor) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    write_tensor_to(&mut w, t)?;
+    Ok(())
+}
+
+/// Read a named-tensor file (the `weights.bin` format).
+pub fn read_named_tensors(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut out = Vec::new();
+    loop {
+        let mut len_buf = [0u8; 2];
+        match r.read(&mut len_buf)? {
+            0 => break, // clean EOF
+            1 => {
+                r.read_exact(&mut len_buf[1..2])?;
+            }
+            _ => {}
+        }
+        let name_len = u16::from_le_bytes(len_buf) as usize;
+        let name = String::from_utf8(read_exact(&mut r, name_len)?)
+            .context("tensor name not utf-8")?;
+        let t = read_tensor_from(&mut r).with_context(|| format!("tensor {name}"))?;
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, -1e7]);
+        let mut buf = Vec::new();
+        write_tensor_to(&mut buf, &t).unwrap();
+        let got = read_tensor_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, t);
+    }
+
+    #[test]
+    fn roundtrip_i16_i32() {
+        for t in [
+            Tensor::i16(vec![4], vec![-32768, -1, 0, 32767]),
+            Tensor::i32(vec![2, 2], vec![i32::MIN, -1, 0, i32::MAX]),
+        ] {
+            let mut buf = Vec::new();
+            write_tensor_to(&mut buf, &t).unwrap();
+            assert_eq!(read_tensor_from(&mut buf.as_slice()).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::f32(vec![], vec![3.5]);
+        let mut buf = Vec::new();
+        write_tensor_to(&mut buf, &t).unwrap();
+        let got = read_tensor_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(got.shape, Vec::<usize>::new());
+        assert_eq!(got.as_f32().unwrap(), &[3.5]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = b"NOPE\x00\x01\x00\x00\x04\x00\x00\x00".to_vec();
+        assert!(read_tensor_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let mut buf = Vec::new();
+        write_tensor_to(&mut buf, &Tensor::f32(vec![1], vec![0.0])).unwrap();
+        buf[4] = 99; // dtype code
+        assert!(read_tensor_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_data_rejected() {
+        let mut buf = Vec::new();
+        write_tensor_to(&mut buf, &Tensor::f32(vec![4], vec![0.0; 4])).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_tensor_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn named_records_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pefsl_tio_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        {
+            let mut w = BufWriter::new(File::create(&path).unwrap());
+            for (name, t) in [
+                ("a.w", Tensor::i16(vec![2], vec![1, 2])),
+                ("b.b", Tensor::i32(vec![1], vec![7])),
+            ] {
+                w.write_all(&(name.len() as u16).to_le_bytes()).unwrap();
+                w.write_all(name.as_bytes()).unwrap();
+                write_tensor_to(&mut w, &t).unwrap();
+            }
+        }
+        let got = read_named_tensors(&path).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, "a.w");
+        assert_eq!(got[1].1.as_i32().unwrap(), &[7]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::f32(vec![1], vec![0.0]);
+        assert!(t.as_i16().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+}

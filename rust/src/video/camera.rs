@@ -1,0 +1,206 @@
+//! Synthetic camera: procedurally animated 160×120 RGB frames.
+//!
+//! Scenes show one of a set of "objects" (shape × palette × texture, the
+//! same family as the python training data) drifting/rotating over a
+//! cluttered background, so the demonstrator's NCM actually has something
+//! to classify; `scene` can be switched at runtime to emulate showing the
+//! camera different objects (the live-demo flow of §IV-B).
+
+use crate::util::Prng;
+
+/// Camera geometry defaults (the PYNQ demonstrator's module).
+pub const CAM_W: usize = 160;
+pub const CAM_H: usize = 120;
+
+/// One RGB frame, HWC row-major f32 in [0,1].
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub w: usize,
+    pub h: usize,
+    pub data: Vec<f32>,
+    /// Monotonic frame index.
+    pub seq: u64,
+    /// Ground-truth scene id (for demo accuracy accounting).
+    pub scene: usize,
+}
+
+/// Camera configuration.
+#[derive(Clone, Debug)]
+pub struct CameraConfig {
+    pub w: usize,
+    pub h: usize,
+    /// Number of distinct synthetic objects the camera can be pointed at.
+    pub n_scenes: usize,
+    pub seed: u64,
+}
+
+impl Default for CameraConfig {
+    fn default() -> Self {
+        CameraConfig { w: CAM_W, h: CAM_H, n_scenes: 5, seed: 7 }
+    }
+}
+
+/// Latent parameters of one synthetic object (mirrors python `ClassSpec`).
+#[derive(Clone, Debug)]
+struct SceneSpec {
+    shape: u8,
+    fg: [f32; 3],
+    bg: [f32; 3],
+    tex_freq: f32,
+    tex_angle: f32,
+    tex_amp: f32,
+    scale: f32,
+}
+
+/// Procedural frame source.
+pub struct SyntheticCamera {
+    cfg: CameraConfig,
+    specs: Vec<SceneSpec>,
+    rng: Prng,
+    seq: u64,
+    scene: usize,
+    /// Animation phase (radians), advanced per frame.
+    t: f32,
+}
+
+impl SyntheticCamera {
+    pub fn new(cfg: CameraConfig) -> Self {
+        assert!(cfg.n_scenes > 0 && cfg.w > 0 && cfg.h > 0);
+        let mut rng = Prng::new(cfg.seed);
+        let specs = (0..cfg.n_scenes)
+            .map(|_| SceneSpec {
+                shape: rng.below(6) as u8,
+                fg: [rng.f32_range(0.35, 0.85), rng.f32_range(0.35, 0.85), rng.f32_range(0.35, 0.85)],
+                bg: [rng.f32_range(0.15, 0.5), rng.f32_range(0.15, 0.5), rng.f32_range(0.15, 0.5)],
+                tex_freq: rng.f32_range(3.0, 14.0),
+                tex_angle: rng.f32_range(0.0, std::f32::consts::PI),
+                tex_amp: rng.f32_range(0.15, 0.5),
+                scale: rng.f32_range(0.25, 0.45),
+            })
+            .collect();
+        SyntheticCamera { cfg, specs, rng, seq: 0, scene: 0, t: 0.0 }
+    }
+
+    pub fn n_scenes(&self) -> usize {
+        self.cfg.n_scenes
+    }
+
+    pub fn scene(&self) -> usize {
+        self.scene
+    }
+
+    /// Point the camera at a different object (demo button).
+    pub fn set_scene(&mut self, scene: usize) {
+        self.scene = scene % self.cfg.n_scenes;
+    }
+
+    /// Capture the next frame (animates object pose + sensor noise).
+    pub fn capture(&mut self) -> Frame {
+        let (w, h) = (self.cfg.w, self.cfg.h);
+        let spec = self.specs[self.scene].clone();
+        self.t += 0.13;
+        let cx = 0.25 * self.t.sin();
+        let cy = 0.2 * (0.7 * self.t).cos();
+        let theta = 0.3 * self.t;
+        let jitter: f32 = self.rng.f32_range(0.9, 1.1);
+
+        let mut data = vec![0f32; w * h * 3];
+        let aspect = w as f32 / h as f32;
+        for y in 0..h {
+            for x in 0..w {
+                // [-aspect, aspect] × [-1, 1] coordinates
+                let fx = (2.0 * x as f32 / w as f32 - 1.0) * aspect;
+                let fy = 2.0 * y as f32 / h as f32 - 1.0;
+                let xr = (fx - cx) * theta.cos() + (fy - cy) * theta.sin();
+                let yr = -(fx - cx) * theta.sin() + (fy - cy) * theta.cos();
+                let m = shape_mask(spec.shape, xr, yr, spec.scale * jitter);
+                let carrier = (spec.tex_freq * std::f32::consts::PI
+                    * (xr * spec.tex_angle.cos() + yr * spec.tex_angle.sin())
+                    + self.t)
+                    .sin();
+                let tex = 1.0 + spec.tex_amp * carrier;
+                let clutter = 0.06 * ((2.1 * fx + 1.3 * fy + self.t).sin());
+                let base = (y * w + x) * 3;
+                for c in 0..3 {
+                    let fg = spec.fg[c] * tex;
+                    let bg = spec.bg[c] + clutter;
+                    let v = if m > 0.0 { fg * m + bg * (1.0 - m) } else { bg };
+                    let noise = (self.rng.f32() - 0.5) * 0.05;
+                    data[base + c] = (v + noise).clamp(0.0, 1.0);
+                }
+            }
+        }
+        self.seq += 1;
+        Frame { w, h, data, seq: self.seq, scene: self.scene }
+    }
+}
+
+fn shape_mask(shape: u8, x: f32, y: f32, scale: f32) -> f32 {
+    let xs = x / scale;
+    let ys = y / scale;
+    let r = (xs * xs + ys * ys).sqrt();
+    match shape {
+        0 => (r < 1.0) as u8 as f32,
+        1 => ((xs.abs() < 1.0) && (ys.abs() < 1.0)) as u8 as f32,
+        2 => ((ys > -0.8) && (xs.abs() < 1.0 - (ys + 0.8) / 1.8)) as u8 as f32,
+        3 => ((r < 1.0) && (r > 0.55)) as u8 as f32,
+        4 => (((xs.abs() < 0.35) || (ys.abs() < 0.35)) && r < 1.3) as u8 as f32,
+        _ => {
+            let stripe = ((xs * 4.0).sin() > 0.0) as u8 as f32;
+            if r < 1.0 { 0.4 + 0.6 * stripe } else { 0.0 }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_have_correct_shape_and_range() {
+        let mut cam = SyntheticCamera::new(CameraConfig::default());
+        let f = cam.capture();
+        assert_eq!(f.w, 160);
+        assert_eq!(f.h, 120);
+        assert_eq!(f.data.len(), 160 * 120 * 3);
+        assert!(f.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn seq_increments() {
+        let mut cam = SyntheticCamera::new(CameraConfig::default());
+        assert_eq!(cam.capture().seq, 1);
+        assert_eq!(cam.capture().seq, 2);
+    }
+
+    #[test]
+    fn scenes_differ() {
+        let mut cam = SyntheticCamera::new(CameraConfig { n_scenes: 3, ..Default::default() });
+        cam.set_scene(0);
+        let f0 = cam.capture();
+        cam.set_scene(1);
+        let f1 = cam.capture();
+        let diff: f32 = f0.data.iter().zip(&f1.data).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff / f0.data.len() as f32 > 0.01, "scenes too similar");
+    }
+
+    #[test]
+    fn same_scene_frames_correlated() {
+        // consecutive frames of one scene differ less than across scenes
+        let mut cam = SyntheticCamera::new(CameraConfig { n_scenes: 4, ..Default::default() });
+        let a = cam.capture();
+        let b = cam.capture();
+        cam.set_scene(2);
+        let c = cam.capture();
+        let d_ab: f32 = a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()).sum();
+        let d_ac: f32 = a.data.iter().zip(&c.data).map(|(x, y)| (x - y).abs()).sum();
+        assert!(d_ab < d_ac);
+    }
+
+    #[test]
+    fn scene_wraps() {
+        let mut cam = SyntheticCamera::new(CameraConfig { n_scenes: 3, ..Default::default() });
+        cam.set_scene(7);
+        assert_eq!(cam.scene(), 1);
+    }
+}

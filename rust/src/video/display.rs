@@ -1,0 +1,111 @@
+//! Display sink: the demonstrator's HDMI screen replaced by a HUD that
+//! renders the same on-screen indicators (prediction, confidence, FPS,
+//! enrolled classes) as text — paper §IV-B: "the demonstration includes on
+//! screen indicators for a better user experience".
+
+use std::io::Write;
+
+/// Per-frame HUD state.
+#[derive(Clone, Debug, Default)]
+pub struct Hud {
+    pub frame_seq: u64,
+    pub prediction: Option<String>,
+    pub confidence: f32,
+    pub fps: f64,
+    pub latency_ms: f64,
+    pub power_w: f64,
+    pub classes: Vec<(String, usize)>,
+    pub mode: String,
+}
+
+impl Hud {
+    /// One-line render (the demo loop prints this per frame).
+    pub fn render_line(&self) -> String {
+        let pred = self.prediction.as_deref().unwrap_or("—");
+        let classes: Vec<String> = self
+            .classes
+            .iter()
+            .map(|(l, n)| format!("{l}:{n}"))
+            .collect();
+        format!(
+            "[#{:<5}] {:<9} pred={:<10} conf={:>4.0}% {:>5.1} FPS {:>6.2} ms {:>4.2} W  [{}]",
+            self.frame_seq,
+            self.mode,
+            pred,
+            self.confidence * 100.0,
+            self.fps,
+            self.latency_ms,
+            self.power_w,
+            classes.join(" ")
+        )
+    }
+}
+
+/// Where HUD lines go.
+pub enum DisplaySink {
+    /// Print every `stride`-th frame to stderr.
+    Stderr { stride: u64 },
+    /// Collect lines (tests / examples).
+    Buffer(Vec<String>),
+    /// Discard (benchmarks).
+    Null,
+}
+
+impl DisplaySink {
+    pub fn present(&mut self, hud: &Hud) {
+        match self {
+            DisplaySink::Stderr { stride } => {
+                if *stride <= 1 || hud.frame_seq % *stride == 0 {
+                    let _ = writeln!(std::io::stderr(), "{}", hud.render_line());
+                }
+            }
+            DisplaySink::Buffer(lines) => lines.push(hud.render_line()),
+            DisplaySink::Null => {}
+        }
+    }
+
+    pub fn lines(&self) -> &[String] {
+        match self {
+            DisplaySink::Buffer(lines) => lines,
+            _ => &[],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_fields() {
+        let hud = Hud {
+            frame_seq: 12,
+            prediction: Some("mug".into()),
+            confidence: 0.87,
+            fps: 16.0,
+            latency_ms: 30.0,
+            power_w: 6.2,
+            classes: vec![("mug".into(), 2), ("pen".into(), 1)],
+            mode: "classify".into(),
+        };
+        let line = hud.render_line();
+        for needle in ["mug", "16.0 FPS", "30.00 ms", "6.20 W", "pen:1", "#12"] {
+            assert!(line.contains(needle), "missing {needle} in {line}");
+        }
+    }
+
+    #[test]
+    fn buffer_sink_collects() {
+        let mut sink = DisplaySink::Buffer(Vec::new());
+        sink.present(&Hud::default());
+        sink.present(&Hud { frame_seq: 1, ..Default::default() });
+        assert_eq!(sink.lines().len(), 2);
+    }
+
+    #[test]
+    fn null_sink_silent() {
+        let mut sink = DisplaySink::Null;
+        sink.present(&Hud::default());
+        assert!(sink.lines().is_empty());
+    }
+}

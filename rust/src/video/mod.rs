@@ -1,0 +1,16 @@
+//! Video pipeline of the demonstrator: camera source → preprocessing →
+//! display sink (paper Fig. 4).
+//!
+//! The physical 160×120 camera and HDMI panel are replaced by a synthetic
+//! frame source (procedurally animated scenes, same generator family as the
+//! training data) and a stats HUD sink, so the frame loop — capture, resize
+//! to the backbone resolution, normalize, classify, overlay — runs with
+//! real buffers and real pacing (see DESIGN.md §2 substitutions).
+
+pub mod camera;
+pub mod display;
+pub mod preproc;
+
+pub use camera::{CameraConfig, Frame, SyntheticCamera};
+pub use display::{DisplaySink, Hud};
+pub use preproc::{normalize_inplace, resize_bilinear, Preprocessor};

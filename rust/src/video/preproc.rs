@@ -1,0 +1,134 @@
+//! Preprocessing: bilinear resize (matching `python/compile/data.py`'s
+//! `resize_bilinear` exactly — half-pixel centers, clamped edges) and
+//! normalization, CPU-side as on the PYNQ (paper Fig. 4: "pre-processing
+//! ... executed on the CPU").
+
+use crate::video::camera::Frame;
+
+/// Bilinear resize HWC f32 → `out`×`out` (align_corners=False convention).
+///
+/// Bit-for-bit the same formula as the python exporter so test vectors
+/// cross-check (`python/tests/test_data.py::TestResize`).
+pub fn resize_bilinear(src: &[f32], h: usize, w: usize, c: usize, out: usize) -> Vec<f32> {
+    assert_eq!(src.len(), h * w * c, "src len");
+    if h == out && w == out {
+        return src.to_vec();
+    }
+    let mut dst = vec![0f32; out * out * c];
+    let scale_y = h as f32 / out as f32;
+    let scale_x = w as f32 / out as f32;
+    for oy in 0..out {
+        let fy = ((oy as f32 + 0.5) * scale_y - 0.5).clamp(0.0, (h - 1) as f32);
+        let y0 = fy.floor() as usize;
+        let y1 = (y0 + 1).min(h - 1);
+        let wy = fy - y0 as f32;
+        for ox in 0..out {
+            let fx = ((ox as f32 + 0.5) * scale_x - 0.5).clamp(0.0, (w - 1) as f32);
+            let x0 = fx.floor() as usize;
+            let x1 = (x0 + 1).min(w - 1);
+            let wx = fx - x0 as f32;
+            for ch in 0..c {
+                let p = |yy: usize, xx: usize| src[(yy * w + xx) * c + ch];
+                let top = p(y0, x0) * (1.0 - wx) + p(y0, x1) * wx;
+                let bot = p(y1, x0) * (1.0 - wx) + p(y1, x1) * wx;
+                dst[(oy * out + ox) * c + ch] = top * (1.0 - wy) + bot * wy;
+            }
+        }
+    }
+    dst
+}
+
+/// In-place channel normalization `(x - mean) / std`.
+pub fn normalize_inplace(data: &mut [f32], mean: [f32; 3], std: [f32; 3]) {
+    assert_eq!(data.len() % 3, 0);
+    for px in data.chunks_exact_mut(3) {
+        for c in 0..3 {
+            px[c] = (px[c] - mean[c]) / std[c];
+        }
+    }
+}
+
+/// Frame → backbone input tensor pipeline stage.
+#[derive(Clone, Debug)]
+pub struct Preprocessor {
+    /// Backbone input resolution (32 for the headline config).
+    pub target: usize,
+    /// Channel normalization; identity by default (the synthetic training
+    /// data is consumed un-normalized, matching `aot.py`'s export).
+    pub mean: [f32; 3],
+    pub std: [f32; 3],
+}
+
+impl Preprocessor {
+    pub fn new(target: usize) -> Self {
+        Preprocessor { target, mean: [0.0; 3], std: [1.0; 3] }
+    }
+
+    /// Produce the NHWC (batch-1) input tensor for a frame.
+    pub fn run(&self, frame: &Frame) -> Vec<f32> {
+        let mut x = resize_bilinear(&frame.data, frame.h, frame.w, 3, self.target);
+        if self.mean != [0.0; 3] || self.std != [1.0; 3] {
+            normalize_inplace(&mut x, self.mean, self.std);
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn identity_when_same_size() {
+        let src: Vec<f32> = (0..4 * 4 * 3).map(|i| i as f32).collect();
+        assert_eq!(resize_bilinear(&src, 4, 4, 3, 4), src);
+    }
+
+    #[test]
+    fn constant_preserved() {
+        let src = vec![0.37f32; 12 * 10 * 3];
+        let out = resize_bilinear(&src, 10, 12, 3, 5);
+        assert!(out.iter().all(|&v| (v - 0.37).abs() < 1e-6));
+    }
+
+    #[test]
+    fn range_preserved() {
+        let mut rng = Prng::new(1);
+        let src: Vec<f32> = (0..20 * 20 * 3).map(|_| rng.f32()).collect();
+        let out = resize_bilinear(&src, 20, 20, 3, 7);
+        let (lo, hi) = src.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        assert!(out.iter().all(|&v| v >= lo - 1e-6 && v <= hi + 1e-6));
+    }
+
+    #[test]
+    fn upscale_shape() {
+        let src = vec![0.5f32; 8 * 8 * 3];
+        assert_eq!(resize_bilinear(&src, 8, 8, 3, 32).len(), 32 * 32 * 3);
+    }
+
+    #[test]
+    fn matches_python_formula_spotcheck() {
+        // 2×2 → 1×1: sample at center (0.5, 0.5) = average of 4 pixels
+        let src = vec![
+            0.0, 0.0, 0.0, 1.0, 1.0, 1.0, // row 0: [0, 1]
+            2.0, 2.0, 2.0, 3.0, 3.0, 3.0, // row 1: [2, 3]
+        ];
+        let out = resize_bilinear(&src, 2, 2, 3, 1);
+        assert!((out[0] - 1.5).abs() < 1e-6, "{}", out[0]);
+    }
+
+    #[test]
+    fn normalize() {
+        let mut d = vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0];
+        normalize_inplace(&mut d, [1.0, 2.0, 3.0], [2.0, 2.0, 2.0]);
+        assert_eq!(d, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn preprocessor_output_size() {
+        let frame = Frame { w: 160, h: 120, data: vec![0.3; 160 * 120 * 3], seq: 0, scene: 0 };
+        let p = Preprocessor::new(32);
+        assert_eq!(p.run(&frame).len(), 32 * 32 * 3);
+    }
+}

@@ -1,0 +1,168 @@
+//! CLI integration + failure injection: every subcommand runs in-process
+//! against the real artifacts, and corrupted artifacts are rejected with
+//! errors (never panics / garbage output).
+
+use pefsl::cli::run;
+
+fn sv(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+fn have_artifacts() -> bool {
+    pefsl::artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn resources_all_presets() {
+    for preset in ["z7020-8x8", "z7020-12x12", "z7020-12x12-50mhz"] {
+        assert_eq!(run(&sv(&["resources", "--tarch", preset])).unwrap(), 0);
+    }
+}
+
+#[test]
+fn table1_runs() {
+    assert_eq!(run(&sv(&["table1"])).unwrap(), 0);
+}
+
+#[test]
+fn dse_both_sizes_and_json_export() {
+    let out = std::env::temp_dir().join(format!("pefsl_dse_{}.json", std::process::id()));
+    assert_eq!(
+        run(&sv(&["dse", "--test-size", "32", "--json", out.to_str().unwrap()])).unwrap(),
+        0
+    );
+    // exported JSON parses and has 12 rows
+    let doc = pefsl::json::from_file(&out).unwrap();
+    assert_eq!(doc.as_arr().unwrap().len(), 12);
+    std::fs::remove_file(&out).ok();
+    assert_eq!(run(&sv(&["dse", "--test-size", "84"])).unwrap(), 0);
+}
+
+#[test]
+fn compile_with_trace_export() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let out = std::env::temp_dir().join(format!("pefsl_trace_{}.json", std::process::id()));
+    assert_eq!(
+        run(&sv(&["compile", "--trace", out.to_str().unwrap()])).unwrap(),
+        0
+    );
+    let doc = pefsl::json::from_file(&out).unwrap();
+    assert!(doc.as_arr().unwrap().len() > 100, "trace too small");
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn simulate_parity_exit_code() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    // exit 0 == parity within threshold
+    assert_eq!(run(&sv(&["simulate"])).unwrap(), 0);
+}
+
+#[test]
+fn eval_small_protocols() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    assert_eq!(run(&sv(&["eval", "--episodes", "40"])).unwrap(), 0);
+    assert_eq!(
+        run(&sv(&["eval", "--episodes", "20", "--ways", "10", "--shots", "5", "--queries", "5"])).unwrap(),
+        0
+    );
+}
+
+#[test]
+fn demo_quiet_both_backends() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    assert_eq!(run(&sv(&["demo", "--frames", "4", "--quiet"])).unwrap(), 0);
+    assert_eq!(
+        run(&sv(&["demo", "--frames", "4", "--quiet", "--backend", "pjrt"])).unwrap(),
+        0
+    );
+}
+
+#[test]
+fn demo_bad_backend_errors() {
+    assert!(run(&sv(&["demo", "--backend", "gpu"])).is_err() || !have_artifacts());
+}
+
+// ---------------------------------------------------------------- failure injection ---
+
+/// Copy artifacts into a temp dir with one file corrupted, expect a clean Err.
+fn with_corrupted(file: &str, corrupt: impl Fn(&mut Vec<u8>)) -> anyhow::Result<i32> {
+    let src = pefsl::artifacts_dir();
+    let dir = std::env::temp_dir().join(format!("pefsl_corrupt_{}_{file}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for name in ["graph.json", "weights.bin", "testvec_input.bin", "testvec_feat_q.bin",
+                 "novel_features.bin", "novel_labels.bin", "manifest.json"] {
+        let from = src.join(name);
+        if from.exists() {
+            std::fs::copy(&from, dir.join(name)).unwrap();
+        }
+    }
+    let mut bytes = std::fs::read(dir.join(file)).unwrap();
+    corrupt(&mut bytes);
+    std::fs::write(dir.join(file), &bytes).unwrap();
+    let r = run(&sv(&["simulate", "--artifacts", dir.to_str().unwrap()]));
+    std::fs::remove_dir_all(&dir).ok();
+    r
+}
+
+#[test]
+fn corrupted_weights_magic_rejected() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let r = with_corrupted("weights.bin", |b| {
+        b[3] = b'X'; // break first record's PFT1 magic
+    });
+    assert!(r.is_err(), "corrupt magic must error, got {r:?}");
+}
+
+#[test]
+fn truncated_weights_rejected() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let r = with_corrupted("weights.bin", |b| {
+        b.truncate(b.len() / 2);
+    });
+    assert!(r.is_err(), "truncated weights must error, got {r:?}");
+}
+
+#[test]
+fn invalid_graph_json_rejected() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let r = with_corrupted("graph.json", |b| {
+        b.truncate(b.len() / 3);
+    });
+    assert!(r.is_err(), "truncated graph.json must error, got {r:?}");
+}
+
+#[test]
+fn graph_semantic_corruption_rejected() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    // rename the input tensor reference → dangling SSA
+    let r = with_corrupted("graph.json", |b| {
+        let s = String::from_utf8(b.clone()).unwrap();
+        *b = s.replacen("\"input\": \"input\"", "\"input\": \"ghost\"", 1).into_bytes();
+    });
+    assert!(r.is_err(), "dangling tensor must error, got {r:?}");
+}

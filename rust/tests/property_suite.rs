@@ -1,0 +1,177 @@
+//! Cross-module randomized property suite (artifact-free).
+//!
+//! Heavier invariants than the per-module unit properties: random backbone
+//! specs through build → compile → simulate, cost-model consistency across
+//! tarchs, JSON roundtrip fuzzing, trace/sim cycle agreement.
+
+use pefsl::dse::{build_backbone_graph, BackboneSpec};
+use pefsl::json::{parse, to_string_pretty, Value};
+use pefsl::sim::{trace, Simulator};
+use pefsl::tarch::Tarch;
+use pefsl::tcompiler::{compile, estimate_cycles};
+use pefsl::util::proptest::check;
+use pefsl::util::Prng;
+
+fn random_spec(rng: &mut Prng) -> BackboneSpec {
+    BackboneSpec {
+        depth: if rng.below(2) == 0 { 9 } else { 12 },
+        feature_maps: [2, 3, 4, 6][rng.range(0, 4)],
+        strided: rng.below(2) == 0,
+        image_size: [16, 20, 24][rng.range(0, 3)],
+        head_classes: if rng.below(3) == 0 { Some(rng.range(2, 11)) } else { None },
+    }
+}
+
+fn random_tarch(rng: &mut Prng) -> Tarch {
+    let mut t = Tarch::z7020_12x12();
+    t.array_size = [4, 8, 12, 16][rng.range(0, 4)];
+    t.accumulator_depth = [64, 256, 1024][rng.range(0, 3)];
+    t.dram_scalars_per_cycle = 1 + rng.range(0, 4);
+    t.double_buffered = rng.below(2) == 0;
+    t.name = "fuzz".into();
+    t
+}
+
+#[test]
+fn random_specs_compile_and_simulate() {
+    check(101, 10, |rng| {
+        let spec = random_spec(rng);
+        let tarch = random_tarch(rng);
+        let g = build_backbone_graph(&spec, rng.next_u64()).unwrap();
+        let program = compile(&g, &tarch)
+            .unwrap_or_else(|e| panic!("{} on {:?}: {e}", spec.name(), tarch));
+        let input: Vec<f32> = (0..spec.image_size * spec.image_size * 3)
+            .map(|_| rng.f32())
+            .collect();
+        let mut sim = Simulator::new(&program, &g);
+        let r = sim.run_f32(&input).unwrap();
+        // output well-formed
+        assert_eq!(r.output_f32.len(), g.feature_dim);
+        assert!(r.output_f32.iter().all(|v| v.is_finite()));
+        // dynamic cycles equal the static estimate (same cost model)
+        assert_eq!(r.cycles, program.est_total_cycles, "{}", spec.name());
+        // and the closed-form estimator agrees too
+        let (est, _) = estimate_cycles(&g, &tarch).unwrap();
+        assert_eq!(est, r.cycles, "{}", spec.name());
+    });
+}
+
+#[test]
+fn bigger_arrays_never_slower() {
+    // Monotonicity: growing the PE array can only reduce (or keep) cycles.
+    check(102, 8, |rng| {
+        let spec = random_spec(rng);
+        let g = build_backbone_graph(&spec, 3).unwrap();
+        let mut prev = u64::MAX;
+        for array in [4usize, 8, 12, 16] {
+            let mut t = Tarch::z7020_12x12();
+            t.array_size = array;
+            let (cycles, _) = estimate_cycles(&g, &t).unwrap();
+            assert!(cycles <= prev, "{}: {array}×{array} got slower ({cycles} > {prev})", spec.name());
+            prev = cycles;
+        }
+    });
+}
+
+#[test]
+fn double_buffering_never_hurts_whole_program() {
+    check(103, 8, |rng| {
+        let spec = random_spec(rng);
+        let g = build_backbone_graph(&spec, 5).unwrap();
+        let mut t = random_tarch(rng);
+        t.double_buffered = false;
+        let (serial, _) = estimate_cycles(&g, &t).unwrap();
+        t.double_buffered = true;
+        let (overlapped, _) = estimate_cycles(&g, &t).unwrap();
+        assert!(overlapped <= serial, "{}", spec.name());
+    });
+}
+
+#[test]
+fn quantization_input_noise_bounded_output_drift() {
+    // Perturbing the input below half a quantization step (same codes)
+    // must give IDENTICAL outputs — bit-exactness of the whole pipeline.
+    check(104, 6, |rng| {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, rng.next_u64()).unwrap();
+        let t = Tarch::z7020_8x8();
+        let program = compile(&g, &t).unwrap();
+        let n = 16 * 16 * 3;
+        let input: Vec<f32> = (0..n).map(|_| (rng.range(0, 256) as f32) / 256.0).collect();
+        // on-grid values + tiny sub-LSB noise → same codes
+        let noisy: Vec<f32> = input.iter().map(|&x| x + 0.4 / 256.0 * (rng.f32() - 0.5)).collect();
+        let mut sim = Simulator::new(&program, &g);
+        let a = sim.run_f32(&input).unwrap();
+        let b = sim.run_f32(&noisy).unwrap();
+        assert_eq!(a.output_codes, b.output_codes);
+    });
+}
+
+#[test]
+fn trace_total_matches_simulated_cycles() {
+    check(105, 5, |rng| {
+        let spec = random_spec(rng);
+        let g = build_backbone_graph(&spec, 9).unwrap();
+        let t = random_tarch(rng);
+        let program = compile(&g, &t).unwrap();
+        let events = trace::trace_program(&program);
+        let trace_total: u64 = events.iter().map(|e| e.dur_cycles).sum();
+        assert_eq!(trace_total, program.est_total_cycles);
+        let by_kind = trace::cycles_by_kind(&program);
+        assert_eq!(by_kind.iter().map(|(_, c, _)| c).sum::<u64>(), trace_total);
+    });
+}
+
+// ------------------------------------------------------------------ json fuzz ---
+
+fn random_json(rng: &mut Prng, depth: usize) -> Value {
+    match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.below(2) == 0),
+        2 => Value::Num((rng.next_u64() % 100_000) as f64 / 8.0 - 1000.0),
+        3 => {
+            let n = rng.range(0, 12);
+            Value::Str((0..n).map(|_| {
+                // include escapes and unicode
+                ['a', 'ß', '"', '\\', '\n', '\t', '€', 'z'][rng.range(0, 8)]
+            }).collect())
+        }
+        4 => Value::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth + 1)).collect()),
+        _ => {
+            let mut o = Value::obj();
+            for i in 0..rng.range(0, 5) {
+                o.set(&format!("k{i}"), random_json(rng, depth + 1));
+            }
+            o
+        }
+    }
+}
+
+#[test]
+fn json_roundtrip_fuzz() {
+    check(106, 200, |rng| {
+        let v = random_json(rng, 0);
+        let text = to_string_pretty(&v);
+        let back = parse(&text).unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(back, v, "roundtrip mismatch for\n{text}");
+    });
+}
+
+#[test]
+fn json_parser_never_panics_on_mutations() {
+    // Mutate valid documents; parser must return Ok or Err, never panic.
+    check(107, 150, |rng| {
+        let v = random_json(rng, 0);
+        let mut bytes = to_string_pretty(&v).into_bytes();
+        if bytes.is_empty() {
+            return;
+        }
+        for _ in 0..rng.range(1, 4) {
+            let i = rng.range(0, bytes.len());
+            bytes[i] = (rng.next_u64() & 0x7F) as u8;
+        }
+        if let Ok(s) = String::from_utf8(bytes) {
+            let _ = parse(&s); // must not panic
+        }
+    });
+}
