@@ -5,8 +5,11 @@
 //!
 //! Run: `cargo run --release --example demonstrator [-- frames]`.
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
-use pefsl::coordinator::{DemoConfig, Demonstrator, SimBackend};
+use pefsl::coordinator::{DemoConfig, Demonstrator};
+use pefsl::engine::EngineBuilder;
 use pefsl::graph::import_files;
 use pefsl::tarch::Tarch;
 use pefsl::video::DisplaySink;
@@ -20,15 +23,15 @@ fn main() -> Result<()> {
         .context("run `make artifacts` first")?;
     println!("deploying {} onto {}", graph.name, tarch.name);
 
-    let backend = SimBackend::new(graph, &tarch)?;
+    let engine = Arc::new(EngineBuilder::new().graph(graph).tarch(tarch.clone()).build()?);
     println!(
         "compiled program: {} instructions, modeled accelerator latency {:.2} ms",
-        backend.program().instrs.len(),
-        backend.program().est_latency_ms()
+        engine.info().instr_count.unwrap_or(0),
+        engine.info().modeled_latency_ms.unwrap_or(f64::NAN)
     );
 
     let cfg = DemoConfig { tarch, max_frames: 0, ..Default::default() };
-    let mut demo = Demonstrator::new(cfg, backend, DisplaySink::Stderr { stride: 8 });
+    let mut demo = Demonstrator::new(cfg, engine.clone(), DisplaySink::Stderr { stride: 8 });
 
     println!("\n-- live session: enrolling 3 shots for each of 5 objects, then classifying --");
     let report = demo.run_scripted(3, frames)?;
@@ -50,6 +53,11 @@ fn main() -> Result<()> {
         report.counters.frames_out,
         report.counters.inferences,
         report.counters.enrollments
+    );
+    let stats = engine.stats();
+    println!(
+        "engine service totals : {} requests, {} images, {:.1} ms modeled accelerator time",
+        stats.requests, stats.images, stats.modeled_ms_total
     );
     Ok(())
 }

@@ -17,8 +17,11 @@
 //!
 //! Run: `cargo run --release --example e2e_fewshot`.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
-use pefsl::coordinator::{DemoConfig, Demonstrator, SimBackend};
+use pefsl::coordinator::{DemoConfig, Demonstrator};
+use pefsl::engine::EngineBuilder;
 use pefsl::fewshot::{evaluate, EpisodeConfig, FeatureBank};
 use pefsl::graph::import_files;
 use pefsl::json::{self, Value};
@@ -72,25 +75,29 @@ fn main() -> Result<()> {
     let img = &input.as_f32()?[..img_elems];
     let dims = vec![1, input.shape[1], input.shape[2], input.shape[3]];
 
-    let rt = Runtime::cpu()?;
-    let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![img_elems])?;
-    let f32_feats = &exe.run_f32(&[(img, &dims)])?[0];
-    let mut sim = Simulator::new(&program, &graph);
-    let sim_out = sim.run_f32(img)?;
-    let max_err = f32_feats
-        .iter()
-        .zip(&sim_out.output_f32)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f32, f32::max);
-    println!("[3] parity: max |pjrt_f32 − sim_q8.8| = {max_err:.4}");
-    if max_err > 0.15 {
-        bail!("quantization gap too large: {max_err}");
+    if cfg!(feature = "xla-pjrt") {
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![img_elems])?;
+        let f32_feats = &exe.run_f32(&[(img, &dims)])?[0];
+        let mut sim = Simulator::new(&program, &graph);
+        let sim_out = sim.run_f32(img)?;
+        let max_err = f32_feats
+            .iter()
+            .zip(&sim_out.output_f32)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("[3] parity: max |pjrt_f32 − sim_q8.8| = {max_err:.4}");
+        if max_err > 0.15 {
+            bail!("quantization gap too large: {max_err}");
+        }
+    } else {
+        println!("[3] parity: skipped (built without the `xla-pjrt` feature; stub PJRT runtime)");
     }
 
     // -- 4. serve: the demonstrator loop on the deployed model ------------
-    let backend = SimBackend::new(graph, &tarch)?;
+    let engine = Arc::new(EngineBuilder::new().graph(graph).tarch(tarch.clone()).build()?);
     let cfg = DemoConfig { tarch: tarch.clone(), max_frames: 0, ..Default::default() };
-    let mut demo = Demonstrator::new(cfg, backend, DisplaySink::Null);
+    let mut demo = Demonstrator::new(cfg, engine, DisplaySink::Null);
     let t0 = std::time::Instant::now();
     let report = demo.run_scripted(3, 32)?;
     let wall = t0.elapsed();

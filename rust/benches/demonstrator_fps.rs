@@ -1,11 +1,13 @@
 //! Bench: the demonstrator frame loop (paper §IV-B: **16 FPS, 30 ms, 6.2 W,
-//! 5.75 h**) — runs the scripted live demo on the sim backend and checks
-//! the modeled system figures, then times host-side stages.
+//! 5.75 h**) — runs the scripted live demo over the shared inference engine
+//! and checks the modeled system figures, then times host-side stages.
 //!
 //! Run: `cargo bench --bench demonstrator_fps`.
 
-use pefsl::coordinator::{DemoConfig, Demonstrator, SimBackend};
-use pefsl::graph::import_files;
+use std::sync::Arc;
+
+use pefsl::coordinator::{run_pipelined, DemoConfig, Demonstrator, PipelineConfig};
+use pefsl::engine::{EngineBuilder, InferRequest};
 use pefsl::tarch::Tarch;
 use pefsl::util::bench::{bench, BenchConfig};
 use pefsl::video::{CameraConfig, DisplaySink, Preprocessor, SyntheticCamera};
@@ -15,16 +17,19 @@ fn main() {
     let tarch = Tarch::z7020_12x12();
 
     // Prefer the real trained artifact; fall back to a synthetic backbone.
-    let graph = if dir.join("graph.json").exists() {
-        import_files(dir.join("graph.json"), dir.join("weights.bin")).expect("artifacts")
+    // Either way there is exactly ONE engine: the demo loop, the batched
+    // micro-bench and the pipelined ablation all share it.
+    let engine = Arc::new(if dir.join("graph.json").exists() {
+        EngineBuilder::new().artifacts(&dir).tarch(tarch.clone()).build().expect("artifacts")
     } else {
         eprintln!("note: no artifacts — using synthetic headline backbone");
-        pefsl::dse::build_backbone_graph(&pefsl::dse::BackboneSpec::headline(), 7).unwrap()
-    };
+        let graph =
+            pefsl::dse::build_backbone_graph(&pefsl::dse::BackboneSpec::headline(), 7).unwrap();
+        EngineBuilder::new().graph(graph).tarch(tarch.clone()).build().unwrap()
+    });
 
-    let backend = SimBackend::new(graph, &tarch).expect("compile backend");
     let cfg = DemoConfig { tarch: tarch.clone(), max_frames: 0, ..Default::default() };
-    let mut demo = Demonstrator::new(cfg, backend, DisplaySink::Null);
+    let mut demo = Demonstrator::new(cfg, engine.clone(), DisplaySink::Null);
     let report = demo.run_scripted(3, 24).expect("demo run");
 
     println!(
@@ -56,6 +61,12 @@ fn main() {
         demo.step().unwrap();
     });
 
+    // Batched service requests: N images amortize one engine round-trip.
+    let imgs: Vec<Vec<f32>> = (0..4).map(|_| pre.run(&cam.capture())).collect();
+    bench("demo/engine_infer_batch4", &bcfg, || {
+        std::hint::black_box(engine.infer(InferRequest::batch(imgs.clone())).unwrap());
+    });
+
     // Ablation (paper §IV-B future work): NCM on CPU vs on the FPGA.
     // CPU-NCM on the ARM is modeled by SystemModel::ncm_ms_per_mac; the
     // FPGA variant lowers the distance computation onto the systolic array
@@ -85,22 +96,25 @@ fn main() {
     });
 
     // Ablation: serial PYNQ driver loop (the paper's 16 FPS) vs a
-    // two-stage pipeline overlapping CPU work with the accelerator.
-    let graph2 = if dir.join("graph.json").exists() {
-        import_files(dir.join("graph.json"), dir.join("weights.bin")).unwrap()
-    } else {
-        pefsl::dse::build_backbone_graph(&pefsl::dse::BackboneSpec::headline(), 7).unwrap()
-    };
-    let mut backend2 = SimBackend::new(graph2, &tarch).unwrap();
-    let pcfg = pefsl::coordinator::PipelineConfig { tarch: tarch.clone(), ..Default::default() };
-    let pr = pefsl::coordinator::run_pipelined(&pcfg, &mut backend2, 2, 24).unwrap();
+    // two-stage pipeline overlapping CPU work with batched accelerator
+    // requests — on the SAME engine the demo loop used (no recompile).
+    let pcfg = PipelineConfig { tarch: tarch.clone(), ..Default::default() };
+    let pr = run_pipelined(&pcfg, engine.clone(), 2, 24).unwrap();
     println!(
         "ablation serial-vs-pipelined: serial {:.1} FPS (paper's loop) → pipelined {:.1} FPS \
-         (host {:.1} f/s, acc {:.3})",
+         (host {:.1} f/s, {} infer requests for {} frames, acc {:.3})",
         pr.serial_fps,
         pr.pipelined_fps,
         pr.host_fps,
+        pr.requests,
+        pr.frames,
         pr.accuracy.unwrap_or(f64::NAN)
     );
     assert!(pr.pipelined_fps > pr.serial_fps);
+
+    let stats = engine.stats();
+    println!(
+        "engine totals: {} requests / {} images served, {:.1} ms modeled accelerator time",
+        stats.requests, stats.images, stats.modeled_ms_total
+    );
 }

@@ -1,11 +1,13 @@
 //! Bench: NCM classifier latency — the CPU-side stage of the demonstrator
 //! (paper §IV-B runs NCM on the ARM; a future version moves it to the
-//! FPGA).  Measures enroll + classify across ways/shots/dims, validating
-//! that NCM is negligible next to the 30 ms backbone (the paper's implicit
-//! claim when it leaves NCM on the CPU).
+//! FPGA).  Measures enroll + classify through the [`Session`] API (the
+//! per-client path every engine client uses) across ways/shots/dims,
+//! validating that NCM is negligible next to the 30 ms backbone (the
+//! paper's implicit claim when it leaves NCM on the CPU).
 //!
 //! Run: `cargo bench --bench ncm_latency`.
 
+use pefsl::engine::Session;
 use pefsl::ncm::NcmClassifier;
 use pefsl::util::bench::{bench, BenchConfig};
 use pefsl::util::Prng;
@@ -19,11 +21,11 @@ fn main() {
     let mut rng = Prng::new(3);
 
     for (ways, shots, dim) in [(5usize, 1usize, 80usize), (5, 5, 80), (20, 1, 80), (5, 1, 640)] {
-        let mut ncm = NcmClassifier::new(dim);
+        let mut session = Session::detached(dim);
         for w in 0..ways {
-            let c = ncm.add_class(format!("c{w}"));
+            let c = session.add_class(format!("c{w}"));
             for _ in 0..shots {
-                ncm.enroll(c, &feat(&mut rng, dim)).unwrap();
+                session.enroll_feature(c, &feat(&mut rng, dim)).unwrap();
             }
         }
         let q = feat(&mut rng, dim);
@@ -31,21 +33,22 @@ fn main() {
             &format!("ncm/classify_w{ways}_s{shots}_d{dim}"),
             &cfg,
             || {
-                std::hint::black_box(ncm.classify(&q).unwrap());
+                std::hint::black_box(session.classify_feature(&q).unwrap());
             },
         );
         // NCM must stay far below the 30 ms inference budget.
         assert!(r.mean_ms() < 1.0, "NCM classify {} ms", r.mean_ms());
     }
 
-    let mut ncm = NcmClassifier::new(80);
-    let c = ncm.add_class("x");
+    let mut session = Session::detached(80);
+    let c = session.add_class("x");
     let f = feat(&mut rng, 80);
     bench("ncm/enroll_d80", &cfg, || {
-        ncm.enroll(c, &f).unwrap();
+        session.enroll_feature(c, &f).unwrap();
     });
 
-    // batch distances (the episodic evaluation hot loop)
+    // batch distances (the episodic evaluation hot loop) — the one direct
+    // NcmClassifier use left: Session does not expose raw distance matrices.
     let mut ncm = NcmClassifier::new(80);
     for w in 0..5 {
         let c = ncm.add_class(format!("c{w}"));

@@ -9,6 +9,10 @@ use pefsl::util::bench::{bench, BenchConfig};
 use pefsl::util::tensorio::read_tensor;
 
 fn main() {
+    if !cfg!(feature = "xla-pjrt") {
+        eprintln!("skipping: built without the `xla-pjrt` feature (stub PJRT runtime)");
+        return;
+    }
     let dir = pefsl::artifacts_dir();
     if !dir.join("model.hlo.txt").exists() {
         eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());

@@ -1,15 +1,17 @@
 //! CLI command implementations.
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
-use crate::coordinator::{DemoConfig, Demonstrator, PjrtBackend, SimBackend};
+use crate::coordinator::{DemoConfig, Demonstrator};
 use crate::dse::{fig5_rows, join_accuracy, BackboneSpec};
+use crate::engine::{BackendKind, EngineBuilder};
 use crate::fewshot::{evaluate, EpisodeConfig, FeatureBank};
 use crate::graph::import_files;
 use crate::json::{self, Value};
 use crate::power::system_power;
 use crate::resources::{accelerator_resources, demonstrator_resources};
-use crate::runtime::Runtime;
 use crate::tarch::Tarch;
 use crate::tcompiler::compile;
 use crate::util::tensorio::read_tensor;
@@ -21,10 +23,10 @@ fn tarch_from(args: &Args) -> Result<Tarch> {
     Tarch::preset(args.get_str("tarch", "z7020-12x12"))
 }
 
+/// Artifact resolution is centralized in the engine builder; the CLI only
+/// forwards its optional `--artifacts` override.
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
-    args.get("artifacts")
-        .map(Into::into)
-        .unwrap_or_else(crate::artifacts_dir)
+    crate::engine::resolve_artifacts_dir(args.get("artifacts").map(std::path::Path::new))
 }
 
 /// `pefsl demo` — run the scripted live demonstrator.
@@ -32,31 +34,25 @@ pub fn demo(args: &Args) -> Result<i32> {
     let tarch = tarch_from(args)?;
     let frames = args.get_u64("frames", 64)?;
     let shots = args.get_usize("shots", 3)?;
-    let dir = artifacts_dir(args);
     let backend_kind = args.get_str("backend", "sim");
 
-    let cfg = DemoConfig { tarch: tarch.clone(), max_frames: frames, ..Default::default() };
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .artifacts(artifacts_dir(args))
+            .backend(BackendKind::parse(backend_kind)?)
+            .tarch(tarch.clone())
+            .build()?,
+    );
+    let cfg = DemoConfig {
+        tarch: tarch.clone(),
+        max_frames: frames,
+        input_size: engine.input_size(),
+        ..Default::default()
+    };
     let sink = if args.has("quiet") { DisplaySink::Null } else { DisplaySink::Stderr { stride: 8 } };
 
-    let report = match backend_kind {
-        "sim" => {
-            let g = import_files(dir.join("graph.json"), dir.join("weights.bin"))
-                .context("load graph artifacts (run `make artifacts` first)")?;
-            let mut demo = Demonstrator::new(cfg, SimBackend::new(g, &tarch)?, sink);
-            demo.run_scripted(shots, frames)?
-        }
-        "pjrt" => {
-            let manifest = json::from_file(dir.join("manifest.json"))?;
-            let size = manifest.path(&["backbone", "image_size"]).and_then(Value::as_usize).unwrap_or(32);
-            let fdim = manifest.path(&["backbone", "feature_dim"]).and_then(Value::as_usize).unwrap_or(80);
-            let rt = Runtime::cpu()?;
-            let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![size * size * 3])?;
-            let backend = PjrtBackend::new(exe, vec![1, size, size, 3], fdim);
-            let mut demo = Demonstrator::new(DemoConfig { input_size: size, ..cfg }, backend, sink);
-            demo.run_scripted(shots, frames)?
-        }
-        other => anyhow::bail!("unknown backend '{other}' (sim|pjrt)"),
-    };
+    let mut demo = Demonstrator::new(cfg, engine, sink);
+    let report = demo.run_scripted(shots, frames)?;
 
     println!(
         "demo[{}]: frames={} modeled_fps={:.1} inference={:.2}ms host_p50={:.0}µs \

@@ -1,14 +1,24 @@
-//! Inference backends: the simulated accelerator (bit-exact Q8.8 +
-//! modeled FPGA latency) and the PJRT f32 reference.
+//! **Deprecated compat shim** over [`crate::engine`].
+//!
+//! The single-frame `Backend` trait was the pre-engine inference API:
+//! exclusive-borrow (`&mut self`), one image per call, modeled latency
+//! smuggled through `modeled_latency_ms()` side-state.  It survives for one
+//! release, implemented as a thin wrapper over [`Engine`], so downstream
+//! code migrates at its own pace — new code should use
+//! [`crate::engine::Engine`] / [`crate::engine::Session`] directly.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::engine::{Engine, EngineBuilder, InferRequest};
 use crate::graph::Graph;
 use crate::runtime::Executable;
-use crate::sim::Simulator;
-use crate::tcompiler::Program;
 
 /// A backbone inference engine used by the demonstrator.
+///
+/// Compat shim — superseded by [`crate::engine::Engine`], which is shared
+/// (`&self`), batched, and returns latency metadata as response data.
 pub trait Backend {
     /// NHWC batch-1 f32 image → feature vector.
     fn features(&mut self, input: &[f32]) -> Result<Vec<f32>>;
@@ -22,32 +32,29 @@ pub trait Backend {
     fn feature_dim(&self) -> usize;
 }
 
-/// Bit-exact accelerator simulation backend.
+/// Bit-exact accelerator simulation backend (shim over a sim [`Engine`]).
 pub struct SimBackend {
-    program: Program,
-    graph: Graph,
+    engine: Arc<Engine>,
     last_latency_ms: Option<f64>,
-    feature_dim: usize,
 }
 
 impl SimBackend {
     pub fn new(graph: Graph, tarch: &crate::tarch::Tarch) -> Result<Self> {
-        let program = crate::tcompiler::compile(&graph, tarch)?;
-        let feature_dim = graph.feature_dim;
-        Ok(SimBackend { program, graph, last_latency_ms: None, feature_dim })
+        let engine = EngineBuilder::new().graph(graph).tarch(tarch.clone()).build()?;
+        Ok(SimBackend { engine: Arc::new(engine), last_latency_ms: None })
     }
 
-    pub fn program(&self) -> &Program {
-        &self.program
+    /// The engine this shim wraps (migration escape hatch).
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
     }
 }
 
 impl Backend for SimBackend {
     fn features(&mut self, input: &[f32]) -> Result<Vec<f32>> {
-        let mut sim = Simulator::new(&self.program, &self.graph);
-        let r = sim.run_f32(input)?;
-        self.last_latency_ms = Some(r.latency_ms);
-        Ok(r.output_f32)
+        let item = self.engine.infer(InferRequest::single(input.to_vec()))?.into_single()?;
+        self.last_latency_ms = item.metrics.modeled_latency_ms;
+        Ok(item.features)
     }
 
     fn modeled_latency_ms(&self) -> Option<f64> {
@@ -59,28 +66,31 @@ impl Backend for SimBackend {
     }
 
     fn feature_dim(&self) -> usize {
-        self.feature_dim
+        self.engine.feature_dim()
     }
 }
 
-/// PJRT f32 backend over an AOT HLO artifact.
+/// PJRT f32 backend over an AOT HLO artifact (shim over a PJRT [`Engine`]).
 pub struct PjrtBackend {
-    exe: Executable,
-    input_dims: Vec<usize>,
-    feature_dim: usize,
+    engine: Arc<Engine>,
 }
 
 impl PjrtBackend {
     /// `input_dims` is the NHWC input shape of the lowered module.
     pub fn new(exe: Executable, input_dims: Vec<usize>, feature_dim: usize) -> Self {
-        PjrtBackend { exe, input_dims, feature_dim }
+        PjrtBackend { engine: Arc::new(Engine::from_pjrt(exe, input_dims, feature_dim)) }
+    }
+
+    /// The engine this shim wraps (migration escape hatch).
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
     }
 }
 
 impl Backend for PjrtBackend {
     fn features(&mut self, input: &[f32]) -> Result<Vec<f32>> {
-        let outs = self.exe.run_f32(&[(input, &self.input_dims)])?;
-        Ok(outs.into_iter().next().unwrap_or_default())
+        let item = self.engine.infer(InferRequest::single(input.to_vec()))?.into_single()?;
+        Ok(item.features)
     }
 
     fn modeled_latency_ms(&self) -> Option<f64> {
@@ -92,7 +102,7 @@ impl Backend for PjrtBackend {
     }
 
     fn feature_dim(&self) -> usize {
-        self.feature_dim
+        self.engine.feature_dim()
     }
 }
 
@@ -121,5 +131,18 @@ mod tests {
         let mut b = SimBackend::new(g, &Tarch::z7020_8x8()).unwrap();
         let x = vec![0.25; 12 * 12 * 3];
         assert_eq!(b.features(&x).unwrap(), b.features(&x).unwrap());
+    }
+
+    #[test]
+    fn shim_matches_engine_directly() {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 3).unwrap();
+        let mut b = SimBackend::new(g, &Tarch::z7020_8x8()).unwrap();
+        let x = vec![0.3; 16 * 16 * 3];
+        let via_shim = b.features(&x).unwrap();
+        let via_engine =
+            b.engine().infer(InferRequest::single(x)).unwrap().into_single().unwrap();
+        assert_eq!(via_shim, via_engine.features);
+        assert_eq!(b.modeled_latency_ms(), via_engine.metrics.modeled_latency_ms);
     }
 }

@@ -6,19 +6,23 @@
 //! overlaying prediction/confidence/FPS on screen.  Commands arrive on a
 //! channel (the buttons); the loop is a plain single-threaded driver as on
 //! the board, with a threaded front-end available via `run_threaded`.
+//!
+//! The demonstrator is one client of the shared [`Engine`]: it owns a
+//! [`Session`] (its NCM state) and reads modeled latency/cycles from the
+//! engine's responses — no backend side-channels.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::engine::{Engine, Session};
 use crate::metrics::{Counters, LatencyStats};
-use crate::ncm::NcmClassifier;
 use crate::power::system_power;
 use crate::tarch::Tarch;
 use crate::video::{CameraConfig, DisplaySink, Hud, Preprocessor, SyntheticCamera};
 
-use super::backend::Backend;
 use super::system_model::SystemModel;
 
 /// Button presses / control events of the live demo.
@@ -79,13 +83,13 @@ pub struct DemoReport {
     pub counters: Counters,
 }
 
-/// The demonstrator.
-pub struct Demonstrator<B: Backend> {
+/// The demonstrator: one engine client driving the §IV-B frame loop.
+pub struct Demonstrator {
     cfg: DemoConfig,
     camera: SyntheticCamera,
     pre: Preprocessor,
-    ncm: NcmClassifier,
-    backend: B,
+    engine: Arc<Engine>,
+    session: Session,
     pub sink: DisplaySink,
     counters: Counters,
     host_lat: LatencyStats,
@@ -96,18 +100,18 @@ pub struct Demonstrator<B: Backend> {
     scene_to_class: Vec<Option<usize>>,
 }
 
-impl<B: Backend> Demonstrator<B> {
-    pub fn new(cfg: DemoConfig, backend: B, sink: DisplaySink) -> Self {
+impl Demonstrator {
+    pub fn new(cfg: DemoConfig, engine: Arc<Engine>, sink: DisplaySink) -> Self {
         let camera = SyntheticCamera::new(cfg.camera.clone());
         let pre = Preprocessor::new(cfg.input_size);
-        let ncm = NcmClassifier::new(backend.feature_dim());
+        let session = Session::new(engine.clone());
         let n_scenes = camera.n_scenes();
         Demonstrator {
             cfg,
             camera,
             pre,
-            ncm,
-            backend,
+            engine,
+            session,
             sink,
             counters: Counters::default(),
             host_lat: LatencyStats::new(4096),
@@ -122,7 +126,7 @@ impl<B: Backend> Demonstrator<B> {
     pub fn handle(&mut self, cmd: Command) -> Result<bool> {
         match cmd {
             Command::NewClass(label) => {
-                let idx = self.ncm.add_class(label);
+                let idx = self.session.add_class(label);
                 self.scene_to_class[self.camera.scene()] = Some(idx);
                 Ok(true)
             }
@@ -130,15 +134,14 @@ impl<B: Backend> Demonstrator<B> {
                 let frame = self.camera.capture();
                 self.counters.frames_in += 1;
                 let x = self.pre.run(&frame);
-                let feat = self.backend.features(&x)?;
+                self.session.enroll_image(idx, &x)?;
                 self.counters.inferences += 1;
-                self.ncm.enroll(idx, &feat)?;
                 self.counters.enrollments += 1;
                 self.scene_to_class[frame.scene] = Some(idx);
                 Ok(true)
             }
             Command::Reset => {
-                self.ncm.reset();
+                self.session.reset();
                 self.scene_to_class.iter_mut().for_each(|s| *s = None);
                 self.counters.resets += 1;
                 Ok(true)
@@ -157,14 +160,14 @@ impl<B: Backend> Demonstrator<B> {
         let frame = self.camera.capture();
         self.counters.frames_in += 1;
         let x = self.pre.run(&frame);
-        let feat = self.backend.features(&x)?;
+        let item = self.session.extract(&x)?;
         self.counters.inferences += 1;
 
-        let accel_ms = self.backend.modeled_latency_ms().unwrap_or(0.0);
+        let accel_ms = item.metrics.modeled_latency_ms.unwrap_or(0.0);
         self.accel_ms.push(accel_ms);
 
-        let (pred_label, confidence) = if self.ncm.has_enrolled() {
-            let p = self.ncm.classify(&feat)?;
+        let (pred_label, confidence) = if self.session.has_enrolled() {
+            let p = self.session.classify_feature(&item.features)?;
             if let Some(want) = self.scene_to_class[frame.scene] {
                 self.judged += 1;
                 if p.class_idx == want {
@@ -172,7 +175,7 @@ impl<B: Backend> Demonstrator<B> {
                 }
             }
             (
-                self.ncm.class_label(p.class_idx).unwrap_or("?").to_string(),
+                self.session.class_label(p.class_idx).unwrap_or("?").to_string(),
                 p.confidence,
             )
         } else {
@@ -185,8 +188,8 @@ impl<B: Backend> Demonstrator<B> {
         let m = &self.cfg.system;
         let cam_px = self.cfg.camera.w * self.cfg.camera.h;
         let tgt_px = self.cfg.input_size * self.cfg.input_size;
-        let fdim = self.backend.feature_dim();
-        let ncls = self.ncm.n_classes();
+        let fdim = self.engine.feature_dim();
+        let ncls = self.session.n_classes();
         let fps = m.fps(accel_ms, cam_px, tgt_px, fdim, ncls);
         let duty = m.duty(accel_ms, cam_px, tgt_px, fdim, ncls);
         let power = system_power(&self.cfg.tarch, duty).total_w();
@@ -198,10 +201,10 @@ impl<B: Backend> Demonstrator<B> {
             fps,
             latency_ms: m.inference_ms(accel_ms),
             power_w: power,
-            classes: (0..self.ncm.n_classes())
-                .map(|i| (self.ncm.class_label(i).unwrap_or("?").to_string(), self.ncm.shot_count(i)))
+            classes: (0..self.session.n_classes())
+                .map(|i| (self.session.class_label(i).unwrap_or("?").to_string(), self.session.shot_count(i)))
                 .collect(),
-            mode: if self.ncm.has_enrolled() { "classify" } else { "idle" }.into(),
+            mode: if self.session.has_enrolled() { "classify" } else { "idle" }.into(),
         };
         self.sink.present(&hud);
         Ok(())
@@ -252,8 +255,8 @@ impl<B: Backend> Demonstrator<B> {
         let m = &self.cfg.system;
         let cam_px = self.cfg.camera.w * self.cfg.camera.h;
         let tgt_px = self.cfg.input_size * self.cfg.input_size;
-        let fdim = self.backend.feature_dim();
-        let ncls = self.ncm.n_classes().max(1);
+        let fdim = self.engine.feature_dim();
+        let ncls = self.session.n_classes().max(1);
         let duty = m.duty(accel_mean, cam_px, tgt_px, fdim, ncls);
         let power = system_power(&self.cfg.tarch, duty);
         DemoReport {
@@ -272,10 +275,7 @@ impl<B: Backend> Demonstrator<B> {
 
 /// Run the demo with a command script applied from a second thread
 /// (exercises the channel path the physical buttons use).
-pub fn run_threaded<B: Backend + Send>(
-    mut demo: Demonstrator<B>,
-    script: Vec<Command>,
-) -> Result<DemoReport> {
+pub fn run_threaded(mut demo: Demonstrator, script: Vec<Command>) -> Result<DemoReport> {
     let (tx, rx) = mpsc::channel();
     std::thread::scope(|s| {
         s.spawn(move || {
@@ -293,14 +293,18 @@ pub fn run_threaded<B: Backend + Send>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::SimBackend;
     use crate::dse::{build_backbone_graph, BackboneSpec};
+    use crate::engine::EngineBuilder;
 
-    fn tiny_demo(max_frames: u64) -> Demonstrator<SimBackend> {
-        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+    fn tiny_engine(image_size: usize, feature_maps: usize, tarch: &Tarch) -> Arc<Engine> {
+        let spec = BackboneSpec { image_size, feature_maps, ..BackboneSpec::headline() };
         let g = build_backbone_graph(&spec, 5).unwrap();
+        Arc::new(EngineBuilder::new().graph(g).tarch(tarch.clone()).build().unwrap())
+    }
+
+    fn tiny_demo(max_frames: u64) -> Demonstrator {
         let tarch = Tarch::z7020_8x8();
-        let backend = SimBackend::new(g, &tarch).unwrap();
+        let engine = tiny_engine(16, 4, &tarch);
         let cfg = DemoConfig {
             camera: CameraConfig { n_scenes: 3, seed: 11, ..Default::default() },
             input_size: 16,
@@ -308,7 +312,7 @@ mod tests {
             max_frames,
             ..Default::default()
         };
-        Demonstrator::new(cfg, backend, DisplaySink::Buffer(Vec::new()))
+        Demonstrator::new(cfg, engine, DisplaySink::Buffer(Vec::new()))
     }
 
     #[test]
@@ -328,10 +332,8 @@ mod tests {
     fn enrolled_scenes_mostly_recognized() {
         // A random fm4@16 backbone is too weak to separate scenes; use a
         // slightly larger random backbone (fm8 @ 24px) for a stable margin.
-        let spec = BackboneSpec { image_size: 24, feature_maps: 8, ..BackboneSpec::headline() };
-        let g = build_backbone_graph(&spec, 5).unwrap();
         let tarch = Tarch::z7020_8x8();
-        let backend = SimBackend::new(g, &tarch).unwrap();
+        let engine = tiny_engine(24, 8, &tarch);
         let cfg = DemoConfig {
             camera: CameraConfig { n_scenes: 3, seed: 11, ..Default::default() },
             input_size: 24,
@@ -339,7 +341,7 @@ mod tests {
             max_frames: 0,
             ..Default::default()
         };
-        let mut demo = Demonstrator::new(cfg, backend, DisplaySink::Buffer(Vec::new()));
+        let mut demo = Demonstrator::new(cfg, engine, DisplaySink::Buffer(Vec::new()));
         let report = demo.run_scripted(3, 30).unwrap();
         // even an untrained random backbone separates these synthetic
         // scenes reasonably; just require better than chance
@@ -374,5 +376,27 @@ mod tests {
         ];
         let report = run_threaded(demo, script).unwrap();
         assert!(report.counters.enrollments >= 1);
+    }
+
+    #[test]
+    fn two_demos_share_one_engine() {
+        // Two independent demonstrators (own sessions) over one engine.
+        let tarch = Tarch::z7020_8x8();
+        let engine = tiny_engine(16, 4, &tarch);
+        let cfg = DemoConfig {
+            camera: CameraConfig { n_scenes: 2, seed: 3, ..Default::default() },
+            input_size: 16,
+            tarch,
+            max_frames: 0,
+            ..Default::default()
+        };
+        let mut a = Demonstrator::new(cfg.clone(), engine.clone(), DisplaySink::Null);
+        let mut b = Demonstrator::new(cfg, engine.clone(), DisplaySink::Null);
+        let ra = a.run_scripted(1, 4).unwrap();
+        let rb = b.run_scripted(1, 4).unwrap();
+        assert_eq!(ra.frames, 4);
+        assert_eq!(rb.frames, 4);
+        // both demos' work landed on the same engine
+        assert!(engine.stats().images >= 12);
     }
 }

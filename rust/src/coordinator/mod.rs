@@ -3,12 +3,16 @@
 //! → HDMI overlay, plus the live-demo state machine (enroll / classify /
 //! reset buttons).
 //!
-//! Two inference backends expose the same trait: [`SimBackend`] executes
-//! the compiled accelerator program bit-exactly (and yields the *modeled
-//! FPGA latency* from its cycle count), [`PjrtBackend`] runs the AOT f32
-//! HLO via PJRT (numeric reference).  The system-time model converts
-//! modeled FPGA + ARM costs into the paper's FPS accounting, calibrated to
-//! §IV-B's 16 FPS at 30 ms inference.
+//! Inference goes through the shared [`crate::engine::Engine`] service: the
+//! [`Demonstrator`] owns a [`crate::engine::Session`] (its per-client NCM
+//! state) and reads modeled FPGA latency/cycles from engine responses; the
+//! pipelined variant ([`run_pipelined`]) overlaps CPU work with batched
+//! engine requests.  The system-time model converts modeled FPGA + ARM
+//! costs into the paper's FPS accounting, calibrated to §IV-B's 16 FPS at
+//! 30 ms inference.
+//!
+//! The single-frame [`Backend`] trait ([`SimBackend`] / [`PjrtBackend`]) is
+//! a deprecated compat shim over the engine, kept for one release.
 
 mod backend;
 mod demo;

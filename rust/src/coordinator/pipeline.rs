@@ -8,18 +8,23 @@
 //! frame *n+1* while the accelerator runs frame *n*, with a bounded
 //! `sync_channel` providing backpressure so memory stays constant.
 //! Modeled frame time becomes `max(cpu_ms, accel_ms)` instead of the sum.
+//!
+//! On top of the engine redesign the consumer also **batches**: whenever
+//! the producer has run ahead, all staged frames are drained and served in
+//! one [`Engine::infer`] request (up to `max_batch`), amortizing the
+//! service round-trip.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::engine::{Engine, InferRequest, Session};
 use crate::metrics::LatencyStats;
-use crate::ncm::NcmClassifier;
 use crate::power::system_power;
 use crate::tarch::Tarch;
 use crate::video::{CameraConfig, Preprocessor, SyntheticCamera};
 
-use super::backend::Backend;
 use super::system_model::SystemModel;
 
 /// Result of a pipelined run.
@@ -36,6 +41,8 @@ pub struct PipelineReport {
     /// Modeled power at the pipelined duty cycle.
     pub power_w: f64,
     pub accuracy: Option<f64>,
+    /// `infer` requests issued (≤ frames when batching kicks in).
+    pub requests: u64,
 }
 
 /// Configuration for the pipelined run.
@@ -47,6 +54,8 @@ pub struct PipelineConfig {
     pub system: SystemModel,
     /// Bounded queue depth between producer and consumer (backpressure).
     pub queue_depth: usize,
+    /// Max staged frames served in one batched `infer` request.
+    pub max_batch: usize,
 }
 
 impl Default for PipelineConfig {
@@ -57,6 +66,7 @@ impl Default for PipelineConfig {
             tarch: Tarch::z7020_12x12(),
             system: SystemModel::default(),
             queue_depth: 2,
+            max_batch: 4,
         }
     }
 }
@@ -69,25 +79,24 @@ struct Staged {
 
 /// Run `frames` classification frames through the two-stage pipeline after
 /// enrolling `shots` support examples per scene (single-threaded enroll).
-pub fn run_pipelined<B: Backend>(
+pub fn run_pipelined(
     cfg: &PipelineConfig,
-    backend: &mut B,
+    engine: Arc<Engine>,
     shots: usize,
     frames: u64,
 ) -> Result<PipelineReport> {
     let mut camera = SyntheticCamera::new(cfg.camera.clone());
     let pre = Preprocessor::new(cfg.input_size);
-    let mut ncm = NcmClassifier::new(backend.feature_dim());
+    let mut session = Session::new(engine.clone());
 
     // --- enroll (serial; enrollment is interactive in the live demo) ----
     let n_scenes = camera.n_scenes();
     for scene in 0..n_scenes {
         camera.set_scene(scene);
-        let cls = ncm.add_class(format!("obj{scene}"));
+        let cls = session.add_class(format!("obj{scene}"));
         for _ in 0..shots {
             let f = camera.capture();
-            let feat = backend.features(&pre.run(&f))?;
-            ncm.enroll(cls, &feat)?;
+            session.enroll_image(cls, &pre.run(&f))?;
         }
     }
 
@@ -97,6 +106,8 @@ pub fn run_pipelined<B: Backend>(
     let mut hits = 0u64;
     let mut judged = 0u64;
     let mut accel_ms_sum = 0.0f64;
+    let mut requests = 0u64;
+    let max_batch = cfg.max_batch.max(1);
     let t_run = std::time::Instant::now();
 
     std::thread::scope(|s| -> Result<()> {
@@ -113,18 +124,56 @@ pub fn run_pipelined<B: Backend>(
             }
         });
 
-        // consumer: inference + NCM (the accelerator half)
-        for _ in 0..frames {
-            let staged = rx.recv().expect("producer hung up early");
-            let t0 = std::time::Instant::now();
-            let feat = backend.features(&staged.input)?;
-            accel_ms_sum += backend.modeled_latency_ms().unwrap_or(0.0);
-            let p = ncm.classify(&feat)?;
-            judged += 1;
-            if p.class_idx == staged.scene {
-                hits += 1;
+        // consumer: batched inference + NCM (the accelerator half).
+        // `rx` is moved into this closure so it drops on ANY exit path
+        // (including an early `?`/bail), which fails the producer's next
+        // `send` and lets the scope join instead of deadlocking.
+        let rx = rx;
+        let mut done = 0u64;
+        while done < frames {
+            // If the producer died mid-run, surface an error instead of
+            // panicking (its channel end drops on any exit path).
+            let first = match rx.recv() {
+                Ok(staged) => staged,
+                Err(_) => bail!(
+                    "pipeline producer hung up after {done}/{frames} frames"
+                ),
+            };
+            // Drain whatever else is already staged into one batch.
+            let mut batch = vec![first];
+            while batch.len() < max_batch {
+                match rx.try_recv() {
+                    Ok(staged) => batch.push(staged),
+                    Err(_) => break,
+                }
             }
-            host.record(t0.elapsed());
+
+            let t0 = std::time::Instant::now();
+            let mut scenes = Vec::with_capacity(batch.len());
+            let images: Vec<Vec<f32>> = batch
+                .into_iter()
+                .map(|staged| {
+                    scenes.push(staged.scene);
+                    staged.input
+                })
+                .collect();
+            let resp = engine.infer(InferRequest::batch(images))?;
+            requests += 1;
+            for (item, &scene) in resp.items.iter().zip(&scenes) {
+                accel_ms_sum += item.metrics.modeled_latency_ms.unwrap_or(0.0);
+                let p = session.classify_feature(&item.features)?;
+                judged += 1;
+                if p.class_idx == scene {
+                    hits += 1;
+                }
+            }
+            // Host time covers the full consumer stage (inference + NCM),
+            // matching the Demonstrator's per-frame accounting.
+            let per_item_us = t0.elapsed().as_secs_f64() * 1e6 / scenes.len() as f64;
+            for _ in 0..scenes.len() {
+                host.record_us(per_item_us);
+            }
+            done += scenes.len() as u64;
         }
         Ok(())
     })?;
@@ -133,7 +182,7 @@ pub fn run_pipelined<B: Backend>(
     let m = &cfg.system;
     let cam_px = cfg.camera.w * cfg.camera.h;
     let tgt_px = cfg.input_size * cfg.input_size;
-    let fdim = backend.feature_dim();
+    let fdim = engine.feature_dim();
     let accel_ms = if frames > 0 { accel_ms_sum / frames as f64 } else { 0.0 };
     let cpu_ms = m.cpu_ms(cam_px, tgt_px, fdim, n_scenes);
     let serial_ms = accel_ms + cpu_ms;
@@ -148,54 +197,70 @@ pub fn run_pipelined<B: Backend>(
         host_p50_us: host.p50_us(),
         power_w: system_power(&cfg.tarch, duty.clamp(0.0, 1.0)).total_w(),
         accuracy: if judged > 0 { Some(hits as f64 / judged as f64) } else { None },
+        requests,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::SimBackend;
     use crate::dse::{build_backbone_graph, BackboneSpec};
+    use crate::engine::EngineBuilder;
 
-    fn setup() -> (PipelineConfig, SimBackend) {
+    fn setup() -> (PipelineConfig, Arc<Engine>) {
         let spec = BackboneSpec { image_size: 24, feature_maps: 8, ..BackboneSpec::headline() };
         let g = build_backbone_graph(&spec, 5).unwrap();
         let tarch = Tarch::z7020_12x12();
-        let backend = SimBackend::new(g, &tarch).unwrap();
+        let engine =
+            Arc::new(EngineBuilder::new().graph(g).tarch(tarch.clone()).build().unwrap());
         let cfg = PipelineConfig {
             camera: CameraConfig { n_scenes: 3, seed: 11, ..Default::default() },
             input_size: 24,
             tarch,
             ..Default::default()
         };
-        (cfg, backend)
+        (cfg, engine)
     }
 
     #[test]
     fn pipelined_beats_serial_model() {
-        let (cfg, mut backend) = setup();
-        let r = run_pipelined(&cfg, &mut backend, 2, 12).unwrap();
+        let (cfg, engine) = setup();
+        let r = run_pipelined(&cfg, engine, 2, 12).unwrap();
         assert_eq!(r.frames, 12);
         assert!(r.pipelined_fps > r.serial_fps, "{} vs {}", r.pipelined_fps, r.serial_fps);
         assert!(r.accuracy.is_some());
         assert!(r.power_w > 3.0);
+        assert!(r.requests >= 1 && r.requests <= 12);
     }
 
     #[test]
     fn backpressure_bounded_queue() {
         // queue depth 1: producer can never run ahead more than one frame;
         // correctness (frame count, accuracy accounting) is unaffected.
-        let (mut cfg, mut backend) = setup();
+        let (mut cfg, engine) = setup();
         cfg.queue_depth = 1;
-        let r = run_pipelined(&cfg, &mut backend, 1, 8).unwrap();
+        let r = run_pipelined(&cfg, engine, 1, 8).unwrap();
         assert_eq!(r.frames, 8);
     }
 
     #[test]
     fn zero_frames_ok() {
-        let (cfg, mut backend) = setup();
-        let r = run_pipelined(&cfg, &mut backend, 1, 0).unwrap();
+        let (cfg, engine) = setup();
+        let r = run_pipelined(&cfg, engine, 1, 0).unwrap();
         assert_eq!(r.frames, 0);
         assert!(r.accuracy.is_none());
+        assert_eq!(r.requests, 0);
+    }
+
+    #[test]
+    fn unbatched_matches_batched_accuracy() {
+        // max_batch 1 (every frame its own request) must classify exactly
+        // like the batched run — batching is a transport optimization.
+        let (mut cfg, engine) = setup();
+        let batched = run_pipelined(&cfg, engine.clone(), 2, 12).unwrap();
+        cfg.max_batch = 1;
+        let single = run_pipelined(&cfg, engine, 2, 12).unwrap();
+        assert_eq!(single.requests, 12);
+        assert_eq!(batched.accuracy, single.accuracy);
     }
 }

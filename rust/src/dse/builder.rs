@@ -48,6 +48,13 @@ impl BackboneSpec {
             self.head_classes.map(|c| format!("_head{c}")).unwrap_or_default()
         )
     }
+
+    /// Build this spec's graph with synthetic weights — sugar over
+    /// [`build_backbone_graph`], handy for feeding
+    /// [`crate::engine::EngineBuilder::graph`] in tests and sweeps.
+    pub fn build_graph(&self, seed: u64) -> Result<Graph> {
+        build_backbone_graph(self, seed)
+    }
 }
 
 fn rand_weights(rng: &mut Prng, shape: Vec<usize>) -> Tensor {

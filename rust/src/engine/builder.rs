@@ -1,0 +1,216 @@
+//! [`EngineBuilder`] — the one place artifact resolution happens.
+//!
+//! Before the redesign, graph/weights/manifest/HLO path logic was
+//! copy-pasted across `cli/commands.rs` and `lib.rs`; the builder folds it
+//! into a single fluent entry point:
+//!
+//! ```no_run
+//! use pefsl::engine::{BackendKind, EngineBuilder};
+//!
+//! let engine = EngineBuilder::new()
+//!     .artifacts("artifacts")
+//!     .backend(BackendKind::Sim)
+//!     .tarch(pefsl::tarch::Tarch::z7020_12x12())
+//!     .build()
+//!     .unwrap();
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{import_files, Graph};
+use crate::json::{self, Value};
+use crate::runtime::Runtime;
+use crate::tarch::Tarch;
+use crate::tcompiler::compile;
+
+use super::workers::SimWorker;
+use super::{Engine, EngineInfo};
+
+/// Locate the artifact directory.
+///
+/// Resolution order: an explicit path (CLI `--artifacts`), the
+/// `$PEFSL_ARTIFACTS` environment variable, `artifacts/` relative to the
+/// current directory, then `artifacts/` under the crate root.
+pub fn resolve_artifacts_dir(explicit: Option<&Path>) -> PathBuf {
+    if let Some(p) = explicit {
+        return p.to_path_buf();
+    }
+    if let Ok(p) = std::env::var("PEFSL_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = PathBuf::from(crate::ARTIFACTS_DIR);
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(crate::ARTIFACTS_DIR)
+}
+
+/// Which inference backend an [`Engine`] runs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Bit-exact accelerator simulation (graph.json + weights.bin),
+    /// with modeled FPGA latency/cycles in every response.
+    #[default]
+    Sim,
+    /// PJRT f32 reference (manifest.json + model.hlo.txt).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI-style backend name.
+    pub fn parse(name: &str) -> Result<BackendKind> {
+        match name {
+            "sim" => Ok(BackendKind::Sim),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend '{other}' (sim|pjrt)"),
+        }
+    }
+}
+
+/// Fluent builder for [`Engine`]: `EngineBuilder::new().artifacts(dir)
+/// .backend(kind).tarch(t).build()`.
+#[derive(Debug, Default)]
+pub struct EngineBuilder {
+    artifacts: Option<PathBuf>,
+    kind: BackendKind,
+    tarch: Option<Tarch>,
+    graph: Option<Graph>,
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Use an explicit artifact directory instead of the default resolution
+    /// (see [`resolve_artifacts_dir`]).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> EngineBuilder {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Select the backend (default: [`BackendKind::Sim`]).
+    pub fn backend(mut self, kind: BackendKind) -> EngineBuilder {
+        self.kind = kind;
+        self
+    }
+
+    /// Accelerator architecture for the sim backend
+    /// (default: [`Tarch::z7020_12x12`], the paper's demonstrator).
+    pub fn tarch(mut self, tarch: Tarch) -> EngineBuilder {
+        self.tarch = Some(tarch);
+        self
+    }
+
+    /// Accelerator architecture by preset name (CLI `--tarch`).
+    pub fn tarch_preset(self, name: &str) -> Result<EngineBuilder> {
+        Ok(self.tarch(Tarch::preset(name)?))
+    }
+
+    /// Use an in-memory graph instead of loading artifacts (tests, benches,
+    /// DSE sweeps; sim backend only).
+    pub fn graph(mut self, graph: Graph) -> EngineBuilder {
+        self.graph = Some(graph);
+        self
+    }
+
+    /// Build the engine: resolve artifacts, compile/load the backend.
+    pub fn build(self) -> Result<Engine> {
+        let tarch = self.tarch.unwrap_or_else(Tarch::z7020_12x12);
+        match self.kind {
+            BackendKind::Sim => {
+                let graph = match self.graph {
+                    Some(g) => g,
+                    None => {
+                        let dir = resolve_artifacts_dir(self.artifacts.as_deref());
+                        import_files(dir.join("graph.json"), dir.join("weights.bin"))
+                            .context("load graph artifacts (run `make artifacts` first)")?
+                    }
+                };
+                let program = compile(&graph, &tarch)?;
+                let info = EngineInfo {
+                    name: "sim",
+                    feature_dim: graph.feature_dim,
+                    input_size: graph.input_shape[1],
+                    input_elems: graph.input_shape.iter().product(),
+                    instr_count: Some(program.instrs.len()),
+                    modeled_latency_ms: Some(program.est_latency_ms()),
+                    tarch_name: Some(tarch.name.clone()),
+                };
+                Ok(Engine::new(Box::new(SimWorker::new(program, graph)), info))
+            }
+            BackendKind::Pjrt => {
+                if self.graph.is_some() {
+                    bail!("in-memory graphs are only supported by the sim backend");
+                }
+                let dir = resolve_artifacts_dir(self.artifacts.as_deref());
+                let manifest = json::from_file(dir.join("manifest.json"))
+                    .context("load manifest.json (run `make artifacts` first)")?;
+                let size = manifest
+                    .path(&["backbone", "image_size"])
+                    .and_then(Value::as_usize)
+                    .unwrap_or(32);
+                let fdim = manifest
+                    .path(&["backbone", "feature_dim"])
+                    .and_then(Value::as_usize)
+                    .unwrap_or(80);
+                let rt = Runtime::cpu()?;
+                let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![size * size * 3])?;
+                Ok(Engine::from_pjrt(exe, vec![1, size, size, 3], fdim))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{build_backbone_graph, BackboneSpec};
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("sim").unwrap(), BackendKind::Sim);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn explicit_dir_wins() {
+        let d = resolve_artifacts_dir(Some(Path::new("/tmp/somewhere")));
+        assert_eq!(d, PathBuf::from("/tmp/somewhere"));
+    }
+
+    #[test]
+    fn in_memory_graph_builds_sim_engine() {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 2).unwrap();
+        let engine = EngineBuilder::new().graph(g).tarch(Tarch::z7020_8x8()).build().unwrap();
+        assert_eq!(engine.name(), "sim");
+        assert_eq!(engine.feature_dim(), 20);
+        assert!(engine.info().instr_count.unwrap() > 0);
+        assert!(engine.info().modeled_latency_ms.unwrap() > 0.0);
+        assert_eq!(engine.info().tarch_name.as_deref(), Some("z7020-8x8"));
+    }
+
+    #[test]
+    fn pjrt_rejects_in_memory_graph() {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 2).unwrap();
+        let r = EngineBuilder::new().graph(g).backend(BackendKind::Pjrt).build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_artifacts_give_contextual_error() {
+        let r = EngineBuilder::new().artifacts("/nonexistent/pefsl").build();
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn bad_tarch_preset_rejected() {
+        assert!(EngineBuilder::new().tarch_preset("nope").is_err());
+    }
+}

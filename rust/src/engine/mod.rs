@@ -1,0 +1,284 @@
+//! `pefsl::engine` — the concurrent, batched inference service.
+//!
+//! This subsystem replaces the old single-frame `Backend` trait
+//! (`&mut self`, one image per call, latency smuggled through
+//! `modeled_latency_ms()` side-state) with a service-shaped API in three
+//! pieces:
+//!
+//! * [`Engine`] — owns one backend (bit-exact accelerator sim or PJRT f32
+//!   reference) behind `&self` with interior locking.  One engine is shared
+//!   by any number of threads; [`Engine::infer`] takes an [`InferRequest`]
+//!   carrying one-or-many NHWC images and returns an [`InferResponse`] with
+//!   per-item features **plus modeled latency and cycle counts as data**.
+//! * [`EngineBuilder`] — the single entry point for artifact resolution
+//!   (graph.json/weights.bin for sim, manifest.json/model.hlo.txt for PJRT,
+//!   tarch presets), previously copy-pasted across the CLI and `lib.rs`.
+//! * [`Session`] — per-client few-shot state: each session owns its own
+//!   NCM classifier (enroll / classify / reset) against the shared engine,
+//!   so many concurrent few-shot sessions multiplex one accelerator.
+//!
+//! # Worked example
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use pefsl::engine::{EngineBuilder, InferRequest, Session};
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     // builder → engine: resolve artifacts, compile for a tarch preset.
+//!     let engine = Arc::new(
+//!         EngineBuilder::new()
+//!             .artifacts("artifacts")
+//!             .tarch(pefsl::tarch::Tarch::z7020_12x12())
+//!             .build()?,
+//!     );
+//!
+//!     // engine: batched inference, latency returned as data.
+//!     let img = vec![0.5f32; 32 * 32 * 3];
+//!     let resp = engine.infer(InferRequest::batch(vec![img.clone(), img.clone()]))?;
+//!     for item in &resp.items {
+//!         println!(
+//!             "{}-d features in {:?} ms / {:?} cycles",
+//!             item.features.len(),
+//!             item.metrics.modeled_latency_ms,
+//!             item.metrics.cycles,
+//!         );
+//!     }
+//!
+//!     // session: per-client few-shot state over the shared engine.
+//!     let mut session = Session::new(engine.clone());
+//!     let cat = session.add_class("cat");
+//!     session.enroll_image(cat, &img)?;
+//!     let (pred, metrics) = session.classify_image(&img)?;
+//!     println!("predicted class {} ({:?} ms)", pred.class_idx, metrics.modeled_latency_ms);
+//!     Ok(())
+//! }
+//! ```
+//!
+//! The old `coordinator::Backend` trait remains for one release as a thin
+//! compat shim implemented over [`Engine`]; new code should not use it.
+
+mod builder;
+mod request;
+mod session;
+mod workers;
+
+pub use builder::{resolve_artifacts_dir, BackendKind, EngineBuilder};
+pub use request::{InferItem, InferMetrics, InferRequest, InferResponse};
+pub use session::Session;
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use workers::InferWorker;
+
+/// Static facts about an engine, fixed at build time.
+#[derive(Clone, Debug)]
+pub struct EngineInfo {
+    /// Backend kind: `"sim"` or `"pjrt"`.
+    pub name: &'static str,
+    /// Dimensionality of the returned feature vectors.
+    pub feature_dim: usize,
+    /// Backbone input resolution (images are `input_size²·3` NHWC f32).
+    pub input_size: usize,
+    /// Expected element count of each request image.
+    pub input_elems: usize,
+    /// Compiled instruction count (sim backend only).
+    pub instr_count: Option<usize>,
+    /// Static modeled latency of one inference, ms (sim backend only).
+    pub modeled_latency_ms: Option<f64>,
+    /// Accelerator architecture name (sim backend only).
+    pub tarch_name: Option<String>,
+}
+
+/// Cumulative service counters (snapshot via [`Engine::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// `infer` calls served.
+    pub requests: u64,
+    /// Images served across all requests.
+    pub images: u64,
+    /// Sum of modeled per-image latencies, ms (sim backend).
+    pub modeled_ms_total: f64,
+    /// Sum of host wall-clock time spent in workers, µs.
+    pub host_us_total: f64,
+}
+
+/// A shared inference service over one backend.
+///
+/// `Engine` is `Send + Sync`; clone an `Arc<Engine>` into as many threads /
+/// [`Session`]s as needed.  Requests are serialized on the backend lock (one
+/// accelerator, as on the PYNQ board); batching amortizes per-request
+/// overhead across images.
+pub struct Engine {
+    worker: Mutex<Box<dyn InferWorker>>,
+    info: EngineInfo,
+    stats: Mutex<EngineStats>,
+}
+
+impl Engine {
+    pub(crate) fn new(worker: Box<dyn InferWorker>, info: EngineInfo) -> Engine {
+        Engine { worker: Mutex::new(worker), info, stats: Mutex::new(EngineStats::default()) }
+    }
+
+    /// Build an engine directly over a loaded PJRT executable.
+    ///
+    /// Prefer [`EngineBuilder`] (which reads the artifact manifest); this
+    /// constructor exists for the `coordinator::PjrtBackend` compat shim and
+    /// for callers that loaded an [`crate::runtime::Executable`] themselves.
+    pub fn from_pjrt(
+        exe: crate::runtime::Executable,
+        input_dims: Vec<usize>,
+        feature_dim: usize,
+    ) -> Engine {
+        let info = EngineInfo {
+            name: "pjrt",
+            feature_dim,
+            input_size: input_dims.get(1).copied().unwrap_or(0),
+            input_elems: input_dims.iter().product(),
+            instr_count: None,
+            modeled_latency_ms: None,
+            tarch_name: None,
+        };
+        Engine::new(Box::new(workers::PjrtWorker::new(exe, input_dims, feature_dim)), info)
+    }
+
+    /// Run inference on every image in the request; the response carries one
+    /// [`InferItem`] per image, in order, with latency metadata as data.
+    pub fn infer(&self, request: InferRequest) -> Result<InferResponse> {
+        if request.is_empty() {
+            bail!("empty InferRequest (batch must contain at least one image)");
+        }
+        for (i, img) in request.images().iter().enumerate() {
+            if img.len() != self.info.input_elems {
+                bail!(
+                    "request image {i} has {} elements, engine '{}' expects {} ({}×{}×3 NHWC)",
+                    img.len(),
+                    self.info.name,
+                    self.info.input_elems,
+                    self.info.input_size,
+                    self.info.input_size,
+                );
+            }
+        }
+        // A panic mid-`run` poisons the lock, but worker state is reset at
+        // the start of every run, so recovering the guard is safe — better
+        // than wedging every other session forever.
+        let mut worker = self.worker.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut items = Vec::with_capacity(request.len());
+        for img in request.images() {
+            let t0 = Instant::now();
+            let mut item = worker.infer_one(img)?;
+            item.metrics.host_us = t0.elapsed().as_secs_f64() * 1e6;
+            items.push(item);
+        }
+        drop(worker);
+
+        let mut stats = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        stats.requests += 1;
+        stats.images += items.len() as u64;
+        for item in &items {
+            stats.modeled_ms_total += item.metrics.modeled_latency_ms.unwrap_or(0.0);
+            stats.host_us_total += item.metrics.host_us;
+        }
+        drop(stats);
+
+        Ok(InferResponse { items })
+    }
+
+    /// Backend kind: `"sim"` or `"pjrt"`.
+    pub fn name(&self) -> &'static str {
+        self.info.name
+    }
+
+    /// Dimensionality of the feature vectors this engine produces.
+    pub fn feature_dim(&self) -> usize {
+        self.info.feature_dim
+    }
+
+    /// Backbone input resolution.
+    pub fn input_size(&self) -> usize {
+        self.info.input_size
+    }
+
+    /// Static engine facts (instruction count, modeled latency, ...).
+    pub fn info(&self) -> &EngineInfo {
+        &self.info
+    }
+
+    /// Snapshot of the cumulative service counters.
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::BackboneSpec;
+    use crate::tarch::Tarch;
+
+    fn tiny_engine() -> Engine {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = spec.build_graph(1).unwrap();
+        EngineBuilder::new().graph(g).tarch(Tarch::z7020_8x8()).build().unwrap()
+    }
+
+    #[test]
+    fn single_infer_carries_latency_as_data() {
+        let engine = tiny_engine();
+        assert_eq!(engine.name(), "sim");
+        assert_eq!(engine.feature_dim(), 20);
+        assert_eq!(engine.input_size(), 16);
+        let resp = engine.infer(InferRequest::single(vec![0.4; 16 * 16 * 3])).unwrap();
+        let item = resp.into_single().unwrap();
+        assert_eq!(item.features.len(), 20);
+        assert!(item.metrics.modeled_latency_ms.unwrap() > 0.0);
+        assert!(item.metrics.cycles.unwrap() > 0);
+        assert!(item.metrics.host_us > 0.0);
+    }
+
+    #[test]
+    fn batch_returns_one_item_per_image() {
+        let engine = tiny_engine();
+        let imgs: Vec<Vec<f32>> = (0..3).map(|i| vec![0.1 * (i + 1) as f32; 16 * 16 * 3]).collect();
+        let resp = engine.infer(InferRequest::batch(imgs.clone())).unwrap();
+        assert_eq!(resp.items.len(), 3);
+        // batch items match the equivalent single-image calls
+        for (i, img) in imgs.iter().enumerate() {
+            let single = engine.infer(InferRequest::single(img.clone())).unwrap();
+            assert_eq!(single.items[0].features, resp.items[i].features);
+        }
+        assert!(resp.mean_modeled_latency_ms().unwrap() > 0.0);
+        assert!(resp.total_cycles().unwrap() > 0);
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        let engine = tiny_engine();
+        assert!(engine.infer(InferRequest::default()).is_err());
+        assert!(engine.infer(InferRequest::single(vec![0.0; 5])).is_err());
+        let mixed = InferRequest::batch(vec![vec![0.0; 16 * 16 * 3], vec![0.0; 4]]);
+        assert!(engine.infer(mixed).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let engine = tiny_engine();
+        let img = vec![0.2; 16 * 16 * 3];
+        engine.infer(InferRequest::single(img.clone())).unwrap();
+        engine.infer(InferRequest::batch(vec![img.clone(), img])).unwrap();
+        let s = engine.stats();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.images, 3);
+        assert!(s.modeled_ms_total > 0.0);
+        assert!(s.host_us_total > 0.0);
+    }
+
+    #[test]
+    fn engine_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+    }
+}

@@ -1,0 +1,157 @@
+//! Request/response types of the inference service.
+//!
+//! The redesign's core contract: requests carry one-or-many NHWC images,
+//! responses carry per-item feature vectors **plus the modeled hardware
+//! latency and cycle counts as data**.  Nothing is smuggled through backend
+//! side-state (the old `Backend::modeled_latency_ms()` channel), so
+//! responses can cross threads, be aggregated, or be logged as-is.
+
+use anyhow::{bail, Result};
+
+/// A batch of one-or-many NHWC f32 images for one [`super::Engine::infer`]
+/// call.  All images must match the engine's input element count.
+#[derive(Clone, Debug, Default)]
+pub struct InferRequest {
+    images: Vec<Vec<f32>>,
+}
+
+impl InferRequest {
+    /// Request for a single image.
+    pub fn single(image: Vec<f32>) -> InferRequest {
+        InferRequest { images: vec![image] }
+    }
+
+    /// Request for a batch of images (one response item per image, in order).
+    pub fn batch(images: Vec<Vec<f32>>) -> InferRequest {
+        InferRequest { images }
+    }
+
+    /// Append one image to the batch.
+    pub fn push(&mut self, image: Vec<f32>) {
+        self.images.push(image);
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// The batched images, in request order.
+    pub fn images(&self) -> &[Vec<f32>] {
+        &self.images
+    }
+}
+
+impl From<Vec<f32>> for InferRequest {
+    fn from(image: Vec<f32>) -> InferRequest {
+        InferRequest::single(image)
+    }
+}
+
+/// Per-item latency/cost metadata, returned *as data* with every result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InferMetrics {
+    /// Modeled on-device latency (sim backend: cycle count at the tarch
+    /// clock).  `None` for backends without a hardware model (PJRT).
+    pub modeled_latency_ms: Option<f64>,
+    /// Modeled accelerator cycles for this inference, if available.
+    pub cycles: Option<u64>,
+    /// Host wall-clock time spent computing this item, microseconds.
+    pub host_us: f64,
+}
+
+/// One inference result: the feature vector plus its metrics.
+#[derive(Clone, Debug)]
+pub struct InferItem {
+    pub features: Vec<f32>,
+    pub metrics: InferMetrics,
+}
+
+/// Response to an [`InferRequest`]: one [`InferItem`] per request image,
+/// in request order.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub items: Vec<InferItem>,
+}
+
+impl InferResponse {
+    /// Consume a response that must contain exactly one item.
+    pub fn into_single(self) -> Result<InferItem> {
+        if self.items.len() != 1 {
+            bail!("expected exactly 1 inference result, got {}", self.items.len());
+        }
+        Ok(self.items.into_iter().next().unwrap())
+    }
+
+    /// Mean modeled latency across items, if every item has one.
+    pub fn mean_modeled_latency_ms(&self) -> Option<f64> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let mut sum = 0.0;
+        for item in &self.items {
+            sum += item.metrics.modeled_latency_ms?;
+        }
+        Some(sum / self.items.len() as f64)
+    }
+
+    /// Total modeled accelerator cycles across items, if every item has one.
+    pub fn total_cycles(&self) -> Option<u64> {
+        let mut sum = 0u64;
+        for item in &self.items {
+            sum += item.metrics.cycles?;
+        }
+        Some(sum)
+    }
+
+    /// Consume the response into bare feature vectors, in request order.
+    pub fn into_features(self) -> Vec<Vec<f32>> {
+        self.items.into_iter().map(|i| i.features).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(lat: Option<f64>, cycles: Option<u64>) -> InferItem {
+        InferItem {
+            features: vec![0.0],
+            metrics: InferMetrics { modeled_latency_ms: lat, cycles, host_us: 1.0 },
+        }
+    }
+
+    #[test]
+    fn request_builders() {
+        let mut r = InferRequest::single(vec![1.0, 2.0]);
+        assert_eq!(r.len(), 1);
+        r.push(vec![3.0, 4.0]);
+        assert_eq!(r.images().len(), 2);
+        let b = InferRequest::batch(vec![vec![0.0]; 3]);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+        assert!(InferRequest::default().is_empty());
+    }
+
+    #[test]
+    fn into_single_enforces_arity() {
+        let one = InferResponse { items: vec![item(None, None)] };
+        assert!(one.into_single().is_ok());
+        let two = InferResponse { items: vec![item(None, None), item(None, None)] };
+        assert!(two.into_single().is_err());
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = InferResponse { items: vec![item(Some(2.0), Some(10)), item(Some(4.0), Some(30))] };
+        assert_eq!(r.mean_modeled_latency_ms(), Some(3.0));
+        assert_eq!(r.total_cycles(), Some(40));
+        let mixed = InferResponse { items: vec![item(Some(2.0), Some(10)), item(None, None)] };
+        assert_eq!(mixed.mean_modeled_latency_ms(), None);
+        assert_eq!(mixed.total_cycles(), None);
+        assert_eq!(InferResponse { items: vec![] }.mean_modeled_latency_ms(), None);
+    }
+}

@@ -1,0 +1,177 @@
+//! [`Session`] — per-client few-shot state over a shared [`Engine`].
+//!
+//! Each session owns its own [`NcmClassifier`] (the live demo's enroll /
+//! classify / reset buttons), while inference multiplexes onto the shared
+//! engine.  Many sessions — one per connected client — can run concurrently
+//! against one accelerator.
+//!
+//! A session can also be *detached* ([`Session::detached`]): feature-space
+//! only, no engine — used by the episodic few-shot evaluation, where
+//! features are precomputed.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::ncm::{NcmClassifier, Prediction};
+
+use super::request::{InferItem, InferMetrics, InferRequest};
+use super::Engine;
+
+/// One client's few-shot classification session.
+pub struct Session {
+    engine: Option<Arc<Engine>>,
+    ncm: NcmClassifier,
+}
+
+impl Session {
+    /// New session against a shared engine; feature dim comes from the
+    /// engine.
+    pub fn new(engine: Arc<Engine>) -> Session {
+        let dim = engine.feature_dim();
+        Session { engine: Some(engine), ncm: NcmClassifier::new(dim) }
+    }
+
+    /// Feature-space-only session (no engine): enroll/classify operate on
+    /// precomputed feature vectors of dimension `dim`.
+    pub fn detached(dim: usize) -> Session {
+        Session { engine: None, ncm: NcmClassifier::new(dim) }
+    }
+
+    /// Install the base-split mean for feature centering (EASY protocol).
+    pub fn with_base_mean(mut self, mean: Vec<f32>) -> Result<Session> {
+        self.ncm = self.ncm.with_base_mean(mean)?;
+        Ok(self)
+    }
+
+    /// The shared engine, if this session has one.
+    pub fn engine(&self) -> Option<&Arc<Engine>> {
+        self.engine.as_ref()
+    }
+
+    fn engine_required(&self) -> Result<&Arc<Engine>> {
+        self.engine
+            .as_ref()
+            .ok_or_else(|| anyhow!("detached session has no engine (image APIs unavailable)"))
+    }
+
+    /// Run the backbone on one image without touching classifier state.
+    pub fn extract(&self, image: &[f32]) -> Result<InferItem> {
+        self.engine_required()?.infer(InferRequest::single(image.to_vec()))?.into_single()
+    }
+
+    /// Register a new (empty) class; returns its index.
+    pub fn add_class(&mut self, label: impl Into<String>) -> usize {
+        self.ncm.add_class(label)
+    }
+
+    /// Enroll one support image into a class (the demo's "add shot").
+    pub fn enroll_image(&mut self, class_idx: usize, image: &[f32]) -> Result<InferMetrics> {
+        let item = self.extract(image)?;
+        self.ncm.enroll(class_idx, &item.features)?;
+        Ok(item.metrics)
+    }
+
+    /// Enroll a precomputed feature vector into a class.
+    pub fn enroll_feature(&mut self, class_idx: usize, feature: &[f32]) -> Result<()> {
+        self.ncm.enroll(class_idx, feature)
+    }
+
+    /// Classify one image; errors if no class has any enrolled shot.
+    pub fn classify_image(&self, image: &[f32]) -> Result<(Prediction, InferMetrics)> {
+        let item = self.extract(image)?;
+        let pred = self.ncm.classify(&item.features)?;
+        Ok((pred, item.metrics))
+    }
+
+    /// Classify a precomputed feature vector.
+    pub fn classify_feature(&self, feature: &[f32]) -> Result<Prediction> {
+        self.ncm.classify(feature)
+    }
+
+    /// Drop all classes (the demo's "reset" button).
+    pub fn reset(&mut self) {
+        self.ncm.reset();
+    }
+
+    pub fn dim(&self) -> usize {
+        self.ncm.dim()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.ncm.n_classes()
+    }
+
+    pub fn class_label(&self, idx: usize) -> Option<&str> {
+        self.ncm.class_label(idx)
+    }
+
+    pub fn shot_count(&self, idx: usize) -> usize {
+        self.ncm.shot_count(idx)
+    }
+
+    /// True if at least one class has an enrolled shot (classify can run).
+    pub fn has_enrolled(&self) -> bool {
+        self.ncm.has_enrolled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::BackboneSpec;
+    use crate::engine::EngineBuilder;
+    use crate::tarch::Tarch;
+
+    fn engine() -> Arc<Engine> {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = spec.build_graph(4).unwrap();
+        Arc::new(EngineBuilder::new().graph(g).tarch(Tarch::z7020_8x8()).build().unwrap())
+    }
+
+    #[test]
+    fn enroll_then_classify_image() {
+        let mut s = Session::new(engine());
+        assert_eq!(s.dim(), 20);
+        assert!(!s.has_enrolled());
+        let a = s.add_class("a");
+        let img_a = vec![0.9; 16 * 16 * 3];
+        let metrics = s.enroll_image(a, &img_a).unwrap();
+        assert!(metrics.modeled_latency_ms.unwrap() > 0.0);
+        assert!(metrics.cycles.unwrap() > 0);
+        assert_eq!(s.shot_count(a), 1);
+        let (pred, m2) = s.classify_image(&img_a).unwrap();
+        assert_eq!(pred.class_idx, a);
+        assert!(m2.modeled_latency_ms.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sessions_are_isolated() {
+        let engine = engine();
+        let mut s1 = Session::new(engine.clone());
+        let mut s2 = Session::new(engine);
+        s1.add_class("only-in-s1");
+        assert_eq!(s1.n_classes(), 1);
+        assert_eq!(s2.n_classes(), 0);
+        s2.reset();
+        assert_eq!(s1.n_classes(), 1);
+        assert_eq!(s1.class_label(0), Some("only-in-s1"));
+    }
+
+    #[test]
+    fn detached_session_feature_space_only() {
+        let mut s = Session::detached(4);
+        assert!(s.engine().is_none());
+        assert!(s.extract(&[0.0; 4]).is_err());
+        assert!(s.enroll_image(0, &[0.0; 4]).is_err());
+        let c = s.add_class("x");
+        s.enroll_feature(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(s.classify_feature(&[1.0, 0.0, 0.0, 0.0]).unwrap().class_idx, c);
+    }
+
+    #[test]
+    fn base_mean_validated() {
+        assert!(Session::detached(4).with_base_mean(vec![0.0; 5]).is_err());
+        assert!(Session::detached(4).with_base_mean(vec![0.0; 4]).is_ok());
+    }
+}

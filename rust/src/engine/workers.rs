@@ -1,0 +1,153 @@
+//! Backend workers: the per-engine inference state behind the service lock.
+//!
+//! A worker owns everything needed to compute features for one image and is
+//! driven exclusively through [`InferWorker::infer_one`] while the engine's
+//! mutex is held.  Two implementations mirror the two deployment paths of
+//! the paper: the bit-exact accelerator simulator and the PJRT f32
+//! reference.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::Graph;
+use crate::runtime::Executable;
+use crate::sim::Simulator;
+use crate::tcompiler::Program;
+
+use super::request::{InferItem, InferMetrics};
+
+/// One backend inference unit. `&mut self` because workers keep reusable
+/// scratch state (the simulator's activation buffers); the [`super::Engine`]
+/// serializes access behind its lock.
+pub(crate) trait InferWorker: Send {
+    fn infer_one(&mut self, image: &[f32]) -> Result<InferItem>;
+}
+
+/// Bit-exact accelerator simulation worker.
+///
+/// Unlike the old `SimBackend` (which rebuilt a [`Simulator`] — re-resolving
+/// weight slices and re-pricing the instruction stream — on every frame),
+/// the worker owns **one** simulator for its whole lifetime and reuses it
+/// across calls; `Simulator::run_f32` resets per-run state itself.
+pub(crate) struct SimWorker {
+    /// Field order matters: `sim` borrows from the allocations kept alive
+    /// by the `Arc`s below, and struct fields drop in declaration order,
+    /// so `sim` is dropped first.
+    sim: Simulator<'static>,
+    _program: Arc<Program>,
+    _graph: Arc<Graph>,
+}
+
+impl SimWorker {
+    pub(crate) fn new(program: Program, graph: Graph) -> SimWorker {
+        let program = Arc::new(program);
+        let graph = Arc::new(graph);
+        // SAFETY: `Simulator<'a>` borrows the program and graph. Both live
+        // in heap allocations kept alive by `Arc`s owned by this struct for
+        // its entire lifetime: the `Arc`s are private, never reassigned,
+        // never handed out, and outlive `sim` (declaration order above).
+        // `Arc` is used instead of `Box` deliberately — it makes no
+        // unique-aliasing claim, so keeping derived shared references while
+        // the struct (and its pointers) move is sound; the heap data never
+        // moves and is never mutably aliased.
+        let p: &'static Program = unsafe { &*Arc::as_ptr(&program) };
+        let g: &'static Graph = unsafe { &*Arc::as_ptr(&graph) };
+        SimWorker { sim: Simulator::new(p, g), _program: program, _graph: graph }
+    }
+}
+
+impl InferWorker for SimWorker {
+    fn infer_one(&mut self, image: &[f32]) -> Result<InferItem> {
+        let r = self.sim.run_f32(image)?;
+        Ok(InferItem {
+            features: r.output_f32,
+            metrics: InferMetrics {
+                modeled_latency_ms: Some(r.latency_ms),
+                cycles: Some(r.cycles),
+                host_us: 0.0,
+            },
+        })
+    }
+}
+
+/// PJRT f32 reference worker over an AOT HLO executable.
+pub(crate) struct PjrtWorker {
+    exe: Executable,
+    input_dims: Vec<usize>,
+    feature_dim: usize,
+}
+
+impl PjrtWorker {
+    pub(crate) fn new(exe: Executable, input_dims: Vec<usize>, feature_dim: usize) -> PjrtWorker {
+        PjrtWorker { exe, input_dims, feature_dim }
+    }
+}
+
+impl InferWorker for PjrtWorker {
+    fn infer_one(&mut self, image: &[f32]) -> Result<InferItem> {
+        let outs = self.exe.run_f32(&[(image, &self.input_dims)])?;
+        // An executable yielding no outputs is a malformed artifact, not an
+        // empty feature vector (the old backend silently returned `vec![]`).
+        let features = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("PJRT executable '{}' produced no outputs", self.exe.name()))?;
+        if features.len() != self.feature_dim {
+            bail!(
+                "PJRT executable '{}' produced {} features, manifest declares {}",
+                self.exe.name(),
+                features.len(),
+                self.feature_dim
+            );
+        }
+        Ok(InferItem {
+            features,
+            metrics: InferMetrics { modeled_latency_ms: None, cycles: None, host_us: 0.0 },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::BackboneSpec;
+    use crate::tarch::Tarch;
+    use crate::tcompiler::compile;
+
+    fn sim_worker() -> SimWorker {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = spec.build_graph(1).unwrap();
+        let p = compile(&g, &Tarch::z7020_8x8()).unwrap();
+        SimWorker::new(p, g)
+    }
+
+    #[test]
+    fn sim_worker_reuse_is_deterministic() {
+        let mut w = sim_worker();
+        let x = vec![0.4; 16 * 16 * 3];
+        let a = w.infer_one(&x).unwrap();
+        let b = w.infer_one(&x).unwrap();
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.metrics.cycles, b.metrics.cycles);
+        assert!(a.metrics.modeled_latency_ms.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sim_worker_moves_safely() {
+        // The self-referential worker must survive a move (heap data is
+        // stable even though the box pointers relocate).
+        let mut w = sim_worker();
+        let x = vec![0.25; 16 * 16 * 3];
+        let before = w.infer_one(&x).unwrap();
+        let boxed: Box<SimWorker> = Box::new(w);
+        let mut w2 = *boxed;
+        assert_eq!(w2.infer_one(&x).unwrap().features, before.features);
+    }
+
+    #[test]
+    fn sim_worker_rejects_bad_input_len() {
+        let mut w = sim_worker();
+        assert!(w.infer_one(&[0.0; 7]).is_err());
+    }
+}

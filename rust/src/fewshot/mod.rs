@@ -4,11 +4,13 @@
 //! Replays the paper's inductive protocol — W ways, S shots, Q queries,
 //! NCM over frozen features — entirely in the deployed stack, so the
 //! accuracy number in the demo HUD and in EXPERIMENTS.md comes from the
-//! same code path that serves the camera.
+//! same code path that serves the camera: every episode is a detached
+//! [`Session`] (the same per-client API the live demonstrator uses),
+//! enrolling and classifying in feature space.
 
 use anyhow::{bail, Result};
 
-use crate::ncm::NcmClassifier;
+use crate::engine::Session;
 use crate::util::tensorio::Tensor;
 use crate::util::Prng;
 
@@ -117,17 +119,17 @@ pub fn evaluate(bank: &FeatureBank, cfg: &EpisodeConfig, center: bool) -> Result
 
     for _ in 0..cfg.n_episodes {
         let ways = rng.choose_distinct(bank.n_classes(), cfg.n_ways);
-        let mut ncm = NcmClassifier::new(bank.dim);
+        let mut session = Session::detached(bank.dim);
         if let Some(m) = &base_mean {
-            ncm = ncm.with_base_mean(m.clone())?;
+            session = session.with_base_mean(m.clone())?;
         }
         let mut queries: Vec<(usize, Vec<f32>)> = Vec::new();
         for (w, &class) in ways.iter().enumerate() {
-            let slot = ncm.add_class(format!("w{w}"));
+            let slot = session.add_class(format!("w{w}"));
             let samples = &bank.by_class[class];
             let picks = rng.choose_distinct(samples.len(), cfg.n_shots + cfg.n_queries);
             for &p in picks.iter().take(cfg.n_shots) {
-                ncm.enroll(slot, &samples[p])?;
+                session.enroll_feature(slot, &samples[p])?;
             }
             for &p in picks.iter().skip(cfg.n_shots) {
                 queries.push((w, samples[p].clone()));
@@ -135,7 +137,7 @@ pub fn evaluate(bank: &FeatureBank, cfg: &EpisodeConfig, center: bool) -> Result
         }
         let mut hits = 0usize;
         for (want, q) in &queries {
-            if ncm.classify(q)?.class_idx == *want {
+            if session.classify_feature(q)?.class_idx == *want {
                 hits += 1;
             }
         }

@@ -7,15 +7,25 @@
 //!
 //! Layer map (see DESIGN.md):
 //! * L1/L2 live in `python/` (Pallas kernels + JAX model, AOT → `artifacts/`).
-//! * L3 is this crate: substrates (`json`, `fixed`, `graph`, `tarch`),
-//!   the Tensil-equivalent compiler (`tcompiler`) + cycle-accurate
-//!   simulator (`sim`), FPGA cost models (`resources`, `power`), the PJRT
-//!   runtime (`runtime`), and the demonstrator (`video`, `ncm`,
-//!   `coordinator`, `dse`, `cli`).
+//! * L3 is this crate:
+//!   - substrates: `json`, `fixed`, `graph`, `tarch`, `util`, `metrics`;
+//!   - the Tensil-equivalent compiler (`tcompiler`) + cycle-accurate
+//!     simulator (`sim`), FPGA cost models (`resources`, `power`), and the
+//!     PJRT runtime (`runtime`, stubbed unless the `xla-pjrt` feature is on);
+//!   - **`engine` — the inference service layer**: [`engine::Engine`]
+//!     (shared, `&self`, batched requests with latency/cycles returned as
+//!     data), [`engine::EngineBuilder`] (single artifact-resolution entry
+//!     point) and [`engine::Session`] (per-client few-shot state).  All
+//!     serving paths go through it;
+//!   - the demonstrator on top of the engine: `video`, `ncm`, `coordinator`
+//!     (frame loop + pipelined variant), `fewshot` (episodic evaluation),
+//!     `dse` and `cli`.  `coordinator::Backend` survives one release as a
+//!     deprecated compat shim over the engine.
 
 pub mod cli;
 pub mod coordinator;
 pub mod dse;
+pub mod engine;
 pub mod fewshot;
 pub mod fixed;
 pub mod graph;
@@ -34,15 +44,11 @@ pub mod video;
 /// Default artifact directory relative to the repo root.
 pub const ARTIFACTS_DIR: &str = "artifacts";
 
-/// Locate the artifact directory: `$PEFSL_ARTIFACTS`, else `artifacts/`
-/// relative to the current directory or the crate root.
+/// Locate the artifact directory (`$PEFSL_ARTIFACTS`, else `artifacts/`
+/// relative to the current directory or the crate root).
+///
+/// Convenience wrapper over [`engine::resolve_artifacts_dir`], the single
+/// implementation of artifact-path resolution.
 pub fn artifacts_dir() -> std::path::PathBuf {
-    if let Ok(p) = std::env::var("PEFSL_ARTIFACTS") {
-        return p.into();
-    }
-    let cwd = std::path::PathBuf::from(ARTIFACTS_DIR);
-    if cwd.exists() {
-        return cwd;
-    }
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR)
+    engine::resolve_artifacts_dir(None)
 }

@@ -3,6 +3,10 @@
 //! side").  Supports live enrollment (button "add shot"), per-class
 //! centroid maintenance, feature centering/L2-normalization as in EASY, and
 //! classification of query features.
+//!
+//! Service-facing code should normally hold an [`crate::engine::Session`],
+//! which wraps one `NcmClassifier` per client over the shared engine; this
+//! module is the classifier itself.
 
 pub mod fpga;
 

@@ -1,113 +1,33 @@
 //! PJRT runtime: load AOT-compiled HLO text artifacts and execute them from
 //! the request path (the f32 reference backend of the demonstrator).
 //!
-//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//! → compile once → `execute` per frame.  HLO *text* is the interchange
-//! format (not serialized protos): jax ≥ 0.5 emits 64-bit instruction ids
-//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.  See
-//! /opt/xla-example/README.md and `python/compile/aot.py`.
+//! Two implementations behind one API:
+//!
+//! * feature `xla-pjrt` → [`xla_impl`]: the real thing, wrapping the `xla`
+//!   crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   compile once → `execute` per frame).
+//! * default → [`stub`]: the offline vendor set has no `xla` crate, so the
+//!   stub constructs a client but errors on `load_hlo_text` with a message
+//!   pointing at the feature.  Everything artifact-free still runs.
+//!
+//! Callers never name the implementation: `runtime::Runtime` and
+//! `runtime::Executable` resolve to whichever is compiled in.
 
-use std::path::Path;
+#[cfg(feature = "xla-pjrt")]
+mod xla_impl;
+#[cfg(feature = "xla-pjrt")]
+pub use xla_impl::{Executable, Runtime};
 
-use anyhow::{bail, Context, Result};
-
-/// A PJRT CPU client + compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-/// One compiled HLO module ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Input element counts for validation, derived at load time.
-    input_lens: Vec<usize>,
-    name: String,
-}
-
-impl Runtime {
-    /// Create the CPU PJRT client (one per process).
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text file produced by `aot.py`.
-    ///
-    /// `input_lens` declares the expected element count of each parameter
-    /// (0 = unchecked); the artifact manifest records shapes.
-    pub fn load_hlo_text(&self, path: impl AsRef<Path>, input_lens: Vec<usize>) -> Result<Executable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow::anyhow!("parse HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
-        Ok(Executable {
-            exe,
-            input_lens,
-            name: path.file_name().unwrap_or_default().to_string_lossy().into_owned(),
-        })
-    }
-}
-
-impl Executable {
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    /// Execute with f32 inputs shaped `dims[i]`; returns flat f32 outputs.
-    ///
-    /// aot.py lowers with `return_tuple=True`, so the single result is a
-    /// tuple; each element is returned as a flat vector.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        if inputs.len() != self.input_lens.len() {
-            bail!("{}: {} inputs given, {} expected", self.name, inputs.len(), self.input_lens.len());
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (data, dims)) in inputs.iter().enumerate() {
-            let n: usize = dims.iter().product();
-            if n != data.len() {
-                bail!("{}: input {i} has {} elems but dims {:?}", self.name, data.len(), dims);
-            }
-            if self.input_lens[i] != 0 && self.input_lens[i] != n {
-                bail!("{}: input {i} expects {} elems, got {n}", self.name, self.input_lens[i]);
-            }
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            literals.push(
-                xla::Literal::vec1(data)
-                    .reshape(&dims_i64)
-                    .map_err(|e| anyhow::anyhow!("reshape input {i} to {dims:?}: {e:?}"))?,
-            );
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("sync {}: {e:?}", self.name))?;
-        // return_tuple=True → unpack tuple elements
-        let elems = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.name))?;
-        elems
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
-            .collect()
-    }
-}
+#[cfg(not(feature = "xla-pjrt"))]
+mod stub;
+#[cfg(not(feature = "xla-pjrt"))]
+pub use stub::{Executable, Runtime};
 
 #[cfg(test)]
 mod tests {
     //! The runtime is exercised end-to-end (with real artifacts) by
-    //! `rust/tests/artifact_parity.rs`; here only artifact-free pieces.
+    //! `rust/tests/artifact_parity.rs`; here only artifact-free pieces that
+    //! hold for both the real and the stub implementation.
     use super::*;
 
     #[test]

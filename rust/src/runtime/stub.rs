@@ -1,0 +1,54 @@
+//! Stub PJRT runtime (default build, feature `xla-pjrt` disabled).
+//!
+//! The offline vendor set has no `xla` crate, so the default build replaces
+//! the PJRT runtime with a stub exposing the same API: the client constructs
+//! (so artifact-free code paths and tests run), but loading an HLO module
+//! reports a clear error.  Enable the `xla-pjrt` feature (and vendor the
+//! `xla` crate) to execute real AOT artifacts.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+/// Stand-in for the PJRT CPU client.
+pub struct Runtime {
+    _private: (),
+}
+
+/// Stand-in for a compiled HLO module; never constructible from the stub
+/// runtime, but the type (and `run_f32`) exist so callers compile unchanged.
+pub struct Executable {
+    name: String,
+    _private: (),
+}
+
+impl Runtime {
+    /// Create the stub client (always succeeds).
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { _private: () })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `xla-pjrt` feature)".to_string()
+    }
+
+    /// Always errors: executing HLO requires the real PJRT runtime.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>, _input_lens: Vec<usize>) -> Result<Executable> {
+        bail!(
+            "cannot load {}: PJRT execution requires building with the `xla-pjrt` feature \
+             (the offline vendor set has no `xla` crate)",
+            path.as_ref().display()
+        )
+    }
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Always errors (an `Executable` cannot exist in a stub build).
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        bail!("{}: PJRT execution requires the `xla-pjrt` feature", self.name)
+    }
+}

@@ -27,6 +27,16 @@ fn artifacts() -> Option<std::path::PathBuf> {
     }
 }
 
+/// PJRT tests additionally need the real runtime (feature `xla-pjrt`); the
+/// default build ships a stub that errors on `load_hlo_text`.
+fn pjrt_artifacts() -> Option<std::path::PathBuf> {
+    if !cfg!(feature = "xla-pjrt") {
+        eprintln!("skipping: built without the `xla-pjrt` feature (stub PJRT runtime)");
+        return None;
+    }
+    artifacts()
+}
+
 struct Vectors {
     input: Vec<f32>,
     img_elems: usize,
@@ -56,7 +66,7 @@ fn load_vectors(dir: &std::path::Path) -> Vectors {
 
 #[test]
 fn pjrt_jnp_model_matches_exported_features() {
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = pjrt_artifacts() else { return };
     let v = load_vectors(&dir);
     let rt = Runtime::cpu().unwrap();
     let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![v.img_elems]).unwrap();
@@ -78,7 +88,7 @@ fn pjrt_pallas_model_matches_exported_features() {
     // The SAME backbone lowered through the L1 Pallas kernels
     // (interpret=True) — proves kernels compose into HLO that the rust
     // runtime loads and runs with identical numerics.
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = pjrt_artifacts() else { return };
     let v = load_vectors(&dir);
     let rt = Runtime::cpu().unwrap();
     let exe = rt.load_hlo_text(dir.join("model_pallas.hlo.txt"), vec![v.img_elems]).unwrap();
@@ -96,7 +106,7 @@ fn pjrt_pallas_model_matches_exported_features() {
 
 #[test]
 fn ncm_hlo_loads_and_computes_distances() {
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = pjrt_artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let manifest = json::from_file(dir.join("manifest.json")).unwrap();
     let fdim = manifest

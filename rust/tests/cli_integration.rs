@@ -84,10 +84,15 @@ fn demo_quiet_both_backends() {
         return;
     }
     assert_eq!(run(&sv(&["demo", "--frames", "4", "--quiet"])).unwrap(), 0);
-    assert_eq!(
-        run(&sv(&["demo", "--frames", "4", "--quiet", "--backend", "pjrt"])).unwrap(),
-        0
-    );
+    if cfg!(feature = "xla-pjrt") {
+        assert_eq!(
+            run(&sv(&["demo", "--frames", "4", "--quiet", "--backend", "pjrt"])).unwrap(),
+            0
+        );
+    } else {
+        // stub PJRT runtime: must fail with a clean error, not panic
+        assert!(run(&sv(&["demo", "--frames", "4", "--quiet", "--backend", "pjrt"])).is_err());
+    }
 }
 
 #[test]

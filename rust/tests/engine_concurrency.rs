@@ -1,0 +1,126 @@
+//! Concurrency contract of the inference service: many threads share one
+//! [`Engine`] (each with its own [`Session`]) and must observe exactly the
+//! results a serial run produces, with latency metadata populated on every
+//! request.
+
+use std::sync::Arc;
+
+use pefsl::dse::BackboneSpec;
+use pefsl::engine::{Engine, EngineBuilder, InferRequest, Session};
+use pefsl::tarch::Tarch;
+use pefsl::util::Prng;
+
+const IMG_ELEMS: usize = 16 * 16 * 3;
+
+fn tiny_engine() -> Arc<Engine> {
+    let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+    let g = spec.build_graph(5).unwrap();
+    Arc::new(EngineBuilder::new().graph(g).tarch(Tarch::z7020_8x8()).build().unwrap())
+}
+
+fn image(rng: &mut Prng) -> Vec<f32> {
+    (0..IMG_ELEMS).map(|_| rng.f32()).collect()
+}
+
+/// One client's deterministic workload: enroll 2 classes × 2 shots, then
+/// classify 6 queries.  Returns predictions and per-request modeled
+/// latencies; everything derives from `seed`, so any two runs (serial or
+/// concurrent, same engine or a fresh one) must agree exactly.
+fn run_client(engine: &Arc<Engine>, seed: u64) -> (Vec<usize>, Vec<f64>) {
+    let mut session = Session::new(engine.clone());
+    let mut rng = Prng::new(seed);
+    for c in 0..2 {
+        let idx = session.add_class(format!("client{seed}-c{c}"));
+        for _ in 0..2 {
+            let metrics = session.enroll_image(idx, &image(&mut rng)).unwrap();
+            assert!(metrics.modeled_latency_ms.unwrap() > 0.0, "latency metadata missing");
+            assert!(metrics.cycles.unwrap() > 0, "cycle metadata missing");
+        }
+    }
+    let mut preds = Vec::new();
+    let mut lats = Vec::new();
+    for _ in 0..6 {
+        let (pred, metrics) = session.classify_image(&image(&mut rng)).unwrap();
+        assert!(metrics.modeled_latency_ms.unwrap() > 0.0, "latency metadata missing");
+        assert!(metrics.host_us > 0.0, "host timing missing");
+        preds.push(pred.class_idx);
+        lats.push(metrics.modeled_latency_ms.unwrap());
+    }
+    (preds, lats)
+}
+
+#[test]
+fn four_threads_one_engine_match_serial() {
+    const CLIENTS: u64 = 4;
+    let engine = tiny_engine();
+
+    // Serial reference pass.
+    let serial: Vec<_> = (0..CLIENTS).map(|seed| run_client(&engine, seed)).collect();
+
+    // Concurrent pass: each client on its own thread, all sharing the
+    // engine, each with its own session.
+    let concurrent: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|seed| {
+                let engine = engine.clone();
+                s.spawn(move || run_client(&engine, seed))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+
+    assert_eq!(serial, concurrent, "concurrent results diverged from the serial run");
+
+    // 4 enrolls + 6 classifies per client, two passes.
+    let expected_images = CLIENTS * 10 * 2;
+    let stats = engine.stats();
+    assert_eq!(stats.images, expected_images);
+    assert_eq!(stats.requests, expected_images); // all single-image requests
+    assert!(stats.modeled_ms_total > 0.0);
+}
+
+#[test]
+fn batch_of_n_returns_n_features_in_one_call() {
+    let engine = tiny_engine();
+    let mut rng = Prng::new(9);
+    let imgs: Vec<Vec<f32>> = (0..5).map(|_| image(&mut rng)).collect();
+
+    let resp = engine.infer(InferRequest::batch(imgs.clone())).unwrap();
+    assert_eq!(resp.items.len(), 5);
+    assert_eq!(engine.stats().requests, 1);
+
+    for (i, img) in imgs.iter().enumerate() {
+        let item = &resp.items[i];
+        assert_eq!(item.features.len(), engine.feature_dim());
+        assert!(item.metrics.modeled_latency_ms.unwrap() > 0.0);
+        assert!(item.metrics.cycles.unwrap() > 0);
+        // batch items are identical to single-image requests
+        let single = engine.infer(InferRequest::single(img.clone())).unwrap();
+        assert_eq!(single.into_single().unwrap().features, item.features);
+    }
+}
+
+#[test]
+fn concurrent_batches_deterministic() {
+    let engine = tiny_engine();
+    let mut rng = Prng::new(21);
+    let imgs: Vec<Vec<f32>> = (0..3).map(|_| image(&mut rng)).collect();
+    let want = engine.infer(InferRequest::batch(imgs.clone())).unwrap();
+
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let engine = engine.clone();
+            let imgs = imgs.clone();
+            let want: Vec<Vec<f32>> =
+                want.items.iter().map(|i| i.features.clone()).collect();
+            s.spawn(move || {
+                for _ in 0..3 {
+                    let got = engine.infer(InferRequest::batch(imgs.clone())).unwrap();
+                    let got: Vec<Vec<f32>> =
+                        got.items.into_iter().map(|i| i.features).collect();
+                    assert_eq!(got, want);
+                }
+            });
+        }
+    });
+}
