@@ -1,0 +1,71 @@
+//! Bench: the Kanda-style bit-width Pareto frontier — few-shot accuracy
+//! vs modeled accelerator cycles at 4/8/12/16-bit datapaths, on synthetic
+//! novel-split features.
+//!
+//! One row per bit-width: accuracy (quantized episodic NCM), cycles
+//! (closed-form estimator on the bus-width-scaled tarch) and the
+//! calibrated feature `QFormat`.  Also times the quantized evaluation
+//! itself (the DSE inner loop).
+//!
+//! Run: `cargo bench --bench quant_pareto`.
+
+use pefsl::dse::{quant_pareto_rows, render_quant_table, BackboneSpec};
+use pefsl::fewshot::{evaluate_quantized, EpisodeConfig, FeatureBank};
+use pefsl::quant::{QuantConfig, QuantPolicy};
+use pefsl::tarch::Tarch;
+use pefsl::util::bench::{bench, BenchConfig};
+
+fn main() {
+    let tarch = Tarch::z7020_12x12();
+    let bank = FeatureBank::synthetic(20, 24, 64, 0.35, 11);
+    let ep = EpisodeConfig { n_episodes: 120, n_queries: 10, ..Default::default() };
+    let bits = [4u8, 8, 12, 16];
+
+    let rows = quant_pareto_rows(
+        &BackboneSpec::headline(),
+        &tarch,
+        &bank,
+        &ep,
+        &bits,
+        QuantPolicy::MinMax,
+    )
+    .expect("bit-width sweep");
+    println!("{}", render_quant_table(&rows));
+
+    // Shape of the frontier, as assertions:
+    assert_eq!(rows.len(), bits.len(), "one row per bit-width");
+    let row = |b: u8| rows.iter().find(|r| r.total_bits == b).unwrap();
+    for &b in &bits {
+        let r = row(b);
+        assert_eq!(r.feature_format.total_bits, b, "chosen format matches the bit budget");
+        assert!((0.0..=1.0).contains(&r.accuracy));
+        assert!(r.cycles > 0 && r.latency_ms > 0.0);
+    }
+    // narrower data streams faster through the memory-bound im2col path
+    assert!(row(4).cycles < row(16).cycles, "4-bit should be faster than 16-bit");
+    assert!(row(8).cycles < row(16).cycles, "8-bit should be faster than 16-bit");
+    // and the wide end of the frontier classifies at least as well
+    assert!(
+        row(16).accuracy >= row(4).accuracy - 0.05,
+        "16-bit acc {} vs 4-bit acc {}",
+        row(16).accuracy,
+        row(4).accuracy
+    );
+    println!(
+        "frontier: 4-bit = {:.1}% cycles of 16-bit at {:+.1}pp accuracy",
+        100.0 * row(4).cycles as f64 / row(16).cycles as f64,
+        100.0 * (row(4).accuracy - row(16).accuracy),
+    );
+
+    // The DSE inner loop: one quantized evaluation per swept point.
+    let cfg = BenchConfig::quick();
+    let quick_ep = EpisodeConfig { n_episodes: 40, n_queries: 5, ..Default::default() };
+    bench("quant/evaluate_8bit_40ep", &cfg, || {
+        let (r, _) = evaluate_quantized(&bank, &quick_ep, true, &QuantConfig::bits(8)).unwrap();
+        std::hint::black_box(r.accuracy);
+    });
+    bench("quant/evaluate_16bit_40ep", &cfg, || {
+        let (r, _) = evaluate_quantized(&bank, &quick_ep, true, &QuantConfig::bits(16)).unwrap();
+        std::hint::black_box(r.accuracy);
+    });
+}

@@ -5,9 +5,10 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{DemoConfig, Demonstrator};
-use crate::dse::{fig5_rows, join_accuracy, BackboneSpec};
+use crate::dse::{fig5_rows, join_accuracy, quant_pareto_rows, render_quant_table, BackboneSpec};
 use crate::engine::{BackendKind, EngineBuilder};
 use crate::fewshot::{evaluate, EpisodeConfig, FeatureBank};
+use crate::quant::QuantPolicy;
 use crate::graph::import_files;
 use crate::json::{self, Value};
 use crate::power::system_power;
@@ -222,6 +223,64 @@ pub fn eval(args: &Args) -> Result<i32> {
         "novel-split NCM (deployed Q8.8 features): {}-way {}-shot = {:.4} ± {:.4} ({} episodes)",
         cfg.n_ways, cfg.n_shots, r.accuracy, r.ci95, r.n_episodes
     );
+    Ok(0)
+}
+
+/// `pefsl quant` — the bit-width Pareto sweep (Kanda-style DSE).
+pub fn quant(args: &Args) -> Result<i32> {
+    let tarch = tarch_from(args)?;
+    let bits: Vec<u8> = args
+        .get_str("bits", "4,8,12,16")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<u8>()
+                .map_err(|_| anyhow::anyhow!("--bits expects comma-separated integers, got '{s}'"))
+        })
+        .collect::<Result<_>>()?;
+    let policy = match args.get("percentile") {
+        Some(p) => QuantPolicy::Percentile(
+            p.parse::<f32>().map_err(|_| anyhow::anyhow!("--percentile expects a number"))?,
+        ),
+        None => QuantPolicy::MinMax,
+    };
+
+    // Accuracy axis: exported novel-split features when available, else the
+    // synthetic separable bank (so the sweep runs without artifacts).
+    let dir = artifacts_dir(args);
+    let feat_path = dir.join("novel_features.bin");
+    let bank = if feat_path.exists() {
+        let features = read_tensor(&feat_path)?;
+        let labels = read_tensor(dir.join("novel_labels.bin"))?;
+        FeatureBank::from_tensors(&features, &labels)?
+    } else {
+        eprintln!("note: {} not found — using a synthetic feature bank", feat_path.display());
+        FeatureBank::synthetic(16, 24, 64, 0.35, 7)
+    };
+    let ep = EpisodeConfig {
+        n_ways: args.get_usize("ways", 5)?,
+        n_shots: args.get_usize("shots", 1)?,
+        n_queries: args.get_usize("queries", 15)?,
+        n_episodes: args.get_usize("episodes", 200)?,
+        seed: args.get_u64("seed", 99)?,
+    };
+
+    let rows = quant_pareto_rows(&BackboneSpec::headline(), &tarch, &bank, &ep, &bits, policy)?;
+    print!("{}", render_quant_table(&rows));
+    if let Some(path) = args.get("json") {
+        let mut arr = Vec::new();
+        for r in &rows {
+            let mut o = Value::obj();
+            o.set("total_bits", r.total_bits as usize)
+                .set("feature_format", r.feature_format.to_string())
+                .set("cycles", r.cycles)
+                .set("latency_ms", r.latency_ms)
+                .set("accuracy", r.accuracy)
+                .set("ci95", r.ci95);
+            arr.push(o);
+        }
+        json::to_file(path, &Value::Arr(arr))?;
+    }
     Ok(0)
 }
 

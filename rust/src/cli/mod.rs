@@ -4,6 +4,7 @@
 //! ```text
 //! pefsl demo       --frames 64 --tarch z7020-12x12 [--backend sim|pjrt]
 //! pefsl dse        --test-size 32 [--tarch NAME] [--json PATH]
+//! pefsl quant      --bits 4,8,12,16 [--percentile P] [--episodes N] [--json PATH]
 //! pefsl compile    [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl simulate   [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl resources  [--tarch NAME]
@@ -41,6 +42,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     match cmd {
         "demo" => commands::demo(&args),
         "dse" => commands::dse(&args),
+        "quant" => commands::quant(&args),
         "compile" => commands::compile_cmd(&args),
         "simulate" => commands::simulate(&args),
         "resources" => commands::resources_cmd(&args),
@@ -61,6 +63,7 @@ pub fn usage() -> String {
      COMMANDS:\n\
      \x20 demo        run the live demonstrator (synthetic camera → backbone → NCM)\n\
      \x20 dse         design-space exploration table (Fig. 5)\n\
+     \x20 quant       bit-width Pareto sweep: accuracy × cycles at 4–16 bits\n\
      \x20 compile     compile a graph.json for a tarch, print per-layer cycles\n\
      \x20 simulate    run the bit-exact accelerator simulation on a test vector\n\
      \x20 resources   FPGA resource + power report (Table I row)\n\
@@ -73,6 +76,8 @@ pub fn usage() -> String {
      \x20 --frames N         demo frames (default 64)\n\
      \x20 --backend B        sim | pjrt (default sim)\n\
      \x20 --test-size N      dse deployed resolution: 32 | 84\n\
+     \x20 --bits LIST        quant sweep bit-widths, e.g. 4,8,12,16\n\
+     \x20 --percentile P     quant calibration percentile (default: min/max)\n\
      \x20 --episodes N --ways W --shots S --queries Q   eval protocol\n\
      \x20 --json PATH        also write results as JSON\n"
         .to_string()
@@ -114,5 +119,24 @@ mod tests {
     #[test]
     fn bad_tarch_errors() {
         assert!(run(&sv(&["resources", "--tarch", "nope"])).is_err());
+    }
+
+    #[test]
+    fn quant_sweep_runs_without_artifacts() {
+        // falls back to the synthetic bank; keep the protocol tiny
+        assert_eq!(
+            run(&sv(&["quant", "--bits", "8,16", "--episodes", "10", "--queries", "5"])).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn quant_bad_bits_error() {
+        assert!(run(&sv(&["quant", "--bits", "abc"])).is_err());
+        // out-of-range widths error (not panic), including the ones that
+        // would trip QFormat's assert if they reached tarch derivation
+        for bits in ["0", "3", "17"] {
+            assert!(run(&sv(&["quant", "--bits", bits, "--episodes", "5"])).is_err(), "{bits}");
+        }
     }
 }

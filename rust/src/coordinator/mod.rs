@@ -11,15 +11,14 @@
 //! costs into the paper's FPS accounting, calibrated to §IV-B's 16 FPS at
 //! 30 ms inference.
 //!
-//! The single-frame [`Backend`] trait ([`SimBackend`] / [`PjrtBackend`]) is
-//! a deprecated compat shim over the engine, kept for one release.
+//! The pre-engine single-frame `Backend` trait (`SimBackend` /
+//! `PjrtBackend`) lived here as a one-release compat shim and has been
+//! removed; build an [`crate::engine::Engine`] instead.
 
-mod backend;
 mod demo;
 mod pipeline;
 mod system_model;
 
-pub use backend::{Backend, PjrtBackend, SimBackend};
 pub use demo::{run_threaded, Command, DemoConfig, DemoReport, Demonstrator};
 pub use pipeline::{run_pipelined, PipelineConfig, PipelineReport};
 pub use system_model::SystemModel;

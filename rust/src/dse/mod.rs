@@ -6,9 +6,15 @@
 //! (the Fig. 5 x-axis; latency is shape-only, no trained weights needed)
 //! and joins the accuracy axis from `artifacts/dse_results.json` (produced
 //! by the python training sweep).
+//!
+//! A second, Kanda-style axis (`quant`) sweeps the datapath *bit-width*
+//! 4–16 against few-shot accuracy and modeled cycles — see
+//! [`quant_pareto_rows`].
 
 mod builder;
+mod quant;
 mod sweep;
 
 pub use builder::{build_backbone_graph, BackboneSpec};
+pub use quant::{quant_pareto_rows, render_quant_table, tarch_for_bits, QuantDseRow};
 pub use sweep::{fig5_rows, join_accuracy, render_table, DseRow};

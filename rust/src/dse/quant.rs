@@ -1,0 +1,161 @@
+//! Bit-width DSE (Kanda-style): accuracy vs bit-width vs cycles.
+//!
+//! The paper fixes 16-bit Q8.8; the bit-width-aware design environments of
+//! Kanda et al. sweep the datapath width instead and read off the Pareto
+//! frontier between few-shot accuracy and hardware cost.  This module
+//! reproduces that axis on the deployed stack:
+//!
+//! * **cycles** — [`crate::tcompiler::estimate_cycles`] on a tarch derived
+//!   by [`tarch_for_bits`]: the AXI bus width is fixed by the board, so
+//!   DRAM scalars-per-cycle scales inversely with the data width (narrower
+//!   codes stream faster through the memory-bound im2col path, which is
+//!   what the cost model already prices);
+//! * **accuracy** — [`crate::fewshot::evaluate_quantized`] under a
+//!   [`QuantConfig`] at the same bit-width, reporting the calibrated
+//!   feature [`QFormat`] per row.
+
+use anyhow::Result;
+
+use crate::fewshot::{evaluate_quantized, EpisodeConfig, FeatureBank};
+use crate::fixed::QFormat;
+use crate::quant::{QuantConfig, QuantPolicy};
+use crate::tarch::Tarch;
+use crate::tcompiler::estimate_cycles;
+
+use super::builder::{build_backbone_graph, BackboneSpec};
+
+/// One point of the bit-width Pareto frontier.
+#[derive(Clone, Debug)]
+pub struct QuantDseRow {
+    pub total_bits: u8,
+    /// Calibrated (or explicit) feature format used for the accuracy axis.
+    pub feature_format: QFormat,
+    pub cycles: u64,
+    pub latency_ms: f64,
+    pub accuracy: f64,
+    pub ci95: f64,
+}
+
+/// Derive the tarch for a data bit-width.
+///
+/// The base tarch expresses DRAM bandwidth as scalars/cycle *at its own
+/// data width*; the bus itself is fixed, so a narrower scalar packs more
+/// per beat (floored — fractional scalars don't cross an AXI beat).  The
+/// accelerator's number format becomes the balanced `Qn/2.n/2` split, the
+/// paper's Q8.8 convention generalized.
+pub fn tarch_for_bits(base: &Tarch, total_bits: u8) -> Tarch {
+    let bus_bits = base.dram_scalars_per_cycle * base.qformat.total_bits as usize;
+    Tarch {
+        name: format!("{}-{}b", base.name, total_bits),
+        qformat: QFormat::new(total_bits, total_bits / 2),
+        dram_scalars_per_cycle: (bus_bits / total_bits as usize).max(1),
+        ..base.clone()
+    }
+}
+
+/// Sweep bit-widths: one row per entry of `bits`, cycles from the
+/// closed-form estimator on the derived tarch, accuracy from the quantized
+/// episodic evaluation on `bank`.
+pub fn quant_pareto_rows(
+    spec: &BackboneSpec,
+    base_tarch: &Tarch,
+    bank: &FeatureBank,
+    ep: &EpisodeConfig,
+    bits: &[u8],
+    policy: QuantPolicy,
+) -> Result<Vec<QuantDseRow>> {
+    let g = build_backbone_graph(spec, 7)?;
+    let mut rows = Vec::with_capacity(bits.len());
+    for &b in bits {
+        // Validate the bit budget before deriving the tarch —
+        // `QFormat::new` inside `tarch_for_bits` asserts on 0 or >16 bits,
+        // and a CLI-supplied width must error, not panic.
+        let qcfg = QuantConfig::bits(b).with_policy(policy);
+        qcfg.validate()?;
+        let tarch = tarch_for_bits(base_tarch, b);
+        let (cycles, _) = estimate_cycles(&g, &tarch)?;
+        let (res, fmt) = evaluate_quantized(bank, ep, true, &qcfg)?;
+        rows.push(QuantDseRow {
+            total_bits: b,
+            feature_format: fmt,
+            cycles,
+            latency_ms: tarch.cycles_to_ms(cycles),
+            accuracy: res.accuracy,
+            ci95: res.ci95,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render rows as an aligned text table (the bench/CLI output).
+pub fn render_quant_table(rows: &[QuantDseRow]) -> String {
+    let mut out = String::from(
+        "bit-width Pareto (accuracy × cycles, Kanda-style DSE):\n",
+    );
+    out.push_str(&format!(
+        "{:>5} {:>9} {:>12} {:>10} {:>9} {:>9}\n",
+        "bits", "qformat", "cycles", "ms", "acc", "±ci95"
+    ));
+    for r in rows {
+        // QFormat's Display ignores width, so pre-render for alignment
+        let fmt = r.feature_format.to_string();
+        out.push_str(&format!(
+            "{:>5} {:>9} {:>12} {:>10.2} {:>9.4} {:>9.4}\n",
+            r.total_bits, fmt, r.cycles, r.latency_ms, r.accuracy, r.ci95,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bus_scaling_is_inverse_and_floored() {
+        let base = Tarch::z7020_12x12(); // 1 scalar/cycle at 16 bits
+        assert_eq!(tarch_for_bits(&base, 16).dram_scalars_per_cycle, 1);
+        assert_eq!(tarch_for_bits(&base, 12).dram_scalars_per_cycle, 1);
+        assert_eq!(tarch_for_bits(&base, 8).dram_scalars_per_cycle, 2);
+        assert_eq!(tarch_for_bits(&base, 4).dram_scalars_per_cycle, 4);
+        assert_eq!(tarch_for_bits(&base, 16).qformat.to_string(), "Q8.8");
+        assert_eq!(tarch_for_bits(&base, 8).qformat.to_string(), "Q4.4");
+        tarch_for_bits(&base, 4).validate().unwrap();
+    }
+
+    #[test]
+    fn pareto_rows_cover_bits_and_tradeoff() {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let bank = FeatureBank::synthetic(8, 8, 16, 0.2, 3);
+        let ep = EpisodeConfig { n_episodes: 25, n_queries: 5, ..Default::default() };
+        let rows = quant_pareto_rows(
+            &spec,
+            &Tarch::z7020_12x12(),
+            &bank,
+            &ep,
+            &[4, 8, 16],
+            QuantPolicy::MinMax,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 3);
+        let row = |b: u8| rows.iter().find(|r| r.total_bits == b).unwrap();
+        // narrower data streams faster through the memory-bound layers
+        assert!(row(4).cycles < row(16).cycles, "{} vs {}", row(4).cycles, row(16).cycles);
+        assert!(row(8).cycles < row(16).cycles);
+        // and wider codes classify at least as well
+        assert!(
+            row(16).accuracy >= row(4).accuracy - 0.05,
+            "16b {} vs 4b {}",
+            row(16).accuracy,
+            row(4).accuracy
+        );
+        for r in &rows {
+            assert_eq!(r.feature_format.total_bits, r.total_bits);
+            assert!((0.0..=1.0).contains(&r.accuracy), "{}", r.accuracy);
+            assert!(r.latency_ms > 0.0);
+        }
+        let table = render_quant_table(&rows);
+        assert_eq!(table.lines().count(), 2 + rows.len());
+        assert!(table.contains("Q"));
+    }
+}

@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::graph::{import_files, Graph};
 use crate::json::{self, Value};
+use crate::quant::QuantConfig;
 use crate::runtime::Runtime;
 use crate::tarch::Tarch;
 use crate::tcompiler::compile;
@@ -77,6 +78,7 @@ pub struct EngineBuilder {
     kind: BackendKind,
     tarch: Option<Tarch>,
     graph: Option<Graph>,
+    quant: Option<QuantConfig>,
 }
 
 impl EngineBuilder {
@@ -116,15 +118,34 @@ impl EngineBuilder {
         self
     }
 
+    /// Run a feature-quantization config: responses additionally carry
+    /// integer feature codes ([`crate::engine::InferItem::qfeatures`])
+    /// under a format calibrated online (or pinned via
+    /// [`QuantConfig::with_format`]).
+    pub fn quant(mut self, cfg: QuantConfig) -> EngineBuilder {
+        self.quant = Some(cfg);
+        self
+    }
+
+    /// Shorthand for [`EngineBuilder::quant`] at a total bit-width with the
+    /// default min/max calibration policy.
+    pub fn quant_bits(self, total_bits: u8) -> EngineBuilder {
+        self.quant(QuantConfig::bits(total_bits))
+    }
+
     /// Build the engine: resolve artifacts, compile/load the backend.
     pub fn build(self) -> Result<Engine> {
-        let tarch = self.tarch.unwrap_or_else(Tarch::z7020_12x12);
-        match self.kind {
+        let EngineBuilder { artifacts, kind, tarch, graph, quant } = self;
+        if let Some(cfg) = &quant {
+            cfg.validate()?;
+        }
+        let tarch = tarch.unwrap_or_else(Tarch::z7020_12x12);
+        let engine = match kind {
             BackendKind::Sim => {
-                let graph = match self.graph {
+                let graph = match graph {
                     Some(g) => g,
                     None => {
-                        let dir = resolve_artifacts_dir(self.artifacts.as_deref());
+                        let dir = resolve_artifacts_dir(artifacts.as_deref());
                         import_files(dir.join("graph.json"), dir.join("weights.bin"))
                             .context("load graph artifacts (run `make artifacts` first)")?
                     }
@@ -138,14 +159,15 @@ impl EngineBuilder {
                     instr_count: Some(program.instrs.len()),
                     modeled_latency_ms: Some(program.est_latency_ms()),
                     tarch_name: Some(tarch.name.clone()),
+                    quant: None,
                 };
-                Ok(Engine::new(Box::new(SimWorker::new(program, graph)), info))
+                Engine::new(Box::new(SimWorker::new(program, graph)), info)
             }
             BackendKind::Pjrt => {
-                if self.graph.is_some() {
+                if graph.is_some() {
                     bail!("in-memory graphs are only supported by the sim backend");
                 }
-                let dir = resolve_artifacts_dir(self.artifacts.as_deref());
+                let dir = resolve_artifacts_dir(artifacts.as_deref());
                 let manifest = json::from_file(dir.join("manifest.json"))
                     .context("load manifest.json (run `make artifacts` first)")?;
                 let size = manifest
@@ -158,9 +180,13 @@ impl EngineBuilder {
                     .unwrap_or(80);
                 let rt = Runtime::cpu()?;
                 let exe = rt.load_hlo_text(dir.join("model.hlo.txt"), vec![size * size * 3])?;
-                Ok(Engine::from_pjrt(exe, vec![1, size, size, 3], fdim))
+                Engine::from_pjrt(exe, vec![1, size, size, 3], fdim)
             }
-        }
+        };
+        Ok(match quant {
+            Some(cfg) => engine.with_quant(cfg),
+            None => engine,
+        })
     }
 }
 
@@ -212,5 +238,22 @@ mod tests {
     #[test]
     fn bad_tarch_preset_rejected() {
         assert!(EngineBuilder::new().tarch_preset("nope").is_err());
+    }
+
+    #[test]
+    fn invalid_quant_config_rejected_at_build() {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 2).unwrap();
+        let r = EngineBuilder::new().graph(g).quant_bits(3).build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn quant_builds_and_reports_in_info() {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 2).unwrap();
+        let engine = EngineBuilder::new().graph(g).quant_bits(8).build().unwrap();
+        assert_eq!(engine.info().quant.unwrap().total_bits, 8);
+        assert!(engine.feature_format().is_some());
     }
 }

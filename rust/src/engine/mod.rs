@@ -54,8 +54,15 @@
 //! }
 //! ```
 //!
-//! The old `coordinator::Backend` trait remains for one release as a thin
-//! compat shim implemented over [`Engine`]; new code should not use it.
+//! Engines can additionally run a quantization config
+//! ([`EngineBuilder::quant`]): feature vectors are then also returned as
+//! integer codes ([`InferItem::qfeatures`]) under a [`QFormat`] calibrated
+//! online from the served traffic (or pinned explicitly), and [`Session`]s
+//! gain a fixed-point NCM mode ([`Session::with_quant`]).
+//!
+//! The pre-engine single-frame `coordinator::Backend` trait (and its
+//! `SimBackend`/`PjrtBackend` shims) survived one release as a compat layer
+//! and has been removed; all callers build an [`Engine`] directly.
 
 mod builder;
 mod request;
@@ -70,6 +77,9 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
+
+use crate::fixed::QFormat;
+use crate::quant::{Calibrator, QTensor, QuantConfig};
 
 use workers::InferWorker;
 
@@ -90,6 +100,8 @@ pub struct EngineInfo {
     pub modeled_latency_ms: Option<f64>,
     /// Accelerator architecture name (sim backend only).
     pub tarch_name: Option<String>,
+    /// Feature quantization config, if the engine runs one.
+    pub quant: Option<QuantConfig>,
 }
 
 /// Cumulative service counters (snapshot via [`Engine::stats`]).
@@ -115,18 +127,55 @@ pub struct Engine {
     worker: Mutex<Box<dyn InferWorker>>,
     info: EngineInfo,
     stats: Mutex<EngineStats>,
+    quant: Option<Mutex<QuantState>>,
+}
+
+/// Online feature-format calibration state (engines with a quant config).
+struct QuantState {
+    cfg: QuantConfig,
+    calib: Calibrator,
+    /// Set once calibration freezes (explicit format, or after
+    /// `cfg.calib_images` observed images).
+    frozen: Option<QFormat>,
+    seen_images: usize,
+}
+
+impl QuantState {
+    /// The format quantization currently uses: frozen if available, else
+    /// the best fit to everything observed so far.
+    fn current_format(&self) -> QFormat {
+        self.frozen.unwrap_or_else(|| self.calib.fit(self.cfg.total_bits))
+    }
 }
 
 impl Engine {
     pub(crate) fn new(worker: Box<dyn InferWorker>, info: EngineInfo) -> Engine {
-        Engine { worker: Mutex::new(worker), info, stats: Mutex::new(EngineStats::default()) }
+        Engine {
+            worker: Mutex::new(worker),
+            info,
+            stats: Mutex::new(EngineStats::default()),
+            quant: None,
+        }
+    }
+
+    /// Attach a quantization config: every response item additionally
+    /// carries integer feature codes under the calibrated format.
+    pub(crate) fn with_quant(mut self, cfg: QuantConfig) -> Engine {
+        self.info.quant = Some(cfg);
+        self.quant = Some(Mutex::new(QuantState {
+            calib: Calibrator::new(cfg.policy),
+            frozen: cfg.format,
+            seen_images: 0,
+            cfg,
+        }));
+        self
     }
 
     /// Build an engine directly over a loaded PJRT executable.
     ///
     /// Prefer [`EngineBuilder`] (which reads the artifact manifest); this
-    /// constructor exists for the `coordinator::PjrtBackend` compat shim and
-    /// for callers that loaded an [`crate::runtime::Executable`] themselves.
+    /// constructor exists for callers that loaded an
+    /// [`crate::runtime::Executable`] themselves.
     pub fn from_pjrt(
         exe: crate::runtime::Executable,
         input_dims: Vec<usize>,
@@ -140,6 +189,7 @@ impl Engine {
             instr_count: None,
             modeled_latency_ms: None,
             tarch_name: None,
+            quant: None,
         };
         Engine::new(Box::new(workers::PjrtWorker::new(exe, input_dims, feature_dim)), info)
     }
@@ -175,6 +225,28 @@ impl Engine {
         }
         drop(worker);
 
+        if let Some(q) = &self.quant {
+            let mut st = q.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            // Observe the whole request first, then quantize every item
+            // under ONE format: a response never mixes formats (so
+            // `InferResponse::feature_format` is Some for quantized
+            // engines), and the calibrator fit runs once per request.
+            if st.frozen.is_none() {
+                for item in &items {
+                    st.calib.observe(&item.features);
+                }
+                st.seen_images += items.len();
+                if st.seen_images >= st.cfg.calib_images {
+                    st.frozen = Some(st.calib.fit(st.cfg.total_bits));
+                }
+            }
+            let fmt = st.current_format();
+            drop(st);
+            for item in &mut items {
+                item.qfeatures = Some(QTensor::quantize(&item.features, fmt));
+            }
+        }
+
         let mut stats = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         stats.requests += 1;
         stats.images += items.len() as u64;
@@ -205,6 +277,15 @@ impl Engine {
     /// Static engine facts (instruction count, modeled latency, ...).
     pub fn info(&self) -> &EngineInfo {
         &self.info
+    }
+
+    /// The feature [`QFormat`] quantization currently uses, if this engine
+    /// runs a quantization config.  Before calibration freezes
+    /// (`quant.calib_images` images observed, or an explicit format) this
+    /// is the running best fit and may still tighten.
+    pub fn feature_format(&self) -> Option<QFormat> {
+        let st = self.quant.as_ref()?.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        Some(st.current_format())
     }
 
     /// Snapshot of the cumulative service counters.
@@ -280,5 +361,60 @@ mod tests {
     fn engine_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Engine>();
+    }
+
+    fn tiny_quant_engine(cfg: QuantConfig) -> Engine {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = spec.build_graph(1).unwrap();
+        EngineBuilder::new().graph(g).tarch(Tarch::z7020_8x8()).quant(cfg).build().unwrap()
+    }
+
+    #[test]
+    fn quantized_engine_reports_codes_and_format() {
+        let engine = tiny_quant_engine(QuantConfig::bits(16));
+        assert_eq!(engine.info().quant.unwrap().total_bits, 16);
+        let resp = engine.infer(InferRequest::single(vec![0.4; 16 * 16 * 3])).unwrap();
+        let fmt = resp.feature_format().expect("quantized response carries a format");
+        assert_eq!(fmt.total_bits, 16);
+        assert_eq!(engine.feature_format(), Some(fmt));
+        let item = resp.into_single().unwrap();
+        let q = item.qfeatures.unwrap();
+        assert_eq!(q.len(), item.features.len());
+        // calibrated format covers the data: dequantization within half-ulp
+        let ulp = 1.0 / fmt.scale() as f32;
+        for (code, f) in q.dequantize().iter().zip(&item.features) {
+            assert!((code - f).abs() <= 0.5 * ulp + 1e-4, "{code} vs {f} under {fmt}");
+        }
+    }
+
+    #[test]
+    fn explicit_format_skips_calibration() {
+        let fmt = crate::quant::fit_format(12, 100.0);
+        let engine = tiny_quant_engine(QuantConfig::bits(12).with_format(fmt));
+        // frozen before any traffic
+        assert_eq!(engine.feature_format(), Some(fmt));
+        let resp = engine.infer(InferRequest::single(vec![0.2; 16 * 16 * 3])).unwrap();
+        assert_eq!(resp.feature_format(), Some(fmt));
+    }
+
+    #[test]
+    fn calibration_freezes_after_configured_images() {
+        let engine = tiny_quant_engine(QuantConfig::bits(8).with_calib_images(2));
+        let img = vec![0.3; 16 * 16 * 3];
+        engine.infer(InferRequest::batch(vec![img.clone(), img.clone()])).unwrap();
+        let frozen = engine.feature_format().unwrap();
+        // later, differently-scaled traffic no longer moves the format
+        engine.infer(InferRequest::single(vec![0.9; 16 * 16 * 3])).unwrap();
+        assert_eq!(engine.feature_format(), Some(frozen));
+    }
+
+    #[test]
+    fn unquantized_engine_has_no_codes() {
+        let engine = tiny_engine();
+        assert_eq!(engine.feature_format(), None);
+        assert!(engine.info().quant.is_none());
+        let resp = engine.infer(InferRequest::single(vec![0.4; 16 * 16 * 3])).unwrap();
+        assert_eq!(resp.feature_format(), None);
+        assert!(resp.into_single().unwrap().qfeatures.is_none());
     }
 }

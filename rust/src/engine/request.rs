@@ -8,6 +8,9 @@
 
 use anyhow::{bail, Result};
 
+use crate::fixed::QFormat;
+use crate::quant::QTensor;
+
 /// A batch of one-or-many NHWC f32 images for one [`super::Engine::infer`]
 /// call.  All images must match the engine's input element count.
 #[derive(Clone, Debug, Default)]
@@ -67,6 +70,10 @@ pub struct InferMetrics {
 #[derive(Clone, Debug)]
 pub struct InferItem {
     pub features: Vec<f32>,
+    /// Quantized feature codes — present when the engine was built with a
+    /// quantization config ([`crate::engine::EngineBuilder::quant`]); the
+    /// format is the engine's calibrated (or explicit) feature format.
+    pub qfeatures: Option<QTensor>,
     pub metrics: InferMetrics,
 }
 
@@ -111,6 +118,18 @@ impl InferResponse {
     pub fn into_features(self) -> Vec<Vec<f32>> {
         self.items.into_iter().map(|i| i.features).collect()
     }
+
+    /// The feature [`QFormat`], if every item carries quantized features
+    /// in one common format (i.e. the engine runs a quantization config).
+    pub fn feature_format(&self) -> Option<QFormat> {
+        let first = self.items.first()?.qfeatures.as_ref()?.fmt;
+        for item in &self.items {
+            if item.qfeatures.as_ref()?.fmt != first {
+                return None;
+            }
+        }
+        Some(first)
+    }
 }
 
 #[cfg(test)]
@@ -120,6 +139,7 @@ mod tests {
     fn item(lat: Option<f64>, cycles: Option<u64>) -> InferItem {
         InferItem {
             features: vec![0.0],
+            qfeatures: None,
             metrics: InferMetrics { modeled_latency_ms: lat, cycles, host_us: 1.0 },
         }
     }
@@ -142,6 +162,24 @@ mod tests {
         assert!(one.into_single().is_ok());
         let two = InferResponse { items: vec![item(None, None), item(None, None)] };
         assert!(two.into_single().is_err());
+    }
+
+    #[test]
+    fn feature_format_requires_uniform_quantized_items() {
+        let fmt = QFormat::new(8, 4);
+        let quantized = |f: QFormat| InferItem {
+            features: vec![0.5],
+            qfeatures: Some(QTensor::quantize(&[0.5], f)),
+            metrics: InferMetrics::default(),
+        };
+        let r = InferResponse { items: vec![quantized(fmt), quantized(fmt)] };
+        assert_eq!(r.feature_format(), Some(fmt));
+        let mixed = InferResponse { items: vec![quantized(fmt), item(None, None)] };
+        assert_eq!(mixed.feature_format(), None);
+        let ragged = InferResponse { items: vec![quantized(fmt), quantized(QFormat::new(8, 5))] };
+        assert_eq!(ragged.feature_format(), None);
+        assert_eq!(InferResponse { items: vec![] }.feature_format(), None);
+        assert_eq!(InferResponse { items: vec![item(None, None)] }.feature_format(), None);
     }
 
     #[test]

@@ -11,17 +11,25 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::fixed::QFormat;
 use crate::ncm::{NcmClassifier, Prediction};
+use crate::quant::{fit_format, QuantConfig, QuantNcm};
 
 use super::request::{InferItem, InferMetrics, InferRequest};
 use super::Engine;
 
 /// One client's few-shot classification session.
+///
+/// In quantized mode ([`Session::with_quant`]) the session additionally
+/// maintains a fixed-point [`QuantNcm`]: enrollment updates both
+/// classifiers, classification runs on the integer one, and the f32 path
+/// stays available via [`Session::classify_feature_f32`] for validation.
 pub struct Session {
     engine: Option<Arc<Engine>>,
     ncm: NcmClassifier,
+    qncm: Option<QuantNcm>,
 }
 
 impl Session {
@@ -29,19 +37,59 @@ impl Session {
     /// engine.
     pub fn new(engine: Arc<Engine>) -> Session {
         let dim = engine.feature_dim();
-        Session { engine: Some(engine), ncm: NcmClassifier::new(dim) }
+        Session { engine: Some(engine), ncm: NcmClassifier::new(dim), qncm: None }
     }
 
     /// Feature-space-only session (no engine): enroll/classify operate on
     /// precomputed feature vectors of dimension `dim`.
     pub fn detached(dim: usize) -> Session {
-        Session { engine: None, ncm: NcmClassifier::new(dim) }
+        Session { engine: None, ncm: NcmClassifier::new(dim), qncm: None }
     }
 
     /// Install the base-split mean for feature centering (EASY protocol).
     pub fn with_base_mean(mut self, mean: Vec<f32>) -> Result<Session> {
-        self.ncm = self.ncm.with_base_mean(mean)?;
+        self.ncm = self.ncm.with_base_mean(mean.clone())?;
+        if let Some(q) = self.qncm.take() {
+            self.qncm = Some(q.with_base_mean(mean)?);
+        }
         Ok(self)
+    }
+
+    /// Switch the session into quantized-NCM mode: centroids and distances
+    /// are computed on integer codes at the config's bit-width.  Must be
+    /// enabled before any shot is enrolled.
+    ///
+    /// Only `cfg.total_bits` and `cfg.format` are consumed here: the
+    /// session quantizes *normalized* features, which are unit-L2, so
+    /// without an explicit format the format is fit to amplitude 1 and
+    /// there is no data-driven calibration — `cfg.policy` /
+    /// `cfg.calib_images` only matter for [`crate::engine::EngineBuilder::quant`]
+    /// and [`crate::fewshot::evaluate_quantized`].
+    pub fn with_quant(mut self, cfg: QuantConfig) -> Result<Session> {
+        cfg.validate()?;
+        if self.ncm.has_enrolled() {
+            bail!("enable quantized mode before enrolling shots");
+        }
+        let fmt = cfg.format.unwrap_or_else(|| fit_format(cfg.total_bits, 1.0));
+        let mut q = QuantNcm::new(self.ncm.dim(), fmt);
+        if let Some(m) = self.ncm.base_mean() {
+            q = q.with_base_mean(m.to_vec())?;
+        }
+        for idx in 0..self.ncm.n_classes() {
+            q.add_class(self.ncm.class_label(idx).unwrap_or_default());
+        }
+        self.qncm = Some(q);
+        Ok(self)
+    }
+
+    /// [`Session::with_quant`] with an explicit, pre-calibrated format.
+    pub fn with_quant_format(self, fmt: QFormat) -> Result<Session> {
+        self.with_quant(QuantConfig::bits(fmt.total_bits).with_format(fmt))
+    }
+
+    /// The integer-NCM format, if the session runs in quantized mode.
+    pub fn quant_format(&self) -> Option<QFormat> {
+        self.qncm.as_ref().map(QuantNcm::fmt)
     }
 
     /// The shared engine, if this session has one.
@@ -62,36 +110,58 @@ impl Session {
 
     /// Register a new (empty) class; returns its index.
     pub fn add_class(&mut self, label: impl Into<String>) -> usize {
+        let label = label.into();
+        if let Some(q) = &mut self.qncm {
+            q.add_class(label.clone());
+        }
         self.ncm.add_class(label)
     }
 
     /// Enroll one support image into a class (the demo's "add shot").
     pub fn enroll_image(&mut self, class_idx: usize, image: &[f32]) -> Result<InferMetrics> {
         let item = self.extract(image)?;
-        self.ncm.enroll(class_idx, &item.features)?;
+        self.enroll_feature(class_idx, &item.features)?;
         Ok(item.metrics)
     }
 
-    /// Enroll a precomputed feature vector into a class.
+    /// Enroll a precomputed feature vector into a class (both classifiers
+    /// in quantized mode, so the f32 reference stays comparable).
     pub fn enroll_feature(&mut self, class_idx: usize, feature: &[f32]) -> Result<()> {
-        self.ncm.enroll(class_idx, feature)
+        self.ncm.enroll(class_idx, feature)?;
+        if let Some(q) = &mut self.qncm {
+            q.enroll(class_idx, feature)?;
+        }
+        Ok(())
     }
 
     /// Classify one image; errors if no class has any enrolled shot.
     pub fn classify_image(&self, image: &[f32]) -> Result<(Prediction, InferMetrics)> {
         let item = self.extract(image)?;
-        let pred = self.ncm.classify(&item.features)?;
+        let pred = self.classify_feature(&item.features)?;
         Ok((pred, item.metrics))
     }
 
-    /// Classify a precomputed feature vector.
+    /// Classify a precomputed feature vector — on integer codes when the
+    /// session runs in quantized mode.
     pub fn classify_feature(&self, feature: &[f32]) -> Result<Prediction> {
+        match &self.qncm {
+            Some(q) => q.classify(feature),
+            None => self.ncm.classify(feature),
+        }
+    }
+
+    /// Classify on the f32 reference path regardless of mode (parity
+    /// validation of the quantized classifier).
+    pub fn classify_feature_f32(&self, feature: &[f32]) -> Result<Prediction> {
         self.ncm.classify(feature)
     }
 
     /// Drop all classes (the demo's "reset" button).
     pub fn reset(&mut self) {
         self.ncm.reset();
+        if let Some(q) = &mut self.qncm {
+            q.reset();
+        }
     }
 
     pub fn dim(&self) -> usize {
@@ -173,5 +243,65 @@ mod tests {
     fn base_mean_validated() {
         assert!(Session::detached(4).with_base_mean(vec![0.0; 5]).is_err());
         assert!(Session::detached(4).with_base_mean(vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn quant_session_matches_f32_path() {
+        let mut s = Session::detached(8).with_quant(QuantConfig::bits(16)).unwrap();
+        assert_eq!(s.quant_format().unwrap().total_bits, 16);
+        let a = s.add_class("a");
+        let b = s.add_class("b");
+        let mut fa = vec![0.0; 8];
+        fa[0] = 4.0;
+        let mut fb = vec![0.0; 8];
+        fb[1] = 4.0;
+        s.enroll_feature(a, &fa).unwrap();
+        s.enroll_feature(b, &fb).unwrap();
+        for query in [&fa, &fb] {
+            let quantized = s.classify_feature(query).unwrap();
+            let reference = s.classify_feature_f32(query).unwrap();
+            assert_eq!(quantized.class_idx, reference.class_idx);
+            assert!((quantized.distance - reference.distance).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn quant_mode_requires_fresh_session() {
+        let mut s = Session::detached(4);
+        let c = s.add_class("x");
+        s.enroll_feature(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert!(s.with_quant(QuantConfig::bits(8)).is_err());
+    }
+
+    #[test]
+    fn quant_mode_inherits_classes_and_base_mean() {
+        let mut s = Session::detached(4).with_base_mean(vec![0.1; 4]).unwrap();
+        s.add_class("early");
+        let mut s = s.with_quant(QuantConfig::bits(12)).unwrap();
+        // the pre-existing class is usable in quantized mode
+        s.enroll_feature(0, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(s.classify_feature(&[1.0, 0.0, 0.0, 0.0]).unwrap().class_idx, 0);
+        // base_mean installed after with_quant also reaches the qncm
+        let mut s2 = Session::detached(4)
+            .with_quant(QuantConfig::bits(12))
+            .unwrap()
+            .with_base_mean(vec![0.1; 4])
+            .unwrap();
+        let c = s2.add_class("x");
+        s2.enroll_feature(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert!(s2.classify_feature(&[1.0, 0.0, 0.0, 0.0]).is_ok());
+    }
+
+    #[test]
+    fn quant_session_over_engine() {
+        let mut s = Session::new(engine()).with_quant(QuantConfig::bits(12)).unwrap();
+        let a = s.add_class("a");
+        let img = vec![0.8; 16 * 16 * 3];
+        s.enroll_image(a, &img).unwrap();
+        let (pred, metrics) = s.classify_image(&img).unwrap();
+        assert_eq!(pred.class_idx, a);
+        assert!(metrics.modeled_latency_ms.unwrap() > 0.0);
+        s.reset();
+        assert!(s.classify_image(&img).is_err());
     }
 }

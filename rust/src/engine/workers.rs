@@ -62,6 +62,7 @@ impl InferWorker for SimWorker {
         let r = self.sim.run_f32(image)?;
         Ok(InferItem {
             features: r.output_f32,
+            qfeatures: None, // feature quantization happens in the engine
             metrics: InferMetrics {
                 modeled_latency_ms: Some(r.latency_ms),
                 cycles: Some(r.cycles),
@@ -103,6 +104,7 @@ impl InferWorker for PjrtWorker {
         }
         Ok(InferItem {
             features,
+            qfeatures: None, // feature quantization happens in the engine
             metrics: InferMetrics { modeled_latency_ms: None, cycles: None, host_us: 0.0 },
         })
     }

@@ -11,6 +11,9 @@
 use anyhow::{bail, Result};
 
 use crate::engine::Session;
+use crate::fixed::QFormat;
+use crate::ncm::normalize_feature;
+use crate::quant::{Calibrator, QuantConfig};
 use crate::util::tensorio::Tensor;
 use crate::util::Prng;
 
@@ -50,6 +53,34 @@ impl FeatureBank {
             bail!("some classes have no samples");
         }
         Ok(FeatureBank { by_class, dim: d })
+    }
+
+    /// Synthetic separable bank: class `c` points along axis `c % dim`
+    /// with Gaussian noise — the evaluation workload of tests, the
+    /// quantization Pareto bench and the `pefsl quant` fallback path.
+    pub fn synthetic(
+        n_classes: usize,
+        per_class: usize,
+        dim: usize,
+        noise: f32,
+        seed: u64,
+    ) -> FeatureBank {
+        let mut rng = Prng::new(seed);
+        let by_class = (0..n_classes)
+            .map(|c| {
+                (0..per_class)
+                    .map(|_| {
+                        let mut f = vec![0f32; dim];
+                        f[c % dim] = 3.0;
+                        for x in f.iter_mut() {
+                            *x += noise * rng.normal();
+                        }
+                        f
+                    })
+                    .collect()
+            })
+            .collect();
+        FeatureBank { by_class, dim }
     }
 
     pub fn n_classes(&self) -> usize {
@@ -101,8 +132,7 @@ pub struct EvalResult {
     pub n_episodes: usize,
 }
 
-/// Run the episodic NCM evaluation.
-pub fn evaluate(bank: &FeatureBank, cfg: &EpisodeConfig, center: bool) -> Result<EvalResult> {
+fn validate_protocol(bank: &FeatureBank, cfg: &EpisodeConfig) -> Result<()> {
     if cfg.n_ways > bank.n_classes() {
         bail!("{} ways > {} classes", cfg.n_ways, bank.n_classes());
     }
@@ -113,15 +143,28 @@ pub fn evaluate(bank: &FeatureBank, cfg: &EpisodeConfig, center: bool) -> Result
             bank.per_class_min()
         );
     }
-    let base_mean = if center { Some(bank.mean_feature()) } else { None };
+    Ok(())
+}
+
+/// Episode loop shared by the f32 and quantized evaluations; `qfmt`
+/// switches every per-episode [`Session`] into integer-NCM mode.
+fn run_episodes(
+    bank: &FeatureBank,
+    cfg: &EpisodeConfig,
+    base_mean: Option<&[f32]>,
+    qfmt: Option<QFormat>,
+) -> Result<EvalResult> {
     let mut rng = Prng::new(cfg.seed);
     let mut accs = Vec::with_capacity(cfg.n_episodes);
 
     for _ in 0..cfg.n_episodes {
         let ways = rng.choose_distinct(bank.n_classes(), cfg.n_ways);
         let mut session = Session::detached(bank.dim);
-        if let Some(m) = &base_mean {
-            session = session.with_base_mean(m.clone())?;
+        if let Some(m) = base_mean {
+            session = session.with_base_mean(m.to_vec())?;
+        }
+        if let Some(fmt) = qfmt {
+            session = session.with_quant_format(fmt)?;
         }
         let mut queries: Vec<(usize, Vec<f32>)> = Vec::new();
         for (w, &class) in ways.iter().enumerate() {
@@ -150,28 +193,52 @@ pub fn evaluate(bank: &FeatureBank, cfg: &EpisodeConfig, center: bool) -> Result
     Ok(EvalResult { accuracy: mean, ci95: 1.96 * (var / n).sqrt(), n_episodes: accs.len() })
 }
 
+/// Run the episodic NCM evaluation.
+pub fn evaluate(bank: &FeatureBank, cfg: &EpisodeConfig, center: bool) -> Result<EvalResult> {
+    validate_protocol(bank, cfg)?;
+    let base_mean = if center { Some(bank.mean_feature()) } else { None };
+    run_episodes(bank, cfg, base_mean.as_deref(), None)
+}
+
+/// Run the episodic evaluation with the NCM on integer codes.
+///
+/// The feature [`QFormat`] comes from the config: explicit if set,
+/// otherwise calibrated over the whole bank's *normalized* features under
+/// the config's policy (the normalized-feature amplitude is what the codes
+/// must cover).  Returns the result together with the format used, which
+/// is what the bit-width Pareto sweep reports per row.
+pub fn evaluate_quantized(
+    bank: &FeatureBank,
+    cfg: &EpisodeConfig,
+    center: bool,
+    qcfg: &QuantConfig,
+) -> Result<(EvalResult, QFormat)> {
+    validate_protocol(bank, cfg)?;
+    qcfg.validate()?;
+    let base_mean = if center { Some(bank.mean_feature()) } else { None };
+    let fmt = match qcfg.format {
+        Some(f) => f,
+        None => {
+            let mut cal = Calibrator::new(qcfg.policy);
+            for class in &bank.by_class {
+                for feat in class {
+                    cal.observe(&normalize_feature(feat, base_mean.as_deref()));
+                }
+            }
+            cal.fit(qcfg.total_bits)
+        }
+    };
+    let result = run_episodes(bank, cfg, base_mean.as_deref(), Some(fmt))?;
+    Ok((result, fmt))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     /// Bank with well-separated classes: class c points along axis c.
     fn separable_bank(n_classes: usize, per_class: usize, dim: usize, noise: f32) -> FeatureBank {
-        let mut rng = Prng::new(5);
-        let by_class = (0..n_classes)
-            .map(|c| {
-                (0..per_class)
-                    .map(|_| {
-                        let mut f = vec![0f32; dim];
-                        f[c % dim] = 3.0;
-                        for x in f.iter_mut() {
-                            *x += noise * rng.normal();
-                        }
-                        f
-                    })
-                    .collect()
-            })
-            .collect();
-        FeatureBank { by_class, dim }
+        FeatureBank::synthetic(n_classes, per_class, dim, noise, 5)
     }
 
     #[test]
@@ -238,6 +305,55 @@ mod tests {
             dim: 2,
         };
         assert_eq!(bank.mean_feature(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn quantized_16bit_tracks_f32_accuracy() {
+        let bank = separable_bank(8, 10, 16, 0.5);
+        let cfg = EpisodeConfig { n_episodes: 60, n_queries: 5, ..Default::default() };
+        let f32_res = evaluate(&bank, &cfg, true).unwrap();
+        let (q_res, fmt) = evaluate_quantized(&bank, &cfg, true, &QuantConfig::bits(16)).unwrap();
+        assert_eq!(fmt.total_bits, 16);
+        // same seed → identical episode draws; 16-bit codes flip almost
+        // no decisions on this bank
+        assert!(
+            (q_res.accuracy - f32_res.accuracy).abs() < 0.02,
+            "quant {} vs f32 {}",
+            q_res.accuracy,
+            f32_res.accuracy
+        );
+    }
+
+    #[test]
+    fn narrower_bits_do_not_beat_wide() {
+        let bank = separable_bank(8, 10, 16, 0.4);
+        let cfg = EpisodeConfig { n_episodes: 40, n_queries: 5, ..Default::default() };
+        let (q16, _) = evaluate_quantized(&bank, &cfg, true, &QuantConfig::bits(16)).unwrap();
+        let (q4, fmt4) = evaluate_quantized(&bank, &cfg, true, &QuantConfig::bits(4)).unwrap();
+        assert_eq!(fmt4.total_bits, 4);
+        assert!(
+            q16.accuracy >= q4.accuracy - 0.05,
+            "16-bit {} should not lose to 4-bit {}",
+            q16.accuracy,
+            q4.accuracy
+        );
+    }
+
+    #[test]
+    fn quantized_eval_deterministic_and_validated() {
+        let bank = separable_bank(6, 8, 8, 0.5);
+        let cfg = EpisodeConfig { n_episodes: 20, n_queries: 4, ..Default::default() };
+        let qcfg = QuantConfig::bits(8);
+        let (a, fa) = evaluate_quantized(&bank, &cfg, true, &qcfg).unwrap();
+        let (b, fb) = evaluate_quantized(&bank, &cfg, true, &qcfg).unwrap();
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(fa, fb);
+        // normalized features are unit-L2, so the calibrated format
+        // covers an amplitude ≤ 1
+        assert!(fa.max_value() >= 0.5 && fa.max_value() <= 2.0, "{fa}");
+        assert!(evaluate_quantized(&bank, &cfg, true, &QuantConfig::bits(3)).is_err());
+        let too_many = EpisodeConfig { n_ways: 50, ..cfg };
+        assert!(evaluate_quantized(&bank, &too_many, true, &qcfg).is_err());
     }
 
     #[test]

@@ -182,6 +182,59 @@ mod tests {
     }
 
     #[test]
+    fn narrow_formats_saturate_at_code_limits() {
+        // the 4–16-bit sweep leans on exact saturation behaviour
+        for fmt in [QFormat::new(4, 2), QFormat::new(5, 3), QFormat::new(8, 4), QFormat::new(12, 6)] {
+            assert_eq!(i32::from(fmt.quantize(1e6)), fmt.max_code(), "{fmt}");
+            assert_eq!(i32::from(fmt.quantize(-1e6)), fmt.min_code(), "{fmt}");
+            // the limits themselves are representable exactly
+            assert_eq!(i32::from(fmt.quantize(fmt.max_value())), fmt.max_code(), "{fmt}");
+            let min_value = fmt.min_code() as f32 / fmt.scale() as f32;
+            assert_eq!(i32::from(fmt.quantize(min_value)), fmt.min_code(), "{fmt}");
+            // one whole unit beyond still clamps, never wraps
+            assert_eq!(i32::from(fmt.quantize(fmt.max_value() + 1.0)), fmt.max_code(), "{fmt}");
+            assert_eq!(i32::from(fmt.quantize(min_value - 1.0)), fmt.min_code(), "{fmt}");
+        }
+    }
+
+    #[test]
+    fn q4_round_half_away_ties() {
+        let q = QFormat::new(4, 2); // scale 4, codes −8..7
+        assert_eq!(q.to_string(), "Q2.2");
+        assert_eq!(q.max_code(), 7);
+        assert_eq!(q.min_code(), -8);
+        assert_eq!(q.quantize(0.125), 1); // exactly half a code → away from zero
+        assert_eq!(q.quantize(-0.125), -1);
+        assert_eq!(q.quantize(0.375), 2); // 1.5 codes → 2
+        assert_eq!(q.quantize(-0.375), -2);
+        assert_eq!(q.quantize(0.124), 0); // just under half → toward zero
+        assert_eq!(q.quantize(-0.124), 0);
+    }
+
+    #[test]
+    fn q4_narrow_acc_ties_and_saturation() {
+        let q = QFormat::new(4, 2);
+        assert_eq!(q.narrow_acc(2), 1); // 2/4 = exactly half → away
+        assert_eq!(q.narrow_acc(-2), -1);
+        assert_eq!(q.narrow_acc(1), 0);
+        assert_eq!(q.narrow_acc(-1), 0);
+        assert_eq!(q.narrow_acc(1000), 7);
+        assert_eq!(q.narrow_acc(-1000), -8);
+    }
+
+    #[test]
+    fn narrow_formats_roundtrip_within_half_ulp() {
+        check(41, 400, |rng| {
+            let bits = rng.range(4, 17) as u8;
+            let frac = rng.range(0, bits as usize) as u8;
+            let fmt = QFormat::new(bits, frac);
+            let x = rng.f32_range(-fmt.max_value(), fmt.max_value());
+            let err = (fmt.dequantize(fmt.quantize(x)) - x).abs();
+            assert!(err <= 0.5 / fmt.scale() as f32 + 1e-6, "{fmt} x={x} err={err}");
+        });
+    }
+
+    #[test]
     fn slice_helpers() {
         let xs = [0.0f32, 1.0, -0.5];
         let codes = Q.quantize_slice(&xs);

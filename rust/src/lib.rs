@@ -17,10 +17,14 @@
 //!     data), [`engine::EngineBuilder`] (single artifact-resolution entry
 //!     point) and [`engine::Session`] (per-client few-shot state).  All
 //!     serving paths go through it;
+//!   - **`quant` — bit-width-aware quantization**: calibration
+//!     ([`quant::Calibrator`]), integer tensors/kernels
+//!     ([`quant::QTensor`]) and the fixed-point NCM ([`quant::QuantNcm`]),
+//!     wired into the engine ([`engine::EngineBuilder::quant`]) and the
+//!     `dse` bit-width Pareto sweep;
 //!   - the demonstrator on top of the engine: `video`, `ncm`, `coordinator`
 //!     (frame loop + pipelined variant), `fewshot` (episodic evaluation),
-//!     `dse` and `cli`.  `coordinator::Backend` survives one release as a
-//!     deprecated compat shim over the engine.
+//!     `dse` and `cli`.
 
 pub mod cli;
 pub mod coordinator;
@@ -33,6 +37,7 @@ pub mod json;
 pub mod metrics;
 pub mod ncm;
 pub mod power;
+pub mod quant;
 pub mod resources;
 pub mod runtime;
 pub mod sim;

@@ -22,10 +22,53 @@ pub struct ClassSlot {
 }
 
 impl ClassSlot {
-    pub fn centroid(&self) -> Vec<f32> {
-        let inv = 1.0 / self.count.max(1) as f32;
-        self.sum.iter().map(|x| x * inv).collect()
+    /// Mean of enrolled shots; `None` until the class has at least one
+    /// shot (a fabricated zero vector would silently win against distant
+    /// queries).
+    pub fn centroid(&self) -> Option<Vec<f32>> {
+        if self.count == 0 {
+            return None;
+        }
+        let inv = 1.0 / self.count as f32;
+        Some(self.sum.iter().map(|x| x * inv).collect())
     }
+}
+
+/// Center (optional) + L2-normalize a feature vector — the EASY
+/// preprocessing shared by the f32 and quantized ([`crate::quant::QuantNcm`])
+/// NCM paths.
+pub fn normalize_feature(feat: &[f32], base_mean: Option<&[f32]>) -> Vec<f32> {
+    let mut v: Vec<f32> = match base_mean {
+        Some(m) => feat.iter().zip(m).map(|(x, mu)| x - mu).collect(),
+        None => feat.to_vec(),
+    };
+    let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-8);
+    for x in &mut v {
+        *x /= norm;
+    }
+    v
+}
+
+/// Turn per-class squared distances (∞ marks a class with no enrolled
+/// shot) into a [`Prediction`]: accumulator-argmin plus a softmax-style
+/// confidence over negative distances.  Shared by the f32 and quantized
+/// classifiers.
+pub(crate) fn prediction_from_distances(dists: &[f32]) -> Result<Prediction> {
+    let (best, &bd) = dists
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| d.is_finite())
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .ok_or_else(|| {
+            anyhow::anyhow!("no enrolled classes (enroll at least one shot before classify)")
+        })?;
+    let mx = dists.iter().cloned().filter(|d| d.is_finite()).fold(f32::MIN, f32::max);
+    let exps: Vec<f32> = dists
+        .iter()
+        .map(|&d| if d.is_finite() { (-(d - mx)).exp() } else { 0.0 })
+        .collect();
+    let z: f32 = exps.iter().sum();
+    Ok(Prediction { class_idx: best, distance: bd, confidence: exps[best] / z.max(1e-8) })
 }
 
 /// Classification result.
@@ -83,20 +126,23 @@ impl NcmClassifier {
         self.classes.iter().any(|c| c.count > 0)
     }
 
+    /// The installed base-split centering vector, if any.
+    pub fn base_mean(&self) -> Option<&[f32]> {
+        self.base_mean.as_deref()
+    }
+
+    /// Per-class centroids (`None` for classes with no shots yet),
+    /// index-aligned with class indices.
+    pub fn centroids(&self) -> Vec<Option<Vec<f32>>> {
+        self.classes.iter().map(ClassSlot::centroid).collect()
+    }
+
     /// Center + L2-normalize a raw feature vector.
     pub fn normalize(&self, feat: &[f32]) -> Result<Vec<f32>> {
         if feat.len() != self.dim {
             bail!("feature dim {} != {}", feat.len(), self.dim);
         }
-        let mut v: Vec<f32> = match &self.base_mean {
-            Some(m) => feat.iter().zip(m).map(|(x, mu)| x - mu).collect(),
-            None => feat.to_vec(),
-        };
-        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-8);
-        for x in &mut v {
-            *x /= norm;
-        }
-        Ok(v)
+        Ok(normalize_feature(feat, self.base_mean.as_deref()))
     }
 
     /// Register a new (empty) class; returns its index.
@@ -127,35 +173,20 @@ impl NcmClassifier {
     /// Classify a query feature; errors if no class has any shot.
     pub fn classify(&self, feat: &[f32]) -> Result<Prediction> {
         let q = self.normalize(feat)?;
-        let mut dists = Vec::with_capacity(self.classes.len());
-        for slot in &self.classes {
-            if slot.count == 0 {
-                dists.push(f32::INFINITY);
-                continue;
-            }
-            let c = slot.centroid();
-            let d: f32 = q.iter().zip(&c).map(|(a, b)| (a - b) * (a - b)).sum();
-            dists.push(d);
-        }
-        let (best, &bd) = dists
+        let dists: Vec<f32> = self
+            .classes
             .iter()
-            .enumerate()
-            .filter(|(_, d)| d.is_finite())
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .ok_or_else(|| anyhow::anyhow!("no enrolled classes"))?;
-        // softmax over −d for a rough confidence
-        let mx = dists.iter().cloned().filter(|d| d.is_finite()).fold(f32::MIN, f32::max);
-        let exps: Vec<f32> = dists
-            .iter()
-            .map(|&d| if d.is_finite() { (-(d - mx)).exp() } else { 0.0 })
+            .map(|slot| match slot.centroid() {
+                Some(c) => q.iter().zip(&c).map(|(a, b)| (a - b) * (a - b)).sum(),
+                None => f32::INFINITY,
+            })
             .collect();
-        let z: f32 = exps.iter().sum();
-        Ok(Prediction { class_idx: best, distance: bd, confidence: exps[best] / z.max(1e-8) })
+        prediction_from_distances(&dists)
     }
 
     /// Batch pairwise squared distances queries × centroids (bench path).
     pub fn distances(&self, queries: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let cents: Vec<Vec<f32>> = self.classes.iter().filter(|c| c.count > 0).map(|c| c.centroid()).collect();
+        let cents: Vec<Vec<f32>> = self.classes.iter().filter_map(ClassSlot::centroid).collect();
         if cents.is_empty() {
             bail!("no enrolled classes");
         }
@@ -208,7 +239,7 @@ mod tests {
         ncm.enroll(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
         ncm.enroll(c, &[0.0, 1.0, 0.0, 0.0]).unwrap();
         assert_eq!(ncm.shot_count(c), 2);
-        let cent = ncm.classes[c].centroid();
+        let cent = ncm.classes[c].centroid().unwrap();
         assert!((cent[0] - 0.5).abs() < 1e-6 && (cent[1] - 0.5).abs() < 1e-6);
     }
 
@@ -216,6 +247,36 @@ mod tests {
     fn empty_classifier_errors() {
         let ncm = NcmClassifier::new(4);
         assert!(ncm.classify(&[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn empty_class_centroid_is_none_not_zeros() {
+        let mut ncm = NcmClassifier::new(4);
+        let c = ncm.add_class("pending");
+        assert!(ncm.classes[c].centroid().is_none());
+        assert_eq!(ncm.centroids(), vec![None]);
+        ncm.enroll(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert!(ncm.classes[c].centroid().is_some());
+        assert!(ncm.centroids()[0].is_some());
+    }
+
+    #[test]
+    fn classify_before_any_enroll_is_explicit_error() {
+        // classes registered but zero shots: an error, not a silent
+        // nearest-zero-centroid match
+        let mut ncm = NcmClassifier::new(4);
+        ncm.add_class("a");
+        ncm.add_class("b");
+        let err = ncm.classify(&[1.0, 0.0, 0.0, 0.0]).unwrap_err().to_string();
+        assert!(err.contains("no enrolled"), "{err}");
+        assert!(ncm.distances(&[vec![1.0, 0.0, 0.0, 0.0]]).is_err());
+    }
+
+    #[test]
+    fn base_mean_accessor() {
+        let ncm = NcmClassifier::new(2).with_base_mean(vec![0.5, 0.25]).unwrap();
+        assert_eq!(ncm.base_mean(), Some(&[0.5, 0.25][..]));
+        assert_eq!(NcmClassifier::new(2).base_mean(), None);
     }
 
     #[test]

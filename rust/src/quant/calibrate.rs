@@ -1,0 +1,238 @@
+//! Calibration: observe f32 tensors, pick per-tensor [`QFormat`]s.
+//!
+//! A [`Calibrator`] watches one logical tensor (a weight matrix, an
+//! activation map, the feature stream) and tracks its amplitude; `fit`
+//! turns that into the most precise [`QFormat`] covering the data at a
+//! requested bit-width.  [`CalibratorSet`] keys calibrators by tensor name
+//! for whole-model calibration.
+//!
+//! Two amplitude policies, mirroring the usual post-training-quantization
+//! choices:
+//! * [`QuantPolicy::MinMax`] — cover every observed value (no saturation).
+//! * [`QuantPolicy::Percentile`] — cover the p-th percentile of |x|,
+//!   trading a little saturation on outliers for more fractional bits on
+//!   the bulk of the distribution.
+
+use std::collections::BTreeMap;
+
+use crate::fixed::QFormat;
+
+use super::fit_format;
+
+/// How a calibrator reduces observed values to one amplitude.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuantPolicy {
+    /// Amplitude = max |x|; nothing observed ever saturates.
+    MinMax,
+    /// Amplitude = p-th percentile of |x| (p in (0, 100]); values beyond
+    /// it saturate at quantization time.
+    Percentile(f32),
+}
+
+/// Cap on retained |x| subsamples; beyond it the reservoir decimates
+/// (drop every other sample, double the keep-stride), staying
+/// deterministic and O(1) memory for arbitrarily long observation runs.
+const SAMPLE_CAP: usize = 16_384;
+
+/// Streaming observer of one f32 tensor.
+#[derive(Clone, Debug)]
+pub struct Calibrator {
+    policy: QuantPolicy,
+    max_abs: f32,
+    count: usize,
+    /// Keep every `stride`-th observed value in `samples`.
+    stride: usize,
+    phase: usize,
+    samples: Vec<f32>,
+}
+
+impl Calibrator {
+    pub fn new(policy: QuantPolicy) -> Calibrator {
+        Calibrator { policy, max_abs: 0.0, count: 0, stride: 1, phase: 0, samples: Vec::new() }
+    }
+
+    /// Observe one tensor's values (non-finite values are ignored).
+    pub fn observe(&mut self, xs: &[f32]) {
+        // the sample reservoir only feeds the percentile policy; min/max
+        // needs nothing beyond the running maximum
+        let keep_samples = matches!(self.policy, QuantPolicy::Percentile(_));
+        for &x in xs {
+            let a = x.abs();
+            if !a.is_finite() {
+                continue;
+            }
+            self.count += 1;
+            if a > self.max_abs {
+                self.max_abs = a;
+            }
+            if !keep_samples {
+                continue;
+            }
+            self.phase += 1;
+            if self.phase >= self.stride {
+                self.phase = 0;
+                self.samples.push(a);
+                if self.samples.len() > SAMPLE_CAP {
+                    let mut keep = false;
+                    self.samples.retain(|_| {
+                        keep = !keep;
+                        keep
+                    });
+                    self.stride *= 2;
+                }
+            }
+        }
+    }
+
+    /// Total finite values observed.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// The policy-reduced amplitude of everything observed so far.
+    pub fn amplitude(&self) -> f32 {
+        match self.policy {
+            QuantPolicy::MinMax => self.max_abs,
+            QuantPolicy::Percentile(p) => {
+                if self.samples.is_empty() {
+                    return self.max_abs;
+                }
+                let mut s = self.samples.clone();
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let p = f64::from(p).clamp(0.0, 100.0);
+                let idx = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+                s[idx.min(s.len() - 1)]
+            }
+        }
+    }
+
+    /// Fit the most precise [`QFormat`] covering the calibrated amplitude.
+    pub fn fit(&self, total_bits: u8) -> QFormat {
+        fit_format(total_bits, self.amplitude())
+    }
+}
+
+/// Named calibrators for whole-model calibration (one per weight tensor,
+/// activation edge, or feature stream).
+#[derive(Clone, Debug)]
+pub struct CalibratorSet {
+    policy: QuantPolicy,
+    map: BTreeMap<String, Calibrator>,
+}
+
+impl CalibratorSet {
+    pub fn new(policy: QuantPolicy) -> CalibratorSet {
+        CalibratorSet { policy, map: BTreeMap::new() }
+    }
+
+    /// Observe values for the named tensor, creating its calibrator on
+    /// first sight.
+    pub fn observe(&mut self, name: &str, xs: &[f32]) {
+        self.map
+            .entry(name.to_string())
+            .or_insert_with(|| Calibrator::new(self.policy))
+            .observe(xs);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Calibrator> {
+        self.map.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fit one format per observed tensor.
+    pub fn fit(&self, total_bits: u8) -> BTreeMap<String, QFormat> {
+        self.map.iter().map(|(k, c)| (k.clone(), c.fit(total_bits))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_covers_extremes() {
+        let mut c = Calibrator::new(QuantPolicy::MinMax);
+        c.observe(&[0.1, -3.5, 2.0]);
+        assert_eq!(c.count(), 3);
+        assert_eq!(c.amplitude(), 3.5);
+        let fmt = c.fit(16);
+        assert!(fmt.max_value() >= 3.5);
+        // tightest covering format: Q3.13 (max 4.0)
+        assert_eq!(fmt, QFormat::new(16, 13));
+    }
+
+    #[test]
+    fn percentile_sheds_outliers() {
+        let mut c = Calibrator::new(QuantPolicy::Percentile(90.0));
+        let mut xs = vec![0.5f32; 99];
+        xs.push(1000.0); // one outlier
+        c.observe(&xs);
+        let amp = c.amplitude();
+        assert!(amp < 1.0, "amplitude {amp} should ignore the outlier");
+        let minmax_fmt = {
+            let mut m = Calibrator::new(QuantPolicy::MinMax);
+            m.observe(&xs);
+            m.fit(8)
+        };
+        // percentile keeps strictly more fractional bits
+        assert!(c.fit(8).frac_bits > minmax_fmt.frac_bits);
+    }
+
+    #[test]
+    fn empty_calibrator_defaults_to_max_precision() {
+        let c = Calibrator::new(QuantPolicy::MinMax);
+        assert_eq!(c.amplitude(), 0.0);
+        assert_eq!(c.fit(8), QFormat::new(8, 7));
+    }
+
+    #[test]
+    fn non_finite_ignored() {
+        let mut c = Calibrator::new(QuantPolicy::MinMax);
+        c.observe(&[f32::NAN, f32::INFINITY, -2.0]);
+        assert_eq!(c.count(), 1);
+        assert_eq!(c.amplitude(), 2.0);
+    }
+
+    #[test]
+    fn reservoir_decimates_but_tracks_max() {
+        let mut c = Calibrator::new(QuantPolicy::Percentile(99.0));
+        for i in 0..10 {
+            let batch = vec![(i as f32 + 1.0) * 0.1; 5000];
+            c.observe(&batch);
+        }
+        assert_eq!(c.count(), 50_000);
+        assert!(c.samples.len() <= SAMPLE_CAP + 1);
+        // percentile of the subsample still lands inside the observed range
+        let amp = c.amplitude();
+        assert!(amp > 0.5 && amp <= 1.0, "amp {amp}");
+    }
+
+    #[test]
+    fn minmax_skips_the_reservoir() {
+        let mut c = Calibrator::new(QuantPolicy::MinMax);
+        let batch = vec![0.5f32; 1000];
+        c.observe(&batch);
+        assert!(c.samples.is_empty());
+        assert_eq!(c.amplitude(), 0.5);
+    }
+
+    #[test]
+    fn set_keys_by_tensor() {
+        let mut set = CalibratorSet::new(QuantPolicy::MinMax);
+        assert!(set.is_empty());
+        set.observe("conv1.w", &[0.25, -0.5]);
+        set.observe("features", &[10.0]);
+        set.observe("conv1.w", &[0.75]);
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.get("conv1.w").unwrap().count(), 3);
+        let fits = set.fit(12);
+        assert!(fits["conv1.w"].frac_bits > fits["features"].frac_bits);
+    }
+}

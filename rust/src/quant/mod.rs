@@ -1,0 +1,208 @@
+//! `pefsl::quant` — bit-width-aware quantization for the integer feature
+//! path.
+//!
+//! The paper deploys the backbone in 16-bit Q8.8 fixed point; this
+//! subsystem generalizes that single hard-coded choice into a design axis
+//! (Kanda et al., "Bit-Width-Aware Design Environment for Few-Shot Learning
+//! on Edge AI Hardware"): any total bit-width from 4 to 16, with per-tensor
+//! format selection driven by observed data.  Three layers:
+//!
+//! * **Calibration** ([`Calibrator`] / [`CalibratorSet`], [`QuantPolicy`]):
+//!   observe f32 tensors (weights, activations, features), track their
+//!   amplitude under a min/max or percentile policy, and pick the
+//!   [`QFormat`] with the most fractional bits that still covers the data —
+//!   [`fit_format`] is the policy-free core.
+//! * **Quantized tensors + integer kernels** ([`QTensor`], [`int_dot`],
+//!   [`int_gemv`], [`int_sq_dist`]): i16 codes with Q16.16-style i64
+//!   accumulators, narrowed by [`QFormat::narrow_acc`]'s
+//!   round-half-away + saturation — the accelerator's SIMD writeback,
+//!   reproduced on the CPU side so NCM can run entirely on integer codes.
+//! * **Quantized NCM** ([`QuantNcm`]): online enroll/classify whose
+//!   centroids are integer code sums and whose distances are integer
+//!   accumulators; the float path only survives in the EASY
+//!   center/L2-normalize preprocessing, exactly as on the PYNQ board where
+//!   features arrive already quantized from the fabric.
+//!
+//! [`QuantConfig`] ties the layers together and is what
+//! [`crate::engine::EngineBuilder::quant`] and
+//! [`crate::engine::Session::with_quant`] consume; `dse::quant_pareto_rows`
+//! sweeps it across bit-widths against `tcompiler` cycle estimates to
+//! reproduce the Kanda-style accuracy-vs-bit-width-vs-latency frontier.
+
+mod calibrate;
+mod ncm;
+mod tensor;
+
+pub use calibrate::{Calibrator, CalibratorSet, QuantPolicy};
+pub use ncm::QuantNcm;
+pub use tensor::{acc_to_f32, int_dot, int_gemv, int_sq_dist, QTensor};
+
+use anyhow::{bail, Result};
+
+use crate::fixed::QFormat;
+
+/// Smallest supported total bit-width.
+pub const MIN_BITS: u8 = 4;
+/// Largest supported total bit-width (codes are stored in `i16`).
+pub const MAX_BITS: u8 = 16;
+
+/// Pick the [`QFormat`] for a total bit-width that covers `amplitude` with
+/// the most fractional bits (maximal precision without saturating the
+/// calibrated range).  An amplitude beyond even `Q<bits>.0` falls back to
+/// the widest integer range and saturates.
+pub fn fit_format(total_bits: u8, amplitude: f32) -> QFormat {
+    assert!(
+        (MIN_BITS..=MAX_BITS).contains(&total_bits),
+        "total_bits {total_bits} outside {MIN_BITS}..={MAX_BITS}"
+    );
+    let amp = amplitude.abs();
+    for frac in (0..total_bits).rev() {
+        let fmt = QFormat::new(total_bits, frac);
+        if fmt.max_value() >= amp {
+            return fmt;
+        }
+    }
+    QFormat::new(total_bits, 0)
+}
+
+/// One quantization scenario: the bit budget plus how to spend it.
+///
+/// Consumed by [`crate::engine::EngineBuilder::quant`] (engine feature
+/// quantization, calibrated online), [`crate::engine::Session::with_quant`]
+/// (integer NCM), [`crate::fewshot::evaluate_quantized`] and the
+/// `dse` bit-width sweep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantConfig {
+    /// Total bits per code, 4–16.
+    pub total_bits: u8,
+    /// Amplitude policy used when calibrating a format from data.
+    pub policy: QuantPolicy,
+    /// Explicit format override; skips calibration entirely when set.
+    pub format: Option<QFormat>,
+    /// Images the engine observes before freezing its online-calibrated
+    /// feature format.
+    pub calib_images: usize,
+}
+
+impl Default for QuantConfig {
+    /// The paper's deployment: 16 bits, min/max calibration.
+    fn default() -> Self {
+        QuantConfig {
+            total_bits: 16,
+            policy: QuantPolicy::MinMax,
+            format: None,
+            calib_images: 32,
+        }
+    }
+}
+
+impl QuantConfig {
+    /// Config for a total bit-width with the default policy.
+    pub fn bits(total_bits: u8) -> QuantConfig {
+        QuantConfig { total_bits, ..QuantConfig::default() }
+    }
+
+    /// Select the calibration policy.
+    pub fn with_policy(mut self, policy: QuantPolicy) -> QuantConfig {
+        self.policy = policy;
+        self
+    }
+
+    /// Force an explicit format (also pins `total_bits` to match).
+    pub fn with_format(mut self, fmt: QFormat) -> QuantConfig {
+        self.total_bits = fmt.total_bits;
+        self.format = Some(fmt);
+        self
+    }
+
+    /// Number of images the engine calibrates on before freezing.
+    pub fn with_calib_images(mut self, n: usize) -> QuantConfig {
+        self.calib_images = n.max(1);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(MIN_BITS..=MAX_BITS).contains(&self.total_bits) {
+            bail!("quant total_bits {} outside {MIN_BITS}..={MAX_BITS}", self.total_bits);
+        }
+        if let QuantPolicy::Percentile(p) = self.policy {
+            if !(p > 0.0 && p <= 100.0) {
+                bail!("percentile {p} outside (0, 100]");
+            }
+        }
+        if let Some(f) = self.format {
+            if f.total_bits != self.total_bits {
+                bail!("explicit format {f} disagrees with total_bits {}", self.total_bits);
+            }
+        }
+        if self.calib_images == 0 {
+            bail!("calib_images must be ≥ 1");
+        }
+        Ok(())
+    }
+
+    /// Resolve the format for a known amplitude: the explicit override if
+    /// set, else [`fit_format`].
+    pub fn resolve(&self, amplitude: f32) -> QFormat {
+        self.format.unwrap_or_else(|| fit_format(self.total_bits, amplitude))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_maximizes_fraction_bits() {
+        // unit amplitude at 16 bits: Q2.14 (max 2.0 covers 1.0; Q1.15 does not)
+        assert_eq!(fit_format(16, 1.0), QFormat::new(16, 14));
+        // the paper's Q8.8 territory: amplitude 100 needs 8 integer bits
+        assert_eq!(fit_format(16, 100.0), QFormat::new(16, 8));
+        // 4-bit unit amplitude: Q2.2 (max 1.75)
+        assert_eq!(fit_format(4, 1.0), QFormat::new(4, 2));
+        // zero data: all formats cover, keep maximal precision
+        assert_eq!(fit_format(8, 0.0), QFormat::new(8, 7));
+    }
+
+    #[test]
+    fn fit_saturating_fallback() {
+        // amplitude beyond Q16.0's 32767: widest integer range wins
+        assert_eq!(fit_format(16, 1e9), QFormat::new(16, 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn fit_rejects_out_of_range_bits() {
+        fit_format(3, 1.0);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(QuantConfig::default().validate().is_ok());
+        assert!(QuantConfig::bits(4).validate().is_ok());
+        assert!(QuantConfig::bits(3).validate().is_err());
+        assert!(QuantConfig::bits(17).validate().is_err());
+        assert!(QuantConfig::bits(8)
+            .with_policy(QuantPolicy::Percentile(0.0))
+            .validate()
+            .is_err());
+        assert!(QuantConfig::bits(8)
+            .with_policy(QuantPolicy::Percentile(99.9))
+            .validate()
+            .is_ok());
+        // with_format pins total_bits, so it cannot disagree
+        let cfg = QuantConfig::bits(8).with_format(QFormat::new(12, 6));
+        assert_eq!(cfg.total_bits, 12);
+        assert!(cfg.validate().is_ok());
+        // but a hand-built mismatch is caught
+        let bad = QuantConfig { format: Some(QFormat::new(8, 4)), ..QuantConfig::bits(16) };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn resolve_prefers_explicit_format() {
+        let fmt = QFormat::new(12, 6);
+        assert_eq!(QuantConfig::bits(12).with_format(fmt).resolve(1000.0), fmt);
+        assert_eq!(QuantConfig::bits(16).resolve(1.0), QFormat::new(16, 14));
+    }
+}

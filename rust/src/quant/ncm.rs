@@ -1,0 +1,345 @@
+//! [`QuantNcm`] — the NCM classifier on integer codes.
+//!
+//! Mirrors [`crate::ncm::NcmClassifier`]'s online API (add class / enroll /
+//! classify / reset) but keeps its state in fixed point: enrolled shots are
+//! quantized to codes, per-class centroids are integer code sums averaged
+//! with round-half-away division, and query distances are
+//! [`int_sq_dist`] accumulators.  Only the EASY center/L2-normalize
+//! preprocessing stays in f32 — on the board that is where features hand
+//! over from the fabric to the CPU anyway.
+
+use anyhow::{bail, Result};
+
+use crate::fixed::QFormat;
+use crate::ncm::{normalize_feature, prediction_from_distances, Prediction};
+
+use super::tensor::{acc_to_f32, int_sq_dist, QTensor};
+
+/// A registered class: running sum of enrolled codes.
+#[derive(Clone, Debug)]
+struct QSlot {
+    label: String,
+    /// Σ of enrolled (quantized, normalized) feature codes.
+    sum: Vec<i64>,
+    count: usize,
+}
+
+/// Online NCM over quantized features.
+#[derive(Clone, Debug)]
+pub struct QuantNcm {
+    dim: usize,
+    fmt: QFormat,
+    base_mean: Option<Vec<f32>>,
+    classes: Vec<QSlot>,
+}
+
+impl QuantNcm {
+    pub fn new(dim: usize, fmt: QFormat) -> QuantNcm {
+        assert!(dim > 0);
+        QuantNcm { dim, fmt, base_mean: None, classes: Vec::new() }
+    }
+
+    /// Install the base-split mean for feature centering (EASY protocol).
+    pub fn with_base_mean(mut self, mean: Vec<f32>) -> Result<QuantNcm> {
+        if mean.len() != self.dim {
+            bail!("base mean dim {} != feature dim {}", mean.len(), self.dim);
+        }
+        self.base_mean = Some(mean);
+        Ok(self)
+    }
+
+    pub fn fmt(&self) -> QFormat {
+        self.fmt
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn class_label(&self, idx: usize) -> Option<&str> {
+        self.classes.get(idx).map(|c| c.label.as_str())
+    }
+
+    pub fn shot_count(&self, idx: usize) -> usize {
+        self.classes.get(idx).map(|c| c.count).unwrap_or(0)
+    }
+
+    pub fn has_enrolled(&self) -> bool {
+        self.classes.iter().any(|c| c.count > 0)
+    }
+
+    /// Center + L2-normalize in f32, then quantize to codes.
+    fn normalize_codes(&self, feat: &[f32]) -> Result<Vec<i16>> {
+        if feat.len() != self.dim {
+            bail!("feature dim {} != {}", feat.len(), self.dim);
+        }
+        Ok(self.fmt.quantize_slice(&normalize_feature(feat, self.base_mean.as_deref())))
+    }
+
+    /// Register a new (empty) class; returns its index.
+    pub fn add_class(&mut self, label: impl Into<String>) -> usize {
+        self.classes.push(QSlot { label: label.into(), sum: vec![0; self.dim], count: 0 });
+        self.classes.len() - 1
+    }
+
+    /// Enroll one support shot: quantize and add its codes to the class sum.
+    pub fn enroll(&mut self, class_idx: usize, feat: &[f32]) -> Result<()> {
+        let codes = self.normalize_codes(feat)?;
+        let slot = self
+            .classes
+            .get_mut(class_idx)
+            .ok_or_else(|| anyhow::anyhow!("no class {class_idx}"))?;
+        for (s, &c) in slot.sum.iter_mut().zip(&codes) {
+            *s += i64::from(c);
+        }
+        slot.count += 1;
+        Ok(())
+    }
+
+    /// Drop all classes.
+    pub fn reset(&mut self) {
+        self.classes.clear();
+    }
+
+    /// Centroid of a class as codes (round-half-away mean of the code
+    /// sum); `None` for an unknown class or one with no enrolled shot.
+    pub fn centroid_codes(&self, idx: usize) -> Option<QTensor> {
+        let slot = self.classes.get(idx)?;
+        if slot.count == 0 {
+            return None;
+        }
+        let n = slot.count as i64;
+        let half = n / 2;
+        let lo = i64::from(self.fmt.min_code());
+        let hi = i64::from(self.fmt.max_code());
+        let codes = slot
+            .sum
+            .iter()
+            .map(|&acc| {
+                let r = if acc >= 0 { (acc + half) / n } else { (acc - half) / n };
+                r.clamp(lo, hi) as i16
+            })
+            .collect();
+        Some(QTensor::from_codes(codes, self.fmt))
+    }
+
+    /// Classify a query feature entirely on integer codes; errors if no
+    /// class has any enrolled shot.  The argmin runs on the exact i64
+    /// accumulators (f32 would collapse near-ties above 2²⁴); the reported
+    /// distance/confidence are dequantized for reporting only.
+    pub fn classify(&self, feat: &[f32]) -> Result<Prediction> {
+        let q = self.normalize_codes(feat)?;
+        let accs: Vec<Option<i64>> = (0..self.classes.len())
+            .map(|i| self.centroid_codes(i).map(|c| int_sq_dist(&q, &c.codes)))
+            .collect();
+        let (best, best_acc) = accs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &a)| a.map(|v| (i, v)))
+            .min_by_key(|&(_, v)| v)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no enrolled classes (enroll at least one shot before classify)")
+            })?;
+        let dists: Vec<f32> = accs
+            .iter()
+            .map(|&a| a.map_or(f32::INFINITY, |v| acc_to_f32(v, self.fmt)))
+            .collect();
+        let mut pred = prediction_from_distances(&dists)?;
+        pred.class_idx = best;
+        pred.distance = acc_to_f32(best_acc, self.fmt);
+        Ok(pred)
+    }
+
+    /// Batch squared distances queries × enrolled centroids (bench path),
+    /// computed on codes, reported dequantized.
+    pub fn distances(&self, queries: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let cents: Vec<QTensor> =
+            (0..self.classes.len()).filter_map(|i| self.centroid_codes(i)).collect();
+        if cents.is_empty() {
+            bail!("no enrolled classes");
+        }
+        queries
+            .iter()
+            .map(|qraw| {
+                let q = self.normalize_codes(qraw)?;
+                Ok(cents
+                    .iter()
+                    .map(|c| acc_to_f32(int_sq_dist(&q, &c.codes), self.fmt))
+                    .collect())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ncm::NcmClassifier;
+    use crate::quant::fit_format;
+    use crate::util::Prng;
+
+    /// Normalized features live in [−1, 1]: Q2.14 at 16 bits.
+    fn unit_fmt(bits: u8) -> QFormat {
+        fit_format(bits, 1.0)
+    }
+
+    fn noisy_axis_feat(rng: &mut Prng, dim: usize, axis: usize, noise: f32) -> Vec<f32> {
+        let mut f = vec![0f32; dim];
+        f[axis % dim] = 3.0;
+        for x in f.iter_mut() {
+            *x += noise * rng.normal();
+        }
+        f
+    }
+
+    #[test]
+    fn enroll_and_classify_separable() {
+        let mut q = QuantNcm::new(8, unit_fmt(16));
+        let a = q.add_class("cat");
+        let b = q.add_class("dog");
+        let mut fa = vec![0.0; 8];
+        fa[0] = 5.0;
+        let mut fb = vec![0.0; 8];
+        fb[1] = 5.0;
+        q.enroll(a, &fa).unwrap();
+        q.enroll(b, &fb).unwrap();
+        let p = q.classify(&fa).unwrap();
+        assert_eq!(p.class_idx, a);
+        assert!(p.distance < 1e-3);
+        assert!(p.confidence > 0.5);
+        assert_eq!(q.classify(&fb).unwrap().class_idx, b);
+        assert_eq!(q.n_classes(), 2);
+        assert_eq!(q.class_label(a), Some("cat"));
+        assert_eq!(q.shot_count(a), 1);
+        assert!(q.has_enrolled());
+    }
+
+    #[test]
+    fn empty_and_reset_error_paths() {
+        let mut q = QuantNcm::new(4, unit_fmt(8));
+        assert!(q.classify(&[0.0; 4]).is_err());
+        let c = q.add_class("x");
+        // class registered but never enrolled: still an error
+        assert!(q.classify(&[1.0, 0.0, 0.0, 0.0]).is_err());
+        assert!(q.centroid_codes(c).is_none());
+        q.enroll(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert!(q.classify(&[1.0, 0.0, 0.0, 0.0]).is_ok());
+        q.reset();
+        assert_eq!(q.n_classes(), 0);
+        assert!(q.classify(&[1.0, 0.0, 0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let mut q = QuantNcm::new(4, unit_fmt(16));
+        let c = q.add_class("x");
+        assert!(q.enroll(c, &[0.0; 3]).is_err());
+        assert!(QuantNcm::new(4, unit_fmt(16)).with_base_mean(vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn centroid_is_integer_mean_of_codes() {
+        let fmt = unit_fmt(16);
+        let mut q = QuantNcm::new(4, fmt);
+        let c = q.add_class("x");
+        q.enroll(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        q.enroll(c, &[0.0, 1.0, 0.0, 0.0]).unwrap();
+        let cent = q.centroid_codes(c).unwrap();
+        let back = cent.dequantize();
+        assert!((back[0] - 0.5).abs() < 1e-3 && (back[1] - 0.5).abs() < 1e-3, "{back:?}");
+    }
+
+    /// The acceptance-criteria parity check: 16-bit quantized NCM agrees
+    /// with the f32 path on ≥ 95% of synthetic episode predictions.
+    #[test]
+    fn parity_16bit_matches_f32_on_95pct_of_predictions() {
+        let mut rng = Prng::new(77);
+        let dim = 32;
+        let fmt = unit_fmt(16);
+        let (mut agree, mut total) = (0usize, 0usize);
+        for _episode in 0..40 {
+            let mut f32ncm = NcmClassifier::new(dim);
+            let mut qncm = QuantNcm::new(dim, fmt);
+            for w in 0..5 {
+                let fc = f32ncm.add_class(format!("w{w}"));
+                let qc = qncm.add_class(format!("w{w}"));
+                assert_eq!(fc, qc);
+                let shot = noisy_axis_feat(&mut rng, dim, w, 1.0);
+                f32ncm.enroll(fc, &shot).unwrap();
+                qncm.enroll(qc, &shot).unwrap();
+            }
+            for _q in 0..15 {
+                let w = rng.range(0, 5);
+                let query = noisy_axis_feat(&mut rng, dim, w, 1.0);
+                total += 1;
+                if f32ncm.classify(&query).unwrap().class_idx
+                    == qncm.classify(&query).unwrap().class_idx
+                {
+                    agree += 1;
+                }
+            }
+        }
+        assert!(agree * 100 >= total * 95, "parity {agree}/{total}");
+    }
+
+    #[test]
+    fn narrow_bits_degrade_gracefully() {
+        // 4-bit codes still solve a well-separated problem
+        let mut rng = Prng::new(78);
+        let dim = 16;
+        let mut q = QuantNcm::new(dim, unit_fmt(4));
+        for w in 0..3 {
+            let c = q.add_class(format!("w{w}"));
+            q.enroll(c, &noisy_axis_feat(&mut rng, dim, w, 0.05)).unwrap();
+        }
+        let mut hits = 0;
+        for _ in 0..30 {
+            let w = rng.range(0, 3);
+            let query = noisy_axis_feat(&mut rng, dim, w, 0.05);
+            if q.classify(&query).unwrap().class_idx == w {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 27, "4-bit hits {hits}/30");
+    }
+
+    #[test]
+    fn base_mean_centering_changes_codes() {
+        let q0 = QuantNcm::new(2, unit_fmt(16));
+        let q1 = QuantNcm::new(2, unit_fmt(16)).with_base_mean(vec![1.0, 1.0]).unwrap();
+        let n0 = q0.normalize_codes(&[2.0, 0.0]).unwrap();
+        let n1 = q1.normalize_codes(&[2.0, 0.0]).unwrap();
+        assert_ne!(n0, n1);
+    }
+
+    #[test]
+    fn batch_distances_match_classify() {
+        let mut rng = Prng::new(79);
+        let dim = 8;
+        let mut q = QuantNcm::new(dim, unit_fmt(12));
+        for w in 0..3 {
+            let c = q.add_class(format!("w{w}"));
+            q.enroll(c, &noisy_axis_feat(&mut rng, dim, w, 0.2)).unwrap();
+        }
+        let queries: Vec<Vec<f32>> =
+            (0..5).map(|i| noisy_axis_feat(&mut rng, dim, i, 0.2)).collect();
+        let dists = q.distances(&queries).unwrap();
+        assert_eq!(dists.len(), 5);
+        for (query, row) in queries.iter().zip(&dists) {
+            assert_eq!(row.len(), 3);
+            let pred = q.classify(query).unwrap();
+            let best = row
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(pred.class_idx, best);
+        }
+        assert!(QuantNcm::new(dim, unit_fmt(12)).distances(&queries).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Quantized tensors and the integer kernels that consume them.
+//!
+//! Codes are `i16` regardless of bit-width (formats ≤ 16 bits saturate
+//! into the narrower code range); accumulators are `i64` holding
+//! `scale²`-fractional-bit sums — the Q16.16-style accumulate of the
+//! systolic array — narrowed back to codes by [`QFormat::narrow_acc`]
+//! (round-half-away + saturation, the SIMD writeback stage).
+
+use crate::fixed::QFormat;
+
+/// An f32 tensor quantized to codes under one [`QFormat`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct QTensor {
+    pub codes: Vec<i16>,
+    pub fmt: QFormat,
+}
+
+impl QTensor {
+    /// Quantize an f32 slice (round-half-away + saturation per element).
+    pub fn quantize(xs: &[f32], fmt: QFormat) -> QTensor {
+        QTensor { codes: fmt.quantize_slice(xs), fmt }
+    }
+
+    /// Wrap existing codes.
+    pub fn from_codes(codes: Vec<i16>, fmt: QFormat) -> QTensor {
+        QTensor { codes, fmt }
+    }
+
+    /// Back to f32.
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.fmt.dequantize_slice(&self.codes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+}
+
+/// Integer dot product: Σ a[i]·b[i] as a `scale²`-fractional accumulator.
+///
+/// Max |code| is 2¹⁵, so each product fits in 2³⁰ and the sum stays exact
+/// in `i64` for any realistic feature dimension (< 2³³ elements).
+pub fn int_dot(a: &[i16], b: &[i16]) -> i64 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch {} vs {}", a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| i64::from(x) * i64::from(y)).sum()
+}
+
+/// Integer GEMV: `out[r] = narrow(Σ_k mat[r·cols + k] · x[k])` for a
+/// row-major `[rows, cols]` matrix, with the accumulator narrowed back to
+/// codes by [`QFormat::narrow_acc`] — both operands must share `fmt`.
+pub fn int_gemv(mat: &[i16], x: &[i16], fmt: QFormat) -> Vec<i16> {
+    let cols = x.len();
+    assert!(cols > 0, "empty GEMV vector");
+    assert_eq!(mat.len() % cols, 0, "matrix len {} not a multiple of cols {cols}", mat.len());
+    mat.chunks_exact(cols).map(|row| fmt.narrow_acc(int_dot(row, x))).collect()
+}
+
+/// Integer squared L2 distance: Σ (a[i]−b[i])² as a `scale²`-fractional
+/// accumulator (use [`acc_to_f32`] to read it in real units).
+pub fn int_sq_dist(a: &[i16], b: &[i16]) -> i64 {
+    assert_eq!(a.len(), b.len(), "distance length mismatch {} vs {}", a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = i64::from(x) - i64::from(y);
+            d * d
+        })
+        .sum()
+}
+
+/// Dequantize a `scale²`-fractional accumulator (a sum of code×code
+/// products) to f32.
+pub fn acc_to_f32(acc: i64, fmt: QFormat) -> f32 {
+    let s = fmt.scale() as f64;
+    (acc as f64 / (s * s)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    const Q: QFormat = QFormat { total_bits: 16, frac_bits: 8 };
+
+    #[test]
+    fn roundtrip_through_codes() {
+        let xs = [0.0f32, 1.0, -0.5, 2.25];
+        let t = QTensor::quantize(&xs, Q);
+        assert_eq!(t.len(), 4);
+        assert!(!t.is_empty());
+        assert_eq!(t.dequantize(), xs.to_vec());
+        assert_eq!(QTensor::from_codes(t.codes.clone(), Q), t);
+    }
+
+    #[test]
+    fn dot_matches_f32_within_quant_error() {
+        check(51, 200, |rng| {
+            let n = rng.range(1, 64);
+            let a: Vec<f32> = (0..n).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+            let qa = QTensor::quantize(&a, Q);
+            let qb = QTensor::quantize(&b, Q);
+            let got = acc_to_f32(int_dot(&qa.codes, &qb.codes), Q);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            // per-element quantization error ≤ half-ulp on each operand
+            let tol = n as f32 * 4.0 * 0.5 / 256.0;
+            assert!((got - want).abs() <= tol, "n={n} got={got} want={want}");
+        });
+    }
+
+    #[test]
+    fn gemv_matches_scalar_dots() {
+        let fmt = QFormat::new(8, 4);
+        let mat: Vec<i16> = vec![1, 2, 3, -4, 5, -6]; // 2×3
+        let x: Vec<i16> = vec![7, -8, 9];
+        let out = int_gemv(&mat, &x, fmt);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], fmt.narrow_acc(int_dot(&mat[0..3], &x)));
+        assert_eq!(out[1], fmt.narrow_acc(int_dot(&mat[3..6], &x)));
+    }
+
+    #[test]
+    fn gemv_saturates_like_writeback() {
+        let fmt = QFormat::new(4, 2); // codes −8..7
+        let mat: Vec<i16> = vec![7, 7, 7, 7]; // 1×4 of max codes
+        let x: Vec<i16> = vec![7, 7, 7, 7];
+        // Σ 49·4 = 196 → /4 = 49 → saturates at max_code 7
+        assert_eq!(int_gemv(&mat, &x, fmt), vec![7]);
+        let neg: Vec<i16> = vec![-8, -8, -8, -8];
+        assert_eq!(int_gemv(&neg, &x, fmt), vec![-8]);
+    }
+
+    #[test]
+    fn sq_dist_matches_f32_within_quant_error() {
+        check(52, 200, |rng| {
+            let n = rng.range(1, 64);
+            let a: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let fmt = QFormat::new(16, 12);
+            let qa = QTensor::quantize(&a, fmt);
+            let qb = QTensor::quantize(&b, fmt);
+            let got = acc_to_f32(int_sq_dist(&qa.codes, &qb.codes), fmt);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let ulp = 0.5 / fmt.scale() as f32;
+            // |(x−y)² − (x̂−ŷ)²| ≤ 2·|x−y|·2ulp + (2ulp)² per element
+            let tol = n as f32 * (4.0 * 2.0 * ulp + 4.0 * ulp * ulp) + 1e-5;
+            assert!((got - want).abs() <= tol, "n={n} got={got} want={want}");
+        });
+    }
+
+    #[test]
+    fn sq_dist_zero_on_identical_codes() {
+        let t = QTensor::quantize(&[0.3, -0.7, 0.9], Q);
+        assert_eq!(int_sq_dist(&t.codes, &t.codes), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dot_length_mismatch_panics() {
+        int_dot(&[1, 2], &[3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn gemv_ragged_matrix_panics() {
+        int_gemv(&[1, 2, 3, 4, 5], &[1, 2], QFormat::default());
+    }
+}
