@@ -1,0 +1,62 @@
+//! Bench: the mixed-precision Pareto frontier — per-layer bit-widths
+//! searched greedily against full-backbone simulated accuracy and the
+//! bit-width-scaled cycle/resource/power models.
+//!
+//! One row per evaluated plan: accuracy (NCM over mixed-precision
+//! simulated features), cycles (bit-aware cost model), DSP/BRAM/LUT at the
+//! plan's widest width and power at its effective width.  Also times the
+//! search's inner loop (one plan evaluation = apply + compile + simulate
+//! the workload).
+//!
+//! Run: `cargo bench --bench mixed_pareto`.
+
+use pefsl::dse::{mixed_pareto_rows, render_mixed_table, BackboneSpec, MixedSearchConfig};
+use pefsl::tarch::Tarch;
+use pefsl::util::bench::{bench, BenchConfig};
+
+fn main() {
+    let tarch = Tarch::z7020_12x12();
+    let spec = BackboneSpec { image_size: 16, feature_maps: 8, ..BackboneSpec::headline() };
+    let cfg = MixedSearchConfig {
+        widths: vec![4, 8, 16],
+        n_classes: 4,
+        shots: 2,
+        queries: 2,
+        calib_images: 4,
+        max_steps: 4,
+        ..Default::default()
+    };
+
+    let rows = mixed_pareto_rows(&spec, &tarch, &cfg).expect("mixed-precision search");
+    println!("{}", render_mixed_table(&rows));
+
+    // Shape of the frontier, as assertions:
+    let base = &rows[0];
+    assert_eq!(base.label, "uniform16");
+    assert!(rows.len() > 1, "search must explore candidates");
+    assert!(rows.iter().any(|r| r.pareto), "frontier must be non-empty");
+    for r in &rows {
+        assert!((0.0..=1.0).contains(&r.accuracy), "{}: acc {}", r.label, r.accuracy);
+        assert!(r.cycles > 0 && r.latency_ms > 0.0);
+        assert!(r.resources.dsp > 0 && r.resources.lut > 0);
+        assert!(r.power.total_w() > 0.0);
+        // narrowing never makes the modeled hardware slower
+        assert!(r.cycles <= base.cycles, "{}: {} > {}", r.label, r.cycles, base.cycles);
+    }
+    // the search found at least one genuinely cheaper plan
+    let cheapest = rows.iter().map(|r| r.cycles).min().unwrap();
+    assert!(cheapest < base.cycles, "no cycle saving found");
+    println!(
+        "frontier: cheapest plan = {:.1}% of uniform-16 cycles, {} Pareto point(s)",
+        100.0 * cheapest as f64 / base.cycles as f64,
+        rows.iter().filter(|r| r.pareto).count(),
+    );
+
+    // The DSE inner loop: one full plan evaluation per candidate.
+    let inner_cfg = MixedSearchConfig { max_steps: 0, ..cfg.clone() };
+    bench("mixed/eval_uniform16", &BenchConfig::quick(), || {
+        let rows = mixed_pareto_rows(&spec, &tarch, &inner_cfg).unwrap();
+        assert_eq!(rows.len(), 1);
+        std::hint::black_box(rows[0].accuracy);
+    });
+}

@@ -24,6 +24,29 @@ fn tarch_from(args: &Args) -> Result<Tarch> {
     Tarch::preset(args.get_str("tarch", "z7020-12x12"))
 }
 
+/// Parse a `--flag 4,8,12,16`-style comma-separated u8 list (shared by the
+/// `quant` and `mixed` bit-width axes).
+fn parse_u8_list(args: &Args, flag: &str, default: &str) -> Result<Vec<u8>> {
+    args.get_str(flag, default)
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<u8>()
+                .map_err(|_| anyhow::anyhow!("--{flag} expects comma-separated integers, got '{s}'"))
+        })
+        .collect()
+}
+
+/// Calibration policy from `--percentile P` (absent → min/max).
+fn policy_from(args: &Args) -> Result<QuantPolicy> {
+    Ok(match args.get("percentile") {
+        Some(p) => QuantPolicy::Percentile(
+            p.parse::<f32>().map_err(|_| anyhow::anyhow!("--percentile expects a number"))?,
+        ),
+        None => QuantPolicy::MinMax,
+    })
+}
+
 /// Artifact resolution is centralized in the engine builder; the CLI only
 /// forwards its optional `--artifacts` override.
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
@@ -229,21 +252,8 @@ pub fn eval(args: &Args) -> Result<i32> {
 /// `pefsl quant` — the bit-width Pareto sweep (Kanda-style DSE).
 pub fn quant(args: &Args) -> Result<i32> {
     let tarch = tarch_from(args)?;
-    let bits: Vec<u8> = args
-        .get_str("bits", "4,8,12,16")
-        .split(',')
-        .map(|s| {
-            s.trim()
-                .parse::<u8>()
-                .map_err(|_| anyhow::anyhow!("--bits expects comma-separated integers, got '{s}'"))
-        })
-        .collect::<Result<_>>()?;
-    let policy = match args.get("percentile") {
-        Some(p) => QuantPolicy::Percentile(
-            p.parse::<f32>().map_err(|_| anyhow::anyhow!("--percentile expects a number"))?,
-        ),
-        None => QuantPolicy::MinMax,
-    };
+    let bits = parse_u8_list(args, "bits", "4,8,12,16")?;
+    let policy = policy_from(args)?;
 
     // Accuracy axis: exported novel-split features when available, else the
     // synthetic separable bank (so the sweep runs without artifacts).
@@ -277,6 +287,61 @@ pub fn quant(args: &Args) -> Result<i32> {
                 .set("latency_ms", r.latency_ms)
                 .set("accuracy", r.accuracy)
                 .set("ci95", r.ci95);
+            arr.push(o);
+        }
+        json::to_file(path, &Value::Arr(arr))?;
+    }
+    Ok(0)
+}
+
+/// `pefsl mixed` — per-layer mixed-precision DSE (Kanda-style
+/// hardware-aware loop): greedy width search with full-backbone simulated
+/// accuracy plus cycles/resources/power columns.
+pub fn mixed(args: &Args) -> Result<i32> {
+    let tarch = tarch_from(args)?;
+    let widths = parse_u8_list(args, "widths", "4,6,8,12,16")?;
+    let policy = policy_from(args)?;
+    let defaults = crate::dse::MixedSearchConfig::default();
+    let cfg = crate::dse::MixedSearchConfig {
+        widths,
+        n_classes: args.get_usize("classes", defaults.n_classes)?,
+        shots: args.get_usize("shots", defaults.shots)?,
+        queries: args.get_usize("queries", defaults.queries)?,
+        calib_images: args.get_usize("calib", defaults.calib_images)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        policy,
+        max_steps: args.get_usize("steps", defaults.max_steps)?,
+        max_accuracy_drop: match args.get("max-drop") {
+            Some(v) => v.parse::<f64>().map_err(|_| anyhow::anyhow!("--max-drop expects a number"))?,
+            None => defaults.max_accuracy_drop,
+        },
+        ..defaults
+    };
+    // a small backbone by default: the accuracy axis simulates every image
+    // per candidate plan, so the full headline net is opt-in via flags
+    let spec = BackboneSpec {
+        image_size: args.get_usize("image-size", 16)?,
+        feature_maps: args.get_usize("fm", 8)?,
+        ..BackboneSpec::headline()
+    };
+
+    let rows = crate::dse::mixed_pareto_rows(&spec, &tarch, &cfg)?;
+    print!("{}", crate::dse::render_mixed_table(&rows));
+    if let Some(path) = args.get("json") {
+        let mut arr = Vec::new();
+        for r in &rows {
+            let mut o = Value::obj();
+            o.set("label", r.label.as_str())
+                .set("plan_bits", r.plan_bits.as_str())
+                .set("accuracy", r.accuracy)
+                .set("cycles", r.cycles)
+                .set("latency_ms", r.latency_ms)
+                .set("dsp", r.resources.dsp as usize)
+                .set("bram36", r.resources.bram36 as usize)
+                .set("lut", r.resources.lut as usize)
+                .set("power_w", r.power.total_w())
+                .set("effective_bits", r.effective_bits)
+                .set("pareto", r.pareto);
             arr.push(o);
         }
         json::to_file(path, &Value::Arr(arr))?;

@@ -5,6 +5,7 @@
 //! pefsl demo       --frames 64 --tarch z7020-12x12 [--backend sim|pjrt]
 //! pefsl dse        --test-size 32 [--tarch NAME] [--json PATH]
 //! pefsl quant      --bits 4,8,12,16 [--percentile P] [--episodes N] [--json PATH]
+//! pefsl mixed      --widths 4,6,8,12,16 [--steps N] [--max-drop D] [--json PATH]
 //! pefsl compile    [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl simulate   [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl resources  [--tarch NAME]
@@ -43,6 +44,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "demo" => commands::demo(&args),
         "dse" => commands::dse(&args),
         "quant" => commands::quant(&args),
+        "mixed" => commands::mixed(&args),
         "compile" => commands::compile_cmd(&args),
         "simulate" => commands::simulate(&args),
         "resources" => commands::resources_cmd(&args),
@@ -63,7 +65,9 @@ pub fn usage() -> String {
      COMMANDS:\n\
      \x20 demo        run the live demonstrator (synthetic camera → backbone → NCM)\n\
      \x20 dse         design-space exploration table (Fig. 5)\n\
-     \x20 quant       bit-width Pareto sweep: accuracy × cycles at 4–16 bits\n\
+     \x20 quant       uniform bit-width Pareto sweep: accuracy × cycles at 4–16 bits\n\
+     \x20 mixed       per-layer mixed-precision search: greedy width narrowing with\n\
+     \x20             full-backbone sim accuracy + cycles/DSP/BRAM/LUT/power columns\n\
      \x20 compile     compile a graph.json for a tarch, print per-layer cycles\n\
      \x20 simulate    run the bit-exact accelerator simulation on a test vector\n\
      \x20 resources   FPGA resource + power report (Table I row)\n\
@@ -77,6 +81,10 @@ pub fn usage() -> String {
      \x20 --backend B        sim | pjrt (default sim)\n\
      \x20 --test-size N      dse deployed resolution: 32 | 84\n\
      \x20 --bits LIST        quant sweep bit-widths, e.g. 4,8,12,16\n\
+     \x20 --widths LIST      mixed-search candidate widths (default 4,6,8,12,16)\n\
+     \x20 --steps N          mixed-search max accepted narrowing steps (default 6)\n\
+     \x20 --max-drop D       mixed-search accuracy-drop budget vs 16-bit (default 0.05)\n\
+     \x20 --classes N --calib N --image-size N --fm N   mixed-search workload\n\
      \x20 --percentile P     quant calibration percentile (default: min/max)\n\
      \x20 --episodes N --ways W --shots S --queries Q   eval protocol\n\
      \x20 --json PATH        also write results as JSON\n"
@@ -128,6 +136,27 @@ mod tests {
             run(&sv(&["quant", "--bits", "8,16", "--episodes", "10", "--queries", "5"])).unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn mixed_search_runs_without_artifacts() {
+        // tiny workload: 8×8 images, fm2 backbone, one narrowing round
+        assert_eq!(
+            run(&sv(&[
+                "mixed", "--tarch", "z7020-8x8", "--image-size", "8", "--fm", "2",
+                "--widths", "8,16", "--classes", "3", "--shots", "1", "--queries", "1",
+                "--calib", "2", "--steps", "1",
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn mixed_bad_widths_error() {
+        assert!(run(&sv(&["mixed", "--widths", "abc"])).is_err());
+        assert!(run(&sv(&["mixed", "--widths", "16,8"])).is_err()); // not ascending
+        assert!(run(&sv(&["mixed", "--widths", "3,16"])).is_err()); // below 4 bits
     }
 
     #[test]

@@ -150,7 +150,7 @@ pub fn build_backbone_graph(spec: &BackboneSpec, seed: u64) -> Result<Graph> {
 
     let mut g = Graph {
         name: spec.name(),
-        qformat: QFormat::default(),
+        formats: crate::graph::TensorFormats::uniform(QFormat::default()),
         input_name: "input".into(),
         input_shape: [1, spec.image_size, spec.image_size, 3],
         output_name,

@@ -1,0 +1,473 @@
+//! Mixed-precision DSE: per-layer bit-widths searched against the hardware
+//! model — the Kanda-style hardware-aware loop, on the deployed stack.
+//!
+//! Where `dse::quant` sweeps one *uniform* width against a feature-space
+//! NCM proxy, this module walks per-layer widths (default {4, 6, 8, 12,
+//! 16}) through a greedy narrowing search whose **accuracy axis runs the
+//! full backbone simulator**: every candidate [`PrecisionPlan`] is applied
+//! to the graph (weights requantized, per-tensor formats installed),
+//! compiled, and evaluated end-to-end — synthetic image classes →
+//! mixed-precision backbone features → NCM enroll/classify through the
+//! same [`Session`] API the demonstrator serves.
+//!
+//! Each evaluated point reports the full hardware bill: cycles/latency
+//! from the bit-width-aware cost model (narrow layers stream faster over
+//! the fixed AXI bus), DSP/BRAM/LUT from
+//! [`resources::accelerator_resources_bits`] at the plan's *widest* layer
+//! (the datapath must carry it — and sub-8-bit plans fall off the DSP
+//! cliff into LUTs), and power from [`power::system_power_mixed`] — the
+//! same widest-layer fabric, toggling at the plan's cycle-weighted
+//! *effective* bits.
+//!
+//! Surfaced as `pefsl mixed` in the CLI and `benches/mixed_pareto.rs`.
+
+use anyhow::{bail, Result};
+
+use crate::engine::Session;
+use crate::graph::{Graph, Op};
+use crate::power::{self, PowerReport};
+use crate::quant::{PlanCalibrator, PrecisionPlan, QuantPolicy, MAX_BITS, MIN_BITS};
+use crate::resources::{self, ResourceReport};
+use crate::sim::Simulator;
+use crate::tarch::Tarch;
+use crate::tcompiler::compile;
+use crate::util::Prng;
+
+use super::builder::{build_backbone_graph, BackboneSpec};
+
+/// One evaluated point of the mixed-precision search.
+#[derive(Clone, Debug)]
+pub struct MixedDseRow {
+    /// How this point was reached ("uniform16", "b0.conv2→8", ...).
+    pub label: String,
+    /// Bit budget of each conv/dense layer, in op order (the search axis).
+    pub matmul_bits: Vec<u8>,
+    /// Full per-op bit string of the expanded plan (op order).
+    pub plan_bits: String,
+    /// Full-backbone simulated NCM accuracy on the synthetic workload.
+    pub accuracy: f64,
+    pub cycles: u64,
+    pub latency_ms: f64,
+    /// Resources at the plan's widest width (the datapath it needs).
+    pub resources: ResourceReport,
+    /// System power at the plan's cycle-weighted effective bits.
+    pub power: PowerReport,
+    /// Cycle-weighted mean bit-width across layers.
+    pub effective_bits: f64,
+    /// On the accuracy×cycles Pareto frontier of all evaluated points.
+    pub pareto: bool,
+}
+
+/// Mixed-precision search configuration.
+#[derive(Clone, Debug)]
+pub struct MixedSearchConfig {
+    /// Candidate widths, ascending (the greedy narrows one notch at a time).
+    pub widths: Vec<u8>,
+    /// Synthetic workload: classes × (shots + queries) images.
+    pub n_classes: usize,
+    pub shots: usize,
+    pub queries: usize,
+    /// Images observed by the amplitude calibration pass.
+    pub calib_images: usize,
+    /// Image-space noise around each class prototype.
+    pub noise: f32,
+    pub seed: u64,
+    pub policy: QuantPolicy,
+    /// Maximum accepted narrowing steps.
+    pub max_steps: usize,
+    /// A step is acceptable while accuracy ≥ baseline − this drop.
+    pub max_accuracy_drop: f64,
+    /// Compute duty cycle used for the power column.
+    pub duty: f64,
+}
+
+impl Default for MixedSearchConfig {
+    fn default() -> Self {
+        MixedSearchConfig {
+            widths: vec![4, 6, 8, 12, 16],
+            n_classes: 4,
+            shots: 2,
+            queries: 2,
+            calib_images: 4,
+            noise: 0.15,
+            seed: 17,
+            policy: QuantPolicy::MinMax,
+            max_steps: 6,
+            max_accuracy_drop: 0.05,
+            duty: 0.5,
+        }
+    }
+}
+
+impl MixedSearchConfig {
+    pub fn validate(&self, tarch: &Tarch) -> Result<()> {
+        if self.widths.is_empty() {
+            bail!("mixed search needs at least one candidate width");
+        }
+        if !self.widths.windows(2).all(|w| w[0] < w[1]) {
+            bail!("widths must be strictly ascending, got {:?}", self.widths);
+        }
+        for &w in &self.widths {
+            if !(MIN_BITS..=MAX_BITS).contains(&w) {
+                bail!("width {w} outside {MIN_BITS}..={MAX_BITS}");
+            }
+            if w > tarch.qformat.total_bits {
+                bail!("width {w} exceeds tarch '{}' {}-bit datapath", tarch.name, tarch.qformat.total_bits);
+            }
+        }
+        if self.n_classes < 2 || self.shots == 0 || self.queries == 0 {
+            bail!("workload needs ≥ 2 classes and ≥ 1 shot/query per class");
+        }
+        if self.calib_images == 0 {
+            bail!("calibration needs ≥ 1 image");
+        }
+        Ok(())
+    }
+}
+
+/// Synthetic image-space few-shot workload: each class is a random
+/// prototype image, samples are noisy copies — class identity must survive
+/// the (mixed-precision) backbone for NCM to recover it.
+fn synth_classes(cfg: &MixedSearchConfig, elems: usize) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Prng::new(cfg.seed);
+    (0..cfg.n_classes)
+        .map(|_| {
+            let proto: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+            (0..cfg.shots + cfg.queries)
+                .map(|_| {
+                    proto
+                        .iter()
+                        .map(|&p| (p + cfg.noise * rng.normal()).clamp(0.0, 1.0))
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Expand per-matmul-layer widths to a per-op bit vector: conv/dense use
+/// their own budget; add/pool/gap inherit their input's width (add takes
+/// the wider operand so the residual join never truncates early).
+fn expand_bits(graph: &Graph, matmul_idx: &[usize], matmul_bits: &[u8], widest: u8) -> Vec<u8> {
+    let mut by_tensor: std::collections::HashMap<&str, u8> = Default::default();
+    by_tensor.insert(graph.input_name.as_str(), matmul_bits.first().copied().unwrap_or(widest));
+    let mut per_op = Vec::with_capacity(graph.ops.len());
+    for (i, op) in graph.ops.iter().enumerate() {
+        let bits = if let Some(k) = matmul_idx.iter().position(|&m| m == i) {
+            matmul_bits[k]
+        } else {
+            op.inputs()
+                .iter()
+                .map(|n| by_tensor.get(*n).copied().unwrap_or(widest))
+                .max()
+                .unwrap_or(widest)
+        };
+        by_tensor.insert(op.output(), bits);
+        per_op.push(bits);
+    }
+    per_op
+}
+
+/// Evaluate one plan: apply → compile → simulate the whole workload
+/// through the deployed NCM session; join the hardware columns.  The
+/// caller fills in `label`/`matmul_bits` (search-level metadata).
+fn eval_plan(
+    graph: &Graph,
+    tarch: &Tarch,
+    plan: &PrecisionPlan,
+    classes: &[Vec<Vec<f32>>],
+    cfg: &MixedSearchConfig,
+    per_op_bits: &[u8],
+) -> Result<MixedDseRow> {
+    let g = plan.applied(graph)?;
+    let program = compile(&g, tarch)?;
+    let mut sim = Simulator::new(&program, &g);
+
+    let mut session = Session::detached(g.feature_dim);
+    for (c, samples) in classes.iter().enumerate() {
+        let slot = session.add_class(format!("c{c}"));
+        for img in &samples[..cfg.shots] {
+            session.enroll_feature(slot, &sim.run_f32(img)?.output_f32)?;
+        }
+    }
+    let (mut hits, mut total) = (0usize, 0usize);
+    for (c, samples) in classes.iter().enumerate() {
+        for img in &samples[cfg.shots..] {
+            if session.classify_feature(&sim.run_f32(img)?.output_f32)?.class_idx == c {
+                hits += 1;
+            }
+            total += 1;
+        }
+    }
+
+    // cycle-weighted effective bits (what toggles), widest bits (what the
+    // datapath must provide)
+    let total_cycles: u64 = program.est_total_cycles.max(1);
+    let effective_bits = program
+        .layers
+        .iter()
+        .zip(per_op_bits)
+        .map(|(l, &b)| l.est_cycles as f64 * b as f64)
+        .sum::<f64>()
+        / total_cycles as f64;
+    // resources and power agree on the same fabric: sized at the plan's
+    // widest layer, with switching activity at the effective width
+    let resources = resources::accelerator_resources_bits(tarch, plan.max_bits());
+    let power =
+        power::system_power_mixed(tarch, cfg.duty, plan.max_bits(), effective_bits.round() as u8);
+
+    Ok(MixedDseRow {
+        label: String::new(),
+        matmul_bits: Vec::new(),
+        plan_bits: plan.describe_bits(),
+        accuracy: hits as f64 / total.max(1) as f64,
+        cycles: program.est_total_cycles,
+        latency_ms: program.est_latency_ms(),
+        resources,
+        power,
+        effective_bits,
+        pareto: false,
+    })
+}
+
+/// Greedy mixed-precision search over a backbone spec.
+///
+/// Starts from the uniform widest plan, then repeatedly tries narrowing
+/// each conv/dense layer one notch, accepting the candidate with the best
+/// cycle saving whose accuracy stays within `max_accuracy_drop` of the
+/// baseline — the Kanda hardware-aware DSE loop.  Returns **every**
+/// evaluated point (accepted or not) with the accuracy×cycles Pareto
+/// frontier marked, so the caller sees the whole explored landscape.
+pub fn mixed_pareto_rows(
+    spec: &BackboneSpec,
+    tarch: &Tarch,
+    cfg: &MixedSearchConfig,
+) -> Result<Vec<MixedDseRow>> {
+    cfg.validate(tarch)?;
+    let graph = build_backbone_graph(spec, cfg.seed)?;
+    let elems: usize = graph.input_shape.iter().product();
+    let classes = synth_classes(cfg, elems);
+
+    // One amplitude-observation pass serves every candidate plan.  Draw
+    // calibration images round-robin across classes (so the fitted ranges
+    // cover the whole workload, not just one prototype) but only from the
+    // *shot* split — query images stay unseen by calibration, keeping the
+    // accuracy column honest.  Effective count caps at classes × shots.
+    let n_calib = cfg.calib_images.max(1);
+    let mut calib: Vec<Vec<f32>> = Vec::with_capacity(n_calib);
+    'fill: for s in 0..cfg.shots {
+        for class in &classes {
+            if calib.len() >= n_calib {
+                break 'fill;
+            }
+            calib.push(class[s].clone());
+        }
+    }
+    let cal = PlanCalibrator::observe(&graph, tarch, &calib, cfg.policy)?;
+
+    let matmul_idx: Vec<usize> = graph
+        .ops
+        .iter()
+        .enumerate()
+        .filter(|(_, op)| matches!(op, Op::Conv2d { .. } | Op::Dense { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    let widest = *cfg.widths.last().unwrap();
+
+    let evaluate = |bits: &[u8], label: String| -> Result<MixedDseRow> {
+        let per_op = expand_bits(&graph, &matmul_idx, bits, widest);
+        let plan = cal.plan(&per_op)?;
+        let mut row = eval_plan(&graph, tarch, &plan, &classes, cfg, &per_op)?;
+        row.label = label;
+        row.matmul_bits = bits.to_vec();
+        Ok(row)
+    };
+
+    let mut rows = Vec::new();
+    let mut current = vec![widest; matmul_idx.len()];
+    let baseline = evaluate(&current, format!("uniform{widest}"))?;
+    let floor = baseline.accuracy - cfg.max_accuracy_drop;
+    let mut best_cycles = baseline.cycles;
+    rows.push(baseline);
+
+    for _ in 0..cfg.max_steps {
+        // one candidate per layer: its width stepped one notch down
+        let mut best: Option<(usize, u8, MixedDseRow)> = None;
+        for (k, &mi) in matmul_idx.iter().enumerate() {
+            let pos = cfg.widths.iter().position(|&w| w == current[k]).unwrap();
+            if pos == 0 {
+                continue;
+            }
+            let next_w = cfg.widths[pos - 1];
+            let mut cand = current.clone();
+            cand[k] = next_w;
+            let row = evaluate(&cand, format!("{}→{}", graph.ops[mi].name(), next_w))?;
+            let acceptable = row.accuracy >= floor && row.cycles < best_cycles;
+            let better = match &best {
+                None => true,
+                Some((_, _, b)) => {
+                    row.cycles < b.cycles
+                        || (row.cycles == b.cycles && row.accuracy > b.accuracy)
+                }
+            };
+            if acceptable && better {
+                best = Some((k, next_w, row.clone()));
+            }
+            rows.push(row);
+        }
+        match best {
+            Some((k, w, row)) => {
+                current[k] = w;
+                best_cycles = row.cycles;
+            }
+            None => break,
+        }
+    }
+
+    // mark the accuracy×cycles Pareto frontier over everything evaluated
+    let snapshot: Vec<(f64, u64)> = rows.iter().map(|r| (r.accuracy, r.cycles)).collect();
+    for r in rows.iter_mut() {
+        r.pareto = !snapshot.iter().any(|&(a, c)| {
+            (a >= r.accuracy && c < r.cycles) || (a > r.accuracy && c <= r.cycles)
+        });
+    }
+    Ok(rows)
+}
+
+/// Render rows as an aligned text table (the bench/CLI output).
+pub fn render_mixed_table(rows: &[MixedDseRow]) -> String {
+    let mut out = String::from(
+        "mixed-precision DSE (per-layer widths, full-backbone sim accuracy):\n",
+    );
+    out.push_str(&format!(
+        "{:>2} {:<18} {:>7} {:>12} {:>9} {:>6} {:>7} {:>8} {:>7} {:>7}\n",
+        "", "step", "acc", "cycles", "ms", "DSP", "BRAM36", "LUT", "powerW", "eff.b"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:>2} {:<18} {:>7.4} {:>12} {:>9.2} {:>6} {:>7} {:>8} {:>7.2} {:>7.1}\n",
+            if r.pareto { "*" } else { "" },
+            r.label,
+            r.accuracy,
+            r.cycles,
+            r.latency_ms,
+            r.resources.dsp,
+            r.resources.bram36,
+            r.resources.lut,
+            r.power.total_w(),
+            r.effective_bits,
+        ));
+    }
+    out.push_str("(* = accuracy×cycles Pareto frontier; widths per conv/dense layer)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> MixedSearchConfig {
+        MixedSearchConfig {
+            widths: vec![8, 16],
+            n_classes: 3,
+            shots: 1,
+            queries: 1,
+            calib_images: 2,
+            max_steps: 2,
+            ..Default::default()
+        }
+    }
+
+    fn tiny_spec() -> BackboneSpec {
+        BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() }
+    }
+
+    #[test]
+    fn greedy_search_explores_and_marks_pareto() {
+        let tarch = Tarch::z7020_8x8();
+        let rows = mixed_pareto_rows(&tiny_spec(), &tarch, &tiny_cfg()).unwrap();
+        // baseline + at least one candidate round
+        assert!(rows.len() > 1, "{} rows", rows.len());
+        let base = &rows[0];
+        assert_eq!(base.label, "uniform16");
+        assert!(base.matmul_bits.iter().all(|&b| b == 16));
+        assert!((0.0..=1.0).contains(&base.accuracy));
+        // every evaluated narrowing is cheaper or equal in cycles
+        for r in &rows[1..] {
+            assert!(r.cycles <= base.cycles, "{}: {} vs {}", r.label, r.cycles, base.cycles);
+            assert!(r.latency_ms > 0.0);
+            assert!(r.resources.dsp > 0 && r.resources.bram36 > 0);
+            assert!(r.power.total_w() > 0.0);
+            assert!(r.effective_bits >= 8.0 - 1e-9 && r.effective_bits <= 16.0 + 1e-9);
+        }
+        // the baseline sits on the frontier unless something dominates it
+        assert!(rows.iter().any(|r| r.pareto));
+        // labels identify the narrowed layer
+        assert!(rows[1..].iter().all(|r| r.label.contains('→')));
+        // rendering covers every row
+        let table = render_mixed_table(&rows);
+        assert_eq!(table.lines().count(), 3 + rows.len());
+        assert!(table.contains("uniform16"));
+    }
+
+    #[test]
+    fn narrowing_changes_hardware_columns() {
+        let tarch = Tarch::z7020_8x8();
+        let mut cfg = tiny_cfg();
+        cfg.widths = vec![4, 16];
+        cfg.max_accuracy_drop = 1.0; // force acceptance: inspect the columns
+        cfg.max_steps = 1;
+        let rows = mixed_pareto_rows(&tiny_spec(), &tarch, &cfg).unwrap();
+        let base = &rows[0];
+        // a 4-bit layer narrows effective bits, cycles and power
+        let narrowed: Vec<_> = rows[1..].iter().filter(|r| r.cycles < base.cycles).collect();
+        assert!(!narrowed.is_empty(), "no candidate got cheaper");
+        for r in &narrowed {
+            assert!(r.effective_bits < base.effective_bits);
+            assert!(r.power.total_w() <= base.power.total_w());
+        }
+        // max width still 16 (only one layer stepped), so DSP/BRAM match
+        assert_eq!(rows[1].resources.dsp, base.resources.dsp);
+    }
+
+    #[test]
+    fn config_validated() {
+        let tarch = Tarch::z7020_8x8();
+        let mut cfg = tiny_cfg();
+        cfg.widths = vec![16, 8];
+        assert!(cfg.validate(&tarch).is_err());
+        cfg.widths = vec![3, 8];
+        assert!(cfg.validate(&tarch).is_err());
+        cfg.widths = vec![8, 16];
+        cfg.n_classes = 1;
+        assert!(cfg.validate(&tarch).is_err());
+        let mut narrow_tarch = tarch.clone();
+        narrow_tarch.qformat = crate::fixed::QFormat::new(8, 4);
+        assert!(tiny_cfg().validate(&narrow_tarch).is_err());
+    }
+
+    #[test]
+    fn expand_bits_inherits_through_non_matmul_ops() {
+        let g = build_backbone_graph(&tiny_spec(), 1).unwrap();
+        let matmul_idx: Vec<usize> = g
+            .ops
+            .iter()
+            .enumerate()
+            .filter(|(_, op)| matches!(op, Op::Conv2d { .. } | Op::Dense { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        let mut bits = vec![16u8; matmul_idx.len()];
+        bits[2] = 8; // b0.conv3 (feeds the residual add)
+        let per_op = expand_bits(&g, &matmul_idx, &bits, 16);
+        assert_eq!(per_op.len(), g.ops.len());
+        for (i, op) in g.ops.iter().enumerate() {
+            match op {
+                // the add joins an 8-bit branch and a 16-bit shortcut → wider wins
+                Op::Add { .. } if op.name() == "b0.add" => assert_eq!(per_op[i], 16),
+                Op::Gap { .. } => assert_eq!(per_op[i], 16),
+                _ => {}
+            }
+        }
+        assert_eq!(per_op[matmul_idx[2]], 8);
+    }
+}

@@ -7,14 +7,18 @@
 //! and joins the accuracy axis from `artifacts/dse_results.json` (produced
 //! by the python training sweep).
 //!
-//! A second, Kanda-style axis (`quant`) sweeps the datapath *bit-width*
-//! 4–16 against few-shot accuracy and modeled cycles — see
-//! [`quant_pareto_rows`].
+//! A second, Kanda-style axis (`quant`) sweeps a *uniform* datapath
+//! bit-width 4–16 against few-shot accuracy and modeled cycles — see
+//! [`quant_pareto_rows`] — and a third (`mixed`) searches *per-layer*
+//! widths with full-backbone simulated accuracy and bit-width-scaled
+//! resource/power columns — see [`mixed_pareto_rows`] (`pefsl mixed`).
 
 mod builder;
+mod mixed;
 mod quant;
 mod sweep;
 
 pub use builder::{build_backbone_graph, BackboneSpec};
+pub use mixed::{mixed_pareto_rows, render_mixed_table, MixedDseRow, MixedSearchConfig};
 pub use quant::{quant_pareto_rows, render_quant_table, tarch_for_bits, QuantDseRow};
 pub use sweep::{fig5_rows, join_accuracy, render_table, DseRow};

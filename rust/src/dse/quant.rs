@@ -43,6 +43,12 @@ pub struct QuantDseRow {
 /// per beat (floored — fractional scalars don't cross an AXI beat).  The
 /// accelerator's number format becomes the balanced `Qn/2.n/2` split, the
 /// paper's Q8.8 convention generalized.
+///
+/// Since the per-layer-precision refactor the cost model prices DMA by
+/// each *tensor's* actual bits over the fixed bus
+/// ([`crate::tcompiler::CostModel::dma_cycles_at`]); this helper remains
+/// the uniform special case — a datapath whose native width *is* the swept
+/// width — and the sweep sets the graph's base format to match.
 pub fn tarch_for_bits(base: &Tarch, total_bits: u8) -> Tarch {
     let bus_bits = base.dram_scalars_per_cycle * base.qformat.total_bits as usize;
     Tarch {
@@ -64,7 +70,7 @@ pub fn quant_pareto_rows(
     bits: &[u8],
     policy: QuantPolicy,
 ) -> Result<Vec<QuantDseRow>> {
-    let g = build_backbone_graph(spec, 7)?;
+    let mut g = build_backbone_graph(spec, 7)?;
     let mut rows = Vec::with_capacity(bits.len());
     for &b in bits {
         // Validate the bit budget before deriving the tarch —
@@ -73,6 +79,9 @@ pub fn quant_pareto_rows(
         let qcfg = QuantConfig::bits(b).with_policy(policy);
         qcfg.validate()?;
         let tarch = tarch_for_bits(base_tarch, b);
+        // uniform sweep: every tensor at the swept width (cycle counts are
+        // shape-only, so reinterpreting the synthetic codes is fine)
+        g.formats = crate::graph::TensorFormats::uniform(tarch.qformat);
         let (cycles, _) = estimate_cycles(&g, &tarch)?;
         let (res, fmt) = evaluate_quantized(bank, ep, true, &qcfg)?;
         rows.push(QuantDseRow {

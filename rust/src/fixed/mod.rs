@@ -62,12 +62,37 @@ impl QFormat {
     ///
     /// `acc` holds a sum of code×code products, i.e. scale² fractional bits;
     /// writeback divides by `scale` with round-half-away, then saturates —
-    /// exactly the accelerator's SIMD writeback stage.
+    /// exactly the accelerator's SIMD writeback stage.  Equivalent to
+    /// [`QFormat::requant_acc`] from `2·frac_bits` fractional bits.
     pub fn narrow_acc(&self, acc: i64) -> i16 {
-        let scale = self.scale() as i64;
-        let half = scale / 2;
-        let rounded = if acc >= 0 { (acc + half) / scale } else { (acc - half) / scale };
-        rounded.clamp(self.min_code() as i64, self.max_code() as i64) as i16
+        self.requant_acc(acc, 2 * self.frac_bits)
+    }
+
+    /// Requantize a wide accumulator holding `src_frac` fractional bits into
+    /// this format's codes — the general SIMD writeback/requantize stage of
+    /// a mixed-precision datapath.
+    ///
+    /// Narrowing (`src_frac ≥ frac_bits`) divides by `2^(src_frac−frac)`
+    /// with round-half-away-from-zero; widening shifts left exactly.  The
+    /// result always saturates to this format's code range.
+    pub fn requant_acc(&self, acc: i64, src_frac: u8) -> i16 {
+        let dst = self.frac_bits;
+        let v: i64 = if src_frac >= dst {
+            rounding_shr(acc, src_frac - dst)
+        } else {
+            // widen in i128 so huge accumulators saturate instead of wrapping
+            let wide = (acc as i128) << (dst - src_frac);
+            wide.clamp(i64::MIN as i128, i64::MAX as i128) as i64
+        };
+        v.clamp(self.min_code() as i64, self.max_code() as i64) as i16
+    }
+
+    /// Convert a code from another format into this one (round-half-away
+    /// when narrowing, exact when widening, saturating either way) — the
+    /// layer-boundary requantization between differently-formatted
+    /// activation buffers.
+    pub fn requant_code(&self, code: i16, from: QFormat) -> i16 {
+        self.requant_acc(i64::from(code), from.frac_bits)
     }
 
     /// Quantize an f32 slice into codes.
@@ -79,6 +104,21 @@ impl QFormat {
     pub fn dequantize_slice(&self, codes: &[i16]) -> Vec<f32> {
         codes.iter().map(|&c| self.dequantize(c)).collect()
     }
+}
+
+/// Round-half-away-from-zero arithmetic right shift — the accelerator's
+/// single rounding rule, shared by every requantization site (SIMD
+/// writeback, layer-boundary requant, bias alignment).  Computed in i128
+/// so even `i64::MAX` inputs round correctly instead of wrapping.
+pub fn rounding_shr(v: i64, shift: u8) -> i64 {
+    if shift == 0 {
+        return v;
+    }
+    let div = 1i128 << shift;
+    let half = div / 2;
+    let x = v as i128;
+    let r = if x >= 0 { (x + half) / div } else { (x - half) / div };
+    r as i64 // |r| ≤ |v|, always representable
 }
 
 impl fmt::Display for QFormat {
@@ -164,6 +204,22 @@ mod tests {
     fn narrow_acc_saturates() {
         assert_eq!(Q.narrow_acc(i64::MAX / 4), 32767);
         assert_eq!(Q.narrow_acc(i64::MIN / 4), -32768);
+        // the extreme ends must saturate to the correct sign, not wrap
+        assert_eq!(Q.narrow_acc(i64::MAX), 32767);
+        assert_eq!(Q.narrow_acc(i64::MIN), -32768);
+        assert_eq!(Q.requant_acc(i64::MAX, 8), 32767);
+        assert_eq!(Q.requant_acc(i64::MIN, 8), -32768);
+    }
+
+    #[test]
+    fn rounding_shr_half_away_and_extremes() {
+        assert_eq!(rounding_shr(5, 0), 5);
+        assert_eq!(rounding_shr(8, 4), 1); // exactly half → away from zero
+        assert_eq!(rounding_shr(-8, 4), -1);
+        assert_eq!(rounding_shr(7, 4), 0);
+        assert_eq!(rounding_shr(-7, 4), 0);
+        assert_eq!(rounding_shr(i64::MAX, 1), i64::MAX / 2 + 1);
+        assert_eq!(rounding_shr(i64::MIN, 1), i64::MIN / 2);
     }
 
     #[test]
@@ -231,6 +287,76 @@ mod tests {
             let x = rng.f32_range(-fmt.max_value(), fmt.max_value());
             let err = (fmt.dequantize(fmt.quantize(x)) - x).abs();
             assert!(err <= 0.5 / fmt.scale() as f32 + 1e-6, "{fmt} x={x} err={err}");
+        });
+    }
+
+    #[test]
+    fn requant_narrowing_rounds_half_away() {
+        // Q8.8 → Q8.4: shift 4, half = 8
+        let narrow = QFormat::new(8, 4);
+        assert_eq!(narrow.requant_code(16, Q), 1); // 16/256 = 1/16 → one Q8.4 ulp
+        assert_eq!(narrow.requant_code(8, Q), 1); // exactly half an ulp → away
+        assert_eq!(narrow.requant_code(-8, Q), -1);
+        assert_eq!(narrow.requant_code(7, Q), 0); // just under half → toward zero
+        assert_eq!(narrow.requant_code(-7, Q), 0);
+    }
+
+    #[test]
+    fn requant_widening_is_exact() {
+        let narrow = QFormat::new(8, 4);
+        // every Q8.4 value is representable in Q8.8: round-trip is identity
+        for code in narrow.min_code()..=narrow.max_code() {
+            let wide = Q.requant_code(code as i16, narrow);
+            assert_eq!(wide, (code << 4) as i16);
+            assert_eq!(narrow.requant_code(wide, Q), code as i16);
+        }
+    }
+
+    #[test]
+    fn requant_saturates_both_directions() {
+        let narrow = QFormat::new(4, 2); // codes −8..7
+        // narrowing: large Q8.8 codes clamp at the 4-bit limits, never wrap
+        assert_eq!(narrow.requant_code(i16::MAX, Q), 7);
+        assert_eq!(narrow.requant_code(i16::MIN, Q), -8);
+        // widening: a Q4.0 max code blows past Q8.7's range and clamps
+        let wide = QFormat::new(8, 7);
+        assert_eq!(wide.requant_code(7, QFormat::new(4, 0)), wide.max_code() as i16);
+        assert_eq!(wide.requant_code(-8, QFormat::new(4, 0)), wide.min_code() as i16);
+        // extreme widening from frac 0 to frac 15 must not wrap in i64
+        let w15 = QFormat::new(16, 15);
+        assert_eq!(w15.requant_acc(i64::MAX / 2, 0), w15.max_code() as i16);
+        assert_eq!(w15.requant_acc(i64::MIN / 2, 0), w15.min_code() as i16);
+    }
+
+    #[test]
+    fn requant_same_format_is_clamped_identity() {
+        for code in [-32768i16, -1, 0, 1, 32767] {
+            assert_eq!(Q.requant_code(code, Q), code);
+        }
+        // an out-of-range accumulator at the same frac still saturates
+        assert_eq!(Q.requant_acc(1 << 20, 8), 32767);
+    }
+
+    #[test]
+    fn requant_preserves_value_within_half_ulp() {
+        check(14, 400, |rng| {
+            let src_bits = rng.range(4, 17) as u8;
+            let src_frac = rng.range(0, src_bits as usize) as u8;
+            let dst_bits = rng.range(4, 17) as u8;
+            let dst_frac = rng.range(0, dst_bits as usize) as u8;
+            let src = QFormat::new(src_bits, src_frac);
+            let dst = QFormat::new(dst_bits, dst_frac);
+            let m = dst.max_value().min(src.max_value());
+            let x = rng.f32_range(-m, m);
+            let code = src.quantize(x);
+            let re = dst.requant_code(code, src);
+            // requant rounds the source value onto the destination grid,
+            // saturating at the destination's representable range
+            let dst_min = dst.min_code() as f32 / dst.scale() as f32;
+            let expected = src.dequantize(code).clamp(dst_min, dst.max_value());
+            let err = (dst.dequantize(re) - expected).abs();
+            assert!(err <= 0.5 / dst.scale() as f32 + 1e-6,
+                    "{src}→{dst} x={x} code={code} re={re} err={err}");
         });
     }
 

@@ -92,7 +92,9 @@ pub fn import(doc: &Value, tensors: Vec<(String, crate::util::tensorio::Tensor)>
     let meta = doc.get("backbone").cloned().unwrap_or(Value::Null);
 
     let mut g = Graph {
-        name, qformat, input_name, input_shape, output_name, feature_dim,
+        name,
+        formats: super::ir::TensorFormats::uniform(qformat),
+        input_name, input_shape, output_name, feature_dim,
         ops, weights, shapes: HashMap::new(), meta,
     };
     infer_shapes(&mut g)?;
@@ -148,7 +150,8 @@ mod tests {
         assert_eq!(g.ops.len(), 2);
         assert_eq!(g.shape("a1").unwrap(), &[1, 8, 8, 4]);
         assert_eq!(g.shape("features").unwrap(), &[1, 4]);
-        assert_eq!(g.qformat.frac_bits, 8);
+        assert_eq!(g.base_format().frac_bits, 8);
+        assert!(g.formats.is_uniform());
     }
 
     #[test]

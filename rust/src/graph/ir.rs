@@ -82,11 +82,64 @@ impl Op {
     }
 }
 
+/// Per-tensor fixed-point formats: a base format (the deployment default,
+/// Q8.8 in the paper) plus per-tensor overrides installed by a
+/// [`crate::quant::PrecisionPlan`].  Every tensor not explicitly overridden
+/// resolves to the base — a plain single-format graph is simply one with no
+/// overrides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorFormats {
+    base: QFormat,
+    overrides: HashMap<String, QFormat>,
+}
+
+impl TensorFormats {
+    /// Every tensor at `base` (the legacy global-format stack).
+    pub fn uniform(base: QFormat) -> TensorFormats {
+        TensorFormats { base, overrides: HashMap::new() }
+    }
+
+    /// The base (default) format.
+    pub fn base(&self) -> QFormat {
+        self.base
+    }
+
+    /// Format of one tensor: its override if set, else the base.
+    pub fn get(&self, name: &str) -> QFormat {
+        self.overrides.get(name).copied().unwrap_or(self.base)
+    }
+
+    /// Install a per-tensor override (an override equal to the base is
+    /// dropped, keeping `is_uniform` meaningful).
+    pub fn set(&mut self, name: impl Into<String>, fmt: QFormat) {
+        let name = name.into();
+        if fmt == self.base {
+            self.overrides.remove(&name);
+        } else {
+            self.overrides.insert(name, fmt);
+        }
+    }
+
+    /// True when every tensor resolves to the base format.
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.is_empty()
+    }
+}
+
+impl Default for TensorFormats {
+    fn default() -> Self {
+        TensorFormats::uniform(QFormat::default())
+    }
+}
+
 /// An imported, validated model graph.
 #[derive(Clone, Debug)]
 pub struct Graph {
     pub name: String,
-    pub qformat: QFormat,
+    /// Per-tensor number formats (base + overrides).  Replaces the old
+    /// single `qformat` field: the whole stack (compiler, simulator, cost
+    /// and resource models) resolves formats per tensor through this.
+    pub formats: TensorFormats,
     pub input_name: String,
     /// NHWC input shape.
     pub input_shape: [usize; 4],
@@ -102,6 +155,37 @@ pub struct Graph {
 }
 
 impl Graph {
+    /// Base (default) tensor format — the deployment format of tensors
+    /// without a per-tensor override.
+    pub fn base_format(&self) -> QFormat {
+        self.formats.base()
+    }
+
+    /// Resolved format of one tensor (activation, weight or bias).
+    pub fn tensor_format(&self, name: &str) -> QFormat {
+        self.formats.get(name)
+    }
+
+    /// Widest total bit-width of any tensor the *datapath* actually
+    /// carries: the graph input plus every op's inputs, output and weight
+    /// tensor.  Deliberately ignores tensors off the datapath — a
+    /// fully-narrowed `PrecisionPlan` graph fits narrow hardware even
+    /// though its i32 bias constants still resolve to the (wider) base
+    /// format.
+    pub fn max_datapath_bits(&self) -> u8 {
+        let mut bits = self.formats.get(&self.input_name).total_bits;
+        for op in &self.ops {
+            for name in op.inputs() {
+                bits = bits.max(self.formats.get(name).total_bits);
+            }
+            bits = bits.max(self.formats.get(op.output()).total_bits);
+            if let Op::Conv2d { weights, .. } | Op::Dense { weights, .. } = op {
+                bits = bits.max(self.formats.get(weights).total_bits);
+            }
+        }
+        bits
+    }
+
     /// Look up a weight tensor, with a contextual error.
     pub fn weight(&self, name: &str) -> anyhow::Result<&Tensor> {
         self.weights

@@ -12,6 +12,6 @@ mod shape;
 mod simplify;
 
 pub use import::{import, import_files};
-pub use ir::{Graph, Op};
+pub use ir::{Graph, Op, TensorFormats};
 pub use shape::infer_shapes;
 pub use simplify::simplify;

@@ -19,9 +19,13 @@
 //!     serving paths go through it;
 //!   - **`quant` — bit-width-aware quantization**: calibration
 //!     ([`quant::Calibrator`]), integer tensors/kernels
-//!     ([`quant::QTensor`]) and the fixed-point NCM ([`quant::QuantNcm`]),
-//!     wired into the engine ([`engine::EngineBuilder::quant`]) and the
-//!     `dse` bit-width Pareto sweep;
+//!     ([`quant::QTensor`]), the fixed-point NCM ([`quant::QuantNcm`]) and
+//!     **per-layer precision plans** ([`quant::PrecisionPlan`], one
+//!     `QFormat` per backbone layer, installed into
+//!     [`graph::TensorFormats`] and executed end-to-end by `tcompiler` +
+//!     `sim`), wired into the engine ([`engine::EngineBuilder::quant`]),
+//!     the uniform bit-width sweep (`pefsl quant`) and the mixed-precision
+//!     hardware-aware search (`pefsl mixed`, `dse::mixed_pareto_rows`);
 //!   - the demonstrator on top of the engine: `video`, `ncm`, `coordinator`
 //!     (frame loop + pipelined variant), `fewshot` (episodic evaluation),
 //!     `dse` and `cli`.

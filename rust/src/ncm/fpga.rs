@@ -62,7 +62,7 @@ pub fn build_ncm_graph(centroids: &[Vec<f32>], qformat: QFormat) -> Result<Graph
 
     let mut g = Graph {
         name: format!("ncm_{n_ways}w_{dim}d"),
-        qformat,
+        formats: crate::graph::TensorFormats::uniform(qformat),
         input_name: "query".into(),
         // dense expects [N, K]; model the query as a 1×1 image is not
         // needed — graph input is 4-D NHWC for convs, but dense reads

@@ -6,7 +6,7 @@
 //! knobs (array size, clock, utilization), calibrated so the headline
 //! configuration reproduces both figures.
 
-use crate::resources::{accelerator_resources, hdmi_resources};
+use crate::resources::{accelerator_resources_bits, hdmi_resources};
 use crate::tarch::Tarch;
 
 /// Breakdown of system power in watts.
@@ -47,14 +47,40 @@ const BRAM_MW_PER_MHZ: f64 = 0.030;
 const LUT_UW_PER_MHZ: f64 = 0.9; // µW per LUT per MHz
 
 /// Estimate system power for a tarch at a given compute duty cycle
-/// (fraction of time the PE array is actively streaming, 0..1).
+/// (fraction of time the PE array is actively streaming, 0..1), at the
+/// tarch-native operand width.
 pub fn system_power(t: &Tarch, duty: f64) -> PowerReport {
+    system_power_bits(t, duty, t.qformat.total_bits)
+}
+
+/// Estimate system power when the datapath carries `bits`-wide operands.
+///
+/// Two bit-width effects compound: the resource counts themselves shrink
+/// (and below 8 bits the multipliers move from DSPs into LUTs — see
+/// [`crate::resources::accelerator_resources_bits`]), and the dynamic
+/// energy per access scales with the fraction of datapath bits actually
+/// toggling.  `bits = 16` reproduces the paper's 6.2 W exactly.
+pub fn system_power_bits(t: &Tarch, duty: f64, bits: u8) -> PowerReport {
+    system_power_mixed(t, duty, bits, bits)
+}
+
+/// Power for a *mixed-precision* plan: the fabric is sized for
+/// `datapath_bits` (the plan's widest layer — the hardware that actually
+/// exists), while switching activity scales with `toggle_bits` (the
+/// cycle-weighted effective width of the traffic).  Keeps the power column
+/// consistent with a resource column sized at the widest layer.
+pub fn system_power_mixed(t: &Tarch, duty: f64, datapath_bits: u8, toggle_bits: u8) -> PowerReport {
     let duty = duty.clamp(0.0, 1.0);
-    let acc = accelerator_resources(t);
+    let acc = accelerator_resources_bits(t, datapath_bits);
     let hdmi = hdmi_resources();
 
-    let dyn_acc = (acc.dsp as f64 * DSP_MW_PER_MHZ * duty
-        + acc.bram36 as f64 * BRAM_MW_PER_MHZ * (0.3 + 0.7 * duty)
+    // operand-toggle factor: clock trees and control keep a floor, the
+    // datapath's share scales with the active operand bits
+    let native = t.qformat.total_bits.max(1);
+    let tf = 0.3 + 0.7 * (toggle_bits.min(native) as f64 / native as f64);
+
+    let dyn_acc = (acc.dsp as f64 * DSP_MW_PER_MHZ * duty * tf
+        + acc.bram36 as f64 * BRAM_MW_PER_MHZ * (0.3 + 0.7 * duty) * tf
         + acc.lut as f64 * LUT_UW_PER_MHZ / 1000.0 * (0.2 + 0.8 * duty))
         * t.clock_mhz
         / 1000.0;
@@ -112,6 +138,32 @@ mod tests {
         let big = system_power(&Tarch::z7020_12x12(), 0.5).pl_dynamic_w;
         let small = system_power(&Tarch::z7020_8x8(), 0.5).pl_dynamic_w;
         assert!(small < big);
+    }
+
+    #[test]
+    fn sixteen_bit_matches_legacy_and_narrow_saves_power() {
+        let t = Tarch::z7020_12x12();
+        let w16 = system_power_bits(&t, 0.5, 16).total_w();
+        assert_eq!(w16, system_power(&t, 0.5).total_w());
+        let w8 = system_power_bits(&t, 0.5, 8).total_w();
+        let w4 = system_power_bits(&t, 0.5, 4).total_w();
+        assert!(w8 < w16, "{w8} vs {w16}");
+        // 4-bit loses the DSP column but pays LUT multipliers; still a
+        // net saving at these coefficients
+        assert!(w4 < w8, "{w4} vs {w8}");
+    }
+
+    #[test]
+    fn mixed_power_keeps_the_wide_fabric() {
+        let t = Tarch::z7020_12x12();
+        // a {4,16} mixed plan: fabric at 16 bits, traffic toggling at ~6
+        let mixed = system_power_mixed(&t, 0.5, 16, 6).total_w();
+        let uniform16 = system_power_bits(&t, 0.5, 16).total_w();
+        let uniform6 = system_power_bits(&t, 0.5, 6).total_w();
+        // cheaper than full-width traffic, but dearer than hardware that
+        // really shrank to 6 bits (the DSP column is still there)
+        assert!(mixed < uniform16, "{mixed} vs {uniform16}");
+        assert!(mixed > uniform6, "{mixed} vs {uniform6}");
     }
 
     #[test]

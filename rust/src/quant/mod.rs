@@ -22,6 +22,12 @@
 //!   accumulators; the float path only survives in the EASY
 //!   center/L2-normalize preprocessing, exactly as on the PYNQ board where
 //!   features arrive already quantized from the fabric.
+//! * **Per-layer precision plans** ([`PrecisionPlan`] /
+//!   [`PlanCalibrator`]): one format per *backbone layer*, calibrated from
+//!   observed weight/activation amplitudes and installed into a graph's
+//!   per-tensor formats — the carrier of the mixed-precision DSE
+//!   (`dse::mixed`, `pefsl mixed`), whose accuracy axis runs the deployed
+//!   backbone simulator rather than a feature-space proxy.
 //!
 //! [`QuantConfig`] ties the layers together and is what
 //! [`crate::engine::EngineBuilder::quant`] and
@@ -31,10 +37,12 @@
 
 mod calibrate;
 mod ncm;
+mod plan;
 mod tensor;
 
 pub use calibrate::{Calibrator, CalibratorSet, QuantPolicy};
 pub use ncm::QuantNcm;
+pub use plan::{LayerPrecision, PlanCalibrator, PrecisionPlan};
 pub use tensor::{acc_to_f32, int_dot, int_gemv, int_sq_dist, QTensor};
 
 use anyhow::{bail, Result};

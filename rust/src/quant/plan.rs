@@ -1,0 +1,387 @@
+//! Per-layer precision plans — one [`QFormat`] per backbone layer.
+//!
+//! The paper hard-codes a single Q8.8 datapath; the Kanda design
+//! environments instead assign every layer its own bit-width and search
+//! the accuracy×resource frontier.  This module is the plan carrier for
+//! that search:
+//!
+//! * [`PrecisionPlan`] — an input format plus one [`LayerPrecision`]
+//!   (weight + activation format) per graph op, aligned with `Graph::ops`.
+//!   [`PrecisionPlan::apply`] installs it into a graph's per-tensor
+//!   [`crate::graph::TensorFormats`] and requantizes the stored weight
+//!   codes, after which `tcompiler`/`sim` run the mixed-precision datapath
+//!   end to end.
+//! * [`PlanCalibrator`] — observes per-layer weight and activation
+//!   amplitudes (weights from the stored codes, activations by running the
+//!   base-format simulator over calibration images and reading every
+//!   activation buffer) through the existing [`Calibrator`] machinery.
+//!   Amplitudes are bit-width-independent, so one observation pass serves
+//!   every candidate plan of a mixed-precision search —
+//!   [`PlanCalibrator::plan`] is then a cheap per-layer
+//!   [`Calibrator::fit`].
+//!
+//! An all-`uniform` plan at the graph's base format is a no-op by
+//! construction (identity requantize, no per-tensor overrides), which is
+//! what the `precision_plan_parity` integration test pins down bit-exactly
+//! against the legacy global-Q8.8 path.
+
+use anyhow::{bail, Context, Result};
+
+use crate::fixed::QFormat;
+use crate::graph::{Graph, Op};
+use crate::tarch::Tarch;
+
+use super::calibrate::{Calibrator, QuantPolicy};
+use super::{MAX_BITS, MIN_BITS};
+
+/// Formats of one layer: its weight tensor (conv/dense only) and its
+/// output activation buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPrecision {
+    /// Op name this entry belongs to (must match `Graph::ops` order).
+    pub name: String,
+    /// Weight tensor format (None for add/pool/gap layers).
+    pub weights: Option<QFormat>,
+    /// Output activation format.
+    pub activations: QFormat,
+}
+
+/// A whole-backbone precision assignment: the graph input format plus one
+/// [`LayerPrecision`] per op, in op order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrecisionPlan {
+    /// Format of the graph input activation.
+    pub input: QFormat,
+    /// Per-layer formats, aligned with `Graph::ops`.
+    pub layers: Vec<LayerPrecision>,
+}
+
+impl PrecisionPlan {
+    /// Every tensor at `fmt` — the legacy single-format stack as a plan.
+    pub fn uniform(graph: &Graph, fmt: QFormat) -> PrecisionPlan {
+        let layers = graph
+            .ops
+            .iter()
+            .map(|op| LayerPrecision {
+                name: op.name().to_string(),
+                weights: match op {
+                    Op::Conv2d { .. } | Op::Dense { .. } => Some(fmt),
+                    _ => None,
+                },
+                activations: fmt,
+            })
+            .collect();
+        PrecisionPlan { input: fmt, layers }
+    }
+
+    /// Activation bit-width of each layer, in op order.
+    pub fn bits_per_layer(&self) -> Vec<u8> {
+        self.layers.iter().map(|l| l.activations.total_bits).collect()
+    }
+
+    /// Widest total bit-width any tensor in the plan uses — the datapath
+    /// width the hardware must actually provide.
+    pub fn max_bits(&self) -> u8 {
+        self.layers
+            .iter()
+            .flat_map(|l| l.weights.iter().map(|w| w.total_bits).chain([l.activations.total_bits]))
+            .chain([self.input.total_bits])
+            .max()
+            .unwrap_or(MAX_BITS)
+    }
+
+    /// Compact per-layer bit-width string, e.g. `16,8,8,4` (op order).
+    pub fn describe_bits(&self) -> String {
+        self.bits_per_layer()
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Check alignment with a graph (op count + names) and bit ranges.
+    pub fn validate(&self, graph: &Graph) -> Result<()> {
+        if self.layers.len() != graph.ops.len() {
+            bail!(
+                "plan has {} layers but graph '{}' has {} ops",
+                self.layers.len(),
+                graph.name,
+                graph.ops.len()
+            );
+        }
+        for (l, op) in self.layers.iter().zip(&graph.ops) {
+            if l.name != op.name() {
+                bail!("plan layer '{}' does not match graph op '{}'", l.name, op.name());
+            }
+            let is_matmul = matches!(op, Op::Conv2d { .. } | Op::Dense { .. });
+            if is_matmul != l.weights.is_some() {
+                bail!("plan layer '{}': weight format presence disagrees with op kind", l.name);
+            }
+            for fmt in l.weights.iter().chain([&l.activations]) {
+                if !(MIN_BITS..=MAX_BITS).contains(&fmt.total_bits) {
+                    bail!("plan layer '{}': {} outside {MIN_BITS}..={MAX_BITS} bits", l.name, fmt);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Install the plan into a graph: set per-tensor format overrides for
+    /// the input, every layer output and every weight tensor, and
+    /// requantize the stored weight codes from their current format into
+    /// the plan's.  Biases keep their stored codes and format (the SIMD
+    /// writeback shifts them to the accumulator scale at run time).
+    ///
+    /// Applying the same plan twice is a no-op (requantization from a
+    /// format to itself is the identity).
+    pub fn apply(&self, graph: &mut Graph) -> Result<()> {
+        self.validate(graph)?;
+        let input_name = graph.input_name.clone();
+        graph.formats.set(input_name, self.input);
+        // collect just the tensor names first so the loop below can borrow
+        // `graph` mutably without cloning every op
+        let targets: Vec<(String, Option<String>)> = graph
+            .ops
+            .iter()
+            .map(|op| {
+                let w = match op {
+                    Op::Conv2d { weights, .. } | Op::Dense { weights, .. } => Some(weights.clone()),
+                    _ => None,
+                };
+                (op.output().to_string(), w)
+            })
+            .collect();
+        let mut seen_weights = std::collections::HashSet::new();
+        for (l, (output, weights)) in self.layers.iter().zip(targets) {
+            graph.formats.set(output, l.activations);
+            if let (Some(new_fmt), Some(weights)) = (l.weights, weights) {
+                if !seen_weights.insert(weights.clone()) {
+                    bail!("weight tensor '{weights}' shared by two layers; cannot requantize twice");
+                }
+                let old_fmt = graph.formats.get(&weights);
+                if old_fmt != new_fmt {
+                    let t = graph
+                        .weights
+                        .get_mut(&weights)
+                        .with_context(|| format!("missing weight tensor '{weights}'"))?;
+                    let codes = t.as_i16_mut()?;
+                    for c in codes.iter_mut() {
+                        *c = new_fmt.requant_code(*c, old_fmt);
+                    }
+                }
+                graph.formats.set(weights, new_fmt);
+            }
+        }
+        Ok(())
+    }
+
+    /// Clone `graph` with the plan applied.
+    pub fn applied(&self, graph: &Graph) -> Result<Graph> {
+        let mut g = graph.clone();
+        self.apply(&mut g)?;
+        Ok(g)
+    }
+}
+
+/// Observed per-layer amplitudes, ready to fit plans at any bit budget.
+pub struct PlanCalibrator {
+    input: Calibrator,
+    /// One (act calibrator, optional weight calibrator) per graph op.
+    layers: Vec<(String, Calibrator, Option<Calibrator>)>,
+}
+
+impl PlanCalibrator {
+    /// Observe a graph: weight amplitudes from the stored codes, input and
+    /// activation amplitudes by running the graph's current-format
+    /// simulator over `images` and reading every activation buffer.
+    pub fn observe(
+        graph: &Graph,
+        tarch: &Tarch,
+        images: &[Vec<f32>],
+        policy: QuantPolicy,
+    ) -> Result<PlanCalibrator> {
+        if images.is_empty() {
+            bail!("precision-plan calibration needs at least one image");
+        }
+        let mut input = Calibrator::new(policy);
+        let mut layers: Vec<(String, Calibrator, Option<Calibrator>)> = graph
+            .ops
+            .iter()
+            .map(|op| {
+                let w = match op {
+                    Op::Conv2d { weights, .. } | Op::Dense { weights, .. } => {
+                        let mut c = Calibrator::new(policy);
+                        let fmt = graph.formats.get(weights);
+                        let codes = graph.weight(weights)?.as_i16()?;
+                        c.observe(&fmt.dequantize_slice(codes));
+                        Ok::<_, anyhow::Error>(Some(c))
+                    }
+                    _ => Ok(None),
+                }?;
+                Ok((op.name().to_string(), Calibrator::new(policy), w))
+            })
+            .collect::<Result<_>>()?;
+
+        // activation amplitudes: run the current-format simulator and read
+        // every activation buffer after each image
+        let program = crate::tcompiler::compile(graph, tarch)?;
+        let mut sim = crate::sim::Simulator::new(&program, graph);
+        // tensor-name → op index (an op's output buffer carries its name)
+        let by_output: std::collections::HashMap<&str, usize> = graph
+            .ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| (op.output(), i))
+            .collect();
+        for img in images {
+            input.observe(img);
+            sim.run_f32(img)?;
+            for (name, codes) in sim.activation_codes() {
+                if let Some(&i) = by_output.get(name) {
+                    let fmt = graph.formats.get(name);
+                    layers[i].1.observe(&fmt.dequantize_slice(codes));
+                }
+            }
+        }
+        Ok(PlanCalibrator { input, layers })
+    }
+
+    /// Fit a plan giving layer `i` the bit budget `bits_per_layer[i]`
+    /// (aligned with `Graph::ops`); the input runs at the first layer's
+    /// budget.  Each format is the most precise one covering that tensor's
+    /// calibrated amplitude ([`Calibrator::fit`] → `fit_format`, the single
+    /// covering-format search).
+    pub fn plan(&self, bits_per_layer: &[u8]) -> Result<PrecisionPlan> {
+        if bits_per_layer.len() != self.layers.len() {
+            bail!(
+                "bits_per_layer has {} entries, calibrated graph has {} layers",
+                bits_per_layer.len(),
+                self.layers.len()
+            );
+        }
+        for &b in bits_per_layer {
+            if !(MIN_BITS..=MAX_BITS).contains(&b) {
+                bail!("bit budget {b} outside {MIN_BITS}..={MAX_BITS}");
+            }
+        }
+        let input_bits = bits_per_layer[0];
+        let layers = self
+            .layers
+            .iter()
+            .zip(bits_per_layer)
+            .map(|((name, act, w), &bits)| LayerPrecision {
+                name: name.clone(),
+                weights: w.as_ref().map(|c| c.fit(bits)),
+                activations: act.fit(bits),
+            })
+            .collect();
+        Ok(PrecisionPlan { input: self.input.fit(input_bits), layers })
+    }
+
+    /// Fit a plan with the same bit budget for every layer.
+    pub fn plan_uniform_bits(&self, bits: u8) -> Result<PrecisionPlan> {
+        self.plan(&vec![bits; self.layers.len()])
+    }
+
+    /// Number of layers observed.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::BackboneSpec;
+    use crate::util::Prng;
+
+    fn tiny_graph() -> Graph {
+        let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+        spec.build_graph(5).unwrap()
+    }
+
+    fn images(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| (0..elems).map(|_| rng.f32()).collect()).collect()
+    }
+
+    #[test]
+    fn uniform_base_plan_is_identity() {
+        let g0 = tiny_graph();
+        let plan = PrecisionPlan::uniform(&g0, g0.base_format());
+        assert_eq!(plan.max_bits(), 16);
+        let g1 = plan.applied(&g0).unwrap();
+        assert!(g1.formats.is_uniform());
+        for (name, t) in &g0.weights {
+            assert_eq!(t, &g1.weights[name], "{name}");
+        }
+    }
+
+    #[test]
+    fn plan_validates_alignment() {
+        let g = tiny_graph();
+        let mut plan = PrecisionPlan::uniform(&g, g.base_format());
+        plan.layers[0].name = "ghost".into();
+        assert!(plan.validate(&g).is_err());
+        let mut short = PrecisionPlan::uniform(&g, g.base_format());
+        short.layers.pop();
+        assert!(short.validate(&g).is_err());
+    }
+
+    #[test]
+    fn apply_requantizes_weight_codes() {
+        let g0 = tiny_graph();
+        let narrow = QFormat::new(8, 4);
+        let mut plan = PrecisionPlan::uniform(&g0, g0.base_format());
+        for l in &mut plan.layers {
+            if let Some(w) = &mut l.weights {
+                *w = narrow;
+            }
+        }
+        let g1 = plan.applied(&g0).unwrap();
+        let w0 = g0.weight("b0.conv1.w").unwrap().as_i16().unwrap();
+        let w1 = g1.weight("b0.conv1.w").unwrap().as_i16().unwrap();
+        let base = g0.base_format();
+        for (a, b) in w0.iter().zip(w1) {
+            assert_eq!(*b, narrow.requant_code(*a, base));
+        }
+        assert_eq!(g1.tensor_format("b0.conv1.w"), narrow);
+        // applying again is a no-op
+        let g2 = plan.applied(&g1).unwrap();
+        assert_eq!(
+            g1.weight("b0.conv1.w").unwrap().as_i16().unwrap(),
+            g2.weight("b0.conv1.w").unwrap().as_i16().unwrap()
+        );
+    }
+
+    #[test]
+    fn calibrated_plans_cover_amplitudes_and_scale_with_bits() {
+        let g = tiny_graph();
+        let imgs = images(3, 8 * 8 * 3, 7);
+        let cal =
+            PlanCalibrator::observe(&g, &crate::tarch::Tarch::z7020_8x8(), &imgs, QuantPolicy::MinMax)
+                .unwrap();
+        assert_eq!(cal.n_layers(), g.ops.len());
+        let p16 = cal.plan_uniform_bits(16).unwrap();
+        let p4 = cal.plan_uniform_bits(4).unwrap();
+        assert_eq!(p16.bits_per_layer(), vec![16u8; g.ops.len()]);
+        assert_eq!(p4.max_bits(), 4);
+        // same amplitude, fewer bits → no more fractional precision
+        for (l16, l4) in p16.layers.iter().zip(&p4.layers) {
+            assert!(l16.activations.frac_bits >= l4.activations.frac_bits, "{}", l16.name);
+        }
+        // a calibrated plan survives application + simulation
+        let g4 = p4.applied(&g).unwrap();
+        let r = crate::sim::simulate_f32(&g4, &crate::tarch::Tarch::z7020_8x8(), &imgs[0]).unwrap();
+        assert!(r.output_f32.iter().all(|v| v.is_finite()));
+        assert!(r.cycles > 0);
+        // mixed budgets are accepted and land per layer
+        let mut bits = vec![16u8; g.ops.len()];
+        bits[0] = 4;
+        let mixed = cal.plan(&bits).unwrap();
+        assert_eq!(mixed.layers[0].activations.total_bits, 4);
+        assert_eq!(mixed.layers[1].activations.total_bits, 16);
+        assert!(cal.plan(&bits[1..]).is_err());
+        assert!(cal.plan(&vec![3u8; g.ops.len()]).is_err());
+    }
+}

@@ -67,26 +67,54 @@ pub fn bram36_for(depth: usize, width_bits: usize) -> u32 {
     (width_bits.div_ceil(36) * depth.div_ceil(1024)) as u32
 }
 
-/// Accelerator-only resource estimate.
+/// Accelerator resource estimate at the tarch-native operand width.
 pub fn accelerator_resources(t: &Tarch) -> ResourceReport {
+    accelerator_resources_bits(t, t.qformat.total_bits)
+}
+
+/// Below this operand width a multiplier no longer earns a DSP48E1:
+/// synthesis maps it into LUT fabric instead (the "DSP cliff" the Kanda
+/// bit-width-aware design environments exploit — sub-8-bit PE arrays trade
+/// scarce DSPs for cheap LUTs).
+pub const DSP_CLIFF_BITS: u8 = 8;
+
+/// Accelerator resource estimate when the datapath carries `bits`-wide
+/// operands (a mixed-precision plan is sized by its *widest* layer).
+///
+/// Calibrated so `bits = 16` reproduces the paper's Vivado report exactly
+/// (see module docs); narrower operands shrink the per-PE datapath and the
+/// BRAM line widths, and below [`DSP_CLIFF_BITS`] the PE multipliers fall
+/// out of the DSP column into LUTs.
+pub fn accelerator_resources_bits(t: &Tarch, bits: u8) -> ResourceReport {
     let r = t.array_size as u32;
     let pes = r * r;
-    let bits = t.qformat.total_bits as usize;
+    let b = bits.clamp(1, 16) as u32;
 
-    // DSP: one DSP48E1 per 16-bit MAC PE; SIMD writeback ALU uses one per
-    // lane plus 3 for the requant/divide path. (Calibration: 144+12+3=159.)
-    let dsp = pes + r + 3;
+    // DSP: one DSP48E1 per MAC PE at ≥ 8-bit operands; SIMD writeback ALU
+    // uses one per lane plus 3 for the requant/divide path.
+    // (Calibration at 16-bit: 144+12+3=159.)  Below the cliff the PE
+    // multipliers leave the DSP column entirely.
+    let (dsp, mult_lut_per_pe) = if bits >= DSP_CLIFF_BITS {
+        (pes + r + 3, 0)
+    } else {
+        // b×b LUT multiplier + carry adder per PE
+        (r + 3, b * b + 4 * b)
+    };
 
-    // BRAM: local scratchpad is array_size×bits wide; accumulators are
-    // 32-bit wide. (Calibration: 8192×192b → 48, 1024×384b → 11; total 59.)
-    let local = bram36_for(t.local_depth, t.array_size * bits);
-    let acc = bram36_for(t.accumulator_depth, t.array_size * 32);
+    // BRAM: local scratchpad lines are array_size×bits wide; accumulators
+    // hold 2×bits products (32-bit at the paper's 16-bit operands).
+    // (Calibration at 16-bit: 8192×192b → 48, 1024×384b → 11; total 59.)
+    let local = bram36_for(t.local_depth, t.array_size * b as usize);
+    let acc = bram36_for(t.accumulator_depth, t.array_size * 2 * b as usize);
     let bram = local + acc;
 
-    // LUT/FF: fixed control + per-PE datapath + per-lane SIMD.
-    // (Calibration to 15 667 LUT / 9 819 FF at r=12.)
-    let lut = 2_300 + 84 * pes + 70 * r + 400;
-    let ff = 1_200 + 55 * pes + 50 * r + 300;
+    // LUT/FF: fixed control + per-PE datapath (operand registers, partial
+    // sums — scales with operand bits) + per-lane SIMD.
+    // (Calibration at 16-bit, r=12: 15 667 LUT / 9 819 FF.)
+    let lut_pe = (84 * b).div_ceil(16) + mult_lut_per_pe;
+    let ff_pe = (55 * b).div_ceil(16);
+    let lut = 2_300 + lut_pe * pes + 70 * r + 400;
+    let ff = 1_200 + ff_pe * pes + 50 * r + 300;
 
     ResourceReport { lut, ff, bram36: bram, dsp }
 }
@@ -151,6 +179,38 @@ mod tests {
         assert_eq!(bram36_for(1024, 37), 2);
         assert_eq!(bram36_for(8192, 192), 48);
         assert_eq!(bram36_for(1024, 384), 11);
+    }
+
+    #[test]
+    fn sixteen_bit_matches_legacy_model() {
+        let t = Tarch::z7020_12x12();
+        assert_eq!(accelerator_resources_bits(&t, 16), accelerator_resources(&t));
+    }
+
+    #[test]
+    fn narrower_operands_shrink_bram_and_datapath() {
+        let t = Tarch::z7020_12x12();
+        let w16 = accelerator_resources_bits(&t, 16);
+        let w8 = accelerator_resources_bits(&t, 8);
+        assert!(w8.bram36 < w16.bram36, "{} vs {}", w8.bram36, w16.bram36);
+        assert!(w8.lut < w16.lut);
+        assert!(w8.ff < w16.ff);
+        // at 8 bits the multipliers still fit DSPs
+        assert_eq!(w8.dsp, w16.dsp);
+    }
+
+    #[test]
+    fn sub_eight_bit_falls_off_the_dsp_cliff() {
+        let t = Tarch::z7020_12x12();
+        let w8 = accelerator_resources_bits(&t, 8);
+        let w4 = accelerator_resources_bits(&t, 4);
+        // PE multipliers leave the DSP column...
+        assert_eq!(w4.dsp as u64, t.array_size as u64 + 3);
+        assert!(w4.dsp < w8.dsp);
+        // ...and reappear as fabric LUTs (more than the plain 4-bit datapath)
+        let lut_pe_4 = (w4.lut - 2_300 - 70 * t.array_size as u32 - 400) / (12 * 12);
+        let lut_pe_8 = (w8.lut - 2_300 - 70 * t.array_size as u32 - 400) / (12 * 12);
+        assert!(lut_pe_4 > lut_pe_8, "{lut_pe_4} vs {lut_pe_8}");
     }
 
     #[test]

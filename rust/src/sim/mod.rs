@@ -1,18 +1,25 @@
 //! Cycle-accurate functional simulator of the systolic-array accelerator.
 //!
-//! Executes a [`Program`] instruction-by-instruction over real Q8.8 data:
-//! the same instruction stream the cost model prices is interpreted here,
-//! so latency and numerics come from one artifact — the PE array does
+//! Executes a [`Program`] instruction-by-instruction over real fixed-point
+//! data: the same instruction stream the cost model prices is interpreted
+//! here, so latency and numerics come from one artifact — the PE array does
 //! i16×i16→i32 MACs into 64-bit accumulators, SIMD writeback applies
-//! bias + ReLU + round-half-away requantization (`QFormat::narrow_acc`),
+//! bias + ReLU + round-half-away requantization (`QFormat::requant_acc`),
 //! exactly what the Tensil RTL does on the FPGA.
+//!
+//! Every activation buffer carries its layer's own [`QFormat`] (installed
+//! by a `quant::PrecisionPlan`, or the uniform graph base — the paper's
+//! Q8.8): the writeback stage requantizes the accumulator *between*
+//! formats at layer boundaries, and elementwise ops align operand scales
+//! before requantizing into their output format.
 //!
 //! This is the bit-exact reference for the deployed bitstream; Python's
 //! `forward_folded_quant` approximates it in float and the parity test in
 //! `rust/tests/artifact_parity.rs` bounds the difference.
 //!
 //! §Perf notes: per-layer weight/bias slices are resolved once at
-//! simulator construction (not per element); the MatMul inner loop swaps
+//! simulator construction through a name→op index built up front (one
+//! pass over the op list, not one per layer); the MatMul inner loop swaps
 //! activation buffers out of the tensor map to avoid per-instruction
 //! clones, pre-decomposes the k-range into (ky, kx, ci) per tile, and
 //! accumulates over the weight-tile row slice — see EXPERIMENTS.md §Perf.
@@ -30,7 +37,8 @@ use crate::tcompiler::{instr_cycles, ConvGeom, CostModel, Instr, LayerKind, Prog
 /// Result of simulating one inference.
 #[derive(Clone, Debug)]
 pub struct SimResult {
-    /// Output tensor (feature vector) as Q8.8 codes.
+    /// Output tensor (feature vector) as codes in the program's
+    /// output-tensor format (Q8.8 for a uniform legacy graph).
     pub output_codes: Vec<i16>,
     /// Output dequantized to f32.
     pub output_f32: Vec<f32>,
@@ -53,8 +61,9 @@ impl SimResult {
     }
 }
 
-/// Per-layer data resolved once at construction: weight/bias slices and
-/// the conv geometry, so the instruction loop never touches hash maps.
+/// Per-layer data resolved once at construction: weight/bias slices, the
+/// conv geometry and the layer's operand formats, so the instruction loop
+/// never touches hash maps.
 struct LayerData<'a> {
     weights: Option<&'a [i16]>,
     bias: Option<&'a [i32]>,
@@ -64,13 +73,20 @@ struct LayerData<'a> {
     output: u32,
     /// cout of the weight matrix (row stride for conv HWIO indexing).
     cout: usize,
+    /// Formats of the input activation buffers (parallel to `inputs`).
+    in_fmts: Vec<QFormat>,
+    /// Format of the output activation buffer.
+    out_fmt: QFormat,
+    /// Weight format (conv/dense); accumulator frac = input frac + weight frac.
+    w_fmt: Option<QFormat>,
+    /// Fractional bits of the stored bias codes.
+    bias_frac: u8,
 }
 
 /// Accelerator state: activation buffers + accumulator + loaded weight tile.
 pub struct Simulator<'a> {
     program: &'a Program,
     cost: CostModel,
-    qformat: QFormat,
     layers: Vec<LayerData<'a>>,
     /// Activation buffers by tensor id (Q8.8 codes), NHWC row-major.
     acts: HashMap<u32, Vec<i16>>,
@@ -86,6 +102,9 @@ pub struct Simulator<'a> {
 impl<'a> Simulator<'a> {
     pub fn new(program: &'a Program, graph: &'a Graph) -> Self {
         let acc_len = program.tarch.accumulator_depth * program.tarch.array_size;
+        // One name→op index up front (not a per-layer rescan of the op list).
+        let op_by_name: HashMap<&str, &crate::graph::Op> =
+            graph.ops.iter().map(|op| (op.name(), op)).collect();
         // Resolve weight/bias slices once.
         let mut layers = Vec::with_capacity(program.layers.len());
         for meta in &program.layers {
@@ -93,18 +112,14 @@ impl<'a> Simulator<'a> {
             let mut bias = None;
             let mut cout = 0;
             if matches!(meta.kind, LayerKind::Conv | LayerKind::Dense) {
-                for op in &graph.ops {
-                    if op.name() == meta.name {
-                        if let crate::graph::Op::Conv2d { weights: w, bias: b, .. }
-                        | crate::graph::Op::Dense { weights: w, bias: b, .. } = op
-                        {
-                            let wt = &graph.weights[w];
-                            cout = *wt.shape.last().unwrap();
-                            weights = wt.as_i16().ok();
-                            bias = graph.weights[b].as_i32().ok();
-                        }
-                        break;
-                    }
+                if let Some(crate::graph::Op::Conv2d { weights: w, bias: b, .. }
+                | crate::graph::Op::Dense { weights: w, bias: b, .. }) =
+                    op_by_name.get(meta.name.as_str())
+                {
+                    let wt = &graph.weights[w];
+                    cout = *wt.shape.last().unwrap();
+                    weights = wt.as_i16().ok();
+                    bias = graph.weights[b].as_i32().ok();
                 }
             }
             layers.push(LayerData {
@@ -115,6 +130,10 @@ impl<'a> Simulator<'a> {
                 inputs: meta.inputs.clone(),
                 output: meta.output,
                 cout,
+                in_fmts: meta.input_formats.clone(),
+                out_fmt: meta.output_format,
+                w_fmt: meta.weight_format,
+                bias_frac: meta.bias_frac,
             });
         }
         let cost = CostModel::new(program.tarch.clone());
@@ -126,7 +145,6 @@ impl<'a> Simulator<'a> {
         Simulator {
             program,
             cost,
-            qformat: program.qformat,
             layers,
             acts: HashMap::new(),
             acc: vec![0; acc_len],
@@ -136,9 +154,10 @@ impl<'a> Simulator<'a> {
         }
     }
 
-    /// Run one inference on an f32 NHWC input image (quantized internally).
+    /// Run one inference on an f32 NHWC input image (quantized internally
+    /// to the program's input-tensor format).
     pub fn run_f32(&mut self, input: &[f32]) -> Result<SimResult> {
-        let q = self.qformat;
+        let q = self.program.input_format;
         let codes: Vec<i16> = input.iter().map(|&x| q.quantize(x)).collect();
         self.run_codes(&codes)
     }
@@ -182,7 +201,7 @@ impl<'a> Simulator<'a> {
             .get(&self.program.output_tensor)
             .context("output tensor never written")?
             .clone();
-        let q = self.qformat;
+        let q = self.program.output_format;
         Ok(SimResult {
             output_f32: out.iter().map(|&c| q.dequantize(c)).collect(),
             output_codes: out,
@@ -306,11 +325,20 @@ impl<'a> Simulator<'a> {
                 Ok(())
             }
             Instr::Writeback { layer, m0, rows, n0, nt, relu } => {
-                let q = self.qformat;
                 let ld = &self.layers[*layer as usize];
                 let bias = ld.bias.context("layer has no bias")?;
                 let n_total = ld.geom.as_ref().map(|g| g.cout).unwrap_or(*nt);
                 let out_id = ld.output;
+                // The accumulator's fractional bits are input frac + weight
+                // frac (a code×code product); biases stay at their stored
+                // frac and are shifted to the accumulator scale first, then
+                // the SIMD requant stage narrows to the *output* format —
+                // this is where formats change at layer boundaries.
+                let in_f = ld.in_fmts[0];
+                let w_f = ld.w_fmt.context("matmul layer has no weight format")?;
+                let out_f = ld.out_fmt;
+                let acc_frac = in_f.frac_bits + w_f.frac_bits;
+                let bias_shift = acc_frac as i32 - ld.bias_frac as i32;
                 let out = self
                     .acts
                     .get_mut(&out_id)
@@ -320,9 +348,14 @@ impl<'a> Simulator<'a> {
                     let acc_base = row * r;
                     for dn in 0..*nt {
                         let n = n0 + dn;
-                        // bias codes are Q8.8; accumulator is Q16.16
-                        let a = self.acc[acc_base + dn] + ((bias[n] as i64) << q.frac_bits);
-                        let mut v = q.narrow_acc(a);
+                        let b = bias[n] as i64;
+                        let bterm = if bias_shift >= 0 {
+                            b << bias_shift
+                        } else {
+                            crate::fixed::rounding_shr(b, (-bias_shift) as u8)
+                        };
+                        let a = self.acc[acc_base + dn] + bterm;
+                        let mut v = out_f.requant_acc(a, acc_frac);
                         if *relu && v < 0 {
                             v = 0;
                         }
@@ -334,6 +367,12 @@ impl<'a> Simulator<'a> {
             Instr::AddAct { layer, len, relu } => {
                 let ld = &self.layers[*layer as usize];
                 let (a_id, b_id, out_id) = (ld.inputs[0], ld.inputs[1], ld.output);
+                // Align both operands to the wider fractional scale, add in
+                // i64, then requantize the sum into the output format
+                // (round-half-away + saturation, as everywhere else).
+                let (fa, fb, fo) = (ld.in_fmts[0], ld.in_fmts[1], ld.out_fmt);
+                let wf = fa.frac_bits.max(fb.frac_bits);
+                let (sa, sb) = (wf - fa.frac_bits, wf - fb.frac_bits);
                 let a = self.take_act(a_id)?;
                 let b = self.take_act(b_id)?;
                 if a.len() != *len || b.len() != *len {
@@ -345,9 +384,9 @@ impl<'a> Simulator<'a> {
                         .get_mut(&out_id)
                         .ok_or_else(|| anyhow::anyhow!("output tensor {out_id} missing"))?;
                     for i in 0..*len {
-                        let s = (a[i] as i32 + b[i] as i32)
-                            .clamp(i16::MIN as i32, i16::MAX as i32) as i16;
-                        out[i] = if *relu && s < 0 { 0 } else { s };
+                        let s = ((a[i] as i64) << sa) + ((b[i] as i64) << sb);
+                        let v = fo.requant_acc(s, wf);
+                        out[i] = if *relu && v < 0 { 0 } else { v };
                     }
                 }
                 self.acts.insert(a_id, a);
@@ -360,6 +399,7 @@ impl<'a> Simulator<'a> {
                 let in_id = ld.inputs[0];
                 let out_id = ld.output;
                 let input = self.take_act(in_id)?;
+                let (fi, fo) = (ld.in_fmts[0], ld.out_fmt);
                 {
                     let out = self.acts.get_mut(&out_id).unwrap();
                     for oy in 0..g.out_h {
@@ -373,7 +413,8 @@ impl<'a> Simulator<'a> {
                                         mx = mx.max(input[(iy * g.in_w + ix) * g.cin + c]);
                                     }
                                 }
-                                out[(oy * g.out_w + ox) * g.cin + c] = mx;
+                                // identity when input/output formats agree
+                                out[(oy * g.out_w + ox) * g.cin + c] = fo.requant_code(mx, fi);
                             }
                         }
                     }
@@ -387,6 +428,7 @@ impl<'a> Simulator<'a> {
                 let in_id = ld.inputs[0];
                 let out_id = ld.output;
                 let input = self.take_act(in_id)?;
+                let (fi, fo) = (ld.in_fmts[0], ld.out_fmt);
                 {
                     let out = self.acts.get_mut(&out_id).unwrap();
                     let area = (g.in_h * g.in_w) as i64;
@@ -396,9 +438,10 @@ impl<'a> Simulator<'a> {
                         for p in 0..(g.in_h * g.in_w) {
                             sum += input[p * g.cin + c] as i64;
                         }
-                        // round-half-away division (SIMD divider)
+                        // round-half-away division (SIMD divider), then the
+                        // requant stage moves the mean into the output format
                         let v = if sum >= 0 { (sum + half) / area } else { (sum - half) / area };
-                        out[c] = v.clamp(i16::MIN as i64, i16::MAX as i64) as i16;
+                        out[c] = fo.requant_acc(v, fi.frac_bits);
                     }
                 }
                 self.acts.insert(in_id, input);
@@ -410,6 +453,17 @@ impl<'a> Simulator<'a> {
     /// Cost model in use (for external reporting).
     pub fn cost_model(&self) -> &CostModel {
         &self.cost
+    }
+
+    /// Activation buffers by tensor name after the last run — the hook
+    /// `quant::PlanCalibrator` uses to observe per-layer amplitudes.
+    pub fn activation_codes(&self) -> impl Iterator<Item = (&str, &[i16])> {
+        self.acts.iter().filter_map(move |(id, buf)| {
+            match &self.program.tensors[*id as usize] {
+                TensorSlot::Activation { name, .. } => Some((name.as_str(), buf.as_slice())),
+                _ => None,
+            }
+        })
     }
 }
 
@@ -620,6 +674,91 @@ mod tests {
         assert_eq!(r.cycles, program.est_total_cycles);
         assert_eq!(r.layer_cycles.len(), 2);
         assert!(r.layer_cycles.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn writeback_requantizes_between_formats() {
+        // identity conv (center tap = 1.0): the writeback's only job is
+        // moving codes from the input format into a narrower output format
+        let q = QFormat::default();
+        let narrow = QFormat::new(8, 4);
+        let mut w_codes = vec![0i16; 9];
+        w_codes[4] = q.quantize(1.0);
+        let mut g = build_graph(4, 1, 1, 1, false, w_codes, vec![0i32], false);
+        g.formats.set("features", narrow);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 / 7.0 - 1.0).collect();
+        let program = crate::tcompiler::compile(&g, &Tarch::z7020_8x8()).unwrap();
+        let mut sim = Simulator::new(&program, &g);
+        let in_codes = q.quantize_slice(&x);
+        let r = sim.run_codes(&in_codes).unwrap();
+        for (got, &xc) in r.output_codes.iter().zip(&in_codes) {
+            assert_eq!(*got, narrow.requant_code(xc, q));
+        }
+        // the f32 view dequantizes under the output format
+        for (f, c) in r.output_f32.iter().zip(&r.output_codes) {
+            assert_eq!(*f, narrow.dequantize(*c));
+        }
+    }
+
+    #[test]
+    fn addact_aligns_mixed_operand_formats() {
+        // two identity-ish convs feed an Add; one branch runs narrow
+        let q = QFormat::default();
+        let narrow = QFormat::new(8, 4);
+        let wide = QFormat::new(12, 6);
+        let doc = crate::json::parse(
+            r#"{
+              "name": "t", "format": {"total_bits": 16, "frac_bits": 8},
+              "input": {"name": "input", "shape": [1, 4, 4, 1]},
+              "output": {"name": "features", "dim": 1},
+              "ops": [
+                {"op": "conv2d", "name": "c1", "input": "input", "output": "a",
+                 "weights": "c1.w", "bias": "c1.b", "stride": 1, "padding": 1, "relu": false},
+                {"op": "conv2d", "name": "c2", "input": "input", "output": "b",
+                 "weights": "c2.w", "bias": "c2.b", "stride": 1, "padding": 1, "relu": false},
+                {"op": "add", "name": "add", "input": "a", "input2": "b",
+                 "output": "sum", "relu": false},
+                {"op": "gap", "name": "gap", "input": "sum", "output": "features"}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let mut id_w = vec![0i16; 9];
+        id_w[4] = q.quantize(1.0);
+        let mut half_w = vec![0i16; 9];
+        half_w[4] = q.quantize(0.5);
+        let g0 = import(
+            &doc,
+            vec![
+                ("c1.w".into(), Tensor::i16(vec![3, 3, 1, 1], id_w)),
+                ("c1.b".into(), Tensor::i32(vec![1], vec![0])),
+                ("c2.w".into(), Tensor::i16(vec![3, 3, 1, 1], half_w)),
+                ("c2.b".into(), Tensor::i32(vec![1], vec![0])),
+            ],
+        )
+        .unwrap();
+        let mut g = g0;
+        g.formats.set("b", narrow);
+        g.formats.set("sum", wide);
+
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) / 5.0).collect();
+        let program = crate::tcompiler::compile(&g, &Tarch::z7020_8x8()).unwrap();
+        let mut sim = Simulator::new(&program, &g);
+        let in_codes = q.quantize_slice(&x);
+        sim.run_codes(&in_codes).unwrap();
+        let sum: Vec<i16> = sim
+            .activation_codes()
+            .find(|(n, _)| *n == "sum")
+            .map(|(_, c)| c.to_vec())
+            .unwrap();
+        for (i, &xc) in in_codes.iter().enumerate() {
+            // branch a: identity at Q8.8; branch b: 0.5·x requantized to Q8.4
+            let a_code = xc;
+            let b_code = narrow.requant_acc((xc as i64) * 128, 16);
+            // Add aligns b to frac 8, sums, requantizes into Q12.6
+            let aligned = (a_code as i64) + ((b_code as i64) << 4);
+            assert_eq!(sum[i], wide.requant_acc(aligned, 8), "elem {i}");
+        }
     }
 
     #[test]

@@ -8,10 +8,20 @@
 //! per accumulator chunk, instruction overhead) lands in that band without
 //! per-layer fudge factors, and — more importantly for Fig. 5 — scales
 //! correctly with array size, image size, width and depth.
+//!
+//! §Bit-widths: the AXI bus is a fixed number of wire bits per beat
+//! (`dram_scalars_per_cycle × native data bits`), so DMA throughput in
+//! *scalars* scales inversely with each tensor's actual bit-width —
+//! narrow layers of a mixed-precision plan stream faster through the
+//! memory-bound im2col path.  Every cost helper therefore takes the
+//! relevant operand's bits; [`instr_cycles`] resolves them from the
+//! program's per-layer [`LayerMeta`] formats, and `estimate::estimate_cycles`
+//! resolves them straight from the graph — one implementation of each
+//! formula, shared by both paths.
 
 use crate::tarch::Tarch;
 
-use super::isa::Instr;
+use super::isa::{Instr, LayerMeta};
 
 /// Cycle cost model over a [`Tarch`].
 #[derive(Clone, Debug)]
@@ -24,9 +34,26 @@ impl CostModel {
         CostModel { tarch }
     }
 
-    /// DMA cycles to move `scalars` 16-bit scalars DRAM↔local.
+    /// Scalars moved per DMA cycle when the data is `bits` wide.
+    ///
+    /// The bus itself is fixed at `dram_scalars_per_cycle` scalars of the
+    /// tarch-native width per beat; a narrower scalar packs more per beat
+    /// (floored — fractional scalars don't split across beats), a wider
+    /// one is rejected upstream by `lower::compile`'s datapath check.
+    pub fn scalars_per_cycle(&self, bits: u8) -> usize {
+        let native = self.tarch.qformat.total_bits as usize;
+        let bus_bits = self.tarch.dram_scalars_per_cycle * native;
+        (bus_bits / bits.max(1) as usize).max(1)
+    }
+
+    /// DMA cycles to move `scalars` scalars of `bits`-wide data DRAM↔local.
+    pub fn dma_cycles_at(&self, scalars: usize, bits: u8) -> u64 {
+        scalars.div_ceil(self.scalars_per_cycle(bits)) as u64
+    }
+
+    /// DMA cycles at the tarch-native data width.
     pub fn dma_cycles(&self, scalars: usize) -> u64 {
-        scalars.div_ceil(self.tarch.dram_scalars_per_cycle) as u64
+        self.dma_cycles_at(scalars, self.tarch.qformat.total_bits)
     }
 
     /// Combine compute and DMA phases per the buffering mode.
@@ -38,76 +65,84 @@ impl CostModel {
         }
     }
 
-    /// Cycles of one instruction.
-    pub fn cycles(&self, i: &Instr) -> u64 {
+    /// One `LoadWeights` of a `kt×nt` tile whose weights are `wbits` wide:
+    /// kt column loads into the array; the tile streamed from DRAM.
+    pub fn load_weights_cycles(&self, kt: usize, nt: usize, wbits: u8) -> u64 {
+        let compute = kt as u64 + 1;
+        let dma = self.dma_cycles_at(kt * nt, wbits);
+        self.tarch.instr_overhead + self.combine(compute, dma)
+    }
+
+    /// One `MatMul` streaming `rows` im2col rows of `in_bits`-wide
+    /// activations: systolic rows + pipeline fill/drain of kt+nt; the
+    /// im2col gather stages rows×kt activation reads from DRAM.
+    pub fn matmul_cycles(&self, rows: usize, kt: usize, nt: usize, in_bits: u8) -> u64 {
+        let compute = rows as u64 + kt as u64 + nt as u64;
+        let dma = self.dma_cycles_at(rows * kt, in_bits);
+        self.tarch.instr_overhead + self.combine(compute, dma)
+    }
+
+    /// One `Writeback` of `rows×nt` results at `out_bits`: SIMD
+    /// bias+relu+requant one accumulator row per cycle; results stream out.
+    pub fn writeback_cycles(&self, rows: usize, nt: usize, out_bits: u8) -> u64 {
+        let compute = rows as u64 + 1;
+        let dma = self.dma_cycles_at(rows * nt, out_bits);
+        self.tarch.instr_overhead + self.combine(compute, dma)
+    }
+
+    /// One elementwise `AddAct` over `len` elements: SIMD `array_size`
+    /// lanes; two operand streams in (each at its own width) + one out.
+    pub fn addact_cycles(&self, len: usize, a_bits: u8, b_bits: u8, out_bits: u8) -> u64 {
+        let compute = (len as u64).div_ceil(self.tarch.array_size as u64);
+        let dma = self.dma_cycles_at(len, a_bits)
+            + self.dma_cycles_at(len, b_bits)
+            + self.dma_cycles_at(len, out_bits);
+        self.tarch.instr_overhead + self.combine(compute, dma)
+    }
+
+    /// One `MaxPool` producing `out_elems` outputs from `size²` windows:
+    /// size² comparisons per output element across the SIMD lanes.
+    pub fn maxpool_cycles(&self, out_elems: usize, size: usize, in_bits: u8, out_bits: u8) -> u64 {
         let r = self.tarch.array_size as u64;
-        let oh = self.tarch.instr_overhead;
-        match i {
-            Instr::LoadWeights { kt, nt, .. } => {
-                // kt column loads into the array; tile streamed from DRAM.
-                let compute = *kt as u64 + 1;
-                let dma = self.dma_cycles(kt * nt);
-                oh + self.combine(compute, dma)
-            }
-            Instr::MatMul { rows, kt, nt, .. } => {
-                // systolic: rows stream + pipeline fill/drain of kt+nt
-                let compute = *rows as u64 + *kt as u64 + *nt as u64;
-                // activations staged from DRAM (im2col gather): rows×kt reads
-                let dma = self.dma_cycles(rows * kt);
-                oh + self.combine(compute, dma)
-            }
-            Instr::Writeback { rows, nt, .. } => {
-                // SIMD bias+relu+requant one acc row per cycle; results out.
-                let compute = *rows as u64 + 1;
-                let dma = self.dma_cycles(rows * nt);
-                oh + self.combine(compute, dma)
-            }
-            Instr::AddAct { len, .. } => {
-                // SIMD array_size lanes; two reads + one write per element.
-                let compute = (*len as u64).div_ceil(r);
-                let dma = self.dma_cycles(3 * len);
-                oh + self.combine(compute, dma)
-            }
-            Instr::MaxPool { layer: _, size } => {
-                // charged per output element: size² comparisons / lane
-                // (the executor attaches the geometry; cost uses meta)
-                // NOTE: filled in via `instr_cycles` which has layer meta.
-                let _ = size;
-                oh // placeholder, see instr_cycles
-            }
-            Instr::Gap { .. } => oh, // placeholder, see instr_cycles
-        }
+        let compute = (out_elems as u64 * (size as u64) * (size as u64)).div_ceil(r);
+        let dma = self.dma_cycles_at(out_elems * size * size, in_bits)
+            + self.dma_cycles_at(out_elems, out_bits);
+        self.tarch.instr_overhead + self.combine(compute, dma)
+    }
+
+    /// One `Gap` reducing `in_elems` inputs: one read per element through
+    /// the SIMD adder tree (the [1, C] result is negligible next to it).
+    pub fn gap_cycles(&self, in_elems: usize, in_bits: u8) -> u64 {
+        let r = self.tarch.array_size as u64;
+        let compute = (in_elems as u64).div_ceil(r);
+        let dma = self.dma_cycles_at(in_elems, in_bits);
+        self.tarch.instr_overhead + self.combine(compute, dma)
     }
 }
 
-/// Full instruction cost, including pool/gap which need layer geometry.
-pub fn instr_cycles(model: &CostModel, i: &Instr, layers: &[super::isa::LayerMeta]) -> u64 {
-    let r = model.tarch.array_size as u64;
-    let oh = model.tarch.instr_overhead;
+/// Full instruction cost, resolving operand bit-widths from the layer's
+/// formats — the single pricing path shared by `lower`, `sim` and `trace`.
+pub fn instr_cycles(model: &CostModel, i: &Instr, layers: &[LayerMeta]) -> u64 {
+    let meta = &layers[i.layer() as usize];
+    let native = model.tarch.qformat.total_bits;
+    let in_bits = |idx: usize| meta.input_formats.get(idx).map(|f| f.total_bits).unwrap_or(native);
+    let out_bits = meta.output_format.total_bits;
     match i {
-        Instr::MaxPool { layer, size } => {
-            let meta = &layers[*layer as usize];
-            let out_elems: usize = meta
-                .geom
-                .as_ref()
-                .map(|g| g.out_h * g.out_w * g.cout)
-                .unwrap_or(0);
-            let compute = (out_elems as u64 * (*size as u64) * (*size as u64)).div_ceil(r);
-            let dma = model.dma_cycles(out_elems * size * size + out_elems);
-            oh + if model.tarch.double_buffered { compute.max(dma) } else { compute + dma }
+        Instr::LoadWeights { kt, nt, .. } => {
+            let wbits = meta.weight_format.map(|f| f.total_bits).unwrap_or(native);
+            model.load_weights_cycles(*kt, *nt, wbits)
         }
-        Instr::Gap { layer } => {
-            let meta = &layers[*layer as usize];
-            let in_elems: usize = meta
-                .geom
-                .as_ref()
-                .map(|g| g.in_h * g.in_w * g.cin)
-                .unwrap_or(0);
-            let compute = (in_elems as u64).div_ceil(r);
-            let dma = model.dma_cycles(in_elems);
-            oh + if model.tarch.double_buffered { compute.max(dma) } else { compute + dma }
+        Instr::MatMul { rows, kt, nt, .. } => model.matmul_cycles(*rows, *kt, *nt, in_bits(0)),
+        Instr::Writeback { rows, nt, .. } => model.writeback_cycles(*rows, *nt, out_bits),
+        Instr::AddAct { len, .. } => model.addact_cycles(*len, in_bits(0), in_bits(1), out_bits),
+        Instr::MaxPool { size, .. } => {
+            let out_elems = meta.geom.as_ref().map(|g| g.out_h * g.out_w * g.cout).unwrap_or(0);
+            model.maxpool_cycles(out_elems, *size, in_bits(0), out_bits)
         }
-        other => model.cycles(other),
+        Instr::Gap { .. } => {
+            let in_elems = meta.geom.as_ref().map(|g| g.in_h * g.in_w * g.cin).unwrap_or(0);
+            model.gap_cycles(in_elems, in_bits(0))
+        }
     }
 }
 
@@ -131,15 +166,31 @@ mod tests {
     }
 
     #[test]
+    fn narrow_data_packs_more_scalars_per_beat() {
+        let m = model(); // 1 scalar/cycle at 16 bits
+        assert_eq!(m.scalars_per_cycle(16), 1);
+        assert_eq!(m.scalars_per_cycle(12), 1); // floored: 16/12 → 1
+        assert_eq!(m.scalars_per_cycle(8), 2);
+        assert_eq!(m.scalars_per_cycle(4), 4);
+        assert_eq!(m.dma_cycles_at(64, 4), 16);
+        assert_eq!(m.dma_cycles_at(64, 16), 64);
+    }
+
+    #[test]
     fn matmul_cost_scales_with_rows() {
         let m = model();
-        let small = m.cycles(&Instr::MatMul {
-            layer: 0, m0: 0, rows: 64, k0: 0, kt: 12, n0: 0, nt: 12, accumulate: false,
-        });
-        let big = m.cycles(&Instr::MatMul {
-            layer: 0, m0: 0, rows: 640, k0: 0, kt: 12, n0: 0, nt: 12, accumulate: false,
-        });
+        let small = m.matmul_cycles(64, 12, 12, 16);
+        let big = m.matmul_cycles(640, 12, 12, 16);
         assert!(big > 8 * small / 2, "{small} vs {big}");
+    }
+
+    #[test]
+    fn matmul_cost_drops_with_narrow_activations() {
+        let m = model();
+        // memory-bound regime: rows×kt DMA dominates
+        let wide = m.matmul_cycles(640, 12, 12, 16);
+        let narrow = m.matmul_cycles(640, 12, 12, 4);
+        assert!(narrow < wide, "{narrow} vs {wide}");
     }
 
     #[test]
@@ -149,14 +200,15 @@ mod tests {
         let serial = CostModel::new(t.clone());
         t.double_buffered = true;
         let overlapped = CostModel::new(t);
-        let i = Instr::MatMul { layer: 0, m0: 0, rows: 256, k0: 0, kt: 12, n0: 0, nt: 12, accumulate: true };
-        assert!(overlapped.cycles(&i) <= serial.cycles(&i));
+        assert!(overlapped.matmul_cycles(256, 12, 12, 16) <= serial.matmul_cycles(256, 12, 12, 16));
     }
 
     #[test]
     fn load_weights_charges_dma() {
         let m = model();
-        let c = m.cycles(&Instr::LoadWeights { layer: 0, k0: 0, kt: 12, n0: 0, nt: 12 });
+        let c = m.load_weights_cycles(12, 12, 16);
         assert!(c >= 12 + m.tarch.instr_overhead);
+        // narrow weights stream faster
+        assert!(m.load_weights_cycles(12, 12, 4) <= c);
     }
 }

@@ -4,7 +4,9 @@
 //! same instruction costs WITHOUT materializing the instruction stream
 //! (which allocates tens of MB for the big Fig. 5 configs).  Guaranteed
 //! equal to `compile(...).est_total_cycles` — asserted by tests here and
-//! exercised by every DSE sweep.
+//! exercised by every DSE sweep.  All per-instruction formulas live in
+//! [`CostModel`]; this module only resolves each layer's operand formats
+//! from the graph and replays the schedule.
 
 use anyhow::Result;
 
@@ -12,16 +14,28 @@ use crate::graph::{Graph, Op};
 use crate::tarch::Tarch;
 
 use super::cost::CostModel;
-use super::isa::{ConvGeom, Instr};
+use super::isa::ConvGeom;
 
 /// Per-layer + total cycle estimate, no instruction materialization.
 pub fn estimate_cycles(g: &Graph, tarch: &Tarch) -> Result<(u64, Vec<u64>)> {
     tarch.validate()?;
+    // same datapath-width guard as `lower::compile` — the "guaranteed
+    // equal" contract includes agreeing on what is rejected
+    if g.max_datapath_bits() > tarch.qformat.total_bits {
+        anyhow::bail!(
+            "graph uses {}-bit tensors but tarch '{}' has a {}-bit datapath",
+            g.max_datapath_bits(),
+            tarch.name,
+            tarch.qformat.total_bits
+        );
+    }
     let model = CostModel::new(tarch.clone());
     let r = tarch.array_size;
     let mut per_layer = Vec::with_capacity(g.ops.len());
 
     for op in &g.ops {
+        let out_bits = g.formats.get(op.output()).total_bits;
+        let in_bits = g.formats.get(op.inputs()[0]).total_bits;
         let cycles = match op {
             Op::Conv2d { input, output, weights, stride, padding, .. } => {
                 let ins = g.shape(input)?;
@@ -33,7 +47,10 @@ pub fn estimate_cycles(g: &Graph, tarch: &Tarch) -> Result<(u64, Vec<u64>)> {
                     stride: *stride, padding: *padding,
                     out_h: outs[1], out_w: outs[2], cout: outs[3],
                 };
-                matmul_schedule_cycles(&model, &geom, r, tarch.accumulator_depth)
+                let wbits = g.formats.get(weights).total_bits;
+                matmul_schedule_cycles(
+                    &model, &geom, r, tarch.accumulator_depth, wbits, in_bits, out_bits,
+                )
             }
             Op::Dense { weights, .. } => {
                 let w = g.weight(weights)?;
@@ -42,19 +59,22 @@ pub fn estimate_cycles(g: &Graph, tarch: &Tarch) -> Result<(u64, Vec<u64>)> {
                     kh: 1, kw: 1, stride: 1, padding: 0,
                     out_h: 1, out_w: 1, cout: w.shape[1],
                 };
-                matmul_schedule_cycles(&model, &geom, r, tarch.accumulator_depth)
+                let wbits = g.formats.get(weights).total_bits;
+                matmul_schedule_cycles(
+                    &model, &geom, r, tarch.accumulator_depth, wbits, in_bits, out_bits,
+                )
             }
-            Op::Add { output, .. } => {
+            Op::Add { input2, output, .. } => {
                 let len: usize = g.shape(output)?.iter().product();
-                model.cycles(&Instr::AddAct { layer: 0, len, relu: true })
+                model.addact_cycles(len, in_bits, g.formats.get(input2).total_bits, out_bits)
             }
             Op::MaxPool { output, size, .. } => {
                 let outs = g.shape(output)?;
-                pool_cycles(&model, outs[1] * outs[2] * outs[3], *size)
+                model.maxpool_cycles(outs[1] * outs[2] * outs[3], *size, in_bits, out_bits)
             }
             Op::Gap { input, .. } => {
                 let ins = g.shape(input)?;
-                gap_cycles(&model, ins[1] * ins[2] * ins[3])
+                model.gap_cycles(ins[1] * ins[2] * ins[3], in_bits)
             }
             Op::Relu { name, .. } => {
                 anyhow::bail!("standalone relu '{name}': run graph::simplify first")
@@ -66,7 +86,15 @@ pub fn estimate_cycles(g: &Graph, tarch: &Tarch) -> Result<(u64, Vec<u64>)> {
 }
 
 /// Mirror of `lower::schedule_matmul`'s loop structure, cost-only.
-fn matmul_schedule_cycles(model: &CostModel, geom: &ConvGeom, r: usize, acc_depth: usize) -> u64 {
+fn matmul_schedule_cycles(
+    model: &CostModel,
+    geom: &ConvGeom,
+    r: usize,
+    acc_depth: usize,
+    wbits: u8,
+    in_bits: u8,
+    out_bits: u8,
+) -> u64 {
     let (m, k, n) = (geom.m(), geom.k(), geom.n());
     let chunk = acc_depth.min(m).max(1);
     let mut total = 0u64;
@@ -79,13 +107,11 @@ fn matmul_schedule_cycles(model: &CostModel, geom: &ConvGeom, r: usize, acc_dept
             let mut k0 = 0;
             while k0 < k {
                 let kt = r.min(k - k0);
-                total += model.cycles(&Instr::LoadWeights { layer: 0, k0, kt, n0, nt });
-                total += model.cycles(&Instr::MatMul {
-                    layer: 0, m0, rows, k0, kt, n0, nt, accumulate: k0 > 0,
-                });
+                total += model.load_weights_cycles(kt, nt, wbits);
+                total += model.matmul_cycles(rows, kt, nt, in_bits);
                 k0 += kt;
             }
-            total += model.cycles(&Instr::Writeback { layer: 0, m0, rows, n0, nt, relu: true });
+            total += model.writeback_cycles(rows, nt, out_bits);
             n0 += nt;
         }
         m0 += rows;
@@ -93,28 +119,11 @@ fn matmul_schedule_cycles(model: &CostModel, geom: &ConvGeom, r: usize, acc_dept
     total
 }
 
-/// MaxPool cost, matching `cost::instr_cycles`'s formula.
-fn pool_cycles(model: &CostModel, out_elems: usize, size: usize) -> u64 {
-    let r = model.tarch.array_size as u64;
-    let oh = model.tarch.instr_overhead;
-    let compute = (out_elems as u64 * (size as u64) * (size as u64)).div_ceil(r);
-    let dma = model.dma_cycles(out_elems * size * size + out_elems);
-    oh + if model.tarch.double_buffered { compute.max(dma) } else { compute + dma }
-}
-
-/// Gap cost, matching `cost::instr_cycles`'s formula.
-fn gap_cycles(model: &CostModel, in_elems: usize) -> u64 {
-    let r = model.tarch.array_size as u64;
-    let oh = model.tarch.instr_overhead;
-    let compute = (in_elems as u64).div_ceil(r);
-    let dma = model.dma_cycles(in_elems);
-    oh + if model.tarch.double_buffered { compute.max(dma) } else { compute + dma }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dse::{build_backbone_graph, BackboneSpec};
+    use crate::fixed::QFormat;
     use crate::tcompiler::compile;
 
     #[test]
@@ -135,6 +144,32 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn estimate_equals_full_compile_under_mixed_formats() {
+        // per-tensor overrides must flow identically through both paths
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let mut g = build_backbone_graph(&spec, 3).unwrap();
+        g.formats.set("b0.conv1.w", QFormat::new(4, 2));
+        g.formats.set("b0.a1", QFormat::new(8, 4));
+        g.formats.set("b1.out", QFormat::new(12, 6));
+        let tarch = Tarch::z7020_8x8();
+        let p = compile(&g, &tarch).unwrap();
+        let (total, per_layer) = estimate_cycles(&g, &tarch).unwrap();
+        assert_eq!(total, p.est_total_cycles);
+        for (e, l) in per_layer.iter().zip(&p.layers) {
+            assert_eq!(*e, l.est_cycles, "layer {}", l.name);
+        }
+        // and the narrowed tensors actually made it cheaper
+        let base = build_backbone_graph(&spec, 3).unwrap();
+        let (base_total, _) = estimate_cycles(&base, &tarch).unwrap();
+        assert!(total < base_total, "{total} vs {base_total}");
+        // over-wide graphs are rejected exactly like compile() rejects them
+        let mut narrow_tarch = tarch.clone();
+        narrow_tarch.qformat = QFormat::new(8, 4);
+        assert!(estimate_cycles(&base, &narrow_tarch).is_err());
+        assert!(compile(&base, &narrow_tarch).is_err());
     }
 
     #[test]

@@ -68,6 +68,25 @@ pub struct LayerMeta {
     /// Static cycle estimate from the cost model.
     pub est_cycles: u64,
     pub macs: u64,
+    /// Format of each input activation (parallel to `inputs`).
+    pub input_formats: Vec<QFormat>,
+    /// Format of the output activation buffer.
+    pub output_format: QFormat,
+    /// Format of the weight tensor (conv/dense only).
+    pub weight_format: Option<QFormat>,
+    /// Fractional bits of the stored bias codes (conv/dense only; biases
+    /// stay at the graph base format and are shifted to the accumulator
+    /// scale by the SIMD writeback).
+    pub bias_frac: u8,
+}
+
+impl LayerMeta {
+    /// Fractional bits of this layer's matmul accumulator: input fraction
+    /// plus weight fraction (a code×code product sums the exponents).
+    pub fn acc_frac(&self) -> u8 {
+        let inf = self.input_formats.first().map(|f| f.frac_bits).unwrap_or(0);
+        inf + self.weight_format.map(|f| f.frac_bits).unwrap_or(0)
+    }
 }
 
 /// One accelerator instruction.
@@ -127,7 +146,13 @@ pub enum TensorSlot {
 pub struct Program {
     pub name: String,
     pub tarch: Tarch,
+    /// The graph's *base* format (tensors without a per-layer override);
+    /// per-layer formats live in [`LayerMeta`].
     pub qformat: QFormat,
+    /// Format of the graph input activation (what `run_f32` quantizes to).
+    pub input_format: QFormat,
+    /// Format of the graph output activation (what results dequantize from).
+    pub output_format: QFormat,
     pub instrs: Vec<Instr>,
     pub layers: Vec<LayerMeta>,
     pub tensors: Vec<TensorSlot>,

@@ -19,8 +19,17 @@ pub fn compile(g: &Graph, tarch: &Tarch) -> Result<Program> {
     if g.input_shape[0] != 1 {
         bail!("accelerator programs are batch-1 (got N={})", g.input_shape[0]);
     }
-    if g.qformat != tarch.qformat {
-        bail!("graph qformat {} != tarch qformat {}", g.qformat, tarch.qformat);
+    // The datapath (PE operand registers, local memory lanes, AXI beats) is
+    // sized for the tarch-native width; any per-tensor format up to that
+    // width runs on it, wider cannot.
+    let native_bits = tarch.qformat.total_bits;
+    if g.max_datapath_bits() > native_bits {
+        bail!(
+            "graph uses {}-bit tensors but tarch '{}' has a {}-bit datapath",
+            g.max_datapath_bits(),
+            tarch.name,
+            native_bits
+        );
     }
 
     let mut tensors: Vec<TensorSlot> = Vec::new();
@@ -42,6 +51,30 @@ pub fn compile(g: &Graph, tarch: &Tarch) -> Result<Program> {
     let model = CostModel::new(tarch.clone());
     let mut instrs: Vec<Instr> = Vec::new();
     let mut layers: Vec<LayerMeta> = Vec::new();
+
+    // Per-layer formats resolved once from the graph's per-tensor table;
+    // the struct-update base for every arm below.
+    let format_meta = |op: &Op| -> LayerMeta {
+        let (weight_format, bias_frac) = match op {
+            Op::Conv2d { weights, bias, .. } | Op::Dense { weights, bias, .. } => {
+                (Some(g.formats.get(weights)), g.formats.get(bias).frac_bits)
+            }
+            _ => (None, g.formats.base().frac_bits),
+        };
+        LayerMeta {
+            name: String::new(),
+            kind: LayerKind::Add,
+            inputs: Vec::new(),
+            output: 0,
+            geom: None,
+            est_cycles: 0,
+            macs: 0,
+            input_formats: op.inputs().iter().map(|n| g.formats.get(n)).collect(),
+            output_format: g.formats.get(op.output()),
+            weight_format,
+            bias_frac,
+        }
+    };
 
     for op in &g.ops {
         let layer_id = layers.len() as u32;
@@ -65,7 +98,8 @@ pub fn compile(g: &Graph, tarch: &Tarch) -> Result<Program> {
                 LayerMeta {
                     name: name.clone(), kind: LayerKind::Conv,
                     inputs: vec![in_id], output: out_id,
-                    geom: Some(geom), est_cycles: 0, macs,
+                    geom: Some(geom), macs,
+                    ..format_meta(op)
                 }
             }
             Op::Dense { name, input, output, weights, relu, .. } => {
@@ -85,7 +119,8 @@ pub fn compile(g: &Graph, tarch: &Tarch) -> Result<Program> {
                 LayerMeta {
                     name: name.clone(), kind: LayerKind::Dense,
                     inputs: vec![in_id], output: out_id,
-                    geom: Some(geom), est_cycles: 0, macs,
+                    geom: Some(geom), macs,
+                    ..format_meta(op)
                 }
             }
             Op::Add { name, input, input2, output, relu } => {
@@ -98,7 +133,7 @@ pub fn compile(g: &Graph, tarch: &Tarch) -> Result<Program> {
                 LayerMeta {
                     name: name.clone(), kind: LayerKind::Add,
                     inputs: vec![a, b], output: out_id,
-                    geom: None, est_cycles: 0, macs: 0,
+                    ..format_meta(op)
                 }
             }
             Op::MaxPool { name, input, output, size } => {
@@ -115,7 +150,8 @@ pub fn compile(g: &Graph, tarch: &Tarch) -> Result<Program> {
                 LayerMeta {
                     name: name.clone(), kind: LayerKind::MaxPool,
                     inputs: vec![in_id], output: out_id,
-                    geom: Some(geom), est_cycles: 0, macs: 0,
+                    geom: Some(geom),
+                    ..format_meta(op)
                 }
             }
             Op::Gap { name, input, output } => {
@@ -132,7 +168,8 @@ pub fn compile(g: &Graph, tarch: &Tarch) -> Result<Program> {
                 LayerMeta {
                     name: name.clone(), kind: LayerKind::Gap,
                     inputs: vec![in_id], output: out_id,
-                    geom: Some(geom), est_cycles: 0, macs: 0,
+                    geom: Some(geom),
+                    ..format_meta(op)
                 }
             }
             Op::Relu { name, .. } => {
@@ -173,7 +210,9 @@ pub fn compile(g: &Graph, tarch: &Tarch) -> Result<Program> {
     Ok(Program {
         name: format!("{}@{}", g.name, tarch.name),
         tarch: tarch.clone(),
-        qformat: g.qformat,
+        qformat: g.formats.base(),
+        input_format: g.formats.get(&g.input_name),
+        output_format: g.formats.get(&g.output_name),
         instrs,
         layers,
         tensors,
@@ -349,10 +388,41 @@ mod tests {
     }
 
     #[test]
-    fn qformat_mismatch_rejected() {
+    fn wider_than_datapath_rejected() {
+        // a 16-bit graph cannot run on an 8-bit datapath...
         let g = tiny_graph(8, 3, 4, 1);
         let mut t = Tarch::z7020_8x8();
         t.qformat = crate::fixed::QFormat::new(8, 4);
         assert!(compile(&g, &t).is_err());
+    }
+
+    #[test]
+    fn narrower_than_datapath_accepted() {
+        // ...but narrower per-tensor formats run fine on a 16-bit one.
+        let mut g = tiny_graph(8, 3, 4, 1);
+        g.formats.set("a1", crate::fixed::QFormat::new(8, 4));
+        let p = compile(&g, &Tarch::z7020_8x8()).unwrap();
+        // the conv layer's output format is the override
+        assert_eq!(p.layers[0].output_format, crate::fixed::QFormat::new(8, 4));
+        assert_eq!(p.layers[1].input_formats[0], crate::fixed::QFormat::new(8, 4));
+        // and the narrower writeback stream costs no more cycles
+        let base = compile(&tiny_graph(8, 3, 4, 1), &Tarch::z7020_8x8()).unwrap();
+        assert!(p.est_total_cycles <= base.est_total_cycles);
+    }
+
+    #[test]
+    fn layer_formats_resolved_from_graph() {
+        let g = tiny_graph(8, 3, 4, 1);
+        let p = compile(&g, &Tarch::z7020_8x8()).unwrap();
+        let q = crate::fixed::QFormat::default();
+        for l in &p.layers {
+            assert!(l.input_formats.iter().all(|&f| f == q), "{}", l.name);
+            assert_eq!(l.output_format, q, "{}", l.name);
+        }
+        assert_eq!(p.layers[0].weight_format, Some(q));
+        assert_eq!(p.layers[0].bias_frac, 8);
+        assert_eq!(p.layers[0].acc_frac(), 16);
+        assert_eq!(p.input_format, q);
+        assert_eq!(p.output_format, q);
     }
 }

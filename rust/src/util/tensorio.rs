@@ -82,6 +82,14 @@ impl Tensor {
         }
     }
 
+    /// Mutable i16 view (in-place weight requantization by precision plans).
+    pub fn as_i16_mut(&mut self) -> Result<&mut [i16]> {
+        match &mut self.data {
+            Data::I16(v) => Ok(v),
+            other => bail!("expected i16 tensor, got {:?}", dtype_name(other)),
+        }
+    }
+
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             Data::I32(v) => Ok(v),

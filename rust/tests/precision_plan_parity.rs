@@ -1,0 +1,152 @@
+//! Precision-plan parity: the per-layer-format refactor must not move a
+//! single bit of the legacy path.
+//!
+//! * A uniform all-16-bit (Q8.8) [`PrecisionPlan`] applied to a graph is
+//!   bit-exact with the plain unplanned graph — same output codes, same
+//!   cycles, same instruction count — i.e. the pre-refactor global-Q8.8
+//!   simulator behaviour is the uniform special case of the new datapath.
+//! * Cross-format requantization at a layer boundary is exactly
+//!   `QFormat::requant_code` of the uniform result (narrowing), and
+//!   widening a boundary format is lossless.
+
+use pefsl::dse::BackboneSpec;
+use pefsl::fixed::QFormat;
+use pefsl::quant::{PlanCalibrator, PrecisionPlan, QuantPolicy};
+use pefsl::sim::Simulator;
+use pefsl::tarch::Tarch;
+use pefsl::tcompiler::compile;
+use pefsl::util::Prng;
+
+fn images(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Prng::new(seed);
+    (0..n).map(|_| (0..elems).map(|_| rng.f32()).collect()).collect()
+}
+
+#[test]
+fn uniform_16bit_plan_is_bit_exact_with_legacy_path() {
+    // strided=false exercises conv + add + maxpool + gap layers
+    let spec = BackboneSpec {
+        image_size: 12,
+        feature_maps: 4,
+        strided: false,
+        ..BackboneSpec::headline()
+    };
+    let g_legacy = spec.build_graph(11).unwrap();
+    let plan = PrecisionPlan::uniform(&g_legacy, QFormat::default());
+    assert_eq!(plan.max_bits(), 16);
+    let g_planned = plan.applied(&g_legacy).unwrap();
+
+    let tarch = Tarch::z7020_8x8();
+    let p_legacy = compile(&g_legacy, &tarch).unwrap();
+    let p_planned = compile(&g_planned, &tarch).unwrap();
+    assert_eq!(p_legacy.est_total_cycles, p_planned.est_total_cycles);
+
+    let mut sim_a = Simulator::new(&p_legacy, &g_legacy);
+    let mut sim_b = Simulator::new(&p_planned, &g_planned);
+    for img in images(4, 12 * 12 * 3, 3) {
+        let ra = sim_a.run_f32(&img).unwrap();
+        let rb = sim_b.run_f32(&img).unwrap();
+        assert_eq!(ra.output_codes, rb.output_codes, "outputs must be bit-exact");
+        assert_eq!(ra.cycles, rb.cycles);
+        assert_eq!(ra.instr_count, rb.instr_count);
+    }
+}
+
+#[test]
+fn narrowed_output_boundary_is_exact_requantization() {
+    // Narrow ONLY the final layer's output format: everything upstream is
+    // untouched, so the planned output must equal requant_code(legacy).
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    let g = spec.build_graph(5).unwrap();
+    let base = QFormat::default();
+    let narrow = QFormat::new(8, 4);
+    let mut plan = PrecisionPlan::uniform(&g, base);
+    plan.layers.last_mut().unwrap().activations = narrow;
+    let g_narrow = plan.applied(&g).unwrap();
+
+    let tarch = Tarch::z7020_8x8();
+    let p0 = compile(&g, &tarch).unwrap();
+    let p1 = compile(&g_narrow, &tarch).unwrap();
+    assert_eq!(p1.output_format, narrow);
+
+    let mut s0 = Simulator::new(&p0, &g);
+    let mut s1 = Simulator::new(&p1, &g_narrow);
+    for img in images(3, 8 * 8 * 3, 9) {
+        let legacy = s0.run_f32(&img).unwrap().output_codes;
+        let planned = s1.run_f32(&img).unwrap().output_codes;
+        for (l, p) in legacy.iter().zip(&planned) {
+            assert_eq!(*p, narrow.requant_code(*l, base));
+        }
+    }
+}
+
+#[test]
+fn coarser_intermediate_format_bounds_feature_drift() {
+    // One mid-layer buffer at 2 fewer fractional bits (Q10.6-in-16): the
+    // boundary requant rounds to a 4× coarser grid, and that half-ulp
+    // error — amplified by the downstream convs and contracted by the GAP
+    // — must stay a small, bounded feature drift.
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    let g = spec.build_graph(6).unwrap();
+    let base = QFormat::default();
+    let mut plan = PrecisionPlan::uniform(&g, base);
+    // widen the first conv's output to Q12.6-in-16 (more integer range,
+    // fewer frac bits than Q8.8 → its values round to the coarser grid)
+    plan.layers[0].activations = QFormat::new(16, 6);
+    let g_mixed = plan.applied(&g).unwrap();
+    let tarch = Tarch::z7020_8x8();
+    let p0 = compile(&g, &tarch).unwrap();
+    let p1 = compile(&g_mixed, &tarch).unwrap();
+    let mut s0 = Simulator::new(&p0, &g);
+    let mut s1 = Simulator::new(&p1, &g_mixed);
+    let img = images(1, 8 * 8 * 3, 2).pop().unwrap();
+    let a = s0.run_f32(&img).unwrap().output_f32;
+    let b = s1.run_f32(&img).unwrap().output_f32;
+    // one layer at 2 fewer frac bits: drift bounded by a handful of
+    // coarse (1/64) LSBs propagated through the downstream blocks
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() <= 16.0 / 64.0 + 1e-6, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn calibrated_plan_runs_end_to_end_and_narrow_layers_cut_cycles() {
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    let g = spec.build_graph(7).unwrap();
+    let tarch = Tarch::z7020_8x8();
+    let imgs = images(3, 8 * 8 * 3, 4);
+    let cal = PlanCalibrator::observe(&g, &tarch, &imgs, QuantPolicy::MinMax).unwrap();
+
+    let p16 = cal.plan_uniform_bits(16).unwrap();
+    let p8 = cal.plan_uniform_bits(8).unwrap();
+    let g16 = p16.applied(&g).unwrap();
+    let g8 = p8.applied(&g).unwrap();
+    let c16 = compile(&g16, &tarch).unwrap().est_total_cycles;
+    let c8 = compile(&g8, &tarch).unwrap().est_total_cycles;
+    assert!(c8 < c16, "8-bit plan must stream faster: {c8} vs {c16}");
+
+    let r = pefsl::sim::simulate_f32(&g8, &tarch, &imgs[0]).unwrap();
+    assert!(r.output_f32.iter().all(|v| v.is_finite()));
+    assert_eq!(r.output_codes.len(), g.feature_dim);
+}
+
+#[test]
+fn fully_narrowed_plan_compiles_on_matching_narrow_hardware() {
+    // A plan whose every datapath tensor is 8-bit must fit an 8-bit-native
+    // tarch — the DSE prices that narrow fabric, so the compiler must
+    // accept it (the i32 bias constants are not datapath scalars).
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    let g = spec.build_graph(8).unwrap();
+    let wide_tarch = Tarch::z7020_8x8();
+    let imgs = images(2, 8 * 8 * 3, 6);
+    let cal = PlanCalibrator::observe(&g, &wide_tarch, &imgs, QuantPolicy::MinMax).unwrap();
+    let g8 = cal.plan_uniform_bits(8).unwrap().applied(&g).unwrap();
+    assert_eq!(g8.max_datapath_bits(), 8);
+
+    let narrow_tarch = pefsl::dse::tarch_for_bits(&wide_tarch, 8);
+    assert_eq!(narrow_tarch.qformat.total_bits, 8);
+    let p = compile(&g8, &narrow_tarch).unwrap();
+    assert!(p.est_total_cycles > 0);
+    // but the original 16-bit graph still cannot run there
+    assert!(compile(&g, &narrow_tarch).is_err());
+}
