@@ -1,67 +1,220 @@
 //! Bench: cycle-accurate simulator throughput — how fast the L3 substrate
 //! simulates FPGA work (the §Perf target: simulate the 15 ms headline
-//! inference in far less than a second of host time), plus scaling across
-//! array sizes and network widths.
+//! inference in far less than a second of host time), the fast-path
+//! speedup over the scalar reference interpreter, the parallel engine
+//! pool, and the memoized mixed-precision search.
+//!
+//! Emits the repo's first machine-readable perf artifact, `BENCH_sim.json`
+//! (override the path with `PEFSL_BENCH_OUT`): frames/s, cycles/frame,
+//! speedup vs the reference interpreter, pooled-engine batch throughput,
+//! and naive-vs-memoized `pefsl mixed` wall time.  CI runs it in smoke
+//! mode (`PEFSL_BENCH_SMOKE=1`): a smaller workload and shorter measure
+//! windows, same assertions, so the optimized path is exercised on every
+//! push and the JSON trajectory never goes stale.
 //!
 //! Run: `cargo bench --bench sim_throughput`.
 
-use pefsl::dse::{build_backbone_graph, BackboneSpec};
+use std::time::Instant;
+
+use pefsl::dse::{build_backbone_graph, mixed_pareto_rows, BackboneSpec, MixedSearchConfig};
+use pefsl::engine::{EngineBuilder, InferRequest};
+use pefsl::json::{to_file, Value};
+use pefsl::sim::reference::ReferenceSimulator;
 use pefsl::sim::Simulator;
 use pefsl::tarch::Tarch;
 use pefsl::tcompiler::compile;
 use pefsl::util::bench::{bench, BenchConfig};
 
 fn main() {
-    let cfg = BenchConfig::quick();
+    let smoke = std::env::var("PEFSL_BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    let cfg = if smoke {
+        BenchConfig {
+            warmup: std::time::Duration::from_millis(30),
+            measure: std::time::Duration::from_millis(200),
+            min_iters: 2,
+            max_iters: 1_000,
+        }
+    } else {
+        BenchConfig::quick()
+    };
 
-    // Headline workload: ResNet-9/16fm @ 32×32 on 12×12 array.
-    let spec = BackboneSpec::headline();
+    // Headline workload: ResNet-9/16fm @ 32×32 on 12×12 array (smoke mode
+    // shrinks the net so CI stays fast; the JSON records which ran).
+    let spec = if smoke {
+        BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() }
+    } else {
+        BackboneSpec::headline()
+    };
     let g = build_backbone_graph(&spec, 7).unwrap();
     let tarch = Tarch::z7020_12x12();
     let program = compile(&g, &tarch).unwrap();
-    let input = vec![0.3f32; 32 * 32 * 3];
+    let elems: usize = spec.image_size * spec.image_size * 3;
+    let input = vec![0.3f32; elems];
 
-    let r = bench("sim/headline_resnet9_fm16_32x32", &cfg, || {
-        let mut sim = Simulator::new(&program, &g);
+    let mut report = Value::obj();
+    report.set("bench", "sim_throughput").set("mode", if smoke { "smoke" } else { "full" });
+
+    // --- 1. fast-path simulator throughput (persistent simulator) -------
+    let mut sim = Simulator::new(&program, &g);
+    let cycles_per_frame = sim.run_f32(&input).unwrap().cycles;
+    let fast = bench(&format!("sim/fast_{}", spec.name()), &cfg, || {
         std::hint::black_box(sim.run_f32(&input).unwrap());
     });
     let modeled_ms = tarch.cycles_to_ms(program.est_total_cycles);
-    let ratio = modeled_ms / r.mean_ms();
+    let realtime = modeled_ms / fast.mean_ms();
     println!(
         "sim speed: {:.2} ms modeled FPGA time simulated in {:.2} ms host → {:.1}× realtime",
         modeled_ms,
-        r.mean_ms(),
-        ratio
+        fast.mean_ms(),
+        realtime
     );
+    let mut headline = Value::obj();
+    headline
+        .set("workload", spec.name())
+        .set("tarch", tarch.name.as_str())
+        .set("host_ms_per_frame", fast.mean_ms())
+        .set("frames_per_s", fast.per_second())
+        .set("cycles_per_frame", cycles_per_frame)
+        .set("modeled_ms_per_frame", modeled_ms)
+        .set("realtime_x", realtime);
+    report.set("headline", headline);
 
-    // Scaling: smaller array → more tiles → more instructions.
-    for array in [8usize, 12, 16] {
-        let mut t = Tarch::z7020_12x12();
-        t.array_size = array;
-        t.name = format!("z7020-{array}x{array}");
-        let p = compile(&g, &t).unwrap();
-        let g2 = g.clone();
-        bench(&format!("sim/array_{array}x{array}"), &cfg, || {
-            let mut sim = Simulator::new(&p, &g2);
-            std::hint::black_box(sim.run_f32(&input).unwrap());
-        });
+    // --- 2. speedup vs the scalar reference interpreter -----------------
+    let mut oracle = ReferenceSimulator::new(&program, &g);
+    // pin bit-exactness right here too: same outputs, same cycles
+    {
+        let a = sim.run_f32(&input).unwrap();
+        let b = oracle.run_f32(&input).unwrap();
+        assert_eq!(a.output_codes, b.output_codes, "fast path diverged from reference");
+        assert_eq!(a.cycles, b.cycles, "fast path cycles diverged from reference");
     }
-
-    // Width scaling (fm 4 → 16).
-    for fm in [4usize, 8, 16] {
-        let s = BackboneSpec { feature_maps: fm, ..spec };
-        let gw = build_backbone_graph(&s, 9).unwrap();
-        let p = compile(&gw, &tarch).unwrap();
-        bench(&format!("sim/width_fm{fm}"), &cfg, || {
-            let mut sim = Simulator::new(&p, &gw);
-            std::hint::black_box(sim.run_f32(&input).unwrap());
-        });
-    }
-
-    // Compiler throughput on the biggest Fig. 5 config.
-    let big = BackboneSpec { depth: 12, feature_maps: 64, strided: false, image_size: 84, head_classes: None };
-    bench("sim/compile_biggest_fig5_config", &cfg, || {
-        let gb = build_backbone_graph(&big, 1).unwrap();
-        std::hint::black_box(compile(&gb, &tarch).unwrap().est_total_cycles);
+    let slow = bench(&format!("sim/reference_{}", spec.name()), &cfg, || {
+        std::hint::black_box(oracle.run_f32(&input).unwrap());
     });
+    let kernel_speedup = slow.mean_ms() / fast.mean_ms();
+    println!("fast kernels: {kernel_speedup:.1}× over the reference interpreter");
+    let mut reference = Value::obj();
+    reference
+        .set("host_ms_per_frame", slow.mean_ms())
+        .set("speedup_fast_vs_reference", kernel_speedup);
+    report.set("reference", reference);
+
+    // --- 3. parallel engine pool: batch fan-out ------------------------
+    let batch: Vec<Vec<f32>> = (0..16).map(|i| vec![0.05 * (i + 1) as f32; elems]).collect();
+    let serial_engine =
+        EngineBuilder::new().graph(g.clone()).tarch(tarch.clone()).workers(1).build().unwrap();
+    // default pool size: whatever a default-built engine actually uses
+    let pooled_engine =
+        EngineBuilder::new().graph(g.clone()).tarch(tarch.clone()).build().unwrap();
+    let pool_workers = pooled_engine.workers();
+    // bit-exactness across pool sizes before timing anything
+    {
+        let a = serial_engine.infer(InferRequest::batch(batch.clone())).unwrap();
+        let b = pooled_engine.infer(InferRequest::batch(batch.clone())).unwrap();
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.features, y.features, "pooled batch diverged from serial");
+        }
+    }
+    let serial_b = bench("engine/batch16_workers1", &cfg, || {
+        std::hint::black_box(serial_engine.infer(InferRequest::batch(batch.clone())).unwrap());
+    });
+    let pooled_b = bench(&format!("engine/batch16_workers{pool_workers}"), &cfg, || {
+        std::hint::black_box(pooled_engine.infer(InferRequest::batch(batch.clone())).unwrap());
+    });
+    let pool_speedup = serial_b.mean_ms() / pooled_b.mean_ms();
+    println!("engine pool: {pool_workers} workers → {pool_speedup:.2}× on a 16-image batch");
+    let mut engine = Value::obj();
+    engine
+        .set("batch", 16usize)
+        .set("workers", pool_workers)
+        .set("ms_per_batch_serial", serial_b.mean_ms())
+        .set("ms_per_batch_pooled", pooled_b.mean_ms())
+        .set("frames_per_s_pooled", 16.0 * pooled_b.per_second())
+        .set("speedup_pool_vs_serial", pool_speedup);
+    report.set("engine", engine);
+
+    // --- 4. mixed-precision search: naive vs prefix-memoized ------------
+    let mixed_spec = if smoke {
+        BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() }
+    } else {
+        BackboneSpec { image_size: 16, feature_maps: 8, ..BackboneSpec::headline() }
+    };
+    let mixed_cfg = MixedSearchConfig {
+        widths: vec![4, 8, 16],
+        n_classes: 3,
+        shots: 1,
+        queries: 1,
+        calib_images: 3,
+        max_steps: if smoke { 2 } else { 4 },
+        ..Default::default()
+    };
+    let naive_cfg = MixedSearchConfig { memoize: false, ..mixed_cfg.clone() };
+    let t0 = Instant::now();
+    let naive_rows = mixed_pareto_rows(&mixed_spec, &tarch, &naive_cfg).unwrap();
+    let naive_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let memo_rows = mixed_pareto_rows(&mixed_spec, &tarch, &mixed_cfg).unwrap();
+    let memo_ms = t1.elapsed().as_secs_f64() * 1e3;
+    // the two trajectories must be identical, point for point
+    assert_eq!(naive_rows.len(), memo_rows.len(), "memoized search changed the trajectory");
+    for (a, b) in naive_rows.iter().zip(&memo_rows) {
+        assert_eq!(a.plan_bits, b.plan_bits, "{}: plan diverged", a.label);
+        assert_eq!(a.accuracy, b.accuracy, "{}: accuracy diverged", a.label);
+        assert_eq!(a.cycles, b.cycles, "{}: cycles diverged", a.label);
+    }
+    let search_speedup = naive_ms / memo_ms.max(1e-9);
+    println!(
+        "mixed search ({} rows): naive {naive_ms:.0} ms → memoized {memo_ms:.0} ms \
+         ({search_speedup:.1}×)",
+        memo_rows.len()
+    );
+    let mut mixed = Value::obj();
+    mixed
+        .set("workload", mixed_spec.name())
+        .set("rows_evaluated", memo_rows.len())
+        .set("naive_wall_ms", naive_ms)
+        .set("memoized_wall_ms", memo_ms)
+        .set("speedup_memoized_vs_naive", search_speedup);
+    report.set("mixed_search", mixed);
+
+    // --- 5. scaling sweeps (full mode only; they just take a while) -----
+    if !smoke {
+        for array in [8usize, 12, 16] {
+            let mut t = Tarch::z7020_12x12();
+            t.array_size = array;
+            t.name = format!("z7020-{array}x{array}");
+            let p = compile(&g, &t).unwrap();
+            let mut s = Simulator::new(&p, &g);
+            bench(&format!("sim/array_{array}x{array}"), &cfg, || {
+                std::hint::black_box(s.run_f32(&input).unwrap());
+            });
+        }
+        for fm in [4usize, 8, 16] {
+            let sw = BackboneSpec { feature_maps: fm, ..spec };
+            let gw = build_backbone_graph(&sw, 9).unwrap();
+            let p = compile(&gw, &tarch).unwrap();
+            let mut s = Simulator::new(&p, &gw);
+            bench(&format!("sim/width_fm{fm}"), &cfg, || {
+                std::hint::black_box(s.run_f32(&input).unwrap());
+            });
+        }
+        // Compiler throughput on the biggest Fig. 5 config.
+        let big = BackboneSpec {
+            depth: 12,
+            feature_maps: 64,
+            strided: false,
+            image_size: 84,
+            head_classes: None,
+        };
+        bench("sim/compile_biggest_fig5_config", &cfg, || {
+            let gb = build_backbone_graph(&big, 1).unwrap();
+            std::hint::black_box(compile(&gb, &tarch).unwrap().est_total_cycles);
+        });
+    }
+
+    let out = std::env::var("PEFSL_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".to_string());
+    to_file(&out, &report).expect("write BENCH_sim.json");
+    println!("wrote {out}");
 }

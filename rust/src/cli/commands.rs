@@ -60,13 +60,16 @@ pub fn demo(args: &Args) -> Result<i32> {
     let shots = args.get_usize("shots", 3)?;
     let backend_kind = args.get_str("backend", "sim");
 
-    let engine = Arc::new(
-        EngineBuilder::new()
-            .artifacts(artifacts_dir(args))
-            .backend(BackendKind::parse(backend_kind)?)
-            .tarch(tarch.clone())
-            .build()?,
-    );
+    let mut builder = EngineBuilder::new()
+        .artifacts(artifacts_dir(args))
+        .backend(BackendKind::parse(backend_kind)?)
+        .tarch(tarch.clone());
+    if let Some(n) = args.get("workers") {
+        let n: usize =
+            n.parse().map_err(|_| anyhow::anyhow!("--workers expects an integer, got '{n}'"))?;
+        builder = builder.workers(n);
+    }
+    let engine = Arc::new(builder.build()?);
     let cfg = DemoConfig {
         tarch: tarch.clone(),
         max_frames: frames,
@@ -315,6 +318,7 @@ pub fn mixed(args: &Args) -> Result<i32> {
             Some(v) => v.parse::<f64>().map_err(|_| anyhow::anyhow!("--max-drop expects a number"))?,
             None => defaults.max_accuracy_drop,
         },
+        memoize: !args.has("no-memoize"),
         ..defaults
     };
     // a small backbone by default: the accuracy axis simulates every image

@@ -5,7 +5,7 @@
 //! pefsl demo       --frames 64 --tarch z7020-12x12 [--backend sim|pjrt]
 //! pefsl dse        --test-size 32 [--tarch NAME] [--json PATH]
 //! pefsl quant      --bits 4,8,12,16 [--percentile P] [--episodes N] [--json PATH]
-//! pefsl mixed      --widths 4,6,8,12,16 [--steps N] [--max-drop D] [--json PATH]
+//! pefsl mixed      --widths 4,6,8,12,16 [--steps N] [--max-drop D] [--no-memoize] [--json PATH]
 //! pefsl compile    [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl simulate   [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl resources  [--tarch NAME]
@@ -79,11 +79,13 @@ pub fn usage() -> String {
      \x20 --artifacts DIR    artifact directory (default: ./artifacts)\n\
      \x20 --frames N         demo frames (default 64)\n\
      \x20 --backend B        sim | pjrt (default sim)\n\
+     \x20 --workers N        demo engine worker-pool size (default: cores, ≤4)\n\
      \x20 --test-size N      dse deployed resolution: 32 | 84\n\
      \x20 --bits LIST        quant sweep bit-widths, e.g. 4,8,12,16\n\
      \x20 --widths LIST      mixed-search candidate widths (default 4,6,8,12,16)\n\
      \x20 --steps N          mixed-search max accepted narrowing steps (default 6)\n\
      \x20 --max-drop D       mixed-search accuracy-drop budget vs 16-bit (default 0.05)\n\
+     \x20 --no-memoize       mixed-search: disable prefix-checkpoint reuse (slow path)\n\
      \x20 --classes N --calib N --image-size N --fm N   mixed-search workload\n\
      \x20 --percentile P     quant calibration percentile (default: min/max)\n\
      \x20 --episodes N --ways W --shots S --queries Q   eval protocol\n\

@@ -10,6 +10,22 @@
 //! mixed-precision backbone features → NCM enroll/classify through the
 //! same [`Session`] API the demonstrator serves.
 //!
+//! §Prefix memoization.  The greedy mutates one layer's format at a time,
+//! so a candidate's layers *before* the changed one are bit-identical to
+//! the current baseline's — same formats, same weight codes, same
+//! activation codes.  With [`MixedSearchConfig::memoize`] (the default)
+//! the search therefore simulates each baseline image **once per round**,
+//! capturing a [`SimCheckpoint`] before every conv/dense layer, and each
+//! candidate resumes mid-graph via [`Simulator::run_from`] — only the
+//! changed suffix is re-simulated, turning O(layers²·images) full-layer
+//! work into ~O(layers·images) per round.  Resumption is gated on an
+//! explicit per-layer format-equality check between the candidate's and
+//! the baseline's compiled programs (anything else falls back to a full
+//! run), and an accepted candidate's compiled plan rides into the next
+//! round's baseline so every plan is applied + compiled at most once.
+//! Naive and memoized searches are bit-identical (pinned by tests here
+//! and the golden suite).
+//!
 //! Each evaluated point reports the full hardware bill: cycles/latency
 //! from the bit-width-aware cost model (narrow layers stream faster over
 //! the fixed AXI bus), DSP/BRAM/LUT from
@@ -19,7 +35,10 @@
 //! same widest-layer fabric, toggling at the plan's cycle-weighted
 //! *effective* bits.
 //!
-//! Surfaced as `pefsl mixed` in the CLI and `benches/mixed_pareto.rs`.
+//! Surfaced as `pefsl mixed` in the CLI (`--no-memoize` reverts to the
+//! naive path) and `benches/mixed_pareto.rs` / `benches/sim_throughput.rs`.
+
+use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
@@ -28,9 +47,9 @@ use crate::graph::{Graph, Op};
 use crate::power::{self, PowerReport};
 use crate::quant::{PlanCalibrator, PrecisionPlan, QuantPolicy, MAX_BITS, MIN_BITS};
 use crate::resources::{self, ResourceReport};
-use crate::sim::Simulator;
+use crate::sim::{SimCheckpoint, Simulator};
 use crate::tarch::Tarch;
-use crate::tcompiler::compile;
+use crate::tcompiler::{compile, Program};
 use crate::util::Prng;
 
 use super::builder::{build_backbone_graph, BackboneSpec};
@@ -79,6 +98,9 @@ pub struct MixedSearchConfig {
     pub max_accuracy_drop: f64,
     /// Compute duty cycle used for the power column.
     pub duty: f64,
+    /// Resume candidates from cached baseline prefixes (bit-identical to
+    /// the naive path; turn off to measure or cross-check it).
+    pub memoize: bool,
 }
 
 impl Default for MixedSearchConfig {
@@ -95,6 +117,7 @@ impl Default for MixedSearchConfig {
             max_steps: 6,
             max_accuracy_drop: 0.05,
             duty: 0.5,
+            memoize: true,
         }
     }
 }
@@ -168,66 +191,279 @@ fn expand_bits(graph: &Graph, matmul_idx: &[usize], matmul_bits: &[u8], widest: 
     per_op
 }
 
-/// Evaluate one plan: apply → compile → simulate the whole workload
-/// through the deployed NCM session; join the hardware columns.  The
-/// caller fills in `label`/`matmul_bits` (search-level metadata).
-fn eval_plan(
-    graph: &Graph,
-    tarch: &Tarch,
-    plan: &PrecisionPlan,
-    classes: &[Vec<Vec<f32>>],
-    cfg: &MixedSearchConfig,
-    per_op_bits: &[u8],
-) -> Result<MixedDseRow> {
-    let g = plan.applied(graph)?;
-    let program = compile(&g, tarch)?;
-    let mut sim = Simulator::new(&program, &g);
-
-    let mut session = Session::detached(g.feature_dim);
-    for (c, samples) in classes.iter().enumerate() {
+/// NCM accuracy over per-class feature lists (first `shots` enroll, the
+/// rest query) — the accuracy axis, decoupled from how features were
+/// simulated so full and resumed runs share one scoring path.
+fn ncm_accuracy(features: &[Vec<Vec<f32>>], shots: usize, dim: usize) -> Result<f64> {
+    let mut session = Session::detached(dim);
+    for (c, samples) in features.iter().enumerate() {
         let slot = session.add_class(format!("c{c}"));
-        for img in &samples[..cfg.shots] {
-            session.enroll_feature(slot, &sim.run_f32(img)?.output_f32)?;
+        for f in &samples[..shots] {
+            session.enroll_feature(slot, f)?;
         }
     }
     let (mut hits, mut total) = (0usize, 0usize);
-    for (c, samples) in classes.iter().enumerate() {
-        for img in &samples[cfg.shots..] {
-            if session.classify_feature(&sim.run_f32(img)?.output_f32)?.class_idx == c {
+    for (c, samples) in features.iter().enumerate() {
+        for f in &samples[shots..] {
+            if session.classify_feature(f)?.class_idx == c {
                 hits += 1;
             }
             total += 1;
         }
     }
+    Ok(hits as f64 / total.max(1) as f64)
+}
 
-    // cycle-weighted effective bits (what toggles), widest bits (what the
-    // datapath must provide)
-    let total_cycles: u64 = program.est_total_cycles.max(1);
-    let effective_bits = program
-        .layers
-        .iter()
-        .zip(per_op_bits)
-        .map(|(l, &b)| l.est_cycles as f64 * b as f64)
-        .sum::<f64>()
-        / total_cycles as f64;
-    // resources and power agree on the same fabric: sized at the plan's
-    // widest layer, with switching activity at the effective width
-    let resources = resources::accelerator_resources_bits(tarch, plan.max_bits());
-    let power =
-        power::system_power_mixed(tarch, cfg.duty, plan.max_bits(), effective_bits.round() as u8);
+/// One plan's compiled artifacts.  Candidates share theirs between the
+/// evaluation and (if accepted) the next round's checkpoint pass via `Rc`,
+/// so each plan is applied + compiled exactly once per search.
+struct Compiled {
+    graph: Graph,
+    program: Program,
+}
 
-    Ok(MixedDseRow {
-        label: String::new(),
-        matmul_bits: Vec::new(),
-        plan_bits: plan.describe_bits(),
-        accuracy: hits as f64 / total.max(1) as f64,
-        cycles: program.est_total_cycles,
-        latency_ms: program.est_latency_ms(),
-        resources,
-        power,
-        effective_bits,
-        pareto: false,
-    })
+/// Prefix cache of the current greedy baseline — also the search's
+/// one-entry compiled-plan cache, keyed by `bits` (greedy candidates never
+/// repeat, so the baseline is the only plan ever looked up again).
+struct Baseline {
+    /// Matmul bit vector the checkpoints belong to.
+    bits: Vec<u8>,
+    compiled: Rc<Compiled>,
+    /// `[image][checkpointed matmul]` — resume points captured just before
+    /// each conv/dense layer with a non-trivial prefix, in workload order
+    /// (classes × samples).
+    ckpts: Vec<Vec<SimCheckpoint>>,
+}
+
+/// How the workload was simulated, for tests and the bench.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct SearchStats {
+    /// Images simulated from the input layer.
+    full_image_runs: usize,
+    /// Images resumed mid-graph from a baseline checkpoint.
+    resumed_image_runs: usize,
+    /// Plans applied + compiled (one per distinct bit vector).
+    plans_compiled: usize,
+}
+
+/// Search-scoped evaluator: the workload and the baseline prefix cache.
+struct Evaluator<'a> {
+    graph: &'a Graph,
+    tarch: &'a Tarch,
+    cfg: &'a MixedSearchConfig,
+    classes: &'a [Vec<Vec<f32>>],
+    cal: &'a PlanCalibrator,
+    matmul_idx: &'a [usize],
+    widest: u8,
+    baseline: Option<Baseline>,
+    stats: SearchStats,
+}
+
+impl<'a> Evaluator<'a> {
+    /// Layers worth checkpointing: conv/dense ops with a non-trivial
+    /// prefix.  A layer-0 checkpoint would just clone the input image and
+    /// can never be resumed from ([`Evaluator::resume_point`] refuses
+    /// `mi == 0`), so it is not captured.
+    fn ckpt_layers(&self) -> &'a [usize] {
+        match self.matmul_idx.first() {
+            Some(&0) => &self.matmul_idx[1..],
+            _ => self.matmul_idx,
+        }
+    }
+
+    /// Index into `Baseline::ckpts[img]` for matmul `k` (compensates for
+    /// the skipped layer-0 capture).
+    fn ckpt_index(&self, k: usize) -> usize {
+        k - (self.matmul_idx.len() - self.ckpt_layers().len())
+    }
+
+    /// Apply + compile one plan (each distinct plan compiles exactly once
+    /// per search: the `Rc` is reused by `rebase` when a candidate is
+    /// accepted).
+    fn compile_plan(&mut self, plan: &PrecisionPlan) -> Result<Rc<Compiled>> {
+        let graph = plan.applied(self.graph)?;
+        let program = compile(&graph, self.tarch)?;
+        self.stats.plans_compiled += 1;
+        Ok(Rc::new(Compiled { graph, program }))
+    }
+
+    /// Deepest matmul layer this candidate can resume from: the first
+    /// changed budget — provided the compiled prefixes really match
+    /// format-for-format (the bit-exactness gate; anything unexpected
+    /// falls back to a full run).
+    fn resume_point(&self, bits: &[u8], cand: &Program) -> Option<usize> {
+        let base = self.baseline.as_ref()?;
+        let k = bits.iter().zip(&base.bits).position(|(a, b)| a != b)?;
+        let mi = self.matmul_idx[k];
+        if mi == 0 {
+            return None; // changing the first layer also changes the input format
+        }
+        let bp = &base.compiled.program;
+        if cand.input_format != bp.input_format || cand.layers.len() != bp.layers.len() {
+            return None;
+        }
+        for (a, b) in cand.layers[..mi].iter().zip(&bp.layers[..mi]) {
+            if a.input_formats != b.input_formats
+                || a.output_format != b.output_format
+                || a.weight_format != b.weight_format
+                || a.bias_frac != b.bias_frac
+            {
+                return None;
+            }
+        }
+        Some(k)
+    }
+
+    /// Simulate the whole workload under one plan, resuming from baseline
+    /// checkpoints where the prefix provably matches.
+    fn features_for(&mut self, bits: &[u8], compiled: &Compiled) -> Result<Vec<Vec<Vec<f32>>>> {
+        let resume =
+            if self.cfg.memoize { self.resume_point(bits, &compiled.program) } else { None };
+        let mut sim = Simulator::new(&compiled.program, &compiled.graph);
+        let mut features = Vec::with_capacity(self.classes.len());
+        let mut img_idx = 0usize;
+        for class in self.classes {
+            let mut per_class = Vec::with_capacity(class.len());
+            for img in class {
+                let out = match (resume, &self.baseline) {
+                    (Some(k), Some(base)) => {
+                        self.stats.resumed_image_runs += 1;
+                        sim.run_from(&base.ckpts[img_idx][self.ckpt_index(k)])?
+                    }
+                    _ => {
+                        self.stats.full_image_runs += 1;
+                        sim.run_f32(img)?
+                    }
+                };
+                per_class.push(out.output_f32);
+                img_idx += 1;
+            }
+            features.push(per_class);
+        }
+        Ok(features)
+    }
+
+    /// The single evaluation pipeline: expand → plan → compile → simulate
+    /// → accuracy → hardware columns.  `capture` additionally makes `bits`
+    /// the memoization baseline in the same pass (the workload simulation
+    /// that produces the accuracy axis captures the per-layer checkpoints
+    /// as it goes, so becoming the baseline costs no extra simulation).
+    fn evaluate_with(
+        &mut self,
+        bits: &[u8],
+        capture: bool,
+    ) -> Result<(MixedDseRow, Rc<Compiled>)> {
+        let per_op = expand_bits(self.graph, self.matmul_idx, bits, self.widest);
+        let plan = self.cal.plan(&per_op)?;
+        let compiled = self.compile_plan(&plan)?;
+        let features = if capture && self.cfg.memoize {
+            self.capture_baseline(bits, compiled.clone())?
+        } else {
+            self.features_for(bits, compiled.as_ref())?
+        };
+        let accuracy = ncm_accuracy(&features, self.cfg.shots, self.graph.feature_dim)?;
+        let row = self.hardware_row(&plan, &compiled.program, &per_op, bits, accuracy);
+        Ok((row, compiled))
+    }
+
+    /// Evaluate one matmul bit vector.  The caller fills
+    /// `label`/`matmul_bits` and keeps the returned compiled artifacts
+    /// alive if the candidate is accepted (so [`Evaluator::rebase`] never
+    /// recompiles).
+    fn evaluate(&mut self, bits: &[u8]) -> Result<(MixedDseRow, Rc<Compiled>)> {
+        self.evaluate_with(bits, false)
+    }
+
+    /// Evaluate AND adopt as baseline — used for the search's initial
+    /// uniform plan (accepted candidates were evaluated with *resumed*
+    /// runs, so they still need [`Evaluator::rebase`]).
+    fn evaluate_into_baseline(&mut self, bits: &[u8]) -> Result<MixedDseRow> {
+        Ok(self.evaluate_with(bits, true)?.0)
+    }
+
+    /// The baseline-capture pass shared by [`Evaluator::evaluate_into_baseline`]
+    /// and [`Evaluator::rebase`]: simulate every workload image once with
+    /// checkpoint capture, install the result as the new baseline, and
+    /// return the per-class features.
+    fn capture_baseline(
+        &mut self,
+        bits: &[u8],
+        compiled: Rc<Compiled>,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let mut features = Vec::with_capacity(self.classes.len());
+        let mut ckpts = Vec::new();
+        {
+            let mut sim = Simulator::new(&compiled.program, &compiled.graph);
+            let at = self.ckpt_layers();
+            for class in self.classes {
+                let mut per_class = Vec::with_capacity(class.len());
+                for img in class {
+                    self.stats.full_image_runs += 1;
+                    let (out, c) = sim.run_f32_checkpointed(img, at)?;
+                    per_class.push(out.output_f32);
+                    ckpts.push(c);
+                }
+                features.push(per_class);
+            }
+        }
+        self.baseline = Some(Baseline { bits: bits.to_vec(), compiled, ckpts });
+        Ok(features)
+    }
+
+    /// Join the hardware columns for one evaluated plan.
+    fn hardware_row(
+        &self,
+        plan: &PrecisionPlan,
+        program: &Program,
+        per_op: &[u8],
+        bits: &[u8],
+        accuracy: f64,
+    ) -> MixedDseRow {
+        // cycle-weighted effective bits (what toggles), widest bits (what
+        // the datapath must provide)
+        let total_cycles: u64 = program.est_total_cycles.max(1);
+        let effective_bits = program
+            .layers
+            .iter()
+            .zip(per_op)
+            .map(|(l, &b)| l.est_cycles as f64 * b as f64)
+            .sum::<f64>()
+            / total_cycles as f64;
+        // resources and power agree on the same fabric: sized at the plan's
+        // widest layer, with switching activity at the effective width
+        let resources = resources::accelerator_resources_bits(self.tarch, plan.max_bits());
+        let power = power::system_power_mixed(
+            self.tarch,
+            self.cfg.duty,
+            plan.max_bits(),
+            effective_bits.round() as u8,
+        );
+        MixedDseRow {
+            label: String::new(),
+            matmul_bits: bits.to_vec(),
+            plan_bits: plan.describe_bits(),
+            accuracy,
+            cycles: program.est_total_cycles,
+            latency_ms: program.est_latency_ms(),
+            resources,
+            power,
+            effective_bits,
+            pareto: false,
+        }
+    }
+
+    /// Make an accepted candidate the memoization baseline: one
+    /// checkpointed pass over every workload image captures the resume
+    /// point before each conv/dense layer.  The candidate's compiled
+    /// artifacts come from its evaluation, so this costs one full
+    /// simulation per image and nothing else.
+    fn rebase(&mut self, bits: &[u8], compiled: Rc<Compiled>) -> Result<()> {
+        if !self.cfg.memoize {
+            return Ok(());
+        }
+        self.capture_baseline(bits, compiled)?;
+        Ok(())
+    }
 }
 
 /// Greedy mixed-precision search over a backbone spec.
@@ -243,6 +479,14 @@ pub fn mixed_pareto_rows(
     tarch: &Tarch,
     cfg: &MixedSearchConfig,
 ) -> Result<Vec<MixedDseRow>> {
+    Ok(run_search(spec, tarch, cfg)?.0)
+}
+
+fn run_search(
+    spec: &BackboneSpec,
+    tarch: &Tarch,
+    cfg: &MixedSearchConfig,
+) -> Result<(Vec<MixedDseRow>, SearchStats)> {
     cfg.validate(tarch)?;
     let graph = build_backbone_graph(spec, cfg.seed)?;
     let elems: usize = graph.input_shape.iter().product();
@@ -274,25 +518,32 @@ pub fn mixed_pareto_rows(
         .collect();
     let widest = *cfg.widths.last().unwrap();
 
-    let evaluate = |bits: &[u8], label: String| -> Result<MixedDseRow> {
-        let per_op = expand_bits(&graph, &matmul_idx, bits, widest);
-        let plan = cal.plan(&per_op)?;
-        let mut row = eval_plan(&graph, tarch, &plan, &classes, cfg, &per_op)?;
-        row.label = label;
-        row.matmul_bits = bits.to_vec();
-        Ok(row)
+    let mut ev = Evaluator {
+        graph: &graph,
+        tarch,
+        cfg,
+        classes: &classes,
+        cal: &cal,
+        matmul_idx: &matmul_idx,
+        widest,
+        baseline: None,
+        stats: SearchStats::default(),
     };
 
     let mut rows = Vec::new();
     let mut current = vec![widest; matmul_idx.len()];
-    let baseline = evaluate(&current, format!("uniform{widest}"))?;
+    // one pass evaluates the uniform baseline AND captures its checkpoints
+    let mut baseline = ev.evaluate_into_baseline(&current)?;
+    baseline.label = format!("uniform{widest}");
     let floor = baseline.accuracy - cfg.max_accuracy_drop;
     let mut best_cycles = baseline.cycles;
     rows.push(baseline);
 
-    for _ in 0..cfg.max_steps {
-        // one candidate per layer: its width stepped one notch down
-        let mut best: Option<(usize, u8, MixedDseRow)> = None;
+    for step in 0..cfg.max_steps {
+        // one candidate per layer: its width stepped one notch down; the
+        // best candidate's compiled plan rides along so accepting it never
+        // recompiles
+        let mut best: Option<(usize, u8, MixedDseRow, Rc<Compiled>)> = None;
         for (k, &mi) in matmul_idx.iter().enumerate() {
             let pos = cfg.widths.iter().position(|&w| w == current[k]).unwrap();
             if pos == 0 {
@@ -301,24 +552,30 @@ pub fn mixed_pareto_rows(
             let next_w = cfg.widths[pos - 1];
             let mut cand = current.clone();
             cand[k] = next_w;
-            let row = evaluate(&cand, format!("{}→{}", graph.ops[mi].name(), next_w))?;
+            let (mut row, compiled) = ev.evaluate(&cand)?;
+            row.label = format!("{}→{}", graph.ops[mi].name(), next_w);
             let acceptable = row.accuracy >= floor && row.cycles < best_cycles;
             let better = match &best {
                 None => true,
-                Some((_, _, b)) => {
+                Some((_, _, b, _)) => {
                     row.cycles < b.cycles
                         || (row.cycles == b.cycles && row.accuracy > b.accuracy)
                 }
             };
             if acceptable && better {
-                best = Some((k, next_w, row.clone()));
+                best = Some((k, next_w, row.clone(), compiled));
             }
             rows.push(row);
         }
         match best {
-            Some((k, w, row)) => {
+            Some((k, w, row, compiled)) => {
                 current[k] = w;
                 best_cycles = row.cycles;
+                // the final round's checkpoints could never be consumed —
+                // skip the capture pass when no round follows
+                if step + 1 < cfg.max_steps {
+                    ev.rebase(&current, compiled)?;
+                }
             }
             None => break,
         }
@@ -331,7 +588,7 @@ pub fn mixed_pareto_rows(
             (a >= r.accuracy && c < r.cycles) || (a > r.accuracy && c <= r.cycles)
         });
     }
-    Ok(rows)
+    Ok((rows, ev.stats))
 }
 
 /// Render rows as an aligned text table (the bench/CLI output).
@@ -408,6 +665,43 @@ mod tests {
         let table = render_mixed_table(&rows);
         assert_eq!(table.lines().count(), 3 + rows.len());
         assert!(table.contains("uniform16"));
+    }
+
+    #[test]
+    fn memoized_search_is_bit_identical_to_naive() {
+        // The tentpole contract: prefix-resumed candidate evaluation must
+        // not move a single bit of the search trajectory.
+        let tarch = Tarch::z7020_8x8();
+        let spec = tiny_spec();
+        let mut cfg = tiny_cfg();
+        cfg.max_steps = 3;
+        cfg.memoize = false;
+        let (naive, naive_stats) = run_search(&spec, &tarch, &cfg).unwrap();
+        cfg.memoize = true;
+        let (memo, memo_stats) = run_search(&spec, &tarch, &cfg).unwrap();
+
+        assert_eq!(naive.len(), memo.len());
+        for (a, b) in naive.iter().zip(&memo) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.matmul_bits, b.matmul_bits);
+            assert_eq!(a.plan_bits, b.plan_bits);
+            assert_eq!(a.accuracy, b.accuracy, "{}", a.label);
+            assert_eq!(a.cycles, b.cycles, "{}", a.label);
+            assert_eq!(a.effective_bits, b.effective_bits, "{}", a.label);
+            assert_eq!(a.pareto, b.pareto, "{}", a.label);
+        }
+        // memoization actually engaged: candidates resumed mid-graph and
+        // the total from-scratch image simulations dropped
+        assert_eq!(naive_stats.resumed_image_runs, 0);
+        assert!(memo_stats.resumed_image_runs > 0, "{memo_stats:?}");
+        assert!(
+            memo_stats.full_image_runs < naive_stats.full_image_runs,
+            "memoized {memo_stats:?} vs naive {naive_stats:?}"
+        );
+        // every distinct plan compiles exactly once in either mode (the
+        // accepted candidate's compiled plan is reused by the rebase)
+        assert_eq!(memo_stats.plans_compiled, naive_stats.plans_compiled);
+        assert_eq!(memo_stats.plans_compiled, memo.len(), "{memo_stats:?}");
     }
 
     #[test]

@@ -79,6 +79,14 @@ pub struct EngineBuilder {
     tarch: Option<Tarch>,
     graph: Option<Graph>,
     quant: Option<QuantConfig>,
+    workers: Option<usize>,
+}
+
+/// Default sim worker-pool size: one worker per available core, capped —
+/// each worker carries a full activation arena, and simulation saturates
+/// well before memory bandwidth does.
+fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(4)
 }
 
 impl EngineBuilder {
@@ -133,11 +141,23 @@ impl EngineBuilder {
         self.quant(QuantConfig::bits(total_bits))
     }
 
+    /// Worker-pool size for the sim backend (default: one per available
+    /// core, capped at 4).  Batched requests fan out across the pool;
+    /// results are bit-identical at any size.  The PJRT backend is
+    /// single-worker (one loaded executable) and rejects larger pools.
+    pub fn workers(mut self, n: usize) -> EngineBuilder {
+        self.workers = Some(n);
+        self
+    }
+
     /// Build the engine: resolve artifacts, compile/load the backend.
     pub fn build(self) -> Result<Engine> {
-        let EngineBuilder { artifacts, kind, tarch, graph, quant } = self;
+        let EngineBuilder { artifacts, kind, tarch, graph, quant, workers } = self;
         if let Some(cfg) = &quant {
             cfg.validate()?;
+        }
+        if workers == Some(0) {
+            bail!("worker pool needs at least one worker");
         }
         let tarch = tarch.unwrap_or_else(Tarch::z7020_12x12);
         let engine = match kind {
@@ -150,6 +170,7 @@ impl EngineBuilder {
                             .context("load graph artifacts (run `make artifacts` first)")?
                     }
                 };
+                let n = workers.unwrap_or_else(default_workers);
                 let program = compile(&graph, &tarch)?;
                 let info = EngineInfo {
                     name: "sim",
@@ -160,12 +181,16 @@ impl EngineBuilder {
                     modeled_latency_ms: Some(program.est_latency_ms()),
                     tarch_name: Some(tarch.name.clone()),
                     quant: None,
+                    workers: n,
                 };
-                Engine::new(Box::new(SimWorker::new(program, graph)), info)
+                Engine::new(SimWorker::pool(program, graph, n), info)
             }
             BackendKind::Pjrt => {
                 if graph.is_some() {
                     bail!("in-memory graphs are only supported by the sim backend");
+                }
+                if workers.unwrap_or(1) > 1 {
+                    bail!("the pjrt backend runs a single worker (one loaded executable)");
                 }
                 let dir = resolve_artifacts_dir(artifacts.as_deref());
                 let manifest = json::from_file(dir.join("manifest.json"))
@@ -246,6 +271,33 @@ mod tests {
         let g = build_backbone_graph(&spec, 2).unwrap();
         let r = EngineBuilder::new().graph(g).quant_bits(3).build();
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn worker_pool_size_configurable_and_validated() {
+        let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = build_backbone_graph(&spec, 2).unwrap();
+        let engine = EngineBuilder::new()
+            .graph(g.clone())
+            .tarch(Tarch::z7020_8x8())
+            .workers(3)
+            .build()
+            .unwrap();
+        assert_eq!(engine.workers(), 3);
+        assert_eq!(engine.info().workers, 3);
+        // default pool size is at least one worker
+        let default =
+            EngineBuilder::new().graph(g.clone()).tarch(Tarch::z7020_8x8()).build().unwrap();
+        assert!(default.workers() >= 1);
+        let zero = EngineBuilder::new().graph(g).tarch(Tarch::z7020_8x8()).workers(0).build();
+        assert!(zero.is_err());
+    }
+
+    #[test]
+    fn pjrt_rejects_multi_worker_pool() {
+        let r = EngineBuilder::new().backend(BackendKind::Pjrt).workers(2).build();
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("single worker"), "{msg}");
     }
 
     #[test]

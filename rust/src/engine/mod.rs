@@ -5,11 +5,13 @@
 //! `modeled_latency_ms()` side-state) with a service-shaped API in three
 //! pieces:
 //!
-//! * [`Engine`] — owns one backend (bit-exact accelerator sim or PJRT f32
-//!   reference) behind `&self` with interior locking.  One engine is shared
-//!   by any number of threads; [`Engine::infer`] takes an [`InferRequest`]
-//!   carrying one-or-many NHWC images and returns an [`InferResponse`] with
-//!   per-item features **plus modeled latency and cycle counts as data**.
+//! * [`Engine`] — owns a pool of backend workers (bit-exact accelerator sim
+//!   or PJRT f32 reference) behind `&self` with interior locking.  One
+//!   engine is shared by any number of threads; [`Engine::infer`] takes an
+//!   [`InferRequest`] carrying one-or-many NHWC images — a batch fans out
+//!   across the pool ([`EngineBuilder::workers`]) — and returns an
+//!   [`InferResponse`] with per-item features **plus modeled latency and
+//!   cycle counts as data**.
 //! * [`EngineBuilder`] — the single entry point for artifact resolution
 //!   (graph.json/weights.bin for sim, manifest.json/model.hlo.txt for PJRT,
 //!   tarch presets), previously copy-pasted across the CLI and `lib.rs`.
@@ -74,14 +76,13 @@ pub use request::{InferItem, InferMetrics, InferRequest, InferResponse};
 pub use session::Session;
 
 use std::sync::Mutex;
-use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::fixed::QFormat;
 use crate::quant::{Calibrator, QTensor, QuantConfig};
 
-use workers::InferWorker;
+use workers::{InferWorker, WorkerPool};
 
 /// Static facts about an engine, fixed at build time.
 #[derive(Clone, Debug)]
@@ -102,6 +103,8 @@ pub struct EngineInfo {
     pub tarch_name: Option<String>,
     /// Feature quantization config, if the engine runs one.
     pub quant: Option<QuantConfig>,
+    /// Worker-pool size: how many backend instances serve in parallel.
+    pub workers: usize,
 }
 
 /// Cumulative service counters (snapshot via [`Engine::stats`]).
@@ -120,11 +123,15 @@ pub struct EngineStats {
 /// A shared inference service over one backend.
 ///
 /// `Engine` is `Send + Sync`; clone an `Arc<Engine>` into as many threads /
-/// [`Session`]s as needed.  Requests are serialized on the backend lock (one
-/// accelerator, as on the PYNQ board); batching amortizes per-request
-/// overhead across images.
+/// [`Session`]s as needed.  Behind the API sits a [`WorkerPool`] of N
+/// deterministic backend instances over one compiled program: a batched
+/// request fans its images across the pool (batch latency is the max of
+/// its items, not their sum), while the *modeled* per-image latency — one
+/// accelerator, as on the PYNQ board — is still returned as data per item.
+/// Pool size is [`EngineBuilder::workers`]; results are bit-identical to a
+/// serial run at any size.
 pub struct Engine {
-    worker: Mutex<Box<dyn InferWorker>>,
+    pool: WorkerPool,
     info: EngineInfo,
     stats: Mutex<EngineStats>,
     quant: Option<Mutex<QuantState>>,
@@ -149,13 +156,10 @@ impl QuantState {
 }
 
 impl Engine {
-    pub(crate) fn new(worker: Box<dyn InferWorker>, info: EngineInfo) -> Engine {
-        Engine {
-            worker: Mutex::new(worker),
-            info,
-            stats: Mutex::new(EngineStats::default()),
-            quant: None,
-        }
+    pub(crate) fn new(workers: Vec<Box<dyn InferWorker>>, mut info: EngineInfo) -> Engine {
+        let pool = WorkerPool::new(workers);
+        info.workers = pool.size();
+        Engine { pool, info, stats: Mutex::new(EngineStats::default()), quant: None }
     }
 
     /// Attach a quantization config: every response item additionally
@@ -190,8 +194,9 @@ impl Engine {
             modeled_latency_ms: None,
             tarch_name: None,
             quant: None,
+            workers: 1,
         };
-        Engine::new(Box::new(workers::PjrtWorker::new(exe, input_dims, feature_dim)), info)
+        Engine::new(vec![Box::new(workers::PjrtWorker::new(exe, input_dims, feature_dim))], info)
     }
 
     /// Run inference on every image in the request; the response carries one
@@ -212,18 +217,9 @@ impl Engine {
                 );
             }
         }
-        // A panic mid-`run` poisons the lock, but worker state is reset at
-        // the start of every run, so recovering the guard is safe — better
-        // than wedging every other session forever.
-        let mut worker = self.worker.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
-        let mut items = Vec::with_capacity(request.len());
-        for img in request.images() {
-            let t0 = Instant::now();
-            let mut item = worker.infer_one(img)?;
-            item.metrics.host_us = t0.elapsed().as_secs_f64() * 1e6;
-            items.push(item);
-        }
-        drop(worker);
+        // The pool fans the batch across its workers (scoped threads) and
+        // returns items in request order with host timing attributed.
+        let mut items = self.pool.infer_batch(request.images())?;
 
         if let Some(q) = &self.quant {
             let mut st = q.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -272,6 +268,11 @@ impl Engine {
     /// Backbone input resolution.
     pub fn input_size(&self) -> usize {
         self.info.input_size
+    }
+
+    /// Worker-pool size: how many backend instances serve in parallel.
+    pub fn workers(&self) -> usize {
+        self.info.workers
     }
 
     /// Static engine facts (instruction count, modeled latency, ...).

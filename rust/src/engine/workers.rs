@@ -1,12 +1,22 @@
-//! Backend workers: the per-engine inference state behind the service lock.
+//! Backend workers: the per-engine inference state behind the service.
 //!
 //! A worker owns everything needed to compute features for one image and is
-//! driven exclusively through [`InferWorker::infer_one`] while the engine's
-//! mutex is held.  Two implementations mirror the two deployment paths of
-//! the paper: the bit-exact accelerator simulator and the PJRT f32
+//! driven exclusively through [`InferWorker::infer_one`] while its pool
+//! slot's mutex is held.  Two implementations mirror the two deployment
+//! paths of the paper: the bit-exact accelerator simulator and the PJRT f32
 //! reference.
+//!
+//! [`WorkerPool`] generalizes the original single-worker-behind-a-mutex
+//! design: N workers (each its own simulator instance over one shared
+//! compiled program) sit behind N independent locks, and a batched request
+//! fans its images across them with `std::thread::scope` — batch latency is
+//! the max of its items, not their sum.  Results keep request order, and
+//! every worker is deterministic, so pooled output is bit-identical to a
+//! serial run (pinned by `tests/engine_concurrency.rs`).
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -18,10 +28,81 @@ use crate::tcompiler::Program;
 use super::request::{InferItem, InferMetrics};
 
 /// One backend inference unit. `&mut self` because workers keep reusable
-/// scratch state (the simulator's activation buffers); the [`super::Engine`]
-/// serializes access behind its lock.
+/// scratch state (the simulator's activation buffers); the [`WorkerPool`]
+/// serializes access per slot behind its lock.
 pub(crate) trait InferWorker: Send {
     fn infer_one(&mut self, image: &[f32]) -> Result<InferItem>;
+}
+
+/// N workers behind N independent locks — the engine's execution substrate.
+pub(crate) struct WorkerPool {
+    slots: Vec<Mutex<Box<dyn InferWorker>>>,
+    /// Round-robin start for single-image requests, so concurrent callers
+    /// spread across slots instead of all contending on slot 0.
+    rotor: AtomicUsize,
+}
+
+impl WorkerPool {
+    pub(crate) fn new(workers: Vec<Box<dyn InferWorker>>) -> WorkerPool {
+        assert!(!workers.is_empty(), "worker pool needs at least one worker");
+        WorkerPool {
+            slots: workers.into_iter().map(Mutex::new).collect(),
+            rotor: AtomicUsize::new(0),
+        }
+    }
+
+    pub(crate) fn size(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Run every image, returning items in request order.  Single-image
+    /// requests (and single-worker pools) stay on the calling thread; a
+    /// batch fans out across `min(workers, images)` scoped threads, each
+    /// striding the batch so the split is deterministic.
+    pub(crate) fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<InferItem>> {
+        let lanes = self.slots.len().min(images.len());
+        if lanes <= 1 {
+            let slot = &self.slots[self.rotor.fetch_add(1, Ordering::Relaxed) % self.slots.len()];
+            let mut w = slot.lock().unwrap_or_else(PoisonError::into_inner);
+            return images.iter().map(|img| timed_infer(w.as_mut(), img)).collect();
+        }
+        let results: Vec<Result<Vec<(usize, InferItem)>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..lanes)
+                .map(|lane| {
+                    let slot = &self.slots[lane];
+                    s.spawn(move || {
+                        // A panic mid-run poisons only this slot's lock, and
+                        // worker state is reset at the start of every run,
+                        // so recovering the guard is safe.
+                        let mut w = slot.lock().unwrap_or_else(PoisonError::into_inner);
+                        let mut out = Vec::new();
+                        let mut i = lane;
+                        while i < images.len() {
+                            out.push((i, timed_infer(w.as_mut(), &images[i])?));
+                            i += lanes;
+                        }
+                        Ok(out)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("engine worker thread panicked")).collect()
+        });
+        let mut items: Vec<Option<InferItem>> = images.iter().map(|_| None).collect();
+        for lane in results {
+            for (i, item) in lane? {
+                items[i] = Some(item);
+            }
+        }
+        Ok(items.into_iter().map(|o| o.expect("worker lane dropped an item")).collect())
+    }
+}
+
+/// One inference with host wall-clock attribution.
+fn timed_infer(w: &mut dyn InferWorker, image: &[f32]) -> Result<InferItem> {
+    let t0 = Instant::now();
+    let mut item = w.infer_one(image)?;
+    item.metrics.host_us = t0.elapsed().as_secs_f64() * 1e6;
+    Ok(item)
 }
 
 /// Bit-exact accelerator simulation worker.
@@ -29,7 +110,8 @@ pub(crate) trait InferWorker: Send {
 /// Unlike the old `SimBackend` (which rebuilt a [`Simulator`] — re-resolving
 /// weight slices and re-pricing the instruction stream — on every frame),
 /// the worker owns **one** simulator for its whole lifetime and reuses it
-/// across calls; `Simulator::run_f32` resets per-run state itself.
+/// across calls; `Simulator::run_f32` resets per-run state itself.  Pool
+/// members share one compiled [`Program`]/[`Graph`] through the `Arc`s.
 pub(crate) struct SimWorker {
     /// Field order matters: `sim` borrows from the allocations kept alive
     /// by the `Arc`s below, and struct fields drop in declaration order,
@@ -40,20 +122,30 @@ pub(crate) struct SimWorker {
 }
 
 impl SimWorker {
-    pub(crate) fn new(program: Program, graph: Graph) -> SimWorker {
-        let program = Arc::new(program);
-        let graph = Arc::new(graph);
+    pub(crate) fn new(program: Arc<Program>, graph: Arc<Graph>) -> SimWorker {
         // SAFETY: `Simulator<'a>` borrows the program and graph. Both live
         // in heap allocations kept alive by `Arc`s owned by this struct for
         // its entire lifetime: the `Arc`s are private, never reassigned,
         // never handed out, and outlive `sim` (declaration order above).
         // `Arc` is used instead of `Box` deliberately — it makes no
         // unique-aliasing claim, so keeping derived shared references while
-        // the struct (and its pointers) move is sound; the heap data never
-        // moves and is never mutably aliased.
+        // the struct (and its pointers) move is sound, and it lets every
+        // pool member share one immutable program/graph; the heap data
+        // never moves and is never mutably aliased.
         let p: &'static Program = unsafe { &*Arc::as_ptr(&program) };
         let g: &'static Graph = unsafe { &*Arc::as_ptr(&graph) };
         SimWorker { sim: Simulator::new(p, g), _program: program, _graph: graph }
+    }
+
+    /// A pool of `n` workers over one shared compiled program.
+    pub(crate) fn pool(program: Program, graph: Graph, n: usize) -> Vec<Box<dyn InferWorker>> {
+        let program = Arc::new(program);
+        let graph = Arc::new(graph);
+        (0..n.max(1))
+            .map(|_| {
+                Box::new(SimWorker::new(program.clone(), graph.clone())) as Box<dyn InferWorker>
+            })
+            .collect()
     }
 }
 
@@ -117,11 +209,16 @@ mod tests {
     use crate::tarch::Tarch;
     use crate::tcompiler::compile;
 
-    fn sim_worker() -> SimWorker {
+    fn compiled() -> (Program, Graph) {
         let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
         let g = spec.build_graph(1).unwrap();
         let p = compile(&g, &Tarch::z7020_8x8()).unwrap();
-        SimWorker::new(p, g)
+        (p, g)
+    }
+
+    fn sim_worker() -> SimWorker {
+        let (p, g) = compiled();
+        SimWorker::new(Arc::new(p), Arc::new(g))
     }
 
     #[test]
@@ -151,5 +248,31 @@ mod tests {
     fn sim_worker_rejects_bad_input_len() {
         let mut w = sim_worker();
         assert!(w.infer_one(&[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn pool_batch_matches_serial_and_keeps_order() {
+        let (p, g) = compiled();
+        let pool = WorkerPool::new(SimWorker::pool(p, g, 3));
+        assert_eq!(pool.size(), 3);
+        let images: Vec<Vec<f32>> =
+            (0..7).map(|i| vec![0.1 + 0.1 * i as f32; 16 * 16 * 3]).collect();
+        let fanned = pool.infer_batch(&images).unwrap();
+        assert_eq!(fanned.len(), 7);
+        // serial single-image calls give exactly the same features, in order
+        for (i, img) in images.iter().enumerate() {
+            let serial = pool.infer_batch(std::slice::from_ref(img)).unwrap();
+            assert_eq!(serial[0].features, fanned[i].features, "item {i}");
+            assert_eq!(serial[0].metrics.cycles, fanned[i].metrics.cycles);
+            assert!(fanned[i].metrics.host_us > 0.0, "host timing missing on item {i}");
+        }
+    }
+
+    #[test]
+    fn pool_error_propagates() {
+        let (p, g) = compiled();
+        let pool = WorkerPool::new(SimWorker::pool(p, g, 2));
+        let images = vec![vec![0.2; 16 * 16 * 3], vec![0.0; 3]];
+        assert!(pool.infer_batch(&images).is_err());
     }
 }

@@ -17,16 +17,35 @@
 //! `forward_folded_quant` approximates it in float and the parity test in
 //! `rust/tests/artifact_parity.rs` bounds the difference.
 //!
-//! §Perf notes: per-layer weight/bias slices are resolved once at
-//! simulator construction through a name→op index built up front (one
-//! pass over the op list, not one per layer); the MatMul inner loop swaps
-//! activation buffers out of the tensor map to avoid per-instruction
-//! clones, pre-decomposes the k-range into (ky, kx, ci) per tile, and
-//! accumulates over the weight-tile row slice — see EXPERIMENTS.md §Perf.
+//! §Perf notes — the simulator is the hot path under every evaluation
+//! (`fewshot::evaluate`, `dse::mixed`, the engine), so the instruction
+//! loop is allocation-free and blocked:
+//!
+//! * activation buffers live in a persistent arena indexed by tensor id
+//!   (allocated once at construction, zeroed per run — no `HashMap`
+//!   take/insert, no per-run `Vec` churn); the weight tile and the
+//!   bias-alignment scratch are likewise persistent;
+//! * conv MatMul gathers each (ky, kx) tap of the k-tile as one contiguous
+//!   input strip (HWIO im2col k-order means a tap covers a `cin` run), so
+//!   the inner kernel multiplies an input strip against weight-tile rows
+//!   with one bounds decision per *tap*, not per element — and a dedicated
+//!   no-padding fast path drops even that ([`conv_rows_unpadded`]);
+//! * per-layer constants (conv geometry, accumulator fraction, bias
+//!   shift, weight/bias slices, instruction ranges) are resolved once at
+//!   [`Simulator::new`] through a name→op index — the instruction loop
+//!   never clones geometry or re-decomposes k indices;
+//! * [`Simulator::run_from`] resumes execution mid-graph from a
+//!   [`SimCheckpoint`], the hook `dse::mixed` uses to memoize the
+//!   unchanged layer prefix of a greedy mixed-precision search.
+//!
+//! The straightforward scalar interpreter these kernels replaced is kept
+//! as [`reference::ReferenceSimulator`], the oracle the golden suite in
+//! `rust/tests/sim_kernel_parity.rs` pins this module against bit-exactly.
 
+pub mod reference;
 pub mod trace;
 
-use std::collections::HashMap;
+use std::collections::BTreeSet;
 
 use anyhow::{bail, Context, Result};
 
@@ -61,9 +80,38 @@ impl SimResult {
     }
 }
 
+/// Mid-graph resume point: the activation buffers live into the suffix of
+/// a run, captured just before layer [`SimCheckpoint::layer`] executes.
+///
+/// Produced by [`Simulator::run_codes_checkpointed`] /
+/// [`Simulator::run_f32_checkpointed`], consumed by [`Simulator::run_from`]
+/// — on the *same* program, or on a different program whose layers before
+/// `layer` are identical in topology and formats (then the prefix codes are
+/// bit-identical by determinism, which is exactly the contract `dse::mixed`
+/// exploits to memoize the unchanged prefix of a greedy search).
+#[derive(Clone, Debug)]
+pub struct SimCheckpoint {
+    layer: usize,
+    /// (tensor id, codes) of every buffer read by layers ≥ `layer` whose
+    /// producer ran before `layer` (dead buffers are not carried).
+    acts: Vec<(u32, Vec<i16>)>,
+}
+
+impl SimCheckpoint {
+    /// First layer a [`Simulator::run_from`] resume will execute.
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
+
+    /// Number of live activation buffers carried by the checkpoint.
+    pub fn n_tensors(&self) -> usize {
+        self.acts.len()
+    }
+}
+
 /// Per-layer data resolved once at construction: weight/bias slices, the
-/// conv geometry and the layer's operand formats, so the instruction loop
-/// never touches hash maps.
+/// conv geometry, operand formats and derived accumulator constants, so
+/// the instruction loop never touches hash maps or recomputes formats.
 struct LayerData<'a> {
     weights: Option<&'a [i16]>,
     bias: Option<&'a [i32]>,
@@ -79,33 +127,57 @@ struct LayerData<'a> {
     out_fmt: QFormat,
     /// Weight format (conv/dense); accumulator frac = input frac + weight frac.
     w_fmt: Option<QFormat>,
-    /// Fractional bits of the stored bias codes.
-    bias_frac: u8,
+    /// Fractional bits of the matmul accumulator (input + weight fraction).
+    acc_frac: u8,
+    /// Shift moving stored bias codes to the accumulator scale.
+    bias_shift: i32,
 }
 
-/// Accelerator state: activation buffers + accumulator + loaded weight tile.
+/// Cycle/instruction bookkeeping of one run.
+struct RunTotals {
+    cycles: u64,
+    layer_cycles: Vec<u64>,
+    instr_count: u64,
+}
+
+impl RunTotals {
+    fn new(n_layers: usize) -> RunTotals {
+        RunTotals { cycles: 0, layer_cycles: vec![0; n_layers], instr_count: 0 }
+    }
+}
+
+/// Accelerator state: activation arena + accumulator + loaded weight tile.
 pub struct Simulator<'a> {
     program: &'a Program,
     cost: CostModel,
     layers: Vec<LayerData<'a>>,
-    /// Activation buffers by tensor id (Q8.8 codes), NHWC row-major.
-    acts: HashMap<u32, Vec<i16>>,
+    /// Activation arena indexed by tensor id, NHWC row-major codes.
+    /// Allocated once (weight slots stay empty), zeroed per run.
+    acts: Vec<Vec<i16>>,
     /// Accumulator memory: acc_depth rows × array_size columns, i64.
     acc: Vec<i64>,
-    /// Currently loaded weight tile (kt×nt), kt-major.
+    /// Currently loaded weight tile (kt×nt), kt-major; capacity r×r.
     wtile: Vec<i16>,
     wtile_dims: (usize, usize),
+    /// Bias codes pre-shifted to the accumulator scale (writeback scratch).
+    wb_bias: Vec<i64>,
     /// Pre-computed instruction costs (same stream every run).
     instr_costs: Vec<u64>,
+    /// [lo, hi) instruction range of each layer (streams are layer-ordered).
+    layer_ranges: Vec<(usize, usize)>,
+    /// Producing layer of each tensor id (None for the program input and
+    /// weight slots) — used by checkpoint liveness.
+    producer_layer: Vec<Option<usize>>,
 }
 
 impl<'a> Simulator<'a> {
     pub fn new(program: &'a Program, graph: &'a Graph) -> Self {
-        let acc_len = program.tarch.accumulator_depth * program.tarch.array_size;
+        let r = program.tarch.array_size;
+        let acc_len = program.tarch.accumulator_depth * r;
         // One name→op index up front (not a per-layer rescan of the op list).
-        let op_by_name: HashMap<&str, &crate::graph::Op> =
+        let op_by_name: std::collections::HashMap<&str, &crate::graph::Op> =
             graph.ops.iter().map(|op| (op.name(), op)).collect();
-        // Resolve weight/bias slices once.
+        // Resolve weight/bias slices and per-layer constants once.
         let mut layers = Vec::with_capacity(program.layers.len());
         for meta in &program.layers {
             let mut weights = None;
@@ -122,6 +194,7 @@ impl<'a> Simulator<'a> {
                     bias = graph.weights[b].as_i32().ok();
                 }
             }
+            let acc_frac = meta.acc_frac();
             layers.push(LayerData {
                 weights,
                 bias,
@@ -133,24 +206,57 @@ impl<'a> Simulator<'a> {
                 in_fmts: meta.input_formats.clone(),
                 out_fmt: meta.output_format,
                 w_fmt: meta.weight_format,
-                bias_frac: meta.bias_frac,
+                acc_frac,
+                bias_shift: acc_frac as i32 - meta.bias_frac as i32,
             });
         }
         let cost = CostModel::new(program.tarch.clone());
-        let instr_costs = program
+        let instr_costs: Vec<u64> = program
             .instrs
             .iter()
             .map(|i| instr_cycles(&cost, i, &program.layers))
+            .collect();
+        // Layer-contiguous instruction ranges (the compiler emits layers in
+        // op order; checkpoint/resume leans on that).
+        let mut layer_ranges = vec![(0usize, 0usize); program.layers.len()];
+        let mut prev: Option<usize> = None;
+        for (idx, i) in program.instrs.iter().enumerate() {
+            let l = i.layer() as usize;
+            match prev {
+                Some(p) if p == l => layer_ranges[l].1 = idx + 1,
+                _ => {
+                    if let Some(p) = prev {
+                        assert!(p < l, "instruction stream is not layer-ordered");
+                    }
+                    layer_ranges[l] = (idx, idx + 1);
+                    prev = Some(l);
+                }
+            }
+        }
+        let mut producer_layer = vec![None; program.tensors.len()];
+        for (i, meta) in program.layers.iter().enumerate() {
+            producer_layer[meta.output as usize] = Some(i);
+        }
+        let acts = program
+            .tensors
+            .iter()
+            .map(|slot| match slot {
+                TensorSlot::Activation { shape, .. } => vec![0i16; shape.iter().product()],
+                TensorSlot::Weight(_) => Vec::new(),
+            })
             .collect();
         Simulator {
             program,
             cost,
             layers,
-            acts: HashMap::new(),
+            acts,
             acc: vec![0; acc_len],
-            wtile: Vec::new(),
+            wtile: vec![0; r * r],
             wtile_dims: (0, 0),
+            wb_bias: Vec::with_capacity(r),
             instr_costs,
+            layer_ranges,
+            producer_layer,
         }
     }
 
@@ -164,6 +270,28 @@ impl<'a> Simulator<'a> {
 
     /// Run one inference on pre-quantized input codes.
     pub fn run_codes(&mut self, input: &[i16]) -> Result<SimResult> {
+        Ok(self.run_codes_checkpointed(input, &[])?.0)
+    }
+
+    /// [`Simulator::run_codes_checkpointed`] over an f32 image.
+    pub fn run_f32_checkpointed(
+        &mut self,
+        input: &[f32],
+        at_layers: &[usize],
+    ) -> Result<(SimResult, Vec<SimCheckpoint>)> {
+        let q = self.program.input_format;
+        let codes: Vec<i16> = input.iter().map(|&x| q.quantize(x)).collect();
+        self.run_codes_checkpointed(&codes, at_layers)
+    }
+
+    /// Run one inference, capturing a [`SimCheckpoint`] just before each of
+    /// `at_layers` (strictly ascending layer indices) executes — one pass
+    /// yields every resume point a prefix-memoizing caller needs.
+    pub fn run_codes_checkpointed(
+        &mut self,
+        input: &[i16],
+        at_layers: &[usize],
+    ) -> Result<(SimResult, Vec<SimCheckpoint>)> {
         let expected: usize = match &self.program.tensors[self.program.input_tensor as usize] {
             TensorSlot::Activation { shape, .. } => shape.iter().product(),
             _ => bail!("program input is not an activation"),
@@ -171,280 +299,279 @@ impl<'a> Simulator<'a> {
         if input.len() != expected {
             bail!("input has {} elements, program expects {}", input.len(), expected);
         }
-        self.acts.clear();
-        self.acts.insert(self.program.input_tensor, input.to_vec());
+        if !at_layers.windows(2).all(|w| w[0] < w[1]) {
+            bail!("checkpoint layers must be strictly ascending, got {at_layers:?}");
+        }
+        if let Some(&last) = at_layers.last() {
+            if last >= self.layers.len() {
+                bail!("checkpoint layer {last} out of range ({} layers)", self.layers.len());
+            }
+        }
+        self.reset_acts();
+        self.acts[self.program.input_tensor as usize].copy_from_slice(input);
 
-        // Pre-materialize all activation buffers.
-        for (i, slot) in self.program.tensors.iter().enumerate() {
+        let mut totals = RunTotals::new(self.layers.len());
+        let mut ckpts = Vec::with_capacity(at_layers.len());
+        let mut next = 0;
+        for l in 0..self.layers.len() {
+            if next < at_layers.len() && at_layers[next] == l {
+                ckpts.push(self.snapshot(l));
+                next += 1;
+            }
+            self.exec_layer(l, &mut totals)?;
+        }
+        Ok((self.result(totals), ckpts))
+    }
+
+    /// Resume a run from a [`SimCheckpoint`]: install the carried buffers,
+    /// execute layers `ckpt.layer()..`, and account the skipped prefix at
+    /// this program's own (precomputed) instruction costs — dynamic cycles
+    /// equal the static estimate, so the prefix bookkeeping is a sum, not
+    /// a simulation.
+    ///
+    /// Bit-exactness contract: the checkpoint must come from a program
+    /// whose layers before `ckpt.layer()` match this one in topology and
+    /// formats (same program trivially qualifies; `dse::mixed` checks
+    /// format equality before resuming across candidate plans).
+    pub fn run_from(&mut self, ckpt: &SimCheckpoint) -> Result<SimResult> {
+        let n = self.layers.len();
+        if ckpt.layer > n {
+            bail!("checkpoint layer {} out of range ({n} layers)", ckpt.layer);
+        }
+        self.reset_acts();
+        for (id, codes) in &ckpt.acts {
+            match self.acts.get_mut(*id as usize) {
+                Some(buf) if buf.len() == codes.len() => buf.copy_from_slice(codes),
+                _ => bail!("checkpoint tensor {id} does not fit this program"),
+            }
+        }
+        let mut totals = RunTotals::new(n);
+        for l in 0..ckpt.layer {
+            let (lo, hi) = self.layer_ranges[l];
+            for &c in &self.instr_costs[lo..hi] {
+                totals.cycles += c;
+                totals.layer_cycles[l] += c;
+            }
+            totals.instr_count += (hi - lo) as u64;
+        }
+        for l in ckpt.layer..n {
+            self.exec_layer(l, &mut totals)?;
+        }
+        Ok(self.result(totals))
+    }
+
+    /// Restore every activation buffer to its canonical zeroed state.
+    /// Resizes (not just fills) so a panic that unwound mid-`execute` —
+    /// between a `mem::take` and its restore — leaves no lasting damage:
+    /// the engine's worker-pool poison recovery relies on a run starting
+    /// from a fully re-materialized arena.
+    fn reset_acts(&mut self) {
+        for (buf, slot) in self.acts.iter_mut().zip(self.program.tensors.iter()) {
             if let TensorSlot::Activation { shape, .. } = slot {
-                let id = i as u32;
-                if id != self.program.input_tensor {
-                    self.acts.insert(id, vec![0i16; shape.iter().product()]);
+                buf.clear();
+                buf.resize(shape.iter().product(), 0);
+            }
+        }
+    }
+
+    /// Capture the buffers live into layers ≥ `layer`: read by the suffix,
+    /// produced before it (or the program input).
+    fn snapshot(&self, layer: usize) -> SimCheckpoint {
+        let mut ids: BTreeSet<u32> = BTreeSet::new();
+        for ld in &self.layers[layer..] {
+            for &t in &ld.inputs {
+                match self.producer_layer[t as usize] {
+                    Some(p) if p >= layer => {}
+                    _ => {
+                        ids.insert(t);
+                    }
                 }
             }
         }
-
-        let mut cycles = 0u64;
-        let mut layer_cycles = vec![0u64; self.program.layers.len()];
-        let mut instr_count = 0u64;
-
-        for (idx, instr) in self.program.instrs.iter().enumerate() {
-            let c = self.instr_costs[idx];
-            cycles += c;
-            layer_cycles[instr.layer() as usize] += c;
-            instr_count += 1;
-            self.execute(instr).with_context(|| format!("executing {instr:?}"))?;
+        SimCheckpoint {
+            layer,
+            acts: ids.into_iter().map(|id| (id, self.acts[id as usize].clone())).collect(),
         }
-
-        let out = self
-            .acts
-            .get(&self.program.output_tensor)
-            .context("output tensor never written")?
-            .clone();
-        let q = self.program.output_format;
-        Ok(SimResult {
-            output_f32: out.iter().map(|&c| q.dequantize(c)).collect(),
-            output_codes: out,
-            cycles,
-            layer_cycles,
-            latency_ms: self.program.tarch.cycles_to_ms(cycles),
-            instr_count,
-        })
     }
 
-    /// Temporarily remove an activation buffer (borrow-splitting helper).
-    fn take_act(&mut self, id: u32) -> Result<Vec<i16>> {
-        self.acts
-            .remove(&id)
-            .ok_or_else(|| anyhow::anyhow!("activation tensor {id} missing"))
+    fn exec_layer(&mut self, l: usize, totals: &mut RunTotals) -> Result<()> {
+        let program = self.program;
+        let (lo, hi) = self.layer_ranges[l];
+        for idx in lo..hi {
+            let c = self.instr_costs[idx];
+            totals.cycles += c;
+            totals.layer_cycles[l] += c;
+            totals.instr_count += 1;
+            let instr = &program.instrs[idx];
+            self.execute(instr).with_context(|| format!("executing {instr:?}"))?;
+        }
+        Ok(())
+    }
+
+    fn result(&self, totals: RunTotals) -> SimResult {
+        let out = self.acts[self.program.output_tensor as usize].clone();
+        let q = self.program.output_format;
+        SimResult {
+            output_f32: out.iter().map(|&c| q.dequantize(c)).collect(),
+            output_codes: out,
+            cycles: totals.cycles,
+            layer_cycles: totals.layer_cycles,
+            latency_ms: self.program.tarch.cycles_to_ms(totals.cycles),
+            instr_count: totals.instr_count,
+        }
     }
 
     fn execute(&mut self, instr: &Instr) -> Result<()> {
         let r = self.program.tarch.array_size;
+        // Split the borrow once: every arm reads `layers` and mutates
+        // disjoint state (arena, accumulator, tile, scratch).
+        let Simulator { layers, acts, acc, wtile, wtile_dims, wb_bias, .. } = self;
         match instr {
             Instr::LoadWeights { layer, k0, kt, n0, nt } => {
-                let ld = &self.layers[*layer as usize];
+                let ld = &layers[*layer as usize];
                 let w = ld.weights.context("layer has no weights")?;
-                self.wtile.clear();
-                self.wtile.reserve(kt * nt);
-                match ld.kind {
-                    LayerKind::Conv => {
-                        let g = ld.geom.as_ref().unwrap();
-                        // HWIO: element [ky, kx, ci, n]; k = ((ky·kw)+kx)·cin+ci
-                        for dk in 0..*kt {
-                            let k = k0 + dk;
-                            let ci = k % g.cin;
-                            let kx = (k / g.cin) % g.kw;
-                            let ky = k / (g.cin * g.kw);
-                            let base = ((ky * g.kw + kx) * g.cin + ci) * ld.cout + n0;
-                            self.wtile.extend_from_slice(&w[base..base + nt]);
-                        }
-                    }
-                    LayerKind::Dense => {
-                        for dk in 0..*kt {
-                            let base = (k0 + dk) * ld.cout + n0;
-                            self.wtile.extend_from_slice(&w[base..base + nt]);
-                        }
-                    }
-                    other => bail!("LoadWeights on non-matmul layer {other:?}"),
+                if !matches!(ld.kind, LayerKind::Conv | LayerKind::Dense) {
+                    bail!("LoadWeights on non-matmul layer {:?}", ld.kind);
                 }
-                self.wtile_dims = (*kt, *nt);
+                // HWIO is k-major with row stride cout (element [ky,kx,ci,n]
+                // sits at k·cout + n), so conv and dense tiles load by the
+                // same strided copy into the persistent tile buffer.
+                for dk in 0..*kt {
+                    let base = (k0 + dk) * ld.cout + n0;
+                    wtile[dk * nt..dk * nt + nt].copy_from_slice(&w[base..base + nt]);
+                }
+                *wtile_dims = (*kt, *nt);
                 Ok(())
             }
             Instr::MatMul { layer, m0, rows, k0, kt, n0: _, nt, accumulate } => {
-                if self.wtile_dims != (*kt, *nt) {
-                    bail!("matmul tile {kt}×{nt} but loaded {:?}", self.wtile_dims);
+                if *wtile_dims != (*kt, *nt) {
+                    bail!("matmul tile {kt}×{nt} but loaded {:?}", wtile_dims);
                 }
-                let ld = &self.layers[*layer as usize];
-                let input_id = ld.inputs[0];
-                let kind = ld.kind;
-                let geom = ld.geom.clone();
-                let input = self.take_act(input_id)?;
-                let acc = &mut self.acc;
-                let wtile = &self.wtile;
-
-                match kind {
+                let ld = &layers[*layer as usize];
+                let input = acts[ld.inputs[0] as usize].as_slice();
+                match ld.kind {
                     LayerKind::Dense => {
-                        // single logical row: m indexes nothing spatial
-                        for row in 0..*rows {
-                            let acc_base = row * r;
-                            if !accumulate {
-                                acc[acc_base..acc_base + nt].fill(0);
-                            }
-                            for dk in 0..*kt {
-                                let x = input[k0 + dk] as i64;
-                                if x == 0 {
-                                    continue;
-                                }
-                                let wrow = &wtile[dk * nt..dk * nt + nt];
-                                for dn in 0..*nt {
-                                    acc[acc_base + dn] += x * wrow[dn] as i64;
-                                }
-                            }
-                        }
+                        dense_rows(input, wtile, acc, r, *rows, *k0, *kt, *nt, *accumulate)
                     }
                     LayerKind::Conv => {
-                        let g = geom.as_ref().unwrap();
-                        // Pre-decompose the k-range into (ky, kx, ci).
-                        let decomp: Vec<(usize, usize, usize)> = (0..*kt)
-                            .map(|dk| {
-                                let k = k0 + dk;
-                                (k / (g.cin * g.kw), (k / g.cin) % g.kw, k % g.cin)
-                            })
-                            .collect();
-                        for row in 0..*rows {
-                            let m = m0 + row;
-                            let oy = m / g.out_w;
-                            let ox = m % g.out_w;
-                            let acc_base = row * r;
-                            if !accumulate {
-                                acc[acc_base..acc_base + nt].fill(0);
-                            }
-                            let iy0 = (oy * g.stride) as isize - g.padding as isize;
-                            let ix0 = (ox * g.stride) as isize - g.padding as isize;
-                            for (dk, &(ky, kx, ci)) in decomp.iter().enumerate() {
-                                let iy = iy0 + ky as isize;
-                                let ix = ix0 + kx as isize;
-                                if iy < 0 || ix < 0 || iy >= g.in_h as isize || ix >= g.in_w as isize {
-                                    continue;
-                                }
-                                let x = input[(iy as usize * g.in_w + ix as usize) * g.cin + ci] as i64;
-                                if x == 0 {
-                                    continue;
-                                }
-                                let wrow = &wtile[dk * nt..dk * nt + nt];
-                                for dn in 0..*nt {
-                                    acc[acc_base + dn] += x * wrow[dn] as i64;
-                                }
-                            }
+                        let g = ld.geom.as_ref().unwrap();
+                        if g.padding == 0 {
+                            conv_rows_unpadded(
+                                input, wtile, acc, g, r, *m0, *rows, *k0, *kt, *nt, *accumulate,
+                            );
+                        } else {
+                            conv_rows_padded(
+                                input, wtile, acc, g, r, *m0, *rows, *k0, *kt, *nt, *accumulate,
+                            );
                         }
                     }
                     other => bail!("MatMul on non-matmul layer {other:?}"),
                 }
-                self.acts.insert(input_id, input);
                 Ok(())
             }
             Instr::Writeback { layer, m0, rows, n0, nt, relu } => {
-                let ld = &self.layers[*layer as usize];
+                let ld = &layers[*layer as usize];
                 let bias = ld.bias.context("layer has no bias")?;
+                ld.w_fmt.context("matmul layer has no weight format")?;
                 let n_total = ld.geom.as_ref().map(|g| g.cout).unwrap_or(*nt);
-                let out_id = ld.output;
                 // The accumulator's fractional bits are input frac + weight
                 // frac (a code×code product); biases stay at their stored
-                // frac and are shifted to the accumulator scale first, then
-                // the SIMD requant stage narrows to the *output* format —
-                // this is where formats change at layer boundaries.
-                let in_f = ld.in_fmts[0];
-                let w_f = ld.w_fmt.context("matmul layer has no weight format")?;
-                let out_f = ld.out_fmt;
-                let acc_frac = in_f.frac_bits + w_f.frac_bits;
-                let bias_shift = acc_frac as i32 - ld.bias_frac as i32;
-                let out = self
-                    .acts
-                    .get_mut(&out_id)
-                    .ok_or_else(|| anyhow::anyhow!("output tensor {out_id} missing"))?;
+                // frac and are shifted to the accumulator scale (once per
+                // tile column, hoisted out of the row loop), then the SIMD
+                // requant stage narrows to the *output* format — this is
+                // where formats change at layer boundaries.
+                let (out_f, acc_frac, bias_shift) = (ld.out_fmt, ld.acc_frac, ld.bias_shift);
+                wb_bias.clear();
+                wb_bias.extend(bias[*n0..n0 + nt].iter().map(|&b| {
+                    let b = b as i64;
+                    if bias_shift >= 0 {
+                        b << bias_shift
+                    } else {
+                        crate::fixed::rounding_shr(b, (-bias_shift) as u8)
+                    }
+                }));
+                let out = &mut acts[ld.output as usize];
                 for row in 0..*rows {
                     let m = m0 + row;
-                    let acc_base = row * r;
-                    for dn in 0..*nt {
-                        let n = n0 + dn;
-                        let b = bias[n] as i64;
-                        let bterm = if bias_shift >= 0 {
-                            b << bias_shift
-                        } else {
-                            crate::fixed::rounding_shr(b, (-bias_shift) as u8)
-                        };
-                        let a = self.acc[acc_base + dn] + bterm;
-                        let mut v = out_f.requant_acc(a, acc_frac);
-                        if *relu && v < 0 {
-                            v = 0;
-                        }
-                        out[m * n_total + n] = v;
+                    let acc_row = &acc[row * r..row * r + nt];
+                    let out_row = &mut out[m * n_total + n0..m * n_total + n0 + nt];
+                    for ((o, &a), &bterm) in out_row.iter_mut().zip(acc_row).zip(wb_bias.iter()) {
+                        let v = out_f.requant_acc(a + bterm, acc_frac);
+                        *o = if *relu && v < 0 { 0 } else { v };
                     }
                 }
                 Ok(())
             }
             Instr::AddAct { layer, len, relu } => {
-                let ld = &self.layers[*layer as usize];
-                let (a_id, b_id, out_id) = (ld.inputs[0], ld.inputs[1], ld.output);
+                let ld = &layers[*layer as usize];
+                let (a_id, b_id, out_id) =
+                    (ld.inputs[0] as usize, ld.inputs[1] as usize, ld.output as usize);
                 // Align both operands to the wider fractional scale, add in
                 // i64, then requantize the sum into the output format
                 // (round-half-away + saturation, as everywhere else).
                 let (fa, fb, fo) = (ld.in_fmts[0], ld.in_fmts[1], ld.out_fmt);
                 let wf = fa.frac_bits.max(fb.frac_bits);
                 let (sa, sb) = (wf - fa.frac_bits, wf - fb.frac_bits);
-                let a = self.take_act(a_id)?;
-                let b = self.take_act(b_id)?;
-                if a.len() != *len || b.len() != *len {
-                    bail!("addact len mismatch: {} vs {} vs {len}", a.len(), b.len());
+                let mut out = std::mem::take(&mut acts[out_id]);
+                let a = acts[a_id].as_slice();
+                let b = acts[b_id].as_slice();
+                if a.len() != *len || b.len() != *len || out.len() != *len {
+                    let (alen, blen) = (a.len(), b.len());
+                    acts[out_id] = out; // restore the arena before bailing
+                    bail!("addact len mismatch: {alen} vs {blen} vs {len}");
                 }
-                {
-                    let out = self
-                        .acts
-                        .get_mut(&out_id)
-                        .ok_or_else(|| anyhow::anyhow!("output tensor {out_id} missing"))?;
-                    for i in 0..*len {
-                        let s = ((a[i] as i64) << sa) + ((b[i] as i64) << sb);
-                        let v = fo.requant_acc(s, wf);
-                        out[i] = if *relu && v < 0 { 0 } else { v };
-                    }
+                for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                    let s = ((x as i64) << sa) + ((y as i64) << sb);
+                    let v = fo.requant_acc(s, wf);
+                    *o = if *relu && v < 0 { 0 } else { v };
                 }
-                self.acts.insert(a_id, a);
-                self.acts.insert(b_id, b);
+                acts[out_id] = out;
                 Ok(())
             }
             Instr::MaxPool { layer, size } => {
-                let ld = &self.layers[*layer as usize];
-                let g = ld.geom.clone().unwrap();
-                let in_id = ld.inputs[0];
-                let out_id = ld.output;
-                let input = self.take_act(in_id)?;
+                let ld = &layers[*layer as usize];
+                let g = ld.geom.as_ref().unwrap();
                 let (fi, fo) = (ld.in_fmts[0], ld.out_fmt);
-                {
-                    let out = self.acts.get_mut(&out_id).unwrap();
-                    for oy in 0..g.out_h {
-                        for ox in 0..g.out_w {
-                            for c in 0..g.cin {
-                                let mut mx = i16::MIN;
-                                for dy in 0..*size {
-                                    for dx in 0..*size {
-                                        let iy = oy * size + dy;
-                                        let ix = ox * size + dx;
-                                        mx = mx.max(input[(iy * g.in_w + ix) * g.cin + c]);
-                                    }
+                let mut out = std::mem::take(&mut acts[ld.output as usize]);
+                let input = acts[ld.inputs[0] as usize].as_slice();
+                for oy in 0..g.out_h {
+                    for ox in 0..g.out_w {
+                        for c in 0..g.cin {
+                            let mut mx = i16::MIN;
+                            for dy in 0..*size {
+                                for dx in 0..*size {
+                                    let iy = oy * size + dy;
+                                    let ix = ox * size + dx;
+                                    mx = mx.max(input[(iy * g.in_w + ix) * g.cin + c]);
                                 }
-                                // identity when input/output formats agree
-                                out[(oy * g.out_w + ox) * g.cin + c] = fo.requant_code(mx, fi);
                             }
+                            // identity when input/output formats agree
+                            out[(oy * g.out_w + ox) * g.cin + c] = fo.requant_code(mx, fi);
                         }
                     }
                 }
-                self.acts.insert(in_id, input);
+                acts[ld.output as usize] = out;
                 Ok(())
             }
             Instr::Gap { layer } => {
-                let ld = &self.layers[*layer as usize];
-                let g = ld.geom.clone().unwrap();
-                let in_id = ld.inputs[0];
-                let out_id = ld.output;
-                let input = self.take_act(in_id)?;
+                let ld = &layers[*layer as usize];
+                let g = ld.geom.as_ref().unwrap();
                 let (fi, fo) = (ld.in_fmts[0], ld.out_fmt);
-                {
-                    let out = self.acts.get_mut(&out_id).unwrap();
-                    let area = (g.in_h * g.in_w) as i64;
-                    let half = area / 2;
-                    for c in 0..g.cin {
-                        let mut sum = 0i64;
-                        for p in 0..(g.in_h * g.in_w) {
-                            sum += input[p * g.cin + c] as i64;
-                        }
-                        // round-half-away division (SIMD divider), then the
-                        // requant stage moves the mean into the output format
-                        let v = if sum >= 0 { (sum + half) / area } else { (sum - half) / area };
-                        out[c] = fo.requant_acc(v, fi.frac_bits);
+                let mut out = std::mem::take(&mut acts[ld.output as usize]);
+                let input = acts[ld.inputs[0] as usize].as_slice();
+                let area = (g.in_h * g.in_w) as i64;
+                let half = area / 2;
+                for c in 0..g.cin {
+                    let mut sum = 0i64;
+                    for p in 0..(g.in_h * g.in_w) {
+                        sum += input[p * g.cin + c] as i64;
                     }
+                    // round-half-away division (SIMD divider), then the
+                    // requant stage moves the mean into the output format
+                    let v = if sum >= 0 { (sum + half) / area } else { (sum - half) / area };
+                    out[c] = fo.requant_acc(v, fi.frac_bits);
                 }
-                self.acts.insert(in_id, input);
+                acts[ld.output as usize] = out;
                 Ok(())
             }
         }
@@ -458,12 +585,131 @@ impl<'a> Simulator<'a> {
     /// Activation buffers by tensor name after the last run — the hook
     /// `quant::PlanCalibrator` uses to observe per-layer amplitudes.
     pub fn activation_codes(&self) -> impl Iterator<Item = (&str, &[i16])> {
-        self.acts.iter().filter_map(move |(id, buf)| {
-            match &self.program.tensors[*id as usize] {
-                TensorSlot::Activation { name, .. } => Some((name.as_str(), buf.as_slice())),
-                _ => None,
-            }
+        self.program.tensors.iter().enumerate().filter_map(move |(id, slot)| match slot {
+            TensorSlot::Activation { name, .. } => Some((name.as_str(), self.acts[id].as_slice())),
+            _ => None,
         })
+    }
+}
+
+/// One contiguous input strip × the matching weight-tile rows — the blocked
+/// inner MAC kernel shared by the conv and dense paths.  `dk0` is the tile
+/// row of the strip's first element; zero activations skip the row entirely
+/// (the PE array would still clock them, but cycles are priced statically).
+#[inline]
+fn mac_strip(xs: &[i16], wtile: &[i16], acc_row: &mut [i64], dk0: usize, nt: usize) {
+    for (j, &xv) in xs.iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        let x = xv as i64;
+        let wrow = &wtile[(dk0 + j) * nt..(dk0 + j) * nt + nt];
+        for (a, &w) in acc_row.iter_mut().zip(wrow) {
+            *a += x * w as i64;
+        }
+    }
+}
+
+/// Dense MatMul: the whole k-tile is one contiguous input strip.
+#[allow(clippy::too_many_arguments)]
+fn dense_rows(
+    input: &[i16],
+    wtile: &[i16],
+    acc: &mut [i64],
+    r: usize,
+    rows: usize,
+    k0: usize,
+    kt: usize,
+    nt: usize,
+    accumulate: bool,
+) {
+    for row in 0..rows {
+        let acc_row = &mut acc[row * r..row * r + nt];
+        if !accumulate {
+            acc_row.fill(0);
+        }
+        mac_strip(&input[k0..k0 + kt], wtile, acc_row, 0, nt);
+    }
+}
+
+/// Conv MatMul, general path: the im2col k index is (ky·kw + kx)·cin + ci,
+/// so a k-tile decomposes into at most ⌈kt/cin⌉+1 taps, each one contiguous
+/// `ci` strip of the input row — one bounds decision per tap (a padded tap
+/// contributes zeros and is skipped whole), no per-element decomposition.
+#[allow(clippy::too_many_arguments)]
+fn conv_rows_padded(
+    input: &[i16],
+    wtile: &[i16],
+    acc: &mut [i64],
+    g: &ConvGeom,
+    r: usize,
+    m0: usize,
+    rows: usize,
+    k0: usize,
+    kt: usize,
+    nt: usize,
+    accumulate: bool,
+) {
+    let (tap_lo, tap_hi) = (k0 / g.cin, (k0 + kt - 1) / g.cin);
+    for row in 0..rows {
+        let m = m0 + row;
+        let (oy, ox) = (m / g.out_w, m % g.out_w);
+        let acc_row = &mut acc[row * r..row * r + nt];
+        if !accumulate {
+            acc_row.fill(0);
+        }
+        let iy0 = (oy * g.stride) as isize - g.padding as isize;
+        let ix0 = (ox * g.stride) as isize - g.padding as isize;
+        for tap in tap_lo..=tap_hi {
+            let (ky, kx) = (tap / g.kw, tap % g.kw);
+            let iy = iy0 + ky as isize;
+            let ix = ix0 + kx as isize;
+            if iy < 0 || ix < 0 || iy >= g.in_h as isize || ix >= g.in_w as isize {
+                continue;
+            }
+            let k_start = tap * g.cin;
+            let lo = k0.max(k_start);
+            let hi = (k0 + kt).min(k_start + g.cin);
+            let base = (iy as usize * g.in_w + ix as usize) * g.cin + (lo - k_start);
+            mac_strip(&input[base..base + (hi - lo)], wtile, acc_row, lo - k0, nt);
+        }
+    }
+}
+
+/// Conv MatMul fast path for padding == 0 (any stride): every tap of every
+/// output row is in bounds by construction, so the gather is pure usize
+/// arithmetic with no bounds branches at all.
+#[allow(clippy::too_many_arguments)]
+fn conv_rows_unpadded(
+    input: &[i16],
+    wtile: &[i16],
+    acc: &mut [i64],
+    g: &ConvGeom,
+    r: usize,
+    m0: usize,
+    rows: usize,
+    k0: usize,
+    kt: usize,
+    nt: usize,
+    accumulate: bool,
+) {
+    let (tap_lo, tap_hi) = (k0 / g.cin, (k0 + kt - 1) / g.cin);
+    for row in 0..rows {
+        let m = m0 + row;
+        let (oy, ox) = (m / g.out_w, m % g.out_w);
+        let acc_row = &mut acc[row * r..row * r + nt];
+        if !accumulate {
+            acc_row.fill(0);
+        }
+        let (iy0, ix0) = (oy * g.stride, ox * g.stride);
+        for tap in tap_lo..=tap_hi {
+            let (ky, kx) = (tap / g.kw, tap % g.kw);
+            let k_start = tap * g.cin;
+            let lo = k0.max(k_start);
+            let hi = (k0 + kt).min(k_start + g.cin);
+            let base = ((iy0 + ky) * g.in_w + (ix0 + kx)) * g.cin + (lo - k_start);
+            mac_strip(&input[base..base + (hi - lo)], wtile, acc_row, lo - k0, nt);
+        }
     }
 }
 
@@ -783,5 +1029,57 @@ mod tests {
         let b = sim.run_f32(&x).unwrap();
         assert_eq!(a.output_codes, b.output_codes);
         assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_full_run() {
+        let mut rng = Prng::new(46);
+        let q = QFormat::default();
+        let w: Vec<i16> = (0..9 * 2 * 3).map(|_| q.quantize(rng.normal() * 0.4)).collect();
+        let g = build_graph(8, 2, 3, 1, false, w, vec![5, -5, 0], true);
+        let program = crate::tcompiler::compile(&g, &Tarch::z7020_8x8()).unwrap();
+        let mut sim = Simulator::new(&program, &g);
+        let x: Vec<f32> = (0..8 * 8 * 2).map(|_| rng.f32()).collect();
+        let codes = q.quantize_slice(&x);
+
+        let (full, ckpts) = sim.run_codes_checkpointed(&codes, &[0, 1]).unwrap();
+        assert_eq!(ckpts.len(), 2);
+        assert_eq!(ckpts[0].layer(), 0);
+        assert_eq!(ckpts[1].layer(), 1);
+        // resume from either checkpoint reproduces the full run bit-exactly
+        for ckpt in &ckpts {
+            let resumed = sim.run_from(ckpt).unwrap();
+            assert_eq!(resumed.output_codes, full.output_codes, "layer {}", ckpt.layer());
+            assert_eq!(resumed.cycles, full.cycles);
+            assert_eq!(resumed.layer_cycles, full.layer_cycles);
+            assert_eq!(resumed.instr_count, full.instr_count);
+        }
+        // the layer-1 checkpoint carries only the gap's live input (a1)
+        assert_eq!(ckpts[1].n_tensors(), 1);
+    }
+
+    #[test]
+    fn checkpoint_args_validated() {
+        let g = build_graph(4, 1, 1, 1, false, vec![0; 9], vec![0], true);
+        let program = crate::tcompiler::compile(&g, &Tarch::z7020_8x8()).unwrap();
+        let mut sim = Simulator::new(&program, &g);
+        let codes = vec![0i16; 16];
+        assert!(sim.run_codes_checkpointed(&codes, &[1, 0]).is_err());
+        assert!(sim.run_codes_checkpointed(&codes, &[9]).is_err());
+        assert!(sim.run_codes_checkpointed(&codes, &[0, 1]).is_ok());
+    }
+
+    #[test]
+    fn checkpoint_rejected_by_mismatched_program() {
+        // a checkpoint whose buffers do not fit the target program errors
+        let g_a = build_graph(8, 2, 3, 1, false, vec![0; 9 * 2 * 3], vec![0; 3], true);
+        let g_b = build_graph(6, 2, 3, 1, false, vec![0; 9 * 2 * 3], vec![0; 3], true);
+        let p_a = crate::tcompiler::compile(&g_a, &Tarch::z7020_8x8()).unwrap();
+        let p_b = crate::tcompiler::compile(&g_b, &Tarch::z7020_8x8()).unwrap();
+        let mut sim_a = Simulator::new(&p_a, &g_a);
+        let codes_a = vec![0i16; 8 * 8 * 2];
+        let (_, ckpts) = sim_a.run_codes_checkpointed(&codes_a, &[1]).unwrap();
+        let mut sim_b = Simulator::new(&p_b, &g_b);
+        assert!(sim_b.run_from(&ckpts[0]).is_err());
     }
 }

@@ -1,0 +1,420 @@
+//! The straightforward scalar interpreter — kept as the golden oracle.
+//!
+//! This is the simulator the blocked kernels in [`super`] replaced: per
+//! instruction it clones the layer's conv geometry, re-decomposes every k
+//! index into `(ky, kx, ci)`, bounds-checks per element, and shuttles
+//! activation buffers through a `HashMap` take/insert dance.  Slow on
+//! purpose-free grounds, but *obviously* faithful to the ISA semantics —
+//! which is exactly what an oracle should be.
+//!
+//! Two consumers:
+//!
+//! * `rust/tests/sim_kernel_parity.rs` pins [`super::Simulator`] against
+//!   [`ReferenceSimulator`] bit-exactly (output codes, cycles, per-layer
+//!   cycles, instruction counts) across padding/stride/odd-tile shapes and
+//!   mixed per-layer precision plans;
+//! * `benches/sim_throughput.rs` measures the fast path's speedup over
+//!   this interpreter for `BENCH_sim.json`.
+//!
+//! Keep this module boring: any optimization applied here would erode its
+//! value as an independent check.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fixed::QFormat;
+use crate::graph::Graph;
+use crate::tcompiler::{instr_cycles, ConvGeom, CostModel, Instr, LayerKind, Program, TensorSlot};
+
+use super::SimResult;
+
+/// Per-layer data resolved once at construction (shared with the fast
+/// path's constructor shape; the run loop below is the unoptimized one).
+struct LayerData<'a> {
+    weights: Option<&'a [i16]>,
+    bias: Option<&'a [i32]>,
+    geom: Option<ConvGeom>,
+    kind: LayerKind,
+    inputs: Vec<u32>,
+    output: u32,
+    cout: usize,
+    in_fmts: Vec<QFormat>,
+    out_fmt: QFormat,
+    w_fmt: Option<QFormat>,
+    bias_frac: u8,
+}
+
+/// The scalar interpreter: executes a [`Program`] with per-element
+/// decomposition and per-instruction allocations.
+pub struct ReferenceSimulator<'a> {
+    program: &'a Program,
+    layers: Vec<LayerData<'a>>,
+    /// Activation buffers by tensor id, NHWC row-major codes.
+    acts: HashMap<u32, Vec<i16>>,
+    /// Accumulator memory: acc_depth rows × array_size columns, i64.
+    acc: Vec<i64>,
+    /// Currently loaded weight tile (kt×nt), kt-major.
+    wtile: Vec<i16>,
+    wtile_dims: (usize, usize),
+    cost: CostModel,
+}
+
+impl<'a> ReferenceSimulator<'a> {
+    pub fn new(program: &'a Program, graph: &'a Graph) -> Self {
+        let acc_len = program.tarch.accumulator_depth * program.tarch.array_size;
+        let op_by_name: HashMap<&str, &crate::graph::Op> =
+            graph.ops.iter().map(|op| (op.name(), op)).collect();
+        let mut layers = Vec::with_capacity(program.layers.len());
+        for meta in &program.layers {
+            let mut weights = None;
+            let mut bias = None;
+            let mut cout = 0;
+            if matches!(meta.kind, LayerKind::Conv | LayerKind::Dense) {
+                if let Some(crate::graph::Op::Conv2d { weights: w, bias: b, .. }
+                | crate::graph::Op::Dense { weights: w, bias: b, .. }) =
+                    op_by_name.get(meta.name.as_str())
+                {
+                    let wt = &graph.weights[w];
+                    cout = *wt.shape.last().unwrap();
+                    weights = wt.as_i16().ok();
+                    bias = graph.weights[b].as_i32().ok();
+                }
+            }
+            layers.push(LayerData {
+                weights,
+                bias,
+                geom: meta.geom.clone(),
+                kind: meta.kind,
+                inputs: meta.inputs.clone(),
+                output: meta.output,
+                cout,
+                in_fmts: meta.input_formats.clone(),
+                out_fmt: meta.output_format,
+                w_fmt: meta.weight_format,
+                bias_frac: meta.bias_frac,
+            });
+        }
+        ReferenceSimulator {
+            program,
+            layers,
+            acts: HashMap::new(),
+            acc: vec![0; acc_len],
+            wtile: Vec::new(),
+            wtile_dims: (0, 0),
+            cost: CostModel::new(program.tarch.clone()),
+        }
+    }
+
+    /// Run one inference on an f32 NHWC input image.
+    pub fn run_f32(&mut self, input: &[f32]) -> Result<SimResult> {
+        let q = self.program.input_format;
+        let codes: Vec<i16> = input.iter().map(|&x| q.quantize(x)).collect();
+        self.run_codes(&codes)
+    }
+
+    /// Run one inference on pre-quantized input codes.
+    pub fn run_codes(&mut self, input: &[i16]) -> Result<SimResult> {
+        let expected: usize = match &self.program.tensors[self.program.input_tensor as usize] {
+            TensorSlot::Activation { shape, .. } => shape.iter().product(),
+            _ => bail!("program input is not an activation"),
+        };
+        if input.len() != expected {
+            bail!("input has {} elements, program expects {}", input.len(), expected);
+        }
+        self.acts.clear();
+        self.acts.insert(self.program.input_tensor, input.to_vec());
+
+        // Pre-materialize all activation buffers.
+        for (i, slot) in self.program.tensors.iter().enumerate() {
+            if let TensorSlot::Activation { shape, .. } = slot {
+                let id = i as u32;
+                if id != self.program.input_tensor {
+                    self.acts.insert(id, vec![0i16; shape.iter().product()]);
+                }
+            }
+        }
+
+        let mut cycles = 0u64;
+        let mut layer_cycles = vec![0u64; self.program.layers.len()];
+        let mut instr_count = 0u64;
+
+        for instr in &self.program.instrs {
+            let c = instr_cycles(&self.cost, instr, &self.program.layers);
+            cycles += c;
+            layer_cycles[instr.layer() as usize] += c;
+            instr_count += 1;
+            self.execute(instr).with_context(|| format!("executing {instr:?}"))?;
+        }
+
+        let out = self
+            .acts
+            .get(&self.program.output_tensor)
+            .context("output tensor never written")?
+            .clone();
+        let q = self.program.output_format;
+        Ok(SimResult {
+            output_f32: out.iter().map(|&c| q.dequantize(c)).collect(),
+            output_codes: out,
+            cycles,
+            layer_cycles,
+            latency_ms: self.program.tarch.cycles_to_ms(cycles),
+            instr_count,
+        })
+    }
+
+    /// Temporarily remove an activation buffer (borrow-splitting helper).
+    fn take_act(&mut self, id: u32) -> Result<Vec<i16>> {
+        self.acts
+            .remove(&id)
+            .ok_or_else(|| anyhow::anyhow!("activation tensor {id} missing"))
+    }
+
+    fn execute(&mut self, instr: &Instr) -> Result<()> {
+        let r = self.program.tarch.array_size;
+        match instr {
+            Instr::LoadWeights { layer, k0, kt, n0, nt } => {
+                let ld = &self.layers[*layer as usize];
+                let w = ld.weights.context("layer has no weights")?;
+                self.wtile.clear();
+                self.wtile.reserve(kt * nt);
+                match ld.kind {
+                    LayerKind::Conv => {
+                        let g = ld.geom.as_ref().unwrap();
+                        // HWIO: element [ky, kx, ci, n]; k = ((ky·kw)+kx)·cin+ci
+                        for dk in 0..*kt {
+                            let k = k0 + dk;
+                            let ci = k % g.cin;
+                            let kx = (k / g.cin) % g.kw;
+                            let ky = k / (g.cin * g.kw);
+                            let base = ((ky * g.kw + kx) * g.cin + ci) * ld.cout + n0;
+                            self.wtile.extend_from_slice(&w[base..base + nt]);
+                        }
+                    }
+                    LayerKind::Dense => {
+                        for dk in 0..*kt {
+                            let base = (k0 + dk) * ld.cout + n0;
+                            self.wtile.extend_from_slice(&w[base..base + nt]);
+                        }
+                    }
+                    other => bail!("LoadWeights on non-matmul layer {other:?}"),
+                }
+                self.wtile_dims = (*kt, *nt);
+                Ok(())
+            }
+            Instr::MatMul { layer, m0, rows, k0, kt, n0: _, nt, accumulate } => {
+                if self.wtile_dims != (*kt, *nt) {
+                    bail!("matmul tile {kt}×{nt} but loaded {:?}", self.wtile_dims);
+                }
+                let ld = &self.layers[*layer as usize];
+                let input_id = ld.inputs[0];
+                let kind = ld.kind;
+                let geom = ld.geom.clone();
+                let input = self.take_act(input_id)?;
+                let acc = &mut self.acc;
+                let wtile = &self.wtile;
+
+                match kind {
+                    LayerKind::Dense => {
+                        // single logical row: m indexes nothing spatial
+                        for row in 0..*rows {
+                            let acc_base = row * r;
+                            if !accumulate {
+                                acc[acc_base..acc_base + nt].fill(0);
+                            }
+                            for dk in 0..*kt {
+                                let x = input[k0 + dk] as i64;
+                                if x == 0 {
+                                    continue;
+                                }
+                                let wrow = &wtile[dk * nt..dk * nt + nt];
+                                for dn in 0..*nt {
+                                    acc[acc_base + dn] += x * wrow[dn] as i64;
+                                }
+                            }
+                        }
+                    }
+                    LayerKind::Conv => {
+                        let g = geom.as_ref().unwrap();
+                        // Pre-decompose the k-range into (ky, kx, ci).
+                        let decomp: Vec<(usize, usize, usize)> = (0..*kt)
+                            .map(|dk| {
+                                let k = k0 + dk;
+                                (k / (g.cin * g.kw), (k / g.cin) % g.kw, k % g.cin)
+                            })
+                            .collect();
+                        for row in 0..*rows {
+                            let m = m0 + row;
+                            let oy = m / g.out_w;
+                            let ox = m % g.out_w;
+                            let acc_base = row * r;
+                            if !accumulate {
+                                acc[acc_base..acc_base + nt].fill(0);
+                            }
+                            let iy0 = (oy * g.stride) as isize - g.padding as isize;
+                            let ix0 = (ox * g.stride) as isize - g.padding as isize;
+                            for (dk, &(ky, kx, ci)) in decomp.iter().enumerate() {
+                                let iy = iy0 + ky as isize;
+                                let ix = ix0 + kx as isize;
+                                if iy < 0 || ix < 0 || iy >= g.in_h as isize || ix >= g.in_w as isize {
+                                    continue;
+                                }
+                                let x = input[(iy as usize * g.in_w + ix as usize) * g.cin + ci] as i64;
+                                if x == 0 {
+                                    continue;
+                                }
+                                let wrow = &wtile[dk * nt..dk * nt + nt];
+                                for dn in 0..*nt {
+                                    acc[acc_base + dn] += x * wrow[dn] as i64;
+                                }
+                            }
+                        }
+                    }
+                    other => bail!("MatMul on non-matmul layer {other:?}"),
+                }
+                self.acts.insert(input_id, input);
+                Ok(())
+            }
+            Instr::Writeback { layer, m0, rows, n0, nt, relu } => {
+                let ld = &self.layers[*layer as usize];
+                let bias = ld.bias.context("layer has no bias")?;
+                let n_total = ld.geom.as_ref().map(|g| g.cout).unwrap_or(*nt);
+                let out_id = ld.output;
+                let in_f = ld.in_fmts[0];
+                let w_f = ld.w_fmt.context("matmul layer has no weight format")?;
+                let out_f = ld.out_fmt;
+                let acc_frac = in_f.frac_bits + w_f.frac_bits;
+                let bias_shift = acc_frac as i32 - ld.bias_frac as i32;
+                let out = self
+                    .acts
+                    .get_mut(&out_id)
+                    .ok_or_else(|| anyhow::anyhow!("output tensor {out_id} missing"))?;
+                for row in 0..*rows {
+                    let m = m0 + row;
+                    let acc_base = row * r;
+                    for dn in 0..*nt {
+                        let n = n0 + dn;
+                        let b = bias[n] as i64;
+                        let bterm = if bias_shift >= 0 {
+                            b << bias_shift
+                        } else {
+                            crate::fixed::rounding_shr(b, (-bias_shift) as u8)
+                        };
+                        let a = self.acc[acc_base + dn] + bterm;
+                        let mut v = out_f.requant_acc(a, acc_frac);
+                        if *relu && v < 0 {
+                            v = 0;
+                        }
+                        out[m * n_total + n] = v;
+                    }
+                }
+                Ok(())
+            }
+            Instr::AddAct { layer, len, relu } => {
+                let ld = &self.layers[*layer as usize];
+                let (a_id, b_id, out_id) = (ld.inputs[0], ld.inputs[1], ld.output);
+                let (fa, fb, fo) = (ld.in_fmts[0], ld.in_fmts[1], ld.out_fmt);
+                let wf = fa.frac_bits.max(fb.frac_bits);
+                let (sa, sb) = (wf - fa.frac_bits, wf - fb.frac_bits);
+                let a = self.take_act(a_id)?;
+                let b = self.take_act(b_id)?;
+                if a.len() != *len || b.len() != *len {
+                    bail!("addact len mismatch: {} vs {} vs {len}", a.len(), b.len());
+                }
+                {
+                    let out = self
+                        .acts
+                        .get_mut(&out_id)
+                        .ok_or_else(|| anyhow::anyhow!("output tensor {out_id} missing"))?;
+                    for i in 0..*len {
+                        let s = ((a[i] as i64) << sa) + ((b[i] as i64) << sb);
+                        let v = fo.requant_acc(s, wf);
+                        out[i] = if *relu && v < 0 { 0 } else { v };
+                    }
+                }
+                self.acts.insert(a_id, a);
+                self.acts.insert(b_id, b);
+                Ok(())
+            }
+            Instr::MaxPool { layer, size } => {
+                let ld = &self.layers[*layer as usize];
+                let g = ld.geom.clone().unwrap();
+                let in_id = ld.inputs[0];
+                let out_id = ld.output;
+                let input = self.take_act(in_id)?;
+                let (fi, fo) = (ld.in_fmts[0], ld.out_fmt);
+                {
+                    let out = self.acts.get_mut(&out_id).unwrap();
+                    for oy in 0..g.out_h {
+                        for ox in 0..g.out_w {
+                            for c in 0..g.cin {
+                                let mut mx = i16::MIN;
+                                for dy in 0..*size {
+                                    for dx in 0..*size {
+                                        let iy = oy * size + dy;
+                                        let ix = ox * size + dx;
+                                        mx = mx.max(input[(iy * g.in_w + ix) * g.cin + c]);
+                                    }
+                                }
+                                out[(oy * g.out_w + ox) * g.cin + c] = fo.requant_code(mx, fi);
+                            }
+                        }
+                    }
+                }
+                self.acts.insert(in_id, input);
+                Ok(())
+            }
+            Instr::Gap { layer } => {
+                let ld = &self.layers[*layer as usize];
+                let g = ld.geom.clone().unwrap();
+                let in_id = ld.inputs[0];
+                let out_id = ld.output;
+                let input = self.take_act(in_id)?;
+                let (fi, fo) = (ld.in_fmts[0], ld.out_fmt);
+                {
+                    let out = self.acts.get_mut(&out_id).unwrap();
+                    let area = (g.in_h * g.in_w) as i64;
+                    let half = area / 2;
+                    for c in 0..g.cin {
+                        let mut sum = 0i64;
+                        for p in 0..(g.in_h * g.in_w) {
+                            sum += input[p * g.cin + c] as i64;
+                        }
+                        let v = if sum >= 0 { (sum + half) / area } else { (sum - half) / area };
+                        out[c] = fo.requant_acc(v, fi.frac_bits);
+                    }
+                }
+                self.acts.insert(in_id, input);
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::BackboneSpec;
+    use crate::tarch::Tarch;
+    use crate::tcompiler::compile;
+    use crate::util::Prng;
+
+    #[test]
+    fn reference_agrees_with_fast_path_on_a_backbone() {
+        // the full golden suite lives in tests/sim_kernel_parity.rs; this
+        // in-crate smoke check keeps the oracle honest under `cargo test`
+        let spec = BackboneSpec { image_size: 12, feature_maps: 4, ..BackboneSpec::headline() };
+        let g = spec.build_graph(3).unwrap();
+        let program = compile(&g, &Tarch::z7020_8x8()).unwrap();
+        let mut fast = super::super::Simulator::new(&program, &g);
+        let mut oracle = ReferenceSimulator::new(&program, &g);
+        let mut rng = Prng::new(8);
+        let img: Vec<f32> = (0..12 * 12 * 3).map(|_| rng.f32()).collect();
+        let a = fast.run_f32(&img).unwrap();
+        let b = oracle.run_f32(&img).unwrap();
+        assert_eq!(a.output_codes, b.output_codes);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.layer_cycles, b.layer_cycles);
+        assert_eq!(a.instr_count, b.instr_count);
+    }
+}

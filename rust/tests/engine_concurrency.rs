@@ -18,6 +18,12 @@ fn tiny_engine() -> Arc<Engine> {
     Arc::new(EngineBuilder::new().graph(g).tarch(Tarch::z7020_8x8()).build().unwrap())
 }
 
+fn tiny_engine_workers(n: usize) -> Arc<Engine> {
+    let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+    let g = spec.build_graph(5).unwrap();
+    Arc::new(EngineBuilder::new().graph(g).tarch(Tarch::z7020_8x8()).workers(n).build().unwrap())
+}
+
 fn image(rng: &mut Prng) -> Vec<f32> {
     (0..IMG_ELEMS).map(|_| rng.f32()).collect()
 }
@@ -98,6 +104,60 @@ fn batch_of_n_returns_n_features_in_one_call() {
         let single = engine.infer(InferRequest::single(img.clone())).unwrap();
         assert_eq!(single.into_single().unwrap().features, item.features);
     }
+}
+
+#[test]
+fn pooled_batch_identical_to_single_worker_and_in_order() {
+    // The parallel-pool contract: fanning a batch across N workers returns
+    // exactly the features/cycles of the serial single-worker path, in
+    // request order.
+    let serial = tiny_engine_workers(1);
+    let pooled = tiny_engine_workers(4);
+    assert_eq!(serial.workers(), 1);
+    assert_eq!(pooled.workers(), 4);
+
+    let mut rng = Prng::new(33);
+    let imgs: Vec<Vec<f32>> = (0..10).map(|_| image(&mut rng)).collect();
+    let a = serial.infer(InferRequest::batch(imgs.clone())).unwrap();
+    let b = pooled.infer(InferRequest::batch(imgs.clone())).unwrap();
+    assert_eq!(a.items.len(), b.items.len());
+    for (i, (x, y)) in a.items.iter().zip(&b.items).enumerate() {
+        assert_eq!(x.features, y.features, "item {i} diverged across pool sizes");
+        assert_eq!(x.metrics.cycles, y.metrics.cycles, "item {i} cycles diverged");
+        assert!(y.metrics.modeled_latency_ms.unwrap() > 0.0);
+        assert!(y.metrics.host_us > 0.0, "item {i} lost host timing in the pool");
+    }
+    // order pinned against independent single-image requests
+    for (i, img) in imgs.iter().enumerate() {
+        let single = pooled.infer(InferRequest::single(img.clone())).unwrap();
+        assert_eq!(
+            single.into_single().unwrap().features,
+            b.items[i].features,
+            "batch item {i} out of order"
+        );
+    }
+    // aggregates match too
+    assert_eq!(a.total_cycles(), b.total_cycles());
+}
+
+#[test]
+fn pooled_engine_concurrent_sessions_match_serial() {
+    // the four-client workload of `four_threads_one_engine_match_serial`,
+    // but over an explicit 4-worker pool: per-session results must still
+    // be bit-identical to the serial reference
+    const CLIENTS: u64 = 4;
+    let engine = tiny_engine_workers(4);
+    let serial: Vec<_> = (0..CLIENTS).map(|seed| run_client(&engine, seed)).collect();
+    let concurrent: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|seed| {
+                let engine = engine.clone();
+                s.spawn(move || run_client(&engine, seed))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+    assert_eq!(serial, concurrent, "pooled engine diverged from the serial run");
 }
 
 #[test]

@@ -1,0 +1,219 @@
+//! Golden bit-exactness suite: the blocked fast-path kernels must not move
+//! a single bit — outputs *or* modeled cycles — relative to the
+//! straightforward scalar interpreter they replaced
+//! ([`pefsl::sim::reference::ReferenceSimulator`], kept for exactly this
+//! purpose).
+//!
+//! Coverage follows the `precision_plan_parity` pattern: padding/stride
+//! combinations, odd tile shapes (k-ranges that split conv taps across
+//! tiles), residual adds, pools, and mixed per-layer precision plans.
+
+use pefsl::dse::BackboneSpec;
+use pefsl::fixed::QFormat;
+use pefsl::graph::{import, Graph};
+use pefsl::quant::{PlanCalibrator, PrecisionPlan, QuantPolicy};
+use pefsl::sim::reference::ReferenceSimulator;
+use pefsl::sim::Simulator;
+use pefsl::tarch::Tarch;
+use pefsl::tcompiler::compile;
+use pefsl::util::tensorio::Tensor;
+use pefsl::util::Prng;
+
+fn images(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Prng::new(seed);
+    (0..n).map(|_| (0..elems).map(|_| rng.f32() * 2.0 - 0.5).collect()).collect()
+}
+
+/// Run both simulators on the same images and demand bit-identical
+/// results: output codes, f32 view, total and per-layer cycles, and
+/// instruction counts.
+fn assert_parity(g: &Graph, tarch: &Tarch, imgs: &[Vec<f32>], what: &str) {
+    let program = compile(g, tarch).unwrap();
+    let mut fast = Simulator::new(&program, g);
+    let mut oracle = ReferenceSimulator::new(&program, g);
+    for (i, img) in imgs.iter().enumerate() {
+        let a = fast.run_f32(img).unwrap();
+        let b = oracle.run_f32(img).unwrap();
+        assert_eq!(a.output_codes, b.output_codes, "{what}: image {i} codes diverged");
+        assert_eq!(a.output_f32, b.output_f32, "{what}: image {i} f32 view diverged");
+        assert_eq!(a.cycles, b.cycles, "{what}: image {i} cycles diverged");
+        assert_eq!(a.layer_cycles, b.layer_cycles, "{what}: image {i} layer cycles diverged");
+        assert_eq!(a.instr_count, b.instr_count, "{what}: image {i} instr count diverged");
+    }
+}
+
+/// One conv (+ optional gap) graph with explicit padding/stride.
+fn conv_graph(
+    h: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    padding: usize,
+    relu: bool,
+    seed: u64,
+) -> Graph {
+    let q = QFormat::default();
+    let mut rng = Prng::new(seed);
+    let w_codes: Vec<i16> =
+        (0..9 * cin * cout).map(|_| q.quantize(rng.normal() * 0.3)).collect();
+    let b_codes: Vec<i32> = (0..cout).map(|_| q.quantize(rng.normal() * 0.2) as i32).collect();
+    let doc = pefsl::json::parse(&format!(
+        r#"{{
+          "name": "t", "format": {{"total_bits": 16, "frac_bits": 8}},
+          "input": {{"name": "input", "shape": [1, {h}, {h}, {cin}]}},
+          "output": {{"name": "features", "dim": {cout}}},
+          "ops": [
+            {{"op": "conv2d", "name": "c1", "input": "input", "output": "a1",
+              "weights": "c1.w", "bias": "c1.b", "stride": {stride},
+              "padding": {padding}, "relu": {relu}}},
+            {{"op": "gap", "name": "gap", "input": "a1", "output": "features"}}
+          ]
+        }}"#
+    ))
+    .unwrap();
+    import(
+        &doc,
+        vec![
+            ("c1.w".into(), Tensor::i16(vec![3, 3, cin, cout], w_codes)),
+            ("c1.b".into(), Tensor::i32(vec![cout], b_codes)),
+        ],
+    )
+    .unwrap()
+}
+
+#[test]
+fn golden_padding_stride_grid() {
+    // every padding/stride combination the lowering supports, including
+    // the no-padding fast path and odd input sizes
+    for &(h, cin, cout, stride, padding) in &[
+        (8usize, 3usize, 5usize, 1usize, 1usize), // padded, dense output
+        (9, 2, 3, 2, 1),                          // padded + strided, odd size
+        (8, 3, 4, 1, 0),                          // no-padding fast path
+        (11, 2, 5, 2, 0),                         // no-padding + stride 2, odd size
+        (7, 1, 1, 1, 1),                          // single-channel edge
+    ] {
+        let g = conv_graph(h, cin, cout, stride, padding, stride == 1, 100 + h as u64);
+        let imgs = images(2, h * h * cin, 7 + h as u64);
+        for tarch in [Tarch::z7020_8x8(), Tarch::z7020_12x12()] {
+            assert_parity(
+                &g,
+                &tarch,
+                &imgs,
+                &format!("h={h} cin={cin} cout={cout} s={stride} p={padding} @{}", tarch.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_odd_tile_shapes() {
+    // channel/width combinations that split conv taps across k-tiles and
+    // leave ragged n-tiles (cin·9 and cout not multiples of the array)
+    for &(cin, cout) in &[(5usize, 7usize), (3, 13), (7, 9)] {
+        let g = conv_graph(10, cin, cout, 1, 1, false, 200 + cin as u64);
+        let imgs = images(2, 10 * 10 * cin, 17 + cout as u64);
+        assert_parity(&g, &Tarch::z7020_8x8(), &imgs, &format!("odd tiles cin={cin} cout={cout}"));
+    }
+}
+
+#[test]
+fn golden_full_backbone_with_residuals_and_pools() {
+    // the real topology: convs + residual adds + maxpool/strided + gap
+    for strided in [true, false] {
+        let spec = BackboneSpec {
+            image_size: 12,
+            feature_maps: 4,
+            strided,
+            ..BackboneSpec::headline()
+        };
+        let g = spec.build_graph(11).unwrap();
+        let imgs = images(3, 12 * 12 * 3, 3);
+        assert_parity(&g, &Tarch::z7020_8x8(), &imgs, &format!("backbone strided={strided}"));
+    }
+}
+
+#[test]
+fn golden_mixed_precision_plans() {
+    // per-layer formats exercise boundary requantization in both kernels
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    let g = spec.build_graph(7).unwrap();
+    let tarch = Tarch::z7020_8x8();
+    let imgs = images(3, 8 * 8 * 3, 4);
+    let cal = PlanCalibrator::observe(&g, &tarch, &imgs, QuantPolicy::MinMax).unwrap();
+
+    // uniform narrow plan
+    let g8 = cal.plan_uniform_bits(8).unwrap().applied(&g).unwrap();
+    assert_parity(&g8, &tarch, &imgs, "uniform 8-bit plan");
+
+    // ragged mixed plan: alternate budgets across layers
+    let n = g.ops.len();
+    let bits: Vec<u8> = (0..n).map(|i| [16u8, 8, 12, 6][i % 4]).collect();
+    let gm = cal.plan(&bits).unwrap().applied(&g).unwrap();
+    assert_parity(&gm, &tarch, &imgs, "ragged mixed plan");
+
+    // hand-narrowed single boundary (the precision_plan_parity shape)
+    let mut plan = PrecisionPlan::uniform(&g, QFormat::default());
+    plan.layers[0].activations = QFormat::new(16, 6);
+    let gb = plan.applied(&g).unwrap();
+    assert_parity(&gb, &tarch, &imgs, "single coarse boundary");
+}
+
+#[test]
+fn golden_property_random_shapes() {
+    // randomized sweep in the property_suite style: random geometry, both
+    // simulators, bit-equal or bust
+    pefsl::util::proptest::check(91, 10, |rng| {
+        let h = rng.range(5, 13);
+        let cin = rng.range(1, 5);
+        let cout = rng.range(1, 8);
+        let stride = 1 + rng.range(0, 2);
+        let padding = rng.range(0, 2);
+        let g = conv_graph(h, cin, cout, stride, padding, rng.range(0, 2) == 1, rng.next_u64());
+        let imgs = images(1, h * h * cin, rng.next_u64());
+        assert_parity(
+            &g,
+            &Tarch::z7020_8x8(),
+            &imgs,
+            &format!("random h={h} cin={cin} cout={cout} s={stride} p={padding}"),
+        );
+    });
+}
+
+#[test]
+fn golden_checkpoint_resume_across_plans() {
+    // The dse::mixed memoization contract, pinned end to end: narrow a
+    // suffix layer, resume the candidate from the baseline's checkpoint,
+    // and demand bit-identical results to the candidate's own full run.
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    let g = spec.build_graph(9).unwrap();
+    let tarch = Tarch::z7020_8x8();
+    let imgs = images(2, 8 * 8 * 3, 21);
+    let cal = PlanCalibrator::observe(&g, &tarch, &imgs, QuantPolicy::MinMax).unwrap();
+
+    let n = g.ops.len();
+    let base_plan = cal.plan_uniform_bits(16).unwrap();
+    let g_base = base_plan.applied(&g).unwrap();
+    let p_base = compile(&g_base, &tarch).unwrap();
+    let mut sim_base = Simulator::new(&p_base, &g_base);
+
+    // candidate: narrow only the last two layers' budgets
+    let mut bits = vec![16u8; n];
+    let cut = n - 2;
+    for b in &mut bits[cut..] {
+        *b = 8;
+    }
+    let cand_plan = cal.plan(&bits).unwrap();
+    let g_cand = cand_plan.applied(&g).unwrap();
+    let p_cand = compile(&g_cand, &tarch).unwrap();
+    let mut sim_cand = Simulator::new(&p_cand, &g_cand);
+
+    for img in &imgs {
+        let (_, ckpts) = sim_base.run_f32_checkpointed(img, &[cut]).unwrap();
+        let resumed = sim_cand.run_from(&ckpts[0]).unwrap();
+        let full = sim_cand.run_f32(img).unwrap();
+        assert_eq!(resumed.output_codes, full.output_codes, "resume diverged from full run");
+        assert_eq!(resumed.cycles, full.cycles);
+        assert_eq!(resumed.layer_cycles, full.layer_cycles);
+        assert_eq!(resumed.instr_count, full.instr_count);
+    }
+}
