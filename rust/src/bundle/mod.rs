@@ -1,0 +1,759 @@
+//! `pefsl::bundle` — versioned, self-describing deployment bundles.
+//!
+//! The paper's whole point is a *deployment pipeline*: a backbone is
+//! trained, quantized, compiled and shipped to the PYNQ-Z1 as an artifact.
+//! A [`Bundle`] is that artifact for this stack — everything needed to
+//! reproduce inference **bit-exactly** on another machine or in another
+//! process:
+//!
+//! * the graph (ops + per-tensor precision formats, i.e. an installed
+//!   [`crate::quant::PrecisionPlan`]) and its weight codes;
+//! * the [`Tarch`] accelerator configuration it was compiled against;
+//! * optionally a feature-quantization [`QuantConfig`] for the engine;
+//! * optionally a [`SessionSnapshot`] of enrolled NCM class banks — in a
+//!   few-shot system the enrolled classes are part of the deployed model
+//!   (FSL-HDnn), not runtime ephemera;
+//! * optionally an exported feature bank (`novel_features`-style), so
+//!   evaluation sweeps can run against the *deployed* features instead of
+//!   synthetic ones;
+//! * a **golden frame**: one deterministic input image as codes plus the
+//!   bit-exact output codes and modeled cycle count it must produce —
+//!   [`Bundle::verify`] replays it after every load.
+//!
+//! On disk a bundle is a directory: a `manifest.json` (format-versioned,
+//! with an FNV-1a checksum per binary blob) next to `weights.bin`,
+//! `golden.bin` and the optional `session.bin` / `features.bin`
+//! named-tensor blobs.  [`Bundle::load`] refuses partial loads: unknown
+//! format versions, missing blobs, checksum mismatches and
+//! tarch-datapath mismatches all fail loudly before anything is built.
+//!
+//! Serving side, [`crate::engine::Registry`] hosts named+versioned
+//! bundles behind the engine pool and hot-swaps them atomically.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::{Engine, EngineBuilder, SessionSnapshot};
+use crate::fewshot::FeatureBank;
+use crate::fixed::QFormat;
+use crate::graph::{self, Graph};
+use crate::json::{self, Value};
+use crate::quant::{QuantConfig, QuantPolicy};
+use crate::sim::Simulator;
+use crate::tarch::Tarch;
+use crate::tcompiler::compile;
+use crate::util::checksum::fnv1a64_hex;
+use crate::util::tensorio::{read_named_tensors_from, write_named_tensors_to, Data, Tensor};
+use crate::util::Prng;
+
+/// Bundle format version this build writes and reads.
+pub const FORMAT_VERSION: i64 = 1;
+
+/// Manifest file name inside a bundle directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+const WEIGHTS_BLOB: &str = "weights.bin";
+const GOLDEN_BLOB: &str = "golden.bin";
+const SESSION_BLOB: &str = "session.bin";
+const FEATURES_BLOB: &str = "features.bin";
+
+/// Seed of the deterministic golden-frame image (fixed forever: changing
+/// it would invalidate every existing bundle's golden codes).
+const GOLDEN_SEED: u64 = 0x9E1D_F4A3;
+
+/// The replayable proof pinned into every bundle: one input frame as
+/// codes, and the exact outputs the deployed graph must reproduce.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GoldenFrame {
+    /// Input image quantized to the program's input format.
+    pub input_codes: Vec<i16>,
+    /// Bit-exact output feature codes.
+    pub output_codes: Vec<i16>,
+    /// Modeled accelerator cycles of the inference.
+    pub cycles: u64,
+}
+
+/// What [`Bundle::verify`] measured on a successful replay.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyReport {
+    /// Modeled cycles of the replayed golden frame (equals the manifest).
+    pub cycles: u64,
+    /// Output codes compared (the feature dimension).
+    pub codes: usize,
+}
+
+/// An in-memory deployment bundle — pack one from a built graph, or load
+/// one from a bundle directory.
+#[derive(Clone, Debug)]
+pub struct Bundle {
+    /// Model name (registry key by convention).
+    pub name: String,
+    /// Version label (plan string, git tag, …) — informational, but shown
+    /// by `pefsl models` and the registry.
+    pub version: String,
+    pub graph: Graph,
+    pub tarch: Tarch,
+    /// Engine feature-quantization config, if the deployment runs one.
+    pub quant: Option<QuantConfig>,
+    /// Enrolled few-shot class banks, if shipped with the model.
+    pub session: Option<SessionSnapshot>,
+    /// Exported feature bank `(features [N,D] f32, labels [N] i32)`.
+    pub features: Option<(Tensor, Tensor)>,
+    pub golden: GoldenFrame,
+}
+
+/// The graph's widest datapath tensor must fit the tarch datapath — the
+/// loud version of the check `tcompiler` would eventually make.
+fn check_datapath(graph: &Graph, tarch: &Tarch) -> Result<()> {
+    let need = graph.max_datapath_bits();
+    let have = tarch.qformat.total_bits;
+    if need > have {
+        bail!(
+            "graph '{}' needs a {need}-bit datapath but tarch '{}' provides {have} bits",
+            graph.name,
+            tarch.name
+        );
+    }
+    Ok(())
+}
+
+/// Simulate the deterministic golden image on a graph/tarch pair.
+fn golden_frame(graph: &Graph, tarch: &Tarch) -> Result<GoldenFrame> {
+    let program = compile(graph, tarch)?;
+    let elems: usize = graph.input_shape.iter().product();
+    let mut rng = Prng::new(GOLDEN_SEED);
+    let fmt = program.input_format;
+    let input_codes: Vec<i16> = (0..elems).map(|_| fmt.quantize(rng.f32())).collect();
+    let mut sim = Simulator::new(&program, graph);
+    let r = sim.run_codes(&input_codes)?;
+    Ok(GoldenFrame { input_codes, output_codes: r.output_codes, cycles: r.cycles })
+}
+
+impl Bundle {
+    /// Pack a bundle from an in-memory build: validates the tarch and the
+    /// datapath fit, then compiles + simulates once to pin the golden
+    /// frame.  Optional payloads chain on via [`Bundle::with_quant`],
+    /// [`Bundle::with_session`], [`Bundle::with_features`].
+    pub fn pack(
+        name: impl Into<String>,
+        version: impl Into<String>,
+        graph: Graph,
+        tarch: Tarch,
+    ) -> Result<Bundle> {
+        tarch.validate()?;
+        check_datapath(&graph, &tarch)?;
+        let golden = golden_frame(&graph, &tarch)
+            .context("simulate the golden frame while packing")?;
+        Ok(Bundle {
+            name: name.into(),
+            version: version.into(),
+            graph,
+            tarch,
+            quant: None,
+            session: None,
+            features: None,
+            golden,
+        })
+    }
+
+    /// Attach an engine feature-quantization config.
+    pub fn with_quant(mut self, cfg: QuantConfig) -> Result<Bundle> {
+        cfg.validate()?;
+        self.quant = Some(cfg);
+        Ok(self)
+    }
+
+    /// Attach a snapshot of enrolled few-shot class banks.
+    pub fn with_session(mut self, snap: SessionSnapshot) -> Result<Bundle> {
+        if snap.dim != self.graph.feature_dim {
+            bail!(
+                "session snapshot dim {} != graph feature dim {}",
+                snap.dim,
+                self.graph.feature_dim
+            );
+        }
+        self.session = Some(snap);
+        Ok(self)
+    }
+
+    /// Attach an exported feature bank (`features [N,D]` f32, `labels [N]`
+    /// i32 — the `novel_features.bin` layout).
+    pub fn with_features(mut self, features: Tensor, labels: Tensor) -> Result<Bundle> {
+        FeatureBank::from_tensors(&features, &labels).context("validate bundled feature bank")?;
+        self.features = Some((features, labels));
+        Ok(self)
+    }
+
+    /// Attach an in-memory [`FeatureBank`], flattened to tensors.
+    pub fn with_feature_bank(self, bank: &FeatureBank) -> Result<Bundle> {
+        let n: usize = bank.by_class.iter().map(Vec::len).sum();
+        let mut data = Vec::with_capacity(n * bank.dim);
+        let mut labels = Vec::with_capacity(n);
+        for (c, class) in bank.by_class.iter().enumerate() {
+            for f in class {
+                data.extend_from_slice(f);
+                labels.push(c as i32);
+            }
+        }
+        self.with_features(Tensor::f32(vec![n, bank.dim], data), Tensor::i32(vec![n], labels))
+    }
+
+    /// The bundled feature bank, if one was packed.
+    pub fn feature_bank(&self) -> Result<Option<FeatureBank>> {
+        match &self.features {
+            Some((f, l)) => Ok(Some(FeatureBank::from_tensors(f, l)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Replay the golden frame: recompile, simulate, and require
+    /// bit-identical output codes **and** modeled cycles.
+    pub fn verify(&self) -> Result<VerifyReport> {
+        let program = compile(&self.graph, &self.tarch)?;
+        let mut sim = Simulator::new(&program, &self.graph);
+        let r = sim
+            .run_codes(&self.golden.input_codes)
+            .context("replay the bundle's golden frame")?;
+        if r.output_codes != self.golden.output_codes {
+            let diffs = r
+                .output_codes
+                .iter()
+                .zip(&self.golden.output_codes)
+                .filter(|(a, b)| a != b)
+                .count();
+            bail!(
+                "golden-frame mismatch for '{}@{}': {diffs}/{} output codes differ — \
+                 the bundle does not reproduce its pinned inference",
+                self.name,
+                self.version,
+                self.golden.output_codes.len()
+            );
+        }
+        if r.cycles != self.golden.cycles {
+            bail!(
+                "golden-frame cycle drift for '{}@{}': replay took {} modeled cycles, \
+                 manifest pins {}",
+                self.name,
+                self.version,
+                r.cycles,
+                self.golden.cycles
+            );
+        }
+        Ok(VerifyReport { cycles: r.cycles, codes: self.golden.output_codes.len() })
+    }
+
+    /// An [`EngineBuilder`] preloaded with this bundle's graph, tarch and
+    /// quant config (set workers/etc. before building).
+    pub fn engine_builder(&self) -> EngineBuilder {
+        let mut b = EngineBuilder::new().graph(self.graph.clone()).tarch(self.tarch.clone());
+        if let Some(cfg) = self.quant {
+            b = b.quant(cfg);
+        }
+        b
+    }
+
+    /// Build an engine serving this bundle (default worker pool).
+    pub fn build_engine(&self) -> Result<Engine> {
+        self.engine_builder().build()
+    }
+
+    /// Write the bundle directory: `manifest.json` plus checksummed blobs.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create bundle directory {}", dir.display()))?;
+
+        let mut blobs: BTreeMap<&str, Vec<u8>> = BTreeMap::new();
+
+        // weights: named tensors sorted by name for deterministic bytes
+        let mut wnames: Vec<&String> = self.graph.weights.keys().collect();
+        wnames.sort();
+        let mut weights = Vec::new();
+        write_named_tensors_to(
+            &mut weights,
+            wnames.iter().map(|n| (n.as_str(), &self.graph.weights[*n])),
+        )?;
+        blobs.insert(WEIGHTS_BLOB, weights);
+
+        // golden frame codes
+        let gin = Tensor::i16(vec![self.golden.input_codes.len()], self.golden.input_codes.clone());
+        let gout =
+            Tensor::i16(vec![self.golden.output_codes.len()], self.golden.output_codes.clone());
+        let mut golden = Vec::new();
+        write_named_tensors_to(&mut golden, [("input", &gin), ("output", &gout)])?;
+        blobs.insert(GOLDEN_BLOB, golden);
+
+        if let Some(snap) = &self.session {
+            blobs.insert(SESSION_BLOB, session_blob(snap)?);
+        }
+        if let Some((f, l)) = &self.features {
+            let mut features = Vec::new();
+            write_named_tensors_to(&mut features, [("features", f), ("labels", l)])?;
+            blobs.insert(FEATURES_BLOB, features);
+        }
+
+        let mut doc = Value::obj();
+        doc.set("format_version", FORMAT_VERSION)
+            .set("name", self.name.as_str())
+            .set("version", self.version.as_str())
+            .set("tarch", self.tarch.to_json())
+            .set("graph", graph::to_json(&self.graph));
+        if let Some(cfg) = &self.quant {
+            doc.set("quant", quant_to_json(cfg));
+        }
+        if let Some(snap) = &self.session {
+            doc.set("session", session_to_json(snap));
+        }
+        if let Some((f, _)) = &self.features {
+            let mut fv = Value::obj();
+            fv.set("rows", f.shape[0]).set("dim", f.shape[1]);
+            doc.set("features", fv);
+        }
+        let mut golden_v = Value::obj();
+        golden_v
+            .set("cycles", self.golden.cycles)
+            .set("input_codes", self.golden.input_codes.len())
+            .set("output_codes", self.golden.output_codes.len());
+        doc.set("golden", golden_v);
+        let mut blobs_v = Value::obj();
+        for (&fname, bytes) in &blobs {
+            let mut b = Value::obj();
+            b.set("bytes", bytes.len()).set("fnv1a64", fnv1a64_hex(bytes).as_str());
+            blobs_v.set(fname, b);
+        }
+        doc.set("blobs", blobs_v);
+
+        for (&fname, bytes) in &blobs {
+            std::fs::write(dir.join(fname), bytes)
+                .with_context(|| format!("write bundle blob {fname}"))?;
+        }
+        json::to_file(dir.join(MANIFEST_FILE), &doc)
+            .with_context(|| format!("write bundle manifest in {}", dir.display()))?;
+        Ok(())
+    }
+
+    /// Load a bundle directory.  No partial loads: the format version must
+    /// match, every blob listed in the manifest must exist and pass its
+    /// checksum, and the graph must fit the tarch datapath — any failure
+    /// aborts with an actionable error before anything is deserialized.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Bundle> {
+        let dir = dir.as_ref();
+        let doc = json::from_file(dir.join(MANIFEST_FILE))
+            .with_context(|| format!("read bundle manifest in {}", dir.display()))?;
+        let ver = doc
+            .get("format_version")
+            .and_then(Value::as_i64)
+            .ok_or_else(|| anyhow!("bundle manifest has no format_version"))?;
+        if ver != FORMAT_VERSION {
+            bail!(
+                "unsupported bundle format version {ver} (this build reads version \
+                 {FORMAT_VERSION}) — repack the bundle with a matching pefsl"
+            );
+        }
+        let name = doc.req_str("name")?.to_string();
+        let version = doc.req_str("version")?.to_string();
+
+        // checksum every listed blob up front — corrupt/missing blobs
+        // fail here, before any partial deserialization
+        let blob_specs = doc
+            .get("blobs")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("bundle manifest has no blobs table"))?;
+        let mut blobs: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+        for (fname, spec) in blob_specs {
+            let bytes = std::fs::read(dir.join(fname)).with_context(|| {
+                format!("bundle blob '{fname}' listed in the manifest is missing or unreadable")
+            })?;
+            let want = spec.req_str("fnv1a64")?;
+            let got = fnv1a64_hex(&bytes);
+            if got != want {
+                bail!(
+                    "bundle blob '{fname}' checksum mismatch (manifest {want}, file {got}) — \
+                     refusing to load a corrupted bundle"
+                );
+            }
+            if let Some(n) = spec.get("bytes").and_then(Value::as_usize) {
+                if n != bytes.len() {
+                    bail!(
+                        "bundle blob '{fname}' is {} bytes, manifest says {n}",
+                        bytes.len()
+                    );
+                }
+            }
+            blobs.insert(fname.clone(), bytes);
+        }
+
+        let tarch = Tarch::from_json(
+            doc.get("tarch").ok_or_else(|| anyhow!("bundle manifest has no tarch"))?,
+        )
+        .context("bundle tarch")?;
+        let gdoc = doc.get("graph").ok_or_else(|| anyhow!("bundle manifest has no graph"))?;
+        let tensors = read_named_tensors_from(&mut blob(&blobs, WEIGHTS_BLOB)?)
+            .context("parse bundle weights")?;
+        let graph = graph::import(gdoc, tensors).context("import bundle graph")?;
+        check_datapath(&graph, &tarch)?;
+
+        let golden_v =
+            doc.get("golden").ok_or_else(|| anyhow!("bundle manifest has no golden frame"))?;
+        let cycles = golden_v
+            .get("cycles")
+            .and_then(Value::as_i64)
+            .ok_or_else(|| anyhow!("golden frame has no cycle count"))? as u64;
+        let mut gin = None;
+        let mut gout = None;
+        for (tname, t) in read_named_tensors_from(&mut blob(&blobs, GOLDEN_BLOB)?)
+            .context("parse golden blob")?
+        {
+            match (tname.as_str(), &t.data) {
+                ("input", Data::I16(_)) => gin = Some(t),
+                ("output", Data::I16(_)) => gout = Some(t),
+                _ => bail!("unexpected tensor '{tname}' in golden blob"),
+            }
+        }
+        let input_codes = gin
+            .ok_or_else(|| anyhow!("golden blob has no input codes"))?
+            .as_i16()?
+            .to_vec();
+        let output_codes = gout
+            .ok_or_else(|| anyhow!("golden blob has no output codes"))?
+            .as_i16()?
+            .to_vec();
+        let elems: usize = graph.input_shape.iter().product();
+        if input_codes.len() != elems {
+            bail!(
+                "golden input has {} codes, graph '{}' expects {elems}",
+                input_codes.len(),
+                graph.name
+            );
+        }
+        if output_codes.len() != graph.feature_dim {
+            bail!(
+                "golden output has {} codes, graph '{}' has feature dim {}",
+                output_codes.len(),
+                graph.name,
+                graph.feature_dim
+            );
+        }
+
+        let quant = match doc.get("quant") {
+            Some(v) => Some(quant_from_json(v).context("bundle quant config")?),
+            None => None,
+        };
+        let session = match doc.get("session") {
+            Some(v) => Some(
+                session_from_json(v, blob(&blobs, SESSION_BLOB)?)
+                    .context("bundle session snapshot")?,
+            ),
+            None => None,
+        };
+        let features = match doc.get("features") {
+            Some(_) => {
+                let mut f = None;
+                let mut l = None;
+                for (tname, t) in read_named_tensors_from(&mut blob(&blobs, FEATURES_BLOB)?)
+                    .context("parse features blob")?
+                {
+                    match tname.as_str() {
+                        "features" => f = Some(t),
+                        "labels" => l = Some(t),
+                        other => bail!("unexpected tensor '{other}' in features blob"),
+                    }
+                }
+                let f = f.ok_or_else(|| anyhow!("features blob has no 'features' tensor"))?;
+                let l = l.ok_or_else(|| anyhow!("features blob has no 'labels' tensor"))?;
+                FeatureBank::from_tensors(&f, &l).context("validate bundled feature bank")?;
+                Some((f, l))
+            }
+            None => None,
+        };
+
+        let bundle = Bundle {
+            name,
+            version,
+            graph,
+            tarch,
+            quant,
+            session,
+            features,
+            golden: GoldenFrame { input_codes, output_codes, cycles },
+        };
+        if let Some(snap) = &bundle.session {
+            if snap.dim != bundle.graph.feature_dim {
+                bail!(
+                    "bundled session snapshot dim {} != graph feature dim {}",
+                    snap.dim,
+                    bundle.graph.feature_dim
+                );
+            }
+        }
+        Ok(bundle)
+    }
+}
+
+/// Look up a checksummed blob loaded by [`Bundle::load`].
+fn blob<'a>(blobs: &'a BTreeMap<String, Vec<u8>>, fname: &str) -> Result<&'a [u8]> {
+    blobs
+        .get(fname)
+        .map(Vec::as_slice)
+        .ok_or_else(|| anyhow!("bundle manifest lists no '{fname}' blob"))
+}
+
+fn quant_to_json(cfg: &QuantConfig) -> Value {
+    let mut v = Value::obj();
+    v.set("total_bits", cfg.total_bits as usize).set("calib_images", cfg.calib_images);
+    match cfg.policy {
+        QuantPolicy::MinMax => {
+            v.set("policy", "minmax");
+        }
+        QuantPolicy::Percentile(p) => {
+            v.set("policy", "percentile").set("percentile", f64::from(p));
+        }
+    }
+    if let Some(f) = cfg.format {
+        v.set("format", f.to_json());
+    }
+    v
+}
+
+fn quant_from_json(v: &Value) -> Result<QuantConfig> {
+    let mut cfg = QuantConfig::bits(v.req_usize("total_bits")? as u8);
+    if let Some(n) = v.get("calib_images").and_then(Value::as_usize) {
+        cfg = cfg.with_calib_images(n);
+    }
+    match v.get("policy").and_then(Value::as_str) {
+        Some("minmax") | None => {}
+        Some("percentile") => {
+            let p = v
+                .get("percentile")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow!("percentile policy without a percentile value"))?;
+            cfg = cfg.with_policy(QuantPolicy::Percentile(p as f32));
+        }
+        Some(other) => bail!("unknown quant policy '{other}'"),
+    }
+    if let Some(f) = v.get("format") {
+        cfg = cfg.with_format(QFormat::from_json(f)?);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn session_to_json(snap: &SessionSnapshot) -> Value {
+    let mut v = Value::obj();
+    v.set("dim", snap.dim).set("base_mean", snap.base_mean.is_some());
+    if let Some(fmt) = snap.quant_format {
+        v.set("format", fmt.to_json());
+    }
+    let mut classes = Vec::with_capacity(snap.classes.len());
+    for c in &snap.classes {
+        let mut cv = Value::obj();
+        cv.set("label", c.label.as_str()).set("count", c.count).set("qcount", c.qcount);
+        classes.push(cv);
+    }
+    v.set("classes", classes);
+    v
+}
+
+/// Session sums as a named-tensor blob: `base_mean` (optional f32),
+/// `c{i}.sum` (f32) and `c{i}.qsum` (i32 — the accumulator budget keeps
+/// integer sums within 32 bits) per class.
+fn session_blob(snap: &SessionSnapshot) -> Result<Vec<u8>> {
+    let mut tensors: Vec<(String, Tensor)> = Vec::new();
+    if let Some(m) = &snap.base_mean {
+        tensors.push(("base_mean".into(), Tensor::f32(vec![m.len()], m.clone())));
+    }
+    for (i, c) in snap.classes.iter().enumerate() {
+        tensors.push((format!("c{i}.sum"), Tensor::f32(vec![c.sum.len()], c.sum.clone())));
+        if let Some(q) = &c.qsum {
+            let narrowed: Vec<i32> = q
+                .iter()
+                .map(|&s| {
+                    i32::try_from(s).map_err(|_| {
+                        anyhow!(
+                            "class '{}' quantized sum {s} exceeds the 32-bit class memory",
+                            c.label
+                        )
+                    })
+                })
+                .collect::<Result<_>>()?;
+            tensors.push((format!("c{i}.qsum"), Tensor::i32(vec![narrowed.len()], narrowed)));
+        }
+    }
+    let mut out = Vec::new();
+    write_named_tensors_to(&mut out, tensors.iter().map(|(n, t)| (n.as_str(), t)))?;
+    Ok(out)
+}
+
+fn session_from_json(v: &Value, blob: &[u8]) -> Result<SessionSnapshot> {
+    use crate::engine::ClassSnapshot;
+
+    let dim = v.req_usize("dim")?;
+    let quant_format = match v.get("format") {
+        Some(f) => Some(QFormat::from_json(f)?),
+        None => None,
+    };
+    let tensors: BTreeMap<String, Tensor> =
+        read_named_tensors_from(&mut &blob[..])?.into_iter().collect();
+    let base_mean = if v.req_bool("base_mean")? {
+        let t = tensors
+            .get("base_mean")
+            .ok_or_else(|| anyhow!("session blob has no base_mean tensor"))?;
+        Some(t.as_f32()?.to_vec())
+    } else {
+        None
+    };
+    let mut classes = Vec::new();
+    for (i, cv) in v.req_arr("classes")?.iter().enumerate() {
+        let label = cv.req_str("label")?.to_string();
+        let count = cv.req_usize("count")?;
+        let qcount = cv.req_usize("qcount")?;
+        let sum = tensors
+            .get(&format!("c{i}.sum"))
+            .ok_or_else(|| anyhow!("session blob has no sum for class {i} ('{label}')"))?
+            .as_f32()?
+            .to_vec();
+        if sum.len() != dim {
+            bail!("class '{label}' sum has {} values, session dim is {dim}", sum.len());
+        }
+        let qsum = match tensors.get(&format!("c{i}.qsum")) {
+            Some(t) => Some(t.as_i32()?.iter().map(|&x| i64::from(x)).collect::<Vec<i64>>()),
+            None => None,
+        };
+        if quant_format.is_some() != qsum.is_some() {
+            bail!("class '{label}' quantized sums disagree with the session format");
+        }
+        classes.push(ClassSnapshot { label, sum, count, qsum, qcount });
+    }
+    Ok(SessionSnapshot { dim, base_mean, quant_format, classes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::BackboneSpec;
+    use crate::engine::Session;
+
+    fn tiny_graph(seed: u64) -> Graph {
+        let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+        spec.build_graph(seed).unwrap()
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("pefsl_bundle_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn pack_pins_a_replayable_golden_frame() {
+        let b = Bundle::pack("m", "v1", tiny_graph(3), Tarch::z7020_8x8()).unwrap();
+        assert_eq!(b.golden.output_codes.len(), b.graph.feature_dim);
+        assert!(b.golden.cycles > 0);
+        let report = b.verify().unwrap();
+        assert_eq!(report.cycles, b.golden.cycles);
+        assert_eq!(report.codes, b.graph.feature_dim);
+    }
+
+    #[test]
+    fn tampered_golden_fails_verify() {
+        let mut b = Bundle::pack("m", "v1", tiny_graph(3), Tarch::z7020_8x8()).unwrap();
+        b.golden.output_codes[0] ^= 1;
+        let err = b.verify().unwrap_err().to_string();
+        assert!(err.contains("golden-frame mismatch"), "{err}");
+        let mut b2 = Bundle::pack("m", "v1", tiny_graph(3), Tarch::z7020_8x8()).unwrap();
+        b2.golden.cycles += 1;
+        let err2 = b2.verify().unwrap_err().to_string();
+        assert!(err2.contains("cycle"), "{err2}");
+    }
+
+    #[test]
+    fn pack_rejects_narrow_tarch() {
+        let mut narrow = Tarch::z7020_8x8();
+        narrow.qformat = QFormat::new(8, 4);
+        let err = Bundle::pack("m", "v1", tiny_graph(3), narrow).unwrap_err().to_string();
+        assert!(err.contains("datapath"), "{err}");
+    }
+
+    #[test]
+    fn save_load_roundtrips_everything() {
+        let mut session = Session::detached(tiny_graph(5).feature_dim)
+            .with_quant(QuantConfig::bits(12))
+            .unwrap();
+        let c = session.add_class("cat");
+        let mut f = vec![0.0; session.dim()];
+        f[0] = 2.0;
+        session.enroll_feature(c, &f).unwrap();
+
+        let bank = FeatureBank::synthetic(4, 6, 10, 0.2, 9);
+        let b = Bundle::pack("demo", "v7", tiny_graph(5), Tarch::z7020_8x8())
+            .unwrap()
+            .with_quant(QuantConfig::bits(12))
+            .unwrap()
+            .with_session(session.snapshot())
+            .unwrap()
+            .with_feature_bank(&bank)
+            .unwrap();
+
+        let dir = tmpdir("roundtrip");
+        b.save(&dir).unwrap();
+        let loaded = Bundle::load(&dir).unwrap();
+        assert_eq!(loaded.name, "demo");
+        assert_eq!(loaded.version, "v7");
+        assert_eq!(loaded.quant, b.quant);
+        assert_eq!(loaded.golden, b.golden);
+        assert_eq!(loaded.graph.ops, b.graph.ops);
+        assert_eq!(loaded.graph.weights, b.graph.weights);
+        assert_eq!(loaded.graph.formats, b.graph.formats);
+        assert_eq!(loaded.session, b.session);
+        loaded.verify().unwrap();
+
+        // the reloaded session classifies identically
+        let restored = Session::restore(None, loaded.session.as_ref().unwrap()).unwrap();
+        assert_eq!(
+            restored.classify_feature(&f).unwrap(),
+            session.classify_feature(&f).unwrap()
+        );
+        // the reloaded feature bank matches
+        let lbank = loaded.feature_bank().unwrap().unwrap();
+        assert_eq!(lbank.by_class, bank.by_class);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quant_config_json_roundtrip() {
+        for cfg in [
+            QuantConfig::bits(8),
+            QuantConfig::bits(12).with_policy(QuantPolicy::Percentile(99.5)),
+            QuantConfig::bits(6).with_format(QFormat::new(6, 3)).with_calib_images(7),
+        ] {
+            let back = quant_from_json(&quant_to_json(&cfg)).unwrap();
+            assert_eq!(back, cfg);
+        }
+        let mut bad = quant_to_json(&QuantConfig::bits(8));
+        bad.set("policy", "cosmic");
+        assert!(quant_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn engine_from_bundle_matches_direct_build() {
+        let g = tiny_graph(11);
+        let b = Bundle::pack("m", "v1", g.clone(), Tarch::z7020_8x8()).unwrap();
+        let from_bundle = b.build_engine().unwrap();
+        let direct = EngineBuilder::new().graph(g).tarch(Tarch::z7020_8x8()).build().unwrap();
+        let img = vec![0.4; 8 * 8 * 3];
+        let a = from_bundle
+            .infer(crate::engine::InferRequest::single(img.clone()))
+            .unwrap()
+            .into_single()
+            .unwrap();
+        let d = direct
+            .infer(crate::engine::InferRequest::single(img))
+            .unwrap()
+            .into_single()
+            .unwrap();
+        assert_eq!(a.features, d.features);
+        assert_eq!(a.metrics.cycles, d.metrics.cycles);
+    }
+}

@@ -4,11 +4,12 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::bundle::Bundle;
 use crate::coordinator::{DemoConfig, Demonstrator};
 use crate::dse::{fig5_rows, join_accuracy, quant_pareto_rows, render_quant_table, BackboneSpec};
-use crate::engine::{BackendKind, EngineBuilder};
+use crate::engine::{BackendKind, EngineBuilder, InferRequest, Registry, Session};
 use crate::fewshot::{evaluate, EpisodeConfig, FeatureBank};
-use crate::quant::QuantPolicy;
+use crate::quant::{QuantConfig, QuantPolicy};
 use crate::graph::import_files;
 use crate::json::{self, Value};
 use crate::power::system_power;
@@ -16,6 +17,7 @@ use crate::resources::{accelerator_resources, demonstrator_resources};
 use crate::tarch::Tarch;
 use crate::tcompiler::compile;
 use crate::util::tensorio::read_tensor;
+use crate::util::Prng;
 use crate::video::DisplaySink;
 
 use super::args::Args;
@@ -51,6 +53,27 @@ fn policy_from(args: &Args) -> Result<QuantPolicy> {
 /// forwards its optional `--artifacts` override.
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
     crate::engine::resolve_artifacts_dir(args.get("artifacts").map(std::path::Path::new))
+}
+
+/// Feature bank from `--bundle DIR`, if given: evaluation then runs on the
+/// *deployed* (bundled) features rather than loose artifacts or synthetic
+/// data.
+fn bundled_bank(args: &Args) -> Result<Option<FeatureBank>> {
+    let Some(path) = args.get("bundle") else {
+        return Ok(None);
+    };
+    let b = Bundle::load(path)?;
+    let bank = b.feature_bank()?.with_context(|| {
+        format!("bundle '{}@{}' carries no feature bank (pack with --features)", b.name, b.version)
+    })?;
+    eprintln!(
+        "feature bank from bundle '{}@{}': {} classes × ≥{} samples",
+        b.name,
+        b.version,
+        bank.n_classes(),
+        bank.per_class_min()
+    );
+    Ok(Some(bank))
 }
 
 /// `pefsl demo` — run the scripted live demonstrator.
@@ -230,13 +253,19 @@ pub fn resources_cmd(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `pefsl eval` — few-shot evaluation over exported novel features.
+/// `pefsl eval` — few-shot evaluation over exported (or bundled) novel
+/// features.
 pub fn eval(args: &Args) -> Result<i32> {
-    let dir = artifacts_dir(args);
-    let features = read_tensor(dir.join("novel_features.bin"))
-        .context("novel_features.bin (run `make artifacts`)")?;
-    let labels = read_tensor(dir.join("novel_labels.bin"))?;
-    let bank = FeatureBank::from_tensors(&features, &labels)?;
+    let bank = match bundled_bank(args)? {
+        Some(bank) => bank,
+        None => {
+            let dir = artifacts_dir(args);
+            let features = read_tensor(dir.join("novel_features.bin"))
+                .context("novel_features.bin (run `make artifacts`, or pass --bundle)")?;
+            let labels = read_tensor(dir.join("novel_labels.bin"))?;
+            FeatureBank::from_tensors(&features, &labels)?
+        }
+    };
     let cfg = EpisodeConfig {
         n_ways: args.get_usize("ways", 5)?,
         n_shots: args.get_usize("shots", 1)?,
@@ -258,17 +287,26 @@ pub fn quant(args: &Args) -> Result<i32> {
     let bits = parse_u8_list(args, "bits", "4,8,12,16")?;
     let policy = policy_from(args)?;
 
-    // Accuracy axis: exported novel-split features when available, else the
-    // synthetic separable bank (so the sweep runs without artifacts).
-    let dir = artifacts_dir(args);
-    let feat_path = dir.join("novel_features.bin");
-    let bank = if feat_path.exists() {
-        let features = read_tensor(&feat_path)?;
-        let labels = read_tensor(dir.join("novel_labels.bin"))?;
-        FeatureBank::from_tensors(&features, &labels)?
-    } else {
-        eprintln!("note: {} not found — using a synthetic feature bank", feat_path.display());
-        FeatureBank::synthetic(16, 24, 64, 0.35, 7)
+    // Accuracy axis: a bundled bank (--bundle) or exported novel-split
+    // features when available, else the synthetic separable bank (so the
+    // sweep runs without artifacts).
+    let bank = match bundled_bank(args)? {
+        Some(bank) => bank,
+        None => {
+            let dir = artifacts_dir(args);
+            let feat_path = dir.join("novel_features.bin");
+            if feat_path.exists() {
+                let features = read_tensor(&feat_path)?;
+                let labels = read_tensor(dir.join("novel_labels.bin"))?;
+                FeatureBank::from_tensors(&features, &labels)?
+            } else {
+                eprintln!(
+                    "note: {} not found — using a synthetic feature bank",
+                    feat_path.display()
+                );
+                FeatureBank::synthetic(16, 24, 64, 0.35, 7)
+            }
+        }
     };
     let ep = EpisodeConfig {
         n_ways: args.get_usize("ways", 5)?,
@@ -329,11 +367,12 @@ pub fn mixed(args: &Args) -> Result<i32> {
         ..BackboneSpec::headline()
     };
 
-    let rows = crate::dse::mixed_pareto_rows(&spec, &tarch, &cfg)?;
-    print!("{}", crate::dse::render_mixed_table(&rows));
+    let outcome = crate::dse::mixed_search_outcome(&spec, &tarch, &cfg)?;
+    let rows = &outcome.rows;
+    print!("{}", crate::dse::render_mixed_table(rows));
     if let Some(path) = args.get("json") {
         let mut arr = Vec::new();
-        for r in &rows {
+        for r in rows {
             let mut o = Value::obj();
             o.set("label", r.label.as_str())
                 .set("plan_bits", r.plan_bits.as_str())
@@ -350,6 +389,21 @@ pub fn mixed(args: &Args) -> Result<i32> {
         }
         json::to_file(path, &Value::Arr(arr))?;
     }
+    // the searched plan, applied and packed: `dse::mixed → bundle` is one
+    // step, no re-calibration or re-search
+    if let Some(dir) = args.get("emit-bundle") {
+        let bundle = Bundle::pack(
+            spec.name(),
+            format!("plan-{}", outcome.plan_bits),
+            outcome.graph,
+            tarch.clone(),
+        )?;
+        bundle.save(dir)?;
+        println!(
+            "emitted bundle '{}@{}' → {dir} ({} modeled cycles; check: pefsl verify --bundle {dir})",
+            bundle.name, bundle.version, bundle.golden.cycles
+        );
+    }
     Ok(0)
 }
 
@@ -358,6 +412,185 @@ pub fn table1(_args: &Args) -> Result<i32> {
     let rows = table1_rows()?;
     println!("{}", render_table1(&rows));
     Ok(0)
+}
+
+/// `pefsl pack` — pack a deployment bundle from the artifacts (or a
+/// synthetic backbone) into `--out DIR`.
+pub fn pack(args: &Args) -> Result<i32> {
+    let tarch = tarch_from(args)?;
+    let out = args.get("out").context("--out DIR is required")?;
+    let dir = artifacts_dir(args);
+    let synthetic = args.has("synthetic") || !dir.join("graph.json").exists();
+    let graph = if synthetic {
+        if !args.has("synthetic") {
+            eprintln!(
+                "note: {} not found — packing a synthetic backbone",
+                dir.join("graph.json").display()
+            );
+        }
+        let spec = BackboneSpec {
+            image_size: args.get_usize("image-size", 32)?,
+            feature_maps: args.get_usize("fm", 16)?,
+            ..BackboneSpec::headline()
+        };
+        spec.build_graph(args.get_u64("seed", 7)?)?
+    } else {
+        import_files(dir.join("graph.json"), dir.join("weights.bin"))?
+    };
+    let name = args.get_str("name", &graph.name).to_string();
+    let version = args.get_str("version", "v1").to_string();
+    let mut bundle = Bundle::pack(name, version, graph, tarch)?;
+    if let Some(bits) = args.get("bits") {
+        let bits: u8 =
+            bits.parse().map_err(|_| anyhow::anyhow!("--bits expects an integer, got '{bits}'"))?;
+        bundle = bundle.with_quant(QuantConfig::bits(bits))?;
+    }
+    if args.has("features") {
+        let features = read_tensor(dir.join("novel_features.bin"))
+            .context("--features needs novel_features.bin in the artifact dir")?;
+        let labels = read_tensor(dir.join("novel_labels.bin"))?;
+        bundle = bundle.with_features(features, labels)?;
+    }
+    bundle.save(out)?;
+    println!(
+        "packed '{}@{}' → {out}: {} ops, {} weight tensors, golden frame {} cycles \
+         (check: pefsl verify --bundle {out})",
+        bundle.name,
+        bundle.version,
+        bundle.graph.ops.len(),
+        bundle.graph.weights.len(),
+        bundle.golden.cycles,
+    );
+    Ok(0)
+}
+
+/// `pefsl verify` — load a bundle (format version, blob checksums,
+/// datapath fit) and replay its golden frame bit-exactly.
+pub fn verify_cmd(args: &Args) -> Result<i32> {
+    let path = args.get("bundle").context("--bundle DIR is required")?;
+    let bundle = Bundle::load(path)?;
+    let report = bundle.verify()?;
+    println!(
+        "bundle '{}@{}' OK: checksums valid, golden frame bit-exact \
+         ({} output codes, {} modeled cycles on tarch {})",
+        bundle.name, bundle.version, report.codes, report.cycles, bundle.tarch.name,
+    );
+    Ok(0)
+}
+
+/// `pefsl deploy` — deploy a bundle into a registry and serve smoke
+/// traffic, hot-swapping mid-stream to exercise the drain path.
+pub fn deploy_cmd(args: &Args) -> Result<i32> {
+    let path = args.get("bundle").context("--bundle DIR is required")?;
+    let name = args.get_str("name", "default").to_string();
+    let frames = args.get_usize("frames", 8)?.max(2);
+    let bundle = Bundle::load(path)?;
+    let registry = Registry::new();
+    let mut generation = registry.deploy(name.as_str(), &bundle)?;
+    let engine = registry.engine(&name)?;
+    let elems = engine.info().input_elems;
+    println!(
+        "deployed '{name}' = '{}@{}' (generation {generation}, {} workers)",
+        bundle.name,
+        bundle.version,
+        engine.workers()
+    );
+
+    let mut rng = Prng::new(args.get_u64("seed", 42)?);
+    let mut served = 0usize;
+    let mut modeled_ms = 0.0f64;
+    for i in 0..frames {
+        if i == frames / 2 {
+            // redeploy mid-stream: builds off to the side, swaps atomically
+            let g2 = registry.deploy(name.as_str(), &bundle)?;
+            println!("hot-swapped '{name}' generation {generation} → {g2} mid-stream");
+            generation = g2;
+        }
+        let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+        let resp = registry.infer(&name, InferRequest::single(img))?;
+        modeled_ms += resp.mean_modeled_latency_ms().unwrap_or(0.0);
+        served += resp.items.len();
+    }
+    if let Some(snap) = &bundle.session {
+        let session = Session::restore(Some(registry.engine(&name)?), snap)?;
+        let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+        let (pred, _) = session.classify_image(&img)?;
+        println!(
+            "restored session: {} classes / {} shots; sample frame → '{}'",
+            snap.n_classes(),
+            snap.total_shots(),
+            session.class_label(pred.class_idx).unwrap_or("?"),
+        );
+    }
+    for m in registry.models() {
+        println!(
+            "model {}@{} gen {}: backend {}, {}-d features, {} workers, {} requests on current engine",
+            m.name, m.version, m.generation, m.backend, m.feature_dim, m.workers, m.requests,
+        );
+    }
+    println!("served {served} frames, mean modeled latency {:.2} ms", modeled_ms / frames as f64);
+    Ok(0)
+}
+
+/// `pefsl models` — list bundles (one `--bundle DIR`, or every bundle
+/// directory under `--dir`); `--check` additionally replays each golden
+/// frame.
+pub fn models_cmd(args: &Args) -> Result<i32> {
+    let mut paths: Vec<std::path::PathBuf> = Vec::new();
+    if let Some(b) = args.get("bundle") {
+        paths.push(b.into());
+    } else {
+        let root = std::path::PathBuf::from(args.get_str("dir", "."));
+        for entry in std::fs::read_dir(&root)
+            .with_context(|| format!("scan {} for bundles", root.display()))?
+        {
+            let p = entry?.path();
+            if p.join(crate::bundle::MANIFEST_FILE).exists() {
+                paths.push(p);
+            }
+        }
+        paths.sort();
+    }
+    if paths.is_empty() {
+        println!("no bundles found (directories containing {})", crate::bundle::MANIFEST_FILE);
+        return Ok(0);
+    }
+    println!(
+        "{:<24} {:<20} {:<16} {:>5} {:>8} {:>8}  status",
+        "path", "model", "tarch", "ops", "classes", "bank"
+    );
+    let mut bad = 0usize;
+    for p in &paths {
+        match Bundle::load(p) {
+            Ok(b) => {
+                let status = if args.has("check") {
+                    match b.verify() {
+                        Ok(r) => format!("ok ({} cycles)", r.cycles),
+                        Err(e) => {
+                            bad += 1;
+                            format!("GOLDEN FAIL: {e:#}")
+                        }
+                    }
+                } else {
+                    "ok (checksums)".to_string()
+                };
+                println!(
+                    "{:<24} {:<20} {:<16} {:>5} {:>8} {:>8}  {status}",
+                    p.display().to_string(),
+                    format!("{}@{}", b.name, b.version),
+                    b.tarch.name,
+                    b.graph.ops.len(),
+                    b.session.as_ref().map(|s| s.n_classes()).unwrap_or(0),
+                    b.features.as_ref().map(|(f, _)| f.shape[0]).unwrap_or(0),
+                );
+            }
+            Err(e) => {
+                bad += 1;
+                println!("{:<24} LOAD FAIL: {e:#}", p.display().to_string());
+            }
+        }
+    }
+    Ok(if bad > 0 { 1 } else { 0 })
 }
 
 /// One Table I row.

@@ -5,11 +5,16 @@
 //! pefsl demo       --frames 64 --tarch z7020-12x12 [--backend sim|pjrt]
 //! pefsl dse        --test-size 32 [--tarch NAME] [--json PATH]
 //! pefsl quant      --bits 4,8,12,16 [--percentile P] [--episodes N] [--json PATH]
-//! pefsl mixed      --widths 4,6,8,12,16 [--steps N] [--max-drop D] [--no-memoize] [--json PATH]
+//! pefsl mixed      --widths 4,6,8,12,16 [--steps N] [--max-drop D] [--no-memoize]
+//!                  [--emit-bundle DIR] [--json PATH]
+//! pefsl pack       --out DIR [--synthetic] [--name N --version V] [--bits B] [--features]
+//! pefsl verify     --bundle DIR
+//! pefsl deploy     --bundle DIR [--name N --frames N]
+//! pefsl models     [--dir DIR | --bundle DIR] [--check]
 //! pefsl compile    [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl simulate   [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl resources  [--tarch NAME]
-//! pefsl eval       [--episodes N --ways W --shots S]
+//! pefsl eval       [--episodes N --ways W --shots S] [--bundle DIR]
 //! pefsl table1     (CIFAR-10 comparison harness)
 //! ```
 
@@ -45,6 +50,10 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "dse" => commands::dse(&args),
         "quant" => commands::quant(&args),
         "mixed" => commands::mixed(&args),
+        "pack" => commands::pack(&args),
+        "verify" => commands::verify_cmd(&args),
+        "deploy" => commands::deploy_cmd(&args),
+        "models" => commands::models_cmd(&args),
         "compile" => commands::compile_cmd(&args),
         "simulate" => commands::simulate(&args),
         "resources" => commands::resources_cmd(&args),
@@ -68,6 +77,13 @@ pub fn usage() -> String {
      \x20 quant       uniform bit-width Pareto sweep: accuracy × cycles at 4–16 bits\n\
      \x20 mixed       per-layer mixed-precision search: greedy width narrowing with\n\
      \x20             full-backbone sim accuracy + cycles/DSP/BRAM/LUT/power columns\n\
+     \x20 pack        pack a versioned deployment bundle (graph + weights + formats +\n\
+     \x20             tarch + golden frame; optional quant config / feature bank)\n\
+     \x20 verify      check a bundle: format version, blob checksums, bit-exact\n\
+     \x20             golden-frame replay (codes AND modeled cycles)\n\
+     \x20 deploy      deploy a bundle into a model registry, serve smoke frames,\n\
+     \x20             hot-swap mid-stream\n\
+     \x20 models      list bundle directories with their manifests\n\
      \x20 compile     compile a graph.json for a tarch, print per-layer cycles\n\
      \x20 simulate    run the bit-exact accelerator simulation on a test vector\n\
      \x20 resources   FPGA resource + power report (Table I row)\n\
@@ -89,7 +105,15 @@ pub fn usage() -> String {
      \x20 --classes N --calib N --image-size N --fm N   mixed-search workload\n\
      \x20 --percentile P     quant calibration percentile (default: min/max)\n\
      \x20 --episodes N --ways W --shots S --queries Q   eval protocol\n\
-     \x20 --json PATH        also write results as JSON\n"
+     \x20 --json PATH        also write results as JSON\n\
+     \x20 --out DIR          pack: bundle output directory\n\
+     \x20 --bundle DIR       verify/deploy/models/quant/eval: bundle directory\n\
+     \x20 --synthetic        pack: synthetic backbone instead of artifacts\n\
+     \x20 --name N --version V   pack/deploy: model name / version label\n\
+     \x20 --bits B           pack: attach a feature-quantization config\n\
+     \x20 --features         pack: embed novel_features.bin as the bundle's bank\n\
+     \x20 --emit-bundle DIR  mixed: pack the winning plan as a bundle\n\
+     \x20 --check            models: also replay each bundle's golden frame\n"
         .to_string()
 }
 
@@ -159,6 +183,67 @@ mod tests {
         assert!(run(&sv(&["mixed", "--widths", "abc"])).is_err());
         assert!(run(&sv(&["mixed", "--widths", "16,8"])).is_err()); // not ascending
         assert!(run(&sv(&["mixed", "--widths", "3,16"])).is_err()); // below 4 bits
+    }
+
+    #[test]
+    fn pack_verify_deploy_models_workflow() {
+        let dir = std::env::temp_dir().join(format!("pefsl_cli_bundle_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = dir.join("b1").display().to_string();
+        // pack a small synthetic bundle
+        assert_eq!(
+            run(&sv(&[
+                "pack", "--synthetic", "--image-size", "16", "--fm", "4", "--tarch", "z7020-8x8",
+                "--out", &out, "--name", "smoke", "--version", "t1", "--bits", "12",
+            ]))
+            .unwrap(),
+            0
+        );
+        // verify replays the golden frame
+        assert_eq!(run(&sv(&["verify", "--bundle", &out])).unwrap(), 0);
+        // deploy serves frames and hot-swaps mid-stream
+        assert_eq!(
+            run(&sv(&["deploy", "--bundle", &out, "--frames", "4", "--name", "m"])).unwrap(),
+            0
+        );
+        // models lists the bundle directory (with golden replay)
+        let root = dir.display().to_string();
+        assert_eq!(run(&sv(&["models", "--dir", &root, "--check"])).unwrap(), 0);
+        // a corrupted blob makes verify fail and models report it
+        let weights = dir.join("b1").join("weights.bin");
+        let mut bytes = std::fs::read(&weights).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&weights, bytes).unwrap();
+        assert!(run(&sv(&["verify", "--bundle", &out])).is_err());
+        assert_eq!(run(&sv(&["models", "--dir", &root])).unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mixed_emit_bundle_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pefsl_cli_mixed_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = dir.display().to_string();
+        assert_eq!(
+            run(&sv(&[
+                "mixed", "--tarch", "z7020-8x8", "--image-size", "8", "--fm", "2",
+                "--widths", "8,16", "--classes", "3", "--shots", "1", "--queries", "1",
+                "--calib", "2", "--steps", "1", "--emit-bundle", &out,
+            ]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(run(&sv(&["verify", "--bundle", &out])).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pack_requires_out_and_verify_requires_bundle() {
+        assert!(run(&sv(&["pack", "--synthetic"])).is_err());
+        assert!(run(&sv(&["verify"])).is_err());
+        assert!(run(&sv(&["deploy"])).is_err());
+        assert!(run(&sv(&["verify", "--bundle", "/nonexistent/pefsl_bundle"])).is_err());
     }
 
     #[test]

@@ -479,14 +479,47 @@ pub fn mixed_pareto_rows(
     tarch: &Tarch,
     cfg: &MixedSearchConfig,
 ) -> Result<Vec<MixedDseRow>> {
-    Ok(run_search(spec, tarch, cfg)?.0)
+    Ok(run_search(spec, tarch, cfg)?.rows)
 }
 
-fn run_search(
+/// Everything `pefsl mixed --emit-bundle` needs: the explored landscape
+/// plus the final accepted plan **applied to the graph** (formats
+/// installed, weights requantized) — a directly packable
+/// [`crate::bundle::Bundle`] payload.
+pub struct MixedSearchOutcome {
+    /// Every evaluated point, Pareto frontier marked (same as
+    /// [`mixed_pareto_rows`]).
+    pub rows: Vec<MixedDseRow>,
+    /// The backbone graph with the search's final accepted plan applied.
+    pub graph: Graph,
+    /// Per-op bit string of the final plan (`PrecisionPlan::describe_bits`).
+    pub plan_bits: String,
+}
+
+/// Run the greedy search and also return the winning plan's applied graph
+/// (see [`MixedSearchOutcome`]).
+pub fn mixed_search_outcome(
     spec: &BackboneSpec,
     tarch: &Tarch,
     cfg: &MixedSearchConfig,
-) -> Result<(Vec<MixedDseRow>, SearchStats)> {
+) -> Result<MixedSearchOutcome> {
+    let out = run_search(spec, tarch, cfg)?;
+    Ok(MixedSearchOutcome { rows: out.rows, graph: out.graph, plan_bits: out.plan_bits })
+}
+
+/// Full output of one search run (internal: `stats` feed the memoization
+/// tests).
+struct SearchOutput {
+    rows: Vec<MixedDseRow>,
+    /// Simulation-effort counters — only read by the memoization tests.
+    #[cfg_attr(not(test), allow(dead_code))]
+    stats: SearchStats,
+    /// Graph with the final accepted plan applied.
+    graph: Graph,
+    plan_bits: String,
+}
+
+fn run_search(spec: &BackboneSpec, tarch: &Tarch, cfg: &MixedSearchConfig) -> Result<SearchOutput> {
     cfg.validate(tarch)?;
     let graph = build_backbone_graph(spec, cfg.seed)?;
     let elems: usize = graph.input_shape.iter().product();
@@ -588,7 +621,16 @@ fn run_search(
             (a >= r.accuracy && c < r.cycles) || (a > r.accuracy && c <= r.cycles)
         });
     }
-    Ok((rows, ev.stats))
+    let stats = ev.stats;
+
+    // the final accepted plan, applied: the searched artifact a bundle
+    // packs (one extra plan fit + apply; no extra simulation)
+    let per_op = expand_bits(&graph, &matmul_idx, &current, widest);
+    let final_plan = cal.plan(&per_op)?;
+    let plan_bits = final_plan.describe_bits();
+    let applied = final_plan.applied(&graph)?;
+
+    Ok(SearchOutput { rows, stats, graph: applied, plan_bits })
 }
 
 /// Render rows as an aligned text table (the bench/CLI output).
@@ -676,9 +718,11 @@ mod tests {
         let mut cfg = tiny_cfg();
         cfg.max_steps = 3;
         cfg.memoize = false;
-        let (naive, naive_stats) = run_search(&spec, &tarch, &cfg).unwrap();
+        let out_naive = run_search(&spec, &tarch, &cfg).unwrap();
         cfg.memoize = true;
-        let (memo, memo_stats) = run_search(&spec, &tarch, &cfg).unwrap();
+        let out_memo = run_search(&spec, &tarch, &cfg).unwrap();
+        let (naive, naive_stats) = (out_naive.rows, out_naive.stats);
+        let (memo, memo_stats) = (out_memo.rows, out_memo.stats);
 
         assert_eq!(naive.len(), memo.len());
         for (a, b) in naive.iter().zip(&memo) {
@@ -702,6 +746,29 @@ mod tests {
         // accepted candidate's compiled plan is reused by the rebase)
         assert_eq!(memo_stats.plans_compiled, naive_stats.plans_compiled);
         assert_eq!(memo_stats.plans_compiled, memo.len(), "{memo_stats:?}");
+    }
+
+    #[test]
+    fn outcome_carries_the_applied_winning_plan() {
+        let tarch = Tarch::z7020_8x8();
+        let mut cfg = tiny_cfg();
+        cfg.widths = vec![4, 16];
+        cfg.max_accuracy_drop = 1.0; // force at least one accepted narrowing
+        cfg.max_steps = 1;
+        let spec = tiny_spec();
+        let out = mixed_search_outcome(&spec, &tarch, &cfg).unwrap();
+        assert_eq!(out.rows.len(), mixed_pareto_rows(&spec, &tarch, &cfg).unwrap().len());
+        // plan string covers every op, and a 4-bit layer landed in the graph
+        assert_eq!(out.plan_bits.split(',').count(), out.graph.ops.len());
+        assert!(out.plan_bits.contains('4'), "{}", out.plan_bits);
+        assert!(!out.graph.formats.is_uniform());
+        // the applied graph is simulable and packable as-is
+        let r = crate::sim::simulate_f32(&out.graph, &tarch, &[0.3; 8 * 8 * 3]).unwrap();
+        assert!(r.cycles > 0);
+        let bundle =
+            crate::bundle::Bundle::pack("mixed", out.plan_bits.as_str(), out.graph, tarch.clone())
+                .unwrap();
+        bundle.verify().unwrap();
     }
 
     #[test]

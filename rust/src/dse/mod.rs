@@ -19,6 +19,9 @@ mod quant;
 mod sweep;
 
 pub use builder::{build_backbone_graph, BackboneSpec};
-pub use mixed::{mixed_pareto_rows, render_mixed_table, MixedDseRow, MixedSearchConfig};
+pub use mixed::{
+    mixed_pareto_rows, mixed_search_outcome, render_mixed_table, MixedDseRow, MixedSearchConfig,
+    MixedSearchOutcome,
+};
 pub use quant::{quant_pareto_rows, render_quant_table, tarch_for_bits, QuantDseRow};
 pub use sweep::{fig5_rows, join_accuracy, render_table, DseRow};

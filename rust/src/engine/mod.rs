@@ -65,15 +65,24 @@
 //! The pre-engine single-frame `coordinator::Backend` trait (and its
 //! `SimBackend`/`PjrtBackend` shims) survived one release as a compat layer
 //! and has been removed; all callers build an [`Engine`] directly.
+//!
+//! Above the single-engine API sit two deployment pieces: [`Registry`], a
+//! named multi-model front that hot-swaps engines atomically
+//! ([`Registry::deploy`] builds off to the side, in-flight requests drain
+//! on the old engine), and [`SessionSnapshot`] / [`Session::restore`],
+//! which persist a session's enrolled class banks — both serving
+//! [`crate::bundle`], the versioned deployment-bundle format.
 
 mod builder;
+mod registry;
 mod request;
 mod session;
 mod workers;
 
 pub use builder::{resolve_artifacts_dir, BackendKind, EngineBuilder};
+pub use registry::{ModelInfo, Registry};
 pub use request::{InferItem, InferMetrics, InferRequest, InferResponse};
-pub use session::Session;
+pub use session::{ClassSnapshot, Session, SessionSnapshot};
 
 use std::sync::Mutex;
 

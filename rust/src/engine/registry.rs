@@ -1,0 +1,280 @@
+//! [`Registry`] — N named, versioned models served side by side, with
+//! atomic hot-swap.
+//!
+//! The registry is the serving layer above [`crate::bundle::Bundle`]: each
+//! deployed model is an [`Engine`] (its own worker pool over one compiled
+//! program) addressed by name, and [`Registry::deploy`] replaces a model
+//! **atomically** — the new engine is built and golden-verified entirely
+//! off the serving path, then swapped in under a write lock held only for
+//! the pointer exchange.  In-flight requests keep serving: they resolved
+//! an `Arc<Engine>` under the read lock *before* running inference, so the
+//! old engine drains naturally as those clones drop — no request is ever
+//! dropped or sees a half-installed model (race-tested in
+//! `tests/bundle_registry.rs` under concurrent sessions).
+//!
+//! [`Session`]s obtained via [`Registry::session`] pin the engine that was
+//! current at creation — enrolled features stay consistent with the
+//! backbone that produced them even across later deploys; re-resolve per
+//! request ([`Registry::infer`]) when "always newest" is wanted instead.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, PoisonError, RwLock};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::bundle::Bundle;
+
+use super::request::{InferRequest, InferResponse};
+use super::session::Session;
+use super::Engine;
+
+/// One deployed model.
+struct Deployed {
+    version: String,
+    generation: u64,
+    engine: Arc<Engine>,
+}
+
+/// Listing row of one deployed model ([`Registry::models`]).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub version: String,
+    /// Monotonic deploy counter across the registry — increments on every
+    /// (re)deploy, so it distinguishes two deploys of the same version.
+    pub generation: u64,
+    /// Backend kind of the serving engine (`"sim"` / `"pjrt"`).
+    pub backend: &'static str,
+    pub feature_dim: usize,
+    pub workers: usize,
+    /// Requests served by the *current* engine (resets on hot-swap).
+    pub requests: u64,
+}
+
+/// A hot-swappable multi-model registry over the engine pool.
+#[derive(Default)]
+pub struct Registry {
+    models: RwLock<BTreeMap<String, Deployed>>,
+    generations: AtomicU64,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Deploy a bundle under `name` (replacing any previous version) with
+    /// the default worker pool; returns the deploy generation.
+    pub fn deploy(&self, name: impl Into<String>, bundle: &Bundle) -> Result<u64> {
+        self.deploy_with(name, bundle, None)
+    }
+
+    /// [`Registry::deploy`] with an explicit worker-pool size.
+    ///
+    /// The expensive work — golden-frame verification and engine
+    /// compilation — happens before any lock is taken; a failed build or
+    /// verification leaves the previous version serving untouched.  The
+    /// swap itself is a pointer exchange under the write lock; requests
+    /// already running on the old engine complete on it (they hold their
+    /// own `Arc`), new requests resolve the new one.  Concurrent deploys
+    /// of one model are ordered by generation: an older deploy that
+    /// finishes late never overwrites a newer one.
+    ///
+    /// Note the deploy path compiles the graph twice (once for the golden
+    /// replay, once inside the engine build) — deploys are control-plane
+    /// rare; fold the two if redeploy frequency ever makes this show up.
+    pub fn deploy_with(
+        &self,
+        name: impl Into<String>,
+        bundle: &Bundle,
+        workers: Option<usize>,
+    ) -> Result<u64> {
+        let name = name.into();
+        bundle.verify().with_context(|| {
+            format!("bundle '{}@{}' failed verification; not deployed", bundle.name, bundle.version)
+        })?;
+        let mut builder = bundle.engine_builder();
+        if let Some(n) = workers {
+            builder = builder.workers(n);
+        }
+        let engine = Arc::new(builder.build()?);
+        Ok(self.install(name, bundle.version.clone(), engine))
+    }
+
+    /// Deploy an already-built engine (tests, custom builds) — same atomic
+    /// swap, no bundle verification.
+    pub fn deploy_engine(
+        &self,
+        name: impl Into<String>,
+        version: impl Into<String>,
+        engine: Engine,
+    ) -> u64 {
+        self.install(name.into(), version.into(), Arc::new(engine))
+    }
+
+    fn install(&self, name: String, version: String, engine: Arc<Engine>) -> u64 {
+        let generation = self.generations.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut models = self.models.write().unwrap_or_else(PoisonError::into_inner);
+        // Two deploys of one model can race: generations are allocated (and
+        // engines built) outside the lock, so a slow older deploy may reach
+        // here after a faster newer one.  Last-allocated wins — never
+        // install a generation older than what's already serving.
+        match models.get(&name) {
+            Some(current) if current.generation > generation => {}
+            _ => {
+                models.insert(name, Deployed { version, generation, engine });
+            }
+        }
+        generation
+    }
+
+    /// Remove a model; returns whether it was deployed.  Engines held by
+    /// live sessions or in-flight requests drain after removal.
+    pub fn undeploy(&self, name: &str) -> bool {
+        let mut models = self.models.write().unwrap_or_else(PoisonError::into_inner);
+        models.remove(name).is_some()
+    }
+
+    /// The engine currently serving `name` (pinned: later deploys don't
+    /// affect the returned `Arc`).
+    pub fn engine(&self, name: &str) -> Result<Arc<Engine>> {
+        let models = self.models.read().unwrap_or_else(PoisonError::into_inner);
+        models.get(name).map(|d| d.engine.clone()).ok_or_else(|| {
+            let have: Vec<&str> = models.keys().map(String::as_str).collect();
+            anyhow!("no model '{name}' deployed (deployed: [{}])", have.join(", "))
+        })
+    }
+
+    /// Route a request to the model's *current* engine.  The engine is
+    /// resolved under the read lock but runs without it, so a concurrent
+    /// hot-swap neither blocks nor is blocked by inference.
+    pub fn infer(&self, name: &str, request: InferRequest) -> Result<InferResponse> {
+        self.engine(name)?.infer(request)
+    }
+
+    /// A new few-shot session over the model's current engine (pinned to
+    /// the version current at creation).
+    pub fn session(&self, name: &str) -> Result<Session> {
+        Ok(Session::new(self.engine(name)?))
+    }
+
+    /// Listing of every deployed model, name-ordered.
+    pub fn models(&self) -> Vec<ModelInfo> {
+        let models = self.models.read().unwrap_or_else(PoisonError::into_inner);
+        models
+            .iter()
+            .map(|(name, d)| ModelInfo {
+                name: name.clone(),
+                version: d.version.clone(),
+                generation: d.generation,
+                backend: d.engine.name(),
+                feature_dim: d.engine.feature_dim(),
+                workers: d.engine.workers(),
+                requests: d.engine.stats().requests,
+            })
+            .collect()
+    }
+
+    /// Number of deployed models.
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bundle::Bundle;
+    use crate::dse::BackboneSpec;
+    use crate::tarch::Tarch;
+
+    fn tiny_bundle(seed: u64, version: &str) -> Bundle {
+        let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+        Bundle::pack("m", version, spec.build_graph(seed).unwrap(), Tarch::z7020_8x8()).unwrap()
+    }
+
+    #[test]
+    fn deploy_serve_and_list() {
+        let reg = Registry::new();
+        assert!(reg.is_empty());
+        let g1 = reg.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+        assert_eq!(reg.len(), 1);
+        let img = vec![0.3; 8 * 8 * 3];
+        let resp = reg.infer("m", InferRequest::single(img.clone())).unwrap();
+        assert_eq!(resp.items.len(), 1);
+        let info = &reg.models()[0];
+        assert_eq!(info.name, "m");
+        assert_eq!(info.version, "v1");
+        assert_eq!(info.generation, g1);
+        assert_eq!(info.backend, "sim");
+        assert_eq!(info.requests, 1);
+        // unknown model: loud, names what IS deployed
+        let err = reg.infer("ghost", InferRequest::single(img)).unwrap_err().to_string();
+        assert!(err.contains("ghost") && err.contains('m'), "{err}");
+    }
+
+    #[test]
+    fn hot_swap_changes_outputs_and_bumps_generation() {
+        let reg = Registry::new();
+        let b1 = tiny_bundle(1, "v1");
+        let b2 = tiny_bundle(2, "v2");
+        let g1 = reg.deploy("m", &b1).unwrap();
+        let img = vec![0.5; 8 * 8 * 3];
+        let before = reg.infer("m", InferRequest::single(img.clone())).unwrap();
+        // a session pins the pre-swap engine
+        let pinned = reg.session("m").unwrap();
+        let g2 = reg.deploy("m", &b2).unwrap();
+        assert!(g2 > g1);
+        assert_eq!(reg.models()[0].version, "v2");
+        let after = reg.infer("m", InferRequest::single(img.clone())).unwrap();
+        // different weights → different features (graphs differ by seed)
+        assert_ne!(before.items[0].features, after.items[0].features);
+        // the pinned session still serves v1 bit-exactly
+        let item = pinned.extract(&img).unwrap();
+        assert_eq!(item.features, before.items[0].features);
+    }
+
+    #[test]
+    fn failed_deploy_leaves_previous_version_serving() {
+        let reg = Registry::new();
+        reg.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+        let mut broken = tiny_bundle(2, "v2");
+        broken.golden.output_codes[0] ^= 1; // tampered: verification must fail
+        let err = reg.deploy("m", &broken).unwrap_err().to_string();
+        assert!(err.contains("not deployed"), "{err}");
+        assert_eq!(reg.models()[0].version, "v1");
+        reg.infer("m", InferRequest::single(vec![0.1; 8 * 8 * 3])).unwrap();
+    }
+
+    #[test]
+    fn undeploy_drains() {
+        let reg = Registry::new();
+        reg.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+        let pinned = reg.engine("m").unwrap();
+        assert!(reg.undeploy("m"));
+        assert!(!reg.undeploy("m"));
+        assert!(reg.infer("m", InferRequest::single(vec![0.1; 8 * 8 * 3])).is_err());
+        // the drained engine still completes work already holding it
+        pinned.infer(InferRequest::single(vec![0.1; 8 * 8 * 3])).unwrap();
+    }
+
+    #[test]
+    fn multiple_models_side_by_side() {
+        let reg = Registry::new();
+        reg.deploy_with("a", &tiny_bundle(1, "v1"), Some(1)).unwrap();
+        reg.deploy_with("b", &tiny_bundle(2, "v1"), Some(2)).unwrap();
+        assert_eq!(reg.len(), 2);
+        let names: Vec<String> = reg.models().into_iter().map(|m| m.name).collect();
+        assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+        let img = vec![0.2; 8 * 8 * 3];
+        let ra = reg.infer("a", InferRequest::single(img.clone())).unwrap();
+        let rb = reg.infer("b", InferRequest::single(img)).unwrap();
+        assert_ne!(ra.items[0].features, rb.items[0].features);
+        assert_eq!(reg.models()[1].workers, 2);
+    }
+}

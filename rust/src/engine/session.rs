@@ -8,6 +8,15 @@
 //! A session can also be *detached* ([`Session::detached`]): feature-space
 //! only, no engine — used by the episodic few-shot evaluation, where
 //! features are precomputed.
+//!
+//! Enrolled state is persistable: [`Session::snapshot`] exports every
+//! class bank (label, running sum, shot count — plus the integer-code
+//! sums of a quantized session) as a [`SessionSnapshot`], and
+//! [`Session::restore`] rebuilds a session that classifies bit-identically
+//! (the sums are the exact accumulators, not re-derived centroids).  This
+//! is what `pefsl::bundle` ships as the enrolled-class snapshot of a
+//! deployment bundle, mirroring FSL-HDnn's view of class memory as part
+//! of the deployed model.
 
 use std::sync::Arc;
 
@@ -19,6 +28,42 @@ use crate::quant::{fit_format, QuantConfig, QuantNcm};
 
 use super::request::{InferItem, InferMetrics, InferRequest};
 use super::Engine;
+
+/// Exported state of one enrolled class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSnapshot {
+    pub label: String,
+    /// Running f32 sum of enrolled normalized features.
+    pub sum: Vec<f32>,
+    /// Shots enrolled into the f32 classifier.
+    pub count: usize,
+    /// Integer-code sum of the quantized classifier (quantized sessions).
+    pub qsum: Option<Vec<i64>>,
+    /// Shots enrolled into the quantized classifier — may trail `count`
+    /// once the accumulator budget saturates.
+    pub qcount: usize,
+}
+
+/// Portable snapshot of a session's enrolled few-shot state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSnapshot {
+    pub dim: usize,
+    pub base_mean: Option<Vec<f32>>,
+    /// Integer-NCM format, if the session ran in quantized mode.
+    pub quant_format: Option<QFormat>,
+    pub classes: Vec<ClassSnapshot>,
+}
+
+impl SessionSnapshot {
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Total shots enrolled across classes (f32 path).
+    pub fn total_shots(&self) -> usize {
+        self.classes.iter().map(|c| c.count).sum()
+    }
+}
 
 /// One client's few-shot classification session.
 ///
@@ -184,6 +229,73 @@ impl Session {
     pub fn has_enrolled(&self) -> bool {
         self.ncm.has_enrolled()
     }
+
+    /// Export the session's enrolled state (both classifiers in quantized
+    /// mode) for persistence; [`Session::restore`] is the exact inverse.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        let qstates = self.qncm.as_ref().map(QuantNcm::class_states);
+        let classes = self
+            .ncm
+            .class_states()
+            .into_iter()
+            .enumerate()
+            .map(|(i, (label, sum, count))| {
+                let (qsum, qcount) = match &qstates {
+                    Some(qs) => (Some(qs[i].1.to_vec()), qs[i].2),
+                    None => (None, 0),
+                };
+                ClassSnapshot { label: label.to_string(), sum: sum.to_vec(), count, qsum, qcount }
+            })
+            .collect();
+        SessionSnapshot {
+            dim: self.dim(),
+            base_mean: self.ncm.base_mean().map(<[f32]>::to_vec),
+            quant_format: self.quant_format(),
+            classes,
+        }
+    }
+
+    /// Rebuild a session from a snapshot — over a shared engine, or
+    /// detached (`engine: None`).  Restored sums are the exact enrollment
+    /// accumulators, so classification is bit-identical to the snapshotted
+    /// session.
+    pub fn restore(engine: Option<Arc<Engine>>, snap: &SessionSnapshot) -> Result<Session> {
+        if let Some(e) = &engine {
+            if e.feature_dim() != snap.dim {
+                bail!(
+                    "snapshot feature dim {} != engine feature dim {}",
+                    snap.dim,
+                    e.feature_dim()
+                );
+            }
+        }
+        let mut s = match engine {
+            Some(e) => Session::new(e),
+            None => Session::detached(snap.dim),
+        };
+        if let Some(m) = &snap.base_mean {
+            s = s.with_base_mean(m.clone())?;
+        }
+        if let Some(fmt) = snap.quant_format {
+            s = s.with_quant_format(fmt)?;
+        }
+        for c in &snap.classes {
+            s.ncm.restore_class(c.label.as_str(), c.sum.clone(), c.count)?;
+            match (&mut s.qncm, &c.qsum) {
+                (Some(q), Some(qsum)) => {
+                    q.restore_class(c.label.as_str(), qsum.clone(), c.qcount)?;
+                }
+                (None, None) => {}
+                (Some(_), None) => {
+                    bail!("snapshot class '{}' lacks quantized sums (session is quantized)", c.label)
+                }
+                (None, Some(_)) => {
+                    bail!("snapshot class '{}' has quantized sums but no quant format", c.label)
+                }
+            }
+        }
+        Ok(s)
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +402,76 @@ mod tests {
         let c = s2.add_class("x");
         s2.enroll_feature(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
         assert!(s2.classify_feature(&[1.0, 0.0, 0.0, 0.0]).is_ok());
+    }
+
+    #[test]
+    fn snapshot_restore_detached_bit_exact() {
+        let mut s = Session::detached(8)
+            .with_base_mean(vec![0.03; 8])
+            .unwrap()
+            .with_quant(QuantConfig::bits(12))
+            .unwrap();
+        let a = s.add_class("a");
+        let b = s.add_class("b");
+        let mut fa = vec![0.1; 8];
+        fa[0] = 4.0;
+        let mut fb = vec![0.1; 8];
+        fb[1] = 4.0;
+        s.enroll_feature(a, &fa).unwrap();
+        s.enroll_feature(a, &fb).unwrap();
+        s.enroll_feature(b, &fb).unwrap();
+        let snap = s.snapshot();
+        assert_eq!(snap.n_classes(), 2);
+        assert_eq!(snap.total_shots(), 3);
+        assert_eq!(snap.quant_format, s.quant_format());
+        let r = Session::restore(None, &snap).unwrap();
+        assert_eq!(r.n_classes(), 2);
+        assert_eq!(r.class_label(0), Some("a"));
+        assert_eq!(r.shot_count(0), 2);
+        for query in [&fa, &fb] {
+            assert_eq!(
+                s.classify_feature(query).unwrap(),
+                r.classify_feature(query).unwrap()
+            );
+            assert_eq!(
+                s.classify_feature_f32(query).unwrap(),
+                r.classify_feature_f32(query).unwrap()
+            );
+        }
+        // a second snapshot of the restored session is identical
+        assert_eq!(r.snapshot(), snap);
+    }
+
+    #[test]
+    fn snapshot_restore_over_engine() {
+        let engine = engine();
+        let mut s = Session::new(engine.clone());
+        let a = s.add_class("a");
+        let img = vec![0.7; 16 * 16 * 3];
+        s.enroll_image(a, &img).unwrap();
+        let snap = s.snapshot();
+        assert!(snap.quant_format.is_none());
+        let r = Session::restore(Some(engine.clone()), &snap).unwrap();
+        let (p0, _) = s.classify_image(&img).unwrap();
+        let (p1, _) = r.classify_image(&img).unwrap();
+        assert_eq!(p0, p1);
+        // dim mismatch rejected
+        let bad = SessionSnapshot { dim: 3, ..snap.clone() };
+        assert!(Session::restore(Some(engine), &bad).is_err());
+    }
+
+    #[test]
+    fn snapshot_quant_consistency_validated() {
+        // quantized sums without a quant format (and vice versa) are loud
+        let mut s = Session::detached(4).with_quant(QuantConfig::bits(8)).unwrap();
+        let c = s.add_class("x");
+        s.enroll_feature(c, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        let mut snap = s.snapshot();
+        snap.quant_format = None;
+        assert!(Session::restore(None, &snap).is_err());
+        let mut snap2 = s.snapshot();
+        snap2.classes[0].qsum = None;
+        assert!(Session::restore(None, &snap2).is_err());
     }
 
     #[test]

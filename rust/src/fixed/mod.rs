@@ -104,6 +104,25 @@ impl QFormat {
     pub fn dequantize_slice(&self, codes: &[i16]) -> Vec<f32> {
         codes.iter().map(|&c| self.dequantize(c)).collect()
     }
+
+    /// Serialize as `{"total_bits": …, "frac_bits": …}` — the format
+    /// object of graph artifacts and deployment-bundle manifests.
+    pub fn to_json(&self) -> crate::json::Value {
+        let mut v = crate::json::Value::obj();
+        v.set("total_bits", self.total_bits as usize).set("frac_bits", self.frac_bits as usize);
+        v
+    }
+
+    /// Parse a `{"total_bits", "frac_bits"}` object, rejecting malformed
+    /// formats with an error instead of the constructor's assert.
+    pub fn from_json(v: &crate::json::Value) -> anyhow::Result<QFormat> {
+        let total = v.req_usize("total_bits")?;
+        let frac = v.req_usize("frac_bits")?;
+        if total == 0 || total > 16 || frac >= total {
+            anyhow::bail!("bad Q format: total_bits {total}, frac_bits {frac}");
+        }
+        Ok(QFormat::new(total as u8, frac as u8))
+    }
 }
 
 /// Round-half-away-from-zero arithmetic right shift — the accelerator's
@@ -133,6 +152,18 @@ mod tests {
     use crate::util::proptest::check;
 
     const Q: QFormat = QFormat { total_bits: 16, frac_bits: 8 };
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let fmt = QFormat::new(12, 5);
+        assert_eq!(QFormat::from_json(&fmt.to_json()).unwrap(), fmt);
+        for (t, f) in [(0usize, 0usize), (17, 8), (8, 8), (8, 9)] {
+            let mut v = crate::json::Value::obj();
+            v.set("total_bits", t).set("frac_bits", f);
+            assert!(QFormat::from_json(&v).is_err(), "Q{t}.{f} accepted");
+        }
+        assert!(QFormat::from_json(&crate::json::Value::obj()).is_err());
+    }
 
     #[test]
     fn exact_values() {

@@ -1,0 +1,150 @@
+//! [`Graph`] → JSON — the writer half of the `graph.json` schema.
+//!
+//! [`to_json`] emits exactly the document [`super::import`] reads: base
+//! format, input/output descriptors, the op list, pass-through backbone
+//! metadata, and — new with precision plans — a `"formats"` object of
+//! per-tensor overrides, so a mixed-precision graph (weights requantized,
+//! formats installed) survives a save/load cycle bit-exactly.  Weight
+//! tensors travel separately in the named-tensor binary
+//! ([`crate::util::tensorio::write_named_tensors`]).
+
+use crate::json::Value;
+
+use super::ir::{Graph, Op};
+
+fn op_to_json(op: &Op) -> Value {
+    let mut v = Value::obj();
+    v.set("name", op.name()).set("output", op.output());
+    match op {
+        Op::Conv2d { input, weights, bias, stride, padding, relu, .. } => {
+            v.set("op", "conv2d")
+                .set("input", input.as_str())
+                .set("weights", weights.as_str())
+                .set("bias", bias.as_str())
+                .set("stride", *stride)
+                .set("padding", *padding)
+                .set("relu", *relu);
+        }
+        Op::Add { input, input2, relu, .. } => {
+            v.set("op", "add")
+                .set("input", input.as_str())
+                .set("input2", input2.as_str())
+                .set("relu", *relu);
+        }
+        Op::MaxPool { input, size, .. } => {
+            v.set("op", "maxpool").set("input", input.as_str()).set("size", *size);
+        }
+        Op::Gap { input, .. } => {
+            v.set("op", "gap").set("input", input.as_str());
+        }
+        Op::Dense { input, weights, bias, relu, .. } => {
+            v.set("op", "dense")
+                .set("input", input.as_str())
+                .set("weights", weights.as_str())
+                .set("bias", bias.as_str())
+                .set("relu", *relu);
+        }
+        Op::Relu { input, .. } => {
+            v.set("op", "relu").set("input", input.as_str());
+        }
+    }
+    v
+}
+
+/// Serialize a graph into the `graph.json` document [`super::import`]
+/// accepts (weights excluded — they go in the named-tensor binary).
+pub fn to_json(g: &Graph) -> Value {
+    let mut doc = Value::obj();
+    doc.set("name", g.name.as_str()).set("format", g.base_format().to_json());
+    if !g.formats.is_uniform() {
+        let mut sorted: Vec<_> = g.formats.overrides().collect();
+        sorted.sort_by(|a, b| a.0.cmp(b.0));
+        let mut fmts = Value::obj();
+        for (tensor, fmt) in sorted {
+            fmts.set(tensor, fmt.to_json());
+        }
+        doc.set("formats", fmts);
+    }
+    let mut input = Value::obj();
+    input.set("name", g.input_name.as_str()).set(
+        "shape",
+        g.input_shape.iter().map(|&d| Value::from(d)).collect::<Vec<_>>(),
+    );
+    doc.set("input", input);
+    let mut output = Value::obj();
+    output.set("name", g.output_name.as_str()).set("dim", g.feature_dim);
+    doc.set("output", output);
+    doc.set("ops", g.ops.iter().map(op_to_json).collect::<Vec<_>>());
+    if g.meta != Value::Null {
+        doc.set("backbone", g.meta.clone());
+    }
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::import;
+    use super::*;
+    use crate::fixed::QFormat;
+
+    fn demo_graph() -> Graph {
+        let (doc, tensors) = super::super::import::testutil::tiny_conv_graph(8, 3, 4, 1);
+        import(&doc, tensors).unwrap()
+    }
+
+    #[test]
+    fn export_import_roundtrip_uniform() {
+        let g = demo_graph();
+        let doc = to_json(&g);
+        let tensors: Vec<_> =
+            g.weights.iter().map(|(n, t)| (n.clone(), t.clone())).collect();
+        let back = import(&doc, tensors).unwrap();
+        assert_eq!(back.name, g.name);
+        assert_eq!(back.ops, g.ops);
+        assert_eq!(back.input_shape, g.input_shape);
+        assert_eq!(back.output_name, g.output_name);
+        assert_eq!(back.feature_dim, g.feature_dim);
+        assert_eq!(back.formats, g.formats);
+        assert_eq!(back.weights, g.weights);
+        assert_eq!(back.meta, g.meta);
+    }
+
+    #[test]
+    fn export_import_roundtrip_with_format_overrides() {
+        let mut g = demo_graph();
+        g.formats.set("a1", QFormat::new(8, 4));
+        g.formats.set("c1.w", QFormat::new(12, 9));
+        let doc = to_json(&g);
+        assert!(doc.get("formats").is_some());
+        let tensors: Vec<_> =
+            g.weights.iter().map(|(n, t)| (n.clone(), t.clone())).collect();
+        let back = import(&doc, tensors).unwrap();
+        assert_eq!(back.tensor_format("a1"), QFormat::new(8, 4));
+        assert_eq!(back.tensor_format("c1.w"), QFormat::new(12, 9));
+        assert_eq!(back.tensor_format("features"), back.base_format());
+        assert_eq!(back.formats, g.formats);
+        // text-level trip too (through the actual serializer)
+        let text = crate::json::to_string_pretty(&doc);
+        let reparsed = crate::json::parse(&text).unwrap();
+        assert_eq!(reparsed, doc);
+    }
+
+    #[test]
+    fn malformed_override_rejected() {
+        let mut g = demo_graph();
+        g.formats.set("a1", QFormat::new(8, 4));
+        let mut doc = to_json(&g);
+        if let Some(fmts) = doc.get("formats").cloned() {
+            let mut bad = fmts;
+            bad.set("a1", {
+                let mut v = Value::obj();
+                v.set("total_bits", 40usize).set("frac_bits", 4usize);
+                v
+            });
+            doc.set("formats", bad);
+        }
+        let tensors: Vec<_> =
+            g.weights.iter().map(|(n, t)| (n.clone(), t.clone())).collect();
+        assert!(import(&doc, tensors).is_err());
+    }
+}

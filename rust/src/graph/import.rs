@@ -49,10 +49,7 @@ pub fn import(doc: &Value, tensors: Vec<(String, crate::util::tensorio::Tensor)>
     let name = doc.req_str("name")?.to_string();
 
     let fmt_obj = doc.get("format").context("missing 'format'")?;
-    let qformat = QFormat::new(
-        fmt_obj.req_usize("total_bits")? as u8,
-        fmt_obj.req_usize("frac_bits")? as u8,
-    );
+    let qformat = QFormat::from_json(fmt_obj).context("bad 'format'")?;
 
     let input = doc.get("input").context("missing 'input'")?;
     let input_name = input.req_str("name")?.to_string();
@@ -91,9 +88,20 @@ pub fn import(doc: &Value, tensors: Vec<(String, crate::util::tensorio::Tensor)>
 
     let meta = doc.get("backbone").cloned().unwrap_or(Value::Null);
 
+    let mut formats = super::ir::TensorFormats::uniform(qformat);
+    // optional per-tensor overrides — the precision-plan state a bundle
+    // or an exported mixed-precision graph carries
+    if let Some(Value::Obj(m)) = doc.get("formats") {
+        for (tensor, v) in m {
+            let fmt = QFormat::from_json(v)
+                .with_context(|| format!("bad format override for tensor '{tensor}'"))?;
+            formats.set(tensor.clone(), fmt);
+        }
+    }
+
     let mut g = Graph {
         name,
-        formats: super::ir::TensorFormats::uniform(qformat),
+        formats,
         input_name, input_shape, output_name, feature_dim,
         ops, weights, shapes: HashMap::new(), meta,
     };

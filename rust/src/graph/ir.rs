@@ -124,6 +124,12 @@ impl TensorFormats {
     pub fn is_uniform(&self) -> bool {
         self.overrides.is_empty()
     }
+
+    /// Iterate the per-tensor overrides (unordered — serialization sites
+    /// sort by name for deterministic output).
+    pub fn overrides(&self) -> impl Iterator<Item = (&str, QFormat)> {
+        self.overrides.iter().map(|(name, &fmt)| (name.as_str(), fmt))
+    }
 }
 
 impl Default for TensorFormats {

@@ -6,11 +6,13 @@
 //! the simplification passes the paper gets from `onnx-simplifier`
 //! (standalone-ReLU fusion, dead-op elimination).
 
+mod export;
 mod import;
 mod ir;
 mod shape;
 mod simplify;
 
+pub use export::to_json;
 pub use import::{import, import_files};
 pub use ir::{Graph, Op, TensorFormats};
 pub use shape::infer_shapes;

@@ -64,13 +64,30 @@ fn push_indent(n: usize, out: &mut String) {
     }
 }
 
+/// Serialize one `Value::Num`.  Policy:
+///
+/// * **NaN / ±infinity** have no JSON representation and are written as
+///   `null` — deliberately lossy; callers that must preserve them map them
+///   to strings or sentinels *before* serializing.
+/// * **Finite integral values with |x| ≤ 2⁵³** (the f64-exact integer
+///   window) print as bare integers, except `-0.0`, which prints as
+///   `-0.0` so the sign survives the trip.
+/// * **Everything else** uses Rust's shortest-roundtrip float formatting
+///   (never scientific notation), so `parse(write(x))` is value-exact for
+///   every finite f64 — including integral values beyond 2⁵³, which print
+///   their full exact decimal expansion instead of being truncated
+///   through an `as i64` cast.
 fn write_number(x: f64, out: &mut String) {
-    if x.is_finite() && x == x.trunc() && x.abs() < 1e15 {
+    // largest f64 whose integer neighborhood is exactly representable (2⁵³)
+    const EXACT_INT: f64 = 9_007_199_254_740_992.0;
+    if !x.is_finite() {
+        out.push_str("null");
+    } else if x == 0.0 && x.is_sign_negative() {
+        out.push_str("-0.0");
+    } else if x == x.trunc() && x.abs() <= EXACT_INT {
         out.push_str(&format!("{}", x as i64));
-    } else if x.is_finite() {
-        out.push_str(&format!("{x}"));
     } else {
-        out.push_str("null"); // JSON has no NaN/Inf
+        out.push_str(&format!("{x}"));
     }
 }
 
@@ -111,9 +128,63 @@ mod tests {
     }
 
     #[test]
-    fn nan_becomes_null() {
-        let v = Value::Num(f64::NAN);
-        assert_eq!(to_string_pretty(&v).trim(), "null");
+    fn non_finite_becomes_null() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(to_string_pretty(&Value::Num(x)).trim(), "null", "{x}");
+        }
+    }
+
+    #[test]
+    fn negative_zero_keeps_sign() {
+        let text = to_string_pretty(&Value::Num(-0.0));
+        assert_eq!(text.trim(), "-0.0");
+        let back = parse(text.trim()).unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative());
+    }
+
+    #[test]
+    fn big_integrals_lossless() {
+        // integral but outside the old `as i64` window: printed exactly,
+        // parsed back to the same f64
+        for x in [1e15, -1e15, (1u64 << 53) as f64, (1u64 << 60) as f64, 1e300, -2.5e17] {
+            let mut out = String::new();
+            write_number(x, &mut out);
+            assert!(!out.contains('e') && !out.contains('E'), "{x} → {out}");
+            let back = parse(&out).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} → {out} → {back}");
+        }
+    }
+
+    #[test]
+    fn number_roundtrip_property() {
+        // writer → parser is value-exact (bit-exact, so -0.0 counts) for
+        // arbitrary finite f64 bit patterns
+        crate::util::proptest::check(31, 2000, |rng| {
+            let x = f64::from_bits(rng.next_u64());
+            if !x.is_finite() {
+                return;
+            }
+            let mut out = String::new();
+            write_number(x, &mut out);
+            let back = parse(&out).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} → {out} → {back}");
+        });
+    }
+
+    #[test]
+    fn document_roundtrip_property() {
+        // whole documents with random numeric leaves survive write → parse
+        crate::util::proptest::check(32, 200, |rng| {
+            let mut v = Value::obj();
+            let mut arr = Vec::new();
+            for _ in 0..rng.range(1, 8) {
+                let x = f64::from_bits(rng.next_u64());
+                arr.push(Value::Num(if x.is_finite() { x } else { 0.0 }));
+            }
+            v.set("xs", arr).set("n", rng.next_u64() >> 12).set("s", "q\"\n\\x");
+            let text = to_string_pretty(&v);
+            assert_eq!(parse(&text).unwrap(), v);
+        });
     }
 
     #[test]

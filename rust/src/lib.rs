@@ -26,10 +26,17 @@
 //!     `sim`), wired into the engine ([`engine::EngineBuilder::quant`]),
 //!     the uniform bit-width sweep (`pefsl quant`) and the mixed-precision
 //!     hardware-aware search (`pefsl mixed`, `dse::mixed_pareto_rows`);
+//!   - **`bundle` — versioned deployment bundles**: [`bundle::Bundle`]
+//!     packs a graph + weights + precision formats + tarch + optional
+//!     enrolled-session snapshot and feature bank into a checksummed,
+//!     format-versioned directory with a replayable golden frame
+//!     ([`bundle::Bundle::verify`]); [`engine::Registry`] serves N bundles
+//!     by name with atomic hot-swap (`pefsl pack/verify/deploy/models`);
 //!   - the demonstrator on top of the engine: `video`, `ncm`, `coordinator`
 //!     (frame loop + pipelined variant), `fewshot` (episodic evaluation),
 //!     `dse` and `cli`.
 
+pub mod bundle;
 pub mod cli;
 pub mod coordinator;
 pub mod dse;

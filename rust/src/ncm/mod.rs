@@ -22,6 +22,12 @@ pub struct ClassSlot {
 }
 
 impl ClassSlot {
+    /// The running sum of enrolled (normalized) features — the exported
+    /// state of the class (centroid = sum / count reconstructs exactly).
+    pub fn sum(&self) -> &[f32] {
+        &self.sum
+    }
+
     /// Mean of enrolled shots; `None` until the class has at least one
     /// shot (a fabricated zero vector would silently win against distant
     /// queries).
@@ -170,6 +176,35 @@ impl NcmClassifier {
         self.classes.clear();
     }
 
+    /// Export the enrolled state of every class, in class-index order:
+    /// `(label, running sum, shot count)`.  The sum is the exact f32
+    /// accumulator, so [`NcmClassifier::restore_class`] reproduces
+    /// classification bit-for-bit.
+    pub fn class_states(&self) -> Vec<(&str, &[f32], usize)> {
+        self.classes.iter().map(|c| (c.label.as_str(), c.sum.as_slice(), c.count)).collect()
+    }
+
+    /// Append a class restored from exported state (sum + count); returns
+    /// its index.  The inverse of [`NcmClassifier::class_states`].
+    pub fn restore_class(
+        &mut self,
+        label: impl Into<String>,
+        sum: Vec<f32>,
+        count: usize,
+    ) -> Result<usize> {
+        if sum.len() != self.dim {
+            bail!("restored class sum dim {} != feature dim {}", sum.len(), self.dim);
+        }
+        if sum.iter().any(|x| !x.is_finite()) {
+            bail!("restored class sum contains non-finite values");
+        }
+        if count == 0 && sum.iter().any(|&x| x != 0.0) {
+            bail!("restored class has zero shots but a non-zero sum");
+        }
+        self.classes.push(ClassSlot { label: label.into(), sum, count });
+        Ok(self.classes.len() - 1)
+    }
+
     /// Classify a query feature; errors if no class has any shot.
     pub fn classify(&self, feat: &[f32]) -> Result<Prediction> {
         let q = self.normalize(feat)?;
@@ -304,6 +339,34 @@ mod tests {
         ncm.reset();
         assert_eq!(ncm.n_classes(), 0);
         assert!(ncm.classify(&[1.0, 0.0, 0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn class_state_export_restore_is_bit_exact() {
+        let mut rng = Prng::new(33);
+        let mut ncm = NcmClassifier::new(8).with_base_mean(vec![0.05; 8]).unwrap();
+        for c in 0..3 {
+            let idx = ncm.add_class(format!("c{c}"));
+            for _ in 0..(c + 1) {
+                ncm.enroll(idx, &feat(8, rng.next_u64())).unwrap();
+            }
+        }
+        let mut restored = NcmClassifier::new(8).with_base_mean(vec![0.05; 8]).unwrap();
+        for (label, sum, count) in ncm.class_states() {
+            restored.restore_class(label, sum.to_vec(), count).unwrap();
+        }
+        assert_eq!(restored.n_classes(), 3);
+        for _ in 0..10 {
+            let q = feat(8, rng.next_u64());
+            assert_eq!(ncm.classify(&q).unwrap(), restored.classify(&q).unwrap());
+        }
+        // invalid restores rejected
+        assert!(restored.restore_class("bad", vec![0.0; 5], 1).is_err());
+        assert!(restored.restore_class("bad", vec![f32::NAN; 8], 1).is_err());
+        assert!(restored.restore_class("bad", vec![1.0; 8], 0).is_err());
+        // empty classes survive the trip
+        restored.restore_class("empty", vec![0.0; 8], 0).unwrap();
+        assert_eq!(restored.shot_count(3), 0);
     }
 
     #[test]

@@ -41,7 +41,7 @@ mod plan;
 mod tensor;
 
 pub use calibrate::{Calibrator, CalibratorSet, QuantPolicy};
-pub use ncm::QuantNcm;
+pub use ncm::{QuantNcm, DEFAULT_ACC_BITS};
 pub use plan::{LayerPrecision, PlanCalibrator, PrecisionPlan};
 pub use tensor::{acc_to_f32, int_dot, int_gemv, int_sq_dist, QTensor};
 

@@ -7,6 +7,14 @@
 //! [`int_sq_dist`] accumulators.  Only the EASY center/L2-normalize
 //! preprocessing stays in f32 — on the board that is where features hand
 //! over from the fabric to the CPU anyway.
+//!
+//! Enrollment accumulators model a fixed-width per-class memory (FSL-HDnn
+//! keeps the class banks on-chip): each class can hold at most
+//! [`QuantNcm::max_shots`] shots before its worst-case code sum would no
+//! longer fit the [`QuantNcm::acc_bits`]-wide accumulator.  Enrolling past
+//! that budget **saturates deterministically** — the shot is dropped and
+//! the centroid stays frozen — instead of wrapping the hardware
+//! accumulator.
 
 use anyhow::{bail, Result};
 
@@ -14,6 +22,10 @@ use crate::fixed::QFormat;
 use crate::ncm::{normalize_feature, prediction_from_distances, Prediction};
 
 use super::tensor::{acc_to_f32, int_sq_dist, QTensor};
+
+/// Default per-class accumulator width, bits (the demonstrator's 32-bit
+/// accumulator memory).
+pub const DEFAULT_ACC_BITS: u8 = 32;
 
 /// A registered class: running sum of enrolled codes.
 #[derive(Clone, Debug)]
@@ -31,12 +43,49 @@ pub struct QuantNcm {
     fmt: QFormat,
     base_mean: Option<Vec<f32>>,
     classes: Vec<QSlot>,
+    /// Width of the per-class enrollment accumulator.
+    acc_bits: u8,
+    /// Shots per class before the accumulator budget saturates.
+    max_shots: usize,
+}
+
+/// Largest number of shots whose worst-case code sum still fits a signed
+/// `acc_bits`-wide accumulator.  Codes reach `min_code = -(max_code + 1)`,
+/// so the *negative* side binds: `count × |min_code|` must stay within
+/// `2^(acc_bits-1)` (the positive side, `count × max_code`, is then within
+/// `2^(acc_bits-1) - 1` automatically).
+fn max_shots_for(fmt: QFormat, acc_bits: u8) -> usize {
+    let neg_budget = 1i64 << (acc_bits - 1);
+    (neg_budget / i64::from(fmt.max_code() + 1)).max(1) as usize
 }
 
 impl QuantNcm {
     pub fn new(dim: usize, fmt: QFormat) -> QuantNcm {
         assert!(dim > 0);
-        QuantNcm { dim, fmt, base_mean: None, classes: Vec::new() }
+        QuantNcm {
+            dim,
+            fmt,
+            base_mean: None,
+            classes: Vec::new(),
+            acc_bits: DEFAULT_ACC_BITS,
+            max_shots: max_shots_for(fmt, DEFAULT_ACC_BITS),
+        }
+    }
+
+    /// Model a narrower (or explicit) per-class accumulator: `bits` must
+    /// cover at least one shot (`≥ fmt.total_bits`) and at most the 32-bit
+    /// class memory the exported state is stored in.  Must be set before
+    /// any shot is enrolled.
+    pub fn with_acc_bits(mut self, bits: u8) -> Result<QuantNcm> {
+        if !(self.fmt.total_bits..=32).contains(&bits) {
+            bail!("accumulator width {bits} outside {}..=32 bits", self.fmt.total_bits);
+        }
+        if self.has_enrolled() {
+            bail!("set the accumulator width before enrolling shots");
+        }
+        self.acc_bits = bits;
+        self.max_shots = max_shots_for(self.fmt, bits);
+        Ok(self)
     }
 
     /// Install the base-split mean for feature centering (EASY protocol).
@@ -72,6 +121,22 @@ impl QuantNcm {
         self.classes.iter().any(|c| c.count > 0)
     }
 
+    /// Width of the per-class enrollment accumulator, bits.
+    pub fn acc_bits(&self) -> u8 {
+        self.acc_bits
+    }
+
+    /// Shots a class can absorb before enrollment saturates.
+    pub fn max_shots(&self) -> usize {
+        self.max_shots
+    }
+
+    /// True once a class has exhausted its accumulator budget (further
+    /// enrollments are deterministic no-ops).
+    pub fn saturated(&self, idx: usize) -> bool {
+        self.classes.get(idx).is_some_and(|c| c.count >= self.max_shots)
+    }
+
     /// Center + L2-normalize in f32, then quantize to codes.
     fn normalize_codes(&self, feat: &[f32]) -> Result<Vec<i16>> {
         if feat.len() != self.dim {
@@ -86,13 +151,21 @@ impl QuantNcm {
         self.classes.len() - 1
     }
 
-    /// Enroll one support shot: quantize and add its codes to the class sum.
+    /// Enroll one support shot: quantize and add its codes to the class
+    /// sum.  Once the class has [`QuantNcm::max_shots`] shots the
+    /// accumulator budget is exhausted and the shot is deterministically
+    /// dropped (count and centroid frozen) — saturation, not overflow;
+    /// check [`QuantNcm::saturated`] to detect it.
     pub fn enroll(&mut self, class_idx: usize, feat: &[f32]) -> Result<()> {
         let codes = self.normalize_codes(feat)?;
+        let max_shots = self.max_shots;
         let slot = self
             .classes
             .get_mut(class_idx)
             .ok_or_else(|| anyhow::anyhow!("no class {class_idx}"))?;
+        if slot.count >= max_shots {
+            return Ok(());
+        }
         for (s, &c) in slot.sum.iter_mut().zip(&codes) {
             *s += i64::from(c);
         }
@@ -103,6 +176,42 @@ impl QuantNcm {
     /// Drop all classes.
     pub fn reset(&mut self) {
         self.classes.clear();
+    }
+
+    /// Export the enrolled state of every class, in class-index order:
+    /// `(label, code-sum accumulator, shot count)`.  Sums are bounded by
+    /// the accumulator budget, so they always fit the 32-bit class memory
+    /// bundles store them in.
+    pub fn class_states(&self) -> Vec<(&str, &[i64], usize)> {
+        self.classes.iter().map(|c| (c.label.as_str(), c.sum.as_slice(), c.count)).collect()
+    }
+
+    /// Append a class restored from exported state; returns its index.
+    /// The inverse of [`QuantNcm::class_states`] — integer sums restore
+    /// exactly, so classification is bit-identical before/after.
+    pub fn restore_class(
+        &mut self,
+        label: impl Into<String>,
+        sum: Vec<i64>,
+        count: usize,
+    ) -> Result<usize> {
+        if sum.len() != self.dim {
+            bail!("restored class sum dim {} != feature dim {}", sum.len(), self.dim);
+        }
+        if count > self.max_shots {
+            bail!("restored class count {count} exceeds accumulator budget {}", self.max_shots);
+        }
+        // the signed accumulator range, asymmetric like the codes themselves
+        let lo = -(1i64 << (self.acc_bits - 1));
+        let hi = (1i64 << (self.acc_bits - 1)) - 1;
+        if sum.iter().any(|&s| s < lo || s > hi) {
+            bail!("restored class sum exceeds the {}-bit accumulator range", self.acc_bits);
+        }
+        if count == 0 && sum.iter().any(|&s| s != 0) {
+            bail!("restored class has zero shots but a non-zero sum");
+        }
+        self.classes.push(QSlot { label: label.into(), sum, count });
+        Ok(self.classes.len() - 1)
     }
 
     /// Centroid of a class as codes (round-half-away mean of the code
@@ -305,6 +414,91 @@ mod tests {
             }
         }
         assert!(hits >= 27, "4-bit hits {hits}/30");
+    }
+
+    #[test]
+    fn enrollment_saturates_at_accumulator_budget() {
+        // Q2.2 codes (min_code −8) in a 6-bit accumulator: the negative
+        // side binds — 32 / 8 = 4 shots
+        let fmt = unit_fmt(4);
+        assert_eq!(fmt.max_code(), 7);
+        assert_eq!(fmt.min_code(), -8);
+        let mut q = QuantNcm::new(2, fmt).with_acc_bits(6).unwrap();
+        assert_eq!(q.acc_bits(), 6);
+        assert_eq!(q.max_shots(), 4);
+        let c = q.add_class("x");
+        // negative-heavy shots: unit-normalized −1.0 → code −4 on axis 0
+        let shot = [-1.0, 0.0];
+        for i in 0..4 {
+            assert!(!q.saturated(c), "saturated after {i} shots");
+            q.enroll(c, &shot).unwrap();
+        }
+        // exactly at the boundary: full, centroid well-defined, and even
+        // the all-min_code sum stays inside the signed 6-bit range
+        assert_eq!(q.shot_count(c), 4);
+        assert!(q.saturated(c));
+        let frozen = q.centroid_codes(c).unwrap();
+        assert!(q.class_states()[0].1.iter().all(|&s| (-32..=31).contains(&s)));
+        // one past the budget: deterministic no-op, not an overflow
+        q.enroll(c, &shot).unwrap();
+        assert_eq!(q.shot_count(c), 4);
+        assert_eq!(q.centroid_codes(c).unwrap().codes, frozen.codes);
+        // default accumulator is 32-bit; |min_code| = 32768 binds
+        let q32 = QuantNcm::new(2, unit_fmt(16));
+        assert_eq!(q32.acc_bits(), DEFAULT_ACC_BITS);
+        assert_eq!(q32.max_shots(), (1usize << 31) / 32768);
+        // invalid widths and post-enroll reconfiguration rejected
+        assert!(QuantNcm::new(2, unit_fmt(16)).with_acc_bits(8).is_err());
+        assert!(QuantNcm::new(2, unit_fmt(16)).with_acc_bits(33).is_err());
+        assert!(q.with_acc_bits(16).is_err());
+    }
+
+    #[test]
+    fn min_code_heavy_state_survives_export_restore() {
+        // the acc_bits == total_bits corner with Q1.7: normalized −1.0
+        // clamps to min_code (−128), exactly one shot fits, and a sum
+        // holding min_code itself must restore — the signed range is
+        // asymmetric, so rejecting −2^(b−1) would refuse legitimate state
+        let fmt = QFormat::new(8, 7);
+        let mut q = QuantNcm::new(2, fmt).with_acc_bits(8).unwrap();
+        assert_eq!(q.max_shots(), 1);
+        let c = q.add_class("x");
+        q.enroll(c, &[-5.0, 0.0]).unwrap(); // normalizes to −1.0 → min_code
+        assert_eq!(q.class_states()[0].1[0], i64::from(fmt.min_code()));
+        assert!(q.saturated(c));
+        let mut r = QuantNcm::new(2, fmt).with_acc_bits(8).unwrap();
+        let states = q.class_states();
+        r.restore_class(states[0].0, states[0].1.to_vec(), states[0].2).unwrap();
+        assert_eq!(q.classify(&[-5.0, 0.0]).unwrap(), r.classify(&[-5.0, 0.0]).unwrap());
+        // one past the signed floor is rejected
+        let below = vec![i64::from(fmt.min_code()) * 2, 0];
+        assert!(r.restore_class("bad", below, 1).is_err());
+    }
+
+    #[test]
+    fn class_state_export_restore_is_bit_exact() {
+        let mut rng = Prng::new(41);
+        let fmt = unit_fmt(12);
+        let mut q = QuantNcm::new(8, fmt).with_base_mean(vec![0.02; 8]).unwrap();
+        for w in 0..3 {
+            let c = q.add_class(format!("w{w}"));
+            for _ in 0..(w + 1) {
+                q.enroll(c, &noisy_axis_feat(&mut rng, 8, w, 0.3)).unwrap();
+            }
+        }
+        let mut restored = QuantNcm::new(8, fmt).with_base_mean(vec![0.02; 8]).unwrap();
+        for (label, sum, count) in q.class_states() {
+            restored.restore_class(label, sum.to_vec(), count).unwrap();
+        }
+        for _ in 0..10 {
+            let query = noisy_axis_feat(&mut rng, 8, rng.range(0, 3), 0.3);
+            assert_eq!(q.classify(&query).unwrap(), restored.classify(&query).unwrap());
+        }
+        // invalid restores rejected
+        assert!(restored.restore_class("bad", vec![0; 5], 1).is_err());
+        assert!(restored.restore_class("bad", vec![i64::MAX; 8], 1).is_err());
+        assert!(restored.restore_class("bad", vec![0; 8], restored.max_shots() + 1).is_err());
+        assert!(restored.restore_class("bad", vec![1; 8], 0).is_err());
     }
 
     #[test]

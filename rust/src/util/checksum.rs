@@ -1,0 +1,55 @@
+//! FNV-1a 64-bit checksum — deployment-bundle blob integrity.
+//!
+//! Dependency-free and deterministic across platforms.  This is an
+//! *integrity* check (corruption, truncation, wrong-file swaps), not a
+//! cryptographic one: it makes accidental damage loud, it does not defend
+//! against deliberate tampering.
+
+/// FNV-1a over a byte slice (64-bit offset basis / prime).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// [`fnv1a64`] as the fixed-width lowercase hex string stored in bundle
+/// manifests.
+pub fn fnv1a64_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a64(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // published FNV-1a 64-bit test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn hex_is_fixed_width_and_stable() {
+        assert_eq!(fnv1a64_hex(b""), "cbf29ce484222325");
+        assert_eq!(fnv1a64_hex(b"a").len(), 16);
+        assert_eq!(fnv1a64_hex(b"a"), fnv1a64_hex(b"a"));
+    }
+
+    #[test]
+    fn sensitive_to_any_byte_flip() {
+        let data = vec![7u8; 256];
+        let base = fnv1a64(&data);
+        for i in [0usize, 1, 100, 255] {
+            let mut corrupted = data.clone();
+            corrupted[i] ^= 1;
+            assert_ne!(fnv1a64(&corrupted), base, "flip at {i} undetected");
+        }
+        // truncation detected too
+        assert_ne!(fnv1a64(&data[..255]), base);
+    }
+}

@@ -1,7 +1,9 @@
-//! Small shared substrates: deterministic PRNG, tensor file I/O, a tiny
-//! property-test helper (offline vendor set has no `proptest`), and timing.
+//! Small shared substrates: deterministic PRNG, tensor file I/O, blob
+//! checksums, a tiny property-test helper (offline vendor set has no
+//! `proptest`), and timing.
 
 pub mod bench;
+pub mod checksum;
 pub mod prng;
 pub mod proptest;
 pub mod tensorio;

@@ -195,12 +195,8 @@ pub fn write_tensor(path: impl AsRef<Path>, t: &Tensor) -> Result<()> {
     Ok(())
 }
 
-/// Read a named-tensor file (the `weights.bin` format).
-pub fn read_named_tensors(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
-    let path = path.as_ref();
-    let mut r = BufReader::new(
-        File::open(path).with_context(|| format!("open {}", path.display()))?,
-    );
+/// Parse a named-tensor stream (the `weights.bin` format) until EOF.
+pub fn read_named_tensors_from(r: &mut impl Read) -> Result<Vec<(String, Tensor)>> {
     let mut out = Vec::new();
     loop {
         let mut len_buf = [0u8; 2];
@@ -212,12 +208,49 @@ pub fn read_named_tensors(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)
             _ => {}
         }
         let name_len = u16::from_le_bytes(len_buf) as usize;
-        let name = String::from_utf8(read_exact(&mut r, name_len)?)
+        let name = String::from_utf8(read_exact(r, name_len)?)
             .context("tensor name not utf-8")?;
-        let t = read_tensor_from(&mut r).with_context(|| format!("tensor {name}"))?;
+        let t = read_tensor_from(r).with_context(|| format!("tensor {name}"))?;
         out.push((name, t));
     }
     Ok(out)
+}
+
+/// Read a named-tensor file (the `weights.bin` format).
+pub fn read_named_tensors(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    read_named_tensors_from(&mut r).with_context(|| format!("parse {}", path.display()))
+}
+
+/// Write a sequence of named tensors (the `weights.bin` format) to a
+/// writer, in the order given — callers that need deterministic files
+/// (bundle blobs) sort the entries first.
+pub fn write_named_tensors_to<'a>(
+    w: &mut impl Write,
+    entries: impl IntoIterator<Item = (&'a str, &'a Tensor)>,
+) -> Result<()> {
+    for (name, t) in entries {
+        if name.len() > u16::MAX as usize {
+            bail!("tensor name is {} bytes (record format caps names at {})", name.len(), u16::MAX);
+        }
+        w.write_all(&(name.len() as u16).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        write_tensor_to(w, t)?;
+    }
+    Ok(())
+}
+
+/// Write a named-tensor file.
+pub fn write_named_tensors<'a>(
+    path: impl AsRef<Path>,
+    entries: impl IntoIterator<Item = (&'a str, &'a Tensor)>,
+) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    write_named_tensors_to(&mut w, entries)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -298,6 +331,21 @@ mod tests {
         assert_eq!(got[0].0, "a.w");
         assert_eq!(got[1].1.as_i32().unwrap(), &[7]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn named_writer_roundtrips_through_reader() {
+        let a = Tensor::i16(vec![2, 2], vec![-5, 0, 5, 32767]);
+        let b = Tensor::f32(vec![3], vec![0.5, -1.25, 3.0]);
+        let mut buf = Vec::new();
+        write_named_tensors_to(&mut buf, [("conv.w", &a), ("feat", &b)]).unwrap();
+        let got = read_named_tensors_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], ("conv.w".to_string(), a));
+        assert_eq!(got[1], ("feat".to_string(), b));
+        // a truncated stream is an error, not a silent partial read
+        let cut = &buf[..buf.len() - 2];
+        assert!(read_named_tensors_from(&mut &cut[..]).is_err());
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! Integration suite for the deployment layer: bundle disk parity
+//! (loaded-from-disk == built-in-memory, bit-exact in codes AND modeled
+//! cycles), integrity failure modes (corruption, version, datapath,
+//! missing blobs — all loud, no partial loads), and registry hot-swap
+//! under concurrent sessions (no request dropped or corrupted).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use pefsl::bundle::{Bundle, MANIFEST_FILE};
+use pefsl::dse::BackboneSpec;
+use pefsl::engine::{InferRequest, Registry, Session};
+use pefsl::graph::Graph;
+use pefsl::quant::QuantConfig;
+use pefsl::sim::Simulator;
+use pefsl::tarch::Tarch;
+use pefsl::tcompiler::compile;
+
+fn tiny_graph(seed: u64) -> Graph {
+    let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+    spec.build_graph(seed).unwrap()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pefsl_it_bundle_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Acceptance criterion 1: a bundle packed from an in-memory build and
+/// reloaded from disk produces bit-identical inference outputs — codes
+/// and modeled cycles — plus identical engine-level features.
+#[test]
+fn disk_roundtrip_is_bit_exact() {
+    let tarch = Tarch::z7020_8x8();
+    let mut session = Session::detached(20).with_quant(QuantConfig::bits(12)).unwrap();
+    let c = session.add_class("probe");
+    let mut f = vec![0.0; 20];
+    f[3] = 1.5;
+    session.enroll_feature(c, &f).unwrap();
+
+    let packed = Bundle::pack("parity", "v1", tiny_graph(5), tarch.clone())
+        .unwrap()
+        .with_quant(QuantConfig::bits(12))
+        .unwrap()
+        .with_session(session.snapshot())
+        .unwrap();
+    let dir = tmpdir("parity");
+    packed.save(&dir).unwrap();
+    let loaded = Bundle::load(&dir).unwrap();
+    loaded.verify().unwrap();
+
+    // simulator level: run several frames through both graphs — codes,
+    // cycles and instruction counts identical
+    let p_mem = compile(&packed.graph, &tarch).unwrap();
+    let p_disk = compile(&loaded.graph, &tarch).unwrap();
+    let mut sim_mem = Simulator::new(&p_mem, &packed.graph);
+    let mut sim_disk = Simulator::new(&p_disk, &loaded.graph);
+    for i in 0..4 {
+        let img = vec![0.15 + 0.2 * i as f32; 16 * 16 * 3];
+        let a = sim_mem.run_f32(&img).unwrap();
+        let b = sim_disk.run_f32(&img).unwrap();
+        assert_eq!(a.output_codes, b.output_codes, "frame {i} codes");
+        assert_eq!(a.cycles, b.cycles, "frame {i} cycles");
+        assert_eq!(a.instr_count, b.instr_count, "frame {i} instrs");
+    }
+
+    // engine level: features and modeled metrics identical
+    let e_mem = packed.build_engine().unwrap();
+    let e_disk = loaded.build_engine().unwrap();
+    let img = vec![0.4; 16 * 16 * 3];
+    let a = e_mem.infer(InferRequest::single(img.clone())).unwrap().into_single().unwrap();
+    let b = e_disk.infer(InferRequest::single(img)).unwrap().into_single().unwrap();
+    assert_eq!(a.features, b.features);
+    assert_eq!(a.metrics.cycles, b.metrics.cycles);
+    assert_eq!(a.qfeatures.unwrap().codes, b.qfeatures.unwrap().codes);
+
+    // session level: the restored class bank classifies identically
+    let restored = Session::restore(None, loaded.session.as_ref().unwrap()).unwrap();
+    assert_eq!(
+        restored.classify_feature(&f).unwrap(),
+        session.classify_feature(&f).unwrap()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_blob_refuses_to_load() {
+    let dir = tmpdir("corrupt");
+    Bundle::pack("c", "v1", tiny_graph(1), Tarch::z7020_8x8()).unwrap().save(&dir).unwrap();
+    let weights = dir.join("weights.bin");
+    let mut bytes = std::fs::read(&weights).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&weights, bytes).unwrap();
+    let err = format!("{:#}", Bundle::load(&dir).unwrap_err());
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert!(err.contains("weights.bin"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_blob_refuses_to_load() {
+    let dir = tmpdir("trunc");
+    Bundle::pack("c", "v1", tiny_graph(1), Tarch::z7020_8x8()).unwrap().save(&dir).unwrap();
+    let golden = dir.join("golden.bin");
+    let bytes = std::fs::read(&golden).unwrap();
+    std::fs::write(&golden, &bytes[..bytes.len() - 7]).unwrap();
+    let err = format!("{:#}", Bundle::load(&dir).unwrap_err());
+    assert!(err.contains("golden.bin"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_blob_refuses_to_load() {
+    let dir = tmpdir("missing");
+    Bundle::pack("c", "v1", tiny_graph(1), Tarch::z7020_8x8()).unwrap().save(&dir).unwrap();
+    std::fs::remove_file(dir.join("golden.bin")).unwrap();
+    let err = format!("{:#}", Bundle::load(&dir).unwrap_err());
+    assert!(err.contains("golden.bin") && err.contains("missing"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_format_version_rejected() {
+    let dir = tmpdir("version");
+    Bundle::pack("c", "v1", tiny_graph(1), Tarch::z7020_8x8()).unwrap().save(&dir).unwrap();
+    let manifest = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&manifest).unwrap();
+    let bumped = text.replace("\"format_version\": 1", "\"format_version\": 99");
+    assert_ne!(bumped, text, "manifest rewrite did not take");
+    std::fs::write(&manifest, bumped).unwrap();
+    let err = format!("{:#}", Bundle::load(&dir).unwrap_err());
+    assert!(err.contains("format version 99"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tarch_datapath_mismatch_rejected() {
+    let dir = tmpdir("datapath");
+    Bundle::pack("c", "v1", tiny_graph(1), Tarch::z7020_8x8()).unwrap().save(&dir).unwrap();
+    // shrink the manifest's tarch datapath below the graph's 16-bit tensors
+    let manifest = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&manifest).unwrap();
+    let mut doc = pefsl::json::parse(&text).unwrap();
+    let mut tarch = doc.get("tarch").cloned().unwrap();
+    tarch.set("data_bits", 8usize).set("frac_bits", 4usize);
+    doc.set("tarch", tarch);
+    pefsl::json::to_file(&manifest, &doc).unwrap();
+    let err = format!("{:#}", Bundle::load(&dir).unwrap_err());
+    assert!(err.contains("datapath"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance criterion 2: `Registry::deploy` hot-swaps a model under ≥4
+/// concurrent sessions without dropping or corrupting any in-flight
+/// request — every response is bit-identical to one of the two deployed
+/// versions, and after the final swap new sessions serve the final
+/// version.
+#[test]
+fn hot_swap_under_concurrent_sessions() {
+    let tarch = Tarch::z7020_8x8();
+    let b1 = Bundle::pack("m", "v1", tiny_graph(1), tarch.clone()).unwrap();
+    let b2 = Bundle::pack("m", "v2", tiny_graph(2), tarch).unwrap();
+
+    // expected features per version, computed serially up front
+    let imgs: Vec<Vec<f32>> = (0..4).map(|t| vec![0.1 + 0.2 * t as f32; 16 * 16 * 3]).collect();
+    let e1 = b1.build_engine().unwrap();
+    let e2 = b2.build_engine().unwrap();
+    let want = |engine: &pefsl::engine::Engine| -> Vec<Vec<f32>> {
+        imgs.iter()
+            .map(|img| {
+                engine
+                    .infer(InferRequest::single(img.clone()))
+                    .unwrap()
+                    .into_single()
+                    .unwrap()
+                    .features
+            })
+            .collect()
+    };
+    let want1 = want(&e1);
+    let want2 = want(&e2);
+    assert_ne!(want1, want2, "versions must be distinguishable");
+
+    let reg = Arc::new(Registry::new());
+    reg.deploy_with("m", &b1, Some(2)).unwrap();
+    let served = AtomicUsize::new(0);
+    let swaps = 5usize;
+
+    std::thread::scope(|s| {
+        // ≥4 concurrent session threads hammering the model
+        for t in 0..4 {
+            let reg = reg.clone();
+            let img = imgs[t].clone();
+            let want1 = &want1;
+            let want2 = &want2;
+            let served = &served;
+            s.spawn(move || {
+                for iter in 0..40 {
+                    // a fresh session resolves the model's current engine
+                    let session = reg.session("m").unwrap();
+                    let item = session.extract(&img).unwrap();
+                    let ok = item.features == want1[t] || item.features == want2[t];
+                    assert!(ok, "thread {t} iter {iter}: response matches neither version");
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        // swapper thread: redeploys alternating versions while traffic runs
+        let reg2 = reg.clone();
+        let b1 = &b1;
+        let b2 = &b2;
+        s.spawn(move || {
+            for v in 0..swaps {
+                let next = if v % 2 == 0 { b2 } else { b1 };
+                reg2.deploy_with("m", next, Some(2)).unwrap();
+            }
+        });
+    });
+
+    // nothing dropped: every request completed and was verified
+    assert_eq!(served.load(Ordering::Relaxed), 4 * 40);
+    // the last swap (v = 4, even) deployed b2
+    assert_eq!(reg.models()[0].version, "v2");
+    for t in 0..4 {
+        let resp = reg.infer("m", InferRequest::single(imgs[t].clone())).unwrap();
+        assert_eq!(resp.items[0].features, want2[t], "post-swap thread {t}");
+    }
+    // generations moved monotonically: initial deploy + 5 swaps
+    assert_eq!(reg.models()[0].generation, 1 + swaps as u64);
+}
