@@ -14,6 +14,7 @@ use crate::graph::import_files;
 use crate::json::{self, Value};
 use crate::power::system_power;
 use crate::resources::{accelerator_resources, demonstrator_resources};
+use crate::serve::{ServeConfig, Server};
 use crate::tarch::Tarch;
 use crate::tcompiler::compile;
 use crate::util::tensorio::read_tensor;
@@ -532,15 +533,15 @@ pub fn deploy_cmd(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `pefsl models` — list bundles (one `--bundle DIR`, or every bundle
-/// directory under `--dir`); `--check` additionally replays each golden
-/// frame.
-pub fn models_cmd(args: &Args) -> Result<i32> {
+/// Bundle directories from `--bundle DIR` (exactly one) or `--dir ROOT`
+/// (every subdirectory holding a manifest).  With neither flag, scans
+/// `default_dir` when given, else returns no paths.
+fn bundle_paths(args: &Args, default_dir: Option<&str>) -> Result<Vec<std::path::PathBuf>> {
     let mut paths: Vec<std::path::PathBuf> = Vec::new();
     if let Some(b) = args.get("bundle") {
         paths.push(b.into());
-    } else {
-        let root = std::path::PathBuf::from(args.get_str("dir", "."));
+    } else if let Some(dir) = args.get("dir").or(default_dir) {
+        let root = std::path::PathBuf::from(dir);
         for entry in std::fs::read_dir(&root)
             .with_context(|| format!("scan {} for bundles", root.display()))?
         {
@@ -551,9 +552,56 @@ pub fn models_cmd(args: &Args) -> Result<i32> {
         }
         paths.sort();
     }
+    Ok(paths)
+}
+
+/// `pefsl models --json`: deploy each bundle into a transient registry and
+/// emit its [`crate::engine::ModelInfo`] rows — the *same* serializer the
+/// `GET /models` endpoint uses, so CLI and wire listings cannot drift.
+/// Deploying implies golden-frame verification, so `--json` is also a
+/// `--check`-strength validation pass.
+fn models_json_cmd(args: &Args, paths: &[std::path::PathBuf]) -> Result<i32> {
+    let registry = Registry::new();
+    let mut used = std::collections::BTreeSet::new();
+    let mut bad = 0usize;
+    for (i, p) in paths.iter().enumerate() {
+        let deployed = Bundle::load(p).and_then(|b| {
+            let mut name = b.name.clone();
+            if !used.insert(name.clone()) {
+                // two bundles share a model name: keep both rows listed
+                name = format!("{}#{i}", b.name);
+                used.insert(name.clone());
+            }
+            registry.deploy_with(name.as_str(), &b, Some(1))
+        });
+        if let Err(e) = deployed {
+            bad += 1;
+            eprintln!("skipping {}: {e:#}", p.display());
+        }
+    }
+    let rows = registry.models_json();
+    match args.get("json") {
+        Some(path) => {
+            json::to_file(path, &rows)?;
+            eprintln!("wrote {} model rows to {path}", registry.len());
+        }
+        None => println!("{}", json::to_string_pretty(&rows)),
+    }
+    Ok(if bad > 0 { 1 } else { 0 })
+}
+
+/// `pefsl models` — list bundles (one `--bundle DIR`, or every bundle
+/// directory under `--dir`); `--check` additionally replays each golden
+/// frame; `--json [PATH]` emits the machine-readable registry listing
+/// instead of the table.
+pub fn models_cmd(args: &Args) -> Result<i32> {
+    let paths = bundle_paths(args, Some("."))?;
     if paths.is_empty() {
         println!("no bundles found (directories containing {})", crate::bundle::MANIFEST_FILE);
         return Ok(0);
+    }
+    if args.has("json") {
+        return models_json_cmd(args, &paths);
     }
     println!(
         "{:<24} {:<20} {:<16} {:>5} {:>8} {:>8}  status",
@@ -656,6 +704,59 @@ pub fn render_table1(rows: &[Table1Row]) -> String {
         ));
     }
     out
+}
+
+/// `pefsl serve` — HTTP serving front over a model registry
+/// (`pefsl::serve`): deploy `--bundle DIR` (or every bundle under
+/// `--dir ROOT`), bind `--addr`, and serve until `POST /admin/shutdown`
+/// drains the in-flight requests.
+pub fn serve_cmd(args: &Args) -> Result<i32> {
+    let addr = args.get_str("addr", "127.0.0.1:7878").to_string();
+    let workers = match args.get("workers") {
+        Some(n) => Some(
+            n.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--workers expects an integer, got '{n}'"))?,
+        ),
+        None => None,
+    };
+    let registry = Arc::new(Registry::new());
+    let paths = bundle_paths(args, None)?;
+    for (i, p) in paths.iter().enumerate() {
+        let bundle = Bundle::load(p)?;
+        // --name renames a single --bundle; directory scans keep bundle names
+        let name = match args.get("name") {
+            Some(n) if paths.len() == 1 => n.to_string(),
+            _ => bundle.name.clone(),
+        };
+        let generation = registry.deploy_with(name.as_str(), &bundle, workers)?;
+        eprintln!(
+            "[{}/{}] deployed '{name}' = '{}@{}' (generation {generation})",
+            i + 1,
+            paths.len(),
+            bundle.name,
+            bundle.version
+        );
+    }
+    if registry.is_empty() {
+        eprintln!("no bundles deployed at startup; use POST /admin/deploy to add models");
+    }
+
+    let cfg = ServeConfig {
+        queue_depth: args.get_usize("queue-depth", 32)?,
+        idle_session: std::time::Duration::from_secs(args.get_u64("idle-timeout", 300)?),
+        admin_token: args.get("admin-token").map(str::to_string),
+        ..ServeConfig::default()
+    };
+    let handle = Server::start(Arc::clone(&registry), &addr, cfg)?;
+    println!("pefsl serve listening on http://{}", handle.addr());
+    // `--addr-file` publishes the bound address (useful with `--addr :0`)
+    if let Some(path) = args.get("addr-file") {
+        std::fs::write(path, handle.addr().to_string())
+            .with_context(|| format!("write --addr-file {path}"))?;
+    }
+    handle.join()?;
+    println!("pefsl serve: drained and stopped");
+    Ok(0)
 }
 
 #[cfg(test)]

@@ -10,7 +10,10 @@
 //! pefsl pack       --out DIR [--synthetic] [--name N --version V] [--bits B] [--features]
 //! pefsl verify     --bundle DIR
 //! pefsl deploy     --bundle DIR [--name N --frames N]
-//! pefsl models     [--dir DIR | --bundle DIR] [--check]
+//! pefsl serve      --addr HOST:PORT [--bundle DIR | --dir ROOT] [--name N]
+//!                  [--workers N --queue-depth N --idle-timeout S]
+//!                  [--admin-token T --addr-file PATH]
+//! pefsl models     [--dir DIR | --bundle DIR] [--check] [--json [PATH]]
 //! pefsl compile    [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl simulate   [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl resources  [--tarch NAME]
@@ -53,6 +56,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "pack" => commands::pack(&args),
         "verify" => commands::verify_cmd(&args),
         "deploy" => commands::deploy_cmd(&args),
+        "serve" => commands::serve_cmd(&args),
         "models" => commands::models_cmd(&args),
         "compile" => commands::compile_cmd(&args),
         "simulate" => commands::simulate(&args),
@@ -83,6 +87,8 @@ pub fn usage() -> String {
      \x20             golden-frame replay (codes AND modeled cycles)\n\
      \x20 deploy      deploy a bundle into a model registry, serve smoke frames,\n\
      \x20             hot-swap mid-stream\n\
+     \x20 serve       HTTP serving front (pefsl::serve): infer/enroll/classify/\n\
+     \x20             session endpoints, bounded admission, /metrics, hot deploy\n\
      \x20 models      list bundle directories with their manifests\n\
      \x20 compile     compile a graph.json for a tarch, print per-layer cycles\n\
      \x20 simulate    run the bit-exact accelerator simulation on a test vector\n\
@@ -113,7 +119,14 @@ pub fn usage() -> String {
      \x20 --bits B           pack: attach a feature-quantization config\n\
      \x20 --features         pack: embed novel_features.bin as the bundle's bank\n\
      \x20 --emit-bundle DIR  mixed: pack the winning plan as a bundle\n\
-     \x20 --check            models: also replay each bundle's golden frame\n"
+     \x20 --check            models: also replay each bundle's golden frame\n\
+     \x20 --json [PATH]      models: machine-readable listing (stdout or PATH);\n\
+     \x20                    shares the /models endpoint serializer\n\
+     \x20 --addr HOST:PORT   serve: bind address (default 127.0.0.1:7878; port 0 = any)\n\
+     \x20 --queue-depth N    serve: per-model admission budget before 429 (default 32)\n\
+     \x20 --idle-timeout S   serve: session idle-expiry seconds (default 300)\n\
+     \x20 --admin-token T    serve: require T in x-pefsl-admin for /admin endpoints\n\
+     \x20 --addr-file PATH   serve: write the bound address to PATH at startup\n"
         .to_string()
 }
 
@@ -209,6 +222,15 @@ mod tests {
         // models lists the bundle directory (with golden replay)
         let root = dir.display().to_string();
         assert_eq!(run(&sv(&["models", "--dir", &root, "--check"])).unwrap(), 0);
+        // --json writes the shared /models serializer rows
+        let json_out = dir.join("models.json").display().to_string();
+        assert_eq!(run(&sv(&["models", "--dir", &root, "--json", &json_out])).unwrap(), 0);
+        let rows = crate::json::from_file(&json_out).unwrap();
+        let rows = rows.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req_str("name").unwrap(), "smoke");
+        assert_eq!(rows[0].req_str("version").unwrap(), "t1");
+        assert_eq!(rows[0].req_str("backend").unwrap(), "sim");
         // a corrupted blob makes verify fail and models report it
         let weights = dir.join("b1").join("weights.bin");
         let mut bytes = std::fs::read(&weights).unwrap();

@@ -259,12 +259,13 @@ impl Demonstrator {
         let ncls = self.session.n_classes().max(1);
         let duty = m.duty(accel_mean, cam_px, tgt_px, fdim, ncls);
         let power = system_power(&self.cfg.tarch, duty);
+        let host = self.host_lat.snapshot();
         DemoReport {
             frames: self.counters.frames_out,
             modeled_fps: m.fps(accel_mean, cam_px, tgt_px, fdim, ncls),
             inference_ms_mean: m.inference_ms(accel_mean),
-            host_us_p50: self.host_lat.p50_us(),
-            host_us_p95: self.host_lat.p95_us(),
+            host_us_p50: host.p50_us,
+            host_us_p95: host.p95_us,
             power_w: power.total_w(),
             battery_hours: power.battery_hours_demo_pack(),
             accuracy: if self.judged > 0 { Some(self.hits as f64 / self.judged as f64) } else { None },

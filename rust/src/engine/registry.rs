@@ -24,6 +24,7 @@ use std::sync::{Arc, PoisonError, RwLock};
 use anyhow::{anyhow, Context, Result};
 
 use crate::bundle::Bundle;
+use crate::json::Value;
 
 use super::request::{InferRequest, InferResponse};
 use super::session::Session;
@@ -50,6 +51,22 @@ pub struct ModelInfo {
     pub workers: usize,
     /// Requests served by the *current* engine (resets on hot-swap).
     pub requests: u64,
+}
+
+impl ModelInfo {
+    /// The machine-readable listing row — one serializer shared by the
+    /// `GET /models` endpoint (`pefsl::serve`) and `pefsl models --json`.
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("name", self.name.as_str())
+            .set("version", self.version.as_str())
+            .set("generation", self.generation)
+            .set("backend", self.backend)
+            .set("feature_dim", self.feature_dim)
+            .set("workers", self.workers)
+            .set("requests", self.requests);
+        o
+    }
 }
 
 /// A hot-swappable multi-model registry over the engine pool.
@@ -176,6 +193,11 @@ impl Registry {
             .collect()
     }
 
+    /// [`Registry::models`] as a JSON array of [`ModelInfo::to_json`] rows.
+    pub fn models_json(&self) -> Value {
+        Value::Arr(self.models().iter().map(ModelInfo::to_json).collect())
+    }
+
     /// Number of deployed models.
     pub fn len(&self) -> usize {
         self.models.read().unwrap_or_else(PoisonError::into_inner).len()
@@ -276,5 +298,27 @@ mod tests {
         let rb = reg.infer("b", InferRequest::single(img)).unwrap();
         assert_ne!(ra.items[0].features, rb.items[0].features);
         assert_eq!(reg.models()[1].workers, 2);
+    }
+
+    #[test]
+    fn models_json_mirrors_listing() {
+        let reg = Registry::new();
+        reg.deploy_with("a", &tiny_bundle(1, "v3"), Some(2)).unwrap();
+        reg.infer("a", InferRequest::single(vec![0.2; 8 * 8 * 3])).unwrap();
+        let v = reg.models_json();
+        let rows = v.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        let info = &reg.models()[0];
+        assert_eq!(row.req_str("name").unwrap(), info.name);
+        assert_eq!(row.req_str("version").unwrap(), "v3");
+        assert_eq!(row.req_usize("generation").unwrap() as u64, info.generation);
+        assert_eq!(row.req_str("backend").unwrap(), "sim");
+        assert_eq!(row.req_usize("feature_dim").unwrap(), info.feature_dim);
+        assert_eq!(row.req_usize("workers").unwrap(), 2);
+        assert_eq!(row.req_usize("requests").unwrap() as u64, info.requests);
+        // and the array renders/parses cleanly
+        let text = crate::json::to_string_pretty(&v);
+        assert_eq!(crate::json::parse(&text).unwrap(), v);
     }
 }

@@ -32,6 +32,12 @@
 //!     format-versioned directory with a replayable golden frame
 //!     ([`bundle::Bundle::verify`]); [`engine::Registry`] serves N bundles
 //!     by name with atomic hot-swap (`pefsl pack/verify/deploy/models`);
+//!   - **`serve` — the network face of the registry**: a dependency-free
+//!     HTTP/1.1 server ([`serve::Server`]) exposing infer / session /
+//!     enroll / classify / deploy over `std::net`, with bounded per-model
+//!     admission (`429` + `Retry-After` from observed p95), token-addressed
+//!     sessions with idle expiry, per-endpoint metrics on `/metrics`, and
+//!     graceful drain-on-shutdown (`pefsl serve`);
 //!   - the demonstrator on top of the engine: `video`, `ncm`, `coordinator`
 //!     (frame loop + pipelined variant), `fewshot` (episodic evaluation),
 //!     `dse` and `cli`.
@@ -51,6 +57,7 @@ pub mod power;
 pub mod quant;
 pub mod resources;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tarch;
 pub mod tcompiler;

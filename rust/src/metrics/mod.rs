@@ -1,7 +1,49 @@
 //! Runtime metrics: counters and latency histograms (p50/p95/p99) for the
-//! demonstrator loop and benches.
+//! demonstrator loop, the serving layer (`pefsl::serve`), and benches.
 
 use std::time::Duration;
+
+use crate::json::Value;
+
+/// Point-in-time export of a [`LatencyStats`] recorder: every quantile the
+/// reporting surfaces use, computed from **one** sort of the retained
+/// window (the per-quantile getters each re-sort, so snapshot once and
+/// read fields when more than one quantile is needed — the `/metrics`
+/// endpoint does exactly that per row).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl LatencySnapshot {
+    /// The shared latency-row JSON shape (`count`/`mean_us`/`p50_us`/
+    /// `p95_us`/`p99_us`/`max_us`) — one formatting for the `/metrics`
+    /// endpoint and the `BENCH_*` emitters, instead of each growing an
+    /// ad-hoc string.
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("count", self.count)
+            .set("mean_us", self.mean_us)
+            .set("p50_us", self.p50_us)
+            .set("p95_us", self.p95_us)
+            .set("p99_us", self.p99_us)
+            .set("max_us", self.max_us);
+        o
+    }
+
+    /// One-line human rendering of the same fields.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs",
+            self.count, self.mean_us, self.p50_us, self.p95_us, self.p99_us
+        )
+    }
+}
 
 /// Streaming latency recorder with exact quantiles over a bounded window.
 #[derive(Clone, Debug)]
@@ -65,12 +107,27 @@ impl LatencyStats {
         self.quantile_us(0.99)
     }
 
+    /// Export every reported quantile with a single sort of the window.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        if self.samples_us.is_empty() {
+            return LatencySnapshot::default();
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let at = |q: f64| v[((v.len() - 1) as f64 * q).round() as usize];
+        LatencySnapshot {
+            count: self.total_count,
+            mean_us: self.mean_us(),
+            p50_us: at(0.50),
+            p95_us: at(0.95),
+            p99_us: at(0.99),
+            max_us: v[v.len() - 1],
+        }
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
-        format!(
-            "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs",
-            self.total_count, self.mean_us(), self.p50_us(), self.p95_us(), self.p99_us()
-        )
+        self.snapshot().summary()
     }
 }
 
@@ -123,5 +180,44 @@ mod tests {
         let mut s = LatencyStats::new(8);
         s.record(Duration::from_millis(2));
         assert!((s.mean_us() - 2000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn snapshot_matches_per_quantile_getters() {
+        let mut s = LatencyStats::new(100);
+        for us in [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0, 4.0, 6.0, 10.0] {
+            s.record_us(us);
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.count, s.count());
+        assert_eq!(snap.mean_us, s.mean_us());
+        assert_eq!(snap.p50_us, s.p50_us());
+        assert_eq!(snap.p95_us, s.p95_us());
+        assert_eq!(snap.p99_us, s.p99_us());
+        assert_eq!(snap.max_us, 10.0);
+        // summary() is the snapshot rendering
+        assert_eq!(s.summary(), snap.summary());
+    }
+
+    #[test]
+    fn snapshot_to_json_roundtrips() {
+        let mut s = LatencyStats::new(16);
+        s.record_us(100.0);
+        s.record_us(300.0);
+        let v = s.snapshot().to_json();
+        assert_eq!(v.get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("mean_us").unwrap().as_f64(), Some(200.0));
+        assert_eq!(v.get("max_us").unwrap().as_f64(), Some(300.0));
+        // text form parses back to the same fields
+        let text = crate::json::to_string_pretty(&v);
+        let back = crate::json::parse(&text).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let snap = LatencyStats::new(4).snapshot();
+        assert_eq!(snap, LatencySnapshot::default());
+        assert_eq!(snap.to_json().get("count").unwrap().as_usize(), Some(0));
     }
 }

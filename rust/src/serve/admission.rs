@@ -1,0 +1,197 @@
+//! Admission layer: a bounded per-model in-flight budget in front of the
+//! engine's `WorkerPool`.
+//!
+//! Each deployed model gets an [`Admission`] gate sized by
+//! `--queue-depth`.  A request must [`Admission::try_acquire`] a
+//! [`Permit`] before any engine-bound work happens; when the budget is
+//! exhausted the request is answered `429 Too Many Requests` immediately
+//! — the server never buffers an unbounded backlog.  The attached
+//! `Retry-After` header is computed from the observed p95 service time of
+//! recent requests, so clients back off proportionally to how slow the
+//! model actually is rather than by a fixed constant.
+//!
+//! [`Permit`] is a drop guard: it records the service time into the gate's
+//! [`LatencyStats`] window and releases the slot even if the handler
+//! panics (the connection loop catches the panic and answers 500, and the
+//! slot is not leaked).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::metrics::{LatencySnapshot, LatencyStats};
+
+use super::http::HttpError;
+
+/// Bounded admission gate for one model.
+pub struct Admission {
+    depth: usize,
+    inflight: AtomicUsize,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    service: Mutex<LatencyStats>,
+}
+
+impl Admission {
+    pub fn new(depth: usize) -> Admission {
+        Admission {
+            depth: depth.max(1),
+            inflight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            service: Mutex::new(LatencyStats::new(256)),
+        }
+    }
+
+    /// Try to take a slot.  `Err` carries a ready-to-send `429` with
+    /// `Retry-After` derived from the p95 service time.
+    pub fn try_acquire(&self, model: &str) -> Result<Permit<'_>, HttpError> {
+        let mut cur = self.inflight.load(Ordering::Acquire);
+        loop {
+            if cur >= self.depth {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(HttpError::too_busy(
+                    self.retry_after_s(),
+                    format!(
+                        "model '{model}' is at its admission limit ({} in flight); retry later",
+                        self.depth
+                    ),
+                ));
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    self.admitted.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Permit { gate: self, started: Instant::now() });
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Suggested client back-off: one p95 service time's worth of queue
+    /// drain, rounded up to whole seconds and clamped to [1, 30].
+    pub fn retry_after_s(&self) -> u64 {
+        let p95_us = self.service.lock().unwrap().p95_us();
+        let drain_s = (p95_us * self.depth as f64 / 1e6).ceil();
+        (drain_s as u64).clamp(1, 30)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Currently admitted, not yet completed.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Service-time quantiles over the recent window.
+    pub fn service_snapshot(&self) -> LatencySnapshot {
+        self.service.lock().unwrap().snapshot()
+    }
+}
+
+/// RAII slot: releases on drop and records the observed service time.
+pub struct Permit<'a> {
+    gate: &'a Admission,
+    started: Instant,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.gate.service.lock().unwrap().record(self.started.elapsed());
+        self.gate.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_depth_then_rejects() {
+        let gate = Admission::new(2);
+        let p1 = gate.try_acquire("m").unwrap();
+        let p2 = gate.try_acquire("m").unwrap();
+        let err = gate.try_acquire("m").unwrap_err();
+        assert_eq!(err.status, 429);
+        assert!(err.retry_after_s.unwrap() >= 1);
+        assert_eq!(gate.in_flight(), 2);
+        assert_eq!(gate.rejected(), 1);
+        drop(p1);
+        assert_eq!(gate.in_flight(), 1);
+        let _p3 = gate.try_acquire("m").unwrap();
+        drop(p2);
+        assert_eq!(gate.admitted(), 3);
+    }
+
+    #[test]
+    fn permit_drop_records_service_time() {
+        let gate = Admission::new(1);
+        {
+            let _p = gate.try_acquire("m").unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let snap = gate.service_snapshot();
+        assert_eq!(snap.count, 1);
+        assert!(snap.p95_us >= 1000.0, "p95={}", snap.p95_us);
+    }
+
+    #[test]
+    fn retry_after_clamped_to_sane_range() {
+        let gate = Admission::new(4);
+        // empty window → still at least 1 second
+        assert_eq!(gate.retry_after_s(), 1);
+        gate.service.lock().unwrap().record_us(60e6); // absurd 60 s sample
+        assert_eq!(gate.retry_after_s(), 30);
+    }
+
+    #[test]
+    fn depth_zero_coerced_to_one() {
+        let gate = Admission::new(0);
+        assert_eq!(gate.depth(), 1);
+        let _p = gate.try_acquire("m").unwrap();
+        assert_eq!(gate.try_acquire("m").unwrap_err().status, 429);
+    }
+
+    #[test]
+    fn concurrent_acquire_never_exceeds_depth() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let gate = Arc::new(Admission::new(3));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let gate = Arc::clone(&gate);
+            let peak = Arc::clone(&peak);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    if let Ok(_p) = gate.try_acquire("m") {
+                        let now = gate.in_flight();
+                        peak.fetch_max(now, Ordering::Relaxed);
+                        assert!(now <= 3, "in_flight {now} exceeded depth");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::Relaxed) <= 3);
+        assert_eq!(gate.in_flight(), 0);
+        assert_eq!(gate.admitted() + gate.rejected(), 8 * 200);
+    }
+}

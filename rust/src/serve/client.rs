@@ -1,0 +1,150 @@
+//! Minimal blocking HTTP/1.1 client for the serve layer's own tests and
+//! smoke tooling (the offline vendor set has no `reqwest`/`curl`).  Speaks
+//! exactly the dialect [`super::http`] emits: `Content-Length` framing,
+//! JSON bodies, `connection: close` honored, keep-alive reuse supported
+//! via [`HttpClient`].
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// A fully received response.
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    /// Lowercased header names.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+
+    pub fn json(&self) -> Result<Value> {
+        json::parse(&self.body_text())
+            .with_context(|| format!("response body is not JSON (status {})", self.status))
+    }
+}
+
+/// A reusable keep-alive connection to one server.
+pub struct HttpClient {
+    stream: TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        stream.set_nodelay(true).ok();
+        Ok(HttpClient { stream })
+    }
+
+    /// Raw access for protocol-robustness tests that need to write
+    /// deliberately malformed bytes.
+    pub fn stream_mut(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+
+    /// Send one request and read the response on the same connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&Value>,
+    ) -> Result<ClientResponse> {
+        let body_bytes = body.map(|v| json::to_string_pretty(v).into_bytes()).unwrap_or_default();
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: pefsl\r\n");
+        for (k, v) in headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\n\r\n", body_bytes.len()));
+        self.stream.write_all(head.as_bytes()).context("write request head")?;
+        self.stream.write_all(&body_bytes).context("write request body")?;
+        self.stream.flush().ok();
+        read_response(&mut self.stream)
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
+        self.request("GET", path, &[], None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &Value) -> Result<ClientResponse> {
+        self.request("POST", path, &[], Some(body))
+    }
+
+    pub fn post_with_token(
+        &mut self,
+        path: &str,
+        token: &str,
+        body: &Value,
+    ) -> Result<ClientResponse> {
+        self.request("POST", path, &[("x-pefsl-token", token)], Some(body))
+    }
+}
+
+/// One-shot helpers (fresh connection per call).
+pub fn get(addr: &str, path: &str) -> Result<ClientResponse> {
+    HttpClient::connect(addr)?.get(path)
+}
+
+pub fn post(addr: &str, path: &str, body: &Value) -> Result<ClientResponse> {
+    HttpClient::connect(addr)?.post(path, body)
+}
+
+/// Read one `Content-Length`-framed response from a stream.
+pub fn read_response(stream: &mut TcpStream) -> Result<ClientResponse> {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        let n = stream.read(&mut tmp).context("read response head")?;
+        if n == 0 {
+            bail!("connection closed before a full response head ({} bytes)", buf.len());
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("response head utf-8")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line '{status_line}'"))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        let (k, v) = line.split_once(':').ok_or_else(|| anyhow!("bad header '{line}'"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let content_length: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .ok_or_else(|| anyhow!("response without content-length"))?
+        .1
+        .parse()
+        .context("content-length value")?;
+    let body_start = head_end + 4;
+    while buf.len() < body_start + content_length {
+        let n = stream.read(&mut tmp).context("read response body")?;
+        if n == 0 {
+            bail!("connection closed mid response body");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let body = buf[body_start..body_start + content_length].to_vec();
+    Ok(ClientResponse { status, headers, body })
+}

@@ -1,0 +1,453 @@
+//! Connection/protocol layer: a vendored, dependency-free HTTP/1.1
+//! implementation over [`std::net::TcpStream`] (the offline vendor set has
+//! no `hyper`/`tiny_http`), sized for the serving front in front of the
+//! [`crate::engine::Registry`].
+//!
+//! Scope is deliberately narrow — exactly what the `pefsl::serve` wire
+//! protocol needs:
+//!
+//! * **incremental parsing tolerant of partial reads** — [`Conn`] keeps a
+//!   growing buffer across short socket reads (the stream runs with a
+//!   short read timeout so handler threads can observe shutdown while
+//!   idle) and across keep-alive requests (pipelined leftover bytes are
+//!   retained for the next parse);
+//! * **bounded everything** — request head and body sizes and header count
+//!   are capped ([`Limits`]), with `431`/`413` answered before any
+//!   unbounded buffering can happen;
+//! * **chunked bodies rejected cleanly** — `Transfer-Encoding` answers
+//!   `411 Length Required` and closes (the framing cannot be resynced);
+//! * **fatal vs recoverable errors** — an [`HttpError`] marks whether the
+//!   stream position is still trustworthy; application-level 4xx (unknown
+//!   model, bad token, malformed JSON) keep the connection serving, while
+//!   framing errors close it after the error response.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::json::{self, Value};
+
+/// Protocol bounds. Every limit answers a specific status on overflow;
+/// nothing is buffered past them.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Max bytes of request line + headers (431 beyond).
+    pub max_head_bytes: usize,
+    /// Max header count (431 beyond).
+    pub max_headers: usize,
+    /// Max declared `Content-Length` (413 beyond, body never read).
+    pub max_body_bytes: usize,
+    /// Deadline from the first byte of a request to its last body byte
+    /// (408 beyond — a truncated body cannot wedge the connection loop).
+    pub request_timeout: Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            max_head_bytes: 16 * 1024,
+            max_headers: 64,
+            max_body_bytes: 8 * 1024 * 1024,
+            request_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// A protocol- or application-level error carrying the HTTP status to
+/// answer with.  `fatal` means the stream position can no longer be
+/// trusted (broken framing), so the connection closes after the error
+/// response; non-fatal 4xx keep the connection serving.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+    pub fatal: bool,
+    /// `Retry-After` seconds to attach (429 backpressure responses).
+    pub retry_after_s: Option<u64>,
+}
+
+impl HttpError {
+    pub fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError { status, message: message.into(), fatal: false, retry_after_s: None }
+    }
+
+    pub fn fatal(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError { status, message: message.into(), fatal: true, retry_after_s: None }
+    }
+
+    pub fn too_busy(retry_after_s: u64, message: impl Into<String>) -> HttpError {
+        HttpError {
+            status: 429,
+            message: message.into(),
+            fatal: false,
+            retry_after_s: Some(retry_after_s),
+        }
+    }
+}
+
+/// One parsed request. Header names are lowercased at parse time.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (`name` in any case).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as a JSON object; empty or malformed bodies are 400.
+    pub fn json_body(&self) -> Result<Value, HttpError> {
+        if self.body.is_empty() {
+            return Err(HttpError::new(400, "request body required (JSON object)"));
+        }
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::new(400, "request body is not UTF-8"))?;
+        json::parse(text).map_err(|e| HttpError::new(400, format!("malformed JSON body: {e}")))
+    }
+}
+
+/// Outcome of waiting for one request.
+pub enum Received {
+    Request(Request),
+    /// Clean end of the connection: EOF (or server shutdown) between
+    /// requests, with no partial request buffered.
+    Closed,
+}
+
+/// One server-side connection: the stream plus the incremental parse
+/// buffer that survives partial reads and keep-alive request boundaries.
+pub struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    /// Wrap an accepted stream.  A short read timeout is installed so the
+    /// read loop can poll the shutdown flag while idle.
+    pub fn new(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_read_timeout(Some(Duration::from_millis(50)))?;
+        stream.set_nodelay(true).ok();
+        Ok(Conn { stream, buf: Vec::new() })
+    }
+
+    /// Orderly teardown.  Dropping a socket while unread bytes sit in its
+    /// receive queue makes the kernel answer with RST, which can destroy a
+    /// response the peer has not read yet (e.g. after a `431` the tail of
+    /// the oversized head was never consumed).  Half-close the write side,
+    /// then briefly drain and discard whatever the peer already sent so
+    /// the connection ends with an ordinary FIN.
+    pub fn lingering_close(mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Write);
+        let deadline = Instant::now() + Duration::from_millis(250);
+        let mut scratch = [0u8; 4096];
+        while Instant::now() < deadline {
+            match self.stream.read(&mut scratch) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => continue,
+            }
+        }
+    }
+
+    /// Read one full request (head + `Content-Length` body), tolerating
+    /// arbitrarily fragmented reads.  `shutting_down` is polled while the
+    /// connection is idle: once it returns true *and* no partial request
+    /// is buffered, the connection reports [`Received::Closed`] — a
+    /// request whose first bytes have already arrived is always drained
+    /// and served, so shutdown never drops an accepted request.
+    pub fn read_request(
+        &mut self,
+        limits: &Limits,
+        shutting_down: impl Fn() -> bool,
+    ) -> Result<Received, HttpError> {
+        let mut started: Option<Instant> =
+            if self.buf.is_empty() { None } else { Some(Instant::now()) };
+        let mut tmp = [0u8; 4096];
+
+        // --- head: accumulate until the blank line ----------------------
+        let head_end = loop {
+            if let Some(pos) = find_subslice(&self.buf, b"\r\n\r\n") {
+                break pos;
+            }
+            if self.buf.len() > limits.max_head_bytes {
+                return Err(HttpError::fatal(
+                    431,
+                    format!("request head exceeds {} bytes", limits.max_head_bytes),
+                ));
+            }
+            if let Some(t0) = started {
+                if t0.elapsed() > limits.request_timeout {
+                    return Err(HttpError::fatal(408, "timed out reading request head"));
+                }
+            }
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(Received::Closed);
+                    }
+                    return Err(HttpError::fatal(400, "connection closed mid-request"));
+                }
+                Ok(n) => {
+                    if started.is_none() {
+                        started = Some(Instant::now());
+                    }
+                    self.buf.extend_from_slice(&tmp[..n]);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    if self.buf.is_empty() && shutting_down() {
+                        return Ok(Received::Closed);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                // hard socket error: nothing to answer on
+                Err(_) => return Ok(Received::Closed),
+            }
+        };
+
+        // --- parse request line + headers -------------------------------
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| HttpError::fatal(400, "request head is not UTF-8"))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("").to_string();
+        let mut parts = request_line.split(' ');
+        let (method, path) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None)
+                if !m.is_empty() && p.starts_with('/') && v.starts_with("HTTP/1") =>
+            {
+                (m.to_string(), p.to_string())
+            }
+            _ => {
+                let shown: String = request_line.chars().take(80).collect();
+                return Err(HttpError::fatal(400, format!("malformed request line '{shown}'")));
+            }
+        };
+        let mut headers = Vec::new();
+        for line in lines {
+            if headers.len() >= limits.max_headers {
+                return Err(HttpError::fatal(431, "too many request headers"));
+            }
+            let Some((name, value)) = line.split_once(':') else {
+                return Err(HttpError::fatal(400, format!("malformed header line '{line}'")));
+            };
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+
+        // --- body framing ------------------------------------------------
+        let header = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str());
+        if header("transfer-encoding").is_some() {
+            // chunked cannot be resynced with a Content-Length-only parser
+            return Err(HttpError::fatal(
+                411,
+                "chunked request bodies are not supported; send Content-Length",
+            ));
+        }
+        let content_length: usize = match header("content-length") {
+            None => 0,
+            Some(v) => v
+                .parse()
+                .map_err(|_| HttpError::fatal(400, format!("invalid Content-Length '{v}'")))?,
+        };
+        if content_length > limits.max_body_bytes {
+            return Err(HttpError::fatal(
+                413,
+                format!(
+                    "request body of {content_length} bytes exceeds the {}-byte limit",
+                    limits.max_body_bytes
+                ),
+            ));
+        }
+
+        // --- body: drain exactly content_length bytes -------------------
+        let body_start = head_end + 4;
+        let need = body_start + content_length;
+        let deadline = started.unwrap_or_else(Instant::now);
+        while self.buf.len() < need {
+            if deadline.elapsed() > limits.request_timeout {
+                return Err(HttpError::fatal(
+                    408,
+                    format!(
+                        "timed out reading request body ({} of {content_length} bytes received)",
+                        self.buf.len() - body_start.min(self.buf.len())
+                    ),
+                ));
+            }
+            match self.stream.read(&mut tmp) {
+                Ok(0) => return Err(HttpError::fatal(400, "connection closed mid-body")),
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return Err(HttpError::fatal(400, "socket error mid-body")),
+            }
+        }
+        let body = self.buf[body_start..need].to_vec();
+        // keep pipelined leftovers for the next request
+        self.buf.drain(..need);
+        Ok(Received::Request(Request { method, path, headers, body }))
+    }
+
+    /// Write a response; errors are returned for the caller to treat as
+    /// connection loss.
+    pub fn write_response(&mut self, resp: &Response) -> std::io::Result<()> {
+        resp.write_to(&mut self.stream)
+    }
+}
+
+/// One response about to be written.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: Vec<u8>,
+    /// Extra headers beyond the always-present content-type/length.
+    pub headers: Vec<(String, String)>,
+    /// Close the connection after this response (`Connection: close`).
+    pub close: bool,
+}
+
+impl Response {
+    /// A JSON response (every `pefsl::serve` payload is JSON).
+    pub fn json(status: u16, v: &Value) -> Response {
+        Response {
+            status,
+            body: json::to_string_pretty(v).into_bytes(),
+            headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    /// The uniform error payload: `{"status": s, "error": message}`.
+    pub fn error(status: u16, message: &str) -> Response {
+        let mut v = Value::obj();
+        v.set("status", status as usize).set("error", message);
+        Response::json(status, &v)
+    }
+
+    /// Render an [`HttpError`]: status + payload + `Retry-After` if set,
+    /// closing on fatal framing errors.
+    pub fn from_http_error(e: &HttpError) -> Response {
+        let mut resp = Response::error(e.status, &e.message);
+        if let Some(s) = e.retry_after_s {
+            resp.headers.push(("retry-after".to_string(), s.to_string()));
+        }
+        resp.close = e.fatal;
+        resp
+    }
+
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Response {
+        self.headers.push((name.to_string(), value.into()));
+        self
+    }
+
+    /// Serialize head + body onto a stream.
+    pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+            self.status,
+            reason(self.status),
+            self.body.len()
+        );
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str(if self.close {
+            "connection: close\r\n\r\n"
+        } else {
+            "connection: keep-alive\r\n\r\n"
+        });
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Reason phrase for every status the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Response",
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    if haystack.len() < needle.len() {
+        return None;
+    }
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_subslice_positions() {
+        assert_eq!(find_subslice(b"abc\r\n\r\nxy", b"\r\n\r\n"), Some(3));
+        assert_eq!(find_subslice(b"abc", b"\r\n\r\n"), None);
+        assert_eq!(find_subslice(b"", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn request_header_lookup_case_insensitive() {
+        let r = Request {
+            method: "POST".into(),
+            path: "/x".into(),
+            headers: vec![("x-pefsl-token".into(), "t1".into())],
+            body: b"{}".to_vec(),
+        };
+        assert_eq!(r.header("X-PEFSL-Token"), Some("t1"));
+        assert_eq!(r.header("missing"), None);
+        assert!(r.json_body().is_ok());
+    }
+
+    #[test]
+    fn json_body_rejects_empty_and_malformed() {
+        let mut r = Request {
+            method: "POST".into(),
+            path: "/x".into(),
+            headers: vec![],
+            body: Vec::new(),
+        };
+        assert_eq!(r.json_body().unwrap_err().status, 400);
+        r.body = b"{nope".to_vec();
+        assert_eq!(r.json_body().unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn error_response_shape() {
+        let e = HttpError::too_busy(3, "queue full");
+        assert_eq!(e.status, 429);
+        let resp = Response::from_http_error(&e);
+        assert!(!resp.close);
+        assert!(resp.headers.iter().any(|(k, v)| k == "retry-after" && v == "3"));
+        let text = String::from_utf8(resp.body.clone()).unwrap();
+        assert!(text.contains("queue full"));
+        let fatal = Response::from_http_error(&HttpError::fatal(431, "big"));
+        assert!(fatal.close);
+    }
+
+    #[test]
+    fn reason_phrases_cover_served_statuses() {
+        for s in [200, 400, 401, 403, 404, 405, 408, 411, 413, 429, 431, 500, 503] {
+            assert_ne!(reason(s), "Response", "{s}");
+        }
+    }
+}

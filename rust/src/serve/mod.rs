@@ -1,0 +1,614 @@
+//! `pefsl::serve` — the network face of the [`Registry`]: a wire
+//! protocol, admission control, and observability in front of the engine
+//! pool.
+//!
+//! The paper's demonstrator is a classification *service* (low-latency
+//! enroll/classify on a PYNQ-Z1); this module is that service's serving
+//! layer for the reproduction, built in the same vendoring discipline as
+//! the rest of the tree: a dependency-free HTTP/1.1 server over
+//! [`std::net`] (no `hyper`), split into four layers:
+//!
+//! * **protocol** ([`http`]) — incremental parsing tolerant of partial
+//!   reads, bounded head/body sizes, chunked bodies rejected cleanly;
+//! * **admission** ([`admission`]) — a bounded per-model in-flight budget;
+//!   overflow answers `429` with `Retry-After` from observed p95 service
+//!   time, never unbounded buffering.  Admitted work drains into the
+//!   engine's existing worker pool;
+//! * **sessions** ([`sessions`]) — wire tokens ↔ [`crate::engine::Session`]s
+//!   with idle-expiry eviction; sessions pin the engine current at
+//!   creation, so enrolled features survive hot-swaps bit-identically;
+//! * **observability** ([`observe`]) — per-model, per-endpoint counters and
+//!   latency quantiles on `GET /metrics`, built from the shared
+//!   [`crate::metrics::LatencySnapshot`] row shape.
+//!
+//! ## Endpoints
+//!
+//! | Method/path                      | Meaning                                      |
+//! |----------------------------------|----------------------------------------------|
+//! | `POST /v1/{model}/infer`         | stateless feature extraction (1..N images)   |
+//! | `POST /v1/{model}/session`       | create a session → `{token}`                 |
+//! | `POST /v1/{model}/session/reset` | reset the token's session (token required)   |
+//! | `POST /v1/{model}/enroll`        | enroll `{label, image}` (token required)     |
+//! | `POST /v1/{model}/classify`      | classify `{image}` (token required)          |
+//! | `POST /admin/deploy`             | hot-swap `{bundle, name?, workers?}`         |
+//! | `POST /admin/shutdown`           | graceful shutdown (drain, then exit)         |
+//! | `GET /models`                    | deployed models (shared `ModelInfo` rows)    |
+//! | `GET /healthz`                   | liveness                                     |
+//! | `GET /metrics`                   | request/admission/session observability      |
+//!
+//! Graceful shutdown (`ServerHandle::shutdown` or `POST /admin/shutdown`)
+//! stops accepting, lets every in-flight request complete, joins all
+//! connection threads, and returns — no accepted request is dropped
+//! (`tests/serve_load.rs`).
+
+pub mod admission;
+pub mod client;
+pub mod http;
+pub mod observe;
+pub mod sessions;
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::bundle::Bundle;
+use crate::engine::{Engine, InferRequest, Registry, Session};
+use crate::json::Value;
+
+use admission::Admission;
+use http::{Conn, HttpError, Limits, Received, Request, Response};
+use observe::ServeMetrics;
+use sessions::SessionStore;
+
+/// Auth header carrying a session token.
+pub const TOKEN_HEADER: &str = "x-pefsl-token";
+/// Auth header carrying the admin token (when one is configured).
+pub const ADMIN_HEADER: &str = "x-pefsl-admin";
+
+/// Server tunables (`pefsl serve` flags map onto these).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Per-model admission budget (in-flight requests before `429`).
+    pub queue_depth: usize,
+    /// Idle session eviction horizon.
+    pub idle_session: Duration,
+    /// Protocol bounds (head/body size, request timeout).
+    pub limits: Limits,
+    /// When set, `/admin/*` requires this token in [`ADMIN_HEADER`].
+    pub admin_token: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            queue_depth: 32,
+            idle_session: Duration::from_secs(300),
+            limits: Limits::default(),
+            admin_token: None,
+        }
+    }
+}
+
+/// Everything the connection threads share.
+struct Shared {
+    registry: Arc<Registry>,
+    cfg: ServeConfig,
+    sessions: SessionStore,
+    metrics: ServeMetrics,
+    gates: Mutex<BTreeMap<String, Arc<Admission>>>,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// The admission gate for one model (created on first use).
+    fn gate(&self, model: &str) -> Arc<Admission> {
+        let mut gates = self.gates.lock().unwrap_or_else(PoisonError::into_inner);
+        let gate = gates
+            .entry(model.to_string())
+            .or_insert_with(|| Arc::new(Admission::new(self.cfg.queue_depth)));
+        Arc::clone(gate)
+    }
+}
+
+/// The running server.
+pub struct Server;
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and start serving `registry`.
+    pub fn start(registry: Arc<Registry>, addr: &str, cfg: ServeConfig) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let shared = Arc::new(Shared {
+            registry,
+            sessions: SessionStore::new(cfg.idle_session),
+            metrics: ServeMetrics::new(),
+            gates: Mutex::new(BTreeMap::new()),
+            shutdown: AtomicBool::new(false),
+            cfg,
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = thread::Builder::new()
+            .name("pefsl-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("spawn accept thread")?;
+        Ok(ServerHandle { local, shared, accept: Some(accept) })
+    }
+}
+
+/// Handle to a running server: address, shutdown, join.
+pub struct ServerHandle {
+    local: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Begin graceful shutdown: stop accepting, drain in-flight requests.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// True once shutdown has been requested (here or via the endpoint).
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Wait for the accept loop (and every connection it spawned) to
+    /// finish.  Returns after [`ServerHandle::shutdown`] or
+    /// `POST /admin/shutdown` completes the drain.
+    pub fn join(mut self) -> Result<()> {
+        let accept = self.accept.take().expect("join() consumes the handle once");
+        accept.join().map_err(|_| anyhow!("accept thread panicked"))
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        // A dropped handle still stops the server (tests that bail early).
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(accept) = self.accept.take() {
+            accept.join().ok();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let conn_shared = Arc::clone(&shared);
+                match thread::Builder::new()
+                    .name("pefsl-conn".to_string())
+                    .spawn(move || connection_loop(stream, conn_shared))
+                {
+                    Ok(h) => conns.push(h),
+                    Err(_) => thread::sleep(Duration::from_millis(10)),
+                }
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    // Drain: every accepted connection finishes its in-flight request
+    // before the loop (and ServerHandle::join) returns.
+    for h in conns {
+        h.join().ok();
+    }
+}
+
+fn connection_loop(stream: TcpStream, shared: Arc<Shared>) {
+    let Ok(mut conn) = Conn::new(stream) else {
+        return;
+    };
+    let limits = shared.cfg.limits;
+    loop {
+        let sd = Arc::clone(&shared);
+        let received = conn.read_request(&limits, move || sd.shutdown.load(Ordering::SeqCst));
+        match received {
+            Ok(Received::Closed) => break,
+            Ok(Received::Request(req)) => {
+                let started = Instant::now();
+                let (model, endpoint) = labels(&req.path);
+                // A panicking handler answers 500 and keeps the server up;
+                // admission permits release via Drop even through the
+                // unwind, so no slot leaks.
+                let mut resp = match catch_unwind(AssertUnwindSafe(|| route(&shared, &req))) {
+                    Ok(Ok(resp)) => resp,
+                    Ok(Err(e)) => Response::from_http_error(&e),
+                    Err(_) => Response::error(500, "internal error: request handler panicked"),
+                };
+                shared.metrics.record(&model, &endpoint, resp.status, started.elapsed());
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    resp.close = true;
+                }
+                let close = resp.close;
+                if conn.write_response(&resp).is_err() || close {
+                    break;
+                }
+            }
+            Err(e) => {
+                let resp = Response::from_http_error(&e);
+                let (model, endpoint) = ("-".to_string(), "protocol-error".to_string());
+                shared.metrics.record(&model, &endpoint, resp.status, Duration::ZERO);
+                conn.write_response(&resp).ok();
+                if e.fatal {
+                    break;
+                }
+            }
+        }
+    }
+    // Orderly FIN even if the peer sent bytes we never parsed (see
+    // `Conn::lingering_close` for the RST hazard this avoids).
+    conn.lingering_close();
+}
+
+/// `(model, endpoint)` labels for the metrics table.
+fn labels(path: &str) -> (String, String) {
+    let segs = split_path(path);
+    match segs.as_slice() {
+        ["v1", model, rest @ ..] if !rest.is_empty() => (model.to_string(), rest.join("/")),
+        [] => ("-".to_string(), "/".to_string()),
+        other => ("-".to_string(), other.join("/")),
+    }
+}
+
+fn split_path(path: &str) -> Vec<&str> {
+    let path = path.split('?').next().unwrap_or(path);
+    path.split('/').filter(|s| !s.is_empty()).collect()
+}
+
+fn require_method(req: &Request, method: &str) -> Result<(), HttpError> {
+    if req.method == method {
+        Ok(())
+    } else {
+        Err(HttpError::new(405, format!("{} requires {method}", req.path)))
+    }
+}
+
+fn route(shared: &Shared, req: &Request) -> Result<Response, HttpError> {
+    let segs = split_path(&req.path);
+    match segs.as_slice() {
+        ["healthz"] => {
+            require_method(req, "GET")?;
+            let mut v = Value::obj();
+            v.set("status", "ok")
+                .set("models", shared.registry.len())
+                .set("sessions", shared.sessions.len());
+            Ok(Response::json(200, &v))
+        }
+        ["metrics"] => {
+            require_method(req, "GET")?;
+            Ok(Response::json(200, &metrics_json(shared)))
+        }
+        ["models"] => {
+            require_method(req, "GET")?;
+            Ok(Response::json(200, &shared.registry.models_json()))
+        }
+        ["admin", "deploy"] => {
+            require_method(req, "POST")?;
+            require_admin(shared, req)?;
+            admin_deploy(shared, req)
+        }
+        ["admin", "shutdown"] => {
+            require_method(req, "POST")?;
+            require_admin(shared, req)?;
+            shared.shutdown.store(true, Ordering::SeqCst);
+            let mut v = Value::obj();
+            v.set("status", "shutting down");
+            let mut resp = Response::json(200, &v);
+            resp.close = true;
+            Ok(resp)
+        }
+        ["v1", model, rest @ ..] => {
+            require_method(req, "POST")?;
+            let model = model.to_string();
+            match rest {
+                ["infer"] => infer(shared, &model, req),
+                ["session"] => session_create(shared, &model),
+                ["session", "reset"] => session_reset(shared, &model, req),
+                ["enroll"] => enroll(shared, &model, req),
+                ["classify"] => classify(shared, &model, req),
+                _ => Err(HttpError::new(
+                    404,
+                    format!("unknown action '/{}' for model '{model}'", rest.join("/")),
+                )),
+            }
+        }
+        _ => Err(HttpError::new(404, format!("no such endpoint '{}'", req.path))),
+    }
+}
+
+fn require_admin(shared: &Shared, req: &Request) -> Result<(), HttpError> {
+    match &shared.cfg.admin_token {
+        None => Ok(()),
+        Some(expected) if req.header(ADMIN_HEADER) == Some(expected.as_str()) => Ok(()),
+        Some(_) => Err(HttpError::new(
+            401,
+            format!("admin endpoints require the correct {ADMIN_HEADER} header"),
+        )),
+    }
+}
+
+/// Resolve the model's current engine; unknown names are 404 (the error
+/// text names what *is* deployed).
+fn resolve_engine(shared: &Shared, model: &str) -> Result<Arc<Engine>, HttpError> {
+    shared.registry.engine(model).map_err(|e| HttpError::new(404, e.to_string()))
+}
+
+/// Resolve the session token for `model` from the request headers.
+fn resolve_session(
+    shared: &Shared,
+    model: &str,
+    req: &Request,
+) -> Result<Arc<Mutex<Session>>, HttpError> {
+    let token = req.header(TOKEN_HEADER).ok_or_else(|| {
+        HttpError::new(401, format!("missing {TOKEN_HEADER} header; create a session first"))
+    })?;
+    shared.sessions.resolve(model, token)
+}
+
+fn infer(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpError> {
+    let engine = resolve_engine(shared, model)?;
+    let body = req.json_body()?;
+    let expected = engine.info().input_elems;
+    let images: Vec<Vec<f32>> = if body.get("image").is_some() {
+        vec![image_field(&body, "image", expected)?]
+    } else {
+        let arr = body
+            .get("images")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| HttpError::new(400, "body needs 'image' or 'images'"))?;
+        arr.iter()
+            .enumerate()
+            .map(|(i, v)| {
+                image_values(v, expected)
+                    .map_err(|e| HttpError::new(400, format!("images[{i}]: {}", e.message)))
+            })
+            .collect::<Result<_, _>>()?
+    };
+    let gate = shared.gate(model);
+    let _permit = gate.try_acquire(model)?;
+    let resp = engine
+        .infer(InferRequest::batch(images))
+        .map_err(|e| HttpError::new(400, e.to_string()))?;
+    let items: Vec<Value> = resp
+        .items
+        .iter()
+        .map(|item| {
+            let mut o = Value::obj();
+            o.set("features", f32s_to_json(&item.features))
+                .set("modeled_latency_ms", opt_f64(item.metrics.modeled_latency_ms))
+                .set("cycles", item.metrics.cycles.map_or(Value::Null, Value::from))
+                .set("host_us", item.metrics.host_us);
+            o
+        })
+        .collect();
+    let mut v = Value::obj();
+    v.set("model", model).set("feature_dim", engine.feature_dim()).set("items", items);
+    Ok(Response::json(200, &v))
+}
+
+fn session_create(shared: &Shared, model: &str) -> Result<Response, HttpError> {
+    let engine = resolve_engine(shared, model)?;
+    let token = shared.sessions.create(model, Session::new(Arc::clone(&engine)));
+    let mut v = Value::obj();
+    v.set("token", token)
+        .set("model", model)
+        .set("feature_dim", engine.feature_dim())
+        .set("input_elems", engine.info().input_elems);
+    Ok(Response::json(200, &v))
+}
+
+fn session_reset(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpError> {
+    let session = resolve_session(shared, model, req)?;
+    session.lock().unwrap_or_else(PoisonError::into_inner).reset();
+    let mut v = Value::obj();
+    v.set("status", "reset").set("model", model);
+    Ok(Response::json(200, &v))
+}
+
+fn enroll(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpError> {
+    let session = resolve_session(shared, model, req)?;
+    let body = req.json_body()?;
+    let label = body
+        .get("label")
+        .and_then(Value::as_str)
+        .ok_or_else(|| HttpError::new(400, "body needs a string 'label'"))?
+        .to_string();
+    let gate = shared.gate(model);
+    let _permit = gate.try_acquire(model)?;
+    let mut s = session.lock().unwrap_or_else(PoisonError::into_inner);
+    let expected = s.engine().map(|e| e.info().input_elems).unwrap_or_else(|| s.dim());
+    let image = image_field(&body, "image", expected)?;
+    let found = (0..s.n_classes()).find(|&i| s.class_label(i) == Some(label.as_str()));
+    let class_idx = match found {
+        Some(i) => i,
+        None => s.add_class(label.as_str()),
+    };
+    let metrics =
+        s.enroll_image(class_idx, &image).map_err(|e| HttpError::new(400, e.to_string()))?;
+    let mut v = Value::obj();
+    v.set("class", class_idx)
+        .set("label", label)
+        .set("shots", s.shot_count(class_idx))
+        .set("modeled_latency_ms", opt_f64(metrics.modeled_latency_ms));
+    Ok(Response::json(200, &v))
+}
+
+fn classify(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpError> {
+    let session = resolve_session(shared, model, req)?;
+    let body = req.json_body()?;
+    let gate = shared.gate(model);
+    let _permit = gate.try_acquire(model)?;
+    let s = session.lock().unwrap_or_else(PoisonError::into_inner);
+    let expected = s.engine().map(|e| e.info().input_elems).unwrap_or_else(|| s.dim());
+    let image = image_field(&body, "image", expected)?;
+    let (pred, metrics) =
+        s.classify_image(&image).map_err(|e| HttpError::new(400, e.to_string()))?;
+    let mut v = Value::obj();
+    v.set("class", pred.class_idx)
+        .set("label", s.class_label(pred.class_idx).unwrap_or(""))
+        .set("distance", pred.distance as f64)
+        .set("confidence", pred.confidence as f64)
+        .set("modeled_latency_ms", opt_f64(metrics.modeled_latency_ms))
+        .set("cycles", metrics.cycles.map_or(Value::Null, Value::from));
+    Ok(Response::json(200, &v))
+}
+
+fn admin_deploy(shared: &Shared, req: &Request) -> Result<Response, HttpError> {
+    let body = req.json_body()?;
+    let path = body
+        .get("bundle")
+        .and_then(Value::as_str)
+        .ok_or_else(|| HttpError::new(400, "body needs a 'bundle' directory path"))?;
+    let bundle = Bundle::load(path).map_err(|e| HttpError::new(400, format!("{e:#}")))?;
+    let name = body
+        .get("name")
+        .and_then(Value::as_str)
+        .unwrap_or(bundle.name.as_str())
+        .to_string();
+    let workers = body.get("workers").and_then(Value::as_usize);
+    let generation = shared
+        .registry
+        .deploy_with(name.as_str(), &bundle, workers)
+        .map_err(|e| HttpError::new(400, format!("{e:#}")))?;
+    let mut v = Value::obj();
+    v.set("name", name).set("version", bundle.version.as_str()).set("generation", generation);
+    Ok(Response::json(200, &v))
+}
+
+/// The `/metrics` document: endpoint rows, admission gates, sessions.
+fn metrics_json(shared: &Shared) -> Value {
+    let gates = shared.gates.lock().unwrap_or_else(PoisonError::into_inner);
+    let admission: Vec<Value> = gates
+        .iter()
+        .map(|(model, gate)| {
+            let mut o = Value::obj();
+            o.set("model", model.as_str())
+                .set("depth", gate.depth())
+                .set("in_flight", gate.in_flight())
+                .set("admitted", gate.admitted())
+                .set("rejected", gate.rejected())
+                .set("retry_after_s", gate.retry_after_s())
+                .set("service", gate.service_snapshot().to_json());
+            o
+        })
+        .collect();
+    let mut sessions = Value::obj();
+    sessions.set("live", shared.sessions.len()).set("minted", shared.sessions.minted());
+    let mut v = Value::obj();
+    v.set("total_requests", shared.metrics.total_requests())
+        .set("endpoints", shared.metrics.to_json())
+        .set("admission", admission)
+        .set("sessions", sessions);
+    v
+}
+
+fn image_field(body: &Value, key: &str, expected: usize) -> Result<Vec<f32>, HttpError> {
+    let v = body
+        .get(key)
+        .ok_or_else(|| HttpError::new(400, format!("body needs an '{key}' array")))?;
+    image_values(v, expected)
+}
+
+fn image_values(v: &Value, expected: usize) -> Result<Vec<f32>, HttpError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| HttpError::new(400, "image must be a flat array of numbers"))?;
+    if arr.len() != expected {
+        return Err(HttpError::new(
+            400,
+            format!("image has {} elements; the model expects {expected}", arr.len()),
+        ));
+    }
+    arr.iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| HttpError::new(400, "image contains a non-number"))
+        })
+        .collect()
+}
+
+/// f32 features as JSON numbers.  f32→f64 is exact and the writer emits
+/// shortest-roundtrip f64, so a client parsing the JSON back to f32 gets
+/// the engine's bits — this is what makes wire classifications
+/// bit-identical to direct [`Session`] calls.
+fn f32s_to_json(xs: &[f32]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(f64::from(x))).collect())
+}
+
+fn opt_f64(x: Option<f64>) -> Value {
+    x.map_or(Value::Null, Value::Num)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.queue_depth, 32);
+        assert_eq!(cfg.idle_session, Duration::from_secs(300));
+        assert!(cfg.admin_token.is_none());
+    }
+
+    #[test]
+    fn path_splitting_and_labels() {
+        assert_eq!(split_path("/v1/m/session/reset"), vec!["v1", "m", "session", "reset"]);
+        assert_eq!(split_path("/healthz?x=1"), vec!["healthz"]);
+        assert_eq!(split_path("/"), Vec::<&str>::new());
+        assert_eq!(labels("/v1/m/classify"), ("m".to_string(), "classify".to_string()));
+        assert_eq!(labels("/healthz"), ("-".to_string(), "healthz".to_string()));
+        assert_eq!(labels("/admin/deploy"), ("-".to_string(), "admin/deploy".to_string()));
+        assert_eq!(labels("/"), ("-".to_string(), "/".to_string()));
+    }
+
+    #[test]
+    fn image_parsing_validates_shape_and_type() {
+        let mut body = Value::obj();
+        body.set("image", Value::Arr(vec![Value::Num(0.5), Value::Num(1.0)]));
+        assert_eq!(image_field(&body, "image", 2).unwrap(), vec![0.5, 1.0]);
+        assert_eq!(image_field(&body, "image", 3).unwrap_err().status, 400);
+        assert_eq!(image_field(&body, "missing", 2).unwrap_err().status, 400);
+        let mut bad = Value::obj();
+        bad.set("image", Value::Arr(vec![Value::Str("x".into())]));
+        assert_eq!(image_field(&bad, "image", 1).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn f32_json_roundtrip_is_bit_exact() {
+        let xs = vec![0.1f32, -3.7e-5, 123.456, f32::MIN_POSITIVE];
+        let text = crate::json::to_string_pretty(&f32s_to_json(&xs));
+        let back = crate::json::parse(&text).unwrap();
+        let ys: Vec<f32> =
+            back.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        assert_eq!(xs, ys);
+        for (a, b) in xs.iter().zip(&ys) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

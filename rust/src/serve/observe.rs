@@ -1,0 +1,139 @@
+//! Observability layer: per-model, per-endpoint request accounting behind
+//! `GET /metrics`.
+//!
+//! Every handled request is recorded under its `(model, endpoint)` key —
+//! status class (ok / rejected / client error / server error) plus
+//! end-to-end handler latency into a [`LatencyStats`] window.  `/metrics`
+//! renders the whole table as JSON using the shared
+//! [`LatencySnapshot::to_json`] row shape, so the serving endpoint and the
+//! `BENCH_*` emitters stay one formatting.  Admission state (queue depth,
+//! in-flight, rejection counts) is merged in by the server, which owns the
+//! gates.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, PoisonError};
+use std::time::Duration;
+
+use crate::json::Value;
+use crate::metrics::LatencyStats;
+
+/// Accumulated stats for one `(model, endpoint)` pair.
+#[derive(Debug)]
+struct EndpointStats {
+    requests: u64,
+    ok: u64,
+    /// 429s — admission rejections.
+    rejected: u64,
+    /// Other 4xx.
+    client_errors: u64,
+    /// 5xx.
+    server_errors: u64,
+    latency: LatencyStats,
+}
+
+impl EndpointStats {
+    fn new() -> EndpointStats {
+        EndpointStats {
+            requests: 0,
+            ok: 0,
+            rejected: 0,
+            client_errors: 0,
+            server_errors: 0,
+            latency: LatencyStats::new(512),
+        }
+    }
+}
+
+/// The `/metrics` table: `(model, endpoint)` → counters + quantiles.
+/// Non-model endpoints (`/healthz`, `/models`, …) record under model `"-"`.
+#[derive(Default)]
+pub struct ServeMetrics {
+    rows: Mutex<BTreeMap<(String, String), EndpointStats>>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    /// Record one handled request.
+    pub fn record(&self, model: &str, endpoint: &str, status: u16, elapsed: Duration) {
+        let mut rows = self.rows.lock().unwrap_or_else(PoisonError::into_inner);
+        let stats = rows
+            .entry((model.to_string(), endpoint.to_string()))
+            .or_insert_with(EndpointStats::new);
+        stats.requests += 1;
+        match status {
+            200..=299 => stats.ok += 1,
+            429 => stats.rejected += 1,
+            400..=499 => stats.client_errors += 1,
+            _ => stats.server_errors += 1,
+        }
+        stats.latency.record(elapsed);
+    }
+
+    /// Total requests recorded across all rows.
+    pub fn total_requests(&self) -> u64 {
+        let rows = self.rows.lock().unwrap_or_else(PoisonError::into_inner);
+        rows.values().map(|s| s.requests).sum()
+    }
+
+    /// The table as `/metrics` JSON rows.
+    pub fn to_json(&self) -> Value {
+        let rows = self.rows.lock().unwrap_or_else(PoisonError::into_inner);
+        let items: Vec<Value> = rows
+            .iter()
+            .map(|((model, endpoint), s)| {
+                let mut row = Value::obj();
+                row.set("model", model.as_str())
+                    .set("endpoint", endpoint.as_str())
+                    .set("requests", s.requests)
+                    .set("ok", s.ok)
+                    .set("rejected", s.rejected)
+                    .set("client_errors", s.client_errors)
+                    .set("server_errors", s.server_errors)
+                    .set("latency", s.latency.snapshot().to_json());
+                row
+            })
+            .collect();
+        Value::Arr(items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_classify_statuses() {
+        let m = ServeMetrics::new();
+        m.record("m", "classify", 200, Duration::from_micros(100));
+        m.record("m", "classify", 200, Duration::from_micros(300));
+        m.record("m", "classify", 429, Duration::from_micros(10));
+        m.record("m", "classify", 404, Duration::from_micros(10));
+        m.record("m", "classify", 500, Duration::from_micros(10));
+        m.record("-", "healthz", 200, Duration::from_micros(5));
+        assert_eq!(m.total_requests(), 6);
+        let v = m.to_json();
+        let rows = v.as_arr().unwrap();
+        assert_eq!(rows.len(), 2); // BTreeMap: ("-","healthz") sorts first
+        let row = &rows[1];
+        assert_eq!(row.get("model").unwrap().as_str(), Some("m"));
+        assert_eq!(row.get("endpoint").unwrap().as_str(), Some("classify"));
+        assert_eq!(row.get("requests").unwrap().as_usize(), Some(5));
+        assert_eq!(row.get("ok").unwrap().as_usize(), Some(2));
+        assert_eq!(row.get("rejected").unwrap().as_usize(), Some(1));
+        assert_eq!(row.get("client_errors").unwrap().as_usize(), Some(1));
+        assert_eq!(row.get("server_errors").unwrap().as_usize(), Some(1));
+        let lat = row.get("latency").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_usize(), Some(5));
+        assert!(lat.get("p95_us").unwrap().as_f64().unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn empty_table_is_empty_array() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.total_requests(), 0);
+        assert_eq!(m.to_json().as_arr().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Session layer: wire tokens ↔ [`engine::Session`]s.
+//!
+//! `POST /v1/{model}/session` creates a server-side [`Session`] (pinned to
+//! the engine current at creation, so enrolled features stay consistent
+//! with the backbone that produced them even across hot-swaps) and returns
+//! an opaque token.  Later `enroll`/`classify`/`session/reset` calls must
+//! present that token in the `x-pefsl-token` header; a missing or unknown
+//! token answers `401`, a token minted for a *different* model answers
+//! `403` (tokens are not transferable between models).
+//!
+//! Idle sessions are evicted: every store access lazily sweeps entries
+//! whose last use is older than the configured idle timeout, so abandoned
+//! clients cannot pin engines (and their memory) forever.  An evicted
+//! token answers `401` like an unknown one — clients recover by creating a
+//! fresh session and re-enrolling.
+//!
+//! Tokens are 32 hex chars derived from two FNV-1a hashes over a process
+//! counter, the wall clock, and the model name.  They are unguessable
+//! enough for demo-grade isolation between cooperating clients, **not**
+//! cryptographic secrets — the threat model here is crossed wires, not
+//! adversaries (same stance as the bundle checksums).
+//!
+//! [`engine::Session`]: crate::engine::Session
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::engine::Session;
+use crate::util::checksum::fnv1a64;
+
+use super::http::HttpError;
+
+/// One live wire session.
+struct Entry {
+    model: String,
+    session: Arc<Mutex<Session>>,
+    last_used: Instant,
+}
+
+/// Token-addressed store of live sessions with idle-expiry eviction.
+pub struct SessionStore {
+    idle_timeout: Duration,
+    entries: Mutex<HashMap<String, Entry>>,
+    minted: AtomicU64,
+}
+
+impl SessionStore {
+    pub fn new(idle_timeout: Duration) -> SessionStore {
+        SessionStore {
+            idle_timeout,
+            entries: Mutex::new(HashMap::new()),
+            minted: AtomicU64::new(0),
+        }
+    }
+
+    /// Register a new session for `model`; returns its token.
+    pub fn create(&self, model: &str, session: Session) -> String {
+        let token = self.mint_token(model);
+        let mut entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        Self::sweep(&mut entries, self.idle_timeout);
+        entries.insert(
+            token.clone(),
+            Entry {
+                model: model.to_string(),
+                session: Arc::new(Mutex::new(session)),
+                last_used: Instant::now(),
+            },
+        );
+        token
+    }
+
+    /// Resolve a token presented against `model`: `401` unknown/expired,
+    /// `403` minted for a different model.  Touches the idle clock.
+    pub fn resolve(&self, model: &str, token: &str) -> Result<Arc<Mutex<Session>>, HttpError> {
+        let mut entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        Self::sweep(&mut entries, self.idle_timeout);
+        let entry = entries.get_mut(token).ok_or_else(|| {
+            HttpError::new(401, "unknown or expired session token; create a new session")
+        })?;
+        if entry.model != model {
+            return Err(HttpError::new(
+                403,
+                format!("session token belongs to model '{}', not '{model}'", entry.model),
+            ));
+        }
+        entry.last_used = Instant::now();
+        Ok(Arc::clone(&entry.session))
+    }
+
+    /// Drop a session (explicit close); true if the token was live.
+    pub fn remove(&self, token: &str) -> bool {
+        let mut entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        entries.remove(token).is_some()
+    }
+
+    /// Live session count (post-sweep) — surfaced on `/metrics`.
+    pub fn len(&self) -> usize {
+        let mut entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        Self::sweep(&mut entries, self.idle_timeout);
+        entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tokens minted over the store's lifetime (monotonic).
+    pub fn minted(&self) -> u64 {
+        self.minted.load(Ordering::Relaxed)
+    }
+
+    fn sweep(entries: &mut HashMap<String, Entry>, idle_timeout: Duration) {
+        entries.retain(|_, e| e.last_used.elapsed() <= idle_timeout);
+    }
+
+    fn mint_token(&self, model: &str) -> String {
+        let n = self.minted.fetch_add(1, Ordering::Relaxed);
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or_default();
+        let seed = format!("{n}/{nanos}/{model}");
+        let a = fnv1a64(seed.as_bytes());
+        let b = fnv1a64(format!("{a:016x}/{seed}").as_bytes());
+        format!("{a:016x}{b:016x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(idle: Duration) -> SessionStore {
+        SessionStore::new(idle)
+    }
+
+    #[test]
+    fn create_resolve_remove() {
+        let s = store(Duration::from_secs(60));
+        let t = s.create("m", Session::detached(4));
+        assert_eq!(t.len(), 32);
+        assert_eq!(s.len(), 1);
+        let sess = s.resolve("m", &t).unwrap();
+        sess.lock().unwrap().add_class("a");
+        // same underlying session on the next resolve
+        let again = s.resolve("m", &t).unwrap();
+        assert_eq!(again.lock().unwrap().n_classes(), 1);
+        assert!(s.remove(&t));
+        assert!(!s.remove(&t));
+        assert_eq!(s.resolve("m", &t).unwrap_err().status, 401);
+    }
+
+    #[test]
+    fn tokens_are_unique_and_model_scoped() {
+        let s = store(Duration::from_secs(60));
+        let t1 = s.create("a", Session::detached(4));
+        let t2 = s.create("a", Session::detached(4));
+        assert_ne!(t1, t2);
+        assert_eq!(s.minted(), 2);
+        // cross-model use is 403, not 401 (the token is live, just wrong)
+        let err = s.resolve("b", &t1).unwrap_err();
+        assert_eq!(err.status, 403);
+        assert!(err.message.contains('a'), "{}", err.message);
+    }
+
+    #[test]
+    fn unknown_token_is_401() {
+        let s = store(Duration::from_secs(60));
+        assert_eq!(s.resolve("m", "deadbeef").unwrap_err().status, 401);
+    }
+
+    #[test]
+    fn idle_sessions_evicted() {
+        let s = store(Duration::from_millis(30));
+        let t = s.create("m", Session::detached(4));
+        assert_eq!(s.len(), 1);
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(s.resolve("m", &t).unwrap_err().status, 401);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn use_refreshes_idle_clock() {
+        let s = store(Duration::from_millis(80));
+        let t = s.create("m", Session::detached(4));
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(30));
+            s.resolve("m", &t).expect("touched session must stay live");
+        }
+    }
+}

@@ -1,0 +1,401 @@
+//! Load/integration suite for `pefsl::serve` (ISSUE 6 acceptance):
+//!
+//! * ≥4 concurrent socket clients get **bit-identical** classifications to
+//!   direct [`Session`] calls (same engine, same enroll order, f64-exact
+//!   JSON numbers on the wire);
+//! * a depth-limited admission queue saturates into clean `429`s with a
+//!   `Retry-After` header — every request is answered, nothing buffers
+//!   unboundedly, and the admission counters reconcile;
+//! * serving continues through mid-traffic `POST /admin/deploy` hot-swaps,
+//!   with session-pinned engines keeping their answers bit-stable;
+//! * `/metrics` counters reconcile with the client-side request tally;
+//! * graceful shutdown serves the in-flight request, drains, and the CLI
+//!   `pefsl serve` exits 0.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use pefsl::bundle::Bundle;
+use pefsl::dse::BackboneSpec;
+use pefsl::engine::Registry;
+use pefsl::json::Value;
+use pefsl::serve::client::HttpClient;
+use pefsl::serve::{ServeConfig, Server, ServerHandle, TOKEN_HEADER};
+use pefsl::tarch::Tarch;
+use pefsl::util::Prng;
+
+fn tiny_bundle(seed: u64, version: &str) -> Bundle {
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    Bundle::pack("m", version, spec.build_graph(seed).unwrap(), Tarch::z7020_8x8()).unwrap()
+}
+
+const IMG_ELEMS: usize = 8 * 8 * 3;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pefsl_it_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn start(queue_depth: usize) -> (ServerHandle, String, Arc<Registry>) {
+    let registry = Arc::new(Registry::new());
+    registry.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+    let cfg = ServeConfig { queue_depth, ..ServeConfig::default() };
+    let handle = Server::start(Arc::clone(&registry), "127.0.0.1:0", cfg).unwrap();
+    let addr = handle.addr().to_string();
+    (handle, addr, registry)
+}
+
+fn image(rng: &mut Prng) -> Vec<f32> {
+    (0..IMG_ELEMS).map(|_| rng.f32()).collect()
+}
+
+fn img_json(xs: &[f32]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(f64::from(x))).collect())
+}
+
+/// Acceptance criterion: ≥4 concurrent socket clients, each with its own
+/// wire session, classify bit-identically to direct `Session` calls — and
+/// `/metrics` reconciles with the client-side tally afterwards.
+#[test]
+fn concurrent_clients_bit_identical_to_direct_sessions() {
+    const CLIENTS: usize = 4;
+    const SHOTS: usize = 2;
+    const QUERIES: usize = 8;
+    let (handle, addr, registry) = start(32);
+
+    let mut workers = Vec::new();
+    for client_id in 0..CLIENTS {
+        let addr = addr.clone();
+        let registry = Arc::clone(&registry);
+        workers.push(thread::spawn(move || {
+            let mut rng = Prng::new(1000 + client_id as u64);
+            // the reference path: a direct in-process session on the
+            // same engine, fed the exact same images in the same order
+            let mut direct = registry.session("m").unwrap();
+            let mut http = HttpClient::connect(&addr).unwrap();
+            let created = http.post("/v1/m/session", &Value::obj()).unwrap();
+            assert_eq!(created.status, 200, "{}", created.body_text());
+            let created = created.json().unwrap();
+            let token = created.req_str("token").unwrap().to_string();
+            assert_eq!(created.req_usize("input_elems").unwrap(), IMG_ELEMS);
+
+            for class in 0..2usize {
+                let label = format!("c{class}");
+                let direct_idx = direct.add_class(label.as_str());
+                for _ in 0..SHOTS {
+                    let img = image(&mut rng);
+                    direct.enroll_image(direct_idx, &img).unwrap();
+                    let mut body = Value::obj();
+                    body.set("label", label.as_str()).set("image", img_json(&img));
+                    let r = http.post_with_token("/v1/m/enroll", &token, &body).unwrap();
+                    assert_eq!(r.status, 200, "{}", r.body_text());
+                    assert_eq!(r.json().unwrap().req_usize("class").unwrap(), direct_idx);
+                }
+            }
+            for _ in 0..QUERIES {
+                let img = image(&mut rng);
+                let (pred, _) = direct.classify_image(&img).unwrap();
+                let mut body = Value::obj();
+                body.set("image", img_json(&img));
+                let r = http.post_with_token("/v1/m/classify", &token, &body).unwrap();
+                assert_eq!(r.status, 200, "{}", r.body_text());
+                let v = r.json().unwrap();
+                assert_eq!(v.req_usize("class").unwrap(), pred.class_idx);
+                assert_eq!(v.req_str("label").unwrap(), format!("c{}", pred.class_idx));
+                // bit-identical: the wire distance parses back to the
+                // exact f32 the direct session computed
+                let wire_distance = v.get("distance").unwrap().as_f64().unwrap() as f32;
+                assert_eq!(wire_distance.to_bits(), pred.distance.to_bits());
+                let wire_conf = v.get("confidence").unwrap().as_f64().unwrap() as f32;
+                assert_eq!(wire_conf.to_bits(), pred.confidence.to_bits());
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // client-side tally: per client 1 session + 2*SHOTS enrolls + QUERIES
+    // classifies, all 200
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let metrics = http.get("/metrics").unwrap().json().unwrap();
+    let rows = metrics.req_arr("endpoints").unwrap();
+    let row = |endpoint: &str| {
+        rows.iter()
+            .find(|r| {
+                r.req_str("model").unwrap() == "m" && r.req_str("endpoint").unwrap() == endpoint
+            })
+            .unwrap_or_else(|| panic!("no metrics row for {endpoint}"))
+            .clone()
+    };
+    for (endpoint, expected) in
+        [("session", CLIENTS), ("enroll", CLIENTS * 2 * SHOTS), ("classify", CLIENTS * QUERIES)]
+    {
+        let r = row(endpoint);
+        assert_eq!(r.req_usize("requests").unwrap(), expected, "{endpoint}");
+        assert_eq!(r.req_usize("ok").unwrap(), expected, "{endpoint}");
+        assert_eq!(r.req_usize("rejected").unwrap(), 0, "{endpoint}");
+        let lat = r.get("latency").unwrap();
+        assert_eq!(lat.req_usize("count").unwrap(), expected, "{endpoint}");
+        assert!(lat.get("p95_us").unwrap().as_f64().unwrap() > 0.0);
+    }
+    let sessions = metrics.get("sessions").unwrap();
+    assert_eq!(sessions.req_usize("live").unwrap(), CLIENTS);
+    assert_eq!(sessions.req_usize("minted").unwrap(), CLIENTS);
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+/// Acceptance criterion: overload on a depth-limited queue yields clean
+/// `429 + Retry-After`; every request is answered 200 or 429 and the
+/// admission counters reconcile exactly with the client-side outcome.
+#[test]
+fn overload_saturates_into_clean_429s() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 20;
+    let (handle, addr, _registry) = start(1);
+
+    let mut workers = Vec::new();
+    for t in 0..THREADS {
+        let addr = addr.clone();
+        workers.push(thread::spawn(move || {
+            let mut rng = Prng::new(7000 + t as u64);
+            let mut http = HttpClient::connect(&addr).unwrap();
+            let (mut ok, mut rejected) = (0u64, 0u64);
+            for _ in 0..PER_THREAD {
+                // batch of 8 images lengthens service time → contention
+                let images: Vec<Value> = (0..8).map(|_| img_json(&image(&mut rng))).collect();
+                let mut body = Value::obj();
+                body.set("images", Value::Arr(images));
+                let r = http.post("/v1/m/infer", &body).unwrap();
+                match r.status {
+                    200 => ok += 1,
+                    429 => {
+                        let retry: u64 = r
+                            .header("retry-after")
+                            .expect("429 must carry Retry-After")
+                            .parse()
+                            .expect("Retry-After must be integral seconds");
+                        assert!((1..=30).contains(&retry), "retry-after {retry}");
+                        rejected += 1;
+                    }
+                    other => panic!("unexpected status {other}: {}", r.body_text()),
+                }
+            }
+            (ok, rejected)
+        }));
+    }
+    let mut total_ok = 0u64;
+    let mut total_rejected = 0u64;
+    for w in workers {
+        let (ok, rejected) = w.join().unwrap();
+        total_ok += ok;
+        total_rejected += rejected;
+    }
+    assert_eq!(total_ok + total_rejected, (THREADS * PER_THREAD) as u64);
+    assert!(total_rejected > 0, "depth-1 queue under 8 hammering threads must reject");
+    assert!(total_ok > 0, "some requests must still be admitted");
+
+    // the server-side admission ledger reconciles exactly
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let metrics = http.get("/metrics").unwrap().json().unwrap();
+    let gates = metrics.req_arr("admission").unwrap();
+    let gate = gates.iter().find(|g| g.req_str("model").unwrap() == "m").unwrap();
+    assert_eq!(gate.req_usize("depth").unwrap(), 1);
+    assert_eq!(gate.req_usize("in_flight").unwrap(), 0);
+    assert_eq!(gate.req_usize("admitted").unwrap() as u64, total_ok);
+    assert_eq!(gate.req_usize("rejected").unwrap() as u64, total_rejected);
+    // and the endpoint row agrees
+    let rows = metrics.req_arr("endpoints").unwrap();
+    let infer_row = rows
+        .iter()
+        .find(|r| r.req_str("model").unwrap() == "m" && r.req_str("endpoint").unwrap() == "infer")
+        .unwrap();
+    assert_eq!(infer_row.req_usize("ok").unwrap() as u64, total_ok);
+    assert_eq!(infer_row.req_usize("rejected").unwrap() as u64, total_rejected);
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+/// Acceptance criterion: serving continues through a concurrent deploy
+/// hot-swap — no failed requests, pinned sessions stay bit-stable, and the
+/// registry reports the new version afterwards.
+#[test]
+fn serving_continues_through_hot_swap() {
+    let (handle, addr, _registry) = start(64);
+    let dir = tmpdir("swap");
+    let v2_dir = dir.join("v2");
+    let v3_dir = dir.join("v3");
+    tiny_bundle(2, "v2").save(&v2_dir).unwrap();
+    tiny_bundle(3, "v3").save(&v3_dir).unwrap();
+
+    // a pinned session enrolled before any swap
+    let mut rng = Prng::new(42);
+    let enroll_img = image(&mut rng);
+    let probe = image(&mut rng);
+    let mut pinned = HttpClient::connect(&addr).unwrap();
+    let created = pinned.post("/v1/m/session", &Value::obj()).unwrap().json().unwrap();
+    let token = created.req_str("token").unwrap().to_string();
+    let mut body = Value::obj();
+    body.set("label", "a").set("image", img_json(&enroll_img));
+    assert_eq!(pinned.post_with_token("/v1/m/enroll", &token, &body).unwrap().status, 200);
+    let mut classify_body = Value::obj();
+    classify_body.set("image", img_json(&probe));
+    let before = pinned
+        .post_with_token("/v1/m/classify", &token, &classify_body)
+        .unwrap()
+        .json()
+        .unwrap();
+
+    // traffic hammering across the swaps: every answer must be 200/429
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let hammer_stop = Arc::clone(&stop);
+    let hammer_addr = addr.clone();
+    let hammer = thread::spawn(move || {
+        let mut rng = Prng::new(99);
+        let mut http = HttpClient::connect(&hammer_addr).unwrap();
+        let mut served = 0u64;
+        while !hammer_stop.load(std::sync::atomic::Ordering::Relaxed) {
+            let mut body = Value::obj();
+            body.set("image", img_json(&image(&mut rng)));
+            let r = http.post("/v1/m/infer", &body).unwrap();
+            assert!(r.status == 200 || r.status == 429, "status {}", r.status);
+            served += 1;
+        }
+        served
+    });
+
+    // two mid-traffic hot-swaps through the wire
+    let mut admin = HttpClient::connect(&addr).unwrap();
+    for (path, version) in [(&v2_dir, "v2"), (&v3_dir, "v3")] {
+        let mut body = Value::obj();
+        body.set("bundle", path.display().to_string()).set("name", "m");
+        let r = admin.post("/admin/deploy", &body).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_text());
+        assert_eq!(r.json().unwrap().req_str("version").unwrap(), version);
+        thread::sleep(Duration::from_millis(50));
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let served = hammer.join().unwrap();
+    assert!(served > 0);
+
+    // the registry now serves v3...
+    let models = admin.get("/models").unwrap().json().unwrap();
+    let rows = models.as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].req_str("version").unwrap(), "v3");
+    // ...but the pinned session still answers bit-identically (its engine
+    // was fixed at session creation)
+    let after = pinned
+        .post_with_token("/v1/m/classify", &token, &classify_body)
+        .unwrap()
+        .json()
+        .unwrap();
+    assert_eq!(
+        before.get("distance").unwrap().as_f64().unwrap().to_bits(),
+        after.get("distance").unwrap().as_f64().unwrap().to_bits()
+    );
+    assert_eq!(before.req_usize("class").unwrap(), after.req_usize("class").unwrap());
+
+    std::fs::remove_dir_all(&dir).ok();
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+/// Satellite: graceful shutdown — the in-flight request is served to
+/// completion, the drain finishes, and new connections are refused.
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let (handle, addr, _registry) = start(16);
+    let mut rng = Prng::new(5);
+    let mut http = HttpClient::connect(&addr).unwrap();
+    // complete one request first so the connection is definitely accepted
+    // and owned by a handler thread (a connection still in the listener
+    // backlog when shutdown hits was never accepted, and may be refused)
+    assert_eq!(http.get("/healthz").unwrap().status, 200);
+    // a request already on the wire when shutdown hits must be answered
+    let mut body = Value::obj();
+    body.set("image", img_json(&image(&mut rng)));
+    use std::io::Write;
+    let payload = pefsl::json::to_string_pretty(&body);
+    let head = format!(
+        "POST /v1/m/infer HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n",
+        payload.len()
+    );
+    http.stream_mut().write_all(head.as_bytes()).unwrap();
+    http.stream_mut().write_all(payload.as_bytes()).unwrap();
+    handle.shutdown();
+    let resp = pefsl::serve::client::read_response(http.stream_mut()).unwrap();
+    assert_eq!(resp.status, 200, "in-flight request dropped: {}", resp.body_text());
+
+    handle.join().unwrap();
+    // post-drain, the listener is gone: new connections fail
+    assert!(std::net::TcpStream::connect(&addr).is_err());
+}
+
+/// Satellite: `pefsl serve` end to end — CLI flags, `--addr-file`
+/// publication, `/healthz`, `/models`, shutdown endpoint, exit code 0.
+#[test]
+fn cli_serve_end_to_end() {
+    let dir = tmpdir("cli");
+    let bundle_dir = dir.join("bundle");
+    tiny_bundle(4, "v9").save(&bundle_dir).unwrap();
+    let addr_file = dir.join("addr.txt");
+
+    let argv: Vec<String> = [
+        "serve",
+        "--addr",
+        "127.0.0.1:0",
+        "--addr-file",
+        addr_file.to_str().unwrap(),
+        "--bundle",
+        bundle_dir.to_str().unwrap(),
+        "--name",
+        "cli-model",
+        "--workers",
+        "1",
+        "--queue-depth",
+        "4",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let server = thread::spawn(move || pefsl::cli::run(&argv));
+
+    // wait for the server to publish its bound address
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(&addr_file) {
+            if !s.is_empty() {
+                break s;
+            }
+        }
+        assert!(std::time::Instant::now() < deadline, "serve never published --addr-file");
+        thread::sleep(Duration::from_millis(20));
+    };
+
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let health = http.get("/healthz").unwrap().json().unwrap();
+    assert_eq!(health.req_str("status").unwrap(), "ok");
+    assert_eq!(health.req_usize("models").unwrap(), 1);
+    let models = http.get("/models").unwrap().json().unwrap();
+    assert_eq!(models.as_arr().unwrap()[0].req_str("name").unwrap(), "cli-model");
+    assert_eq!(models.as_arr().unwrap()[0].req_str("version").unwrap(), "v9");
+
+    let r = http.post("/admin/shutdown", &Value::obj()).unwrap();
+    assert_eq!(r.status, 200);
+    let exit = server.join().unwrap().unwrap();
+    assert_eq!(exit, 0, "pefsl serve must exit 0 after a graceful shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Wire sessions hold a token; `TOKEN_HEADER` is the documented name.
+#[test]
+fn token_header_constant_is_stable() {
+    assert_eq!(TOKEN_HEADER, "x-pefsl-token");
+}

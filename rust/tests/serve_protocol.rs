@@ -1,0 +1,309 @@
+//! Protocol-robustness suite for `pefsl::serve` (ISSUE 6 satellite):
+//! malformed request lines, oversized heads/bodies, truncated bodies,
+//! chunked encoding, wrong/missing/cross-model auth tokens, unknown
+//! models, wrong methods — each must answer its specific 4xx without
+//! wedging the connection loop or panicking a worker thread (the server
+//! keeps answering afterwards in every test).
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use pefsl::bundle::Bundle;
+use pefsl::dse::BackboneSpec;
+use pefsl::engine::Registry;
+use pefsl::json::Value;
+use pefsl::serve::client::{read_response, HttpClient};
+use pefsl::serve::http::Limits;
+use pefsl::serve::{ServeConfig, Server, ServerHandle};
+use pefsl::tarch::Tarch;
+
+const IMG_ELEMS: usize = 8 * 8 * 3;
+
+fn tiny_bundle(seed: u64, version: &str) -> Bundle {
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    Bundle::pack("m", version, spec.build_graph(seed).unwrap(), Tarch::z7020_8x8()).unwrap()
+}
+
+/// Two models deployed ("m" and "n") so cross-model auth is testable.
+fn start_with(cfg: ServeConfig) -> (ServerHandle, String) {
+    let registry = Arc::new(Registry::new());
+    registry.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+    registry.deploy("n", &tiny_bundle(2, "v1")).unwrap();
+    let handle = Server::start(registry, "127.0.0.1:0", cfg).unwrap();
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+fn start() -> (ServerHandle, String) {
+    start_with(ServeConfig::default())
+}
+
+fn image_json() -> Value {
+    Value::Arr((0..IMG_ELEMS).map(|i| Value::Num(i as f64 / IMG_ELEMS as f64)).collect())
+}
+
+/// After any error on `addr`, the server must still answer healthz on a
+/// fresh connection — the loop is not wedged, no worker died.
+fn assert_still_serving(addr: &str) {
+    let mut http = HttpClient::connect(addr).unwrap();
+    let r = http.get("/healthz").unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().unwrap().req_str("status").unwrap(), "ok");
+}
+
+#[test]
+fn malformed_request_line_is_400_and_closes() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    http.stream_mut().write_all(b"GARBAGE-NO-HTTP\r\n\r\n").unwrap();
+    let r = read_response(http.stream_mut()).unwrap();
+    assert_eq!(r.status, 400);
+    assert_eq!(r.header("connection"), Some("close"));
+    assert!(r.body_text().contains("malformed request line"), "{}", r.body_text());
+    assert_still_serving(&addr);
+    drop(handle);
+}
+
+#[test]
+fn oversized_head_is_431() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let huge = "x".repeat(20 * 1024); // default head cap is 16 KiB
+    http.stream_mut()
+        .write_all(format!("GET /healthz HTTP/1.1\r\nbig: {huge}\r\n\r\n").as_bytes())
+        .unwrap();
+    let r = read_response(http.stream_mut()).unwrap();
+    assert_eq!(r.status, 431);
+    assert_still_serving(&addr);
+    drop(handle);
+}
+
+#[test]
+fn too_many_headers_is_431() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let mut req = String::from("GET /healthz HTTP/1.1\r\n");
+    for i in 0..80 {
+        // default cap is 64 headers
+        req.push_str(&format!("h{i}: v\r\n"));
+    }
+    req.push_str("\r\n");
+    http.stream_mut().write_all(req.as_bytes()).unwrap();
+    let r = read_response(http.stream_mut()).unwrap();
+    assert_eq!(r.status, 431);
+    assert!(r.body_text().contains("too many"), "{}", r.body_text());
+    assert_still_serving(&addr);
+    drop(handle);
+}
+
+#[test]
+fn truncated_body_times_out_as_408() {
+    let cfg = ServeConfig {
+        limits: Limits { request_timeout: Duration::from_millis(200), ..Limits::default() },
+        ..ServeConfig::default()
+    };
+    let (handle, addr) = start_with(cfg);
+    let mut http = HttpClient::connect(&addr).unwrap();
+    http.stream_mut()
+        .write_all(b"POST /v1/m/infer HTTP/1.1\r\ncontent-length: 100\r\n\r\n{\"partial")
+        .unwrap();
+    // ...and never send the remaining 91 bytes
+    let r = read_response(http.stream_mut()).unwrap();
+    assert_eq!(r.status, 408);
+    assert!(r.body_text().contains("timed out"), "{}", r.body_text());
+    assert_still_serving(&addr);
+    drop(handle);
+}
+
+#[test]
+fn chunked_transfer_encoding_is_411() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    http.stream_mut()
+        .write_all(b"POST /v1/m/infer HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n")
+        .unwrap();
+    let r = read_response(http.stream_mut()).unwrap();
+    assert_eq!(r.status, 411);
+    assert!(r.body_text().contains("chunked"), "{}", r.body_text());
+    assert_still_serving(&addr);
+    drop(handle);
+}
+
+#[test]
+fn oversized_declared_body_is_413_without_buffering() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    // 9 MiB declared against the 8 MiB cap: answered before any body read
+    http.stream_mut()
+        .write_all(b"POST /v1/m/infer HTTP/1.1\r\ncontent-length: 9437184\r\n\r\n")
+        .unwrap();
+    let r = read_response(http.stream_mut()).unwrap();
+    assert_eq!(r.status, 413);
+    assert_still_serving(&addr);
+    drop(handle);
+}
+
+#[test]
+fn missing_and_unknown_tokens_are_401() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let mut body = Value::obj();
+    body.set("image", image_json());
+    // no token header at all
+    let r = http.post("/v1/m/classify", &body).unwrap();
+    assert_eq!(r.status, 401);
+    assert!(r.body_text().contains("x-pefsl-token"), "{}", r.body_text());
+    // a token the server never minted
+    let r = http.post_with_token("/v1/m/classify", "deadbeefdeadbeef", &body).unwrap();
+    assert_eq!(r.status, 401);
+    // clean 4xx keeps the same connection serving (no close, no wedge)
+    let r = http.get("/healthz").unwrap();
+    assert_eq!(r.status, 200);
+    drop(handle);
+}
+
+#[test]
+fn cross_model_token_is_403() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let created = http.post("/v1/m/session", &Value::obj()).unwrap().json().unwrap();
+    let token = created.req_str("token").unwrap().to_string();
+    let mut body = Value::obj();
+    body.set("label", "a").set("image", image_json());
+    // the token is live, but minted for model 'm'
+    let r = http.post_with_token("/v1/n/enroll", &token, &body).unwrap();
+    assert_eq!(r.status, 403);
+    assert!(r.body_text().contains("'m'"), "{}", r.body_text());
+    // and still valid for its own model on the same connection
+    let r = http.post_with_token("/v1/m/enroll", &token, &body).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    drop(handle);
+}
+
+#[test]
+fn unknown_model_is_404_naming_deployed() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let mut body = Value::obj();
+    body.set("image", image_json());
+    let r = http.post("/v1/ghost/infer", &body).unwrap();
+    assert_eq!(r.status, 404);
+    let text = r.body_text();
+    assert!(text.contains("ghost") && text.contains('m') && text.contains('n'), "{text}");
+    // unknown action under a known model is 404 too
+    let r = http.post("/v1/m/frobnicate", &body).unwrap();
+    assert_eq!(r.status, 404);
+    // unknown top-level path
+    let r = http.get("/nope").unwrap();
+    assert_eq!(r.status, 404);
+    drop(handle);
+}
+
+#[test]
+fn wrong_method_is_405() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let r = http.post("/healthz", &Value::obj()).unwrap();
+    assert_eq!(r.status, 405);
+    let r = http.request("GET", "/v1/m/infer", &[], None).unwrap();
+    assert_eq!(r.status, 405);
+    let r = http.request("PUT", "/models", &[], None).unwrap();
+    assert_eq!(r.status, 405);
+    drop(handle);
+}
+
+#[test]
+fn malformed_json_and_bad_images_are_400() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    // empty body
+    let r = http.request("POST", "/v1/m/infer", &[], None).unwrap();
+    assert_eq!(r.status, 400);
+    // unparseable JSON
+    http.stream_mut()
+        .write_all(b"POST /v1/m/infer HTTP/1.1\r\ncontent-length: 5\r\n\r\n{nope")
+        .unwrap();
+    let r = read_response(http.stream_mut()).unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.body_text().contains("malformed JSON"), "{}", r.body_text());
+    // wrong image length (the error names both sizes)
+    let mut body = Value::obj();
+    body.set("image", Value::Arr(vec![Value::Num(0.5); 7]));
+    let r = http.post("/v1/m/infer", &body).unwrap();
+    assert_eq!(r.status, 400);
+    let text = r.body_text();
+    assert!(text.contains('7') && text.contains(&IMG_ELEMS.to_string()), "{text}");
+    // non-numeric image element
+    let mut body = Value::obj();
+    body.set("image", Value::Arr(vec![Value::Str("x".into()); IMG_ELEMS]));
+    let r = http.post("/v1/m/infer", &body).unwrap();
+    assert_eq!(r.status, 400);
+    // missing both 'image' and 'images'
+    let r = http.post("/v1/m/infer", &Value::obj()).unwrap();
+    assert_eq!(r.status, 400);
+    // the connection survived all of it
+    assert_eq!(http.get("/healthz").unwrap().status, 200);
+    drop(handle);
+}
+
+#[test]
+fn idle_sessions_expire_into_401() {
+    let cfg = ServeConfig { idle_session: Duration::from_millis(60), ..ServeConfig::default() };
+    let (handle, addr) = start_with(cfg);
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let created = http.post("/v1/m/session", &Value::obj()).unwrap().json().unwrap();
+    let token = created.req_str("token").unwrap().to_string();
+    std::thread::sleep(Duration::from_millis(180));
+    let mut body = Value::obj();
+    body.set("image", image_json());
+    let r = http.post_with_token("/v1/m/classify", &token, &body).unwrap();
+    assert_eq!(r.status, 401);
+    assert!(r.body_text().contains("expired"), "{}", r.body_text());
+    drop(handle);
+}
+
+#[test]
+fn admin_endpoints_respect_the_admin_token() {
+    let cfg = ServeConfig { admin_token: Some("sekret".to_string()), ..ServeConfig::default() };
+    let (handle, addr) = start_with(cfg);
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let mut body = Value::obj();
+    body.set("bundle", "/nonexistent");
+    // no token
+    let r = http.post("/admin/deploy", &body).unwrap();
+    assert_eq!(r.status, 401);
+    // wrong token
+    let bad = [("x-pefsl-admin", "wrong")];
+    let r = http.request("POST", "/admin/deploy", &bad, Some(&body)).unwrap();
+    assert_eq!(r.status, 401);
+    // right token reaches the handler (and fails on the bogus path → 400)
+    let good = [("x-pefsl-admin", "sekret")];
+    let r = http.request("POST", "/admin/deploy", &good, Some(&body)).unwrap();
+    assert_eq!(r.status, 400);
+    // shutdown is protected the same way
+    let r = http.post("/admin/shutdown", &Value::obj()).unwrap();
+    assert_eq!(r.status, 401);
+    drop(handle);
+}
+
+#[test]
+fn pipelined_requests_on_one_connection_all_answered() {
+    let (handle, addr) = start();
+    let mut http = HttpClient::connect(&addr).unwrap();
+    // two back-to-back requests written before reading any response
+    let req = b"GET /healthz HTTP/1.1\r\ncontent-length: 0\r\n\r\n";
+    http.stream_mut().write_all(req).unwrap();
+    http.stream_mut().write_all(req).unwrap();
+    // raw read (read_response buffers greedily, so call it only once per
+    // connection when requests are pipelined): both answers must arrive
+    let marker: &[u8] = b"HTTP/1.1 200";
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    while buf.windows(marker.len()).filter(|w| *w == marker).count() < 2 {
+        let n = http.stream_mut().read(&mut tmp).unwrap();
+        assert!(n > 0, "connection closed after {} bytes", buf.len());
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    drop(handle);
+}
