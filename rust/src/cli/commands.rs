@@ -16,6 +16,7 @@ use crate::power::system_power;
 use crate::resources::{accelerator_resources, demonstrator_resources};
 use crate::serve::{ServeConfig, Server};
 use crate::tarch::Tarch;
+use crate::trace::TraceHub;
 use crate::tcompiler::compile;
 use crate::util::tensorio::read_tensor;
 use crate::util::Prng;
@@ -88,6 +89,15 @@ pub fn demo(args: &Args) -> Result<i32> {
         .artifacts(artifacts_dir(args))
         .backend(BackendKind::parse(backend_kind)?)
         .tarch(tarch.clone());
+    if args.has("synthetic") {
+        // run without artifacts (same knobs as `pack --synthetic`)
+        let spec = BackboneSpec {
+            image_size: args.get_usize("image-size", 32)?,
+            feature_maps: args.get_usize("fm", 16)?,
+            ..BackboneSpec::headline()
+        };
+        builder = builder.graph(spec.build_graph(args.get_u64("seed", 7)?)?);
+    }
     if let Some(n) = args.get("workers") {
         let n: usize =
             n.parse().map_err(|_| anyhow::anyhow!("--workers expects an integer, got '{n}'"))?;
@@ -102,8 +112,18 @@ pub fn demo(args: &Args) -> Result<i32> {
     };
     let sink = if args.has("quiet") { DisplaySink::Null } else { DisplaySink::Stderr { stride: 8 } };
 
+    // --trace-out: trace every frame and export a Chrome trace at the end
+    let trace = args.get("trace-out").map(|p| (p.to_string(), Arc::new(TraceHub::new(1))));
     let mut demo = Demonstrator::new(cfg, engine, sink);
+    if let Some((_, hub)) = &trace {
+        demo = demo.with_trace(Arc::clone(hub));
+    }
     let report = demo.run_scripted(shots, frames)?;
+    if let Some((path, hub)) = &trace {
+        let traces = hub.recent(usize::MAX);
+        crate::trace::chrome::export_file(&traces, path)?;
+        eprintln!("wrote {} frame trace(s) to {path} (load in chrome://tracing)", traces.len());
+    }
 
     println!(
         "demo[{}]: frames={} modeled_fps={:.1} inference={:.2}ms host_p50={:.0}µs \
@@ -741,10 +761,17 @@ pub fn serve_cmd(args: &Args) -> Result<i32> {
         eprintln!("no bundles deployed at startup; use POST /admin/deploy to add models");
     }
 
+    // --trace-out implies sampling every request unless --trace-sample says otherwise
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let default_sample = u64::from(trace_out.is_some());
+    let trace_sample = u32::try_from(args.get_u64("trace-sample", default_sample)?)
+        .map_err(|_| anyhow::anyhow!("--trace-sample is out of range"))?;
+
     let cfg = ServeConfig {
         queue_depth: args.get_usize("queue-depth", 32)?,
         idle_session: std::time::Duration::from_secs(args.get_u64("idle-timeout", 300)?),
         admin_token: args.get("admin-token").map(str::to_string),
+        trace_sample,
         ..ServeConfig::default()
     };
     let handle = Server::start(Arc::clone(&registry), &addr, cfg)?;
@@ -754,8 +781,14 @@ pub fn serve_cmd(args: &Args) -> Result<i32> {
         std::fs::write(path, handle.addr().to_string())
             .with_context(|| format!("write --addr-file {path}"))?;
     }
+    let trace_hub = handle.trace_hub();
     handle.join()?;
     println!("pefsl serve: drained and stopped");
+    if let Some(path) = trace_out {
+        let traces = trace_hub.recent(usize::MAX);
+        crate::trace::chrome::export_file(&traces, &path)?;
+        eprintln!("wrote {} request trace(s) to {path} (load in chrome://tracing)", traces.len());
+    }
     Ok(0)
 }
 

@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! pefsl demo       --frames 64 --tarch z7020-12x12 [--backend sim|pjrt]
+//!                  [--synthetic [--image-size N --fm N]] [--trace-out FILE]
 //! pefsl dse        --test-size 32 [--tarch NAME] [--json PATH]
 //! pefsl quant      --bits 4,8,12,16 [--percentile P] [--episodes N] [--json PATH]
 //! pefsl mixed      --widths 4,6,8,12,16 [--steps N] [--max-drop D] [--no-memoize]
@@ -13,6 +14,7 @@
 //! pefsl serve      --addr HOST:PORT [--bundle DIR | --dir ROOT] [--name N]
 //!                  [--workers N --queue-depth N --idle-timeout S]
 //!                  [--admin-token T --addr-file PATH]
+//!                  [--trace-sample N --trace-out FILE]
 //! pefsl models     [--dir DIR | --bundle DIR] [--check] [--json [PATH]]
 //! pefsl compile    [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl simulate   [--graph PATH --weights PATH] [--tarch NAME]
@@ -126,7 +128,11 @@ pub fn usage() -> String {
      \x20 --queue-depth N    serve: per-model admission budget before 429 (default 32)\n\
      \x20 --idle-timeout S   serve: session idle-expiry seconds (default 300)\n\
      \x20 --admin-token T    serve: require T in x-pefsl-admin for /admin endpoints\n\
-     \x20 --addr-file PATH   serve: write the bound address to PATH at startup\n"
+     \x20 --addr-file PATH   serve: write the bound address to PATH at startup\n\
+     \x20 --trace-sample N   serve: trace every Nth request (0 = only x-pefsl-trace)\n\
+     \x20 --trace-out FILE   serve/demo: write a Chrome trace (chrome://tracing) on exit;\n\
+     \x20                    serve implies --trace-sample 1 unless given\n\
+     \x20 --synthetic        demo: synthetic backbone instead of artifacts (as pack)\n"
         .to_string()
 }
 
@@ -257,6 +263,32 @@ mod tests {
             0
         );
         assert_eq!(run(&sv(&["verify", "--bundle", &out])).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn demo_synthetic_writes_chrome_trace() {
+        let dir = std::env::temp_dir().join(format!("pefsl_cli_demo_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("trace.json").display().to_string();
+        assert_eq!(
+            run(&sv(&[
+                "demo", "--synthetic", "--image-size", "16", "--fm", "4", "--tarch", "z7020-8x8",
+                "--frames", "4", "--shots", "1", "--quiet", "--trace-out", &out,
+            ]))
+            .unwrap(),
+            0
+        );
+        // the exported file is valid Chrome-trace JSON with per-frame lanes
+        let v = crate::json::from_file(&out).unwrap();
+        let evs = v.as_arr().unwrap();
+        assert!(!evs.is_empty());
+        let frames = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(crate::json::Value::as_str) == Some("request"))
+            .count();
+        assert_eq!(frames, 4);
         std::fs::remove_dir_all(&dir).ok();
     }
 

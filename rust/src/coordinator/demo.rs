@@ -17,10 +17,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::{Engine, Session};
+use crate::engine::{Engine, InferRequest, Session};
 use crate::metrics::{Counters, LatencyStats};
 use crate::power::system_power;
 use crate::tarch::Tarch;
+use crate::trace::{TraceHub, TraceSink, Tracer};
 use crate::video::{CameraConfig, DisplaySink, Hud, Preprocessor, SyntheticCamera};
 
 use super::system_model::SystemModel;
@@ -98,6 +99,9 @@ pub struct Demonstrator {
     judged: u64,
     /// scene id → enrolled class idx (ground-truth mapping for accuracy).
     scene_to_class: Vec<Option<usize>>,
+    /// Optional frame tracing: the hub (sampling policy) and this
+    /// demonstrator's submission sink.
+    trace: Option<(Arc<TraceHub>, TraceSink)>,
 }
 
 impl Demonstrator {
@@ -119,7 +123,18 @@ impl Demonstrator {
             hits: 0,
             judged: 0,
             scene_to_class: vec![None; n_scenes],
+            trace: None,
         }
+    }
+
+    /// Trace frames into `hub` (per its sampling policy): each traced
+    /// [`Demonstrator::step`] becomes one `demo`/`frame` request trace
+    /// with capture / preprocess / engine (+ per-layer rows) / NCM / HUD
+    /// spans, exportable via [`crate::trace::chrome::export`].
+    pub fn with_trace(mut self, hub: Arc<TraceHub>) -> Demonstrator {
+        let sink = hub.register();
+        self.trace = Some((hub, sink));
+        self
     }
 
     /// Handle one control command.
@@ -157,17 +172,36 @@ impl Demonstrator {
     /// Process one classification frame.
     pub fn step(&mut self) -> Result<()> {
         let t0 = Instant::now();
+        let mut tr = match &self.trace {
+            Some((hub, _)) => hub.begin(None),
+            None => Tracer::off(),
+        };
+        let cap_t0 = tr.start();
         let frame = self.camera.capture();
         self.counters.frames_in += 1;
+        tr.add("capture", cap_t0);
+        let pre_t0 = tr.start();
         let x = self.pre.run(&frame);
-        let item = self.session.extract(&x)?;
+        tr.add("preprocess", pre_t0);
+        let engine_t0 = tr.start();
+        let item = if tr.on() {
+            // Traced split of `Session::extract`: same engine the session
+            // is pinned to, so the features are bit-identical.
+            let resp = self.engine.infer(InferRequest::single(x).with_spans(true))?;
+            resp.trace_into(&mut tr, engine_t0, self.engine.info().layer_names.as_deref());
+            resp.into_single()?
+        } else {
+            self.session.extract(&x)?
+        };
         self.counters.inferences += 1;
 
         let accel_ms = item.metrics.modeled_latency_ms.unwrap_or(0.0);
         self.accel_ms.push(accel_ms);
 
         let (pred_label, confidence) = if self.session.has_enrolled() {
+            let ncm_t0 = tr.start();
             let p = self.session.classify_feature(&item.features)?;
+            tr.add("ncm/classify", ncm_t0);
             if let Some(want) = self.scene_to_class[frame.scene] {
                 self.judged += 1;
                 if p.class_idx == want {
@@ -185,6 +219,7 @@ impl Demonstrator {
         self.host_lat.record(t0.elapsed());
         self.counters.frames_out += 1;
 
+        let hud_t0 = tr.start();
         let m = &self.cfg.system;
         let cam_px = self.cfg.camera.w * self.cfg.camera.h;
         let tgt_px = self.cfg.input_size * self.cfg.input_size;
@@ -207,6 +242,12 @@ impl Demonstrator {
             mode: if self.session.has_enrolled() { "classify" } else { "idle" }.into(),
         };
         self.sink.present(&hud);
+        tr.add("hud", hud_t0);
+        if let Some(t) = tr.finish("demo", "frame", 200) {
+            if let Some((_, sink)) = &self.trace {
+                sink.submit(t);
+            }
+        }
         Ok(())
     }
 
@@ -377,6 +418,37 @@ mod tests {
         ];
         let report = run_threaded(demo, script).unwrap();
         assert!(report.counters.enrollments >= 1);
+    }
+
+    #[test]
+    fn traced_demo_records_frame_traces() {
+        let hub = Arc::new(TraceHub::new(1));
+        let tarch = Tarch::z7020_8x8();
+        let engine = tiny_engine(16, 4, &tarch);
+        let cfg = DemoConfig {
+            camera: CameraConfig { n_scenes: 2, seed: 7, ..Default::default() },
+            input_size: 16,
+            tarch,
+            max_frames: 0,
+            ..Default::default()
+        };
+        let mut demo =
+            Demonstrator::new(cfg, engine, DisplaySink::Null).with_trace(Arc::clone(&hub));
+        let report = demo.run_scripted(1, 5).unwrap();
+        assert_eq!(report.frames, 5);
+        assert!(report.accuracy.is_some()); // traced path still feeds NCM + accuracy
+        let traces = hub.recent(16);
+        assert_eq!(traces.len(), 5);
+        for t in &traces {
+            assert_eq!(t.model, "demo");
+            assert_eq!(t.endpoint, "frame");
+            let names: Vec<&str> = t.spans.iter().map(|s| s.name).collect();
+            for want in ["capture", "preprocess", "engine", "ncm/classify", "hud"] {
+                assert!(names.contains(&want), "missing {want} in {names:?}");
+            }
+            // per-layer rows with modeled cycles rode along
+            assert!(t.spans.iter().any(|s| s.name == "layer" && s.cycles.is_some()));
+        }
     }
 
     #[test]

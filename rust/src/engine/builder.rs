@@ -182,6 +182,7 @@ impl EngineBuilder {
                     tarch_name: Some(tarch.name.clone()),
                     quant: None,
                     workers: n,
+                    layer_names: Some(program.layers.iter().map(|l| l.name.clone()).collect()),
                 };
                 Engine::new(SimWorker::pool(program, graph, n), info)
             }

@@ -80,8 +80,8 @@ mod session;
 mod workers;
 
 pub use builder::{resolve_artifacts_dir, BackendKind, EngineBuilder};
-pub use registry::{ModelInfo, Registry};
-pub use request::{InferItem, InferMetrics, InferRequest, InferResponse};
+pub use registry::{DeployReport, ModelInfo, Registry};
+pub use request::{InferItem, InferMetrics, InferRequest, InferResponse, LayerSpan};
 pub use session::{ClassSnapshot, Session, SessionSnapshot};
 
 use std::sync::Mutex;
@@ -114,6 +114,10 @@ pub struct EngineInfo {
     pub quant: Option<QuantConfig>,
     /// Worker-pool size: how many backend instances serve in parallel.
     pub workers: usize,
+    /// Backbone layer names, in execution order (sim backend only) —
+    /// lets trace consumers label [`request::LayerSpan`] rows without
+    /// reaching into the compiled program.
+    pub layer_names: Option<Vec<String>>,
 }
 
 /// Cumulative service counters (snapshot via [`Engine::stats`]).
@@ -204,6 +208,7 @@ impl Engine {
             tarch_name: None,
             quant: None,
             workers: 1,
+            layer_names: None,
         };
         Engine::new(vec![Box::new(workers::PjrtWorker::new(exe, input_dims, feature_dim))], info)
     }
@@ -228,9 +233,12 @@ impl Engine {
         }
         // The pool fans the batch across its workers (scoped threads) and
         // returns items in request order with host timing attributed.
-        let mut items = self.pool.infer_batch(request.images())?;
+        let record_spans = request.record_spans();
+        let mut items = self.pool.infer_batch(request.images(), record_spans)?;
 
+        let mut quant_us = None;
         if let Some(q) = &self.quant {
+            let quant_t0 = record_spans.then(std::time::Instant::now);
             let mut st = q.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             // Observe the whole request first, then quantize every item
             // under ONE format: a response never mixes formats (so
@@ -250,6 +258,7 @@ impl Engine {
             for item in &mut items {
                 item.qfeatures = Some(QTensor::quantize(&item.features, fmt));
             }
+            quant_us = quant_t0.map(|t| t.elapsed().as_secs_f64() * 1e6);
         }
 
         let mut stats = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -261,7 +270,7 @@ impl Engine {
         }
         drop(stats);
 
-        Ok(InferResponse { items })
+        Ok(InferResponse { items, quant_us })
     }
 
     /// Backend kind: `"sim"` or `"pjrt"`.

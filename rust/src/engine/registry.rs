@@ -69,6 +69,17 @@ impl ModelInfo {
     }
 }
 
+/// Outcome of one bundle deploy: the generation installed plus where the
+/// control-plane time went ([`Registry::deploy_report`]).
+#[derive(Clone, Copy, Debug)]
+pub struct DeployReport {
+    pub generation: u64,
+    /// Golden-frame verification time, ms.
+    pub verify_ms: f64,
+    /// Engine compilation/build time, ms.
+    pub build_ms: f64,
+}
+
 /// A hot-swappable multi-model registry over the engine pool.
 #[derive(Default)]
 pub struct Registry {
@@ -107,16 +118,33 @@ impl Registry {
         bundle: &Bundle,
         workers: Option<usize>,
     ) -> Result<u64> {
+        Ok(self.deploy_report(name, bundle, workers)?.generation)
+    }
+
+    /// [`Registry::deploy_with`], additionally reporting how long the
+    /// golden-frame verification and the engine build took — the numbers
+    /// the serve layer journals for every hot-swap.
+    pub fn deploy_report(
+        &self,
+        name: impl Into<String>,
+        bundle: &Bundle,
+        workers: Option<usize>,
+    ) -> Result<DeployReport> {
         let name = name.into();
+        let t0 = std::time::Instant::now();
         bundle.verify().with_context(|| {
             format!("bundle '{}@{}' failed verification; not deployed", bundle.name, bundle.version)
         })?;
+        let verify_ms = t0.elapsed().as_secs_f64() * 1e3;
         let mut builder = bundle.engine_builder();
         if let Some(n) = workers {
             builder = builder.workers(n);
         }
+        let t1 = std::time::Instant::now();
         let engine = Arc::new(builder.build()?);
-        Ok(self.install(name, bundle.version.clone(), engine))
+        let build_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let generation = self.install(name, bundle.version.clone(), engine);
+        Ok(DeployReport { generation, verify_ms, build_ms })
     }
 
     /// Deploy an already-built engine (tests, custom builds) — same atomic

@@ -16,17 +16,31 @@ use crate::quant::QTensor;
 #[derive(Clone, Debug, Default)]
 pub struct InferRequest {
     images: Vec<Vec<f32>>,
+    record_spans: bool,
 }
 
 impl InferRequest {
     /// Request for a single image.
     pub fn single(image: Vec<f32>) -> InferRequest {
-        InferRequest { images: vec![image] }
+        InferRequest { images: vec![image], record_spans: false }
     }
 
     /// Request for a batch of images (one response item per image, in order).
     pub fn batch(images: Vec<Vec<f32>>) -> InferRequest {
-        InferRequest { images }
+        InferRequest { images, record_spans: false }
+    }
+
+    /// Ask the engine to attach per-layer/per-worker profiling spans to
+    /// the response items ([`InferItem::layer_spans`] and friends).
+    /// Costs one small allocation per item when on; free when off.
+    pub fn with_spans(mut self, record: bool) -> InferRequest {
+        self.record_spans = record;
+        self
+    }
+
+    /// Whether profiling spans were requested.
+    pub fn record_spans(&self) -> bool {
+        self.record_spans
     }
 
     /// Append one image to the batch.
@@ -66,6 +80,17 @@ pub struct InferMetrics {
     pub host_us: f64,
 }
 
+/// One per-layer profiling row: wall time measured around the layer's
+/// execution plus the modeled cycles it accrued. Offsets are µs relative
+/// to the start of this item's compute on its worker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerSpan {
+    pub layer: u32,
+    pub t0_us: f64,
+    pub dur_us: f64,
+    pub cycles: u64,
+}
+
 /// One inference result: the feature vector plus its metrics.
 #[derive(Clone, Debug)]
 pub struct InferItem {
@@ -75,6 +100,21 @@ pub struct InferItem {
     /// format is the engine's calibrated (or explicit) feature format.
     pub qfeatures: Option<QTensor>,
     pub metrics: InferMetrics,
+    /// Per-layer profiling rows — only when the request asked for spans
+    /// ([`InferRequest::with_spans`]) and the backend supports them.
+    pub layer_spans: Option<Vec<LayerSpan>>,
+    /// Worker-pool slot that computed this item (spans only).
+    pub worker: Option<u32>,
+    /// Queue delay between batch dispatch and this item's compute
+    /// starting on its worker, µs (spans only).
+    pub dispatch_us: Option<f64>,
+}
+
+impl InferItem {
+    /// An item with no profiling spans attached (the common case).
+    pub fn new(features: Vec<f32>, qfeatures: Option<QTensor>, metrics: InferMetrics) -> InferItem {
+        InferItem { features, qfeatures, metrics, layer_spans: None, worker: None, dispatch_us: None }
+    }
 }
 
 /// Response to an [`InferRequest`]: one [`InferItem`] per request image,
@@ -82,9 +122,18 @@ pub struct InferItem {
 #[derive(Clone, Debug)]
 pub struct InferResponse {
     pub items: Vec<InferItem>,
+    /// Wall time spent requantizing features at the engine boundary, µs
+    /// — only measured when the request asked for spans and the engine
+    /// runs a quantization config.
+    pub quant_us: Option<f64>,
 }
 
 impl InferResponse {
+    /// A response carrying `items` and no profiling data.
+    pub fn new(items: Vec<InferItem>) -> InferResponse {
+        InferResponse { items, quant_us: None }
+    }
+
     /// Consume a response that must contain exactly one item.
     pub fn into_single(self) -> Result<InferItem> {
         if self.items.len() != 1 {
@@ -130,6 +179,54 @@ impl InferResponse {
         }
         Some(first)
     }
+
+    /// Record this response's profiling data into a [`Tracer`]:
+    /// an `"engine"` span covering `[engine_t0, now]` with total modeled
+    /// cycles, a `"dispatch"` span per item (queue delay + worker slot),
+    /// a `"layer"` row per backbone layer (wall time + cycles, labeled
+    /// from `layer_names`), and a `"requant"` span for the boundary
+    /// feature quantization. Call immediately after
+    /// [`super::Engine::infer`] returns, passing the instant the call
+    /// started; a disabled tracer makes this a no-op.
+    pub fn trace_into(
+        &self,
+        tr: &mut crate::trace::Tracer,
+        engine_t0: std::time::Instant,
+        layer_names: Option<&[String]>,
+    ) {
+        use crate::trace::Span;
+        if !tr.on() {
+            return;
+        }
+        let base = tr.offset_us(engine_t0);
+        let end = tr.offset_us(std::time::Instant::now());
+        let mut engine = Span::new("engine", base, end - base);
+        engine.cycles = self.total_cycles();
+        tr.add_span(engine);
+        for item in &self.items {
+            let dispatch = item.dispatch_us.unwrap_or(0.0);
+            if let (Some(w), Some(d)) = (item.worker, item.dispatch_us) {
+                let mut sp = Span::new("dispatch", base, d);
+                sp.worker = Some(w);
+                tr.add_span(sp);
+            }
+            if let Some(rows) = &item.layer_spans {
+                for r in rows {
+                    let mut sp = Span::new("layer", base + dispatch + r.t0_us, r.dur_us);
+                    sp.layer = Some(r.layer);
+                    sp.cycles = Some(r.cycles);
+                    sp.worker = item.worker;
+                    sp.detail = layer_names.and_then(|n| n.get(r.layer as usize)).cloned();
+                    tr.add_span(sp);
+                }
+            }
+        }
+        if let Some(q) = self.quant_us {
+            // requantization runs last inside the engine call, so it ends
+            // where the engine span ends
+            tr.add_span(Span::new("requant", (end - q).max(base), q));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -137,11 +234,11 @@ mod tests {
     use super::*;
 
     fn item(lat: Option<f64>, cycles: Option<u64>) -> InferItem {
-        InferItem {
-            features: vec![0.0],
-            qfeatures: None,
-            metrics: InferMetrics { modeled_latency_ms: lat, cycles, host_us: 1.0 },
-        }
+        InferItem::new(
+            vec![0.0],
+            None,
+            InferMetrics { modeled_latency_ms: lat, cycles, host_us: 1.0 },
+        )
     }
 
     #[test]
@@ -158,38 +255,36 @@ mod tests {
 
     #[test]
     fn into_single_enforces_arity() {
-        let one = InferResponse { items: vec![item(None, None)] };
+        let one = InferResponse::new(vec![item(None, None)]);
         assert!(one.into_single().is_ok());
-        let two = InferResponse { items: vec![item(None, None), item(None, None)] };
+        let two = InferResponse::new(vec![item(None, None), item(None, None)]);
         assert!(two.into_single().is_err());
     }
 
     #[test]
     fn feature_format_requires_uniform_quantized_items() {
         let fmt = QFormat::new(8, 4);
-        let quantized = |f: QFormat| InferItem {
-            features: vec![0.5],
-            qfeatures: Some(QTensor::quantize(&[0.5], f)),
-            metrics: InferMetrics::default(),
+        let quantized = |f: QFormat| {
+            InferItem::new(vec![0.5], Some(QTensor::quantize(&[0.5], f)), InferMetrics::default())
         };
-        let r = InferResponse { items: vec![quantized(fmt), quantized(fmt)] };
+        let r = InferResponse::new(vec![quantized(fmt), quantized(fmt)]);
         assert_eq!(r.feature_format(), Some(fmt));
-        let mixed = InferResponse { items: vec![quantized(fmt), item(None, None)] };
+        let mixed = InferResponse::new(vec![quantized(fmt), item(None, None)]);
         assert_eq!(mixed.feature_format(), None);
-        let ragged = InferResponse { items: vec![quantized(fmt), quantized(QFormat::new(8, 5))] };
+        let ragged = InferResponse::new(vec![quantized(fmt), quantized(QFormat::new(8, 5))]);
         assert_eq!(ragged.feature_format(), None);
-        assert_eq!(InferResponse { items: vec![] }.feature_format(), None);
-        assert_eq!(InferResponse { items: vec![item(None, None)] }.feature_format(), None);
+        assert_eq!(InferResponse::new(vec![]).feature_format(), None);
+        assert_eq!(InferResponse::new(vec![item(None, None)]).feature_format(), None);
     }
 
     #[test]
     fn aggregates() {
-        let r = InferResponse { items: vec![item(Some(2.0), Some(10)), item(Some(4.0), Some(30))] };
+        let r = InferResponse::new(vec![item(Some(2.0), Some(10)), item(Some(4.0), Some(30))]);
         assert_eq!(r.mean_modeled_latency_ms(), Some(3.0));
         assert_eq!(r.total_cycles(), Some(40));
-        let mixed = InferResponse { items: vec![item(Some(2.0), Some(10)), item(None, None)] };
+        let mixed = InferResponse::new(vec![item(Some(2.0), Some(10)), item(None, None)]);
         assert_eq!(mixed.mean_modeled_latency_ms(), None);
         assert_eq!(mixed.total_cycles(), None);
-        assert_eq!(InferResponse { items: vec![] }.mean_modeled_latency_ms(), None);
+        assert_eq!(InferResponse::new(vec![]).mean_modeled_latency_ms(), None);
     }
 }

@@ -25,13 +25,15 @@ use crate::runtime::Executable;
 use crate::sim::Simulator;
 use crate::tcompiler::Program;
 
-use super::request::{InferItem, InferMetrics};
+use super::request::{InferItem, InferMetrics, LayerSpan};
 
 /// One backend inference unit. `&mut self` because workers keep reusable
 /// scratch state (the simulator's activation buffers); the [`WorkerPool`]
-/// serializes access per slot behind its lock.
+/// serializes access per slot behind its lock. `record_spans` asks the
+/// worker to attach per-layer profiling rows when it can; workers without
+/// a layer model (PJRT) ignore it.
 pub(crate) trait InferWorker: Send {
-    fn infer_one(&mut self, image: &[f32]) -> Result<InferItem>;
+    fn infer_one(&mut self, image: &[f32], record_spans: bool) -> Result<InferItem>;
 }
 
 /// N workers behind N independent locks — the engine's execution substrate.
@@ -59,12 +61,16 @@ impl WorkerPool {
     /// requests (and single-worker pools) stay on the calling thread; a
     /// batch fans out across `min(workers, images)` scoped threads, each
     /// striding the batch so the split is deterministic.
-    pub(crate) fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<InferItem>> {
+    pub(crate) fn infer_batch(&self, images: &[Vec<f32>], record_spans: bool) -> Result<Vec<InferItem>> {
+        let batch_t0 = Instant::now();
         let lanes = self.slots.len().min(images.len());
         if lanes <= 1 {
-            let slot = &self.slots[self.rotor.fetch_add(1, Ordering::Relaxed) % self.slots.len()];
-            let mut w = slot.lock().unwrap_or_else(PoisonError::into_inner);
-            return images.iter().map(|img| timed_infer(w.as_mut(), img)).collect();
+            let slot_idx = self.rotor.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+            let mut w = self.slots[slot_idx].lock().unwrap_or_else(PoisonError::into_inner);
+            return images
+                .iter()
+                .map(|img| timed_infer(w.as_mut(), img, record_spans, slot_idx, batch_t0))
+                .collect();
         }
         let results: Vec<Result<Vec<(usize, InferItem)>>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..lanes)
@@ -78,7 +84,10 @@ impl WorkerPool {
                         let mut out = Vec::new();
                         let mut i = lane;
                         while i < images.len() {
-                            out.push((i, timed_infer(w.as_mut(), &images[i])?));
+                            out.push((
+                                i,
+                                timed_infer(w.as_mut(), &images[i], record_spans, lane, batch_t0)?,
+                            ));
                             i += lanes;
                         }
                         Ok(out)
@@ -97,11 +106,23 @@ impl WorkerPool {
     }
 }
 
-/// One inference with host wall-clock attribution.
-fn timed_infer(w: &mut dyn InferWorker, image: &[f32]) -> Result<InferItem> {
+/// One inference with host wall-clock attribution; when spans were
+/// requested, also records which slot ran the item and how long it sat
+/// between batch dispatch and compute start.
+fn timed_infer(
+    w: &mut dyn InferWorker,
+    image: &[f32],
+    record_spans: bool,
+    slot: usize,
+    batch_t0: Instant,
+) -> Result<InferItem> {
     let t0 = Instant::now();
-    let mut item = w.infer_one(image)?;
+    let mut item = w.infer_one(image, record_spans)?;
     item.metrics.host_us = t0.elapsed().as_secs_f64() * 1e6;
+    if record_spans {
+        item.worker = Some(slot as u32);
+        item.dispatch_us = Some(t0.duration_since(batch_t0).as_secs_f64() * 1e6);
+    }
     Ok(item)
 }
 
@@ -149,18 +170,52 @@ impl SimWorker {
     }
 }
 
+/// [`crate::sim::SpanSink`] that turns per-layer records into
+/// [`LayerSpan`] rows. Layers run sequentially on one worker, so a row's
+/// start offset is simply "elapsed so far minus this layer's duration".
+struct LayerSpanSink {
+    t0: Instant,
+    spans: Vec<LayerSpan>,
+}
+
+impl crate::sim::SpanSink for LayerSpanSink {
+    fn record_layer(&mut self, layer: usize, wall_ns: u64, cycles: u64) {
+        let end_us = self.t0.elapsed().as_secs_f64() * 1e6;
+        let dur_us = wall_ns as f64 / 1e3;
+        self.spans.push(LayerSpan {
+            layer: layer as u32,
+            t0_us: (end_us - dur_us).max(0.0),
+            dur_us,
+            cycles,
+        });
+    }
+}
+
 impl InferWorker for SimWorker {
-    fn infer_one(&mut self, image: &[f32]) -> Result<InferItem> {
-        let r = self.sim.run_f32(image)?;
-        Ok(InferItem {
-            features: r.output_f32,
-            qfeatures: None, // feature quantization happens in the engine
-            metrics: InferMetrics {
+    fn infer_one(&mut self, image: &[f32], record_spans: bool) -> Result<InferItem> {
+        let (r, layer_spans) = if record_spans {
+            // the only tracing allocation on the whole sim path: one Vec
+            // per *traced* item, bounded by the sampling rate
+            let mut sink = LayerSpanSink {
+                t0: Instant::now(),
+                spans: Vec::with_capacity(self._program.layers.len()),
+            };
+            let r = self.sim.run_f32_traced(image, &mut sink)?;
+            (r, Some(sink.spans))
+        } else {
+            (self.sim.run_f32(image)?, None)
+        };
+        let mut item = InferItem::new(
+            r.output_f32,
+            None, // feature quantization happens in the engine
+            InferMetrics {
                 modeled_latency_ms: Some(r.latency_ms),
                 cycles: Some(r.cycles),
                 host_us: 0.0,
             },
-        })
+        );
+        item.layer_spans = layer_spans;
+        Ok(item)
     }
 }
 
@@ -178,7 +233,9 @@ impl PjrtWorker {
 }
 
 impl InferWorker for PjrtWorker {
-    fn infer_one(&mut self, image: &[f32]) -> Result<InferItem> {
+    // PJRT has no per-layer hardware model, so `record_spans` has nothing
+    // to attach here; dispatch/worker attribution still happens in the pool.
+    fn infer_one(&mut self, image: &[f32], _record_spans: bool) -> Result<InferItem> {
         let outs = self.exe.run_f32(&[(image, &self.input_dims)])?;
         // An executable yielding no outputs is a malformed artifact, not an
         // empty feature vector (the old backend silently returned `vec![]`).
@@ -194,11 +251,11 @@ impl InferWorker for PjrtWorker {
                 self.feature_dim
             );
         }
-        Ok(InferItem {
+        Ok(InferItem::new(
             features,
-            qfeatures: None, // feature quantization happens in the engine
-            metrics: InferMetrics { modeled_latency_ms: None, cycles: None, host_us: 0.0 },
-        })
+            None, // feature quantization happens in the engine
+            InferMetrics { modeled_latency_ms: None, cycles: None, host_us: 0.0 },
+        ))
     }
 }
 
@@ -225,11 +282,12 @@ mod tests {
     fn sim_worker_reuse_is_deterministic() {
         let mut w = sim_worker();
         let x = vec![0.4; 16 * 16 * 3];
-        let a = w.infer_one(&x).unwrap();
-        let b = w.infer_one(&x).unwrap();
+        let a = w.infer_one(&x, false).unwrap();
+        let b = w.infer_one(&x, false).unwrap();
         assert_eq!(a.features, b.features);
         assert_eq!(a.metrics.cycles, b.metrics.cycles);
         assert!(a.metrics.modeled_latency_ms.unwrap() > 0.0);
+        assert!(a.layer_spans.is_none(), "spans must be off by default");
     }
 
     #[test]
@@ -238,16 +296,35 @@ mod tests {
         // stable even though the box pointers relocate).
         let mut w = sim_worker();
         let x = vec![0.25; 16 * 16 * 3];
-        let before = w.infer_one(&x).unwrap();
+        let before = w.infer_one(&x, false).unwrap();
         let boxed: Box<SimWorker> = Box::new(w);
         let mut w2 = *boxed;
-        assert_eq!(w2.infer_one(&x).unwrap().features, before.features);
+        assert_eq!(w2.infer_one(&x, false).unwrap().features, before.features);
     }
 
     #[test]
     fn sim_worker_rejects_bad_input_len() {
         let mut w = sim_worker();
-        assert!(w.infer_one(&[0.0; 7]).is_err());
+        assert!(w.infer_one(&[0.0; 7], false).is_err());
+    }
+
+    #[test]
+    fn sim_worker_spans_are_bit_exact_and_account_all_cycles() {
+        let mut w = sim_worker();
+        let x = vec![0.4; 16 * 16 * 3];
+        let plain = w.infer_one(&x, false).unwrap();
+        let traced = w.infer_one(&x, true).unwrap();
+        assert_eq!(traced.features, plain.features, "tracing must not change results");
+        assert_eq!(traced.metrics.cycles, plain.metrics.cycles);
+        let spans = traced.layer_spans.expect("traced item carries layer spans");
+        assert!(!spans.is_empty());
+        // rows are in layer order, durations non-negative, and modeled
+        // cycles add back up to the item total exactly
+        for (i, s) in spans.iter().enumerate() {
+            assert_eq!(s.layer as usize, i);
+            assert!(s.dur_us >= 0.0 && s.t0_us >= 0.0);
+        }
+        assert_eq!(spans.iter().map(|s| s.cycles).sum::<u64>(), plain.metrics.cycles.unwrap());
     }
 
     #[test]
@@ -257,14 +334,29 @@ mod tests {
         assert_eq!(pool.size(), 3);
         let images: Vec<Vec<f32>> =
             (0..7).map(|i| vec![0.1 + 0.1 * i as f32; 16 * 16 * 3]).collect();
-        let fanned = pool.infer_batch(&images).unwrap();
+        let fanned = pool.infer_batch(&images, false).unwrap();
         assert_eq!(fanned.len(), 7);
         // serial single-image calls give exactly the same features, in order
         for (i, img) in images.iter().enumerate() {
-            let serial = pool.infer_batch(std::slice::from_ref(img)).unwrap();
+            let serial = pool.infer_batch(std::slice::from_ref(img), false).unwrap();
             assert_eq!(serial[0].features, fanned[i].features, "item {i}");
             assert_eq!(serial[0].metrics.cycles, fanned[i].metrics.cycles);
             assert!(fanned[i].metrics.host_us > 0.0, "host timing missing on item {i}");
+            assert!(fanned[i].worker.is_none(), "untraced items carry no attribution");
+        }
+    }
+
+    #[test]
+    fn pool_attributes_workers_and_dispatch_when_traced() {
+        let (p, g) = compiled();
+        let pool = WorkerPool::new(SimWorker::pool(p, g, 2));
+        let images: Vec<Vec<f32>> = (0..4).map(|i| vec![0.1 * i as f32; 16 * 16 * 3]).collect();
+        let items = pool.infer_batch(&images, true).unwrap();
+        for (i, item) in items.iter().enumerate() {
+            // 2 lanes striding 4 images: item i ran on slot i % 2
+            assert_eq!(item.worker, Some((i % 2) as u32), "item {i}");
+            assert!(item.dispatch_us.unwrap() >= 0.0);
+            assert!(item.layer_spans.is_some());
         }
     }
 
@@ -273,6 +365,6 @@ mod tests {
         let (p, g) = compiled();
         let pool = WorkerPool::new(SimWorker::pool(p, g, 2));
         let images = vec![vec![0.2; 16 * 16 * 3], vec![0.0; 3]];
-        assert!(pool.infer_batch(&images).is_err());
+        assert!(pool.infer_batch(&images, false).is_err());
     }
 }

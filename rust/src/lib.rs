@@ -38,6 +38,14 @@
 //!     admission (`429` + `Retry-After` from observed p95), token-addressed
 //!     sessions with idle expiry, per-endpoint metrics on `/metrics`, and
 //!     graceful drain-on-shutdown (`pefsl serve`);
+//!   - **`trace` — request tracing + operational journal**: per-request
+//!     span traces ([`trace::Tracer`]) with per-layer engine rows,
+//!     sampled or forced via the `x-pefsl-trace` header, drained from
+//!     per-thread rings ([`trace::TraceHub`]) at `/debug/trace`; a
+//!     bounded event journal ([`trace::EventJournal`]) of deploys /
+//!     session churn / admission saturation at `/debug/events`; and a
+//!     Chrome `trace_event` exporter ([`trace::chrome::export`]) behind
+//!     `--trace-out`;
 //!   - the demonstrator on top of the engine: `video`, `ncm`, `coordinator`
 //!     (frame loop + pipelined variant), `fewshot` (episodic evaluation),
 //!     `dse` and `cli`.
@@ -61,6 +69,7 @@ pub mod serve;
 pub mod sim;
 pub mod tarch;
 pub mod tcompiler;
+pub mod trace;
 pub mod util;
 pub mod video;
 

@@ -15,11 +15,12 @@
 //! panics (the connection loop catches the panic and answers 500, and the
 //! slot is not leaked).
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::metrics::{LatencySnapshot, LatencyStats};
+use crate::trace::EventJournal;
 
 use super::http::HttpError;
 
@@ -30,6 +31,11 @@ pub struct Admission {
     admitted: AtomicU64,
     rejected: AtomicU64,
     service: Mutex<LatencyStats>,
+    /// True while the gate is rejecting; used to journal saturation
+    /// *onsets* (one event per episode, not one per rejected request).
+    saturated: AtomicBool,
+    model: String,
+    journal: Option<Arc<EventJournal>>,
 }
 
 impl Admission {
@@ -40,7 +46,17 @@ impl Admission {
             admitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             service: Mutex::new(LatencyStats::new(256)),
+            saturated: AtomicBool::new(false),
+            model: String::new(),
+            journal: None,
         }
+    }
+
+    /// Journal saturation onsets/recoveries for `model` into `journal`.
+    pub fn with_journal(mut self, model: &str, journal: Arc<EventJournal>) -> Admission {
+        self.model = model.to_string();
+        self.journal = Some(journal);
+        self
     }
 
     /// Try to take a slot.  `Err` carries a ready-to-send `429` with
@@ -50,6 +66,15 @@ impl Admission {
         loop {
             if cur >= self.depth {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
+                if !self.saturated.swap(true, Ordering::Relaxed) {
+                    if let Some(j) = &self.journal {
+                        j.record(
+                            "admission_saturated",
+                            &self.model,
+                            format!("queue depth {} exhausted, rejecting with 429", self.depth),
+                        );
+                    }
+                }
                 return Err(HttpError::too_busy(
                     self.retry_after_s(),
                     format!(
@@ -66,6 +91,18 @@ impl Admission {
             ) {
                 Ok(_) => {
                     self.admitted.fetch_add(1, Ordering::Relaxed);
+                    // load-then-swap keeps the steady state write-free
+                    if self.saturated.load(Ordering::Relaxed)
+                        && self.saturated.swap(false, Ordering::Relaxed)
+                    {
+                        if let Some(j) = &self.journal {
+                            j.record(
+                                "admission_recovered",
+                                &self.model,
+                                "gate below capacity again, admitting requests",
+                            );
+                        }
+                    }
                     return Ok(Permit { gate: self, started: Instant::now() });
                 }
                 Err(seen) => cur = seen,
@@ -165,6 +202,21 @@ mod tests {
         assert_eq!(gate.depth(), 1);
         let _p = gate.try_acquire("m").unwrap();
         assert_eq!(gate.try_acquire("m").unwrap_err().status, 429);
+    }
+
+    #[test]
+    fn saturation_journaled_once_per_episode() {
+        let journal = Arc::new(EventJournal::new(16));
+        let gate = Admission::new(1).with_journal("m", Arc::clone(&journal));
+        let p = gate.try_acquire("m").unwrap();
+        // three rejects in one episode → a single onset event
+        for _ in 0..3 {
+            assert!(gate.try_acquire("m").is_err());
+        }
+        drop(p);
+        let _p = gate.try_acquire("m").unwrap();
+        let kinds: Vec<&str> = journal.recent(16).iter().rev().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec!["admission_saturated", "admission_recovered"]);
     }
 
     #[test]

@@ -92,6 +92,10 @@ pub struct Request {
     pub path: String,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// Wall time spent reading/parsing this request off the socket, µs
+    /// (from the first byte observed to the parse completing) — lets the
+    /// tracing layer back-date a trace to cover the HTTP read.
+    pub read_us: f64,
 }
 
 impl Request {
@@ -287,7 +291,8 @@ impl Conn {
         let body = self.buf[body_start..need].to_vec();
         // keep pipelined leftovers for the next request
         self.buf.drain(..need);
-        Ok(Received::Request(Request { method, path, headers, body }))
+        let read_us = started.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e6);
+        Ok(Received::Request(Request { method, path, headers, body, read_us }))
     }
 
     /// Write a response; errors are returned for the caller to treat as
@@ -306,17 +311,28 @@ pub struct Response {
     pub headers: Vec<(String, String)>,
     /// Close the connection after this response (`Connection: close`).
     pub close: bool,
+    /// Value of the `content-type` header (`application/json` for every
+    /// payload except the Prometheus `/metrics` exposition).
+    pub content_type: &'static str,
 }
 
 impl Response {
-    /// A JSON response (every `pefsl::serve` payload is JSON).
+    /// A JSON response (every `pefsl::serve` payload except the
+    /// Prometheus exposition is JSON).
     pub fn json(status: u16, v: &Value) -> Response {
         Response {
             status,
             body: json::to_string_pretty(v).into_bytes(),
             headers: Vec::new(),
             close: false,
+            content_type: "application/json",
         }
+    }
+
+    /// A plain-text response with an explicit content type (the
+    /// Prometheus text exposition).
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response { status, body: body.into_bytes(), headers: Vec::new(), close: false, content_type }
     }
 
     /// The uniform error payload: `{"status": s, "error": message}`.
@@ -345,9 +361,10 @@ impl Response {
     /// Serialize head + body onto a stream.
     pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
         let mut head = format!(
-            "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
             self.status,
             reason(self.status),
+            self.content_type,
             self.body.len()
         );
         for (k, v) in &self.headers {
@@ -412,6 +429,7 @@ mod tests {
             path: "/x".into(),
             headers: vec![("x-pefsl-token".into(), "t1".into())],
             body: b"{}".to_vec(),
+            read_us: 0.0,
         };
         assert_eq!(r.header("X-PEFSL-Token"), Some("t1"));
         assert_eq!(r.header("missing"), None);
@@ -425,6 +443,7 @@ mod tests {
             path: "/x".into(),
             headers: vec![],
             body: Vec::new(),
+            read_us: 0.0,
         };
         assert_eq!(r.json_body().unwrap_err().status, 400);
         r.body = b"{nope".to_vec();

@@ -18,8 +18,14 @@
 //!   with idle-expiry eviction; sessions pin the engine current at
 //!   creation, so enrolled features survive hot-swaps bit-identically;
 //! * **observability** ([`observe`]) — per-model, per-endpoint counters and
-//!   latency quantiles on `GET /metrics`, built from the shared
-//!   [`crate::metrics::LatencySnapshot`] row shape.
+//!   latency quantiles on `GET /metrics` (JSON, or Prometheus text
+//!   exposition via `?format=prometheus` / `Accept: text/plain`), built
+//!   from the shared [`crate::metrics::LatencySnapshot`] row shape;
+//! * **tracing** ([`crate::trace`]) — per-request span traces (sampled
+//!   via `--trace-sample`, or forced by sending the `x-pefsl-trace`
+//!   header, which is echoed back) on `GET /debug/trace`, plus an
+//!   always-on operational event journal (deploys, session mint/expiry,
+//!   admission saturation, drain) on `GET /debug/events`.
 //!
 //! ## Endpoints
 //!
@@ -33,8 +39,10 @@
 //! | `POST /admin/deploy`             | hot-swap `{bundle, name?, workers?}`         |
 //! | `POST /admin/shutdown`           | graceful shutdown (drain, then exit)         |
 //! | `GET /models`                    | deployed models (shared `ModelInfo` rows)    |
-//! | `GET /healthz`                   | liveness                                     |
+//! | `GET /healthz`                   | liveness, version, uptime                    |
 //! | `GET /metrics`                   | request/admission/session observability      |
+//! | `GET /debug/trace`               | recent request traces (`?n=K`)               |
+//! | `GET /debug/events`              | operational event journal (`?n=K`)           |
 //!
 //! Graceful shutdown (`ServerHandle::shutdown` or `POST /admin/shutdown`)
 //! stops accepting, lets every in-flight request complete, joins all
@@ -47,6 +55,7 @@ pub mod http;
 pub mod observe;
 pub mod sessions;
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -60,6 +69,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::bundle::Bundle;
 use crate::engine::{Engine, InferRequest, Registry, Session};
 use crate::json::Value;
+use crate::trace::{EventJournal, TraceHub, Tracer, TRACE_HEADER};
 
 use admission::Admission;
 use http::{Conn, HttpError, Limits, Received, Request, Response};
@@ -82,6 +92,9 @@ pub struct ServeConfig {
     pub limits: Limits,
     /// When set, `/admin/*` requires this token in [`ADMIN_HEADER`].
     pub admin_token: Option<String>,
+    /// Trace every Nth headerless request (0 = only requests carrying
+    /// the `x-pefsl-trace` header are traced).
+    pub trace_sample: u32,
 }
 
 impl Default for ServeConfig {
@@ -91,6 +104,7 @@ impl Default for ServeConfig {
             idle_session: Duration::from_secs(300),
             limits: Limits::default(),
             admin_token: None,
+            trace_sample: 0,
         }
     }
 }
@@ -103,16 +117,30 @@ struct Shared {
     metrics: ServeMetrics,
     gates: Mutex<BTreeMap<String, Arc<Admission>>>,
     shutdown: AtomicBool,
+    trace: Arc<TraceHub>,
+    journal: Arc<EventJournal>,
+    started: Instant,
 }
 
 impl Shared {
-    /// The admission gate for one model (created on first use).
+    /// The admission gate for one model (created on first use; the
+    /// steady-state lookup borrows `model` instead of allocating a key).
     fn gate(&self, model: &str) -> Arc<Admission> {
         let mut gates = self.gates.lock().unwrap_or_else(PoisonError::into_inner);
-        let gate = gates
-            .entry(model.to_string())
-            .or_insert_with(|| Arc::new(Admission::new(self.cfg.queue_depth)));
-        Arc::clone(gate)
+        if !gates.contains_key(model) {
+            let gate =
+                Admission::new(self.cfg.queue_depth).with_journal(model, Arc::clone(&self.journal));
+            gates.insert(model.to_string(), Arc::new(gate));
+        }
+        Arc::clone(gates.get(model).unwrap())
+    }
+
+    /// Request shutdown, journaling the drain start exactly once no
+    /// matter how many paths (handle, drop, endpoint) ask for it.
+    fn begin_shutdown(&self, source: &str) {
+        if !self.shutdown.swap(true, Ordering::SeqCst) {
+            self.journal.record("drain_start", "-", format!("shutdown requested ({source})"));
+        }
     }
 }
 
@@ -125,12 +153,17 @@ impl Server {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr().context("local_addr")?;
         listener.set_nonblocking(true).context("set_nonblocking")?;
+        let journal = Arc::new(EventJournal::default());
+        journal.record("server_start", "-", format!("listening on {local}"));
         let shared = Arc::new(Shared {
             registry,
-            sessions: SessionStore::new(cfg.idle_session),
+            sessions: SessionStore::new(cfg.idle_session).with_journal(Arc::clone(&journal)),
             metrics: ServeMetrics::new(),
             gates: Mutex::new(BTreeMap::new()),
             shutdown: AtomicBool::new(false),
+            trace: Arc::new(TraceHub::new(cfg.trace_sample)),
+            journal,
+            started: Instant::now(),
             cfg,
         });
         let accept_shared = Arc::clone(&shared);
@@ -157,7 +190,18 @@ impl ServerHandle {
 
     /// Begin graceful shutdown: stop accepting, drain in-flight requests.
     pub fn shutdown(&self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.begin_shutdown("ServerHandle::shutdown");
+    }
+
+    /// The server's trace hub — read recent request traces (e.g. to
+    /// export a Chrome trace via `--trace-out`).
+    pub fn trace_hub(&self) -> Arc<TraceHub> {
+        Arc::clone(&self.shared.trace)
+    }
+
+    /// The server's operational event journal.
+    pub fn journal(&self) -> Arc<EventJournal> {
+        Arc::clone(&self.shared.journal)
     }
 
     /// True once shutdown has been requested (here or via the endpoint).
@@ -177,7 +221,7 @@ impl ServerHandle {
 impl Drop for ServerHandle {
     fn drop(&mut self) {
         // A dropped handle still stops the server (tests that bail early).
-        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.begin_shutdown("ServerHandle dropped");
         if let Some(accept) = self.accept.take() {
             accept.join().ok();
         }
@@ -213,15 +257,19 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
     // Drain: every accepted connection finishes its in-flight request
     // before the loop (and ServerHandle::join) returns.
+    let n = conns.len();
     for h in conns {
         h.join().ok();
     }
+    shared.journal.record("drain_end", "-", format!("drained; {n} connection thread(s) joined"));
 }
 
 fn connection_loop(stream: TcpStream, shared: Arc<Shared>) {
     let Ok(mut conn) = Conn::new(stream) else {
         return;
     };
+    // One trace ring per connection thread; recycled across threads.
+    let sink = shared.trace.register();
     let limits = shared.cfg.limits;
     loop {
         let sd = Arc::clone(&shared);
@@ -231,17 +279,27 @@ fn connection_loop(stream: TcpStream, shared: Arc<Shared>) {
             Ok(Received::Request(req)) => {
                 let started = Instant::now();
                 let (model, endpoint) = labels(&req.path);
+                let mut tr = shared.trace.begin(req.header(TRACE_HEADER));
+                // the HTTP read finished before the tracer existed —
+                // shift the trace origin back so it still appears
+                tr.backdate("http/read", Duration::from_nanos((req.read_us * 1e3) as u64));
                 // A panicking handler answers 500 and keeps the server up;
                 // admission permits release via Drop even through the
                 // unwind, so no slot leaks.
-                let mut resp = match catch_unwind(AssertUnwindSafe(|| route(&shared, &req))) {
+                let routed = catch_unwind(AssertUnwindSafe(|| route(&shared, &req, &mut tr)));
+                let mut resp = match routed {
                     Ok(Ok(resp)) => resp,
                     Ok(Err(e)) => Response::from_http_error(&e),
                     Err(_) => Response::error(500, "internal error: request handler panicked"),
                 };
-                shared.metrics.record(&model, &endpoint, resp.status, started.elapsed());
+                let elapsed = started.elapsed();
+                shared.metrics.record(model.as_ref(), endpoint.as_ref(), resp.status, elapsed);
                 if shared.shutdown.load(Ordering::SeqCst) {
                     resp.close = true;
+                }
+                if let Some(t) = tr.finish(model.as_ref(), endpoint.as_ref(), resp.status) {
+                    resp.headers.push((TRACE_HEADER.to_string(), t.id.to_string()));
+                    sink.submit(t);
                 }
                 let close = resp.close;
                 if conn.write_response(&resp).is_err() || close {
@@ -250,8 +308,7 @@ fn connection_loop(stream: TcpStream, shared: Arc<Shared>) {
             }
             Err(e) => {
                 let resp = Response::from_http_error(&e);
-                let (model, endpoint) = ("-".to_string(), "protocol-error".to_string());
-                shared.metrics.record(&model, &endpoint, resp.status, Duration::ZERO);
+                shared.metrics.record("-", "protocol-error", resp.status, Duration::ZERO);
                 conn.write_response(&resp).ok();
                 if e.fatal {
                     break;
@@ -264,19 +321,42 @@ fn connection_loop(stream: TcpStream, shared: Arc<Shared>) {
     conn.lingering_close();
 }
 
-/// `(model, endpoint)` labels for the metrics table.
-fn labels(path: &str) -> (String, String) {
+/// `(model, endpoint)` labels for the metrics table.  Borrowed from the
+/// path wherever possible — the hot endpoints (`infer`, `classify`,
+/// `enroll`) are single-segment, so the per-request label cost is zero
+/// allocations; only multi-segment endpoints (`session/reset`) join.
+fn labels(path: &str) -> (Cow<'_, str>, Cow<'_, str>) {
     let segs = split_path(path);
     match segs.as_slice() {
-        ["v1", model, rest @ ..] if !rest.is_empty() => (model.to_string(), rest.join("/")),
-        [] => ("-".to_string(), "/".to_string()),
-        other => ("-".to_string(), other.join("/")),
+        ["v1", model, action] => (Cow::Borrowed(*model), Cow::Borrowed(*action)),
+        ["v1", model, rest @ ..] if !rest.is_empty() => {
+            (Cow::Borrowed(*model), Cow::Owned(rest.join("/")))
+        }
+        [] => (Cow::Borrowed("-"), Cow::Borrowed("/")),
+        [single] => (Cow::Borrowed("-"), Cow::Borrowed(*single)),
+        other => (Cow::Borrowed("-"), Cow::Owned(other.join("/"))),
     }
 }
 
 fn split_path(path: &str) -> Vec<&str> {
     let path = path.split('?').next().unwrap_or(path);
     path.split('/').filter(|s| !s.is_empty()).collect()
+}
+
+/// The raw value of `key` in the path's query string, if present.
+fn query_param<'a>(path: &'a str, key: &str) -> Option<&'a str> {
+    let (_, query) = path.split_once('?')?;
+    for pair in query.split('&') {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        if k == key {
+            return Some(v);
+        }
+    }
+    None
+}
+
+fn query_usize(path: &str, key: &str) -> Option<usize> {
+    query_param(path, key)?.parse().ok()
 }
 
 fn require_method(req: &Request, method: &str) -> Result<(), HttpError> {
@@ -287,24 +367,43 @@ fn require_method(req: &Request, method: &str) -> Result<(), HttpError> {
     }
 }
 
-fn route(shared: &Shared, req: &Request) -> Result<Response, HttpError> {
+fn route(shared: &Shared, req: &Request, tr: &mut Tracer) -> Result<Response, HttpError> {
     let segs = split_path(&req.path);
     match segs.as_slice() {
         ["healthz"] => {
             require_method(req, "GET")?;
             let mut v = Value::obj();
             v.set("status", "ok")
+                .set("version", env!("CARGO_PKG_VERSION"))
+                .set("uptime_s", shared.started.elapsed().as_secs_f64())
                 .set("models", shared.registry.len())
                 .set("sessions", shared.sessions.len());
             Ok(Response::json(200, &v))
         }
         ["metrics"] => {
             require_method(req, "GET")?;
-            Ok(Response::json(200, &metrics_json(shared)))
+            let prometheus = query_param(&req.path, "format") == Some("prometheus")
+                || req.header("accept").is_some_and(|a| a.contains("text/plain"));
+            if prometheus {
+                let body = metrics_prometheus(shared);
+                Ok(Response::text(200, "text/plain; version=0.0.4", body))
+            } else {
+                Ok(Response::json(200, &metrics_json(shared)))
+            }
         }
         ["models"] => {
             require_method(req, "GET")?;
             Ok(Response::json(200, &shared.registry.models_json()))
+        }
+        ["debug", "trace"] => {
+            require_method(req, "GET")?;
+            let n = query_usize(&req.path, "n").unwrap_or(16).min(256);
+            Ok(Response::json(200, &shared.trace.recent_json(n)))
+        }
+        ["debug", "events"] => {
+            require_method(req, "GET")?;
+            let n = query_usize(&req.path, "n").unwrap_or(64);
+            Ok(Response::json(200, &shared.journal.to_json(n)))
         }
         ["admin", "deploy"] => {
             require_method(req, "POST")?;
@@ -314,7 +413,7 @@ fn route(shared: &Shared, req: &Request) -> Result<Response, HttpError> {
         ["admin", "shutdown"] => {
             require_method(req, "POST")?;
             require_admin(shared, req)?;
-            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.begin_shutdown("POST /admin/shutdown");
             let mut v = Value::obj();
             v.set("status", "shutting down");
             let mut resp = Response::json(200, &v);
@@ -325,11 +424,11 @@ fn route(shared: &Shared, req: &Request) -> Result<Response, HttpError> {
             require_method(req, "POST")?;
             let model = model.to_string();
             match rest {
-                ["infer"] => infer(shared, &model, req),
-                ["session"] => session_create(shared, &model),
-                ["session", "reset"] => session_reset(shared, &model, req),
-                ["enroll"] => enroll(shared, &model, req),
-                ["classify"] => classify(shared, &model, req),
+                ["infer"] => infer(shared, &model, req, tr),
+                ["session"] => session_create(shared, &model, tr),
+                ["session", "reset"] => session_reset(shared, &model, req, tr),
+                ["enroll"] => enroll(shared, &model, req, tr),
+                ["classify"] => classify(shared, &model, req, tr),
                 _ => Err(HttpError::new(
                     404,
                     format!("unknown action '/{}' for model '{model}'", rest.join("/")),
@@ -369,8 +468,14 @@ fn resolve_session(
     shared.sessions.resolve(model, token)
 }
 
-fn infer(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpError> {
+fn infer(
+    shared: &Shared,
+    model: &str,
+    req: &Request,
+    tr: &mut Tracer,
+) -> Result<Response, HttpError> {
     let engine = resolve_engine(shared, model)?;
+    let parse_t0 = tr.start();
     let body = req.json_body()?;
     let expected = engine.info().input_elems;
     let images: Vec<Vec<f32>> = if body.get("image").is_some() {
@@ -388,11 +493,17 @@ fn infer(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpEr
             })
             .collect::<Result<_, _>>()?
     };
+    tr.add("parse", parse_t0);
+    let admission_t0 = tr.start();
     let gate = shared.gate(model);
     let _permit = gate.try_acquire(model)?;
+    tr.add("admission", admission_t0);
+    let engine_t0 = tr.start();
     let resp = engine
-        .infer(InferRequest::batch(images))
+        .infer(InferRequest::batch(images).with_spans(tr.on()))
         .map_err(|e| HttpError::new(400, e.to_string()))?;
+    resp.trace_into(tr, engine_t0, engine.info().layer_names.as_deref());
+    let respond_t0 = tr.start();
     let items: Vec<Value> = resp
         .items
         .iter()
@@ -407,12 +518,16 @@ fn infer(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpEr
         .collect();
     let mut v = Value::obj();
     v.set("model", model).set("feature_dim", engine.feature_dim()).set("items", items);
-    Ok(Response::json(200, &v))
+    let out = Response::json(200, &v);
+    tr.add("respond", respond_t0);
+    Ok(out)
 }
 
-fn session_create(shared: &Shared, model: &str) -> Result<Response, HttpError> {
+fn session_create(shared: &Shared, model: &str, tr: &mut Tracer) -> Result<Response, HttpError> {
     let engine = resolve_engine(shared, model)?;
+    let session_t0 = tr.start();
     let token = shared.sessions.create(model, Session::new(Arc::clone(&engine)));
+    tr.add("session", session_t0);
     let mut v = Value::obj();
     v.set("token", token)
         .set("model", model)
@@ -421,24 +536,55 @@ fn session_create(shared: &Shared, model: &str) -> Result<Response, HttpError> {
     Ok(Response::json(200, &v))
 }
 
-fn session_reset(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpError> {
+fn session_reset(
+    shared: &Shared,
+    model: &str,
+    req: &Request,
+    tr: &mut Tracer,
+) -> Result<Response, HttpError> {
+    let session_t0 = tr.start();
     let session = resolve_session(shared, model, req)?;
     session.lock().unwrap_or_else(PoisonError::into_inner).reset();
+    tr.add("session", session_t0);
     let mut v = Value::obj();
     v.set("status", "reset").set("model", model);
     Ok(Response::json(200, &v))
 }
 
-fn enroll(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpError> {
+/// The session's pinned engine — only when this request is traced.  The
+/// traced path splits extract/NCM into separate calls to attribute their
+/// spans; untraced requests keep the one-call
+/// [`Session::enroll_image`]/[`Session::classify_image`] path.  Both
+/// produce bit-identical features (`tests/serve_trace.rs`).
+fn traced_engine(s: &Session, tr: &Tracer) -> Option<Arc<Engine>> {
+    if tr.on() {
+        s.engine().cloned()
+    } else {
+        None
+    }
+}
+
+fn enroll(
+    shared: &Shared,
+    model: &str,
+    req: &Request,
+    tr: &mut Tracer,
+) -> Result<Response, HttpError> {
+    let session_t0 = tr.start();
     let session = resolve_session(shared, model, req)?;
+    tr.add("session", session_t0);
+    let parse_t0 = tr.start();
     let body = req.json_body()?;
     let label = body
         .get("label")
         .and_then(Value::as_str)
         .ok_or_else(|| HttpError::new(400, "body needs a string 'label'"))?
         .to_string();
+    tr.add("parse", parse_t0);
+    let admission_t0 = tr.start();
     let gate = shared.gate(model);
     let _permit = gate.try_acquire(model)?;
+    tr.add("admission", admission_t0);
     let mut s = session.lock().unwrap_or_else(PoisonError::into_inner);
     let expected = s.engine().map(|e| e.info().input_elems).unwrap_or_else(|| s.dim());
     let image = image_field(&body, "image", expected)?;
@@ -447,8 +593,24 @@ fn enroll(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpE
         Some(i) => i,
         None => s.add_class(label.as_str()),
     };
-    let metrics =
-        s.enroll_image(class_idx, &image).map_err(|e| HttpError::new(400, e.to_string()))?;
+    let metrics = match traced_engine(&s, tr) {
+        Some(engine) => {
+            let engine_t0 = tr.start();
+            let resp = engine
+                .infer(InferRequest::single(image).with_spans(true))
+                .map_err(|e| HttpError::new(400, e.to_string()))?;
+            resp.trace_into(tr, engine_t0, engine.info().layer_names.as_deref());
+            let item = resp.into_single().map_err(|e| HttpError::new(400, e.to_string()))?;
+            let ncm_t0 = tr.start();
+            s.enroll_feature(class_idx, &item.features)
+                .map_err(|e| HttpError::new(400, e.to_string()))?;
+            tr.add("ncm/enroll", ncm_t0);
+            item.metrics
+        }
+        None => {
+            s.enroll_image(class_idx, &image).map_err(|e| HttpError::new(400, e.to_string()))?
+        }
+    };
     let mut v = Value::obj();
     v.set("class", class_idx)
         .set("label", label)
@@ -457,16 +619,42 @@ fn enroll(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpE
     Ok(Response::json(200, &v))
 }
 
-fn classify(shared: &Shared, model: &str, req: &Request) -> Result<Response, HttpError> {
+fn classify(
+    shared: &Shared,
+    model: &str,
+    req: &Request,
+    tr: &mut Tracer,
+) -> Result<Response, HttpError> {
+    let session_t0 = tr.start();
     let session = resolve_session(shared, model, req)?;
+    tr.add("session", session_t0);
+    let parse_t0 = tr.start();
     let body = req.json_body()?;
+    tr.add("parse", parse_t0);
+    let admission_t0 = tr.start();
     let gate = shared.gate(model);
     let _permit = gate.try_acquire(model)?;
+    tr.add("admission", admission_t0);
     let s = session.lock().unwrap_or_else(PoisonError::into_inner);
     let expected = s.engine().map(|e| e.info().input_elems).unwrap_or_else(|| s.dim());
     let image = image_field(&body, "image", expected)?;
-    let (pred, metrics) =
-        s.classify_image(&image).map_err(|e| HttpError::new(400, e.to_string()))?;
+    let (pred, metrics) = match traced_engine(&s, tr) {
+        Some(engine) => {
+            let engine_t0 = tr.start();
+            let resp = engine
+                .infer(InferRequest::single(image).with_spans(true))
+                .map_err(|e| HttpError::new(400, e.to_string()))?;
+            resp.trace_into(tr, engine_t0, engine.info().layer_names.as_deref());
+            let item = resp.into_single().map_err(|e| HttpError::new(400, e.to_string()))?;
+            let ncm_t0 = tr.start();
+            let pred = s
+                .classify_feature(&item.features)
+                .map_err(|e| HttpError::new(400, e.to_string()))?;
+            tr.add("ncm/classify", ncm_t0);
+            (pred, item.metrics)
+        }
+        None => s.classify_image(&image).map_err(|e| HttpError::new(400, e.to_string()))?,
+    };
     let mut v = Value::obj();
     v.set("class", pred.class_idx)
         .set("label", s.class_label(pred.class_idx).unwrap_or(""))
@@ -490,12 +678,26 @@ fn admin_deploy(shared: &Shared, req: &Request) -> Result<Response, HttpError> {
         .unwrap_or(bundle.name.as_str())
         .to_string();
     let workers = body.get("workers").and_then(Value::as_usize);
-    let generation = shared
-        .registry
-        .deploy_with(name.as_str(), &bundle, workers)
-        .map_err(|e| HttpError::new(400, format!("{e:#}")))?;
+    let report = match shared.registry.deploy_report(name.as_str(), &bundle, workers) {
+        Ok(report) => report,
+        Err(e) => {
+            shared.journal.record("deploy_failed", &name, format!("{e:#}"));
+            return Err(HttpError::new(400, format!("{e:#}")));
+        }
+    };
+    shared.journal.record_timed(
+        "deploy",
+        &name,
+        format!(
+            "{name}@{} gen {} verify {:.1} ms build {:.1} ms",
+            bundle.version, report.generation, report.verify_ms, report.build_ms
+        ),
+        report.verify_ms + report.build_ms,
+    );
     let mut v = Value::obj();
-    v.set("name", name).set("version", bundle.version.as_str()).set("generation", generation);
+    v.set("name", name)
+        .set("version", bundle.version.as_str())
+        .set("generation", report.generation);
     Ok(Response::json(200, &v))
 }
 
@@ -520,10 +722,49 @@ fn metrics_json(shared: &Shared) -> Value {
     sessions.set("live", shared.sessions.len()).set("minted", shared.sessions.minted());
     let mut v = Value::obj();
     v.set("total_requests", shared.metrics.total_requests())
+        .set("endpoint_rows", shared.metrics.rows_created())
         .set("endpoints", shared.metrics.to_json())
         .set("admission", admission)
-        .set("sessions", sessions);
+        .set("sessions", sessions)
+        .set("uptime_s", shared.started.elapsed().as_secs_f64())
+        .set("journal_events", shared.journal.total());
     v
+}
+
+/// The `/metrics` Prometheus text exposition: the per-endpoint request
+/// metrics plus admission, session, and server-level gauges.
+fn metrics_prometheus(shared: &Shared) -> String {
+    use std::fmt::Write as _;
+    let mut out = shared.metrics.to_prometheus();
+    let gates: Vec<(String, Arc<Admission>)> = {
+        let gates = shared.gates.lock().unwrap_or_else(PoisonError::into_inner);
+        gates.iter().map(|(m, g)| (observe::escape_label(m), Arc::clone(g))).collect()
+    };
+    out.push_str("# TYPE pefsl_admission_depth gauge\n");
+    for (m, g) in &gates {
+        let _ = writeln!(out, "pefsl_admission_depth{{model=\"{m}\"}} {}", g.depth());
+    }
+    out.push_str("# TYPE pefsl_admission_in_flight gauge\n");
+    for (m, g) in &gates {
+        let _ = writeln!(out, "pefsl_admission_in_flight{{model=\"{m}\"}} {}", g.in_flight());
+    }
+    out.push_str("# TYPE pefsl_admission_admitted_total counter\n");
+    for (m, g) in &gates {
+        let _ = writeln!(out, "pefsl_admission_admitted_total{{model=\"{m}\"}} {}", g.admitted());
+    }
+    out.push_str("# TYPE pefsl_admission_rejected_total counter\n");
+    for (m, g) in &gates {
+        let _ = writeln!(out, "pefsl_admission_rejected_total{{model=\"{m}\"}} {}", g.rejected());
+    }
+    out.push_str("# TYPE pefsl_sessions_live gauge\n");
+    let _ = writeln!(out, "pefsl_sessions_live {}", shared.sessions.len());
+    out.push_str("# TYPE pefsl_sessions_minted_total counter\n");
+    let _ = writeln!(out, "pefsl_sessions_minted_total {}", shared.sessions.minted());
+    out.push_str("# TYPE pefsl_uptime_seconds gauge\n");
+    let _ = writeln!(out, "pefsl_uptime_seconds {}", shared.started.elapsed().as_secs_f64());
+    out.push_str("# TYPE pefsl_journal_events_total counter\n");
+    let _ = writeln!(out, "pefsl_journal_events_total {}", shared.journal.total());
+    out
 }
 
 fn image_field(body: &Value, key: &str, expected: usize) -> Result<Vec<f32>, HttpError> {
@@ -574,6 +815,7 @@ mod tests {
         assert_eq!(cfg.queue_depth, 32);
         assert_eq!(cfg.idle_session, Duration::from_secs(300));
         assert!(cfg.admin_token.is_none());
+        assert_eq!(cfg.trace_sample, 0);
     }
 
     #[test]
@@ -581,10 +823,25 @@ mod tests {
         assert_eq!(split_path("/v1/m/session/reset"), vec!["v1", "m", "session", "reset"]);
         assert_eq!(split_path("/healthz?x=1"), vec!["healthz"]);
         assert_eq!(split_path("/"), Vec::<&str>::new());
-        assert_eq!(labels("/v1/m/classify"), ("m".to_string(), "classify".to_string()));
-        assert_eq!(labels("/healthz"), ("-".to_string(), "healthz".to_string()));
-        assert_eq!(labels("/admin/deploy"), ("-".to_string(), "admin/deploy".to_string()));
-        assert_eq!(labels("/"), ("-".to_string(), "/".to_string()));
+        assert_eq!(labels("/v1/m/classify"), ("m".into(), "classify".into()));
+        assert_eq!(labels("/v1/m/session/reset"), ("m".into(), "session/reset".into()));
+        assert_eq!(labels("/healthz"), ("-".into(), "healthz".into()));
+        assert_eq!(labels("/admin/deploy"), ("-".into(), "admin/deploy".into()));
+        assert_eq!(labels("/"), ("-".into(), "/".into()));
+        // hot single-segment endpoints borrow from the path — zero label
+        // allocations per request in the connection loop
+        assert!(matches!(labels("/v1/m/infer"), (Cow::Borrowed("m"), Cow::Borrowed("infer"))));
+        assert!(matches!(labels("/healthz"), (Cow::Borrowed("-"), Cow::Borrowed("healthz"))));
+    }
+
+    #[test]
+    fn query_params_parse() {
+        assert_eq!(query_param("/debug/trace?n=5", "n"), Some("5"));
+        assert_eq!(query_param("/debug/trace?a=1&n=7", "n"), Some("7"));
+        assert_eq!(query_param("/debug/trace", "n"), None);
+        assert_eq!(query_param("/metrics?format=prometheus", "format"), Some("prometheus"));
+        assert_eq!(query_usize("/debug/trace?n=12", "n"), Some(12));
+        assert_eq!(query_usize("/debug/trace?n=x", "n"), None);
     }
 
     #[test]

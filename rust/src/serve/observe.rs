@@ -6,16 +6,28 @@
 //! end-to-end handler latency into a [`LatencyStats`] window.  `/metrics`
 //! renders the whole table as JSON using the shared
 //! [`LatencySnapshot::to_json`] row shape, so the serving endpoint and the
-//! `BENCH_*` emitters stay one formatting.  Admission state (queue depth,
-//! in-flight, rejection counts) is merged in by the server, which owns the
-//! gates.
+//! `BENCH_*` emitters stay one formatting, or as Prometheus text
+//! exposition ([`ServeMetrics::to_prometheus`]) for scrapers.  Admission
+//! state (queue depth, in-flight, rejection counts) is merged in by the
+//! server, which owns the gates.
+//!
+//! The hot path is allocation-free in the steady state: the table is
+//! nested (`model → endpoint → stats`) so [`ServeMetrics::record`] looks
+//! rows up by `&str` and only allocates the two key `String`s the first
+//! time a `(model, endpoint)` pair is seen.  [`ServeMetrics::rows_created`]
+//! counts those first-times, so a load test can assert the steady state
+//! really is steady.
+//!
+//! [`LatencySnapshot::to_json`]: crate::metrics::LatencySnapshot::to_json
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, PoisonError};
 use std::time::Duration;
 
 use crate::json::Value;
-use crate::metrics::LatencyStats;
+use crate::metrics::{LatencySnapshot, LatencyStats};
 
 /// Accumulated stats for one `(model, endpoint)` pair.
 #[derive(Debug)]
@@ -48,7 +60,13 @@ impl EndpointStats {
 /// Non-model endpoints (`/healthz`, `/models`, …) record under model `"-"`.
 #[derive(Default)]
 pub struct ServeMetrics {
-    rows: Mutex<BTreeMap<(String, String), EndpointStats>>,
+    /// model → endpoint → stats.  Nested (rather than keyed by a
+    /// `(String, String)` tuple) so the steady-state lookup borrows the
+    /// incoming `&str`s instead of allocating two Strings per request
+    /// while holding the lock.
+    rows: Mutex<BTreeMap<String, BTreeMap<String, EndpointStats>>>,
+    /// Distinct `(model, endpoint)` rows ever created (monotonic).
+    rows_created: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -56,12 +74,21 @@ impl ServeMetrics {
         ServeMetrics::default()
     }
 
-    /// Record one handled request.
+    /// Record one handled request.  Allocation-free once the
+    /// `(model, endpoint)` row exists.
     pub fn record(&self, model: &str, endpoint: &str, status: u16, elapsed: Duration) {
         let mut rows = self.rows.lock().unwrap_or_else(PoisonError::into_inner);
-        let stats = rows
-            .entry((model.to_string(), endpoint.to_string()))
-            .or_insert_with(EndpointStats::new);
+        // contains_key + get_mut keeps the common path borrowed; the
+        // `to_string`s below run once per distinct row, not per request
+        if !rows.contains_key(model) {
+            rows.insert(model.to_string(), BTreeMap::new());
+        }
+        let by_endpoint = rows.get_mut(model).unwrap();
+        if !by_endpoint.contains_key(endpoint) {
+            by_endpoint.insert(endpoint.to_string(), EndpointStats::new());
+            self.rows_created.fetch_add(1, Ordering::Relaxed);
+        }
+        let stats = by_endpoint.get_mut(endpoint).unwrap();
         stats.requests += 1;
         match status {
             200..=299 => stats.ok += 1,
@@ -75,15 +102,22 @@ impl ServeMetrics {
     /// Total requests recorded across all rows.
     pub fn total_requests(&self) -> u64 {
         let rows = self.rows.lock().unwrap_or_else(PoisonError::into_inner);
-        rows.values().map(|s| s.requests).sum()
+        rows.values().flat_map(BTreeMap::values).map(|s| s.requests).sum()
+    }
+
+    /// Distinct `(model, endpoint)` rows ever created.  Stays flat under
+    /// steady traffic — the regression guard for the allocation-free
+    /// record path.
+    pub fn rows_created(&self) -> u64 {
+        self.rows_created.load(Ordering::Relaxed)
     }
 
     /// The table as `/metrics` JSON rows.
     pub fn to_json(&self) -> Value {
         let rows = self.rows.lock().unwrap_or_else(PoisonError::into_inner);
-        let items: Vec<Value> = rows
-            .iter()
-            .map(|((model, endpoint), s)| {
+        let mut items = Vec::new();
+        for (model, by_endpoint) in rows.iter() {
+            for (endpoint, s) in by_endpoint {
                 let mut row = Value::obj();
                 row.set("model", model.as_str())
                     .set("endpoint", endpoint.as_str())
@@ -93,11 +127,103 @@ impl ServeMetrics {
                     .set("client_errors", s.client_errors)
                     .set("server_errors", s.server_errors)
                     .set("latency", s.latency.snapshot().to_json());
-                row
-            })
-            .collect();
+                items.push(row);
+            }
+        }
         Value::Arr(items)
     }
+
+    /// The table as Prometheus text exposition (the request-level
+    /// metrics; the server appends its admission/session gauges).
+    pub fn to_prometheus(&self) -> String {
+        struct Row {
+            model: String,
+            endpoint: String,
+            requests: u64,
+            outcomes: [(&'static str, u64); 4],
+            latency: LatencySnapshot,
+        }
+        let mut snap: Vec<Row> = Vec::new();
+        {
+            let rows = self.rows.lock().unwrap_or_else(PoisonError::into_inner);
+            for (model, by_endpoint) in rows.iter() {
+                for (endpoint, s) in by_endpoint {
+                    snap.push(Row {
+                        model: model.clone(),
+                        endpoint: endpoint.clone(),
+                        requests: s.requests,
+                        outcomes: [
+                            ("ok", s.ok),
+                            ("rejected", s.rejected),
+                            ("client_error", s.client_errors),
+                            ("server_error", s.server_errors),
+                        ],
+                        latency: s.latency.snapshot(),
+                    });
+                }
+            }
+        } // lock released before formatting
+
+        let mut out = String::new();
+        out.push_str("# TYPE pefsl_requests_total counter\n");
+        for r in &snap {
+            let _ = writeln!(
+                out,
+                "pefsl_requests_total{{model=\"{}\",endpoint=\"{}\"}} {}",
+                escape_label(&r.model),
+                escape_label(&r.endpoint),
+                r.requests,
+            );
+        }
+        out.push_str("# TYPE pefsl_responses_total counter\n");
+        for r in &snap {
+            for (outcome, n) in r.outcomes {
+                let _ = writeln!(
+                    out,
+                    "pefsl_responses_total{{model=\"{}\",endpoint=\"{}\",outcome=\"{outcome}\"}} {n}",
+                    escape_label(&r.model),
+                    escape_label(&r.endpoint),
+                );
+            }
+        }
+        out.push_str("# TYPE pefsl_request_latency_seconds summary\n");
+        for r in &snap {
+            let (m, e) = (escape_label(&r.model), escape_label(&r.endpoint));
+            let l = &r.latency;
+            for (q, us) in [("0.5", l.p50_us), ("0.95", l.p95_us), ("0.99", l.p99_us)] {
+                let _ = writeln!(
+                    out,
+                    "pefsl_request_latency_seconds{{model=\"{m}\",endpoint=\"{e}\",quantile=\"{q}\"}} {}",
+                    us / 1e6,
+                );
+            }
+            let _ = writeln!(
+                out,
+                "pefsl_request_latency_seconds_sum{{model=\"{m}\",endpoint=\"{e}\"}} {}",
+                l.mean_us * l.count as f64 / 1e6,
+            );
+            let _ = writeln!(
+                out,
+                "pefsl_request_latency_seconds_count{{model=\"{m}\",endpoint=\"{e}\"}} {}",
+                l.count,
+            );
+        }
+        out
+    }
+}
+
+/// Escape a Prometheus label value: backslash, double quote, newline.
+pub(crate) fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -135,5 +261,42 @@ mod tests {
         let m = ServeMetrics::new();
         assert_eq!(m.total_requests(), 0);
         assert_eq!(m.to_json().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn rows_created_is_per_pair_not_per_request() {
+        let m = ServeMetrics::new();
+        for _ in 0..100 {
+            m.record("m", "infer", 200, Duration::from_micros(50));
+            m.record("m", "classify", 200, Duration::from_micros(50));
+        }
+        m.record("other", "infer", 200, Duration::from_micros(50));
+        assert_eq!(m.rows_created(), 3);
+        assert_eq!(m.total_requests(), 201);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_types_and_rows() {
+        let m = ServeMetrics::new();
+        m.record("m", "infer", 200, Duration::from_micros(100));
+        m.record("m", "infer", 429, Duration::from_micros(10));
+        let text = m.to_prometheus();
+        assert!(text.contains("# TYPE pefsl_requests_total counter"), "{text}");
+        assert!(text.contains("# TYPE pefsl_responses_total counter"), "{text}");
+        assert!(text.contains("# TYPE pefsl_request_latency_seconds summary"), "{text}");
+        assert!(text.contains("pefsl_requests_total{model=\"m\",endpoint=\"infer\"} 2"), "{text}");
+        let rej = "pefsl_responses_total{model=\"m\",endpoint=\"infer\",outcome=\"rejected\"} 1";
+        assert!(text.contains(rej), "{text}");
+        let cnt = "pefsl_request_latency_seconds_count{model=\"m\",endpoint=\"infer\"} 2";
+        assert!(text.contains(cnt), "{text}");
+        // every sample line belongs to a pefsl_* family
+        for line in text.lines() {
+            assert!(line.starts_with("# TYPE pefsl_") || line.starts_with("pefsl_"), "{line}");
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
     }
 }

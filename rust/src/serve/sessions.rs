@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use crate::engine::Session;
+use crate::trace::EventJournal;
 use crate::util::checksum::fnv1a64;
 
 use super::http::HttpError;
@@ -44,6 +45,7 @@ pub struct SessionStore {
     idle_timeout: Duration,
     entries: Mutex<HashMap<String, Entry>>,
     minted: AtomicU64,
+    journal: Option<Arc<EventJournal>>,
 }
 
 impl SessionStore {
@@ -52,14 +54,24 @@ impl SessionStore {
             idle_timeout,
             entries: Mutex::new(HashMap::new()),
             minted: AtomicU64::new(0),
+            journal: None,
         }
+    }
+
+    /// Journal session mint/expiry events into `journal`.
+    pub fn with_journal(mut self, journal: Arc<EventJournal>) -> SessionStore {
+        self.journal = Some(journal);
+        self
     }
 
     /// Register a new session for `model`; returns its token.
     pub fn create(&self, model: &str, session: Session) -> String {
         let token = self.mint_token(model);
+        if let Some(j) = &self.journal {
+            j.record("session_mint", model, format!("token {}…", &token[..8]));
+        }
         let mut entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
-        Self::sweep(&mut entries, self.idle_timeout);
+        self.sweep(&mut entries);
         entries.insert(
             token.clone(),
             Entry {
@@ -75,7 +87,7 @@ impl SessionStore {
     /// `403` minted for a different model.  Touches the idle clock.
     pub fn resolve(&self, model: &str, token: &str) -> Result<Arc<Mutex<Session>>, HttpError> {
         let mut entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
-        Self::sweep(&mut entries, self.idle_timeout);
+        self.sweep(&mut entries);
         let entry = entries.get_mut(token).ok_or_else(|| {
             HttpError::new(401, "unknown or expired session token; create a new session")
         })?;
@@ -98,7 +110,7 @@ impl SessionStore {
     /// Live session count (post-sweep) — surfaced on `/metrics`.
     pub fn len(&self) -> usize {
         let mut entries = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
-        Self::sweep(&mut entries, self.idle_timeout);
+        self.sweep(&mut entries);
         entries.len()
     }
 
@@ -111,8 +123,21 @@ impl SessionStore {
         self.minted.load(Ordering::Relaxed)
     }
 
-    fn sweep(entries: &mut HashMap<String, Entry>, idle_timeout: Duration) {
-        entries.retain(|_, e| e.last_used.elapsed() <= idle_timeout);
+    fn sweep(&self, entries: &mut HashMap<String, Entry>) {
+        match &self.journal {
+            None => entries.retain(|_, e| e.last_used.elapsed() <= self.idle_timeout),
+            Some(j) => entries.retain(|token, e| {
+                let live = e.last_used.elapsed() <= self.idle_timeout;
+                if !live {
+                    j.record(
+                        "session_expire",
+                        &e.model,
+                        format!("token {}… idle past {:?}", &token[..8], self.idle_timeout),
+                    );
+                }
+                live
+            }),
+        }
     }
 
     fn mint_token(&self, model: &str) -> String {
@@ -179,6 +204,19 @@ mod tests {
         std::thread::sleep(Duration::from_millis(60));
         assert_eq!(s.resolve("m", &t).unwrap_err().status, 401);
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn journal_records_mint_and_expiry() {
+        let journal = Arc::new(EventJournal::new(16));
+        let s = store(Duration::from_millis(20)).with_journal(Arc::clone(&journal));
+        let t = s.create("m", Session::detached(4));
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(s.len(), 0); // forces a sweep
+        let events = journal.recent(16);
+        let kinds: Vec<&str> = events.iter().rev().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec!["session_mint", "session_expire"]);
+        assert!(events.iter().all(|e| e.detail.contains(&t[..8])), "{events:?}");
     }
 
     #[test]

@@ -133,6 +133,17 @@ struct LayerData<'a> {
     bias_shift: i32,
 }
 
+/// Receiver for per-layer profiling records during a traced run.
+///
+/// [`Simulator::run_f32_traced`] calls [`SpanSink::record_layer`] once
+/// per layer, immediately after it executes, with the measured wall time
+/// and the modeled cycles the layer just accrued. The simulator itself
+/// allocates nothing for tracing — the sink owns any storage — and the
+/// untraced path costs one `Option` branch per layer.
+pub trait SpanSink {
+    fn record_layer(&mut self, layer: usize, wall_ns: u64, cycles: u64);
+}
+
 /// Cycle/instruction bookkeeping of one run.
 struct RunTotals {
     cycles: u64,
@@ -268,6 +279,14 @@ impl<'a> Simulator<'a> {
         self.run_codes(&codes)
     }
 
+    /// [`Simulator::run_f32`] with a [`SpanSink`] receiving one
+    /// wall-time + modeled-cycles record per layer as it completes.
+    pub fn run_f32_traced(&mut self, input: &[f32], sink: &mut dyn SpanSink) -> Result<SimResult> {
+        let q = self.program.input_format;
+        let codes: Vec<i16> = input.iter().map(|&x| q.quantize(x)).collect();
+        Ok(self.run_codes_inner(&codes, &[], Some(sink))?.0)
+    }
+
     /// Run one inference on pre-quantized input codes.
     pub fn run_codes(&mut self, input: &[i16]) -> Result<SimResult> {
         Ok(self.run_codes_checkpointed(input, &[])?.0)
@@ -291,6 +310,15 @@ impl<'a> Simulator<'a> {
         &mut self,
         input: &[i16],
         at_layers: &[usize],
+    ) -> Result<(SimResult, Vec<SimCheckpoint>)> {
+        self.run_codes_inner(input, at_layers, None)
+    }
+
+    fn run_codes_inner(
+        &mut self,
+        input: &[i16],
+        at_layers: &[usize],
+        mut sink: Option<&mut dyn SpanSink>,
     ) -> Result<(SimResult, Vec<SimCheckpoint>)> {
         let expected: usize = match &self.program.tensors[self.program.input_tensor as usize] {
             TensorSlot::Activation { shape, .. } => shape.iter().product(),
@@ -318,7 +346,17 @@ impl<'a> Simulator<'a> {
                 ckpts.push(self.snapshot(l));
                 next += 1;
             }
-            self.exec_layer(l, &mut totals)?;
+            // untraced runs pay one branch per layer here, nothing more
+            match sink.as_deref_mut() {
+                None => self.exec_layer(l, &mut totals)?,
+                Some(s) => {
+                    let before = totals.layer_cycles[l];
+                    let t0 = std::time::Instant::now();
+                    self.exec_layer(l, &mut totals)?;
+                    let wall_ns = t0.elapsed().as_nanos() as u64;
+                    s.record_layer(l, wall_ns, totals.layer_cycles[l] - before);
+                }
+            }
         }
         Ok((self.result(totals), ckpts))
     }
@@ -1081,5 +1119,41 @@ mod tests {
         let (_, ckpts) = sim_a.run_codes_checkpointed(&codes_a, &[1]).unwrap();
         let mut sim_b = Simulator::new(&p_b, &g_b);
         assert!(sim_b.run_from(&ckpts[0]).is_err());
+    }
+
+    #[test]
+    fn traced_run_is_bit_exact_and_attributes_every_cycle() {
+        struct Rows(Vec<(usize, u64, u64)>);
+        impl SpanSink for Rows {
+            fn record_layer(&mut self, layer: usize, wall_ns: u64, cycles: u64) {
+                self.0.push((layer, wall_ns, cycles));
+            }
+        }
+        let spec = crate::dse::BackboneSpec {
+            image_size: 8,
+            feature_maps: 2,
+            ..crate::dse::BackboneSpec::headline()
+        };
+        let g = crate::dse::build_backbone_graph(&spec, 3).unwrap();
+        let program = crate::tcompiler::compile(&g, &Tarch::z7020_8x8()).unwrap();
+        let mut sim = Simulator::new(&program, &g);
+        let mut rng = Prng::new(9);
+        let x: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.f32()).collect();
+
+        let plain = sim.run_f32(&x).unwrap();
+        let mut rows = Rows(Vec::new());
+        let traced = sim.run_f32_traced(&x, &mut rows).unwrap();
+
+        assert_eq!(traced.output_codes, plain.output_codes);
+        assert_eq!(traced.cycles, plain.cycles);
+        assert_eq!(traced.layer_cycles, plain.layer_cycles);
+        // one row per layer, in order, cycles matching the result's own
+        // per-layer attribution exactly
+        assert_eq!(rows.0.len(), plain.layer_cycles.len());
+        for (l, (layer, _wall, cycles)) in rows.0.iter().enumerate() {
+            assert_eq!(*layer, l);
+            assert_eq!(*cycles, plain.layer_cycles[l]);
+        }
+        assert_eq!(rows.0.iter().map(|r| r.2).sum::<u64>(), plain.cycles);
     }
 }

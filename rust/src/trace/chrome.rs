@@ -1,0 +1,168 @@
+//! Chrome `trace_event` export of completed request traces.
+//!
+//! `pefsl serve --trace-out FILE` and `pefsl demo --trace-out FILE` drop
+//! a file loadable in `chrome://tracing` / Perfetto: one lane ("thread")
+//! per request trace, a slice per span, per-layer engine rows nested
+//! inside the engine slice. Same event grammar as the instruction
+//! timeline in [`crate::sim::trace`], but driven by measured wall time.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::RequestTrace;
+use crate::json::Value;
+
+/// Build the Chrome-trace event array. Timestamps are µs, normalized so
+/// the earliest trace starts at 0; each trace gets its own `tid` lane
+/// named `"<endpoint> <model> #<id>"`.
+pub fn chrome_events(traces: &[RequestTrace]) -> Value {
+    let base = traces.iter().map(|t| t.start_unix_us).min().unwrap_or(0);
+    // oldest trace on the top lane, newest at the bottom
+    let mut order: Vec<&RequestTrace> = traces.iter().collect();
+    order.sort_by_key(|t| t.start_unix_us);
+
+    let mut arr = Vec::new();
+    for (tid, trace) in order.iter().enumerate() {
+        let mut args = Value::obj();
+        args.set("name", format!("{} {} #{}", trace.endpoint, trace.model, trace.id));
+        let mut meta = Value::obj();
+        meta.set("ph", "M")
+            .set("pid", 1usize)
+            .set("tid", tid)
+            .set("name", "thread_name")
+            .set("args", args);
+        arr.push(meta);
+
+        let t0 = (trace.start_unix_us - base) as f64;
+        // the whole request as an enclosing slice, then every span
+        let mut total = Value::obj();
+        let mut targs = Value::obj();
+        targs
+            .set("id", trace.id.to_string())
+            .set("status", u64::from(trace.status))
+            .set("seq", trace.seq);
+        total
+            .set("ph", "X")
+            .set("pid", 1usize)
+            .set("tid", tid)
+            .set("name", "request")
+            .set("ts", t0)
+            .set("dur", trace.total_us.max(0.001))
+            .set("args", targs);
+        arr.push(total);
+
+        for s in &trace.spans {
+            let mut ev = Value::obj();
+            ev.set("ph", "X")
+                .set("pid", 1usize)
+                .set("tid", tid)
+                .set("name", s.name)
+                .set("ts", t0 + s.t0_us)
+                .set("dur", s.dur_us.max(0.001));
+            let mut args = Value::obj();
+            if let Some(d) = &s.detail {
+                args.set("detail", d.as_str());
+            }
+            if let Some(l) = s.layer {
+                args.set("layer", u64::from(l));
+            }
+            if let Some(c) = s.cycles {
+                args.set("cycles", c);
+            }
+            if let Some(w) = s.worker {
+                args.set("worker", u64::from(w));
+            }
+            if args != Value::obj() {
+                ev.set("args", args);
+            }
+            arr.push(ev);
+        }
+    }
+    Value::Arr(arr)
+}
+
+/// Write Chrome-trace JSON for `traces` to `w`.
+pub fn export(traces: &[RequestTrace], mut w: impl Write) -> Result<()> {
+    w.write_all(crate::json::to_string_pretty(&chrome_events(traces)).as_bytes())?;
+    Ok(())
+}
+
+/// Write Chrome-trace JSON to a file path.
+pub fn export_file(traces: &[RequestTrace], path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    export(traces, std::io::BufWriter::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Span, TraceId};
+
+    fn trace(id: u64, start_unix_us: u64) -> RequestTrace {
+        let mut sp = Span::new("engine", 10.0, 80.0);
+        sp.cycles = Some(1234);
+        let mut layer = Span::new("layer", 20.0, 30.0);
+        layer.layer = Some(0);
+        layer.detail = Some("conv1".to_string());
+        RequestTrace {
+            id: TraceId(id),
+            seq: id,
+            model: "m".to_string(),
+            endpoint: "infer".to_string(),
+            status: 200,
+            start_unix_us,
+            total_us: 100.0,
+            spans: vec![sp, layer],
+        }
+    }
+
+    #[test]
+    fn export_parses_and_timestamps_are_normalized() {
+        let traces = [trace(2, 5_000_100), trace(1, 5_000_000)];
+        let mut buf = Vec::new();
+        export(&traces, &mut buf).unwrap();
+        let v = crate::json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        let evs = v.as_arr().unwrap();
+        // 2 traces × (1 meta + 1 request + 2 spans)
+        assert_eq!(evs.len(), 8);
+        let xs: Vec<&Value> =
+            evs.iter().filter(|e| e.get("ph").and_then(Value::as_str) == Some("X")).collect();
+        // earliest trace normalized to ts 0; all ts non-negative
+        let min_ts = xs.iter().filter_map(|e| e.get("ts").and_then(Value::as_f64)).fold(f64::MAX, f64::min);
+        assert_eq!(min_ts, 0.0);
+        for e in &xs {
+            assert!(e.get("ts").and_then(Value::as_f64).unwrap() >= 0.0);
+            assert!(e.get("dur").and_then(Value::as_f64).unwrap() > 0.0);
+        }
+        // the later trace's request slice starts 100 µs after the earlier one
+        let reqs: Vec<f64> = xs
+            .iter()
+            .filter(|e| e.get("name").and_then(Value::as_str) == Some("request"))
+            .map(|e| e.get("ts").and_then(Value::as_f64).unwrap())
+            .collect();
+        assert_eq!(reqs, vec![0.0, 100.0]);
+    }
+
+    #[test]
+    fn layer_rows_nest_inside_their_lane() {
+        let traces = [trace(7, 1_000)];
+        let v = chrome_events(&traces);
+        let evs = v.as_arr().unwrap();
+        let layer = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Value::as_str) == Some("layer"))
+            .unwrap();
+        assert_eq!(layer.path(&["args", "detail"]).and_then(Value::as_str), Some("conv1"));
+        assert_eq!(layer.get("tid").and_then(Value::as_usize), Some(0));
+    }
+
+    #[test]
+    fn empty_trace_set_exports_empty_array() {
+        let v = chrome_events(&[]);
+        assert_eq!(v, Value::Arr(Vec::new()));
+    }
+}

@@ -1,0 +1,161 @@
+//! Bounded operational event journal.
+//!
+//! Answers "what happened around the p99 spike" from the server itself:
+//! registry deploys/hot-swaps (with golden-verify and build timing),
+//! session mint/expiry, admission saturation onsets and recoveries,
+//! drain start/finish. Always on — events are rare and cheap — and
+//! served at `GET /debug/events`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::json::Value;
+
+/// Default ring capacity (events retained).
+pub const DEFAULT_CAP: usize = 256;
+
+/// One operational event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Monotone sequence number (1-based; total events ever recorded).
+    pub seq: u64,
+    /// Wall-clock timestamp, ms since the unix epoch.
+    pub unix_ms: u64,
+    /// Stable machine-readable kind, e.g. `"deploy"`,
+    /// `"session_expire"`, `"admission_saturated"`.
+    pub kind: &'static str,
+    /// Model the event concerns (`"-"` for server-wide events).
+    pub model: String,
+    /// Human-readable detail line.
+    pub detail: String,
+    /// Duration of the operation, when it has one (deploy verify+build).
+    pub dur_ms: Option<f64>,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("seq", self.seq)
+            .set("unix_ms", self.unix_ms)
+            .set("kind", self.kind)
+            .set("model", self.model.as_str())
+            .set("detail", self.detail.as_str());
+        if let Some(d) = self.dur_ms {
+            o.set("dur_ms", d);
+        }
+        o
+    }
+}
+
+/// Fixed-capacity, thread-safe event ring.
+#[derive(Debug)]
+pub struct EventJournal {
+    cap: usize,
+    seq: AtomicU64,
+    ring: Mutex<VecDeque<Event>>,
+}
+
+impl Default for EventJournal {
+    fn default() -> EventJournal {
+        EventJournal::new(DEFAULT_CAP)
+    }
+}
+
+impl EventJournal {
+    pub fn new(cap: usize) -> EventJournal {
+        EventJournal { cap: cap.max(1), seq: AtomicU64::new(0), ring: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Record an event without a duration.
+    pub fn record(&self, kind: &'static str, model: &str, detail: impl Into<String>) {
+        self.push(kind, model, detail.into(), None);
+    }
+
+    /// Record an event with an operation duration in milliseconds.
+    pub fn record_timed(
+        &self,
+        kind: &'static str,
+        model: &str,
+        detail: impl Into<String>,
+        dur_ms: f64,
+    ) {
+        self.push(kind, model, detail.into(), Some(dur_ms));
+    }
+
+    fn push(&self, kind: &'static str, model: &str, detail: String, dur_ms: Option<f64>) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let unix_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let ev = Event { seq, unix_ms, kind, model: model.to_string(), detail, dur_ms };
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(ev);
+    }
+
+    /// Total events ever recorded (including ones evicted from the ring).
+    pub fn total(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// The `n` most recent events, newest first.
+    pub fn recent(&self, n: usize) -> Vec<Event> {
+        let ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        ring.iter().rev().take(n).cloned().collect()
+    }
+
+    pub fn to_json(&self, n: usize) -> Value {
+        let mut o = Value::obj();
+        o.set("total", self.total())
+            .set("events", Value::Arr(self.recent(n).iter().map(Event::to_json).collect()));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order_and_newest_first() {
+        let j = EventJournal::new(8);
+        j.record("server_start", "-", "listening");
+        j.record_timed("deploy", "m", "m@v1 gen 1", 12.5);
+        let ev = j.recent(10);
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].kind, "deploy");
+        assert_eq!(ev[0].dur_ms, Some(12.5));
+        assert_eq!(ev[1].kind, "server_start");
+        assert!(ev[0].seq > ev[1].seq);
+        assert_eq!(j.total(), 2);
+    }
+
+    #[test]
+    fn ring_is_bounded_but_total_keeps_counting() {
+        let j = EventJournal::new(4);
+        for i in 0..10 {
+            j.record("session_mint", "m", format!("tok{i}"));
+        }
+        let ev = j.recent(100);
+        assert_eq!(ev.len(), 4);
+        assert_eq!(ev[0].detail, "tok9");
+        assert_eq!(ev[3].detail, "tok6");
+        assert_eq!(j.total(), 10);
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = EventJournal::default();
+        j.record("drain_start", "-", "shutdown requested");
+        let v = j.to_json(5);
+        assert_eq!(v.get("total").and_then(Value::as_usize), Some(1));
+        let evs = v.get("events").and_then(Value::as_arr).unwrap();
+        assert_eq!(evs[0].get("kind").and_then(Value::as_str), Some("drain_start"));
+        assert!(evs[0].get("unix_ms").and_then(Value::as_f64).is_some());
+    }
+}

@@ -1,0 +1,481 @@
+//! End-to-end request tracing and operational journaling.
+//!
+//! The serving path so far only reported *endpoint-level* latency
+//! quantiles: once a request crossed into admission, the worker pool and
+//! the simulator, its time disappeared into one number. This module
+//! attributes that time span by span — HTTP read/parse, admission,
+//! session lookup, worker dispatch (and which slot), per-layer engine
+//! compute with modeled cycles, boundary requantization, NCM
+//! enroll/classify — without adding a dependency or stalling writers.
+//!
+//! Shape of the subsystem:
+//!
+//! * [`TraceId`] — 64-bit id, minted locally or adopted from the
+//!   `x-pefsl-trace` request header (and echoed back).
+//! * [`Tracer`] / [`TraceBuilder`] — a per-request span recorder. A
+//!   disabled [`Tracer`] is a `None` and every call on it is a branch,
+//!   so untraced requests pay near-zero cost.
+//! * [`TraceHub`] — sampling policy plus per-thread, fixed-capacity
+//!   ring buffers of completed [`RequestTrace`]s. Each thread registers
+//!   its own `Mutex<Ring>` (a [`TraceSink`]); readers drain rings
+//!   without ever blocking a writer mid-request.
+//! * [`journal::EventJournal`] — a bounded ring of operational events
+//!   (deploys, session mint/expiry, admission saturation, drain), always
+//!   on, exposed at `GET /debug/events`.
+//! * [`chrome::export`] — Chrome `trace_event` JSON for
+//!   `chrome://tracing` / Perfetto, wired to `--trace-out`.
+
+pub mod chrome;
+pub mod journal;
+
+pub use journal::{Event, EventJournal};
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::json::Value;
+
+/// Request header carrying (and echoing) a trace id.
+pub const TRACE_HEADER: &str = "x-pefsl-trace";
+
+/// Completed traces retained per registered thread ring.
+const RING_CAP: usize = 64;
+
+/// A 64-bit trace id, rendered as 16 lowercase hex digits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// Parse a header value: 1–16 hex digits (case-insensitive).
+    pub fn parse(s: &str) -> Option<TraceId> {
+        let s = s.trim();
+        if s.is_empty() || s.len() > 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(TraceId)
+    }
+}
+
+impl fmt::Display for TraceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// One attributed interval inside a request. Offsets are µs from the
+/// trace start (which may be back-dated to cover the HTTP read).
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    /// Free-form qualifier (e.g. the layer name for per-layer rows).
+    pub detail: Option<String>,
+    pub t0_us: f64,
+    pub dur_us: f64,
+    pub layer: Option<u32>,
+    pub cycles: Option<u64>,
+    pub worker: Option<u32>,
+}
+
+impl Span {
+    pub fn new(name: &'static str, t0_us: f64, dur_us: f64) -> Span {
+        Span { name, detail: None, t0_us, dur_us, layer: None, cycles: None, worker: None }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("name", self.name).set("t0_us", self.t0_us).set("dur_us", self.dur_us);
+        if let Some(d) = &self.detail {
+            o.set("detail", d.as_str());
+        }
+        if let Some(l) = self.layer {
+            o.set("layer", u64::from(l));
+        }
+        if let Some(c) = self.cycles {
+            o.set("cycles", c);
+        }
+        if let Some(w) = self.worker {
+            o.set("worker", u64::from(w));
+        }
+        o
+    }
+}
+
+/// A completed, immutable request trace.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: TraceId,
+    /// Global completion order (monotone across all threads).
+    pub seq: u64,
+    pub model: String,
+    pub endpoint: String,
+    pub status: u16,
+    /// Wall-clock start, µs since the unix epoch (for cross-trace ordering).
+    pub start_unix_us: u64,
+    pub total_us: f64,
+    pub spans: Vec<Span>,
+}
+
+impl RequestTrace {
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("id", self.id.to_string())
+            .set("seq", self.seq)
+            .set("model", self.model.as_str())
+            .set("endpoint", self.endpoint.as_str())
+            .set("status", u64::from(self.status))
+            .set("start_unix_us", self.start_unix_us)
+            .set("total_us", self.total_us)
+            .set("spans", Value::Arr(self.spans.iter().map(Span::to_json).collect()));
+        o
+    }
+}
+
+fn unix_us_now() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// In-flight span recorder for one request. Created via
+/// [`TraceHub::begin`]; finish with [`Tracer::finish`] and hand the
+/// result to a [`TraceSink`].
+#[derive(Debug)]
+pub struct TraceBuilder {
+    id: TraceId,
+    start: Instant,
+    start_unix_us: u64,
+    spans: Vec<Span>,
+}
+
+impl TraceBuilder {
+    fn new(id: TraceId) -> TraceBuilder {
+        TraceBuilder { id, start: Instant::now(), start_unix_us: unix_us_now(), spans: Vec::new() }
+    }
+
+    /// Shift the trace origin `dur` into the past and record `[0, dur]`
+    /// as `name` — used so the HTTP read (which finished before the
+    /// tracer existed) still appears at offset zero.
+    fn backdate(&mut self, name: &'static str, dur: Duration) {
+        self.start -= dur;
+        self.start_unix_us = self.start_unix_us.saturating_sub(dur.as_micros() as u64);
+        let dur_us = dur.as_secs_f64() * 1e6;
+        self.spans.push(Span::new(name, 0.0, dur_us));
+    }
+
+    fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+
+    fn add(&mut self, name: &'static str, t0: Instant) {
+        let t0_us = t0.duration_since(self.start).as_secs_f64() * 1e6;
+        self.spans.push(Span::new(name, t0_us, self.elapsed_us() - t0_us));
+    }
+
+    /// Offset of `t` relative to the trace origin, in µs.
+    fn offset_us(&self, t: Instant) -> f64 {
+        t.duration_since(self.start).as_secs_f64() * 1e6
+    }
+}
+
+/// Cheap handle threaded through the request path: either an active
+/// [`TraceBuilder`] or nothing. All mutators are a branch when off.
+#[derive(Debug, Default)]
+pub struct Tracer(Option<TraceBuilder>);
+
+impl Tracer {
+    /// A disabled tracer (every call is a no-op).
+    pub fn off() -> Tracer {
+        Tracer(None)
+    }
+
+    pub fn on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn id(&self) -> Option<TraceId> {
+        self.0.as_ref().map(|b| b.id)
+    }
+
+    /// Stamp "now" for a later [`Tracer::add`]. Always returns a real
+    /// instant so call sites don't need their own enabled-branch.
+    pub fn start(&self) -> Instant {
+        Instant::now()
+    }
+
+    /// Record `[t0, now]` as a span named `name`.
+    pub fn add(&mut self, name: &'static str, t0: Instant) {
+        if let Some(b) = &mut self.0 {
+            b.add(name, t0);
+        }
+    }
+
+    /// Record a fully specified span (per-layer / per-worker rows).
+    pub fn add_span(&mut self, span: Span) {
+        if let Some(b) = &mut self.0 {
+            b.spans.push(span);
+        }
+    }
+
+    /// Offset of `t` from the trace origin in µs (0.0 when disabled).
+    pub fn offset_us(&self, t: Instant) -> f64 {
+        self.0.as_ref().map_or(0.0, |b| b.offset_us(t))
+    }
+
+    /// See [`TraceBuilder::backdate`].
+    pub fn backdate(&mut self, name: &'static str, dur: Duration) {
+        if let Some(b) = &mut self.0 {
+            b.backdate(name, dur);
+        }
+    }
+
+    /// Close the trace. Returns `None` when disabled. The caller labels
+    /// the trace and submits it to a [`TraceSink`] after the response is
+    /// written.
+    pub fn finish(self, model: &str, endpoint: &str, status: u16) -> Option<RequestTrace> {
+        let b = self.0?;
+        let total_us = b.elapsed_us();
+        Some(RequestTrace {
+            id: b.id,
+            seq: 0,
+            model: model.to_string(),
+            endpoint: endpoint.to_string(),
+            status,
+            start_unix_us: b.start_unix_us,
+            total_us,
+            spans: b.spans,
+        })
+    }
+}
+
+/// Fixed-capacity ring of completed traces.
+#[derive(Debug)]
+struct Ring {
+    buf: VecDeque<RequestTrace>,
+    cap: usize,
+}
+
+impl Ring {
+    fn push(&mut self, t: RequestTrace) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(t);
+    }
+}
+
+/// Per-thread submission handle: one mutex, contended only by readers
+/// of `/debug/trace`, never by another writer thread.
+#[derive(Clone, Debug)]
+pub struct TraceSink {
+    ring: Arc<Mutex<Ring>>,
+    seq: Arc<AtomicU64>,
+}
+
+impl TraceSink {
+    /// Record a completed trace, stamping its global completion order.
+    pub fn submit(&self, mut trace: RequestTrace) {
+        trace.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).push(trace);
+    }
+}
+
+/// Sampling policy + the registry of per-thread rings.
+///
+/// `sample_every == 0` means "header-only": requests are traced only
+/// when the client sends `x-pefsl-trace`. `N > 0` additionally traces
+/// every Nth request. A request carrying the header is always traced
+/// regardless of the sampling rate.
+#[derive(Debug)]
+pub struct TraceHub {
+    sample_every: u32,
+    counter: AtomicU64,
+    minted: AtomicU64,
+    seq: Arc<AtomicU64>,
+    rings: Mutex<Vec<Arc<Mutex<Ring>>>>,
+}
+
+impl TraceHub {
+    pub fn new(sample_every: u32) -> TraceHub {
+        TraceHub {
+            sample_every,
+            counter: AtomicU64::new(0),
+            minted: AtomicU64::new(0x9e37_79b9_7f4a_7c15),
+            seq: Arc::new(AtomicU64::new(1)),
+            rings: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn sample_every(&self) -> u32 {
+        self.sample_every
+    }
+
+    /// Register the calling thread, returning its submission sink.
+    /// Rings whose previous owner thread has exited (sink dropped, so
+    /// the `Arc` is uniquely held here) are recycled, bounding memory at
+    /// the thread-concurrency high-water mark.
+    pub fn register(&self) -> TraceSink {
+        let mut rings = self.rings.lock().unwrap_or_else(|e| e.into_inner());
+        for ring in rings.iter() {
+            if Arc::strong_count(ring) == 1 {
+                return TraceSink { ring: Arc::clone(ring), seq: Arc::clone(&self.seq) };
+            }
+        }
+        let ring = Arc::new(Mutex::new(Ring { buf: VecDeque::new(), cap: RING_CAP }));
+        rings.push(Arc::clone(&ring));
+        TraceSink { ring, seq: Arc::clone(&self.seq) }
+    }
+
+    /// Start a tracer for one request. `header` is the raw
+    /// `x-pefsl-trace` value, if the client sent one: its id is adopted
+    /// (or a fresh one minted if it doesn't parse) and tracing is forced
+    /// on. Otherwise the sampling policy decides.
+    pub fn begin(&self, header: Option<&str>) -> Tracer {
+        if let Some(h) = header {
+            let id = TraceId::parse(h).unwrap_or_else(|| self.mint());
+            return Tracer(Some(TraceBuilder::new(id)));
+        }
+        if self.sample_every > 0
+            && self.counter.fetch_add(1, Ordering::Relaxed) % u64::from(self.sample_every) == 0
+        {
+            return Tracer(Some(TraceBuilder::new(self.mint())));
+        }
+        Tracer(None)
+    }
+
+    /// Mint a fresh locally-unique id (SplitMix64 over a counter).
+    pub fn mint(&self) -> TraceId {
+        let mut z = self.minted.fetch_add(0x9e37_79b9_7f4a_7c15, Ordering::Relaxed);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        TraceId(z ^ (z >> 31))
+    }
+
+    /// The `n` most recently completed traces, newest first, merged
+    /// across all thread rings by completion order.
+    pub fn recent(&self, n: usize) -> Vec<RequestTrace> {
+        let rings: Vec<Arc<Mutex<Ring>>> =
+            self.rings.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let mut all = Vec::new();
+        for ring in rings {
+            let r = ring.lock().unwrap_or_else(|e| e.into_inner());
+            all.extend(r.buf.iter().cloned());
+        }
+        all.sort_by_key(|t| std::cmp::Reverse(t.seq));
+        all.truncate(n);
+        all
+    }
+
+    pub fn recent_json(&self, n: usize) -> Value {
+        Value::Arr(self.recent(n).iter().map(RequestTrace::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_id_parses_and_round_trips() {
+        let id = TraceId(0xdead_beef_0123_4567);
+        assert_eq!(id.to_string(), "deadbeef01234567");
+        assert_eq!(TraceId::parse("deadbeef01234567"), Some(id));
+        assert_eq!(TraceId::parse("DEADBEEF01234567"), Some(id));
+        assert_eq!(TraceId::parse("ff"), Some(TraceId(0xff)));
+        assert_eq!(TraceId::parse(""), None);
+        assert_eq!(TraceId::parse("not-hex"), None);
+        assert_eq!(TraceId::parse("00112233445566778899"), None); // > 16 digits
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut tr = Tracer::off();
+        assert!(!tr.on());
+        let t0 = tr.start();
+        tr.add("x", t0);
+        tr.add_span(Span::new("y", 0.0, 1.0));
+        assert!(tr.finish("m", "infer", 200).is_none());
+    }
+
+    #[test]
+    fn header_forces_tracing_even_at_sample_zero() {
+        let hub = TraceHub::new(0);
+        assert!(!hub.begin(None).on());
+        let tr = hub.begin(Some("abcd"));
+        assert!(tr.on());
+        assert_eq!(tr.id(), Some(TraceId(0xabcd)));
+        // unparsable header still traces, with a minted id
+        let tr = hub.begin(Some("zzz"));
+        assert!(tr.on());
+        assert!(tr.id().is_some());
+    }
+
+    #[test]
+    fn sampling_traces_every_nth() {
+        let hub = TraceHub::new(3);
+        let on: Vec<bool> = (0..9).map(|_| hub.begin(None).on()).collect();
+        assert_eq!(on, [true, false, false, true, false, false, true, false, false]);
+    }
+
+    #[test]
+    fn backdate_shifts_origin_and_covers_read() {
+        let hub = TraceHub::new(1);
+        let mut tr = hub.begin(None);
+        tr.backdate("http/read", Duration::from_micros(250));
+        let t = tr.finish("m", "infer", 200).unwrap();
+        assert_eq!(t.spans[0].name, "http/read");
+        assert_eq!(t.spans[0].t0_us, 0.0);
+        assert!((t.spans[0].dur_us - 250.0).abs() < 1.0);
+        assert!(t.total_us >= 250.0);
+    }
+
+    #[test]
+    fn hub_merges_rings_newest_first_and_bounds_memory() {
+        let hub = TraceHub::new(1);
+        let sink = hub.register();
+        for i in 0..(RING_CAP + 10) {
+            let tr = hub.begin(None);
+            let mut t = tr.finish("m", "infer", 200).unwrap();
+            t.start_unix_us = i as u64;
+            sink.submit(t);
+        }
+        let recent = hub.recent(5);
+        assert_eq!(recent.len(), 5);
+        // newest first by completion seq
+        for w in recent.windows(2) {
+            assert!(w[0].seq > w[1].seq);
+        }
+        assert_eq!(recent[0].start_unix_us, (RING_CAP + 9) as u64);
+        // ring stayed bounded
+        assert_eq!(hub.recent(usize::MAX).len(), RING_CAP);
+    }
+
+    #[test]
+    fn dead_thread_rings_are_recycled() {
+        let hub = Arc::new(TraceHub::new(1));
+        for _ in 0..8 {
+            let h = Arc::clone(&hub);
+            std::thread::spawn(move || {
+                let sink = h.register();
+                sink.submit(h.begin(None).finish("m", "infer", 200).unwrap());
+            })
+            .join()
+            .unwrap();
+        }
+        // all 8 sequential threads shared recycled rings
+        let rings = hub.rings.lock().unwrap().len();
+        assert!(rings <= 2, "expected ring recycling, got {rings} rings");
+        assert_eq!(hub.recent(usize::MAX).len(), 8);
+    }
+
+    #[test]
+    fn minted_ids_are_distinct() {
+        let hub = TraceHub::new(1);
+        let a = hub.mint();
+        let b = hub.mint();
+        assert_ne!(a, b);
+    }
+}

@@ -217,6 +217,11 @@ fn overload_saturates_into_clean_429s() {
         .unwrap();
     assert_eq!(infer_row.req_usize("ok").unwrap() as u64, total_ok);
     assert_eq!(infer_row.req_usize("rejected").unwrap() as u64, total_rejected);
+    // allocation regression guard: hundreds of requests through the
+    // steady-state record() fast path created only a handful of distinct
+    // (model, endpoint) rows — the per-request String pair is gone
+    let rows_created = metrics.req_usize("endpoint_rows").unwrap();
+    assert!(rows_created <= 4, "endpoint rows grew with traffic: {rows_created}");
 
     handle.shutdown();
     handle.join().unwrap();
