@@ -1,0 +1,259 @@
+//! Bench: serving throughput — the event-driven connection-worker pool
+//! against the legacy thread-per-connection accept loop, under keep-alive
+//! and connection-churn load; batch coalescing through the per-model
+//! scheduler; and the JSON-vs-binary infer wire cost.
+//!
+//! Emits `BENCH_serve.json` (override the path with `PEFSL_BENCH_OUT`):
+//! saturated requests/s with merged p50/p95 latencies for both connection
+//! modes and both load shapes, the mean/max coalesced batch size observed
+//! by `/metrics`, and the exact wire bytes of one single-image infer in
+//! JSON and `PFT1`/`PFR1` binary framing.  Binary and JSON answers are
+//! asserted bit-identical before any number is recorded.  CI runs it in
+//! smoke mode (`PEFSL_BENCH_SMOKE=1`): shorter load windows, fewer
+//! clients, same assertions and artifact shape.
+//!
+//! Run: `cargo bench --bench serve_throughput`.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use pefsl::bundle::Bundle;
+use pefsl::dse::BackboneSpec;
+use pefsl::engine::Registry;
+use pefsl::json::{to_file, to_string_pretty, Value};
+use pefsl::serve::client::HttpClient;
+use pefsl::serve::tensor;
+use pefsl::serve::{ServeConfig, Server, ServerHandle};
+use pefsl::tarch::Tarch;
+use pefsl::util::Prng;
+
+const IMG_ELEMS: usize = 8 * 8 * 3;
+
+fn tiny_bundle() -> Bundle {
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    Bundle::pack("m", "v1", spec.build_graph(1).unwrap(), Tarch::z7020_8x8()).unwrap()
+}
+
+fn start(bundle: &Bundle, cfg: ServeConfig) -> (ServerHandle, String) {
+    let registry = Arc::new(Registry::new());
+    registry.deploy("m", bundle).unwrap();
+    let handle = Server::start(registry, "127.0.0.1:0", cfg).unwrap();
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+struct LoadStats {
+    requests: u64,
+    rps: f64,
+    p50_us: f64,
+    p95_us: f64,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn stats_json(s: &LoadStats) -> Value {
+    let mut v = Value::obj();
+    v.set("requests", s.requests)
+        .set("rps", s.rps)
+        .set("p50_us", s.p50_us)
+        .set("p95_us", s.p95_us);
+    v
+}
+
+/// Hammer `/v1/m/infer` from `clients` threads for `dur`.  `churn` opens a
+/// fresh connection per request (the shape that punishes per-connection
+/// threads); otherwise one keep-alive connection per client.  Latencies
+/// from every thread are merged and sorted for the quantiles.
+fn run_load(
+    addr: &str,
+    clients: usize,
+    dur: Duration,
+    churn: bool,
+    body: &Arc<Vec<u8>>,
+) -> LoadStats {
+    let t0 = Instant::now();
+    let deadline = t0 + dur;
+    let mut handles = Vec::new();
+    for _ in 0..clients {
+        let addr = addr.to_string();
+        let body = Arc::clone(body);
+        handles.push(thread::spawn(move || {
+            let mut lat = Vec::new();
+            let mut conn: Option<HttpClient> = None;
+            while Instant::now() < deadline {
+                if conn.is_none() {
+                    conn = Some(HttpClient::connect(&addr).expect("connect"));
+                }
+                let http = conn.as_mut().unwrap();
+                let r0 = Instant::now();
+                let r = http
+                    .request_bytes("POST", "/v1/m/infer", &[], None, &body)
+                    .expect("infer request");
+                let ok = r.status == 200 || r.status == 429;
+                assert!(ok, "status {}: {}", r.status, r.body_text());
+                if r.status == 200 {
+                    lat.push(r0.elapsed().as_secs_f64() * 1e6);
+                }
+                if churn {
+                    conn = None;
+                }
+            }
+            lat
+        }));
+    }
+    let mut all: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    LoadStats {
+        requests: all.len() as u64,
+        rps: all.len() as f64 / wall,
+        p50_us: percentile(&all, 0.50),
+        p95_us: percentile(&all, 0.95),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("PEFSL_BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    let (clients, warmup, measure) = if smoke {
+        (4usize, Duration::from_millis(100), Duration::from_millis(300))
+    } else {
+        (8usize, Duration::from_millis(300), Duration::from_secs(2))
+    };
+
+    let bundle = tiny_bundle();
+    let mut rng = Prng::new(7);
+    let image: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.f32()).collect();
+    let mut body = Value::obj();
+    body.set("image", Value::Arr(image.iter().map(|&x| Value::Num(f64::from(x))).collect()));
+    let json_body = Arc::new(to_string_pretty(&body).into_bytes());
+
+    let mut report = Value::obj();
+    report
+        .set("bench", "serve_throughput")
+        .set("mode", if smoke { "smoke" } else { "full" })
+        .set("clients", clients)
+        .set("img_elems", IMG_ELEMS);
+
+    // --- 1. pool vs thread-per-connection under load ---------------------
+    let mut modes: Vec<(&str, LoadStats, LoadStats)> = Vec::new();
+    for (label, thread_per_conn) in [("pool", false), ("thread_per_conn", true)] {
+        let cfg = ServeConfig { queue_depth: 256, thread_per_conn, ..ServeConfig::default() };
+        let (handle, addr) = start(&bundle, cfg);
+        let _ = run_load(&addr, clients, warmup, false, &json_body);
+        let keepalive = run_load(&addr, clients, measure, false, &json_body);
+        let churn = run_load(&addr, clients, measure, true, &json_body);
+        println!(
+            "{label}: keep-alive {:.0} req/s (p50 {:.0} µs, p95 {:.0} µs), \
+             churn {:.0} req/s (p50 {:.0} µs, p95 {:.0} µs)",
+            keepalive.rps, keepalive.p50_us, keepalive.p95_us, churn.rps, churn.p50_us,
+            churn.p95_us
+        );
+        handle.shutdown();
+        handle.join().unwrap();
+        modes.push((label, keepalive, churn));
+    }
+    let pool = &modes[0];
+    let tpc = &modes[1];
+    let speedup_keepalive = pool.1.rps / tpc.1.rps.max(1e-9);
+    let speedup_churn = pool.2.rps / tpc.2.rps.max(1e-9);
+    println!(
+        "pool vs thread-per-conn: {speedup_keepalive:.2}× keep-alive, {speedup_churn:.2}× churn"
+    );
+    let mut scenarios = Value::obj();
+    for (label, keepalive, churn) in &modes {
+        let mut m = Value::obj();
+        m.set("keepalive", stats_json(keepalive)).set("churn", stats_json(churn));
+        scenarios.set(*label, m);
+    }
+    scenarios
+        .set("speedup_pool_vs_thread_keepalive", speedup_keepalive)
+        .set("speedup_pool_vs_thread_churn", speedup_churn);
+    report.set("scenarios", scenarios);
+
+    // --- 2. batch coalescing through the scheduler -----------------------
+    let cfg = ServeConfig {
+        queue_depth: 256,
+        coalesce_window: Duration::from_millis(2),
+        coalesce_max: 32,
+        ..ServeConfig::default()
+    };
+    let (handle, addr) = start(&bundle, cfg);
+    let under_window = run_load(&addr, clients, measure, false, &json_body);
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let metrics = http.get("/metrics").unwrap().json().unwrap();
+    let rows = metrics.req_arr("admission").unwrap();
+    let row = rows.iter().find(|r| r.req_str("model").unwrap() == "m").expect("queue row");
+    let co = row.get("coalesce").expect("coalesce stats").clone();
+    let mean_batch = co.get("mean_batch").unwrap().as_f64().unwrap();
+    let max_batch = co.req_usize("max_batch").unwrap();
+    assert!(mean_batch >= 1.0, "mean batch below one: {mean_batch}");
+    println!(
+        "coalescing (2 ms window, {clients} clients): {:.0} req/s, mean batch {mean_batch:.2}, \
+         max batch {max_batch}",
+        under_window.rps
+    );
+    drop(http);
+    handle.shutdown();
+    handle.join().unwrap();
+    let mut coalesce = Value::obj();
+    coalesce
+        .set("window_ms", 2.0)
+        .set("rps", under_window.rps)
+        .set("batches", co.req_usize("batches").unwrap())
+        .set("images", co.req_usize("images").unwrap())
+        .set("mean_batch", mean_batch)
+        .set("max_batch", max_batch);
+    report.set("coalesce", coalesce);
+
+    // --- 3. wire bytes: JSON vs PFT1/PFR1 binary framing -----------------
+    let (handle, addr) = start(&bundle, ServeConfig::default());
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let r_json = http.request_bytes("POST", "/v1/m/infer", &[], None, &json_body).unwrap();
+    assert_eq!(r_json.status, 200, "{}", r_json.body_text());
+    let json_bits: Vec<u32> = r_json.json().unwrap().req_arr("items").unwrap()[0]
+        .req_arr("features")
+        .unwrap()
+        .iter()
+        .map(|x| (x.as_f64().unwrap() as f32).to_bits())
+        .collect();
+    let frame = tensor::encode_images(std::slice::from_ref(&image));
+    let r_bin = http.post_tensor("/v1/m/infer", std::slice::from_ref(&image), true).unwrap();
+    assert_eq!(r_bin.status, 200, "{}", r_bin.body_text());
+    let bin_bits: Vec<u32> =
+        r_bin.tensor_features().unwrap()[0].iter().map(|v| v.to_bits()).collect();
+    assert_eq!(json_bits, bin_bits, "binary answer diverged from JSON");
+    handle.shutdown();
+    handle.join().unwrap();
+
+    let json_bytes = json_body.len() + r_json.body.len();
+    let bin_bytes = frame.len() + r_bin.body.len();
+    let ratio = json_bytes as f64 / bin_bytes as f64;
+    // the framing win is structural (~4 B/f32 vs a shortest-roundtrip f64
+    // decimal plus punctuation); hold a conservative floor here and record
+    // the exact ratio in the artifact
+    assert!(ratio >= 3.0, "binary framing saved only {ratio:.2}× over JSON");
+    println!(
+        "wire bytes (1 image infer): JSON {json_bytes} B vs binary {bin_bytes} B → {ratio:.1}× \
+         smaller"
+    );
+    let mut wire = Value::obj();
+    wire.set("json_request_bytes", json_body.len())
+        .set("json_response_bytes", r_json.body.len())
+        .set("binary_request_bytes", frame.len())
+        .set("binary_response_bytes", r_bin.body.len())
+        .set("json_over_binary", ratio);
+    report.set("wire", wire);
+
+    let out = std::env::var("PEFSL_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    to_file(&out, &report).expect("write BENCH_serve.json");
+    println!("wrote {out}");
+}

@@ -772,6 +772,11 @@ pub fn serve_cmd(args: &Args) -> Result<i32> {
         idle_session: std::time::Duration::from_secs(args.get_u64("idle-timeout", 300)?),
         admin_token: args.get("admin-token").map(str::to_string),
         trace_sample,
+        conn_workers: args.get_usize("conn-workers", 0)?,
+        max_conns: args.get_usize("max-conns", 1024)?,
+        coalesce_window: std::time::Duration::from_millis(args.get_u64("coalesce-window", 0)?),
+        coalesce_max: args.get_usize("coalesce-max", 32)?,
+        thread_per_conn: args.has("thread-per-conn"),
         ..ServeConfig::default()
     };
     let handle = Server::start(Arc::clone(&registry), &addr, cfg)?;

@@ -13,6 +13,8 @@
 //! pefsl deploy     --bundle DIR [--name N --frames N]
 //! pefsl serve      --addr HOST:PORT [--bundle DIR | --dir ROOT] [--name N]
 //!                  [--workers N --queue-depth N --idle-timeout S]
+//!                  [--conn-workers N --max-conns N --coalesce-window MS]
+//!                  [--coalesce-max N --thread-per-conn]
 //!                  [--admin-token T --addr-file PATH]
 //!                  [--trace-sample N --trace-out FILE]
 //! pefsl models     [--dir DIR | --bundle DIR] [--check] [--json [PATH]]
@@ -126,6 +128,12 @@ pub fn usage() -> String {
      \x20                    shares the /models endpoint serializer\n\
      \x20 --addr HOST:PORT   serve: bind address (default 127.0.0.1:7878; port 0 = any)\n\
      \x20 --queue-depth N    serve: per-model admission budget before 429 (default 32)\n\
+     \x20 --conn-workers N   serve: event-loop connection workers (default 0 = auto)\n\
+     \x20 --max-conns N      serve: live-connection cap; 503 beyond (default 1024)\n\
+     \x20 --coalesce-window MS  serve: linger MS per dispatch to merge queued infers\n\
+     \x20                    into one engine batch (default 0 = merge only what waits)\n\
+     \x20 --coalesce-max N   serve: max images per coalesced batch (default 32)\n\
+     \x20 --thread-per-conn  serve: legacy thread-per-connection loop (bench baseline)\n\
      \x20 --idle-timeout S   serve: session idle-expiry seconds (default 300)\n\
      \x20 --admin-token T    serve: require T in x-pefsl-admin for /admin endpoints\n\
      \x20 --addr-file PATH   serve: write the bound address to PATH at startup\n\

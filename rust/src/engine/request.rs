@@ -168,6 +168,22 @@ impl InferResponse {
         self.items.into_iter().map(|i| i.features).collect()
     }
 
+    /// Split a batched response back into per-request responses of
+    /// `counts[i]` items each, in order — the inverse of coalescing N
+    /// queued requests into one engine batch.  `counts` must sum to the
+    /// item count.  `quant_us` is a batch-level measurement, so it is
+    /// replicated onto every slice (each caller sees the boundary cost its
+    /// batch actually paid).
+    pub fn split(self, counts: &[usize]) -> Vec<InferResponse> {
+        debug_assert_eq!(counts.iter().sum::<usize>(), self.items.len(), "split counts mismatch");
+        let quant_us = self.quant_us;
+        let mut items = self.items.into_iter();
+        counts
+            .iter()
+            .map(|&n| InferResponse { items: items.by_ref().take(n).collect(), quant_us })
+            .collect()
+    }
+
     /// The feature [`QFormat`], if every item carries quantized features
     /// in one common format (i.e. the engine runs a quantization config).
     pub fn feature_format(&self) -> Option<QFormat> {
@@ -275,6 +291,31 @@ mod tests {
         assert_eq!(ragged.feature_format(), None);
         assert_eq!(InferResponse::new(vec![]).feature_format(), None);
         assert_eq!(InferResponse::new(vec![item(None, None)]).feature_format(), None);
+    }
+
+    #[test]
+    fn split_reverses_coalescing_in_order() {
+        let r = InferResponse::new(vec![
+            item(Some(1.0), Some(1)),
+            item(Some(2.0), Some(2)),
+            item(Some(3.0), Some(3)),
+        ]);
+        let mut r = r;
+        r.quant_us = Some(7.5);
+        let parts = r.split(&[2, 1]);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].items.len(), 2);
+        assert_eq!(parts[0].total_cycles(), Some(3));
+        assert_eq!(parts[1].items.len(), 1);
+        assert_eq!(parts[1].total_cycles(), Some(3));
+        // batch-level quant time is replicated onto every slice
+        assert_eq!(parts[0].quant_us, Some(7.5));
+        assert_eq!(parts[1].quant_us, Some(7.5));
+        // zero-count slices are legal (a caller whose job expired mid-merge)
+        let r = InferResponse::new(vec![item(None, None)]);
+        let parts = r.split(&[0, 1]);
+        assert!(parts[0].items.is_empty());
+        assert_eq!(parts[1].items.len(), 1);
     }
 
     #[test]

@@ -72,29 +72,30 @@ impl WorkerPool {
                 .map(|img| timed_infer(w.as_mut(), img, record_spans, slot_idx, batch_t0))
                 .collect();
         }
+        let run_lane = |lane: usize| -> Result<Vec<(usize, InferItem)>> {
+            // A panic mid-run poisons only this slot's lock, and worker
+            // state is reset at the start of every run, so recovering the
+            // guard is safe.
+            let mut w = self.slots[lane].lock().unwrap_or_else(PoisonError::into_inner);
+            let mut out = Vec::new();
+            let mut i = lane;
+            while i < images.len() {
+                out.push((i, timed_infer(w.as_mut(), &images[i], record_spans, lane, batch_t0)?));
+                i += lanes;
+            }
+            Ok(out)
+        };
+        let run_lane = &run_lane;
         let results: Vec<Result<Vec<(usize, InferItem)>>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..lanes)
-                .map(|lane| {
-                    let slot = &self.slots[lane];
-                    s.spawn(move || {
-                        // A panic mid-run poisons only this slot's lock, and
-                        // worker state is reset at the start of every run,
-                        // so recovering the guard is safe.
-                        let mut w = slot.lock().unwrap_or_else(PoisonError::into_inner);
-                        let mut out = Vec::new();
-                        let mut i = lane;
-                        while i < images.len() {
-                            out.push((
-                                i,
-                                timed_infer(w.as_mut(), &images[i], record_spans, lane, batch_t0)?,
-                            ));
-                            i += lanes;
-                        }
-                        Ok(out)
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("engine worker thread panicked")).collect()
+            // lanes 1.. fan out to scoped threads; lane 0 runs on the
+            // calling thread while they work — one fewer spawn per batch,
+            // same deterministic item→slot striding either way
+            let handles: Vec<_> = (1..lanes).map(|lane| s.spawn(move || run_lane(lane))).collect();
+            let mut all = vec![run_lane(0)];
+            all.extend(
+                handles.into_iter().map(|h| h.join().expect("engine worker thread panicked")),
+            );
+            all
         });
         let mut items: Vec<Option<InferItem>> = images.iter().map(|_| None).collect();
         for lane in results {

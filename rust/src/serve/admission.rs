@@ -59,9 +59,9 @@ impl Admission {
         self
     }
 
-    /// Try to take a slot.  `Err` carries a ready-to-send `429` with
-    /// `Retry-After` derived from the p95 service time.
-    pub fn try_acquire(&self, model: &str) -> Result<Permit<'_>, HttpError> {
+    /// The CAS loop shared by both permit shapes: take a slot or build the
+    /// ready-to-send `429` with `Retry-After` from the p95 service time.
+    fn acquire_slot(&self, model: &str) -> Result<(), HttpError> {
         let mut cur = self.inflight.load(Ordering::Acquire);
         loop {
             if cur >= self.depth {
@@ -103,11 +103,27 @@ impl Admission {
                             );
                         }
                     }
-                    return Ok(Permit { gate: self, started: Instant::now() });
+                    return Ok(());
                 }
                 Err(seen) => cur = seen,
             }
         }
+    }
+
+    /// Try to take a slot.  `Err` carries a ready-to-send `429` with
+    /// `Retry-After` derived from the p95 service time.
+    pub fn try_acquire(&self, model: &str) -> Result<Permit<'_>, HttpError> {
+        self.acquire_slot(model)?;
+        Ok(Permit { gate: self, started: Instant::now() })
+    }
+
+    /// Like [`Admission::try_acquire`], but the permit owns its gate so it
+    /// can ride a queued request into a dispatcher thread and be released
+    /// from the completion closure (the scheduled-infer path cannot borrow
+    /// the gate across threads).
+    pub fn try_acquire_owned(self: &Arc<Self>, model: &str) -> Result<OwnedPermit, HttpError> {
+        self.acquire_slot(model)?;
+        Ok(OwnedPermit { gate: Arc::clone(self), started: Instant::now() })
     }
 
     /// Suggested client back-off: one p95 service time's worth of queue
@@ -148,6 +164,21 @@ pub struct Permit<'a> {
 }
 
 impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.gate.service.lock().unwrap().record(self.started.elapsed());
+        self.gate.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Owned RAII slot for requests that outlive their connection thread
+/// (queued infers completed by a dispatcher).  Identical release
+/// semantics to [`Permit`].
+pub struct OwnedPermit {
+    gate: Arc<Admission>,
+    started: Instant,
+}
+
+impl Drop for OwnedPermit {
     fn drop(&mut self) {
         self.gate.service.lock().unwrap().record(self.started.elapsed());
         self.gate.inflight.fetch_sub(1, Ordering::AcqRel);
@@ -217,6 +248,20 @@ mod tests {
         let _p = gate.try_acquire("m").unwrap();
         let kinds: Vec<&str> = journal.recent(16).iter().rev().map(|e| e.kind).collect();
         assert_eq!(kinds, vec!["admission_saturated", "admission_recovered"]);
+    }
+
+    #[test]
+    fn owned_permit_shares_the_borrowing_budget() {
+        let gate = Arc::new(Admission::new(2));
+        let owned = gate.try_acquire_owned("m").unwrap();
+        let _borrowed = gate.try_acquire("m").unwrap();
+        assert_eq!(gate.try_acquire_owned("m").unwrap_err().status, 429);
+        assert_eq!(gate.in_flight(), 2);
+        // an owned permit can release from another thread
+        std::thread::spawn(move || drop(owned)).join().unwrap();
+        assert_eq!(gate.in_flight(), 1);
+        assert!(gate.try_acquire("m").is_ok());
+        assert_eq!(gate.service_snapshot().count, 2);
     }
 
     #[test]

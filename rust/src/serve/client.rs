@@ -12,6 +12,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::json::{self, Value};
 
+use super::tensor;
+
 /// A fully received response.
 #[derive(Clone, Debug)]
 pub struct ClientResponse {
@@ -34,6 +36,12 @@ impl ClientResponse {
     pub fn json(&self) -> Result<Value> {
         json::parse(&self.body_text())
             .with_context(|| format!("response body is not JSON (status {})", self.status))
+    }
+
+    /// Decode a binary `PFR1` feature payload (the body of an infer
+    /// answered under `Accept: application/x-pefsl-tensor`).
+    pub fn tensor_features(&self) -> Result<Vec<Vec<f32>>> {
+        tensor::decode_features(&self.body).map_err(|e| anyhow!("{}", e.message))
     }
 }
 
@@ -65,15 +73,47 @@ impl HttpClient {
         body: Option<&Value>,
     ) -> Result<ClientResponse> {
         let body_bytes = body.map(|v| json::to_string_pretty(v).into_bytes()).unwrap_or_default();
+        self.request_bytes(method, path, headers, None, &body_bytes)
+    }
+
+    /// Send a request with a raw byte body and an explicit content type
+    /// (binary tensor frames; JSON traffic stays on
+    /// [`HttpClient::request`]).
+    pub fn request_bytes(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        content_type: Option<&str>,
+        body: &[u8],
+    ) -> Result<ClientResponse> {
         let mut head = format!("{method} {path} HTTP/1.1\r\nhost: pefsl\r\n");
         for (k, v) in headers {
             head.push_str(&format!("{k}: {v}\r\n"));
         }
-        head.push_str(&format!("content-length: {}\r\n\r\n", body_bytes.len()));
+        if let Some(ct) = content_type {
+            head.push_str(&format!("content-type: {ct}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
         self.stream.write_all(head.as_bytes()).context("write request head")?;
-        self.stream.write_all(&body_bytes).context("write request body")?;
+        self.stream.write_all(body).context("write request body")?;
         self.stream.flush().ok();
         read_response(&mut self.stream)
+    }
+
+    /// POST images to an infer endpoint as one binary `PFT1` frame.
+    /// `binary_response` asks (via `Accept`) for a `PFR1` payload back;
+    /// otherwise the server answers the usual items JSON.
+    pub fn post_tensor(
+        &mut self,
+        path: &str,
+        images: &[Vec<f32>],
+        binary_response: bool,
+    ) -> Result<ClientResponse> {
+        let frame = tensor::encode_images(images);
+        let accept: &[(&str, &str)] =
+            if binary_response { &[("accept", tensor::TENSOR_CONTENT_TYPE)] } else { &[] };
+        self.request_bytes("POST", path, accept, Some(tensor::TENSOR_CONTENT_TYPE), &frame)
     }
 
     pub fn get(&mut self, path: &str) -> Result<ClientResponse> {

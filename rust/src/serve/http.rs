@@ -172,21 +172,19 @@ impl Conn {
         let mut started: Option<Instant> =
             if self.buf.is_empty() { None } else { Some(Instant::now()) };
         let mut tmp = [0u8; 4096];
-
-        // --- head: accumulate until the blank line ----------------------
-        let head_end = loop {
-            if let Some(pos) = find_subslice(&self.buf, b"\r\n\r\n") {
-                break pos;
-            }
-            if self.buf.len() > limits.max_head_bytes {
-                return Err(HttpError::fatal(
-                    431,
-                    format!("request head exceeds {} bytes", limits.max_head_bytes),
-                ));
+        loop {
+            if let Some((mut req, consumed)) = parse_request(&self.buf, limits)? {
+                // keep pipelined leftovers for the next request
+                self.buf.drain(..consumed);
+                req.read_us = started.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e6);
+                return Ok(Received::Request(req));
             }
             if let Some(t0) = started {
                 if t0.elapsed() > limits.request_timeout {
-                    return Err(HttpError::fatal(408, "timed out reading request head"));
+                    return Err(HttpError::fatal(
+                        408,
+                        format!("timed out reading request ({} bytes buffered)", self.buf.len()),
+                    ));
                 }
             }
             match self.stream.read(&mut tmp) {
@@ -211,88 +209,7 @@ impl Conn {
                 // hard socket error: nothing to answer on
                 Err(_) => return Ok(Received::Closed),
             }
-        };
-
-        // --- parse request line + headers -------------------------------
-        let head = std::str::from_utf8(&self.buf[..head_end])
-            .map_err(|_| HttpError::fatal(400, "request head is not UTF-8"))?;
-        let mut lines = head.split("\r\n");
-        let request_line = lines.next().unwrap_or("").to_string();
-        let mut parts = request_line.split(' ');
-        let (method, path) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
-            (Some(m), Some(p), Some(v), None)
-                if !m.is_empty() && p.starts_with('/') && v.starts_with("HTTP/1") =>
-            {
-                (m.to_string(), p.to_string())
-            }
-            _ => {
-                let shown: String = request_line.chars().take(80).collect();
-                return Err(HttpError::fatal(400, format!("malformed request line '{shown}'")));
-            }
-        };
-        let mut headers = Vec::new();
-        for line in lines {
-            if headers.len() >= limits.max_headers {
-                return Err(HttpError::fatal(431, "too many request headers"));
-            }
-            let Some((name, value)) = line.split_once(':') else {
-                return Err(HttpError::fatal(400, format!("malformed header line '{line}'")));
-            };
-            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
         }
-
-        // --- body framing ------------------------------------------------
-        let header = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str());
-        if header("transfer-encoding").is_some() {
-            // chunked cannot be resynced with a Content-Length-only parser
-            return Err(HttpError::fatal(
-                411,
-                "chunked request bodies are not supported; send Content-Length",
-            ));
-        }
-        let content_length: usize = match header("content-length") {
-            None => 0,
-            Some(v) => v
-                .parse()
-                .map_err(|_| HttpError::fatal(400, format!("invalid Content-Length '{v}'")))?,
-        };
-        if content_length > limits.max_body_bytes {
-            return Err(HttpError::fatal(
-                413,
-                format!(
-                    "request body of {content_length} bytes exceeds the {}-byte limit",
-                    limits.max_body_bytes
-                ),
-            ));
-        }
-
-        // --- body: drain exactly content_length bytes -------------------
-        let body_start = head_end + 4;
-        let need = body_start + content_length;
-        let deadline = started.unwrap_or_else(Instant::now);
-        while self.buf.len() < need {
-            if deadline.elapsed() > limits.request_timeout {
-                return Err(HttpError::fatal(
-                    408,
-                    format!(
-                        "timed out reading request body ({} of {content_length} bytes received)",
-                        self.buf.len() - body_start.min(self.buf.len())
-                    ),
-                ));
-            }
-            match self.stream.read(&mut tmp) {
-                Ok(0) => return Err(HttpError::fatal(400, "connection closed mid-body")),
-                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
-                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
-                Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                Err(_) => return Err(HttpError::fatal(400, "socket error mid-body")),
-            }
-        }
-        let body = self.buf[body_start..need].to_vec();
-        // keep pipelined leftovers for the next request
-        self.buf.drain(..need);
-        let read_us = started.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e6);
-        Ok(Received::Request(Request { method, path, headers, body, read_us }))
     }
 
     /// Write a response; errors are returned for the caller to treat as
@@ -300,6 +217,89 @@ impl Conn {
     pub fn write_response(&mut self, resp: &Response) -> std::io::Result<()> {
         resp.write_to(&mut self.stream)
     }
+}
+
+/// Try to parse one complete request from the front of `buf` without
+/// consuming it.  `Ok(None)` means more bytes are needed; `Ok(Some((req,
+/// consumed)))` hands back the request plus how many bytes of `buf` it
+/// spans (the caller drains them); `Err` is a framing error — always
+/// fatal, since the buffer position can no longer be trusted.  Pure over
+/// the byte slice, so the blocking [`Conn`] reader and the non-blocking
+/// connection-worker pool share a single grammar.  `read_us` is left at
+/// zero for the caller to stamp.
+pub fn parse_request(buf: &[u8], limits: &Limits) -> Result<Option<(Request, usize)>, HttpError> {
+    // --- head: wait for the blank line ----------------------------------
+    let Some(head_end) = find_subslice(buf, b"\r\n\r\n") else {
+        if buf.len() > limits.max_head_bytes {
+            return Err(HttpError::fatal(
+                431,
+                format!("request head exceeds {} bytes", limits.max_head_bytes),
+            ));
+        }
+        return Ok(None);
+    };
+
+    // --- parse request line + headers -----------------------------------
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::fatal(400, "request head is not UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("").to_string();
+    let mut parts = request_line.split(' ');
+    let (method, path) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None)
+            if !m.is_empty() && p.starts_with('/') && v.starts_with("HTTP/1") =>
+        {
+            (m.to_string(), p.to_string())
+        }
+        _ => {
+            let shown: String = request_line.chars().take(80).collect();
+            return Err(HttpError::fatal(400, format!("malformed request line '{shown}'")));
+        }
+    };
+    let mut headers = Vec::new();
+    for line in lines {
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::fatal(431, "too many request headers"));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::fatal(400, format!("malformed header line '{line}'")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // --- body framing ----------------------------------------------------
+    let header = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str());
+    if header("transfer-encoding").is_some() {
+        // chunked cannot be resynced with a Content-Length-only parser
+        return Err(HttpError::fatal(
+            411,
+            "chunked request bodies are not supported; send Content-Length",
+        ));
+    }
+    let content_length: usize = match header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| HttpError::fatal(400, format!("invalid Content-Length '{v}'")))?,
+    };
+    if content_length > limits.max_body_bytes {
+        return Err(HttpError::fatal(
+            413,
+            format!(
+                "request body of {content_length} bytes exceeds the {}-byte limit",
+                limits.max_body_bytes
+            ),
+        ));
+    }
+
+    // --- body: exactly content_length bytes ------------------------------
+    let body_start = head_end + 4;
+    let need = body_start + content_length;
+    if buf.len() < need {
+        return Ok(None);
+    }
+    let body = buf[body_start..need].to_vec();
+    Ok(Some((Request { method, path, headers, body, read_us: 0.0 }, need)))
 }
 
 /// One response about to be written.
@@ -332,7 +332,7 @@ impl Response {
     /// A plain-text response with an explicit content type (the
     /// Prometheus text exposition).
     pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
-        Response { status, body: body.into_bytes(), headers: Vec::new(), close: false, content_type }
+        Response::binary(status, content_type, body.into_bytes())
     }
 
     /// The uniform error payload: `{"status": s, "error": message}`.
@@ -353,13 +353,21 @@ impl Response {
         resp
     }
 
+    /// A binary-framed response (the `application/x-pefsl-tensor` feature
+    /// payloads) — raw bytes with an explicit content type.
+    pub fn binary(status: u16, content_type: &'static str, body: Vec<u8>) -> Response {
+        Response { status, body, headers: Vec::new(), close: false, content_type }
+    }
+
     pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Response {
         self.headers.push((name.to_string(), value.into()));
         self
     }
 
-    /// Serialize head + body onto a stream.
-    pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+    /// Serialize head + body into one buffer.  The non-blocking
+    /// connection-worker pool queues this and flushes it as the socket
+    /// drains; the blocking path writes it in one call.
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut head = format!(
             "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
             self.status,
@@ -378,8 +386,14 @@ impl Response {
         } else {
             "connection: keep-alive\r\n\r\n"
         });
-        stream.write_all(head.as_bytes())?;
-        stream.write_all(&self.body)?;
+        let mut out = head.into_bytes();
+        out.extend_from_slice(&self.body);
+        out
+    }
+
+    /// Serialize head + body onto a stream.
+    pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        stream.write_all(&self.to_bytes())?;
         stream.flush()
     }
 }
@@ -468,5 +482,60 @@ mod tests {
         for s in [200, 400, 401, 403, 404, 405, 408, 411, 413, 429, 431, 500, 503] {
             assert_ne!(reason(s), "Response", "{s}");
         }
+    }
+
+    #[test]
+    fn parse_request_is_incremental_over_fragments() {
+        let limits = Limits::default();
+        let wire = b"POST /v1/m/infer HTTP/1.1\r\ncontent-length: 4\r\n\r\nbody";
+        // every strict prefix is incomplete, never an error
+        for cut in 0..wire.len() {
+            assert!(parse_request(&wire[..cut], &limits).unwrap().is_none(), "cut {cut}");
+        }
+        let (req, consumed) = parse_request(wire, &limits).unwrap().unwrap();
+        assert_eq!(consumed, wire.len());
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/m/infer");
+        assert_eq!(req.body, b"body");
+    }
+
+    #[test]
+    fn parse_request_leaves_pipelined_tail_unconsumed() {
+        let limits = Limits::default();
+        let wire = b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n";
+        let (req, consumed) = parse_request(wire, &limits).unwrap().unwrap();
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+        let (req2, consumed2) = parse_request(&wire[consumed..], &limits).unwrap().unwrap();
+        assert_eq!(req2.path, "/metrics");
+        assert_eq!(consumed + consumed2, wire.len());
+    }
+
+    #[test]
+    fn parse_request_bounds_are_enforced() {
+        let limits = Limits { max_head_bytes: 64, ..Limits::default() };
+        // oversized head without a blank line is 431, not "need more"
+        let big = vec![b'a'; 65];
+        assert_eq!(parse_request(&big, &limits).unwrap_err().status, 431);
+        // a complete but malformed request line is fatal 400
+        let bad = b"NOPE\r\n\r\n";
+        let e = parse_request(bad, &Limits::default()).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.fatal);
+        // declared body over the cap is 413 before any body bytes arrive
+        let huge = b"POST /x HTTP/1.1\r\ncontent-length: 999999999\r\n\r\n";
+        let limits = Limits { max_body_bytes: 1024, ..Limits::default() };
+        assert_eq!(parse_request(huge, &limits).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn response_to_bytes_matches_write_to_framing() {
+        let resp = Response::binary(200, "application/x-pefsl-tensor", vec![1, 2, 3]);
+        let bytes = resp.to_bytes();
+        let text = String::from_utf8_lossy(&bytes);
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-type: application/x-pefsl-tensor\r\n"));
+        assert!(text.contains("content-length: 3\r\n"));
+        assert!(bytes.ends_with(&[1, 2, 3]));
     }
 }

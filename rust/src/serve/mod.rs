@@ -9,11 +9,23 @@
 //! [`std::net`] (no `hyper`), split into four layers:
 //!
 //! * **protocol** ([`http`]) — incremental parsing tolerant of partial
-//!   reads, bounded head/body sizes, chunked bodies rejected cleanly;
+//!   reads, bounded head/body sizes, chunked bodies rejected cleanly.
+//!   Infer payloads can also ride a compact binary framing ([`tensor`],
+//!   `Content-Type: application/x-pefsl-tensor`) bit-identical to JSON;
+//! * **connections** ([`pool`](self)) — a fixed pool of event-driven
+//!   connection workers multiplexing sockets over a `poll(2)` readiness
+//!   loop (`--conn-workers`), with a live-connection cap (`--max-conns` →
+//!   `503` at accept) and a keep-alive idle timeout.  The legacy
+//!   thread-per-connection loop remains behind `--thread-per-conn` as the
+//!   benchmark baseline;
 //! * **admission** ([`admission`]) — a bounded per-model in-flight budget;
 //!   overflow answers `429` with `Retry-After` from observed p95 service
-//!   time, never unbounded buffering.  Admitted work drains into the
-//!   engine's existing worker pool;
+//!   time, never unbounded buffering;
+//! * **scheduling** ([`sched`]) — admitted infers enter a deadline-ordered
+//!   per-model queue drained by a dispatcher that coalesces same-engine
+//!   neighbors into one batched engine call (`--coalesce-window`),
+//!   fanning responses back per connection; queued work that misses its
+//!   deadline ([`DEADLINE_HEADER`]) is shed with `429`;
 //! * **sessions** ([`sessions`]) — wire tokens ↔ [`crate::engine::Session`]s
 //!   with idle-expiry eviction; sessions pin the engine current at
 //!   creation, so enrolled features survive hot-swaps bit-identically;
@@ -53,13 +65,15 @@ pub mod admission;
 pub mod client;
 pub mod http;
 pub mod observe;
+mod pool;
+pub mod sched;
 pub mod sessions;
+pub mod tensor;
 
 use std::borrow::Cow;
-use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
@@ -67,12 +81,12 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::bundle::Bundle;
-use crate::engine::{Engine, InferRequest, Registry, Session};
+use crate::engine::{Engine, InferRequest, InferResponse, Registry, Session};
 use crate::json::Value;
-use crate::trace::{EventJournal, TraceHub, Tracer, TRACE_HEADER};
+use crate::trace::{EventJournal, Span, TraceHub, TraceSink, Tracer, TRACE_HEADER};
 
 use admission::Admission;
-use http::{Conn, HttpError, Limits, Received, Request, Response};
+use http::{parse_request, Conn, HttpError, Limits, Received, Request, Response};
 use observe::ServeMetrics;
 use sessions::SessionStore;
 
@@ -80,6 +94,10 @@ use sessions::SessionStore;
 pub const TOKEN_HEADER: &str = "x-pefsl-token";
 /// Auth header carrying the admin token (when one is configured).
 pub const ADMIN_HEADER: &str = "x-pefsl-admin";
+/// Optional per-request queue budget, in milliseconds.  A queued infer
+/// that waits past its deadline is shed with `429` instead of running; the
+/// default budget is the protocol request timeout.
+pub const DEADLINE_HEADER: &str = "x-pefsl-deadline-ms";
 
 /// Server tunables (`pefsl serve` flags map onto these).
 #[derive(Clone, Debug)]
@@ -95,6 +113,22 @@ pub struct ServeConfig {
     /// Trace every Nth headerless request (0 = only requests carrying
     /// the `x-pefsl-trace` header are traced).
     pub trace_sample: u32,
+    /// Connection-worker pool size (0 = auto from available parallelism).
+    pub conn_workers: usize,
+    /// Live-connection cap; beyond it new sockets are answered `503` +
+    /// `Retry-After` at accept time.
+    pub max_conns: usize,
+    /// How long a dispatcher lingers for coalescing followers after
+    /// popping a job (zero = merge only what is already queued).
+    pub coalesce_window: Duration,
+    /// Max images merged into one coalesced engine batch.
+    pub coalesce_max: usize,
+    /// Idle keep-alive connections are closed after this long without a
+    /// byte of request traffic.
+    pub keep_alive_idle: Duration,
+    /// Serve with the legacy thread-per-connection loop instead of the
+    /// event-driven worker pool (baseline for `benches/serve_throughput`).
+    pub thread_per_conn: bool,
 }
 
 impl Default for ServeConfig {
@@ -105,6 +139,12 @@ impl Default for ServeConfig {
             limits: Limits::default(),
             admin_token: None,
             trace_sample: 0,
+            conn_workers: 0,
+            max_conns: 1024,
+            coalesce_window: Duration::ZERO,
+            coalesce_max: 32,
+            keep_alive_idle: Duration::from_secs(60),
+            thread_per_conn: false,
         }
     }
 }
@@ -115,24 +155,24 @@ struct Shared {
     cfg: ServeConfig,
     sessions: SessionStore,
     metrics: ServeMetrics,
-    gates: Mutex<BTreeMap<String, Arc<Admission>>>,
+    sched: sched::Scheduler,
     shutdown: AtomicBool,
     trace: Arc<TraceHub>,
     journal: Arc<EventJournal>,
     started: Instant,
+    /// Sockets currently owned by connection workers.
+    live_conns: AtomicUsize,
+    /// Sockets answered `503` at accept because of `--max-conns`.
+    conns_rejected: AtomicU64,
+    /// True while the acceptor is rejecting (journals saturation onsets).
+    conn_saturated: AtomicBool,
 }
 
 impl Shared {
-    /// The admission gate for one model (created on first use; the
-    /// steady-state lookup borrows `model` instead of allocating a key).
+    /// The admission gate for one model (created on first use, in front
+    /// of the model's scheduler queue).
     fn gate(&self, model: &str) -> Arc<Admission> {
-        let mut gates = self.gates.lock().unwrap_or_else(PoisonError::into_inner);
-        if !gates.contains_key(model) {
-            let gate =
-                Admission::new(self.cfg.queue_depth).with_journal(model, Arc::clone(&self.journal));
-            gates.insert(model.to_string(), Arc::new(gate));
-        }
-        Arc::clone(gates.get(model).unwrap())
+        Arc::clone(self.sched.queue(model).gate())
     }
 
     /// Request shutdown, journaling the drain start exactly once no
@@ -155,21 +195,37 @@ impl Server {
         listener.set_nonblocking(true).context("set_nonblocking")?;
         let journal = Arc::new(EventJournal::default());
         journal.record("server_start", "-", format!("listening on {local}"));
+        let sched = sched::Scheduler::new(
+            cfg.queue_depth,
+            cfg.coalesce_window,
+            cfg.coalesce_max,
+            Arc::clone(&journal),
+        );
         let shared = Arc::new(Shared {
             registry,
             sessions: SessionStore::new(cfg.idle_session).with_journal(Arc::clone(&journal)),
             metrics: ServeMetrics::new(),
-            gates: Mutex::new(BTreeMap::new()),
+            sched,
             shutdown: AtomicBool::new(false),
             trace: Arc::new(TraceHub::new(cfg.trace_sample)),
             journal,
             started: Instant::now(),
+            live_conns: AtomicUsize::new(0),
+            conns_rejected: AtomicU64::new(0),
+            conn_saturated: AtomicBool::new(false),
             cfg,
         });
         let accept_shared = Arc::clone(&shared);
+        let thread_per_conn = accept_shared.cfg.thread_per_conn;
         let accept = thread::Builder::new()
             .name("pefsl-accept".to_string())
-            .spawn(move || accept_loop(listener, accept_shared))
+            .spawn(move || {
+                if thread_per_conn {
+                    accept_loop(listener, accept_shared)
+                } else {
+                    pool::serve_pool(listener, accept_shared)
+                }
+            })
             .context("spawn accept thread")?;
         Ok(ServerHandle { local, shared, accept: Some(accept) })
     }
@@ -261,6 +317,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     for h in conns {
         h.join().ok();
     }
+    shared.sched.shutdown_and_join();
     shared.journal.record("drain_end", "-", format!("drained; {n} connection thread(s) joined"));
 }
 
@@ -319,6 +376,218 @@ fn connection_loop(stream: TcpStream, shared: Arc<Shared>) {
     // Orderly FIN even if the peer sent bytes we never parsed (see
     // `Conn::lingering_close` for the RST hazard this avoids).
     conn.lingering_close();
+}
+
+/// Handle one parsed request on a connection worker.  Synchronous
+/// endpoints answer inline (the response is queued on the connection);
+/// infer is *scheduled* — it returns immediately and the model queue's
+/// completion delivers the response later, so the worker's event loop
+/// never blocks on the engine.
+fn handle_pool_request(
+    shared: &Arc<Shared>,
+    req: Request,
+    sink: &TraceSink,
+    deliver: pool::Deliver,
+) {
+    let started = Instant::now();
+    let (model, endpoint) = labels(&req.path);
+    let (model, endpoint) = (model.into_owned(), endpoint.into_owned());
+    let mut tr = shared.trace.begin(req.header(TRACE_HEADER));
+    // the HTTP read finished before the tracer existed — shift the trace
+    // origin back so it still appears
+    tr.backdate("http/read", Duration::from_nanos((req.read_us * 1e3) as u64));
+    let routed = catch_unwind(AssertUnwindSafe(|| {
+        route_event(shared, &req, &mut tr, started, sink, &deliver)
+    }));
+    let resp = match routed {
+        Ok(Ok(None)) => return, // queued; the completion delivers
+        Ok(Ok(Some(resp))) => resp,
+        Ok(Err(e)) => Response::from_http_error(&e),
+        Err(_) => Response::error(500, "internal error: request handler panicked"),
+    };
+    finish_pool_response(shared, resp, tr, sink, &deliver, (&model, &endpoint), started);
+}
+
+/// Shared epilogue for pool-served requests: metrics, shutdown close,
+/// trace finish, then delivery back to the connection's event loop.
+fn finish_pool_response(
+    shared: &Shared,
+    mut resp: Response,
+    tr: Tracer,
+    sink: &TraceSink,
+    deliver: &pool::Deliver,
+    labels: (&str, &str),
+    started: Instant,
+) {
+    let (model, endpoint) = labels;
+    shared.metrics.record(model, endpoint, resp.status, started.elapsed());
+    if shared.shutdown.load(Ordering::SeqCst) {
+        resp.close = true;
+    }
+    if let Some(t) = tr.finish(model, endpoint, resp.status) {
+        resp.headers.push((TRACE_HEADER.to_string(), t.id.to_string()));
+        sink.submit(t);
+    }
+    deliver.send(resp);
+}
+
+/// Route one request on the event-driven path.  `Ok(None)` means the
+/// request was enqueued with the scheduler and its completion will answer;
+/// everything else resolves synchronously via [`route`].
+fn route_event(
+    shared: &Arc<Shared>,
+    req: &Request,
+    tr: &mut Tracer,
+    started: Instant,
+    sink: &TraceSink,
+    deliver: &pool::Deliver,
+) -> Result<Option<Response>, HttpError> {
+    let segs = split_path(&req.path);
+    if let ["v1", model, "infer"] = segs.as_slice() {
+        require_method(req, "POST")?;
+        let model = model.to_string();
+        return infer_enqueue(shared, &model, req, started, tr, sink, deliver);
+    }
+    route(shared, req, tr).map(Some)
+}
+
+/// Parse + admit an infer, then enqueue it with the model's scheduler
+/// queue.  The completion closure carries everything needed to finish the
+/// request from the dispatcher thread: the tracer, the owned admission
+/// permit, the delivery handle, and the response shape (binary or JSON).
+fn infer_enqueue(
+    shared: &Arc<Shared>,
+    model: &str,
+    req: &Request,
+    started: Instant,
+    tr: &mut Tracer,
+    sink: &TraceSink,
+    deliver: &pool::Deliver,
+) -> Result<Option<Response>, HttpError> {
+    let engine = resolve_engine(shared, model)?;
+    let parse_t0 = tr.start();
+    let images = parse_infer_images(req, engine.info().input_elems)?;
+    tr.add("parse", parse_t0);
+    let admission_t0 = tr.start();
+    let queue = shared.sched.queue(model);
+    let permit = queue.gate().try_acquire_owned(model)?;
+    tr.add("admission", admission_t0);
+    let deadline = request_deadline(req, &shared.cfg.limits)?;
+    let binary = wants_binary_response(req);
+    let layer_names = engine.info().layer_names.clone();
+    let feature_dim = engine.feature_dim();
+    let enq = Instant::now();
+    // the tracer rides into the completion; the caller's copy goes dark
+    let tr_owned = std::mem::replace(tr, Tracer::off());
+    let record_spans = tr_owned.on();
+    let shared2 = Arc::clone(shared);
+    let model_s = model.to_string();
+    let sink2 = sink.clone();
+    let deliver2 = deliver.clone();
+    let complete: sched::Completion = Box::new(move |out: sched::JobOutcome| {
+        let mut tr = tr_owned;
+        let resp = match out.result {
+            Ok(eresp) => {
+                if tr.on() {
+                    tr.add_span(Span::new("queue", tr.offset_us(enq), out.queue_us));
+                    if out.coalesce_us > 0.0 {
+                        let t0 = (tr.offset_us(out.engine_t0) - out.coalesce_us).max(0.0);
+                        let mut sp = Span::new("coalesce", t0, out.coalesce_us);
+                        sp.detail = Some(format!("batch={}", out.batch_images));
+                        tr.add_span(sp);
+                    }
+                }
+                eresp.trace_into(&mut tr, out.engine_t0, layer_names.as_deref());
+                let respond_t0 = tr.start();
+                let resp = render_infer_response(&model_s, feature_dim, &eresp, binary);
+                tr.add("respond", respond_t0);
+                resp
+            }
+            Err(e) => Response::from_http_error(&e),
+        };
+        // release the admission slot *before* the response can reach the
+        // client, so an observed response implies a freed slot
+        drop(permit);
+        finish_pool_response(&shared2, resp, tr, &sink2, &deliver2, (&model_s, "infer"), started);
+    });
+    let job = sched::InferJob { engine, images, deadline, record_spans, complete };
+    queue
+        .enqueue(job)
+        .map_err(|_| HttpError::new(503, "server is shutting down; not accepting new work"))?;
+    Ok(None)
+}
+
+/// The queue deadline for an infer: [`DEADLINE_HEADER`] when present
+/// (clamped to [1 ms, 10 min]), else the protocol request timeout.
+fn request_deadline(req: &Request, limits: &Limits) -> Result<Instant, HttpError> {
+    let budget_ms = match req.header(DEADLINE_HEADER) {
+        None => return Ok(Instant::now() + limits.request_timeout),
+        Some(v) => v
+            .parse::<u64>()
+            .map_err(|_| HttpError::new(400, format!("invalid {DEADLINE_HEADER} '{v}'")))?,
+    };
+    Ok(Instant::now() + Duration::from_millis(budget_ms.clamp(1, 600_000)))
+}
+
+/// The infer request's images: a binary `PFT1` frame when the content
+/// type says so, else the JSON `image`/`images` body.
+fn parse_infer_images(req: &Request, expected: usize) -> Result<Vec<Vec<f32>>, HttpError> {
+    let binary = req
+        .header("content-type")
+        .is_some_and(|c| c.starts_with(tensor::TENSOR_CONTENT_TYPE));
+    if binary {
+        return tensor::decode_images(&req.body, expected);
+    }
+    let body = req.json_body()?;
+    if body.get("image").is_some() {
+        return Ok(vec![image_field(&body, "image", expected)?]);
+    }
+    let arr = body
+        .get("images")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| HttpError::new(400, "body needs 'image' or 'images'"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| {
+            image_values(v, expected)
+                .map_err(|e| HttpError::new(400, format!("images[{i}]: {}", e.message)))
+        })
+        .collect()
+}
+
+/// True when the client's `Accept` asks for a binary `PFR1` payload.
+fn wants_binary_response(req: &Request) -> bool {
+    req.header("accept").is_some_and(|a| a.contains(tensor::TENSOR_CONTENT_TYPE))
+}
+
+/// Render an infer response: binary `PFR1` when requested, else the
+/// items-JSON document.  Both carry the same f32 bits.
+fn render_infer_response(
+    model: &str,
+    feature_dim: usize,
+    resp: &InferResponse,
+    binary: bool,
+) -> Response {
+    if binary {
+        let feats: Vec<&[f32]> = resp.items.iter().map(|i| i.features.as_slice()).collect();
+        let wire = tensor::encode_features(&feats);
+        return Response::binary(200, tensor::TENSOR_CONTENT_TYPE, wire);
+    }
+    let items: Vec<Value> = resp
+        .items
+        .iter()
+        .map(|item| {
+            let mut o = Value::obj();
+            o.set("features", f32s_to_json(&item.features))
+                .set("modeled_latency_ms", opt_f64(item.metrics.modeled_latency_ms))
+                .set("cycles", item.metrics.cycles.map_or(Value::Null, Value::from))
+                .set("host_us", item.metrics.host_us);
+            o
+        })
+        .collect();
+    let mut v = Value::obj();
+    v.set("model", model).set("feature_dim", feature_dim).set("items", items);
+    Response::json(200, &v)
 }
 
 /// `(model, endpoint)` labels for the metrics table.  Borrowed from the
@@ -468,6 +737,9 @@ fn resolve_session(
     shared.sessions.resolve(model, token)
 }
 
+/// The blocking (thread-per-connection) infer path.  Shares its parsing
+/// and rendering with the scheduled path, so binary tensor framing works
+/// identically in both serving modes; only the scheduling differs.
 fn infer(
     shared: &Shared,
     model: &str,
@@ -476,23 +748,7 @@ fn infer(
 ) -> Result<Response, HttpError> {
     let engine = resolve_engine(shared, model)?;
     let parse_t0 = tr.start();
-    let body = req.json_body()?;
-    let expected = engine.info().input_elems;
-    let images: Vec<Vec<f32>> = if body.get("image").is_some() {
-        vec![image_field(&body, "image", expected)?]
-    } else {
-        let arr = body
-            .get("images")
-            .and_then(Value::as_arr)
-            .ok_or_else(|| HttpError::new(400, "body needs 'image' or 'images'"))?;
-        arr.iter()
-            .enumerate()
-            .map(|(i, v)| {
-                image_values(v, expected)
-                    .map_err(|e| HttpError::new(400, format!("images[{i}]: {}", e.message)))
-            })
-            .collect::<Result<_, _>>()?
-    };
+    let images = parse_infer_images(req, engine.info().input_elems)?;
     tr.add("parse", parse_t0);
     let admission_t0 = tr.start();
     let gate = shared.gate(model);
@@ -504,21 +760,8 @@ fn infer(
         .map_err(|e| HttpError::new(400, e.to_string()))?;
     resp.trace_into(tr, engine_t0, engine.info().layer_names.as_deref());
     let respond_t0 = tr.start();
-    let items: Vec<Value> = resp
-        .items
-        .iter()
-        .map(|item| {
-            let mut o = Value::obj();
-            o.set("features", f32s_to_json(&item.features))
-                .set("modeled_latency_ms", opt_f64(item.metrics.modeled_latency_ms))
-                .set("cycles", item.metrics.cycles.map_or(Value::Null, Value::from))
-                .set("host_us", item.metrics.host_us);
-            o
-        })
-        .collect();
-    let mut v = Value::obj();
-    v.set("model", model).set("feature_dim", engine.feature_dim()).set("items", items);
-    let out = Response::json(200, &v);
+    let binary = wants_binary_response(req);
+    let out = render_infer_response(model, engine.feature_dim(), &resp, binary);
     tr.add("respond", respond_t0);
     Ok(out)
 }
@@ -701,30 +944,52 @@ fn admin_deploy(shared: &Shared, req: &Request) -> Result<Response, HttpError> {
     Ok(Response::json(200, &v))
 }
 
-/// The `/metrics` document: endpoint rows, admission gates, sessions.
+/// The `/metrics` document: endpoint rows, admission gates + scheduler
+/// queues, connection accounting, sessions.
 fn metrics_json(shared: &Shared) -> Value {
-    let gates = shared.gates.lock().unwrap_or_else(PoisonError::into_inner);
-    let admission: Vec<Value> = gates
+    let admission: Vec<Value> = shared
+        .sched
+        .queues()
         .iter()
-        .map(|(model, gate)| {
+        .map(|q| {
+            let gate = q.gate();
+            let batches = q.batches();
+            let images = q.batched_images();
+            let mean_batch = if batches > 0 { images as f64 / batches as f64 } else { 0.0 };
+            let mut coalesce = Value::obj();
+            coalesce
+                .set("batches", batches)
+                .set("images", images)
+                .set("mean_batch", mean_batch)
+                .set("max_batch", q.max_batch());
             let mut o = Value::obj();
-            o.set("model", model.as_str())
+            o.set("model", q.model())
                 .set("depth", gate.depth())
                 .set("in_flight", gate.in_flight())
+                .set("queued", q.queued())
                 .set("admitted", gate.admitted())
                 .set("rejected", gate.rejected())
+                .set("expired", q.expired())
                 .set("retry_after_s", gate.retry_after_s())
-                .set("service", gate.service_snapshot().to_json());
+                .set("service", gate.service_snapshot().to_json())
+                .set("queue_wait", q.queue_wait_snapshot().to_json())
+                .set("coalesce", coalesce);
             o
         })
         .collect();
     let mut sessions = Value::obj();
     sessions.set("live", shared.sessions.len()).set("minted", shared.sessions.minted());
+    let mut conns = Value::obj();
+    conns
+        .set("live", shared.live_conns.load(Ordering::Relaxed))
+        .set("rejected", shared.conns_rejected.load(Ordering::Relaxed))
+        .set("max", shared.cfg.max_conns);
     let mut v = Value::obj();
     v.set("total_requests", shared.metrics.total_requests())
         .set("endpoint_rows", shared.metrics.rows_created())
         .set("endpoints", shared.metrics.to_json())
         .set("admission", admission)
+        .set("conns", conns)
         .set("sessions", sessions)
         .set("uptime_s", shared.started.elapsed().as_secs_f64())
         .set("journal_events", shared.journal.total());
@@ -732,30 +997,63 @@ fn metrics_json(shared: &Shared) -> Value {
 }
 
 /// The `/metrics` Prometheus text exposition: the per-endpoint request
-/// metrics plus admission, session, and server-level gauges.
+/// metrics plus admission, scheduler, connection, session, and
+/// server-level gauges.
 fn metrics_prometheus(shared: &Shared) -> String {
     use std::fmt::Write as _;
     let mut out = shared.metrics.to_prometheus();
-    let gates: Vec<(String, Arc<Admission>)> = {
-        let gates = shared.gates.lock().unwrap_or_else(PoisonError::into_inner);
-        gates.iter().map(|(m, g)| (observe::escape_label(m), Arc::clone(g))).collect()
-    };
+    let queues = shared.sched.queues();
+    let gates: Vec<(String, Arc<sched::ModelQueue>)> =
+        queues.iter().map(|q| (observe::escape_label(q.model()), Arc::clone(q))).collect();
     out.push_str("# TYPE pefsl_admission_depth gauge\n");
-    for (m, g) in &gates {
-        let _ = writeln!(out, "pefsl_admission_depth{{model=\"{m}\"}} {}", g.depth());
+    for (m, q) in &gates {
+        let _ = writeln!(out, "pefsl_admission_depth{{model=\"{m}\"}} {}", q.gate().depth());
     }
     out.push_str("# TYPE pefsl_admission_in_flight gauge\n");
-    for (m, g) in &gates {
-        let _ = writeln!(out, "pefsl_admission_in_flight{{model=\"{m}\"}} {}", g.in_flight());
+    for (m, q) in &gates {
+        let v = q.gate().in_flight();
+        let _ = writeln!(out, "pefsl_admission_in_flight{{model=\"{m}\"}} {v}");
     }
     out.push_str("# TYPE pefsl_admission_admitted_total counter\n");
-    for (m, g) in &gates {
-        let _ = writeln!(out, "pefsl_admission_admitted_total{{model=\"{m}\"}} {}", g.admitted());
+    for (m, q) in &gates {
+        let v = q.gate().admitted();
+        let _ = writeln!(out, "pefsl_admission_admitted_total{{model=\"{m}\"}} {v}");
     }
     out.push_str("# TYPE pefsl_admission_rejected_total counter\n");
-    for (m, g) in &gates {
-        let _ = writeln!(out, "pefsl_admission_rejected_total{{model=\"{m}\"}} {}", g.rejected());
+    for (m, q) in &gates {
+        let v = q.gate().rejected();
+        let _ = writeln!(out, "pefsl_admission_rejected_total{{model=\"{m}\"}} {v}");
     }
+    out.push_str("# TYPE pefsl_queue_depth gauge\n");
+    for (m, q) in &gates {
+        let _ = writeln!(out, "pefsl_queue_depth{{model=\"{m}\"}} {}", q.queued());
+    }
+    out.push_str("# TYPE pefsl_queue_expired_total counter\n");
+    for (m, q) in &gates {
+        let _ = writeln!(out, "pefsl_queue_expired_total{{model=\"{m}\"}} {}", q.expired());
+    }
+    out.push_str("# TYPE pefsl_queue_wait_seconds summary\n");
+    for (m, q) in &gates {
+        observe::write_summary(&mut out, "pefsl_queue_wait_seconds", m, &q.queue_wait_snapshot());
+    }
+    out.push_str("# TYPE pefsl_coalesced_batches_total counter\n");
+    for (m, q) in &gates {
+        let _ = writeln!(out, "pefsl_coalesced_batches_total{{model=\"{m}\"}} {}", q.batches());
+    }
+    out.push_str("# TYPE pefsl_coalesced_images_total counter\n");
+    for (m, q) in &gates {
+        let v = q.batched_images();
+        let _ = writeln!(out, "pefsl_coalesced_images_total{{model=\"{m}\"}} {v}");
+    }
+    out.push_str("# TYPE pefsl_coalesce_batch_max gauge\n");
+    for (m, q) in &gates {
+        let _ = writeln!(out, "pefsl_coalesce_batch_max{{model=\"{m}\"}} {}", q.max_batch());
+    }
+    out.push_str("# TYPE pefsl_conns_live gauge\n");
+    let _ = writeln!(out, "pefsl_conns_live {}", shared.live_conns.load(Ordering::Relaxed));
+    out.push_str("# TYPE pefsl_conns_rejected_total counter\n");
+    let rejected = shared.conns_rejected.load(Ordering::Relaxed);
+    let _ = writeln!(out, "pefsl_conns_rejected_total {rejected}");
     out.push_str("# TYPE pefsl_sessions_live gauge\n");
     let _ = writeln!(out, "pefsl_sessions_live {}", shared.sessions.len());
     out.push_str("# TYPE pefsl_sessions_minted_total counter\n");
@@ -816,6 +1114,18 @@ mod tests {
         assert_eq!(cfg.idle_session, Duration::from_secs(300));
         assert!(cfg.admin_token.is_none());
         assert_eq!(cfg.trace_sample, 0);
+        assert_eq!(cfg.conn_workers, 0, "0 = auto-size the worker pool");
+        assert_eq!(cfg.max_conns, 1024);
+        assert_eq!(cfg.coalesce_window, Duration::ZERO);
+        assert_eq!(cfg.coalesce_max, 32);
+        assert_eq!(cfg.keep_alive_idle, Duration::from_secs(60));
+        assert!(!cfg.thread_per_conn, "the event-driven pool is the default");
+        assert!(pool_workers_resolve() >= 2);
+    }
+
+    fn pool_workers_resolve() -> usize {
+        assert_eq!(super::pool::effective_conn_workers(3), 3);
+        super::pool::effective_conn_workers(0)
     }
 
     #[test]

@@ -212,6 +212,19 @@ impl ServeMetrics {
     }
 }
 
+/// Append one model-labelled Prometheus summary (quantile samples plus
+/// `_sum`/`_count`) from a latency snapshot.  The caller writes the
+/// `# TYPE` line; this emits the samples, converting µs to seconds to
+/// match the request-latency family.
+pub(crate) fn write_summary(out: &mut String, family: &str, model: &str, l: &LatencySnapshot) {
+    for (q, us) in [("0.5", l.p50_us), ("0.95", l.p95_us), ("0.99", l.p99_us)] {
+        let _ = writeln!(out, "{family}{{model=\"{model}\",quantile=\"{q}\"}} {}", us / 1e6);
+    }
+    let sum_s = l.mean_us * l.count as f64 / 1e6;
+    let _ = writeln!(out, "{family}_sum{{model=\"{model}\"}} {sum_s}");
+    let _ = writeln!(out, "{family}_count{{model=\"{model}\"}} {}", l.count);
+}
+
 /// Escape a Prometheus label value: backslash, double quote, newline.
 pub(crate) fn escape_label(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
@@ -298,5 +311,18 @@ mod tests {
     #[test]
     fn label_values_are_escaped() {
         assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn summary_helper_emits_quantiles_sum_count() {
+        let mut stats = LatencyStats::new(16);
+        stats.record_us(1000.0);
+        stats.record_us(3000.0);
+        let mut out = String::new();
+        write_summary(&mut out, "pefsl_queue_wait_seconds", "m", &stats.snapshot());
+        assert!(out.contains("pefsl_queue_wait_seconds{model=\"m\",quantile=\"0.5\"}"), "{out}");
+        assert!(out.contains("pefsl_queue_wait_seconds{model=\"m\",quantile=\"0.95\"}"), "{out}");
+        assert!(out.contains("pefsl_queue_wait_seconds_count{model=\"m\"} 2"), "{out}");
+        assert!(out.contains("pefsl_queue_wait_seconds_sum{model=\"m\"} 0.004"), "{out}");
     }
 }

@@ -1,0 +1,574 @@
+//! Event-driven connection-worker pool.
+//!
+//! The legacy `accept_loop` spawns one thread per connection; under
+//! connection churn the spawn/teardown cost dominates and a few hundred
+//! sockets means a few hundred stacks.  This module replaces it with a
+//! fixed pool of workers, each multiplexing many connections over a
+//! non-blocking readiness loop built on `poll(2)` (declared directly via
+//! a thin `extern "C"` shim — no crates).  A worker owns its connections
+//! outright: it reads bytes, feeds them to the incremental
+//! [`super::http::parse_request`] parser, hands complete requests to the
+//! router, and flushes queued responses — all as a state machine, never
+//! blocking on any single peer.
+//!
+//! Infer requests do not run on the worker: they are enqueued with the
+//! per-model scheduler ([`super::sched`]) together with a [`Deliver`]
+//! handle; the dispatcher's completion closure sends the finished
+//! response back through an mpsc channel and pokes the worker's waker (a
+//! loopback TCP pair) so the response is flushed promptly even while the
+//! worker is parked in `poll`.
+//!
+//! Connection hygiene lives here too: `--max-conns` caps live sockets
+//! (beyond it the acceptor answers a canned `503` + `Retry-After`), and
+//! a keep-alive idle timeout reaps connections that sit silent between
+//! requests — including slow-loris peers that trickle a header forever.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::trace::TraceSink;
+
+use super::http::{HttpError, Request, Response};
+use super::{parse_request, Shared};
+
+/// Poll timeout per worker tick; bounds how late a timeout check can run.
+const TICK_MS: i32 = 10;
+/// After shutdown begins, how long idle keep-alive connections get to
+/// submit an in-flight request before being closed.
+const SHUTDOWN_GRACE: Duration = Duration::from_millis(100);
+/// How long a connection lingers draining the peer after a fatal
+/// response, so the error bytes are not destroyed by a RST.
+const LINGER: Duration = Duration::from_millis(250);
+
+#[cfg(unix)]
+mod sys {
+    use std::os::unix::io::RawFd;
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+
+    #[cfg(target_os = "linux")]
+    type NFds = std::ffi::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NFds = std::ffi::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NFds, timeout: std::ffi::c_int) -> std::ffi::c_int;
+    }
+
+    /// Block until any fd is ready or `timeout_ms` elapses.  Readiness
+    /// results are advisory only — callers retry non-blocking IO on every
+    /// tick regardless — so errors (EINTR) degrade to a plain sleep.
+    pub fn wait(fds: &mut [PollFd], timeout_ms: i32) {
+        if fds.is_empty() {
+            std::thread::sleep(std::time::Duration::from_millis(timeout_ms.max(0) as u64));
+            return;
+        }
+        // SAFETY: `PollFd` is repr(C) and field-identical to libc's
+        // `struct pollfd`; the kernel writes only `revents` within the
+        // passed slice bounds.
+        let _ = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms) };
+    }
+}
+
+/// Park until the waker, a readable conn, or a writable conn with pending
+/// output is ready (or the tick expires).  Connections that already hit
+/// EOF are excluded from `POLLIN` — an EOF socket is level-triggered
+/// readable forever and would turn the loop into a busy spin.
+#[cfg(unix)]
+fn wait_ready(waker: &TcpStream, conns: &BTreeMap<u64, ConnState>, timeout_ms: i32) {
+    use std::os::unix::io::AsRawFd;
+    let mut fds = Vec::with_capacity(conns.len() + 1);
+    fds.push(sys::PollFd { fd: waker.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+    for c in conns.values() {
+        let mut events = if c.peer_eof { 0 } else { sys::POLLIN };
+        if c.pending_write() {
+            events |= sys::POLLOUT;
+        }
+        fds.push(sys::PollFd { fd: c.stream.as_raw_fd(), events, revents: 0 });
+    }
+    sys::wait(&mut fds, timeout_ms);
+}
+
+#[cfg(not(unix))]
+fn wait_ready(_waker: &TcpStream, _conns: &BTreeMap<u64, ConnState>, _timeout_ms: i32) {
+    thread::sleep(Duration::from_millis(2));
+}
+
+/// Park the acceptor until the listener is readable or the timeout hits.
+#[cfg(unix)]
+fn wait_listener(listener: &TcpListener, timeout_ms: i32) {
+    use std::os::unix::io::AsRawFd;
+    let mut fds =
+        [sys::PollFd { fd: listener.as_raw_fd(), events: sys::POLLIN, revents: 0 }];
+    sys::wait(&mut fds, timeout_ms);
+}
+
+#[cfg(not(unix))]
+fn wait_listener(_listener: &TcpListener, _timeout_ms: i32) {
+    thread::sleep(Duration::from_millis(2));
+}
+
+/// Write half of a worker's self-pipe (a loopback TCP pair).  One byte
+/// poked here wakes the worker out of `poll` immediately.
+pub(super) struct WakerTx {
+    tx: TcpStream,
+}
+
+impl WakerTx {
+    pub(super) fn wake(&self) {
+        // Non-blocking: if the pipe is full the worker is already awake.
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// Build a connected loopback pair: `(write half, read half)`.
+fn waker_pair() -> io::Result<(WakerTx, TcpStream)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let tx = TcpStream::connect(listener.local_addr()?)?;
+    let (rx, _) = listener.accept()?;
+    tx.set_nonblocking(true)?;
+    tx.set_nodelay(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((WakerTx { tx }, rx))
+}
+
+/// Completion-side handle for one queued request: routes the finished
+/// response back to the owning worker and wakes it.
+#[derive(Clone)]
+pub(super) struct Deliver {
+    tx: mpsc::Sender<(u64, Response)>,
+    waker: Arc<WakerTx>,
+    conn_id: u64,
+}
+
+impl Deliver {
+    pub(super) fn send(&self, resp: Response) {
+        let _ = self.tx.send((self.conn_id, resp));
+        self.waker.wake();
+    }
+}
+
+/// Per-connection state machine: read buffer feeding the incremental
+/// parser, write buffer of rendered responses, and the flags that drive
+/// keep-alive, lingering close, and backpressure.
+struct ConnState {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// A request from this connection is in flight (routing or queued);
+    /// responses are strictly in-order so parsing pauses until it lands.
+    busy: bool,
+    close_after_write: bool,
+    peer_eof: bool,
+    /// When set, the connection is draining the peer after a fatal
+    /// response; the deadline bounds the drain.
+    lingering: Option<Instant>,
+    /// Set when the first byte of a request head arrives; drives the 408
+    /// header-read timeout (slow-loris protection).
+    req_started: Option<Instant>,
+    last_activity: Instant,
+}
+
+impl ConnState {
+    fn new(stream: TcpStream) -> ConnState {
+        let _ = stream.set_nodelay(true);
+        ConnState {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            busy: false,
+            close_after_write: false,
+            peer_eof: false,
+            lingering: None,
+            req_started: None,
+            last_activity: Instant::now(),
+        }
+    }
+
+    fn enqueue_response(&mut self, resp: &Response) {
+        if self.lingering.is_some() {
+            return; // already told the peer goodbye
+        }
+        self.wbuf.extend_from_slice(&resp.to_bytes());
+        self.close_after_write |= resp.close;
+        self.busy = false;
+        self.last_activity = Instant::now();
+    }
+
+    fn pending_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+}
+
+struct Worker {
+    shared: Arc<Shared>,
+    sink: TraceSink,
+    ctx: mpsc::Sender<(u64, Response)>,
+    crx: mpsc::Receiver<(u64, Response)>,
+    incoming: mpsc::Receiver<TcpStream>,
+    waker: Arc<WakerTx>,
+    waker_rx: TcpStream,
+    conns: BTreeMap<u64, ConnState>,
+    next_id: u64,
+    shutdown_at: Option<Instant>,
+}
+
+impl Worker {
+    fn run(mut self) {
+        let mut scratch = [0u8; 64];
+        let mut disconnected = false;
+        loop {
+            if self.shutdown_at.is_none() && self.shared.shutdown.load(Ordering::SeqCst) {
+                self.shutdown_at = Some(Instant::now());
+            }
+            // Drain waker bytes so poll doesn't re-trigger immediately.
+            while matches!((&self.waker_rx).read(&mut scratch), Ok(n) if n > 0) {}
+            // Adopt newly accepted connections.
+            loop {
+                match self.incoming.try_recv() {
+                    Ok(stream) => {
+                        let id = self.next_id;
+                        self.next_id += 1;
+                        self.conns.insert(id, ConnState::new(stream));
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+            // Land completed responses on their connections.
+            while let Ok((id, resp)) = self.crx.try_recv() {
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.enqueue_response(&resp);
+                }
+            }
+            // Service every connection; drop the ones that are done.
+            let ids: Vec<u64> = self.conns.keys().copied().collect();
+            for id in ids {
+                if let Some(mut c) = self.conns.remove(&id) {
+                    if self.service(id, &mut c) {
+                        self.conns.insert(id, c);
+                    } else {
+                        self.shared.live_conns.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            if disconnected && self.conns.is_empty() {
+                return;
+            }
+            wait_ready(&self.waker_rx, &self.conns, TICK_MS);
+        }
+    }
+
+    /// One state-machine step for one connection.  Returns `false` when
+    /// the connection should be dropped.
+    fn service(&self, id: u64, c: &mut ConnState) -> bool {
+        let limits = &self.shared.cfg.limits;
+        // Lingering: drain the peer until EOF or the deadline.
+        if let Some(deadline) = c.lingering {
+            let mut buf = [0u8; 512];
+            loop {
+                match (&c.stream).read(&mut buf) {
+                    Ok(0) => return false,
+                    Ok(_) => {}
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => return false,
+                }
+            }
+            return Instant::now() < deadline;
+        }
+        // Flush pending output.
+        while c.pending_write() {
+            match (&c.stream).write(&c.wbuf[c.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => c.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        if !c.pending_write() && !c.wbuf.is_empty() {
+            c.wbuf.clear();
+            c.wpos = 0;
+            if c.close_after_write {
+                // Response fully flushed; say goodbye and linger briefly
+                // so the bytes survive the close.
+                let _ = c.stream.shutdown(Shutdown::Write);
+                c.lingering = Some(Instant::now() + LINGER);
+                return true;
+            }
+        }
+        // Read whatever the peer has, bounded by the parser's limits so a
+        // peer can't balloon the buffer past one max-size request.
+        let cap = limits.max_head_bytes + limits.max_body_bytes + 4096;
+        let mut buf = [0u8; 4096];
+        while !c.peer_eof && c.rbuf.len() < cap {
+            match (&c.stream).read(&mut buf) {
+                Ok(0) => {
+                    c.peer_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    c.req_started.get_or_insert_with(Instant::now);
+                    c.rbuf.extend_from_slice(&buf[..n]);
+                    c.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        // Parse and route as many complete requests as we may (one at a
+        // time: responses are in-order, so `busy` gates the next parse).
+        while !c.busy && !c.close_after_write {
+            match parse_request(&c.rbuf, limits) {
+                Ok(Some((mut req, consumed))) => {
+                    c.rbuf.drain(..consumed);
+                    let started = c.req_started.take();
+                    req.read_us = started.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e6);
+                    if !c.rbuf.is_empty() {
+                        // Pipelined bytes already queued count as a new
+                        // request in progress.
+                        c.req_started = Some(Instant::now());
+                    }
+                    c.busy = true;
+                    let deliver = Deliver {
+                        tx: self.ctx.clone(),
+                        waker: Arc::clone(&self.waker),
+                        conn_id: id,
+                    };
+                    super::handle_pool_request(&self.shared, req, &self.sink, deliver);
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // A parse error poisons the byte stream: answer, then
+                    // close.  Clearing rbuf prevents an infinite reparse.
+                    let resp = Response::from_http_error(&e);
+                    let status = resp.status;
+                    self.shared.metrics.record("-", "protocol-error", status, Duration::ZERO);
+                    c.rbuf.clear();
+                    c.req_started = None;
+                    c.enqueue_response(&resp);
+                    c.close_after_write = true;
+                    break;
+                }
+            }
+        }
+        // Slow-loris guard: a request that has been trickling in longer
+        // than the request timeout gets a 408 and the door.
+        if !c.busy && !c.close_after_write {
+            if let Some(t0) = c.req_started {
+                if t0.elapsed() > limits.request_timeout {
+                    let n = c.rbuf.len();
+                    let e = HttpError::fatal(
+                        408,
+                        format!("timed out reading request ({n} bytes buffered)"),
+                    );
+                    let resp = Response::from_http_error(&e);
+                    self.shared.metrics.record("-", "protocol-error", resp.status, Duration::ZERO);
+                    c.rbuf.clear();
+                    c.req_started = None;
+                    c.enqueue_response(&resp);
+                    c.close_after_write = true;
+                }
+            }
+        }
+        if c.peer_eof && !c.busy && !c.close_after_write {
+            if c.rbuf.is_empty() {
+                // Clean half-close: flush whatever remains, then drop.
+                return c.pending_write();
+            }
+            let e = HttpError::fatal(400, "connection closed mid-request");
+            let resp = Response::from_http_error(&e);
+            self.shared.metrics.record("-", "protocol-error", resp.status, Duration::ZERO);
+            c.rbuf.clear();
+            c.req_started = None;
+            c.enqueue_response(&resp);
+            c.close_after_write = true;
+        }
+        // Idle reaping: only between requests, never under a pending one.
+        if !c.busy && c.rbuf.is_empty() && !c.pending_write() && !c.close_after_write {
+            if c.last_activity.elapsed() > self.shared.cfg.keep_alive_idle {
+                return false;
+            }
+            if let Some(at) = self.shutdown_at {
+                if at.elapsed() >= SHUTDOWN_GRACE {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Resolve `--conn-workers 0` (auto) to a concrete pool size.
+pub(super) fn effective_conn_workers(configured: usize) -> usize {
+    if configured != 0 {
+        return configured;
+    }
+    thread::available_parallelism().map(|n| n.get().clamp(2, 8)).unwrap_or(4)
+}
+
+/// Accept loop + worker pool.  Runs on the `pefsl-accept` thread until
+/// shutdown, then drains: the listener closes first (no new conns), the
+/// per-worker channels close (workers exit once their conns drain), and
+/// finally the scheduler's dispatchers are joined.
+pub(super) fn serve_pool(listener: TcpListener, shared: Arc<Shared>) {
+    let n_workers = effective_conn_workers(shared.cfg.conn_workers);
+    let mut txs: Vec<mpsc::Sender<TcpStream>> = Vec::new();
+    let mut wakers: Vec<Arc<WakerTx>> = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..n_workers {
+        let (waker, waker_rx) = match waker_pair() {
+            Ok(pair) => pair,
+            Err(_) => break,
+        };
+        let waker = Arc::new(waker);
+        let (itx, irx) = mpsc::channel::<TcpStream>();
+        let (ctx, crx) = mpsc::channel::<(u64, Response)>();
+        let worker = Worker {
+            shared: Arc::clone(&shared),
+            sink: shared.trace.register(),
+            ctx,
+            crx,
+            incoming: irx,
+            waker: Arc::clone(&waker),
+            waker_rx,
+            conns: BTreeMap::new(),
+            next_id: 0,
+            shutdown_at: None,
+        };
+        let spawned = thread::Builder::new()
+            .name(format!("pefsl-conn-{i}"))
+            .spawn(move || worker.run());
+        match spawned {
+            Ok(h) => {
+                txs.push(itx);
+                wakers.push(waker);
+                handles.push(h);
+            }
+            Err(_) => break,
+        }
+    }
+    if txs.is_empty() {
+        // Could not stand up a single worker; fall back to the legacy
+        // thread-per-connection loop rather than serving nothing.
+        super::accept_loop(listener, shared);
+        return;
+    }
+    let n_workers = txs.len();
+    let mut rr = 0usize;
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        wait_listener(&listener, 25);
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => accept_one(&shared, stream, &txs, &wakers, &mut rr),
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    break;
+                }
+                Err(_) => {
+                    thread::sleep(Duration::from_millis(5));
+                    break;
+                }
+            }
+        }
+    }
+    drop(listener);
+    drop(txs); // workers see Disconnected and exit once their conns drain
+    for w in &wakers {
+        w.wake();
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    shared.sched.shutdown_and_join();
+    shared.journal.record(
+        "drain_end",
+        "-",
+        format!("drained; {n_workers} connection worker(s) joined"),
+    );
+}
+
+/// Place one accepted socket: enforce `--max-conns`, then hand it to a
+/// worker round-robin.
+fn accept_one(
+    shared: &Arc<Shared>,
+    stream: TcpStream,
+    txs: &[mpsc::Sender<TcpStream>],
+    wakers: &[Arc<WakerTx>],
+    rr: &mut usize,
+) {
+    let max = shared.cfg.max_conns.max(1);
+    if shared.live_conns.load(Ordering::Relaxed) >= max {
+        reject_saturated(shared, stream);
+        return;
+    }
+    if shared.conn_saturated.load(Ordering::Relaxed)
+        && shared.conn_saturated.swap(false, Ordering::Relaxed)
+    {
+        shared.journal.record("conn_recovered", "-", "below the connection cap, accepting again");
+    }
+    // Accepted sockets do not inherit the listener's non-blocking flag.
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    shared.live_conns.fetch_add(1, Ordering::Relaxed);
+    let i = *rr % txs.len();
+    *rr = rr.wrapping_add(1);
+    if txs[i].send(stream).is_ok() {
+        wakers[i].wake();
+    } else {
+        shared.live_conns.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Answer a connection we cannot afford with a canned `503` and a short
+/// drain so the response survives the close.
+fn reject_saturated(shared: &Arc<Shared>, stream: TcpStream) {
+    shared.conns_rejected.fetch_add(1, Ordering::Relaxed);
+    if !shared.conn_saturated.swap(true, Ordering::Relaxed) {
+        let max = shared.cfg.max_conns.max(1);
+        shared.journal.record(
+            "conn_saturated",
+            "-",
+            format!("{max} live connections at the cap, answering 503"),
+        );
+    }
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut resp = Response::error(503, "server is at its connection limit; retry later")
+        .with_header("retry-after", "1");
+    resp.close = true;
+    let _ = (&stream).write_all(&resp.to_bytes());
+    let _ = (&stream).flush();
+    let _ = stream.shutdown(Shutdown::Write);
+    let deadline = Instant::now() + Duration::from_millis(150);
+    let mut buf = [0u8; 512];
+    while Instant::now() < deadline {
+        match (&stream).read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}

@@ -1,0 +1,437 @@
+//! Scheduling layer: per-model bounded request queues feeding the engine
+//! `WorkerPool`, with deadline-aware ordering and cross-session batch
+//! coalescing.
+//!
+//! PR 6's admission gate decided *whether* a request ran; this layer
+//! decides *when* and *with whom*.  Each model gets a [`ModelQueue`] — a
+//! deadline-ordered heap drained by one dispatcher thread — so the
+//! connection workers never block on the engine: an admitted infer is
+//! enqueued as an [`InferJob`] whose [`Completion`] closure serializes the
+//! response and hands it back to the connection's event loop.
+//!
+//! **Coalescing**: when the dispatcher pops a job it merges every
+//! same-engine job waiting behind it (up to `coalesce_max` images,
+//! optionally lingering `window` for followers) into **one** batched
+//! [`InferRequest`], then fans the [`InferResponse`] back out per job via
+//! [`InferResponse::split`].  The engine's batch fan-out is deterministic
+//! and bit-identical to serial at any pool size, so coalescing is
+//! invisible in the results — only in the throughput.  Jobs are merged
+//! only while `Arc::ptr_eq` on their engine holds: the engine is captured
+//! at enqueue, so a hot-swap mid-queue can never batch images across
+//! model generations.
+//!
+//! **Deadlines**: the heap orders by deadline (earliest first, FIFO
+//! within a deadline).  A job whose deadline passed while queued is
+//! completed with `429` + `Retry-After` without touching the engine —
+//! under saturation the queue sheds the work that already missed its
+//! budget instead of burning compute on it.
+
+use std::collections::{BTreeMap, BinaryHeap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::engine::{Engine, InferRequest, InferResponse};
+use crate::metrics::{LatencySnapshot, LatencyStats};
+use crate::trace::EventJournal;
+
+use super::admission::Admission;
+use super::http::HttpError;
+
+/// Completion callback: invoked exactly once per job, on the dispatcher
+/// thread, with the job's slice of the batched result.
+pub type Completion = Box<dyn FnOnce(JobOutcome) + Send>;
+
+/// One queued inference: the engine generation it was admitted against,
+/// its images, its queue deadline, and the completion that consumes the
+/// outcome (response serialization, metrics, trace, permit release).
+pub struct InferJob {
+    pub engine: Arc<Engine>,
+    pub images: Vec<Vec<f32>>,
+    pub deadline: Instant,
+    /// Request per-layer profiling spans from the engine (traced request).
+    pub record_spans: bool,
+    pub complete: Completion,
+}
+
+/// What a completion receives.
+pub struct JobOutcome {
+    /// This job's slice of the batch result (or the error every job in
+    /// the batch shares / the per-job deadline expiry).
+    pub result: Result<InferResponse, HttpError>,
+    /// Time from enqueue to batch assembly, µs (the `queue` trace span).
+    pub queue_us: f64,
+    /// Time spent assembling the coalesced batch (window linger + merge),
+    /// µs (the `coalesce` trace span, ending at `engine_t0`).
+    pub coalesce_us: f64,
+    /// Total images in the coalesced batch this job rode in (0 when the
+    /// job never reached the engine).
+    pub batch_images: usize,
+    /// When the engine call started (trace offsets).
+    pub engine_t0: Instant,
+}
+
+/// Heap ordering: earliest deadline = greatest (BinaryHeap is a
+/// max-heap), ties broken FIFO by enqueue sequence.
+struct HeapEntry {
+    deadline: Instant,
+    seq: u64,
+    enqueued: Instant,
+    job: InferJob,
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.deadline.cmp(&self.deadline).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+
+impl Eq for HeapEntry {}
+
+struct QState {
+    heap: BinaryHeap<HeapEntry>,
+    closed: bool,
+}
+
+/// Outcome of one [`ModelQueue::dispatch_one`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// A batch (or an expired job) was completed.
+    Ran,
+    /// Nothing queued (non-blocking mode only).
+    Idle,
+    /// The queue is closed and fully drained.
+    Closed,
+}
+
+/// The deadline-ordered, coalescing request queue for one model.
+pub struct ModelQueue {
+    model: String,
+    gate: Arc<Admission>,
+    state: Mutex<QState>,
+    cv: Condvar,
+    queue_wait: Mutex<LatencyStats>,
+    batches: AtomicU64,
+    batched_images: AtomicU64,
+    expired: AtomicU64,
+    max_batch: AtomicUsize,
+    seq: AtomicU64,
+}
+
+impl ModelQueue {
+    pub fn new(model: &str, gate: Arc<Admission>) -> ModelQueue {
+        ModelQueue {
+            model: model.to_string(),
+            gate,
+            state: Mutex::new(QState { heap: BinaryHeap::new(), closed: false }),
+            cv: Condvar::new(),
+            queue_wait: Mutex::new(LatencyStats::new(512)),
+            batches: AtomicU64::new(0),
+            batched_images: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            max_batch: AtomicUsize::new(0),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// The admission gate in front of this queue — the in-flight budget
+    /// still bounds queued + executing work, so `429` semantics at
+    /// overflow are unchanged from the unscheduled server.
+    pub fn gate(&self) -> &Arc<Admission> {
+        &self.gate
+    }
+
+    /// Enqueue a job; on a closed queue the job is handed back untouched
+    /// (the caller answers 503 and drops it, releasing its permit).
+    pub fn enqueue(&self, job: InferJob) -> Result<(), InferJob> {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        if st.closed {
+            return Err(job);
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        st.heap.push(HeapEntry { deadline: job.deadline, seq, enqueued: Instant::now(), job });
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop the earliest-deadline job and run one batch: linger `window`
+    /// for followers (when non-zero), merge same-engine jobs up to
+    /// `coalesce_max` images, run one engine call, fan the results back
+    /// out.  `block` selects between the dispatcher's condvar wait and
+    /// the test-friendly immediate [`Dispatch::Idle`].
+    pub fn dispatch_one(&self, window: Duration, coalesce_max: usize, block: bool) -> Dispatch {
+        let first = {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            loop {
+                if let Some(e) = st.heap.pop() {
+                    break e;
+                }
+                if st.closed {
+                    return Dispatch::Closed;
+                }
+                if !block {
+                    return Dispatch::Idle;
+                }
+                st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let popped_at = Instant::now();
+
+        // deadline is checked at pop: a job that waited past its budget is
+        // shed with 429 instead of burning engine time
+        if first.deadline <= popped_at {
+            self.expired.fetch_add(1, Ordering::Relaxed);
+            let queue_us = popped_at.duration_since(first.enqueued).as_secs_f64() * 1e6;
+            self.queue_wait.lock().unwrap_or_else(PoisonError::into_inner).record_us(queue_us);
+            let result = Err(HttpError::too_busy(
+                self.gate.retry_after_s(),
+                format!(
+                    "deadline expired after {:.0} ms queued for model '{}'",
+                    queue_us / 1e3,
+                    self.model
+                ),
+            ));
+            let outcome = JobOutcome {
+                result,
+                queue_us,
+                coalesce_us: 0.0,
+                batch_images: 0,
+                engine_t0: popped_at,
+            };
+            run_completion(first.job.complete, outcome);
+            return Dispatch::Ran;
+        }
+
+        // opportunistic linger so concurrent senders can coalesce; zero
+        // window still merges whatever is already queued
+        if !window.is_zero() && first.job.images.len() < coalesce_max {
+            std::thread::sleep(window);
+        }
+
+        let mut entries = vec![first];
+        let mut images_total = entries[0].job.images.len();
+        if coalesce_max > images_total {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            while let Some(top) = st.heap.peek() {
+                // never batch across engine generations (hot-swap safety)
+                if !Arc::ptr_eq(&top.job.engine, &entries[0].job.engine)
+                    || images_total + top.job.images.len() > coalesce_max
+                {
+                    break;
+                }
+                let e = st.heap.pop().expect("peeked entry vanished");
+                images_total += e.job.images.len();
+                entries.push(e);
+            }
+        }
+
+        let engine_t0 = Instant::now();
+        let coalesce_us = engine_t0.duration_since(popped_at).as_secs_f64() * 1e6;
+        let mut queue_waits = Vec::with_capacity(entries.len());
+        {
+            let mut qw = self.queue_wait.lock().unwrap_or_else(PoisonError::into_inner);
+            for e in &entries {
+                // queue span ends where the coalesce span begins — the two
+                // tile the pre-engine wait without double counting
+                let full_us = engine_t0.duration_since(e.enqueued).as_secs_f64() * 1e6;
+                let wait_us = (full_us - coalesce_us).max(0.0);
+                qw.record_us(wait_us);
+                queue_waits.push(wait_us);
+            }
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_images.fetch_add(images_total as u64, Ordering::Relaxed);
+        self.max_batch.fetch_max(images_total, Ordering::Relaxed);
+
+        let record_spans = entries.iter().any(|e| e.job.record_spans);
+        let mut counts = Vec::with_capacity(entries.len());
+        let mut all = Vec::with_capacity(images_total);
+        for e in &mut entries {
+            counts.push(e.job.images.len());
+            all.append(&mut e.job.images);
+        }
+        let engine = Arc::clone(&entries[0].job.engine);
+        // one engine call for the whole coalesced batch; a panic inside
+        // fails every rider with 500 but never kills the dispatcher
+        let ran = catch_unwind(AssertUnwindSafe(|| {
+            engine.infer(InferRequest::batch(all).with_spans(record_spans))
+        }));
+        let results: Vec<Result<InferResponse, HttpError>> = match ran {
+            Ok(Ok(resp)) => resp.split(&counts).into_iter().map(Ok).collect(),
+            Ok(Err(e)) => {
+                let msg = e.to_string();
+                counts.iter().map(|_| Err(HttpError::new(400, msg.clone()))).collect()
+            }
+            Err(_) => {
+                let msg = "internal error: engine panicked during a coalesced batch";
+                counts.iter().map(|_| Err(HttpError::new(500, msg))).collect()
+            }
+        };
+        for ((e, result), queue_us) in entries.into_iter().zip(results).zip(queue_waits) {
+            let outcome = JobOutcome {
+                result,
+                queue_us,
+                coalesce_us,
+                batch_images: images_total,
+                engine_t0,
+            };
+            run_completion(e.job.complete, outcome);
+        }
+        Dispatch::Ran
+    }
+
+    /// Close the queue: new enqueues bounce, the dispatcher drains the
+    /// heap and exits.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.closed = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Jobs currently waiting in the heap.
+    pub fn queued(&self) -> usize {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner).heap.len()
+    }
+
+    /// Queue-wait quantiles over the recent window.
+    pub fn queue_wait_snapshot(&self) -> LatencySnapshot {
+        self.queue_wait.lock().unwrap_or_else(PoisonError::into_inner).snapshot()
+    }
+
+    /// Coalesced engine calls dispatched.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Total images across all coalesced batches.
+    pub fn batched_images(&self) -> u64 {
+        self.batched_images.load(Ordering::Relaxed)
+    }
+
+    /// Jobs shed for missing their deadline while queued.
+    pub fn expired(&self) -> u64 {
+        self.expired.load(Ordering::Relaxed)
+    }
+
+    /// Largest coalesced batch observed, in images.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch.load(Ordering::Relaxed)
+    }
+}
+
+fn run_completion(complete: Completion, outcome: JobOutcome) {
+    // a panicking completion must not take the dispatcher (and every
+    // other queued request for this model) down with it
+    let _ = catch_unwind(AssertUnwindSafe(move || complete(outcome)));
+}
+
+/// All per-model queues plus their dispatcher threads.
+pub struct Scheduler {
+    queue_depth: usize,
+    window: Duration,
+    coalesce_max: usize,
+    journal: Arc<EventJournal>,
+    inner: Mutex<SchedInner>,
+}
+
+struct SchedInner {
+    queues: BTreeMap<String, Arc<ModelQueue>>,
+    dispatchers: Vec<JoinHandle<()>>,
+    closed: bool,
+}
+
+impl Scheduler {
+    pub fn new(
+        queue_depth: usize,
+        window: Duration,
+        coalesce_max: usize,
+        journal: Arc<EventJournal>,
+    ) -> Scheduler {
+        Scheduler {
+            queue_depth,
+            window,
+            coalesce_max: coalesce_max.max(1),
+            journal,
+            inner: Mutex::new(SchedInner {
+                queues: BTreeMap::new(),
+                dispatchers: Vec::new(),
+                closed: false,
+            }),
+        }
+    }
+
+    /// The queue (and admission gate) for one model, created on first use
+    /// with its own dispatcher thread.
+    pub fn queue(&self, model: &str) -> Arc<ModelQueue> {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(q) = inner.queues.get(model) {
+            return Arc::clone(q);
+        }
+        let gate = Arc::new(
+            Admission::new(self.queue_depth).with_journal(model, Arc::clone(&self.journal)),
+        );
+        let q = Arc::new(ModelQueue::new(model, gate));
+        inner.queues.insert(model.to_string(), Arc::clone(&q));
+        if inner.closed {
+            q.close();
+        } else {
+            let dq = Arc::clone(&q);
+            let (window, coalesce_max) = (self.window, self.coalesce_max);
+            let spawned = std::thread::Builder::new()
+                .name(format!("pefsl-sched-{model}"))
+                .spawn(move || {
+                    while dq.dispatch_one(window, coalesce_max, true) != Dispatch::Closed {}
+                });
+            match spawned {
+                Ok(h) => inner.dispatchers.push(h),
+                // no dispatcher → nothing will ever drain this queue;
+                // close it so enqueues bounce to 503 instead of hanging
+                Err(_) => q.close(),
+            }
+        }
+        q
+    }
+
+    /// Every queue, in model order (metrics rendering).
+    pub fn queues(&self) -> Vec<Arc<ModelQueue>> {
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        inner.queues.values().cloned().collect()
+    }
+
+    /// Close every queue and join every dispatcher — queued jobs are
+    /// drained (completed), not dropped.
+    pub fn shutdown_and_join(&self) {
+        let (queues, dispatchers) = {
+            let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            inner.closed = true;
+            let queues: Vec<Arc<ModelQueue>> = inner.queues.values().cloned().collect();
+            (queues, std::mem::take(&mut inner.dispatchers))
+        };
+        for q in &queues {
+            q.close();
+        }
+        for h in dispatchers {
+            h.join().ok();
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Length-prefixed binary tensor framing for the serving wire.
+//!
+//! JSON f32 arrays cost ~10× the bytes of raw little-endian f32 (each
+//! element renders as a shortest-roundtrip f64 plus punctuation and
+//! pretty-printing); on an embedded link that overhead dominates the
+//! infer payload.  This module defines the compact alternative accepted
+//! and emitted by `/v1/{model}/infer` under
+//! `Content-Type: application/x-pefsl-tensor`:
+//!
+//! * **request** (`PFT1`): magic `b"PFT1"`, `u32 LE` image count, `u32 LE`
+//!   elements per image, then `count × elems` f32 LE values;
+//! * **response** (`PFR1`): magic `b"PFR1"`, `u32 LE` item count, `u32 LE`
+//!   feature dim, then `count × dim` f32 LE values.
+//!
+//! Both framings are exact: the byte length must match the header, so a
+//! truncated or padded frame is a `400`, never a silent misread.  The f32
+//! bits ride the wire untouched — binary and JSON answers are
+//! bit-identical because both serialize the same `to_bits` patterns.
+
+use super::http::HttpError;
+
+/// Content type negotiating the binary framing (request body and, via the
+/// `Accept` header, the response body).
+pub const TENSOR_CONTENT_TYPE: &str = "application/x-pefsl-tensor";
+
+const REQUEST_MAGIC: &[u8; 4] = b"PFT1";
+const RESPONSE_MAGIC: &[u8; 4] = b"PFR1";
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]])
+}
+
+fn put_f32s(out: &mut Vec<u8>, values: &[f32]) {
+    out.reserve(values.len() * 4);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn get_f32s(buf: &[u8], at: usize, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let o = at + i * 4;
+            f32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]])
+        })
+        .collect()
+}
+
+/// Encode a batch of images as one `PFT1` request frame.  Every image must
+/// have the same element count (the frame header carries a single shape).
+pub fn encode_images(images: &[Vec<f32>]) -> Vec<u8> {
+    let elems = images.first().map_or(0, Vec::len);
+    debug_assert!(images.iter().all(|i| i.len() == elems), "ragged image batch");
+    let mut out = Vec::with_capacity(12 + images.len() * elems * 4);
+    out.extend_from_slice(REQUEST_MAGIC);
+    put_u32(&mut out, images.len() as u32);
+    put_u32(&mut out, elems as u32);
+    for img in images {
+        put_f32s(&mut out, img);
+    }
+    out
+}
+
+/// Decode a `PFT1` request frame, validating the magic, the per-image
+/// element count against the model's expectation, and the exact byte
+/// length.  Errors are client-fault `400`s naming both sizes.
+pub fn decode_images(body: &[u8], expected_elems: usize) -> Result<Vec<Vec<f32>>, HttpError> {
+    if body.len() < 12 || &body[..4] != REQUEST_MAGIC {
+        return Err(HttpError::new(
+            400,
+            "tensor body must start with the 12-byte PFT1 header (magic, count, elems)",
+        ));
+    }
+    let count = get_u32(body, 4) as usize;
+    let elems = get_u32(body, 8) as usize;
+    if count == 0 {
+        return Err(HttpError::new(400, "tensor frame declares zero images"));
+    }
+    if elems != expected_elems {
+        return Err(HttpError::new(
+            400,
+            format!(
+                "tensor frame has {elems} elements per image; the model expects {expected_elems}"
+            ),
+        ));
+    }
+    let need = count
+        .checked_mul(elems)
+        .and_then(|n| n.checked_mul(4))
+        .and_then(|n| n.checked_add(12))
+        .ok_or_else(|| HttpError::new(400, "tensor frame size overflows"))?;
+    if body.len() != need {
+        let got = body.len();
+        return Err(HttpError::new(
+            400,
+            format!("tensor frame is {got} bytes; {count}x{elems} f32 images need {need}"),
+        ));
+    }
+    Ok((0..count).map(|i| get_f32s(body, 12 + i * elems * 4, elems)).collect())
+}
+
+/// Encode per-item feature vectors as one `PFR1` response frame.  Takes
+/// slices so the server can frame engine results without cloning them.
+pub fn encode_features(features: &[&[f32]]) -> Vec<u8> {
+    let dim = features.first().map_or(0, |f| f.len());
+    debug_assert!(features.iter().all(|f| f.len() == dim), "ragged feature batch");
+    let mut out = Vec::with_capacity(12 + features.len() * dim * 4);
+    out.extend_from_slice(RESPONSE_MAGIC);
+    put_u32(&mut out, features.len() as u32);
+    put_u32(&mut out, dim as u32);
+    for f in features {
+        put_f32s(&mut out, f);
+    }
+    out
+}
+
+/// Decode a `PFR1` response frame (the client side of the binary path).
+pub fn decode_features(body: &[u8]) -> Result<Vec<Vec<f32>>, HttpError> {
+    if body.len() < 12 || &body[..4] != RESPONSE_MAGIC {
+        return Err(HttpError::new(
+            400,
+            "tensor response must start with the 12-byte PFR1 header (magic, count, dim)",
+        ));
+    }
+    let count = get_u32(body, 4) as usize;
+    let dim = get_u32(body, 8) as usize;
+    let need = count
+        .checked_mul(dim)
+        .and_then(|n| n.checked_mul(4))
+        .and_then(|n| n.checked_add(12))
+        .ok_or_else(|| HttpError::new(400, "tensor frame size overflows"))?;
+    if body.len() != need {
+        let got = body.len();
+        return Err(HttpError::new(
+            400,
+            format!("tensor frame is {got} bytes; {count}x{dim} f32 features need {need}"),
+        ));
+    }
+    Ok((0..count).map(|i| get_f32s(body, 12 + i * dim * 4, dim)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_roundtrip_bit_exact() {
+        let images =
+            vec![vec![0.5f32, -1.25, f32::MIN_POSITIVE, 3.0e8], vec![0.0, -0.0, 1.0, 2.0]];
+        let wire = encode_images(&images);
+        assert_eq!(wire.len(), 12 + 2 * 4 * 4);
+        let back = decode_images(&wire, 4).unwrap();
+        for (a, b) in images.iter().zip(&back) {
+            let bits_a: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b);
+        }
+    }
+
+    #[test]
+    fn features_roundtrip_bit_exact() {
+        let feats: [&[f32]; 1] = [&[1.5f32, -2.5, 0.125]];
+        let wire = encode_features(&feats);
+        let back = decode_features(&wire).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(
+            back[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            vec![1.5f32.to_bits(), (-2.5f32).to_bits(), 0.125f32.to_bits()]
+        );
+    }
+
+    #[test]
+    fn malformed_frames_are_client_errors() {
+        // bad magic
+        let e = decode_images(b"NOPE\x01\x00\x00\x00\x04\x00\x00\x00", 4).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(!e.fatal, "framing errors keep the connection serving");
+        // zero images
+        let wire = encode_images(&[] as &[Vec<f32>]);
+        assert_eq!(decode_images(&wire, 4).unwrap_err().status, 400);
+        // wrong element count for the model
+        let wire = encode_images(&[vec![0.0f32; 3]]);
+        let e = decode_images(&wire, 4).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.message.contains('3') && e.message.contains('4'), "{}", e.message);
+        // truncated payload
+        let mut wire = encode_images(&[vec![0.0f32; 4]]);
+        wire.pop();
+        assert_eq!(decode_images(&wire, 4).unwrap_err().status, 400);
+        // padded payload
+        let mut wire = encode_images(&[vec![0.0f32; 4]]);
+        wire.push(0);
+        assert_eq!(decode_images(&wire, 4).unwrap_err().status, 400);
+        // response decode rejects a request frame
+        assert_eq!(decode_features(&encode_images(&[vec![0.0f32]])).unwrap_err().status, 400);
+    }
+}

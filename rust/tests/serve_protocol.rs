@@ -307,3 +307,92 @@ fn pipelined_requests_on_one_connection_all_answered() {
     }
     drop(handle);
 }
+
+/// ISSUE 8 satellite: at `--max-conns` saturation the accept path answers
+/// `503 + Retry-After` and closes; once a live connection goes away the
+/// server accepts again, and `/metrics` records the rejections.
+#[test]
+fn connection_cap_answers_503_then_recovers() {
+    let cfg = ServeConfig { max_conns: 2, ..ServeConfig::default() };
+    let (handle, addr) = start_with(cfg);
+    // two keep-alive connections occupy the whole cap (a completed
+    // round-trip proves each was accepted, not just queued in the backlog)
+    let mut a = HttpClient::connect(&addr).unwrap();
+    assert_eq!(a.get("/healthz").unwrap().status, 200);
+    let mut b = HttpClient::connect(&addr).unwrap();
+    assert_eq!(b.get("/healthz").unwrap().status, 200);
+    // the third connection is turned away before sending a single byte
+    let mut c = std::net::TcpStream::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let r = read_response(&mut c).unwrap();
+    assert_eq!(r.status, 503);
+    assert_eq!(r.header("retry-after"), Some("1"), "503 must carry Retry-After");
+    assert!(r.body_text().contains("connection limit"), "{}", r.body_text());
+    drop(c);
+    // freeing one slot lets a new client in once the worker reaps the close
+    drop(a);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let mut fresh = HttpClient::connect(&addr).unwrap();
+        if matches!(fresh.get("/healthz"), Ok(r) if r.status == 200) {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "server never recovered below the cap");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // the still-open connection b saw none of this, and the conn ledger
+    // recorded the rejection
+    let metrics = b.get("/metrics").unwrap().json().unwrap();
+    let conns = metrics.get("conns").expect("/metrics must report conns");
+    assert_eq!(conns.req_usize("max").unwrap(), 2);
+    assert!(conns.req_usize("rejected").unwrap() >= 1);
+    drop(handle);
+}
+
+/// ISSUE 8 satellite: a keep-alive connection idle past
+/// `keep_alive_idle` is closed by the server while fresh connections keep
+/// being served.
+#[test]
+fn idle_keep_alive_connections_are_reaped() {
+    let cfg =
+        ServeConfig { keep_alive_idle: Duration::from_millis(100), ..ServeConfig::default() };
+    let (handle, addr) = start_with(cfg);
+    let mut http = HttpClient::connect(&addr).unwrap();
+    assert_eq!(http.get("/healthz").unwrap().status, 200);
+    // idle well past the window: the worker reaps the connection
+    std::thread::sleep(Duration::from_millis(400));
+    let mut tmp = [0u8; 64];
+    match http.stream_mut().read(&mut tmp) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("expected the idle connection closed, got {n} bytes"),
+    }
+    assert_still_serving(&addr);
+    drop(handle);
+}
+
+/// ISSUE 8 satellite (slow-loris): with a single connection worker, one
+/// stalled partial request must not block other connections — the event
+/// loop keeps multiplexing, and the stall itself times out as a 408.
+#[test]
+fn stalled_request_does_not_block_other_connections() {
+    let cfg = ServeConfig {
+        conn_workers: 1,
+        limits: Limits { request_timeout: Duration::from_millis(300), ..Limits::default() },
+        ..ServeConfig::default()
+    };
+    let (handle, addr) = start_with(cfg);
+    // a partial request head that never completes
+    let mut slow = std::net::TcpStream::connect(&addr).unwrap();
+    slow.write_all(b"POST /v1/m/infer HTTP/1.1\r\ncontent-le").unwrap();
+    // the lone worker still answers fresh connections while it waits
+    for _ in 0..3 {
+        assert_still_serving(&addr);
+    }
+    // ...and the stalled connection is eventually shed as a 408
+    slow.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let r = read_response(&mut slow).unwrap();
+    assert_eq!(r.status, 408);
+    assert!(r.body_text().contains("timed out"), "{}", r.body_text());
+    assert_still_serving(&addr);
+    drop(handle);
+}

@@ -1,0 +1,407 @@
+//! Scheduling suite for `pefsl::serve::sched` (ISSUE 8 acceptance):
+//!
+//! * the per-model queue dispatches in deadline order (earliest first,
+//!   FIFO within a deadline) and sheds expired jobs as `429` without
+//!   touching the engine;
+//! * cross-session coalescing merges queued same-engine jobs into one
+//!   batched engine call whose fan-out is **bit-identical** to serial
+//!   execution, and never merges across engine generations (hot-swap
+//!   safety);
+//! * over the wire, concurrently coalesced infers answer the exact f32
+//!   bits serial infers produce, and `/metrics` shows the batch;
+//! * binary (`PFT1`/`PFR1`) and JSON framings answer bit-identical
+//!   features in all four content-type × accept combinations;
+//! * malformed tensor frames are `400`s that keep the connection serving;
+//! * `/admin/shutdown` drains queued jobs (answered, not dropped).
+
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use pefsl::bundle::Bundle;
+use pefsl::dse::BackboneSpec;
+use pefsl::engine::{Engine, InferRequest, Registry};
+use pefsl::json::Value;
+use pefsl::serve::admission::Admission;
+use pefsl::serve::client::{read_response, HttpClient};
+use pefsl::serve::sched::{Dispatch, InferJob, JobOutcome, ModelQueue};
+use pefsl::serve::tensor::TENSOR_CONTENT_TYPE;
+use pefsl::serve::{ServeConfig, Server, DEADLINE_HEADER};
+use pefsl::tarch::Tarch;
+use pefsl::util::Prng;
+
+const IMG_ELEMS: usize = 8 * 8 * 3;
+
+fn tiny_bundle(seed: u64, version: &str) -> Bundle {
+    let spec = BackboneSpec { image_size: 8, feature_maps: 2, ..BackboneSpec::headline() };
+    Bundle::pack("m", version, spec.build_graph(seed).unwrap(), Tarch::z7020_8x8()).unwrap()
+}
+
+fn engine(seed: u64) -> Arc<Engine> {
+    let registry = Registry::new();
+    registry.deploy("m", &tiny_bundle(seed, "v1")).unwrap();
+    registry.engine("m").unwrap()
+}
+
+fn image(rng: &mut Prng) -> Vec<f32> {
+    (0..IMG_ELEMS).map(|_| rng.f32()).collect()
+}
+
+fn img_json(xs: &[f32]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(f64::from(x))).collect())
+}
+
+/// The f32 bit patterns of one engine item's features.
+fn bits(features: &[f32]) -> Vec<u32> {
+    features.iter().map(|v| v.to_bits()).collect()
+}
+
+/// A job whose completion pushes `(tag, outcome summary)` into `log`.
+#[allow(clippy::type_complexity)]
+fn job(
+    engine: &Arc<Engine>,
+    images: Vec<Vec<f32>>,
+    deadline: Instant,
+    tag: usize,
+    log: &Arc<Mutex<Vec<(usize, Result<Vec<Vec<u32>>, u16>, usize)>>>,
+) -> InferJob {
+    let log = Arc::clone(log);
+    InferJob {
+        engine: Arc::clone(engine),
+        images,
+        deadline,
+        record_spans: false,
+        complete: Box::new(move |out: JobOutcome| {
+            let entry = match out.result {
+                Ok(resp) => Ok(resp.items.iter().map(|i| bits(&i.features)).collect()),
+                Err(e) => Err(e.status),
+            };
+            log.lock().unwrap().push((tag, entry, out.batch_images));
+        }),
+    }
+}
+
+#[test]
+fn dispatch_order_is_earliest_deadline_first() {
+    let eng = engine(1);
+    let mut rng = Prng::new(10);
+    let q = ModelQueue::new("m", Arc::new(Admission::new(8)));
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let now = Instant::now();
+    // enqueued far, near, mid — must dispatch near, mid, far
+    for (tag, secs) in [(0usize, 50u64), (1, 10), (2, 30)] {
+        let j = job(&eng, vec![image(&mut rng)], now + Duration::from_secs(secs), tag, &log);
+        assert!(q.enqueue(j).is_ok());
+    }
+    assert_eq!(q.queued(), 3);
+    // coalesce_max 1 forbids merging, so ordering is observable
+    for _ in 0..3 {
+        assert_eq!(q.dispatch_one(Duration::ZERO, 1, false), Dispatch::Ran);
+    }
+    assert_eq!(q.dispatch_one(Duration::ZERO, 1, false), Dispatch::Idle);
+    let order: Vec<usize> = log.lock().unwrap().iter().map(|(tag, _, _)| *tag).collect();
+    assert_eq!(order, vec![1, 2, 0], "heap must pop earliest deadline first");
+    assert_eq!(q.batches(), 3);
+    assert_eq!(q.max_batch(), 1);
+}
+
+#[test]
+fn expired_jobs_are_shed_with_429_without_engine_work() {
+    let eng = engine(1);
+    let mut rng = Prng::new(11);
+    let q = ModelQueue::new("m", Arc::new(Admission::new(8)));
+    let log = Arc::new(Mutex::new(Vec::new()));
+    assert!(q.enqueue(job(&eng, vec![image(&mut rng)], Instant::now(), 0, &log)).is_ok());
+    std::thread::sleep(Duration::from_millis(5));
+    assert_eq!(q.dispatch_one(Duration::ZERO, 8, false), Dispatch::Ran);
+    let entries = log.lock().unwrap();
+    let (_, result, batch_images) = &entries[0];
+    assert_eq!(*result, Err(429), "expired job must answer 429");
+    assert_eq!(*batch_images, 0, "expired job must never reach the engine");
+    drop(entries);
+    assert_eq!(q.expired(), 1);
+    assert_eq!(q.batches(), 0, "no engine batch ran");
+}
+
+#[test]
+fn coalesced_batch_is_bit_identical_to_serial() {
+    let eng = engine(1);
+    let mut rng = Prng::new(12);
+    let images: Vec<Vec<f32>> = (0..5).map(|_| image(&mut rng)).collect();
+    // serial reference: one engine call per image
+    let serial: Vec<Vec<u32>> = images
+        .iter()
+        .map(|img| {
+            let item = eng.infer(InferRequest::single(img.clone())).unwrap();
+            bits(&item.into_single().unwrap().features)
+        })
+        .collect();
+
+    let q = ModelQueue::new("m", Arc::new(Admission::new(8)));
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let deadline = Instant::now() + Duration::from_secs(30);
+    for (tag, img) in images.iter().enumerate() {
+        assert!(q.enqueue(job(&eng, vec![img.clone()], deadline, tag, &log)).is_ok());
+    }
+    // one dispatch merges all five queued single-image jobs
+    assert_eq!(q.dispatch_one(Duration::ZERO, 16, false), Dispatch::Ran);
+    assert_eq!(q.dispatch_one(Duration::ZERO, 16, false), Dispatch::Idle);
+    assert_eq!(q.batches(), 1, "all jobs must ride one engine call");
+    assert_eq!(q.batched_images(), 5);
+    assert_eq!(q.max_batch(), 5);
+
+    let entries = log.lock().unwrap();
+    assert_eq!(entries.len(), 5);
+    for (tag, result, batch_images) in entries.iter() {
+        assert_eq!(*batch_images, 5);
+        let feats = result.as_ref().expect("coalesced job must succeed");
+        assert_eq!(feats.len(), 1, "each job gets exactly its own slice back");
+        assert_eq!(feats[0], serial[*tag], "job {tag} diverged from serial");
+    }
+}
+
+#[test]
+fn coalescing_never_crosses_engine_generations() {
+    let e1 = engine(1);
+    let e2 = engine(2); // a different generation (distinct Arc)
+    let mut rng = Prng::new(13);
+    let q = ModelQueue::new("m", Arc::new(Admission::new(8)));
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let now = Instant::now();
+    let j1 = job(&e1, vec![image(&mut rng)], now + Duration::from_secs(1), 0, &log);
+    let j2 = job(&e2, vec![image(&mut rng)], now + Duration::from_secs(2), 1, &log);
+    assert!(q.enqueue(j1).is_ok());
+    assert!(q.enqueue(j2).is_ok());
+    // two dispatches, two batches: the generations never merge
+    assert_eq!(q.dispatch_one(Duration::ZERO, 16, false), Dispatch::Ran);
+    assert_eq!(q.dispatch_one(Duration::ZERO, 16, false), Dispatch::Ran);
+    assert_eq!(q.batches(), 2);
+    assert_eq!(q.max_batch(), 1);
+    let tags: Vec<usize> = log.lock().unwrap().iter().map(|(t, _, _)| *t).collect();
+    assert_eq!(tags, vec![0, 1]);
+}
+
+#[test]
+fn closed_queue_bounces_jobs_back() {
+    let eng = engine(1);
+    let mut rng = Prng::new(14);
+    let q = ModelQueue::new("m", Arc::new(Admission::new(8)));
+    let log = Arc::new(Mutex::new(Vec::new()));
+    q.close();
+    let j = job(&eng, vec![image(&mut rng)], Instant::now() + Duration::from_secs(1), 0, &log);
+    assert!(q.enqueue(j).is_err(), "closed queue must hand the job back");
+    assert_eq!(q.dispatch_one(Duration::ZERO, 8, false), Dispatch::Closed);
+    assert!(log.lock().unwrap().is_empty());
+}
+
+/// Wire-level acceptance: N clients firing one single-image infer each
+/// through a lingering coalesce window answer the exact f32 bits serial
+/// engine calls produce, and `/metrics` records the coalesced batch.
+#[test]
+fn wire_coalescing_is_bit_identical_to_serial() {
+    const CLIENTS: usize = 6;
+    let registry = Arc::new(Registry::new());
+    registry.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+    let cfg = ServeConfig {
+        coalesce_window: Duration::from_millis(150),
+        coalesce_max: 32,
+        queue_depth: 64,
+        ..ServeConfig::default()
+    };
+    let handle = Server::start(Arc::clone(&registry), "127.0.0.1:0", cfg).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut rng = Prng::new(15);
+    let images: Vec<Vec<f32>> = (0..CLIENTS).map(|_| image(&mut rng)).collect();
+    let eng = registry.engine("m").unwrap();
+    let serial: Vec<Vec<u32>> = images
+        .iter()
+        .map(|img| {
+            let item = eng.infer(InferRequest::single(img.clone())).unwrap();
+            bits(&item.into_single().unwrap().features)
+        })
+        .collect();
+
+    // connect first, then release every request at once so the lingering
+    // dispatcher sees concurrent arrivals to merge
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let mut workers = Vec::new();
+    for (i, img) in images.iter().enumerate() {
+        let addr = addr.clone();
+        let img = img.clone();
+        let barrier = Arc::clone(&barrier);
+        workers.push(std::thread::spawn(move || {
+            let mut http = HttpClient::connect(&addr).unwrap();
+            barrier.wait();
+            let r = http.post_tensor("/v1/m/infer", &[img], true).unwrap();
+            assert_eq!(r.status, 200, "client {i}: {}", r.body_text());
+            let feats = r.tensor_features().unwrap();
+            assert_eq!(feats.len(), 1);
+            bits(&feats[0])
+        }));
+    }
+    for (i, w) in workers.into_iter().enumerate() {
+        let wire = w.join().unwrap();
+        assert_eq!(wire, serial[i], "client {i} diverged from serial execution");
+    }
+
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let metrics = http.get("/metrics").unwrap().json().unwrap();
+    let rows = metrics.req_arr("admission").unwrap();
+    let row = rows.iter().find(|r| r.req_str("model").unwrap() == "m").unwrap();
+    let coalesce = row.get("coalesce").expect("queue rows carry coalesce stats");
+    assert_eq!(coalesce.req_usize("images").unwrap(), CLIENTS);
+    assert!(
+        coalesce.req_usize("max_batch").unwrap() >= 2,
+        "a 150 ms window over {CLIENTS} synchronized clients must coalesce: {coalesce:?}"
+    );
+    assert!(coalesce.get("mean_batch").unwrap().as_f64().unwrap() >= 1.0);
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+/// Binary and JSON framings answer bit-identical features across all four
+/// content-type × accept combinations, and the binary answer is smaller.
+#[test]
+fn binary_and_json_framings_answer_identical_bits() {
+    let registry = Arc::new(Registry::new());
+    registry.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+    let handle =
+        Server::start(Arc::clone(&registry), "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut rng = Prng::new(16);
+    let img = image(&mut rng);
+    let mut http = HttpClient::connect(&addr).unwrap();
+
+    let json_features = |r: &pefsl::serve::client::ClientResponse| -> Vec<u32> {
+        let v = r.json().unwrap();
+        v.req_arr("items").unwrap()[0]
+            .req_arr("features")
+            .unwrap()
+            .iter()
+            .map(|x| (x.as_f64().unwrap() as f32).to_bits())
+            .collect()
+    };
+
+    // JSON body → JSON answer (the baseline)
+    let mut body = Value::obj();
+    body.set("image", img_json(&img));
+    let r = http.post("/v1/m/infer", &body).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    let baseline = json_features(&r);
+    let json_response_len = r.body.len();
+
+    // JSON body → binary answer
+    let accept = [("accept", TENSOR_CONTENT_TYPE)];
+    let r = http.request("POST", "/v1/m/infer", &accept, Some(&body)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    assert_eq!(r.header("content-type"), Some(TENSOR_CONTENT_TYPE));
+    assert_eq!(bits(&r.tensor_features().unwrap()[0]), baseline);
+    assert!(
+        r.body.len() < json_response_len,
+        "binary answer ({} B) must undercut JSON ({} B)",
+        r.body.len(),
+        json_response_len
+    );
+
+    // binary body → JSON answer
+    let r = http.post_tensor("/v1/m/infer", &[img.clone()], false).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    assert_eq!(json_features(&r), baseline);
+
+    // binary body → binary answer
+    let r = http.post_tensor("/v1/m/infer", &[img.clone()], true).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    assert_eq!(bits(&r.tensor_features().unwrap()[0]), baseline);
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+/// Malformed tensor frames are client-fault `400`s that keep the same
+/// connection serving, and the deadline header is validated.
+#[test]
+fn bad_tensor_frames_and_deadlines_are_400() {
+    assert_eq!(DEADLINE_HEADER, "x-pefsl-deadline-ms");
+    let registry = Arc::new(Registry::new());
+    registry.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+    let handle =
+        Server::start(Arc::clone(&registry), "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = handle.addr().to_string();
+    let mut http = HttpClient::connect(&addr).unwrap();
+
+    // garbage bytes under the tensor content type
+    let r = http
+        .request_bytes("POST", "/v1/m/infer", &[], Some(TENSOR_CONTENT_TYPE), b"NOT-A-FRAME")
+        .unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.body_text().contains("PFT1"), "{}", r.body_text());
+
+    // truncated frame: header promises more f32s than the body carries
+    let mut rng = Prng::new(17);
+    let mut frame = pefsl::serve::tensor::encode_images(&[image(&mut rng)]);
+    frame.truncate(frame.len() - 3);
+    let r = http
+        .request_bytes("POST", "/v1/m/infer", &[], Some(TENSOR_CONTENT_TYPE), &frame)
+        .unwrap();
+    assert_eq!(r.status, 400);
+
+    // an unparseable deadline header is a 400 naming the header
+    let mut body = Value::obj();
+    body.set("image", img_json(&image(&mut rng)));
+    let hdr = [(DEADLINE_HEADER, "soon-ish")];
+    let r = http.request("POST", "/v1/m/infer", &hdr, Some(&body)).unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.body_text().contains(DEADLINE_HEADER), "{}", r.body_text());
+
+    // a valid deadline is accepted (idle server: answered or shed, never
+    // an error) and the connection survived all of the above
+    let hdr = [(DEADLINE_HEADER, "5000")];
+    let r = http.request("POST", "/v1/m/infer", &hdr, Some(&body)).unwrap();
+    assert!(r.status == 200 || r.status == 429, "status {}", r.status);
+    assert_eq!(http.get("/healthz").unwrap().status, 200);
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+/// `/admin/shutdown` drains: a job still lingering in the coalesce window
+/// when shutdown lands is answered, not dropped, and the server exits.
+#[test]
+fn admin_shutdown_drains_queued_jobs() {
+    let registry = Arc::new(Registry::new());
+    registry.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+    let cfg = ServeConfig {
+        coalesce_window: Duration::from_millis(250),
+        ..ServeConfig::default()
+    };
+    let handle = Server::start(Arc::clone(&registry), "127.0.0.1:0", cfg).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut rng = Prng::new(18);
+    let mut waiting = HttpClient::connect(&addr).unwrap();
+    // park one infer in the scheduler (the dispatcher lingers 250 ms)
+    let mut body = Value::obj();
+    body.set("image", img_json(&image(&mut rng)));
+    let payload = pefsl::json::to_string_pretty(&body);
+    let head = format!(
+        "POST /v1/m/infer HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n",
+        payload.len()
+    );
+    use std::io::Write;
+    waiting.stream_mut().write_all(head.as_bytes()).unwrap();
+    waiting.stream_mut().write_all(payload.as_bytes()).unwrap();
+
+    // shutdown lands while the job is still queued/lingering
+    let mut admin = HttpClient::connect(&addr).unwrap();
+    let r = admin.post("/admin/shutdown", &Value::obj()).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+
+    // the parked job is drained to completion, not dropped
+    let resp = read_response(waiting.stream_mut()).unwrap();
+    assert_eq!(resp.status, 200, "queued job dropped in drain: {}", resp.body_text());
+
+    handle.join().unwrap();
+    assert!(std::net::TcpStream::connect(&addr).is_err(), "listener survived the drain");
+}

@@ -122,7 +122,9 @@ fn traced_infer_spans_cover_the_request_with_layer_rows() {
     assert_eq!(t.status, 200);
 
     let names: Vec<&str> = t.spans.iter().map(|s| s.name).collect();
-    for stage in ["http/read", "parse", "admission", "engine", "respond"] {
+    // "queue" joined the pipeline with the ISSUE 8 scheduler: every pooled
+    // infer passes through its model's queue before the engine runs
+    for stage in ["http/read", "parse", "admission", "queue", "engine", "respond"] {
         assert!(names.contains(&stage), "missing stage {stage} in {names:?}");
     }
 
@@ -146,7 +148,12 @@ fn traced_infer_spans_cover_the_request_with_layer_rows() {
     let covered: f64 = t
         .spans
         .iter()
-        .filter(|s| matches!(s.name, "http/read" | "parse" | "admission" | "engine" | "respond"))
+        .filter(|s| {
+            matches!(
+                s.name,
+                "http/read" | "parse" | "admission" | "queue" | "coalesce" | "engine" | "respond"
+            )
+        })
         .map(|s| s.dur_us)
         .sum();
     assert!(
