@@ -175,6 +175,16 @@ impl Shared {
         Arc::clone(self.sched.queue(model).gate())
     }
 
+    /// Close scheduler queues whose model has left the registry
+    /// (`Registry::undeploy`, or a deploy under a new name after the old
+    /// one was dropped), so a removed model does not park a dispatcher
+    /// thread for the life of the server.  Cheap when nothing changed.
+    fn reap_sched_queues(&self) {
+        let live: std::collections::BTreeSet<String> =
+            self.registry.models().into_iter().map(|m| m.name).collect();
+        self.sched.reap_missing(|m| live.contains(m));
+    }
+
     /// Request shutdown, journaling the drain start exactly once no
     /// matter how many paths (handle, drop, endpoint) ask for it.
     fn begin_shutdown(&self, source: &str) {
@@ -286,9 +296,14 @@ impl Drop for ServerHandle {
 
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    let mut last_reap = Instant::now();
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             break;
+        }
+        if last_reap.elapsed() >= Duration::from_millis(500) {
+            last_reap = Instant::now();
+            shared.reap_sched_queues();
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
@@ -928,6 +943,9 @@ fn admin_deploy(shared: &Shared, req: &Request) -> Result<Response, HttpError> {
             return Err(HttpError::new(400, format!("{e:#}")));
         }
     };
+    // A (re)deploy is the natural moment to notice models that have left
+    // the registry since the last one and retire their queues.
+    shared.reap_sched_queues();
     shared.journal.record_timed(
         "deploy",
         &name,

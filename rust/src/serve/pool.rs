@@ -19,9 +19,12 @@
 //! worker is parked in `poll`.
 //!
 //! Connection hygiene lives here too: `--max-conns` caps live sockets
-//! (beyond it the acceptor answers a canned `503` + `Retry-After`), and
-//! a keep-alive idle timeout reaps connections that sit silent between
-//! requests — including slow-loris peers that trickle a header forever.
+//! (beyond it an over-cap socket is handed to a worker with a canned
+//! `503` + `Retry-After` pre-queued, so the acceptor itself never blocks
+//! on a rejected peer), and a keep-alive idle timeout reaps connections
+//! that sit silent between requests — including slow-loris peers that
+//! trickle a header forever, and stalled *readers* whose pending output
+//! never flushes because the peer stopped draining its socket.
 
 use std::collections::BTreeMap;
 use std::io::{self, Read, Write};
@@ -33,7 +36,7 @@ use std::time::{Duration, Instant};
 
 use crate::trace::TraceSink;
 
-use super::http::{HttpError, Request, Response};
+use super::http::{HttpError, Limits, Request, Response};
 use super::{parse_request, Shared};
 
 /// Poll timeout per worker tick; bounds how late a timeout check can run.
@@ -44,6 +47,9 @@ const SHUTDOWN_GRACE: Duration = Duration::from_millis(100);
 /// How long a connection lingers draining the peer after a fatal
 /// response, so the error bytes are not destroyed by a RST.
 const LINGER: Duration = Duration::from_millis(250);
+/// How often the accept loop reaps scheduler queues whose model has been
+/// undeployed from the registry.
+const SCHED_REAP_PERIOD: Duration = Duration::from_millis(500);
 
 #[cfg(unix)]
 mod sys {
@@ -85,15 +91,23 @@ mod sys {
 
 /// Park until the waker, a readable conn, or a writable conn with pending
 /// output is ready (or the tick expires).  Connections that already hit
-/// EOF are excluded from `POLLIN` — an EOF socket is level-triggered
-/// readable forever and would turn the loop into a busy spin.
+/// EOF — or whose read buffer is full (`rbuf_cap`), so the worker has
+/// stopped reading them — are excluded from `POLLIN`: a level-triggered
+/// readable socket the worker won't drain would turn the loop into a
+/// busy spin.
 #[cfg(unix)]
-fn wait_ready(waker: &TcpStream, conns: &BTreeMap<u64, ConnState>, timeout_ms: i32) {
+fn wait_ready(
+    waker: &TcpStream,
+    conns: &BTreeMap<u64, ConnState>,
+    rbuf_cap: usize,
+    timeout_ms: i32,
+) {
     use std::os::unix::io::AsRawFd;
     let mut fds = Vec::with_capacity(conns.len() + 1);
     fds.push(sys::PollFd { fd: waker.as_raw_fd(), events: sys::POLLIN, revents: 0 });
     for c in conns.values() {
-        let mut events = if c.peer_eof { 0 } else { sys::POLLIN };
+        let mut events =
+            if c.peer_eof || c.rbuf.len() >= rbuf_cap { 0 } else { sys::POLLIN };
         if c.pending_write() {
             events |= sys::POLLOUT;
         }
@@ -103,8 +117,19 @@ fn wait_ready(waker: &TcpStream, conns: &BTreeMap<u64, ConnState>, timeout_ms: i
 }
 
 #[cfg(not(unix))]
-fn wait_ready(_waker: &TcpStream, _conns: &BTreeMap<u64, ConnState>, _timeout_ms: i32) {
+fn wait_ready(
+    _waker: &TcpStream,
+    _conns: &BTreeMap<u64, ConnState>,
+    _rbuf_cap: usize,
+    _timeout_ms: i32,
+) {
     thread::sleep(Duration::from_millis(2));
+}
+
+/// The most bytes a connection may buffer unparsed: one max-size request
+/// plus a read-chunk of slack.
+fn rbuf_cap(limits: &Limits) -> usize {
+    limits.max_head_bytes + limits.max_body_bytes + 4096
 }
 
 /// Park the acceptor until the listener is readable or the timeout hits.
@@ -161,11 +186,23 @@ impl Deliver {
     }
 }
 
+/// One accepted socket handed from the acceptor to a worker.
+struct Incoming {
+    stream: TcpStream,
+    /// False for over-cap rejects: the socket never entered `live_conns`
+    /// and exists only so the worker flushes a canned `503` and closes —
+    /// the acceptor itself never writes to (or drains) a rejected peer.
+    counted: bool,
+}
+
 /// Per-connection state machine: read buffer feeding the incremental
 /// parser, write buffer of rendered responses, and the flags that drive
 /// keep-alive, lingering close, and backpressure.
 struct ConnState {
     stream: TcpStream,
+    /// Whether this connection holds a `live_conns` slot (false only for
+    /// over-cap rejects riding a worker just to flush their `503`).
+    counted: bool,
     rbuf: Vec<u8>,
     wbuf: Vec<u8>,
     wpos: usize,
@@ -184,10 +221,11 @@ struct ConnState {
 }
 
 impl ConnState {
-    fn new(stream: TcpStream) -> ConnState {
+    fn new(stream: TcpStream, counted: bool) -> ConnState {
         let _ = stream.set_nodelay(true);
         ConnState {
             stream,
+            counted,
             rbuf: Vec::new(),
             wbuf: Vec::new(),
             wpos: 0,
@@ -220,7 +258,7 @@ struct Worker {
     sink: TraceSink,
     ctx: mpsc::Sender<(u64, Response)>,
     crx: mpsc::Receiver<(u64, Response)>,
-    incoming: mpsc::Receiver<TcpStream>,
+    incoming: mpsc::Receiver<Incoming>,
     waker: Arc<WakerTx>,
     waker_rx: TcpStream,
     conns: BTreeMap<u64, ConnState>,
@@ -232,6 +270,7 @@ impl Worker {
     fn run(mut self) {
         let mut scratch = [0u8; 64];
         let mut disconnected = false;
+        let cap = rbuf_cap(&self.shared.cfg.limits);
         loop {
             if self.shutdown_at.is_none() && self.shared.shutdown.load(Ordering::SeqCst) {
                 self.shutdown_at = Some(Instant::now());
@@ -241,10 +280,17 @@ impl Worker {
             // Adopt newly accepted connections.
             loop {
                 match self.incoming.try_recv() {
-                    Ok(stream) => {
+                    Ok(inc) => {
                         let id = self.next_id;
                         self.next_id += 1;
-                        self.conns.insert(id, ConnState::new(stream));
+                        let mut c = ConnState::new(inc.stream, inc.counted);
+                        if !inc.counted {
+                            // Over-cap reject: nothing to parse, just the
+                            // canned 503 to flush and a bounded goodbye.
+                            c.enqueue_response(&saturated_response());
+                            c.close_after_write = true;
+                        }
+                        self.conns.insert(id, c);
                     }
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
@@ -265,7 +311,7 @@ impl Worker {
                 if let Some(mut c) = self.conns.remove(&id) {
                     if self.service(id, &mut c) {
                         self.conns.insert(id, c);
-                    } else {
+                    } else if c.counted {
                         self.shared.live_conns.fetch_sub(1, Ordering::Relaxed);
                     }
                 }
@@ -273,7 +319,7 @@ impl Worker {
             if disconnected && self.conns.is_empty() {
                 return;
             }
-            wait_ready(&self.waker_rx, &self.conns, TICK_MS);
+            wait_ready(&self.waker_rx, &self.conns, cap, TICK_MS);
         }
     }
 
@@ -285,6 +331,11 @@ impl Worker {
         if let Some(deadline) = c.lingering {
             let mut buf = [0u8; 512];
             loop {
+                // Deadline inside the loop: a peer blasting bytes must not
+                // pin the worker past the linger budget.
+                if Instant::now() >= deadline {
+                    return false;
+                }
                 match (&c.stream).read(&mut buf) {
                     Ok(0) => return false,
                     Ok(_) => {}
@@ -293,13 +344,17 @@ impl Worker {
                     Err(_) => return false,
                 }
             }
-            return Instant::now() < deadline;
+            return true;
         }
-        // Flush pending output.
+        // Flush pending output.  Progress counts as activity, so only a
+        // genuinely stalled peer trips the write-stall reap below.
         while c.pending_write() {
             match (&c.stream).write(&c.wbuf[c.wpos..]) {
                 Ok(0) => return false,
-                Ok(n) => c.wpos += n,
+                Ok(n) => {
+                    c.wpos += n;
+                    c.last_activity = Instant::now();
+                }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
                 Err(_) => return false,
@@ -318,7 +373,7 @@ impl Worker {
         }
         // Read whatever the peer has, bounded by the parser's limits so a
         // peer can't balloon the buffer past one max-size request.
-        let cap = limits.max_head_bytes + limits.max_body_bytes + 4096;
+        let cap = rbuf_cap(limits);
         let mut buf = [0u8; 4096];
         while !c.peer_eof && c.rbuf.len() < cap {
             match (&c.stream).read(&mut buf) {
@@ -393,26 +448,45 @@ impl Worker {
         }
         if c.peer_eof && !c.busy && !c.close_after_write {
             if c.rbuf.is_empty() {
-                // Clean half-close: flush whatever remains, then drop.
-                return c.pending_write();
+                if !c.pending_write() {
+                    // Clean half-close, nothing left to flush: drop.
+                    return false;
+                }
+                // Keep flushing; falls through to the write-stall and
+                // shutdown checks below so an undrained peer stays bounded.
+            } else {
+                let e = HttpError::fatal(400, "connection closed mid-request");
+                let resp = Response::from_http_error(&e);
+                self.shared.metrics.record("-", "protocol-error", resp.status, Duration::ZERO);
+                c.rbuf.clear();
+                c.req_started = None;
+                c.enqueue_response(&resp);
+                c.close_after_write = true;
             }
-            let e = HttpError::fatal(400, "connection closed mid-request");
-            let resp = Response::from_http_error(&e);
-            self.shared.metrics.record("-", "protocol-error", resp.status, Duration::ZERO);
-            c.rbuf.clear();
-            c.req_started = None;
-            c.enqueue_response(&resp);
-            c.close_after_write = true;
         }
         // Idle reaping: only between requests, never under a pending one.
         if !c.busy && c.rbuf.is_empty() && !c.pending_write() && !c.close_after_write {
             if c.last_activity.elapsed() > self.shared.cfg.keep_alive_idle {
                 return false;
             }
-            if let Some(at) = self.shutdown_at {
-                if at.elapsed() >= SHUTDOWN_GRACE {
-                    return false;
-                }
+        }
+        // Write-stall reaping: a peer that stops reading (its receive
+        // window closes, our writes return WouldBlock forever) must not
+        // hold its slot forever — a handful of such peers would otherwise
+        // pin `--max-conns` for good.  Write progress refreshes
+        // `last_activity` above, so only a true stall trips this.
+        if c.pending_write() && c.last_activity.elapsed() > self.shared.cfg.keep_alive_idle {
+            return false;
+        }
+        // Shutdown force-close: after the grace period, any connection not
+        // waiting on an in-flight response is closed even with unflushed
+        // output (a flush was attempted above on every tick of the grace),
+        // so a stalled peer cannot wedge the drain.  Busy connections are
+        // exempt until their response lands; lingering ones never reach
+        // here and are bounded by their own deadline.
+        if let Some(at) = self.shutdown_at {
+            if !c.busy && at.elapsed() >= SHUTDOWN_GRACE {
+                return false;
             }
         }
         true
@@ -433,7 +507,7 @@ pub(super) fn effective_conn_workers(configured: usize) -> usize {
 /// finally the scheduler's dispatchers are joined.
 pub(super) fn serve_pool(listener: TcpListener, shared: Arc<Shared>) {
     let n_workers = effective_conn_workers(shared.cfg.conn_workers);
-    let mut txs: Vec<mpsc::Sender<TcpStream>> = Vec::new();
+    let mut txs: Vec<mpsc::Sender<Incoming>> = Vec::new();
     let mut wakers: Vec<Arc<WakerTx>> = Vec::new();
     let mut handles = Vec::new();
     for i in 0..n_workers {
@@ -442,7 +516,7 @@ pub(super) fn serve_pool(listener: TcpListener, shared: Arc<Shared>) {
             Err(_) => break,
         };
         let waker = Arc::new(waker);
-        let (itx, irx) = mpsc::channel::<TcpStream>();
+        let (itx, irx) = mpsc::channel::<Incoming>();
         let (ctx, crx) = mpsc::channel::<(u64, Response)>();
         let worker = Worker {
             shared: Arc::clone(&shared),
@@ -476,8 +550,16 @@ pub(super) fn serve_pool(listener: TcpListener, shared: Arc<Shared>) {
     }
     let n_workers = txs.len();
     let mut rr = 0usize;
+    let mut last_reap = Instant::now();
     while !shared.shutdown.load(Ordering::SeqCst) {
         wait_listener(&listener, 25);
+        // Scheduler hygiene rides the accept loop: queues whose model has
+        // left the registry (`Registry::undeploy`) are closed so their
+        // dispatcher threads exit instead of parking forever.
+        if last_reap.elapsed() >= SCHED_REAP_PERIOD {
+            last_reap = Instant::now();
+            shared.reap_sched_queues();
+        }
         loop {
             match listener.accept() {
                 Ok((stream, _)) => accept_one(&shared, stream, &txs, &wakers, &mut rr),
@@ -511,64 +593,59 @@ pub(super) fn serve_pool(listener: TcpListener, shared: Arc<Shared>) {
 }
 
 /// Place one accepted socket: enforce `--max-conns`, then hand it to a
-/// worker round-robin.
+/// worker round-robin.  Over-cap sockets are handed over too — uncounted,
+/// with a canned `503` pre-queued — so the acceptor never writes to or
+/// drains a rejected peer and a connect flood at the cap cannot serialize
+/// accepts behind blocking IO.
 fn accept_one(
     shared: &Arc<Shared>,
     stream: TcpStream,
-    txs: &[mpsc::Sender<TcpStream>],
+    txs: &[mpsc::Sender<Incoming>],
     wakers: &[Arc<WakerTx>],
     rr: &mut usize,
 ) {
     let max = shared.cfg.max_conns.max(1);
-    if shared.live_conns.load(Ordering::Relaxed) >= max {
-        reject_saturated(shared, stream);
-        return;
-    }
-    if shared.conn_saturated.load(Ordering::Relaxed)
-        && shared.conn_saturated.swap(false, Ordering::Relaxed)
-    {
-        shared.journal.record("conn_recovered", "-", "below the connection cap, accepting again");
+    let counted = shared.live_conns.load(Ordering::Relaxed) < max;
+    if counted {
+        if shared.conn_saturated.load(Ordering::Relaxed)
+            && shared.conn_saturated.swap(false, Ordering::Relaxed)
+        {
+            shared.journal.record(
+                "conn_recovered",
+                "-",
+                "below the connection cap, accepting again",
+            );
+        }
+    } else {
+        shared.conns_rejected.fetch_add(1, Ordering::Relaxed);
+        if !shared.conn_saturated.swap(true, Ordering::Relaxed) {
+            shared.journal.record(
+                "conn_saturated",
+                "-",
+                format!("{max} live connections at the cap, answering 503"),
+            );
+        }
     }
     // Accepted sockets do not inherit the listener's non-blocking flag.
     if stream.set_nonblocking(true).is_err() {
         return;
     }
-    shared.live_conns.fetch_add(1, Ordering::Relaxed);
+    if counted {
+        shared.live_conns.fetch_add(1, Ordering::Relaxed);
+    }
     let i = *rr % txs.len();
     *rr = rr.wrapping_add(1);
-    if txs[i].send(stream).is_ok() {
+    if txs[i].send(Incoming { stream, counted }).is_ok() {
         wakers[i].wake();
-    } else {
+    } else if counted {
         shared.live_conns.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
-/// Answer a connection we cannot afford with a canned `503` and a short
-/// drain so the response survives the close.
-fn reject_saturated(shared: &Arc<Shared>, stream: TcpStream) {
-    shared.conns_rejected.fetch_add(1, Ordering::Relaxed);
-    if !shared.conn_saturated.swap(true, Ordering::Relaxed) {
-        let max = shared.cfg.max_conns.max(1);
-        shared.journal.record(
-            "conn_saturated",
-            "-",
-            format!("{max} live connections at the cap, answering 503"),
-        );
-    }
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+/// The canned answer for a connection we cannot afford.
+fn saturated_response() -> Response {
     let mut resp = Response::error(503, "server is at its connection limit; retry later")
         .with_header("retry-after", "1");
     resp.close = true;
-    let _ = (&stream).write_all(&resp.to_bytes());
-    let _ = (&stream).flush();
-    let _ = stream.shutdown(Shutdown::Write);
-    let deadline = Instant::now() + Duration::from_millis(150);
-    let mut buf = [0u8; 512];
-    while Instant::now() < deadline {
-        match (&stream).read(&mut buf) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
-        }
-    }
+    resp
 }

@@ -356,7 +356,11 @@ pub struct Scheduler {
 
 struct SchedInner {
     queues: BTreeMap<String, Arc<ModelQueue>>,
-    dispatchers: Vec<JoinHandle<()>>,
+    /// One dispatcher thread per live queue, keyed by model name.
+    dispatchers: BTreeMap<String, JoinHandle<()>>,
+    /// Dispatchers of reaped queues, still draining toward exit; joined
+    /// at shutdown so no thread outlives the server.
+    retired: Vec<JoinHandle<()>>,
     closed: bool,
 }
 
@@ -374,7 +378,8 @@ impl Scheduler {
             journal,
             inner: Mutex::new(SchedInner {
                 queues: BTreeMap::new(),
-                dispatchers: Vec::new(),
+                dispatchers: BTreeMap::new(),
+                retired: Vec::new(),
                 closed: false,
             }),
         }
@@ -403,7 +408,9 @@ impl Scheduler {
                     while dq.dispatch_one(window, coalesce_max, true) != Dispatch::Closed {}
                 });
             match spawned {
-                Ok(h) => inner.dispatchers.push(h),
+                Ok(h) => {
+                    inner.dispatchers.insert(model.to_string(), h);
+                }
                 // no dispatcher → nothing will ever drain this queue;
                 // close it so enqueues bounce to 503 instead of hanging
                 Err(_) => q.close(),
@@ -412,25 +419,61 @@ impl Scheduler {
         q
     }
 
+    /// Drop the queue (and dispatcher) of every model `exists` disclaims —
+    /// models undeployed or renamed away must not park a dispatcher thread
+    /// for the life of the server.  The closed queue drains on its own
+    /// dispatcher (queued jobs are answered, not dropped), whose handle is
+    /// retired and joined at shutdown; this call never blocks on a drain.
+    /// Returns the reaped model names.
+    pub fn reap_missing(&self, exists: impl Fn(&str) -> bool) -> Vec<String> {
+        let mut reaped = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            if inner.closed {
+                return reaped;
+            }
+            let gone: Vec<String> =
+                inner.queues.keys().filter(|m| !exists(m.as_str())).cloned().collect();
+            for name in gone {
+                if let Some(q) = inner.queues.remove(&name) {
+                    q.close();
+                }
+                if let Some(h) = inner.dispatchers.remove(&name) {
+                    inner.retired.push(h);
+                }
+                reaped.push(name);
+            }
+        }
+        for name in &reaped {
+            self.journal.record("queue_reaped", name, "model no longer deployed; queue closed");
+        }
+        reaped
+    }
+
     /// Every queue, in model order (metrics rendering).
     pub fn queues(&self) -> Vec<Arc<ModelQueue>> {
         let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
         inner.queues.values().cloned().collect()
     }
 
-    /// Close every queue and join every dispatcher — queued jobs are
-    /// drained (completed), not dropped.
+    /// Close every queue and join every dispatcher (including retired
+    /// dispatchers of reaped queues) — queued jobs are drained
+    /// (completed), not dropped.
     pub fn shutdown_and_join(&self) {
-        let (queues, dispatchers) = {
+        let (queues, dispatchers, retired) = {
             let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
             inner.closed = true;
             let queues: Vec<Arc<ModelQueue>> = inner.queues.values().cloned().collect();
-            (queues, std::mem::take(&mut inner.dispatchers))
+            (
+                queues,
+                std::mem::take(&mut inner.dispatchers),
+                std::mem::take(&mut inner.retired),
+            )
         };
         for q in &queues {
             q.close();
         }
-        for h in dispatchers {
+        for h in dispatchers.into_values().chain(retired) {
             h.join().ok();
         }
     }

@@ -396,3 +396,110 @@ fn stalled_request_does_not_block_other_connections() {
     assert_still_serving(&addr);
     drop(handle);
 }
+
+/// A peer that sends requests but never reads the responses eventually
+/// stalls the connection's writes (its receive window closes); the worker
+/// must reap it once writes make no progress for `keep_alive_idle` and
+/// free its `--max-conns` slot, instead of leaking the slot forever.
+#[test]
+fn stalled_writer_connection_is_reaped_and_frees_its_slot() {
+    let cfg = ServeConfig {
+        max_conns: 1,
+        keep_alive_idle: Duration::from_millis(400),
+        ..ServeConfig::default()
+    };
+    let (handle, addr) = start_with(cfg);
+    // the lone slot goes to a client that pipelines far more response
+    // bytes than kernel socket buffers can hold and never reads a byte
+    let mut stalled = std::net::TcpStream::connect(&addr).unwrap();
+    let req: &[u8] = b"GET /metrics HTTP/1.1\r\ncontent-length: 0\r\n\r\n";
+    let mut burst = Vec::with_capacity(req.len() * 12_000);
+    for _ in 0..12_000 {
+        burst.extend_from_slice(req);
+    }
+    stalled.write_all(&burst).unwrap();
+    // while the stalled conn holds the slot, fresh conns bounce with 503;
+    // once it is reaped (write-stall or idle, whichever its kernel
+    // buffering produces) the slot frees and the server recovers
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let mut fresh = HttpClient::connect(&addr).unwrap();
+        match fresh.get("/healthz") {
+            Ok(r) if r.status == 200 => break,
+            Ok(r) => assert_eq!(r.status, 503, "unexpected status at the cap"),
+            Err(_) => {}
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "stalled-writer connection was never reaped; its conn slot leaked"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    drop(stalled);
+    drop(handle);
+}
+
+/// Graceful shutdown must complete even when a connection has unflushable
+/// output because its peer never reads — after the grace period the
+/// worker force-closes it instead of waiting on a flush that can never
+/// happen, so `ServerHandle::join` cannot wedge.
+#[test]
+fn shutdown_completes_despite_stalled_writer() {
+    let (handle, addr) = start();
+    let mut stalled = std::net::TcpStream::connect(&addr).unwrap();
+    let req: &[u8] = b"GET /metrics HTTP/1.1\r\ncontent-length: 0\r\n\r\n";
+    let mut burst = Vec::with_capacity(req.len() * 12_000);
+    for _ in 0..12_000 {
+        burst.extend_from_slice(req);
+    }
+    stalled.write_all(&burst).unwrap();
+    // let the pool buffer more output than the peer will ever read, then
+    // drain: join must not hang on the stalled connection
+    std::thread::sleep(Duration::from_millis(300));
+    handle.shutdown();
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        handle.join().unwrap();
+        tx.send(()).ok();
+    });
+    rx.recv_timeout(Duration::from_secs(15))
+        .expect("graceful drain wedged behind a peer that never reads its responses");
+    drop(stalled);
+}
+
+/// Over-cap sockets are rejected without any blocking IO on the acceptor:
+/// several silent peers all get their canned `503` concurrently from the
+/// workers, and rejects cannot starve accepts once capacity frees.
+#[test]
+fn saturated_rejects_answer_concurrently_without_starving_accepts() {
+    let cfg = ServeConfig { max_conns: 1, ..ServeConfig::default() };
+    let (handle, addr) = start_with(cfg);
+    let mut held = HttpClient::connect(&addr).unwrap();
+    assert_eq!(held.get("/healthz").unwrap().status, 200);
+    // silent peers at the cap: the old accept path drained each one
+    // serially on the accept thread; now every socket is handed off and
+    // answered by the worker pool
+    let mut rejected: Vec<std::net::TcpStream> =
+        (0..6).map(|_| std::net::TcpStream::connect(&addr).unwrap()).collect();
+    for s in &mut rejected {
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let r = read_response(s).unwrap();
+        assert_eq!(r.status, 503);
+        assert_eq!(r.header("retry-after"), Some("1"), "503 must carry Retry-After");
+        assert!(r.body_text().contains("connection limit"), "{}", r.body_text());
+    }
+    // freeing the slot lets a fresh client in promptly, even though the
+    // rejected sockets above were never closed from the peer side
+    drop(held);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let mut fresh = HttpClient::connect(&addr).unwrap();
+        if matches!(fresh.get("/healthz"), Ok(r) if r.status == 200) {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "server never recovered below the cap");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    drop(rejected);
+    drop(handle);
+}

@@ -405,3 +405,81 @@ fn admin_shutdown_drains_queued_jobs() {
     handle.join().unwrap();
     assert!(std::net::TcpStream::connect(&addr).is_err(), "listener survived the drain");
 }
+
+/// Queues (and their dispatcher threads) of models that leave the
+/// registry are reaped instead of parking on their condvar for the life
+/// of the server; a later request under the same name mints a fresh
+/// queue.
+#[test]
+fn reap_missing_closes_and_recreates_model_queues() {
+    use pefsl::serve::sched::Scheduler;
+    use pefsl::trace::EventJournal;
+    let journal = Arc::new(EventJournal::default());
+    let sched = Scheduler::new(4, Duration::ZERO, 8, Arc::clone(&journal));
+    let qa = sched.queue("a");
+    let _qb = sched.queue("b");
+    assert_eq!(sched.queues().len(), 2);
+    let reaped = sched.reap_missing(|m| m == "b");
+    assert_eq!(reaped, vec!["a".to_string()]);
+    assert_eq!(sched.queues().len(), 1);
+    // the reaped queue is closed: enqueues bounce back to the caller
+    let eng = engine(1);
+    let mut rng = Prng::new(99);
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let j = job(&eng, vec![image(&mut rng)], Instant::now() + Duration::from_secs(5), 0, &log);
+    assert!(qa.enqueue(j).is_err(), "enqueue on a reaped queue must bounce");
+    // reaping nothing is a no-op, and the name can be minted anew
+    assert!(sched.reap_missing(|_| true).is_empty());
+    let qa2 = sched.queue("a");
+    assert!(!Arc::ptr_eq(&qa, &qa2), "recreated queue must be fresh");
+    assert_eq!(sched.queues().len(), 2);
+    sched.shutdown_and_join();
+}
+
+/// End to end: `Registry::undeploy` makes the accept loop retire the
+/// model's queue (it disappears from `/metrics`), while other models keep
+/// serving and the undeployed name answers a clean 404.
+#[test]
+fn undeployed_model_queue_is_reaped_from_metrics() {
+    let registry = Arc::new(Registry::new());
+    registry.deploy("m", &tiny_bundle(1, "v1")).unwrap();
+    registry.deploy("n", &tiny_bundle(2, "v1")).unwrap();
+    let handle =
+        Server::start(Arc::clone(&registry), "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = handle.addr().to_string();
+    let mut rng = Prng::new(77);
+    let mut http = HttpClient::connect(&addr).unwrap();
+    let mut body = Value::obj();
+    body.set("image", img_json(&image(&mut rng)));
+    for model in ["m", "n"] {
+        let r = http.post(&format!("/v1/{model}/infer"), &body).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_text());
+    }
+    let queue_models = |http: &mut HttpClient| -> Vec<String> {
+        let v = http.get("/metrics").unwrap().json().unwrap();
+        v.req_arr("admission")
+            .unwrap()
+            .iter()
+            .map(|row| row.req_str("model").unwrap().to_string())
+            .collect()
+    };
+    assert_eq!(queue_models(&mut http), vec!["m".to_string(), "n".to_string()]);
+    assert!(registry.undeploy("n"));
+    // the accept loop reaps on a timer; poll until the queue is gone
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let models = queue_models(&mut http);
+        if models == vec!["m".to_string()] {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "queue for the undeployed model was never reaped: {models:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert_eq!(http.post("/v1/n/infer", &body).unwrap().status, 404);
+    assert_eq!(http.post("/v1/m/infer", &body).unwrap().status, 200);
+    handle.shutdown();
+    handle.join().unwrap();
+}
