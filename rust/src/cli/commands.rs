@@ -740,6 +740,20 @@ pub fn serve_cmd(args: &Args) -> Result<i32> {
         None => None,
     };
     let registry = Arc::new(Registry::new());
+    // Fault injection must be armed before the startup deploys so the
+    // very first engine build samples the plan's SEU arming state.
+    let fault = match args.get("fault-plan") {
+        Some(path) => {
+            let plan = crate::fault::FaultPlan::from_file(path)
+                .with_context(|| format!("load --fault-plan {path}"))?;
+            Some(Arc::new(crate::fault::FaultInjector::new(plan)?))
+        }
+        None => crate::fault::FaultInjector::from_env().context("load $PEFSL_FAULT_PLAN")?,
+    };
+    if let Some(inj) = &fault {
+        registry.set_fault(Arc::clone(inj));
+        eprintln!("fault injection armed (seed {:#x})", inj.plan().seed);
+    }
     let paths = bundle_paths(args, None)?;
     for (i, p) in paths.iter().enumerate() {
         let bundle = Bundle::load(p)?;
@@ -777,6 +791,7 @@ pub fn serve_cmd(args: &Args) -> Result<i32> {
         coalesce_window: std::time::Duration::from_millis(args.get_u64("coalesce-window", 0)?),
         coalesce_max: args.get_usize("coalesce-max", 32)?,
         thread_per_conn: args.has("thread-per-conn"),
+        self_check_ms: args.get_u64("self-check-ms", 500)?,
         ..ServeConfig::default()
     };
     let handle = Server::start(Arc::clone(&registry), &addr, cfg)?;

@@ -17,6 +17,7 @@
 //!                  [--coalesce-max N --thread-per-conn]
 //!                  [--admin-token T --addr-file PATH]
 //!                  [--trace-sample N --trace-out FILE]
+//!                  [--self-check-ms MS --fault-plan FILE]
 //! pefsl models     [--dir DIR | --bundle DIR] [--check] [--json [PATH]]
 //! pefsl compile    [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl simulate   [--graph PATH --weights PATH] [--tarch NAME]
@@ -137,6 +138,10 @@ pub fn usage() -> String {
      \x20 --idle-timeout S   serve: session idle-expiry seconds (default 300)\n\
      \x20 --admin-token T    serve: require T in x-pefsl-admin for /admin endpoints\n\
      \x20 --addr-file PATH   serve: write the bound address to PATH at startup\n\
+     \x20 --self-check-ms MS serve: golden self-check probe interval (default 500;\n\
+     \x20                    0 disables the breaker/auto-rollback prober)\n\
+     \x20 --fault-plan FILE  serve: arm deterministic fault injection from a JSON\n\
+     \x20                    plan (chaos runs; $PEFSL_FAULT_PLAN works everywhere)\n\
      \x20 --trace-sample N   serve: trace every Nth request (0 = only x-pefsl-trace)\n\
      \x20 --trace-out FILE   serve/demo: write a Chrome trace (chrome://tracing) on exit;\n\
      \x20                    serve implies --trace-sample 1 unless given\n\

@@ -16,9 +16,11 @@
 //! ```
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::fault::FaultInjector;
 use crate::graph::{import_files, Graph};
 use crate::json::{self, Value};
 use crate::quant::QuantConfig;
@@ -80,6 +82,7 @@ pub struct EngineBuilder {
     graph: Option<Graph>,
     quant: Option<QuantConfig>,
     workers: Option<usize>,
+    fault: Option<Arc<FaultInjector>>,
 }
 
 /// Default sim worker-pool size: one worker per available core, capped —
@@ -150,15 +153,28 @@ impl EngineBuilder {
         self
     }
 
+    /// Attach a fault injector (chaos runs; see [`crate::fault`]) — sim
+    /// workers get the injected-panic/stall/error and SEU seams armed.
+    /// Without this call, `$PEFSL_FAULT_PLAN` (if set) supplies a plan;
+    /// otherwise every fault hook stays an absent `Option`.
+    pub fn fault(mut self, inj: Arc<FaultInjector>) -> EngineBuilder {
+        self.fault = Some(inj);
+        self
+    }
+
     /// Build the engine: resolve artifacts, compile/load the backend.
     pub fn build(self) -> Result<Engine> {
-        let EngineBuilder { artifacts, kind, tarch, graph, quant, workers } = self;
+        let EngineBuilder { artifacts, kind, tarch, graph, quant, workers, fault } = self;
         if let Some(cfg) = &quant {
             cfg.validate()?;
         }
         if workers == Some(0) {
             bail!("worker pool needs at least one worker");
         }
+        let fault = match fault {
+            Some(inj) => Some(inj),
+            None => FaultInjector::from_env().context("load $PEFSL_FAULT_PLAN")?,
+        };
         let tarch = tarch.unwrap_or_else(Tarch::z7020_12x12);
         let engine = match kind {
             BackendKind::Sim => {
@@ -184,7 +200,8 @@ impl EngineBuilder {
                     workers: n,
                     layer_names: Some(program.layers.iter().map(|l| l.name.clone()).collect()),
                 };
-                Engine::new(SimWorker::pool(program, graph, n), info)
+                let (pool, factory) = SimWorker::pool_with_factory(program, graph, n, fault);
+                Engine::supervised(pool, Some(factory), info)
             }
             BackendKind::Pjrt => {
                 if graph.is_some() {

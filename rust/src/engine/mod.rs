@@ -80,7 +80,9 @@ mod session;
 mod workers;
 
 pub use builder::{resolve_artifacts_dir, BackendKind, EngineBuilder};
-pub use registry::{DeployReport, ModelInfo, Registry};
+pub use registry::{
+    BreakerConfig, BreakerState, DeployReport, HealthState, ModelHealthInfo, ModelInfo, Registry,
+};
 pub use request::{InferItem, InferMetrics, InferRequest, InferResponse, LayerSpan};
 pub use session::{ClassSnapshot, Session, SessionSnapshot};
 
@@ -91,7 +93,7 @@ use anyhow::{bail, Result};
 use crate::fixed::QFormat;
 use crate::quant::{Calibrator, QTensor, QuantConfig};
 
-use workers::{InferWorker, WorkerPool};
+use workers::{InferWorker, WorkerFactory, WorkerPool};
 
 /// Static facts about an engine, fixed at build time.
 #[derive(Clone, Debug)]
@@ -169,8 +171,18 @@ impl QuantState {
 }
 
 impl Engine {
-    pub(crate) fn new(workers: Vec<Box<dyn InferWorker>>, mut info: EngineInfo) -> Engine {
-        let pool = WorkerPool::new(workers);
+    pub(crate) fn new(workers: Vec<Box<dyn InferWorker>>, info: EngineInfo) -> Engine {
+        Engine::supervised(workers, None, info)
+    }
+
+    /// An engine whose pool can respawn panicked workers through `factory`
+    /// (the self-healing path; see [`crate::fault`]).
+    pub(crate) fn supervised(
+        workers: Vec<Box<dyn InferWorker>>,
+        factory: Option<WorkerFactory>,
+        mut info: EngineInfo,
+    ) -> Engine {
+        let pool = WorkerPool::with_factory(workers, factory);
         info.workers = pool.size();
         Engine { pool, info, stats: Mutex::new(EngineStats::default()), quant: None }
     }
@@ -310,6 +322,17 @@ impl Engine {
     /// Snapshot of the cumulative service counters.
     pub fn stats(&self) -> EngineStats {
         *self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Workers the pool respawned after panics (supervision counter).
+    pub fn worker_respawns(&self) -> u64 {
+        self.pool.respawns()
+    }
+
+    /// Take the pool's pending supervision notes (panic payloads and what
+    /// recovery did) — the serving layer journals these.
+    pub fn drain_supervision_notes(&self) -> Vec<String> {
+        self.pool.drain_incidents()
     }
 }
 

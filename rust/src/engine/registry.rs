@@ -1,5 +1,5 @@
 //! [`Registry`] — N named, versioned models served side by side, with
-//! atomic hot-swap.
+//! atomic hot-swap, runtime golden self-checks and automatic rollback.
 //!
 //! The registry is the serving layer above [`crate::bundle::Bundle`]: each
 //! deployed model is an [`Engine`] (its own worker pool over one compiled
@@ -12,6 +12,20 @@
 //! dropped or sees a half-installed model (race-tested in
 //! `tests/bundle_registry.rs` under concurrent sessions).
 //!
+//! **Runtime health.**  Deploy-time verification catches artifacts that
+//! are *already* wrong; [`Registry::self_check`] extends the golden-frame
+//! idea to run-time: it replays the deployed bundle's golden frame through
+//! the **live** engine (pool supervision, fault hooks and all) and
+//! bit-compares the features.  Outcomes drive a per-model circuit breaker
+//! (closed → open after [`BreakerConfig::failures_to_open`] consecutive
+//! failures → half-open probes after the cooldown → closed after
+//! [`BreakerConfig::probes_to_close`] passes).  When the breaker trips on
+//! a freshly deployed version, the registry **rolls back automatically**
+//! to the last-known-good engine it retained at swap time — the original
+//! `Arc<Engine>`, so post-rollback answers are bit-identical to
+//! pre-deploy.  Every transition lands in the attached event journal with
+//! a probe trace id.
+//!
 //! [`Session`]s obtained via [`Registry::session`] pin the engine that was
 //! current at creation — enrolled features stay consistent with the
 //! backbone that produced them even across later deploys; re-resolve per
@@ -19,22 +33,188 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, PoisonError, RwLock};
+use std::sync::{Arc, Mutex, PoisonError, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::bundle::Bundle;
+use crate::fault::FaultInjector;
 use crate::json::Value;
+use crate::tcompiler::compile;
+use crate::trace::EventJournal;
 
 use super::request::{InferRequest, InferResponse};
 use super::session::Session;
 use super::Engine;
+
+/// Circuit-breaker thresholds (per model; set via
+/// [`Registry::set_breaker_config`]).
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive self-check failures that open the breaker.
+    pub failures_to_open: u32,
+    /// Consecutive half-open probe passes that close it again.
+    pub probes_to_close: u32,
+    /// How long an open breaker sheds before allowing half-open probes.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            failures_to_open: 3,
+            probes_to_close: 2,
+            cooldown: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Public face of a model's circuit breaker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// Rolled-up health of a deployed model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Breaker closed, last self-check (if any) passed.
+    Ok,
+    /// Recovering or suspicious: half-open breaker, or recent failures.
+    Degraded,
+    /// Breaker open — infer traffic is shed with 503.
+    Failed,
+}
+
+impl HealthState {
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Ok => "ok",
+            HealthState::Degraded => "degraded",
+            HealthState::Failed => "failed",
+        }
+    }
+}
+
+/// Health snapshot of one model ([`Registry::health`]).
+#[derive(Clone, Debug)]
+pub struct ModelHealthInfo {
+    pub state: HealthState,
+    pub breaker: BreakerState,
+    /// Self-checks run against this model (across rollbacks).
+    pub self_checks: u64,
+    pub self_check_failures: u64,
+    /// Consecutive failures while closed / passes while half-open.
+    pub streak: u32,
+    /// Outcome of the most recent self-check, if any ran.
+    pub last_check_ok: Option<bool>,
+    /// Suggested client back-off while the breaker is open (remaining
+    /// cooldown, whole seconds, at least 1).
+    pub retry_after_s: u64,
+}
+
+/// Internal breaker automaton.
+#[derive(Clone, Copy, Debug)]
+enum Breaker {
+    Closed { fails: u32 },
+    Open { since: Instant },
+    HalfOpen { passes: u32 },
+}
+
+/// Mutable health record shared by snapshots of one deployed model.
+#[derive(Debug)]
+struct Health {
+    breaker: Breaker,
+    self_checks: u64,
+    failures: u64,
+    last_check_ok: Option<bool>,
+}
+
+impl Health {
+    fn new() -> Health {
+        Health {
+            breaker: Breaker::Closed { fails: 0 },
+            self_checks: 0,
+            failures: 0,
+            last_check_ok: None,
+        }
+    }
+
+    fn state(&self) -> HealthState {
+        match self.breaker {
+            Breaker::Open { .. } => HealthState::Failed,
+            Breaker::HalfOpen { .. } => HealthState::Degraded,
+            Breaker::Closed { fails } => {
+                if fails > 0 || self.last_check_ok == Some(false) {
+                    HealthState::Degraded
+                } else {
+                    HealthState::Ok
+                }
+            }
+        }
+    }
+
+    fn info(&self, cooldown: Duration) -> ModelHealthInfo {
+        let (breaker, streak, retry_after_s) = match self.breaker {
+            Breaker::Closed { fails } => (BreakerState::Closed, fails, 0),
+            Breaker::HalfOpen { passes } => (BreakerState::HalfOpen, passes, 0),
+            Breaker::Open { since } => {
+                let left = cooldown.saturating_sub(since.elapsed()).as_secs_f64();
+                (BreakerState::Open, 0, (left.ceil() as u64).max(1))
+            }
+        };
+        ModelHealthInfo {
+            state: self.state(),
+            breaker,
+            self_checks: self.self_checks,
+            self_check_failures: self.failures,
+            streak,
+            last_check_ok: self.last_check_ok,
+            retry_after_s,
+        }
+    }
+}
+
+/// The golden frame dequantized to the engine's f32 request interface.
+/// `QFormat` scales are powers of two, so `dequantize(quantize(x))` is
+/// exact on codes: feeding `input` through the live engine must reproduce
+/// `expected` bit-for-bit on a healthy deployment.
+struct GoldenCheck {
+    input: Vec<f32>,
+    expected: Vec<f32>,
+}
+
+/// What the registry keeps to undo a bad deploy without rebuilding.
+struct LastGood {
+    version: String,
+    engine: Arc<Engine>,
+    golden: Option<Arc<GoldenCheck>>,
+}
 
 /// One deployed model.
 struct Deployed {
     version: String,
     generation: u64,
     engine: Arc<Engine>,
+    /// Golden self-check material (absent for [`Registry::deploy_engine`],
+    /// which has no bundle to replay).
+    golden: Option<Arc<GoldenCheck>>,
+    health: Arc<Mutex<Health>>,
+    /// Last-known-good retained at swap time; consumed by one rollback.
+    prev: Option<LastGood>,
 }
 
 /// Listing row of one deployed model ([`Registry::models`]).
@@ -51,6 +231,15 @@ pub struct ModelInfo {
     pub workers: usize,
     /// Requests served by the *current* engine (resets on hot-swap).
     pub requests: u64,
+    /// Rolled-up health (`ok|degraded|failed`).
+    pub health: HealthState,
+    /// Circuit-breaker state (`closed|open|half-open`).
+    pub breaker: BreakerState,
+    /// Golden self-checks run against this model.
+    pub self_checks: u64,
+    pub self_check_failures: u64,
+    /// Workers the engine's pool respawned after panics.
+    pub worker_respawns: u64,
 }
 
 impl ModelInfo {
@@ -64,7 +253,12 @@ impl ModelInfo {
             .set("backend", self.backend)
             .set("feature_dim", self.feature_dim)
             .set("workers", self.workers)
-            .set("requests", self.requests);
+            .set("requests", self.requests)
+            .set("health", self.health.name())
+            .set("breaker", self.breaker.name())
+            .set("self_checks", self.self_checks)
+            .set("self_check_failures", self.self_check_failures)
+            .set("worker_respawns", self.worker_respawns);
         o
     }
 }
@@ -85,11 +279,63 @@ pub struct DeployReport {
 pub struct Registry {
     models: RwLock<BTreeMap<String, Deployed>>,
     generations: AtomicU64,
+    breaker_cfg: RwLock<Option<BreakerConfig>>,
+    /// Event journal for health transitions (attached by the serve layer).
+    journal: RwLock<Option<Arc<EventJournal>>>,
+    /// Fault injector for chaos runs: corrupts deploys in its configured
+    /// window and arms the engines built for subsequent deploys.
+    fault: RwLock<Option<Arc<FaultInjector>>>,
+    rollbacks: AtomicU64,
+    self_checks: AtomicU64,
+    self_check_failures: AtomicU64,
+    /// Probe sequence for journal trace ids.
+    probe_seq: AtomicU64,
 }
 
 impl Registry {
     pub fn new() -> Registry {
         Registry::default()
+    }
+
+    /// Attach the operational event journal: health transitions
+    /// (self-check failures, breaker moves, rollbacks) and injected deploy
+    /// faults get recorded there.
+    pub fn attach_journal(&self, journal: Arc<EventJournal>) {
+        *self.journal.write().unwrap_or_else(PoisonError::into_inner) = Some(journal);
+    }
+
+    /// Arm a fault injector (chaos runs): deploy corruption plus the
+    /// worker/SEU seams of every engine built by later deploys.
+    pub fn set_fault(&self, inj: Arc<FaultInjector>) {
+        *self.fault.write().unwrap_or_else(PoisonError::into_inner) = Some(inj);
+    }
+
+    /// The armed fault injector, if any.
+    pub fn fault(&self) -> Option<Arc<FaultInjector>> {
+        self.fault.read().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// Override the circuit-breaker thresholds (applies to every model).
+    pub fn set_breaker_config(&self, cfg: BreakerConfig) {
+        *self.breaker_cfg.write().unwrap_or_else(PoisonError::into_inner) = Some(cfg);
+    }
+
+    /// Current breaker thresholds.
+    pub fn breaker_config(&self) -> BreakerConfig {
+        self.breaker_cfg.read().unwrap_or_else(PoisonError::into_inner).unwrap_or_default()
+    }
+
+    fn journal_event(&self, kind: &'static str, model: &str, detail: String) {
+        if let Some(j) = self.journal.read().unwrap_or_else(PoisonError::into_inner).as_ref() {
+            j.record(kind, model, detail);
+        }
+    }
+
+    /// Journal trace id for one probe episode — links the self-check
+    /// failure, breaker transitions and rollback of one incident.
+    fn next_trace_id(&self) -> String {
+        let seq = self.probe_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        format!("{:016x}", seq.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5E1F_C4EC_4B1D_E5D0)
     }
 
     /// Deploy a bundle under `name` (replacing any previous version) with
@@ -131,44 +377,116 @@ impl Registry {
         workers: Option<usize>,
     ) -> Result<DeployReport> {
         let name = name.into();
+        let fault = self.fault();
+
+        // Chaos seam: a deploy inside the plan's corruption window gets one
+        // golden bit flipped *before* verification — exercising the same
+        // gate a corrupted artifact would hit.
+        let mut corrupted: Option<Bundle> = None;
+        if let Some(inj) = &fault {
+            let mut staged = bundle.clone();
+            if let Some(k) = inj.corrupt_deploy(&mut staged.golden.output_codes) {
+                self.journal_event(
+                    "fault_injected",
+                    &name,
+                    format!("deploy corruption injected (site deploy_corrupt, k={k})"),
+                );
+                corrupted = Some(staged);
+            }
+        }
+        let bundle = corrupted.as_ref().unwrap_or(bundle);
+
         let t0 = std::time::Instant::now();
         bundle.verify().with_context(|| {
             format!("bundle '{}@{}' failed verification; not deployed", bundle.name, bundle.version)
         })?;
         let verify_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Golden self-check material: the pinned frame, dequantized to the
+        // engine's f32 interface (exact — QFormat scales are powers of two).
+        let program = compile(&bundle.graph, &bundle.tarch)?;
+        let golden = Arc::new(GoldenCheck {
+            input: program.input_format.dequantize_slice(&bundle.golden.input_codes),
+            expected: program.output_format.dequantize_slice(&bundle.golden.output_codes),
+        });
+
         let mut builder = bundle.engine_builder();
         if let Some(n) = workers {
             builder = builder.workers(n);
         }
+        if let Some(inj) = &fault {
+            builder = builder.fault(Arc::clone(inj));
+        }
         let t1 = std::time::Instant::now();
         let engine = Arc::new(builder.build()?);
         let build_ms = t1.elapsed().as_secs_f64() * 1e3;
-        let generation = self.install(name, bundle.version.clone(), engine);
+        if let Some(inj) = &fault {
+            inj.note_deploy_built();
+        }
+        let generation = self.install(name, bundle.version.clone(), engine, Some(golden));
         Ok(DeployReport { generation, verify_ms, build_ms })
     }
 
     /// Deploy an already-built engine (tests, custom builds) — same atomic
-    /// swap, no bundle verification.
+    /// swap, no bundle verification and no golden self-checks.
     pub fn deploy_engine(
         &self,
         name: impl Into<String>,
         version: impl Into<String>,
         engine: Engine,
     ) -> u64 {
-        self.install(name.into(), version.into(), Arc::new(engine))
+        self.install(name.into(), version.into(), Arc::new(engine), None)
     }
 
-    fn install(&self, name: String, version: String, engine: Arc<Engine>) -> u64 {
+    fn install(
+        &self,
+        name: String,
+        version: String,
+        engine: Arc<Engine>,
+        golden: Option<Arc<GoldenCheck>>,
+    ) -> u64 {
         let generation = self.generations.fetch_add(1, Ordering::Relaxed) + 1;
         let mut models = self.models.write().unwrap_or_else(PoisonError::into_inner);
         // Two deploys of one model can race: generations are allocated (and
         // engines built) outside the lock, so a slow older deploy may reach
         // here after a faster newer one.  Last-allocated wins — never
         // install a generation older than what's already serving.
-        match models.get(&name) {
+        match models.get_mut(&name) {
             Some(current) if current.generation > generation => {}
-            _ => {
-                models.insert(name, Deployed { version, generation, engine });
+            Some(current) => {
+                // Retain the replaced version for auto-rollback — unless its
+                // own breaker is open (rolling back *to* a failed version
+                // would just bounce).
+                let keep = !matches!(
+                    current.health.lock().unwrap_or_else(PoisonError::into_inner).breaker,
+                    Breaker::Open { .. }
+                );
+                let prev = keep.then(|| LastGood {
+                    version: current.version.clone(),
+                    engine: Arc::clone(&current.engine),
+                    golden: current.golden.clone(),
+                });
+                *current = Deployed {
+                    version,
+                    generation,
+                    engine,
+                    golden,
+                    health: Arc::new(Mutex::new(Health::new())),
+                    prev,
+                };
+            }
+            None => {
+                models.insert(
+                    name,
+                    Deployed {
+                        version,
+                        generation,
+                        engine,
+                        golden,
+                        health: Arc::new(Mutex::new(Health::new())),
+                        prev: None,
+                    },
+                );
             }
         }
         generation
@@ -204,19 +522,223 @@ impl Registry {
         Ok(Session::new(self.engine(name)?))
     }
 
+    /// Health snapshot of one model, if deployed.
+    pub fn health(&self, name: &str) -> Option<ModelHealthInfo> {
+        let cooldown = self.breaker_config().cooldown;
+        let models = self.models.read().unwrap_or_else(PoisonError::into_inner);
+        models.get(name).map(|d| {
+            d.health.lock().unwrap_or_else(PoisonError::into_inner).info(cooldown)
+        })
+    }
+
+    /// Names of every deployed model.
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap_or_else(PoisonError::into_inner).keys().cloned().collect()
+    }
+
+    /// Replay the model's golden frame through the **live** engine and
+    /// drive the circuit breaker with the outcome; trips may auto-rollback.
+    /// Returns the resulting health state.  Models deployed without a
+    /// bundle (no golden frame) are vacuously healthy.
+    pub fn self_check(&self, name: &str) -> Result<HealthState> {
+        let cfg = self.breaker_config();
+        let (engine, golden, health, generation, version) = {
+            let models = self.models.read().unwrap_or_else(PoisonError::into_inner);
+            let d = models
+                .get(name)
+                .ok_or_else(|| anyhow!("no model '{name}' deployed"))?;
+            (
+                Arc::clone(&d.engine),
+                d.golden.clone(),
+                Arc::clone(&d.health),
+                d.generation,
+                d.version.clone(),
+            )
+        };
+        let Some(golden) = golden else {
+            return Ok(health.lock().unwrap_or_else(PoisonError::into_inner).state());
+        };
+        let tid = self.next_trace_id();
+
+        // Open breaker: shed until the cooldown elapses, then move to
+        // half-open and let this probe through.
+        {
+            let mut h = health.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Breaker::Open { since } = h.breaker {
+                if since.elapsed() < cfg.cooldown {
+                    return Ok(HealthState::Failed);
+                }
+                h.breaker = Breaker::HalfOpen { passes: 0 };
+                self.journal_event(
+                    "breaker_half_open",
+                    name,
+                    format!("cooldown elapsed; probing '{version}' (trace={tid})"),
+                );
+            }
+        }
+
+        self.self_checks.fetch_add(1, Ordering::Relaxed);
+        let outcome = engine.infer(InferRequest::single(golden.input.clone()));
+        let (pass, why) = match &outcome {
+            Ok(resp) if resp.items[0].features == golden.expected => (true, String::new()),
+            Ok(resp) => {
+                let diffs = resp.items[0]
+                    .features
+                    .iter()
+                    .zip(&golden.expected)
+                    .filter(|(a, b)| a.to_bits() != b.to_bits())
+                    .count();
+                (false, format!("golden mismatch: {diffs}/{} features differ", golden.expected.len()))
+            }
+            Err(e) => (false, format!("golden replay errored: {e:#}")),
+        };
+        if !pass {
+            self.self_check_failures.fetch_add(1, Ordering::Relaxed);
+            self.journal_event(
+                "self_check_failed",
+                name,
+                format!("'{version}' (gen {generation}): {why} (trace={tid})"),
+            );
+        }
+
+        let mut tripped = false;
+        let state = {
+            let mut h = health.lock().unwrap_or_else(PoisonError::into_inner);
+            h.self_checks += 1;
+            if !pass {
+                h.failures += 1;
+            }
+            h.last_check_ok = Some(pass);
+            h.breaker = match h.breaker {
+                Breaker::Closed { fails } => {
+                    if pass {
+                        Breaker::Closed { fails: 0 }
+                    } else if fails + 1 >= cfg.failures_to_open {
+                        tripped = true;
+                        Breaker::Open { since: Instant::now() }
+                    } else {
+                        Breaker::Closed { fails: fails + 1 }
+                    }
+                }
+                Breaker::HalfOpen { passes } => {
+                    if !pass {
+                        tripped = true;
+                        Breaker::Open { since: Instant::now() }
+                    } else if passes + 1 >= cfg.probes_to_close {
+                        self.journal_event(
+                            "breaker_closed",
+                            name,
+                            format!(
+                                "{} probe passes; '{version}' healthy again (trace={tid})",
+                                passes + 1
+                            ),
+                        );
+                        Breaker::Closed { fails: 0 }
+                    } else {
+                        Breaker::HalfOpen { passes: passes + 1 }
+                    }
+                }
+                // unreachable in practice: open handled above, but a racing
+                // concurrent probe may have re-opened it — keep shedding
+                open @ Breaker::Open { .. } => open,
+            };
+            h.state()
+        };
+
+        if tripped {
+            self.journal_event(
+                "breaker_open",
+                name,
+                format!(
+                    "breaker opened on '{version}' (gen {generation}) after repeated \
+                     self-check failures (trace={tid})"
+                ),
+            );
+            if self.rollback(name, generation, &tid) {
+                return Ok(HealthState::Degraded);
+            }
+        }
+        Ok(state)
+    }
+
+    /// Run a self-check on every deployed model (the serve prober's tick).
+    pub fn self_check_all(&self) -> Vec<(String, HealthState)> {
+        self.names()
+            .into_iter()
+            .filter_map(|n| self.self_check(&n).ok().map(|s| (n, s)))
+            .collect()
+    }
+
+    /// Swap `name` back to its retained last-known-good engine.  Only
+    /// applies while the generation that tripped is still the one serving
+    /// (a racing newer deploy wins); the restored engine starts half-open
+    /// so probes re-validate it before it counts as `ok` again.
+    fn rollback(&self, name: &str, bad_generation: u64, tid: &str) -> bool {
+        let mut models = self.models.write().unwrap_or_else(PoisonError::into_inner);
+        let Some(d) = models.get_mut(name) else { return false };
+        if d.generation != bad_generation {
+            return false;
+        }
+        let Some(prev) = d.prev.take() else { return false };
+        let generation = self.generations.fetch_add(1, Ordering::Relaxed) + 1;
+        let bad_version = std::mem::replace(&mut d.version, prev.version);
+        d.engine = prev.engine;
+        d.golden = prev.golden;
+        d.generation = generation;
+        {
+            let mut h = d.health.lock().unwrap_or_else(PoisonError::into_inner);
+            h.breaker = Breaker::HalfOpen { passes: 0 };
+        }
+        self.rollbacks.fetch_add(1, Ordering::Relaxed);
+        self.journal_event(
+            "rollback",
+            name,
+            format!(
+                "auto-rollback: '{bad_version}' (gen {bad_generation}) replaced by \
+                 last-known-good '{}' (gen {generation}); probes re-validating (trace={tid})",
+                d.version
+            ),
+        );
+        true
+    }
+
+    /// Total golden self-checks run across all models.
+    pub fn self_checks_total(&self) -> u64 {
+        self.self_checks.load(Ordering::Relaxed)
+    }
+
+    /// Total failed self-checks across all models.
+    pub fn self_check_failures_total(&self) -> u64 {
+        self.self_check_failures.load(Ordering::Relaxed)
+    }
+
+    /// Automatic rollbacks performed since startup.
+    pub fn rollbacks_total(&self) -> u64 {
+        self.rollbacks.load(Ordering::Relaxed)
+    }
+
     /// Listing of every deployed model, name-ordered.
     pub fn models(&self) -> Vec<ModelInfo> {
+        let cooldown = self.breaker_config().cooldown;
         let models = self.models.read().unwrap_or_else(PoisonError::into_inner);
         models
             .iter()
-            .map(|(name, d)| ModelInfo {
-                name: name.clone(),
-                version: d.version.clone(),
-                generation: d.generation,
-                backend: d.engine.name(),
-                feature_dim: d.engine.feature_dim(),
-                workers: d.engine.workers(),
-                requests: d.engine.stats().requests,
+            .map(|(name, d)| {
+                let h = d.health.lock().unwrap_or_else(PoisonError::into_inner).info(cooldown);
+                ModelInfo {
+                    name: name.clone(),
+                    version: d.version.clone(),
+                    generation: d.generation,
+                    backend: d.engine.name(),
+                    feature_dim: d.engine.feature_dim(),
+                    workers: d.engine.workers(),
+                    requests: d.engine.stats().requests,
+                    health: h.state,
+                    breaker: h.breaker,
+                    self_checks: h.self_checks,
+                    self_check_failures: h.self_check_failures,
+                    worker_respawns: d.engine.worker_respawns(),
+                }
             })
             .collect()
     }
@@ -241,6 +763,7 @@ mod tests {
     use super::*;
     use crate::bundle::Bundle;
     use crate::dse::BackboneSpec;
+    use crate::fault::FaultPlan;
     use crate::tarch::Tarch;
 
     fn tiny_bundle(seed: u64, version: &str) -> Bundle {
@@ -263,6 +786,8 @@ mod tests {
         assert_eq!(info.generation, g1);
         assert_eq!(info.backend, "sim");
         assert_eq!(info.requests, 1);
+        assert_eq!(info.health, HealthState::Ok);
+        assert_eq!(info.breaker, BreakerState::Closed);
         // unknown model: loud, names what IS deployed
         let err = reg.infer("ghost", InferRequest::single(img)).unwrap_err().to_string();
         assert!(err.contains("ghost") && err.contains('m'), "{err}");
@@ -345,8 +870,132 @@ mod tests {
         assert_eq!(row.req_usize("feature_dim").unwrap(), info.feature_dim);
         assert_eq!(row.req_usize("workers").unwrap(), 2);
         assert_eq!(row.req_usize("requests").unwrap() as u64, info.requests);
+        assert_eq!(row.req_str("health").unwrap(), "ok");
+        assert_eq!(row.req_str("breaker").unwrap(), "closed");
+        assert_eq!(row.req_usize("self_checks").unwrap(), 0);
+        assert_eq!(row.req_usize("self_check_failures").unwrap(), 0);
+        assert_eq!(row.req_usize("worker_respawns").unwrap(), 0);
         // and the array renders/parses cleanly
         let text = crate::json::to_string_pretty(&v);
         assert_eq!(crate::json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn self_check_passes_on_healthy_model() {
+        let reg = Registry::new();
+        reg.deploy_with("m", &tiny_bundle(1, "v1"), Some(1)).unwrap();
+        assert_eq!(reg.self_check("m").unwrap(), HealthState::Ok);
+        assert_eq!(reg.self_checks_total(), 1);
+        assert_eq!(reg.self_check_failures_total(), 0);
+        let h = reg.health("m").unwrap();
+        assert_eq!(h.state, HealthState::Ok);
+        assert_eq!(h.last_check_ok, Some(true));
+    }
+
+    #[test]
+    fn breaker_opens_and_rolls_back_on_armed_seu_deploy() {
+        let reg = Registry::new();
+        reg.set_breaker_config(BreakerConfig {
+            failures_to_open: 3,
+            probes_to_close: 2,
+            cooldown: Duration::from_millis(0),
+        });
+        // SEU armed only for engines built after the first deploy.
+        let inj = Arc::new(
+            FaultInjector::new(FaultPlan {
+                seed: 11,
+                seu_act_rate: 1.0,
+                seu_arm_after_deploys: 1,
+                ..FaultPlan::default()
+            })
+            .unwrap(),
+        );
+        reg.set_fault(Arc::clone(&inj));
+        let journal = Arc::new(EventJournal::new(64));
+        reg.attach_journal(Arc::clone(&journal));
+
+        reg.deploy_with("m", &tiny_bundle(1, "v1"), Some(1)).unwrap();
+        let img = vec![0.4; 8 * 8 * 3];
+        let baseline = reg.infer("m", InferRequest::single(img.clone())).unwrap();
+        let g1 = reg.models()[0].generation;
+
+        // v2 passes deploy-time verification (hook-free simulator) but its
+        // live engine carries armed SEU flips at rate 1.0.
+        reg.deploy_with("m", &tiny_bundle(1, "v2"), Some(1)).unwrap();
+        for _ in 0..3 {
+            reg.self_check("m").unwrap();
+        }
+        assert_eq!(reg.rollbacks_total(), 1, "breaker trip must roll back");
+        let m = &reg.models()[0];
+        assert_eq!(m.version, "v1", "last-known-good version restored");
+        assert!(m.generation > g1, "rollback allocates a fresh generation");
+
+        // restored engine answers bit-identically to pre-deploy
+        let after = reg.infer("m", InferRequest::single(img)).unwrap();
+        assert_eq!(after.items[0].features, baseline.items[0].features);
+
+        // half-open probes on the clean engine close the breaker again
+        assert_eq!(reg.self_check("m").unwrap(), HealthState::Degraded);
+        assert_eq!(reg.self_check("m").unwrap(), HealthState::Ok);
+        assert_eq!(reg.health("m").unwrap().breaker, BreakerState::Closed);
+
+        // the whole episode is journaled with trace ids
+        let kinds: Vec<&str> =
+            journal.recent(64).iter().map(|e| e.kind).collect();
+        for kind in ["self_check_failed", "breaker_open", "rollback", "breaker_closed"] {
+            assert!(kinds.contains(&kind), "journal missing {kind}: {kinds:?}");
+        }
+        assert!(
+            journal.recent(64).iter().all(|e| e.kind != "rollback" || e.detail.contains("trace=")),
+            "rollback events carry trace ids"
+        );
+    }
+
+    #[test]
+    fn breaker_without_last_good_stays_failed_until_probes_recover() {
+        let reg = Registry::new();
+        reg.set_breaker_config(BreakerConfig {
+            failures_to_open: 2,
+            probes_to_close: 1,
+            cooldown: Duration::from_millis(0),
+        });
+        // armed immediately: the very first deploy is bad and has no
+        // predecessor to roll back to
+        let inj = Arc::new(
+            FaultInjector::new(FaultPlan {
+                seed: 5,
+                seu_act_rate: 1.0,
+                ..FaultPlan::default()
+            })
+            .unwrap(),
+        );
+        reg.set_fault(inj);
+        reg.deploy_with("m", &tiny_bundle(1, "v1"), Some(1)).unwrap();
+        reg.self_check("m").unwrap();
+        let s = reg.self_check("m").unwrap();
+        assert_eq!(s, HealthState::Failed);
+        assert_eq!(reg.rollbacks_total(), 0);
+        assert_eq!(reg.health("m").unwrap().breaker, BreakerState::Open);
+        assert_eq!(reg.models()[0].health, HealthState::Failed);
+    }
+
+    #[test]
+    fn deploy_corruption_window_rejects_bundle() {
+        let reg = Registry::new();
+        let inj = Arc::new(
+            FaultInjector::new(FaultPlan {
+                deploy_corrupt_after: 1,
+                deploy_corrupt_count: 1,
+                ..FaultPlan::default()
+            })
+            .unwrap(),
+        );
+        reg.set_fault(inj);
+        reg.deploy("m", &tiny_bundle(1, "v1")).unwrap(); // deploy 0: clean
+        let err = reg.deploy("m", &tiny_bundle(2, "v2")).unwrap_err().to_string();
+        assert!(err.contains("not deployed"), "{err}");
+        assert_eq!(reg.models()[0].version, "v1", "corrupted deploy left v1 serving");
+        reg.deploy("m", &tiny_bundle(3, "v3")).unwrap(); // window passed
+        assert_eq!(reg.models()[0].version, "v3");
     }
 }

@@ -13,13 +13,23 @@
 //! the max of its items, not their sum.  Results keep request order, and
 //! every worker is deterministic, so pooled output is bit-identical to a
 //! serial run (pinned by `tests/engine_concurrency.rs`).
+//!
+//! **Supervision.**  A panic inside a worker's inference used to poison its
+//! slot forever.  Now every item runs under `catch_unwind`; on a panic the
+//! pool journals the payload, rebuilds the slot's worker through the
+//! engine's respawn factory (a closure over the shared `Arc<Program>` /
+//! `Arc<Graph>`, so a respawn is an arena re-materialization, not a
+//! recompile) and retries the item on the fresh worker.  `Result::Err`
+//! from a worker is *not* a crash and still propagates untouched.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::fault::{ArmedSeu, FaultInjector};
 use crate::graph::Graph;
 use crate::runtime::Executable;
 use crate::sim::Simulator;
@@ -36,25 +46,118 @@ pub(crate) trait InferWorker: Send {
     fn infer_one(&mut self, image: &[f32], record_spans: bool) -> Result<InferItem>;
 }
 
+/// Builds a replacement worker when supervision has to respawn a slot.
+pub(crate) type WorkerFactory = Box<dyn Fn() -> Box<dyn InferWorker> + Send + Sync>;
+
+/// Retries per item before supervision gives up on a panicking slot (each
+/// retry runs on a freshly respawned worker, so only a deterministic
+/// crasher — or a fault plan with panic rate 1 — can exhaust this).
+const MAX_RESPAWNS_PER_ITEM: u32 = 16;
+
 /// N workers behind N independent locks — the engine's execution substrate.
 pub(crate) struct WorkerPool {
     slots: Vec<Mutex<Box<dyn InferWorker>>>,
     /// Round-robin start for single-image requests, so concurrent callers
     /// spread across slots instead of all contending on slot 0.
     rotor: AtomicUsize,
+    /// Respawn factory for supervision; pools without one (PJRT) turn a
+    /// worker panic into an error instead of self-healing.
+    factory: Option<WorkerFactory>,
+    /// Workers rebuilt after a panic, over the pool's lifetime.
+    respawns: AtomicU64,
+    /// Supervision notes (panic payloads + what was done about them),
+    /// drained by the serving layer into the event journal.
+    incidents: Mutex<Vec<String>>,
 }
 
 impl WorkerPool {
     pub(crate) fn new(workers: Vec<Box<dyn InferWorker>>) -> WorkerPool {
+        WorkerPool::with_factory(workers, None)
+    }
+
+    pub(crate) fn with_factory(
+        workers: Vec<Box<dyn InferWorker>>,
+        factory: Option<WorkerFactory>,
+    ) -> WorkerPool {
         assert!(!workers.is_empty(), "worker pool needs at least one worker");
         WorkerPool {
             slots: workers.into_iter().map(Mutex::new).collect(),
             rotor: AtomicUsize::new(0),
+            factory,
+            respawns: AtomicU64::new(0),
+            incidents: Mutex::new(Vec::new()),
         }
     }
 
     pub(crate) fn size(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Workers respawned after panics since the pool was built.
+    pub(crate) fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Take the pending supervision notes (journaling is the caller's job).
+    pub(crate) fn drain_incidents(&self) -> Vec<String> {
+        std::mem::take(&mut *self.incidents.lock().unwrap())
+    }
+
+    fn note(&self, msg: String) {
+        self.incidents.lock().unwrap().push(msg);
+    }
+
+    /// One item under supervision: run it, and on a panic respawn the
+    /// slot's worker and retry on the healthy replacement.  Worker `Err`s
+    /// pass straight through — only unwinds trigger recovery.
+    fn supervised_infer(
+        &self,
+        w: &mut Box<dyn InferWorker>,
+        image: &[f32],
+        record_spans: bool,
+        slot: usize,
+        batch_t0: Instant,
+    ) -> Result<InferItem> {
+        let mut attempt = 0u32;
+        loop {
+            match catch_unwind(AssertUnwindSafe(|| {
+                timed_infer(w.as_mut(), image, record_spans, slot, batch_t0)
+            })) {
+                Ok(result) => return result,
+                Err(payload) => {
+                    let msg = panic_message(payload.as_ref());
+                    match &self.factory {
+                        Some(make) if attempt < MAX_RESPAWNS_PER_ITEM => {
+                            *w = make();
+                            self.respawns.fetch_add(1, Ordering::Relaxed);
+                            self.note(format!(
+                                "worker panicked on slot {slot}: {msg}; respawned worker and \
+                                 retrying item (attempt {})",
+                                attempt + 1
+                            ));
+                            attempt += 1;
+                        }
+                        Some(_) => {
+                            self.note(format!(
+                                "worker on slot {slot} panicked {MAX_RESPAWNS_PER_ITEM} times on \
+                                 one item, giving up: {msg}"
+                            ));
+                            return Err(anyhow!(
+                                "engine worker panicked {MAX_RESPAWNS_PER_ITEM} times on one \
+                                 item (last: {msg})"
+                            ));
+                        }
+                        None => {
+                            self.note(format!(
+                                "worker panicked on slot {slot}: {msg}; no respawn factory, \
+                                 failing the item"
+                            ));
+                            return Err(anyhow!("engine worker panicked: {msg}"));
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Run every image, returning items in request order.  Single-image
@@ -69,7 +172,7 @@ impl WorkerPool {
             let mut w = self.slots[slot_idx].lock().unwrap_or_else(PoisonError::into_inner);
             return images
                 .iter()
-                .map(|img| timed_infer(w.as_mut(), img, record_spans, slot_idx, batch_t0))
+                .map(|img| self.supervised_infer(&mut w, img, record_spans, slot_idx, batch_t0))
                 .collect();
         }
         let run_lane = |lane: usize| -> Result<Vec<(usize, InferItem)>> {
@@ -80,7 +183,10 @@ impl WorkerPool {
             let mut out = Vec::new();
             let mut i = lane;
             while i < images.len() {
-                out.push((i, timed_infer(w.as_mut(), &images[i], record_spans, lane, batch_t0)?));
+                out.push((
+                    i,
+                    self.supervised_infer(&mut w, &images[i], record_spans, lane, batch_t0)?,
+                ));
                 i += lanes;
             }
             Ok(out)
@@ -92,9 +198,16 @@ impl WorkerPool {
             // same deterministic item→slot striding either way
             let handles: Vec<_> = (1..lanes).map(|lane| s.spawn(move || run_lane(lane))).collect();
             let mut all = vec![run_lane(0)];
-            all.extend(
-                handles.into_iter().map(|h| h.join().expect("engine worker thread panicked")),
-            );
+            // supervision catches panics inside the item loop, so a lane
+            // thread dying means something broke *between* items — keep the
+            // payload instead of flattening it to "worker died"
+            all.extend(handles.into_iter().map(|h| {
+                h.join().unwrap_or_else(|payload| {
+                    let msg = panic_message(payload.as_ref());
+                    self.note(format!("worker lane thread panicked between items: {msg}"));
+                    Err(anyhow!("engine worker thread panicked between items: {msg}"))
+                })
+            }));
             all
         });
         let mut items: Vec<Option<InferItem>> = images.iter().map(|_| None).collect();
@@ -104,6 +217,18 @@ impl WorkerPool {
             }
         }
         Ok(items.into_iter().map(|o| o.expect("worker lane dropped an item")).collect())
+    }
+}
+
+/// Extract the human text of a panic payload (`panic!("...")` carries
+/// `&str` or `String`; anything else is named, not dropped).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -139,12 +264,23 @@ pub(crate) struct SimWorker {
     /// by the `Arc`s below, and struct fields drop in declaration order,
     /// so `sim` is dropped first.
     sim: Simulator<'static>,
+    /// Fault seam: injected stalls/errors/panics at the top of every
+    /// inference (SEU flips are wired into the simulator itself).
+    fault: Option<Arc<FaultInjector>>,
     _program: Arc<Program>,
     _graph: Arc<Graph>,
 }
 
 impl SimWorker {
     pub(crate) fn new(program: Arc<Program>, graph: Arc<Graph>) -> SimWorker {
+        SimWorker::with_fault(program, graph, None)
+    }
+
+    pub(crate) fn with_fault(
+        program: Arc<Program>,
+        graph: Arc<Graph>,
+        fault: Option<Arc<FaultInjector>>,
+    ) -> SimWorker {
         // SAFETY: `Simulator<'a>` borrows the program and graph. Both live
         // in heap allocations kept alive by `Arc`s owned by this struct for
         // its entire lifetime: the `Arc`s are private, never reassigned,
@@ -156,18 +292,40 @@ impl SimWorker {
         // never moves and is never mutably aliased.
         let p: &'static Program = unsafe { &*Arc::as_ptr(&program) };
         let g: &'static Graph = unsafe { &*Arc::as_ptr(&graph) };
-        SimWorker { sim: Simulator::new(p, g), _program: program, _graph: graph }
+        let mut sim = Simulator::new(p, g);
+        if let Some(inj) = &fault {
+            sim.set_seu(Arc::new(ArmedSeu::new(Arc::clone(inj))));
+        }
+        SimWorker { sim, fault, _program: program, _graph: graph }
     }
 
     /// A pool of `n` workers over one shared compiled program.
     pub(crate) fn pool(program: Program, graph: Graph, n: usize) -> Vec<Box<dyn InferWorker>> {
+        SimWorker::pool_with_factory(program, graph, n, None).0
+    }
+
+    /// A pool of `n` workers plus a respawn factory over the same shared
+    /// program/graph (and fault injector, if any) — what pool supervision
+    /// uses to rebuild a panicked slot without recompiling anything.
+    pub(crate) fn pool_with_factory(
+        program: Program,
+        graph: Graph,
+        n: usize,
+        fault: Option<Arc<FaultInjector>>,
+    ) -> (Vec<Box<dyn InferWorker>>, WorkerFactory) {
         let program = Arc::new(program);
         let graph = Arc::new(graph);
-        (0..n.max(1))
+        let workers = (0..n.max(1))
             .map(|_| {
-                Box::new(SimWorker::new(program.clone(), graph.clone())) as Box<dyn InferWorker>
+                Box::new(SimWorker::with_fault(program.clone(), graph.clone(), fault.clone()))
+                    as Box<dyn InferWorker>
             })
-            .collect()
+            .collect();
+        let factory: WorkerFactory = Box::new(move || {
+            Box::new(SimWorker::with_fault(program.clone(), graph.clone(), fault.clone()))
+                as Box<dyn InferWorker>
+        });
+        (workers, factory)
     }
 }
 
@@ -194,6 +352,10 @@ impl crate::sim::SpanSink for LayerSpanSink {
 
 impl InferWorker for SimWorker {
     fn infer_one(&mut self, image: &[f32], record_spans: bool) -> Result<InferItem> {
+        if let Some(inj) = &self.fault {
+            // may stall, return Err, or panic into pool supervision
+            inj.worker_disturbance()?;
+        }
         let (r, layer_spans) = if record_spans {
             // the only tracing allocation on the whole sim path: one Vec
             // per *traced* item, bounded by the sampling rate
@@ -367,5 +529,74 @@ mod tests {
         let pool = WorkerPool::new(SimWorker::pool(p, g, 2));
         let images = vec![vec![0.2; 16 * 16 * 3], vec![0.0; 3]];
         assert!(pool.infer_batch(&images, false).is_err());
+    }
+
+    /// Panics on its first `crashes` calls, then answers with a constant
+    /// feature vector — a deterministic stand-in for an injected crash.
+    struct FlakyWorker {
+        crashes: u32,
+    }
+
+    impl InferWorker for FlakyWorker {
+        fn infer_one(&mut self, _image: &[f32], _record_spans: bool) -> Result<InferItem> {
+            if self.crashes > 0 {
+                let left = self.crashes;
+                self.crashes -= 1;
+                panic!("flaky worker crash ({left} left)");
+            }
+            Ok(InferItem::new(
+                vec![1.0, 2.0],
+                None,
+                InferMetrics { modeled_latency_ms: None, cycles: None, host_us: 0.0 },
+            ))
+        }
+    }
+
+    #[test]
+    fn supervision_respawns_and_retries_panicked_worker() {
+        let workers: Vec<Box<dyn InferWorker>> =
+            vec![Box::new(FlakyWorker { crashes: 1 })];
+        let factory: WorkerFactory =
+            Box::new(|| Box::new(FlakyWorker { crashes: 0 }));
+        let pool = WorkerPool::with_factory(workers, Some(factory));
+        let items = pool.infer_batch(&[vec![0.0; 4]], false).unwrap();
+        assert_eq!(items[0].features, vec![1.0, 2.0]);
+        assert_eq!(pool.respawns(), 1);
+        let notes = pool.drain_incidents();
+        assert_eq!(notes.len(), 1);
+        assert!(notes[0].contains("flaky worker crash"), "{}", notes[0]);
+        assert!(pool.drain_incidents().is_empty(), "drain must consume");
+    }
+
+    #[test]
+    fn supervision_without_factory_reports_panic_payload() {
+        let workers: Vec<Box<dyn InferWorker>> =
+            vec![Box::new(FlakyWorker { crashes: u32::MAX })];
+        let pool = WorkerPool::with_factory(workers, None);
+        let err = pool.infer_batch(&[vec![0.0; 4]], false).unwrap_err().to_string();
+        assert!(err.contains("flaky worker crash"), "{err}");
+        assert_eq!(pool.respawns(), 0);
+    }
+
+    #[test]
+    fn supervision_gives_up_after_bounded_retries() {
+        let workers: Vec<Box<dyn InferWorker>> =
+            vec![Box::new(FlakyWorker { crashes: u32::MAX })];
+        let factory: WorkerFactory =
+            Box::new(|| Box::new(FlakyWorker { crashes: u32::MAX }));
+        let pool = WorkerPool::with_factory(workers, Some(factory));
+        let err = pool.infer_batch(&[vec![0.0; 4]], false).unwrap_err().to_string();
+        assert!(err.contains("flaky worker crash"), "{err}");
+        assert_eq!(pool.respawns(), u64::from(MAX_RESPAWNS_PER_ITEM));
+    }
+
+    #[test]
+    fn panic_message_extracts_str_and_string() {
+        let payload: Box<dyn std::any::Any + Send> = Box::new("static text");
+        assert_eq!(panic_message(payload.as_ref()), "static text");
+        let payload: Box<dyn std::any::Any + Send> = Box::new(String::from("owned text"));
+        assert_eq!(panic_message(payload.as_ref()), "owned text");
+        let payload: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(payload.as_ref()), "non-string panic payload");
     }
 }

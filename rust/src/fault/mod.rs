@@ -1,0 +1,644 @@
+//! `pefsl::fault` — deterministic, seeded fault injection.
+//!
+//! On the PYNQ-class targets the paper deploys to, soft errors (SEU-style
+//! bit flips in weight/activation memory) and partial failures are the
+//! expected operating condition — so the failure model has to be part of
+//! the stack, and it has to be *testable on demand*.  This module is the
+//! harness: a [`FaultPlan`] names per-site rates and triggers, and a
+//! [`FaultInjector`] turns the plan into reproducible fault decisions at
+//! explicit seams:
+//!
+//! * `seu_weight` / `seu_act` — single-bit flips in weight-tile and
+//!   activation codes inside the simulator (behind the [`SeuHook`]
+//!   trait, an `Option` branch like `SpanSink` when off);
+//! * `worker_panic` / `worker_stall` / `engine_error` — injected into
+//!   [`crate::engine`] sim workers to exercise pool supervision;
+//! * `deploy_corrupt` — flips a bit in a bundle's golden codes during a
+//!   windowed range of [`crate::engine::Registry`] deploys, so corrupted
+//!   artifacts and bad-after-verify rollouts can be staged;
+//! * `conn_reset` — dropped connections in the serve test client.
+//!
+//! **Determinism is the whole point.**  Every site keeps an atomic call
+//! counter; the decision for call `k` at a site is a pure function
+//! `splitmix64(seed ^ site_salt ^ mix(k)) < rate`, independent of thread
+//! interleaving.  Same seed + same request stream ⇒ the same set of
+//! `(site, k)` faults fires, across any worker-pool size — which is what
+//! makes chaos runs replayable and the recovery machinery property-testable.
+//!
+//! Serving enables a plan via `pefsl serve --fault-plan FILE` or the
+//! `PEFSL_FAULT_PLAN` environment variable; with no plan every hook is a
+//! no-op branch on an absent `Option`.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Environment variable naming a fault-plan JSON file (same schema as
+/// `pefsl serve --fault-plan`).
+pub const ENV_PLAN: &str = "PEFSL_FAULT_PLAN";
+
+/// Injected fault events kept for replay comparison (excess is counted,
+/// not stored).
+const LOG_CAP: usize = 4096;
+
+/// An injection seam.  Each site draws from its own call counter, so the
+/// decision stream of one site is independent of traffic on the others.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultSite {
+    /// Bit flip in a weight tile after `LoadWeights`.
+    WeightSeu,
+    /// Bit flip in a layer's output activation codes.
+    ActSeu,
+    /// Panic inside a sim worker's inference.
+    WorkerPanic,
+    /// Stall (sleep) inside a sim worker's inference.
+    WorkerStall,
+    /// `Err` returned from a sim worker's inference.
+    EngineError,
+    /// Golden-code corruption during a registry deploy.
+    DeployCorrupt,
+    /// Connection reset in the serve test client.
+    ConnReset,
+}
+
+impl FaultSite {
+    /// Every site, in log/metric order.
+    pub const ALL: [FaultSite; 7] = [
+        FaultSite::WeightSeu,
+        FaultSite::ActSeu,
+        FaultSite::WorkerPanic,
+        FaultSite::WorkerStall,
+        FaultSite::EngineError,
+        FaultSite::DeployCorrupt,
+        FaultSite::ConnReset,
+    ];
+
+    /// Stable site name (used in plan JSON, journal details and metrics).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::WeightSeu => "seu_weight",
+            FaultSite::ActSeu => "seu_act",
+            FaultSite::WorkerPanic => "worker_panic",
+            FaultSite::WorkerStall => "worker_stall",
+            FaultSite::EngineError => "engine_error",
+            FaultSite::DeployCorrupt => "deploy_corrupt",
+            FaultSite::ConnReset => "conn_reset",
+        }
+    }
+
+    fn idx(self) -> usize {
+        FaultSite::ALL.iter().position(|&s| s == self).unwrap()
+    }
+
+    /// Per-site salt decorrelates the decision streams of different sites
+    /// under one seed.
+    fn salt(self) -> u64 {
+        // FNV-1a over the site name: stable across builds, no state.
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for b in self.name().bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(0x100_0000_01B3);
+        }
+        h
+    }
+}
+
+/// A seeded chaos plan: per-site fault rates plus triggers.  All rates are
+/// probabilities in `[0, 1]` evaluated per call at the site; everything
+/// defaults to zero (no faults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Master seed — two injectors with the same plan make identical
+    /// decisions.
+    pub seed: u64,
+    /// Bit-flip rate per weight-tile load.
+    pub seu_weight_rate: f64,
+    /// Bit-flip rate per layer-output write.
+    pub seu_act_rate: f64,
+    /// SEU sites stay disarmed until this many engine builds have been
+    /// registered via [`FaultInjector::note_deploy_built`] — lets a chaos
+    /// run deploy a clean baseline first and corrupt only later versions.
+    pub seu_arm_after_deploys: u64,
+    /// Panic rate per worker inference.
+    pub worker_panic_rate: f64,
+    /// Stall rate per worker inference.
+    pub worker_stall_rate: f64,
+    /// Stall duration when a stall fires.
+    pub worker_stall_ms: u64,
+    /// `Err` rate per worker inference (propagates — never retried).
+    pub engine_error_rate: f64,
+    /// First deploy index (0-based) the corruption window covers.
+    pub deploy_corrupt_after: u64,
+    /// Number of consecutive deploys, starting at
+    /// `deploy_corrupt_after`, whose golden codes get a bit flipped.
+    pub deploy_corrupt_count: u64,
+    /// Connection-reset rate per client request attempt.
+    pub conn_reset_rate: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0xFA17,
+            seu_weight_rate: 0.0,
+            seu_act_rate: 0.0,
+            seu_arm_after_deploys: 0,
+            worker_panic_rate: 0.0,
+            worker_stall_rate: 0.0,
+            worker_stall_ms: 1,
+            engine_error_rate: 0.0,
+            deploy_corrupt_after: 0,
+            deploy_corrupt_count: 0,
+            conn_reset_rate: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Rate configured for a site (window sites report their count-based
+    /// trigger separately).
+    pub fn rate(&self, site: FaultSite) -> f64 {
+        match site {
+            FaultSite::WeightSeu => self.seu_weight_rate,
+            FaultSite::ActSeu => self.seu_act_rate,
+            FaultSite::WorkerPanic => self.worker_panic_rate,
+            FaultSite::WorkerStall => self.worker_stall_rate,
+            FaultSite::EngineError => self.engine_error_rate,
+            FaultSite::DeployCorrupt => 0.0,
+            FaultSite::ConnReset => self.conn_reset_rate,
+        }
+    }
+
+    /// Reject rates outside `[0, 1]`.
+    pub fn validate(&self) -> Result<()> {
+        for site in FaultSite::ALL {
+            let r = self.rate(site);
+            if !(0.0..=1.0).contains(&r) {
+                bail!("fault plan rate for site '{}' is {r}, need [0, 1]", site.name());
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a plan from its JSON object form; unknown keys are rejected
+    /// so a typo'd rate can't silently disable a chaos run.
+    pub fn from_json(v: &Value) -> Result<FaultPlan> {
+        let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("fault plan must be a JSON object"))?;
+        let mut plan = FaultPlan::default();
+        for (key, val) in obj {
+            let num =
+                || val.as_f64().ok_or_else(|| anyhow::anyhow!("fault plan key '{key}' not a number"));
+            match key.as_str() {
+                "seed" => plan.seed = num()? as u64,
+                "seu_weight_rate" => plan.seu_weight_rate = num()?,
+                "seu_act_rate" => plan.seu_act_rate = num()?,
+                "seu_arm_after_deploys" => plan.seu_arm_after_deploys = num()? as u64,
+                "worker_panic_rate" => plan.worker_panic_rate = num()?,
+                "worker_stall_rate" => plan.worker_stall_rate = num()?,
+                "worker_stall_ms" => plan.worker_stall_ms = num()? as u64,
+                "engine_error_rate" => plan.engine_error_rate = num()?,
+                "deploy_corrupt_after" => plan.deploy_corrupt_after = num()? as u64,
+                "deploy_corrupt_count" => plan.deploy_corrupt_count = num()? as u64,
+                "conn_reset_rate" => plan.conn_reset_rate = num()?,
+                other => bail!("unknown fault plan key '{other}'"),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// The plan as a JSON object (round-trips through [`FaultPlan::from_json`]).
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("seed", self.seed)
+            .set("seu_weight_rate", self.seu_weight_rate)
+            .set("seu_act_rate", self.seu_act_rate)
+            .set("seu_arm_after_deploys", self.seu_arm_after_deploys)
+            .set("worker_panic_rate", self.worker_panic_rate)
+            .set("worker_stall_rate", self.worker_stall_rate)
+            .set("worker_stall_ms", self.worker_stall_ms)
+            .set("engine_error_rate", self.engine_error_rate)
+            .set("deploy_corrupt_after", self.deploy_corrupt_after)
+            .set("deploy_corrupt_count", self.deploy_corrupt_count)
+            .set("conn_reset_rate", self.conn_reset_rate);
+        v
+    }
+
+    /// Load a plan from a JSON file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<FaultPlan> {
+        let path = path.as_ref();
+        let doc = json::from_file(path)
+            .with_context(|| format!("read fault plan {}", path.display()))?;
+        FaultPlan::from_json(&doc)
+            .with_context(|| format!("parse fault plan {}", path.display()))
+    }
+
+    /// Load the plan named by `$PEFSL_FAULT_PLAN`, if set.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(ENV_PLAN) {
+            Ok(path) if !path.is_empty() => Ok(Some(FaultPlan::from_file(&path)?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+/// One injected fault: site plus the site-local call index it fired at.
+/// Two runs of the same plan over the same request stream produce the same
+/// event set (compare with [`FaultInjector::events`], which sorts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FaultEvent {
+    pub site: FaultSite,
+    pub k: u64,
+}
+
+/// SplitMix64 finalizer — the stateless decision hash.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Live injector for one [`FaultPlan`].  Shared via `Arc` between the
+/// registry, engine workers, the simulator hook and test clients; every
+/// decision method is `&self` and thread-safe.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    /// Per-site call counters — `fetch_add` hands each call a unique,
+    /// contiguous index `k`, which is all the decision depends on.
+    counters: [AtomicU64; FaultSite::ALL.len()],
+    /// Per-site injected-fault counts (log-cap independent).
+    injected: [AtomicU64; FaultSite::ALL.len()],
+    /// Successful engine builds seen (arms SEU sites; see
+    /// [`FaultPlan::seu_arm_after_deploys`]).
+    deploys_built: AtomicU64,
+    log: Mutex<Vec<FaultEvent>>,
+    log_dropped: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Result<FaultInjector> {
+        plan.validate()?;
+        Ok(FaultInjector {
+            plan,
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: std::array::from_fn(|_| AtomicU64::new(0)),
+            deploys_built: AtomicU64::new(0),
+            log: Mutex::new(Vec::new()),
+            log_dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Build an injector from `$PEFSL_FAULT_PLAN`, if the variable is set.
+    pub fn from_env() -> Result<Option<Arc<FaultInjector>>> {
+        match FaultPlan::from_env()? {
+            Some(plan) => Ok(Some(Arc::new(FaultInjector::new(plan)?))),
+            None => Ok(None),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The pure decision for call `k` at `site` — no state, no ordering.
+    fn decide(&self, site: FaultSite, k: u64) -> bool {
+        let rate = self.plan.rate(site);
+        if rate <= 0.0 {
+            return false;
+        }
+        if rate >= 1.0 {
+            return true;
+        }
+        let h = splitmix64(self.plan.seed ^ site.salt() ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        ((h >> 11) as f64) < rate * (1u64 << 53) as f64
+    }
+
+    fn record(&self, site: FaultSite, k: u64) {
+        self.injected[site.idx()].fetch_add(1, Ordering::Relaxed);
+        let mut log = self.log.lock().unwrap();
+        if log.len() < LOG_CAP {
+            log.push(FaultEvent { site, k });
+        } else {
+            self.log_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Consume one call at `site`; `Some(k)` when the fault fires.  The
+    /// decision hash for a returned `k` also seeds any derived choices
+    /// (which code, which bit), keeping them reproducible too.
+    pub fn roll(&self, site: FaultSite) -> Option<u64> {
+        let k = self.counters[site.idx()].fetch_add(1, Ordering::Relaxed);
+        if self.decide(site, k) {
+            self.record(site, k);
+            Some(k)
+        } else {
+            None
+        }
+    }
+
+    /// Count a successful engine build (registry deploy) — the SEU arming
+    /// trigger.
+    pub fn note_deploy_built(&self) {
+        self.deploys_built.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Whether SEU sites are armed *right now* (workers sample this at
+    /// build time, so an engine keeps the arming it was built under).
+    pub fn seu_armed_now(&self) -> bool {
+        self.deploys_built.load(Ordering::Relaxed) >= self.plan.seu_arm_after_deploys
+    }
+
+    /// Flip one deterministic bit in `codes` when the site fires.
+    fn seu(&self, site: FaultSite, codes: &mut [i16]) -> Option<u64> {
+        if codes.is_empty() {
+            return None;
+        }
+        let k = self.roll(site)?;
+        let h = splitmix64(self.plan.seed ^ site.salt() ^ k ^ 0xD1F7_BEEF);
+        let idx = (h % codes.len() as u64) as usize;
+        let bit = ((h >> 32) % 16) as u32;
+        codes[idx] ^= 1i16 << bit;
+        Some(k)
+    }
+
+    /// Windowed deploy-corruption trigger: flips bit 0 of the first code
+    /// for deploy indices in `[after, after + count)`.
+    pub fn corrupt_deploy(&self, codes: &mut [i16]) -> Option<u64> {
+        let site = FaultSite::DeployCorrupt;
+        let k = self.counters[site.idx()].fetch_add(1, Ordering::Relaxed);
+        let lo = self.plan.deploy_corrupt_after;
+        if k < lo || k >= lo.saturating_add(self.plan.deploy_corrupt_count) || codes.is_empty() {
+            return None;
+        }
+        self.record(site, k);
+        codes[0] ^= 1;
+        Some(k)
+    }
+
+    /// Worker-side disturbances, in a fixed order per call: stall, then
+    /// error, then panic.  The panic unwinds into the pool's supervision
+    /// (`catch_unwind`); the error propagates like any engine failure.
+    pub fn worker_disturbance(&self) -> Result<()> {
+        if self.roll(FaultSite::WorkerStall).is_some() {
+            std::thread::sleep(std::time::Duration::from_millis(self.plan.worker_stall_ms));
+        }
+        if let Some(k) = self.roll(FaultSite::EngineError) {
+            bail!("injected engine error (site engine_error, k={k})");
+        }
+        if let Some(k) = self.roll(FaultSite::WorkerPanic) {
+            panic!("injected worker panic (site worker_panic, k={k})");
+        }
+        Ok(())
+    }
+
+    /// Client-side connection-reset trigger.
+    pub fn maybe_reset_conn(&self) -> Option<u64> {
+        self.roll(FaultSite::ConnReset)
+    }
+
+    /// Every injected fault so far, sorted by `(site, k)` — the canonical
+    /// form for reproducibility comparisons.  Capped at 4096 entries;
+    /// [`FaultInjector::log_dropped`] counts the overflow.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        let mut v = self.log.lock().unwrap().clone();
+        v.sort_unstable();
+        v
+    }
+
+    /// Injected faults that no longer fit the bounded event log.
+    pub fn log_dropped(&self) -> u64 {
+        self.log_dropped.load(Ordering::Relaxed)
+    }
+
+    /// `(site name, injected count)` per site — metric/journal fodder.
+    pub fn injected_counts(&self) -> Vec<(&'static str, u64)> {
+        FaultSite::ALL
+            .iter()
+            .map(|&s| (s.name(), self.injected[s.idx()].load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Total injected faults across all sites.
+    pub fn injected_total(&self) -> u64 {
+        self.injected.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// The simulator's SEU seam — mirrors `SpanSink`: a `Simulator` holds an
+/// `Option<Arc<dyn SeuHook>>`, so the fault-free path is one branch on an
+/// absent `Option` and the hot loops never see the injector type.
+pub trait SeuHook: Send + Sync {
+    /// Chance to corrupt a freshly loaded weight tile.
+    fn corrupt_weights(&self, layer: usize, tile: &mut [i16]);
+    /// Chance to corrupt a layer's output activation codes.
+    fn corrupt_acts(&self, layer: usize, acts: &mut [i16]);
+}
+
+/// [`SeuHook`] adapter that samples the SEU arming state once at
+/// construction (i.e. at engine build), so a rolled-back engine keeps the
+/// clean/armed state it was deployed under.
+#[derive(Debug)]
+pub struct ArmedSeu {
+    inj: Arc<FaultInjector>,
+    armed: bool,
+}
+
+impl ArmedSeu {
+    pub fn new(inj: Arc<FaultInjector>) -> ArmedSeu {
+        let armed = inj.seu_armed_now();
+        ArmedSeu { inj, armed }
+    }
+}
+
+impl SeuHook for ArmedSeu {
+    fn corrupt_weights(&self, _layer: usize, tile: &mut [i16]) {
+        if self.armed {
+            self.inj.seu(FaultSite::WeightSeu, tile);
+        }
+    }
+
+    fn corrupt_acts(&self, _layer: usize, acts: &mut [i16]) {
+        if self.armed {
+            self.inj.seu(FaultSite::ActSeu, acts);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            worker_panic_rate: 0.3,
+            seu_act_rate: 0.5,
+            ..FaultPlan::default()
+        }
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let a = FaultInjector::new(plan(9)).unwrap();
+        let b = FaultInjector::new(plan(9)).unwrap();
+        for _ in 0..500 {
+            a.roll(FaultSite::WorkerPanic);
+            b.roll(FaultSite::WorkerPanic);
+        }
+        assert!(!a.events().is_empty());
+        assert_eq!(a.events(), b.events());
+        assert_eq!(a.injected_total(), b.injected_total());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = FaultInjector::new(plan(1)).unwrap();
+        let b = FaultInjector::new(plan(2)).unwrap();
+        for _ in 0..500 {
+            a.roll(FaultSite::WorkerPanic);
+            b.roll(FaultSite::WorkerPanic);
+        }
+        assert_ne!(a.events(), b.events());
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let never = FaultInjector::new(FaultPlan::default()).unwrap();
+        let always = FaultInjector::new(FaultPlan {
+            worker_panic_rate: 1.0,
+            ..FaultPlan::default()
+        })
+        .unwrap();
+        for _ in 0..100 {
+            assert!(never.roll(FaultSite::WorkerPanic).is_none());
+            assert!(always.roll(FaultSite::WorkerPanic).is_some());
+        }
+        assert_eq!(never.injected_total(), 0);
+        assert_eq!(always.injected_total(), 100);
+    }
+
+    #[test]
+    fn rate_roughly_respected() {
+        let inj = FaultInjector::new(plan(7)).unwrap();
+        for _ in 0..4000 {
+            inj.roll(FaultSite::ActSeu);
+        }
+        let hits = inj.injected_total();
+        assert!((1600..2400).contains(&hits), "rate 0.5 gave {hits}/4000");
+    }
+
+    #[test]
+    fn plan_json_roundtrip_and_validation() {
+        let p = FaultPlan {
+            seed: 77,
+            seu_weight_rate: 0.125,
+            seu_arm_after_deploys: 2,
+            worker_stall_ms: 9,
+            deploy_corrupt_after: 1,
+            deploy_corrupt_count: 3,
+            ..FaultPlan::default()
+        };
+        let back = FaultPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+
+        let mut bad = p.to_json();
+        bad.set("worker_panic_rate", 1.5);
+        assert!(FaultPlan::from_json(&bad).is_err());
+        let mut unknown = Value::obj();
+        unknown.set("worker_painc_rate", 0.5);
+        let err = FaultPlan::from_json(&unknown).unwrap_err().to_string();
+        assert!(err.contains("worker_painc_rate"), "{err}");
+    }
+
+    #[test]
+    fn seu_flips_exactly_one_bit() {
+        let inj = FaultInjector::new(FaultPlan {
+            seu_act_rate: 1.0,
+            ..FaultPlan::default()
+        })
+        .unwrap();
+        let clean = vec![0i16; 64];
+        let mut codes = clean.clone();
+        inj.seu(FaultSite::ActSeu, &mut codes);
+        let diff: u32 =
+            codes.iter().zip(&clean).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert_eq!(diff, 1);
+    }
+
+    #[test]
+    fn deploy_corruption_window() {
+        let inj = FaultInjector::new(FaultPlan {
+            deploy_corrupt_after: 1,
+            deploy_corrupt_count: 2,
+            ..FaultPlan::default()
+        })
+        .unwrap();
+        let hits: Vec<bool> = (0..5)
+            .map(|_| {
+                let mut codes = vec![0i16; 4];
+                inj.corrupt_deploy(&mut codes).is_some()
+            })
+            .collect();
+        assert_eq!(hits, vec![false, true, true, false, false]);
+    }
+
+    #[test]
+    fn arming_gates_seu() {
+        let inj = Arc::new(
+            FaultInjector::new(FaultPlan {
+                seu_act_rate: 1.0,
+                seu_arm_after_deploys: 1,
+                ..FaultPlan::default()
+            })
+            .unwrap(),
+        );
+        let disarmed = ArmedSeu::new(Arc::clone(&inj));
+        inj.note_deploy_built();
+        let armed = ArmedSeu::new(Arc::clone(&inj));
+
+        let mut codes = vec![0i16; 8];
+        disarmed.corrupt_acts(0, &mut codes);
+        assert!(codes.iter().all(|&c| c == 0), "disarmed hook must not flip");
+        armed.corrupt_acts(0, &mut codes);
+        assert!(codes.iter().any(|&c| c != 0), "armed hook must flip");
+    }
+
+    #[test]
+    fn injected_counts_name_sites() {
+        let inj = FaultInjector::new(FaultPlan {
+            worker_panic_rate: 1.0,
+            ..FaultPlan::default()
+        })
+        .unwrap();
+        inj.roll(FaultSite::WorkerPanic);
+        let counts = inj.injected_counts();
+        assert!(counts.contains(&("worker_panic", 1)));
+        assert!(counts.contains(&("seu_act", 0)));
+    }
+
+    #[test]
+    fn worker_disturbance_error_and_panic() {
+        let err_inj = FaultInjector::new(FaultPlan {
+            engine_error_rate: 1.0,
+            ..FaultPlan::default()
+        })
+        .unwrap();
+        let e = err_inj.worker_disturbance().unwrap_err().to_string();
+        assert!(e.contains("engine_error"), "{e}");
+
+        let panic_inj = FaultInjector::new(FaultPlan {
+            worker_panic_rate: 1.0,
+            ..FaultPlan::default()
+        })
+        .unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = panic_inj.worker_disturbance();
+        }));
+        assert!(r.is_err());
+    }
+}

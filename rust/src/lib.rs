@@ -46,6 +46,14 @@
 //!     session churn / admission saturation at `/debug/events`; and a
 //!     Chrome `trace_event` exporter ([`trace::chrome::export`]) behind
 //!     `--trace-out`;
+//!   - **`fault` — deterministic fault injection + self-healing**: a
+//!     seeded [`fault::FaultPlan`] drives reproducible SEU bit flips,
+//!     worker panics/stalls, engine errors, deploy corruption and client
+//!     connection resets ([`fault::FaultInjector`], zero-cost `Option`
+//!     branches when absent); the engine pool supervises and respawns
+//!     panicked workers, and [`engine::Registry`] runs golden self-checks
+//!     behind a per-model circuit breaker with automatic rollback to the
+//!     last-known-good version (`pefsl serve --fault-plan`);
 //!   - the demonstrator on top of the engine: `video`, `ncm`, `coordinator`
 //!     (frame loop + pipelined variant), `fewshot` (episodic evaluation),
 //!     `dse` and `cli`.
@@ -55,6 +63,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod dse;
 pub mod engine;
+pub mod fault;
 pub mod fewshot;
 pub mod fixed;
 pub mod graph;

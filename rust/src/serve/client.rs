@@ -6,11 +6,14 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::fault::FaultInjector;
 use crate::json::{self, Value};
+use crate::util::Prng;
 
 use super::tensor;
 
@@ -134,6 +137,191 @@ impl HttpClient {
     }
 }
 
+/// Back-off schedule for [`RetryClient`].
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Attempts per request, first try included.
+    pub max_attempts: u32,
+    /// Total time budget across attempts and back-off sleeps; once spent,
+    /// the last outcome is returned as-is.
+    pub deadline: Duration,
+    /// First back-off step; doubles per retry, jittered to 50–150 %.
+    pub base_backoff: Duration,
+    /// Ceiling for any single back-off sleep, server-hinted or not.
+    pub max_backoff: Duration,
+    /// Jitter seed — same seed, same schedule (deterministic tests).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            deadline: Duration::from_secs(10),
+            base_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+            seed: 0x52E7,
+        }
+    }
+}
+
+/// A retrying client for **idempotent** traffic (infer, any GET):
+/// reconnects on transport errors, honors `Retry-After` on `429`/`503`
+/// sheds, and otherwise backs off exponentially with jitter, all under
+/// one deadline.  Non-idempotent requests (enroll, session create) should
+/// stay on [`HttpClient`] — a blind retry could double-apply them.
+///
+/// With a [`FaultInjector`] attached ([`RetryClient::with_fault`]), the
+/// plan's `conn_reset_rate` drops the connection before an attempt — the
+/// chaos seam for exercising exactly this retry path.
+pub struct RetryClient {
+    addr: String,
+    policy: RetryPolicy,
+    prng: Prng,
+    conn: Option<HttpClient>,
+    fault: Option<Arc<FaultInjector>>,
+    retries: u64,
+}
+
+impl RetryClient {
+    pub fn new(addr: impl Into<String>, policy: RetryPolicy) -> RetryClient {
+        let prng = Prng::new(policy.seed);
+        RetryClient { addr: addr.into(), policy, prng, conn: None, fault: None, retries: 0 }
+    }
+
+    /// Arm injected connection resets (chaos runs).
+    pub fn with_fault(mut self, inj: Arc<FaultInjector>) -> RetryClient {
+        self.fault = Some(inj);
+        self
+    }
+
+    /// Retries performed so far (attempts beyond each request's first).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// GET with retries.
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
+        self.request(Method::Get, path, &[], None)
+    }
+
+    /// POST with retries — the caller asserts idempotency (infer is; a
+    /// repeated infer recomputes the same features).
+    pub fn post_idempotent(&mut self, path: &str, body: &Value) -> Result<ClientResponse> {
+        self.request(Method::Post, path, &[], Some(body))
+    }
+
+    /// POST with retries and extra headers (deadline budgets, trace ids).
+    pub fn request(
+        &mut self,
+        method: Method,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&Value>,
+    ) -> Result<ClientResponse> {
+        let t0 = Instant::now();
+        let mut backoff = self.policy.base_backoff;
+        let mut last_shed: Option<ClientResponse> = None;
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..self.policy.max_attempts.max(1) {
+            if attempt > 0 {
+                self.retries += 1;
+            }
+            match self.attempt(method, path, headers, body) {
+                Ok(resp) if resp.status == 429 || resp.status == 503 => {
+                    // server shed — wait what it asked for, capped by our
+                    // own ceiling (a 30 s hint must not pin a 10 s budget)
+                    let hinted = resp
+                        .header("retry-after")
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .map(Duration::from_secs);
+                    let wait = hinted.unwrap_or(backoff).min(self.policy.max_backoff);
+                    last_shed = Some(resp);
+                    let done = attempt + 1 == self.policy.max_attempts;
+                    if done || !self.sleep_within_deadline(t0, wait) {
+                        break;
+                    }
+                }
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    // transport failure: the stream position is gone;
+                    // reconnect on the next attempt
+                    self.conn = None;
+                    last_err = Some(e);
+                    let wait = self.jittered(backoff);
+                    let done = attempt + 1 == self.policy.max_attempts;
+                    if done || !self.sleep_within_deadline(t0, wait) {
+                        break;
+                    }
+                }
+            }
+            backoff = (backoff * 2).min(self.policy.max_backoff);
+        }
+        // out of attempts or budget: surface the last shed response (the
+        // caller sees the status + Retry-After) over the transport error
+        if let Some(resp) = last_shed {
+            return Ok(resp);
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("retry budget exhausted before any attempt")))
+    }
+
+    fn attempt(
+        &mut self,
+        method: Method,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&Value>,
+    ) -> Result<ClientResponse> {
+        if let Some(inj) = &self.fault {
+            if let Some(k) = inj.maybe_reset_conn() {
+                self.conn = None;
+                bail!("injected connection reset (site conn_reset, k={k})");
+            }
+        }
+        if self.conn.is_none() {
+            self.conn = Some(HttpClient::connect(&self.addr)?);
+        }
+        let conn = self.conn.as_mut().expect("connection just ensured");
+        let out = conn.request(method.as_str(), path, headers, body);
+        if out.is_err() {
+            self.conn = None;
+        }
+        out
+    }
+
+    /// 50–150 % of `base` — decorrelates a herd of retrying clients.
+    fn jittered(&mut self, base: Duration) -> Duration {
+        base.mul_f64(0.5 + f64::from(self.prng.f32()))
+    }
+
+    /// Sleep `wait` unless that would blow the deadline; false = budget
+    /// spent, stop retrying.
+    fn sleep_within_deadline(&self, t0: Instant, wait: Duration) -> bool {
+        let spent = t0.elapsed();
+        if spent + wait >= self.policy.deadline {
+            return false;
+        }
+        std::thread::sleep(wait);
+        true
+    }
+}
+
+/// The idempotent-safe subset of methods [`RetryClient`] will retry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+}
+
+impl Method {
+    fn as_str(self) -> &'static str {
+        match self {
+            Method::Get => "GET",
+            Method::Post => "POST",
+        }
+    }
+}
+
 /// One-shot helpers (fresh connection per call).
 pub fn get(addr: &str, path: &str) -> Result<ClientResponse> {
     HttpClient::connect(addr)?.get(path)
@@ -187,4 +375,49 @@ pub fn read_response(stream: &mut TcpStream) -> Result<ClientResponse> {
     }
     let body = buf[body_start..body_start + content_length].to_vec();
     Ok(ClientResponse { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_policy_defaults_and_jitter_band() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.max_attempts, 4);
+        assert_eq!(p.base_backoff, Duration::from_millis(50));
+        let mut c = RetryClient::new("127.0.0.1:1", p);
+        for _ in 0..100 {
+            let w = c.jittered(Duration::from_millis(100));
+            assert!(w >= Duration::from_millis(50) && w < Duration::from_millis(150), "{w:?}");
+        }
+    }
+
+    #[test]
+    fn same_seed_means_same_backoff_schedule() {
+        let mk = || RetryClient::new("127.0.0.1:1", RetryPolicy::default());
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..16 {
+            let base = Duration::from_millis(80);
+            assert_eq!(a.jittered(base), b.jittered(base));
+        }
+    }
+
+    #[test]
+    fn transport_errors_are_retried_then_surfaced() {
+        // nothing listens on port 1: every attempt fails fast at connect
+        let mut c = RetryClient::new(
+            "127.0.0.1:1",
+            RetryPolicy {
+                max_attempts: 3,
+                deadline: Duration::from_secs(5),
+                base_backoff: Duration::from_millis(1),
+                max_backoff: Duration::from_millis(2),
+                seed: 1,
+            },
+        );
+        let err = c.get("/healthz").unwrap_err().to_string();
+        assert!(err.contains("connect"), "{err}");
+        assert_eq!(c.retries(), 2, "3 attempts = 2 retries");
+    }
 }

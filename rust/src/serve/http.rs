@@ -62,7 +62,8 @@ pub struct HttpError {
     pub status: u16,
     pub message: String,
     pub fatal: bool,
-    /// `Retry-After` seconds to attach (429 backpressure responses).
+    /// `Retry-After` seconds to attach (`429` backpressure and `503`
+    /// breaker-open/unavailable responses).
     pub retry_after_s: Option<u64>,
 }
 
@@ -78,6 +79,17 @@ impl HttpError {
     pub fn too_busy(retry_after_s: u64, message: impl Into<String>) -> HttpError {
         HttpError {
             status: 429,
+            message: message.into(),
+            fatal: false,
+            retry_after_s: Some(retry_after_s),
+        }
+    }
+
+    /// `503` + `Retry-After`: the server is up but this resource cannot
+    /// serve right now (open circuit breaker, shutdown drain).
+    pub fn unavailable(retry_after_s: u64, message: impl Into<String>) -> HttpError {
+        HttpError {
+            status: 503,
             message: message.into(),
             fatal: false,
             retry_after_s: Some(retry_after_s),

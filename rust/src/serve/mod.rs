@@ -51,7 +51,7 @@
 //! | `POST /admin/deploy`             | hot-swap `{bundle, name?, workers?}`         |
 //! | `POST /admin/shutdown`           | graceful shutdown (drain, then exit)         |
 //! | `GET /models`                    | deployed models (shared `ModelInfo` rows)    |
-//! | `GET /healthz`                   | liveness, version, uptime                    |
+//! | `GET /healthz`                   | liveness + per-model health/breaker table    |
 //! | `GET /metrics`                   | request/admission/session observability      |
 //! | `GET /debug/trace`               | recent request traces (`?n=K`)               |
 //! | `GET /debug/events`              | operational event journal (`?n=K`)           |
@@ -81,7 +81,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::bundle::Bundle;
-use crate::engine::{Engine, InferRequest, InferResponse, Registry, Session};
+use crate::engine::{Engine, HealthState, InferRequest, InferResponse, Registry, Session};
 use crate::json::Value;
 use crate::trace::{EventJournal, Span, TraceHub, TraceSink, Tracer, TRACE_HEADER};
 
@@ -129,6 +129,9 @@ pub struct ServeConfig {
     /// Serve with the legacy thread-per-connection loop instead of the
     /// event-driven worker pool (baseline for `benches/serve_throughput`).
     pub thread_per_conn: bool,
+    /// Golden self-check probe interval, ms (0 disables the background
+    /// prober and with it the breaker/auto-rollback machinery).
+    pub self_check_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -145,6 +148,7 @@ impl Default for ServeConfig {
             coalesce_max: 32,
             keep_alive_idle: Duration::from_secs(60),
             thread_per_conn: false,
+            self_check_ms: 500,
         }
     }
 }
@@ -205,6 +209,11 @@ impl Server {
         listener.set_nonblocking(true).context("set_nonblocking")?;
         let journal = Arc::new(EventJournal::default());
         journal.record("server_start", "-", format!("listening on {local}"));
+        // Health transitions (self-check failures, breaker moves,
+        // rollbacks) from the registry land in the same journal as the
+        // serve-layer events, so one `/debug/events` read tells the whole
+        // story of an incident.
+        registry.attach_journal(Arc::clone(&journal));
         let sched = sched::Scheduler::new(
             cfg.queue_depth,
             cfg.coalesce_window,
@@ -237,7 +246,43 @@ impl Server {
                 }
             })
             .context("spawn accept thread")?;
-        Ok(ServerHandle { local, shared, accept: Some(accept) })
+        let prober = if shared.cfg.self_check_ms > 0 {
+            let probe_shared = Arc::clone(&shared);
+            Some(
+                thread::Builder::new()
+                    .name("pefsl-probe".to_string())
+                    .spawn(move || prober_loop(probe_shared))
+                    .context("spawn prober thread")?,
+            )
+        } else {
+            None
+        };
+        Ok(ServerHandle { local, shared, accept: Some(accept), prober })
+    }
+}
+
+/// Background health prober: every `self_check_ms`, replay each deployed
+/// model's golden frame through its live engine ([`Registry::self_check`],
+/// which drives the per-model circuit breaker and auto-rollback) and
+/// surface worker-supervision incidents (panics, respawns) into the event
+/// journal.  Probes bypass admission — a saturated gate must not starve
+/// the very checks that detect a sick engine.
+fn prober_loop(shared: Arc<Shared>) {
+    let interval = Duration::from_millis(shared.cfg.self_check_ms.max(1));
+    let slice = Duration::from_millis(20).min(interval);
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        for (model, _state) in shared.registry.self_check_all() {
+            if let Ok(engine) = shared.registry.engine(&model) {
+                for note in engine.drain_supervision_notes() {
+                    shared.journal.record("worker_panic", &model, note);
+                }
+            }
+        }
+        // sleep in small slices so shutdown is never delayed by a tick
+        let t0 = Instant::now();
+        while t0.elapsed() < interval && !shared.shutdown.load(Ordering::SeqCst) {
+            thread::sleep(slice);
+        }
     }
 }
 
@@ -246,6 +291,7 @@ pub struct ServerHandle {
     local: SocketAddr,
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
+    prober: Option<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -280,7 +326,12 @@ impl ServerHandle {
     /// `POST /admin/shutdown` completes the drain.
     pub fn join(mut self) -> Result<()> {
         let accept = self.accept.take().expect("join() consumes the handle once");
-        accept.join().map_err(|_| anyhow!("accept thread panicked"))
+        let out = accept.join().map_err(|_| anyhow!("accept thread panicked"));
+        // the prober exits on the shutdown flag the drain already set
+        if let Some(p) = self.prober.take() {
+            p.join().ok();
+        }
+        out
     }
 }
 
@@ -290,6 +341,9 @@ impl Drop for ServerHandle {
         self.shared.begin_shutdown("ServerHandle dropped");
         if let Some(accept) = self.accept.take() {
             accept.join().ok();
+        }
+        if let Some(p) = self.prober.take() {
+            p.join().ok();
         }
     }
 }
@@ -656,13 +710,44 @@ fn route(shared: &Shared, req: &Request, tr: &mut Tracer) -> Result<Response, Ht
     match segs.as_slice() {
         ["healthz"] => {
             require_method(req, "GET")?;
+            let models = shared.registry.models();
+            // 503 only when *everything* is failed: a server with one sick
+            // model out of N can still do useful work, but a fully-open
+            // fleet should drop out of its load balancer.
+            let all_failed =
+                !models.is_empty() && models.iter().all(|m| m.health == HealthState::Failed);
+            let status = if all_failed {
+                "failed"
+            } else if models.iter().any(|m| m.health != HealthState::Ok) {
+                "degraded"
+            } else {
+                "ok"
+            };
+            let rows: Vec<Value> = models
+                .iter()
+                .map(|m| {
+                    let mut o = Value::obj();
+                    o.set("name", m.name.as_str())
+                        .set("version", m.version.as_str())
+                        .set("health", m.health.name())
+                        .set("breaker", m.breaker.name())
+                        .set("self_checks", m.self_checks)
+                        .set("self_check_failures", m.self_check_failures)
+                        .set("worker_respawns", m.worker_respawns);
+                    if let Some(h) = shared.registry.health(&m.name) {
+                        o.set("last_check_ok", h.last_check_ok.map_or(Value::Null, Value::from));
+                    }
+                    o
+                })
+                .collect();
             let mut v = Value::obj();
-            v.set("status", "ok")
+            v.set("status", status)
                 .set("version", env!("CARGO_PKG_VERSION"))
                 .set("uptime_s", shared.started.elapsed().as_secs_f64())
-                .set("models", shared.registry.len())
+                .set("models", models.len())
+                .set("model_health", rows)
                 .set("sessions", shared.sessions.len());
-            Ok(Response::json(200, &v))
+            Ok(Response::json(if all_failed { 503 } else { 200 }, &v))
         }
         ["metrics"] => {
             require_method(req, "GET")?;
@@ -735,8 +820,19 @@ fn require_admin(shared: &Shared, req: &Request) -> Result<(), HttpError> {
 }
 
 /// Resolve the model's current engine; unknown names are 404 (the error
-/// text names what *is* deployed).
+/// text names what *is* deployed).  A model whose circuit breaker is open
+/// is shed with `503` + `Retry-After` (the remaining cooldown) before any
+/// parsing or admission — half-open probing is the prober's job, not live
+/// traffic's.
 fn resolve_engine(shared: &Shared, model: &str) -> Result<Arc<Engine>, HttpError> {
+    if let Some(h) = shared.registry.health(model) {
+        if h.state == HealthState::Failed {
+            return Err(HttpError::unavailable(
+                h.retry_after_s,
+                format!("model '{model}' failed its golden self-checks (breaker open)"),
+            ));
+        }
+    }
     shared.registry.engine(model).map_err(|e| HttpError::new(404, e.to_string()))
 }
 
@@ -995,6 +1091,21 @@ fn metrics_json(shared: &Shared) -> Value {
             o
         })
         .collect();
+    let models = shared.registry.models();
+    let mut health = Value::obj();
+    health
+        .set("self_checks", shared.registry.self_checks_total())
+        .set("self_check_failures", shared.registry.self_check_failures_total())
+        .set("rollbacks", shared.registry.rollbacks_total())
+        .set("worker_respawns", models.iter().map(|m| m.worker_respawns).sum::<u64>())
+        .set("breakers_open", models.iter().filter(|m| m.health == HealthState::Failed).count());
+    if let Some(inj) = shared.registry.fault() {
+        let mut sites = Value::obj();
+        for (site, n) in inj.injected_counts() {
+            sites.set(site, n);
+        }
+        health.set("faults_injected", inj.injected_total()).set("faults_by_site", sites);
+    }
     let mut sessions = Value::obj();
     sessions.set("live", shared.sessions.len()).set("minted", shared.sessions.minted());
     let mut conns = Value::obj();
@@ -1007,6 +1118,7 @@ fn metrics_json(shared: &Shared) -> Value {
         .set("endpoint_rows", shared.metrics.rows_created())
         .set("endpoints", shared.metrics.to_json())
         .set("admission", admission)
+        .set("health", health)
         .set("conns", conns)
         .set("sessions", sessions)
         .set("uptime_s", shared.started.elapsed().as_secs_f64())
@@ -1066,6 +1178,36 @@ fn metrics_prometheus(shared: &Shared) -> String {
     out.push_str("# TYPE pefsl_coalesce_batch_max gauge\n");
     for (m, q) in &gates {
         let _ = writeln!(out, "pefsl_coalesce_batch_max{{model=\"{m}\"}} {}", q.max_batch());
+    }
+    let models = shared.registry.models();
+    out.push_str("# TYPE pefsl_breaker_state gauge\n");
+    for m in &models {
+        let v = match m.breaker {
+            crate::engine::BreakerState::Closed => 0,
+            crate::engine::BreakerState::HalfOpen => 1,
+            crate::engine::BreakerState::Open => 2,
+        };
+        let name = observe::escape_label(&m.name);
+        let _ = writeln!(out, "pefsl_breaker_state{{model=\"{name}\"}} {v}");
+    }
+    out.push_str("# TYPE pefsl_worker_respawns_total counter\n");
+    for m in &models {
+        let name = observe::escape_label(&m.name);
+        let v = m.worker_respawns;
+        let _ = writeln!(out, "pefsl_worker_respawns_total{{model=\"{name}\"}} {v}");
+    }
+    out.push_str("# TYPE pefsl_self_checks_total counter\n");
+    let _ = writeln!(out, "pefsl_self_checks_total {}", shared.registry.self_checks_total());
+    out.push_str("# TYPE pefsl_self_check_failures_total counter\n");
+    let failures = shared.registry.self_check_failures_total();
+    let _ = writeln!(out, "pefsl_self_check_failures_total {failures}");
+    out.push_str("# TYPE pefsl_rollbacks_total counter\n");
+    let _ = writeln!(out, "pefsl_rollbacks_total {}", shared.registry.rollbacks_total());
+    if let Some(inj) = shared.registry.fault() {
+        out.push_str("# TYPE pefsl_faults_injected_total counter\n");
+        for (site, n) in inj.injected_counts() {
+            let _ = writeln!(out, "pefsl_faults_injected_total{{site=\"{site}\"}} {n}");
+        }
     }
     out.push_str("# TYPE pefsl_conns_live gauge\n");
     let _ = writeln!(out, "pefsl_conns_live {}", shared.live_conns.load(Ordering::Relaxed));
@@ -1138,6 +1280,7 @@ mod tests {
         assert_eq!(cfg.coalesce_max, 32);
         assert_eq!(cfg.keep_alive_idle, Duration::from_secs(60));
         assert!(!cfg.thread_per_conn, "the event-driven pool is the default");
+        assert_eq!(cfg.self_check_ms, 500, "golden self-checks are on by default");
         assert!(pool_workers_resolve() >= 2);
     }
 

@@ -287,7 +287,7 @@ impl Worker {
                         if !inc.counted {
                             // Over-cap reject: nothing to parse, just the
                             // canned 503 to flush and a bounded goodbye.
-                            c.enqueue_response(&saturated_response());
+                            c.enqueue_response(&saturated_response(&self.shared));
                             c.close_after_write = true;
                         }
                         self.conns.insert(id, c);
@@ -642,10 +642,15 @@ fn accept_one(
     }
 }
 
-/// The canned answer for a connection we cannot afford.
-fn saturated_response() -> Response {
+/// The answer for a connection we cannot afford.  `Retry-After` is
+/// derived from the observed queue waits / p95 service times of the live
+/// model queues (worst over models), like the admission 429s — a flat 1 s
+/// invites an immediate thundering-herd retry against a still-loaded
+/// server.
+fn saturated_response(shared: &Shared) -> Response {
+    let retry_s = shared.sched.queues().iter().map(|q| q.retry_after_s()).max().unwrap_or(1);
     let mut resp = Response::error(503, "server is at its connection limit; retry later")
-        .with_header("retry-after", "1");
+        .with_header("retry-after", retry_s.to_string());
     resp.close = true;
     resp
 }

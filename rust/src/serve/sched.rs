@@ -203,7 +203,7 @@ impl ModelQueue {
             let queue_us = popped_at.duration_since(first.enqueued).as_secs_f64() * 1e6;
             self.queue_wait.lock().unwrap_or_else(PoisonError::into_inner).record_us(queue_us);
             let result = Err(HttpError::too_busy(
-                self.gate.retry_after_s(),
+                self.retry_after_s(),
                 format!(
                     "deadline expired after {:.0} ms queued for model '{}'",
                     queue_us / 1e3,
@@ -316,6 +316,16 @@ impl ModelQueue {
     /// Queue-wait quantiles over the recent window.
     pub fn queue_wait_snapshot(&self) -> LatencySnapshot {
         self.queue_wait.lock().unwrap_or_else(PoisonError::into_inner).snapshot()
+    }
+
+    /// Suggested client back-off for work shed from this queue: the
+    /// admission gate's p95-service estimate widened by the observed p95
+    /// queue wait — a queue that drains slowly needs a longer back-off
+    /// than service time alone suggests.  Clamped to the gate's [1, 30] s
+    /// range.
+    pub fn retry_after_s(&self) -> u64 {
+        let wait_s = (self.queue_wait_snapshot().p95_us / 1e6).ceil() as u64;
+        self.gate.retry_after_s().max(wait_s).min(30)
     }
 
     /// Coalesced engine calls dispatched.

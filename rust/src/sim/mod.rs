@@ -179,6 +179,10 @@ pub struct Simulator<'a> {
     /// Producing layer of each tensor id (None for the program input and
     /// weight slots) — used by checkpoint liveness.
     producer_layer: Vec<Option<usize>>,
+    /// SEU fault-injection seam ([`crate::fault::SeuHook`]): gets a chance
+    /// to flip bits in freshly loaded weight tiles and layer outputs.
+    /// `None` (the default) costs one branch per tile load / layer.
+    seu: Option<std::sync::Arc<dyn crate::fault::SeuHook>>,
 }
 
 impl<'a> Simulator<'a> {
@@ -268,7 +272,15 @@ impl<'a> Simulator<'a> {
             instr_costs,
             layer_ranges,
             producer_layer,
+            seu: None,
         }
+    }
+
+    /// Install an SEU fault hook (chaos runs only — see [`crate::fault`]).
+    /// Transient by design: flips land in the loaded tile / activation
+    /// arena, both of which are re-materialized on the next run.
+    pub fn set_seu(&mut self, hook: std::sync::Arc<dyn crate::fault::SeuHook>) {
+        self.seu = Some(hook);
     }
 
     /// Run one inference on an f32 NHWC input image (quantized internally
@@ -443,6 +455,10 @@ impl<'a> Simulator<'a> {
             let instr = &program.instrs[idx];
             self.execute(instr).with_context(|| format!("executing {instr:?}"))?;
         }
+        if let Some(hook) = &self.seu {
+            let out = self.layers[l].output as usize;
+            hook.corrupt_acts(l, &mut self.acts[out]);
+        }
         Ok(())
     }
 
@@ -463,7 +479,7 @@ impl<'a> Simulator<'a> {
         let r = self.program.tarch.array_size;
         // Split the borrow once: every arm reads `layers` and mutates
         // disjoint state (arena, accumulator, tile, scratch).
-        let Simulator { layers, acts, acc, wtile, wtile_dims, wb_bias, .. } = self;
+        let Simulator { layers, acts, acc, wtile, wtile_dims, wb_bias, seu, .. } = self;
         match instr {
             Instr::LoadWeights { layer, k0, kt, n0, nt } => {
                 let ld = &layers[*layer as usize];
@@ -479,6 +495,9 @@ impl<'a> Simulator<'a> {
                     wtile[dk * nt..dk * nt + nt].copy_from_slice(&w[base..base + nt]);
                 }
                 *wtile_dims = (*kt, *nt);
+                if let Some(hook) = seu {
+                    hook.corrupt_weights(*layer as usize, &mut wtile[..kt * nt]);
+                }
                 Ok(())
             }
             Instr::MatMul { layer, m0, rows, k0, kt, n0: _, nt, accumulate } => {

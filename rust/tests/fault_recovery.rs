@@ -1,0 +1,245 @@
+//! Integration suite for `pefsl::fault` (ISSUE 9 acceptance):
+//!
+//! * an injected worker panic is caught by pool supervision, the worker
+//!   respawns, and the in-flight batch completes **bit-identical** to a
+//!   fault-free run;
+//! * an injected SEU that trips the golden self-checks on a freshly
+//!   deployed version opens the breaker, auto-rolls the Registry back to
+//!   the retained last-known-good, and subsequent infers bit-match the
+//!   pre-deploy answers — with the whole episode (worker panic, check
+//!   mismatch, breaker transitions, rollback) visible in `/debug/events`
+//!   with trace ids, and `/healthz` recovering to `ok`;
+//! * the same `FaultPlan` seed over the same request stream reproduces the
+//!   exact injected-fault sequence — and the same recovered outputs —
+//!   across different worker-pool sizes.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pefsl::bundle::Bundle;
+use pefsl::dse::BackboneSpec;
+use pefsl::engine::{BreakerConfig, InferRequest, Registry};
+use pefsl::fault::{FaultInjector, FaultPlan};
+use pefsl::json::Value;
+use pefsl::serve::client::{HttpClient, RetryClient, RetryPolicy};
+use pefsl::serve::{ServeConfig, Server};
+use pefsl::tarch::Tarch;
+use pefsl::util::Prng;
+
+const IMG_ELEMS: usize = 16 * 16 * 3;
+
+fn bundle(seed: u64, version: &str) -> Bundle {
+    let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+    Bundle::pack("m", version, spec.build_graph(seed).unwrap(), Tarch::z7020_8x8()).unwrap()
+}
+
+fn images(rng: &mut Prng, n: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| (0..IMG_ELEMS).map(|_| rng.f32()).collect()).collect()
+}
+
+fn infer_body(rng: &mut Prng, n: usize) -> Value {
+    let imgs: Vec<Value> = (0..n)
+        .map(|_| Value::Arr((0..IMG_ELEMS).map(|_| Value::Num(f64::from(rng.f32()))).collect()))
+        .collect();
+    let mut body = Value::obj();
+    body.set("images", Value::Arr(imgs));
+    body
+}
+
+/// The `features` array of item 0, compared as raw JSON for bit-exactness
+/// (the serializer round-trips f32 features exactly).
+fn features_of(v: &Value) -> Value {
+    v.req_arr("items").unwrap()[0].get("features").expect("features in infer item").clone()
+}
+
+/// Acceptance (a): panics injected mid-batch are absorbed by supervision —
+/// the pool respawns workers, retries the affected items on a fresh
+/// simulator, and the batch output is bit-identical to a fault-free run.
+#[test]
+fn pool_self_heals_and_batches_stay_bit_identical() {
+    let b = bundle(1, "v1");
+    let mut rng = Prng::new(9);
+    let imgs = images(&mut rng, 32);
+
+    let clean = b.engine_builder().workers(2).build().unwrap();
+    let want = clean.infer(InferRequest::batch(imgs.clone())).unwrap();
+
+    for workers in [2usize, 3] {
+        let plan = FaultPlan { seed: 7, worker_panic_rate: 0.35, ..FaultPlan::default() };
+        let inj = Arc::new(FaultInjector::new(plan).unwrap());
+        let eng = b.engine_builder().workers(workers).fault(Arc::clone(&inj)).build().unwrap();
+        let got = eng.infer(InferRequest::batch(imgs.clone())).unwrap();
+
+        assert_eq!(got.items.len(), want.items.len());
+        for (g, w) in got.items.iter().zip(&want.items) {
+            assert_eq!(g.features, w.features, "batch must bit-match (workers={workers})");
+        }
+        // 32 items at panic rate 0.35 make a zero-panic run astronomically
+        // unlikely; supervision must have respawned at least one worker.
+        assert!(eng.worker_respawns() > 0, "no respawns at workers={workers}");
+        assert!(inj.injected_total() > 0);
+        let notes = eng.drain_supervision_notes();
+        assert!(
+            notes.iter().any(|n| n.contains("injected worker panic")),
+            "panic payload lost: {notes:?}"
+        );
+        assert!(eng.drain_supervision_notes().is_empty(), "notes drain exactly once");
+    }
+}
+
+/// Acceptance (b), end to end over HTTP: deploy v2 whose engine carries an
+/// armed SEU hook → background self-checks fail → breaker opens → the
+/// Registry rolls back to v1 → infers bit-match the pre-deploy baseline,
+/// `/healthz` returns to `ok`, and the journal tells the whole story.
+#[test]
+fn armed_seu_deploy_trips_breaker_and_rolls_back_bit_identically() {
+    let plan = FaultPlan {
+        seed: 3,
+        seu_act_rate: 1.0,
+        seu_arm_after_deploys: 1, // v1 builds clean; v2's engine is armed
+        worker_panic_rate: 0.2,   // supervision noise on top of the SEU story
+        ..FaultPlan::default()
+    };
+    let registry = Arc::new(Registry::new());
+    registry.set_fault(Arc::new(FaultInjector::new(plan).unwrap()));
+    registry.set_breaker_config(BreakerConfig {
+        failures_to_open: 2,
+        probes_to_close: 1,
+        cooldown: Duration::from_millis(40),
+    });
+    registry.deploy("m", &bundle(1, "v1")).unwrap();
+
+    let cfg = ServeConfig { self_check_ms: 20, ..ServeConfig::default() };
+    let handle = Server::start(Arc::clone(&registry), "127.0.0.1:0", cfg).unwrap();
+    let addr = handle.addr().to_string();
+    let mut http = HttpClient::connect(&addr).unwrap();
+
+    // Baseline answer from v1 (panics may fire here; supervision hides them).
+    let mut rng = Prng::new(5);
+    let body = infer_body(&mut rng, 1);
+    let r = http.post("/v1/m/infer", &body).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    let baseline = features_of(&r.json().unwrap());
+
+    // Hot-swap to v2 (different weights). Deploy-time golden verification
+    // replays the reference simulator and passes; only the *live* engine
+    // carries the armed SEU hook, so the damage surfaces at runtime.
+    registry.deploy("m", &bundle(2, "v2")).unwrap();
+
+    // The prober must fail two checks, open the breaker, and roll back.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while registry.rollbacks_total() == 0 {
+        assert!(Instant::now() < deadline, "prober never rolled back");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Recovery: half-open probes on restored v1 pass and health returns to
+    // ok. Poll /healthz — the retrying client rides out any shed window.
+    let mut retry = RetryClient::new(
+        addr.clone(),
+        RetryPolicy { max_attempts: 6, ..RetryPolicy::default() },
+    );
+    loop {
+        let h = retry.get("/healthz").unwrap();
+        let v = h.json().unwrap();
+        if h.status == 200 && v.req_str("status").unwrap() == "ok" {
+            let row = &v.req_arr("model_health").unwrap()[0];
+            assert_eq!(row.req_str("name").unwrap(), "m");
+            assert_eq!(row.req_str("version").unwrap(), "v1", "rollback restored v1");
+            assert_eq!(row.req_str("breaker").unwrap(), "closed");
+            break;
+        }
+        assert!(Instant::now() < deadline, "health never recovered: {}", h.body_text());
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Post-rollback answers bit-match the pre-deploy baseline.
+    let r = retry.post_idempotent("/v1/m/infer", &body).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    assert_eq!(features_of(&r.json().unwrap()), baseline, "rollback must restore v1 bit-exactly");
+
+    // Force enough traffic that at least one injected panic lands, then
+    // wait for the prober to drain the supervision note into the journal.
+    for _ in 0..40 {
+        let r = retry.post_idempotent("/v1/m/infer", &infer_body(&mut rng, 1)).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_text());
+    }
+    let kinds_needed =
+        ["self_check_failed", "breaker_open", "rollback", "breaker_closed", "worker_panic"];
+    let events = loop {
+        let v = retry.get("/debug/events?n=256").unwrap().json().unwrap();
+        let evs: Vec<Value> = v.req_arr("events").unwrap().to_vec();
+        let has = |k: &str| evs.iter().any(|e| e.req_str("kind").unwrap() == k);
+        if kinds_needed.iter().all(|k| has(k)) {
+            break evs;
+        }
+        assert!(Instant::now() < deadline, "journal incomplete: {v:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let rollback = events
+        .iter()
+        .find(|e| e.req_str("kind").unwrap() == "rollback")
+        .expect("rollback journaled");
+    assert_eq!(rollback.req_str("model").unwrap(), "m");
+    let detail = rollback.req_str("detail").unwrap();
+    assert!(detail.contains("v2") && detail.contains("v1"), "{detail}");
+    assert!(detail.contains("trace="), "rollback event carries a trace id: {detail}");
+    for kind in ["self_check_failed", "breaker_open"] {
+        let e = events.iter().find(|e| e.req_str("kind").unwrap() == kind).unwrap();
+        assert!(e.req_str("detail").unwrap().contains("trace="), "{kind} carries a trace id");
+    }
+
+    // /metrics aggregates the episode: a rollback, failed checks, respawned
+    // workers, and per-site injected-fault counters.
+    let m = retry.get("/metrics").unwrap().json().unwrap();
+    let health = m.get("health").expect("health block in /metrics");
+    assert!(health.req_usize("rollbacks").unwrap() >= 1);
+    assert!(health.req_usize("self_check_failures").unwrap() >= 2);
+    assert!(health.req_usize("worker_respawns").unwrap() >= 1);
+    assert!(health.req_usize("faults_injected").unwrap() >= 1);
+    assert!(health.get("faults_by_site").unwrap().get("seu_act").is_some());
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+/// Satellite: seeded reproducibility. The same plan over the same request
+/// stream yields the *identical* injected-fault sequence and identical
+/// (recovered) outputs, independent of worker-pool size. SEU sites stay
+/// at rate 0 here — their call index→item mapping is interleaving-local —
+/// while panic and stall decisions are a pure function of the call index.
+#[test]
+fn same_seed_reproduces_fault_sequence_across_pool_sizes() {
+    let plan = FaultPlan {
+        seed: 21,
+        worker_panic_rate: 0.25,
+        worker_stall_rate: 0.15,
+        worker_stall_ms: 1,
+        ..FaultPlan::default()
+    };
+    let b = bundle(1, "v1");
+    let mut rng = Prng::new(13);
+    let stream = [images(&mut rng, 24), images(&mut rng, 8)];
+
+    let clean = b.engine_builder().workers(2).build().unwrap();
+    let want: Vec<Vec<f32>> = stream
+        .iter()
+        .flat_map(|imgs| clean.infer(InferRequest::batch(imgs.clone())).unwrap().items)
+        .map(|i| i.features)
+        .collect();
+
+    let mut runs = Vec::new();
+    for workers in [2usize, 3] {
+        let inj = Arc::new(FaultInjector::new(plan.clone()).unwrap());
+        let eng = b.engine_builder().workers(workers).fault(Arc::clone(&inj)).build().unwrap();
+        let got: Vec<Vec<f32>> = stream
+            .iter()
+            .flat_map(|imgs| eng.infer(InferRequest::batch(imgs.clone())).unwrap().items)
+            .map(|i| i.features)
+            .collect();
+        assert_eq!(got, want, "recovered outputs must bit-match (workers={workers})");
+        runs.push(inj.events());
+    }
+    assert!(!runs[0].is_empty(), "plan injected nothing — rates too low");
+    assert_eq!(runs[0], runs[1], "same seed + same stream ⇒ same injected-fault sequence");
+}
