@@ -781,6 +781,25 @@ pub fn serve_cmd(args: &Args) -> Result<i32> {
     let trace_sample = u32::try_from(args.get_u64("trace-sample", default_sample)?)
         .map_err(|_| anyhow::anyhow!("--trace-sample is out of range"))?;
 
+    // SLO objectives: inline grammar (--slo 'infer:p95<5ms,avail>99.9')
+    // or the JSON file form (--slo-file)
+    let slo = match (args.get("slo"), args.get("slo-file")) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--slo and --slo-file are mutually exclusive; pick one")
+        }
+        (Some(s), None) => crate::telemetry::SloSpec::parse(s).context("parse --slo")?,
+        (None, Some(path)) => {
+            let v = json::from_file(path).with_context(|| format!("load --slo-file {path}"))?;
+            crate::telemetry::SloSpec::from_json(&v)
+                .with_context(|| format!("parse --slo-file {path}"))?
+        }
+        (None, None) => crate::telemetry::SloSpec::default(),
+    };
+    if !slo.objectives.is_empty() {
+        let names: Vec<String> = slo.objectives.iter().map(|o| o.name()).collect();
+        eprintln!("slo objectives armed: {}", names.join(", "));
+    }
+
     let cfg = ServeConfig {
         queue_depth: args.get_usize("queue-depth", 32)?,
         idle_session: std::time::Duration::from_secs(args.get_u64("idle-timeout", 300)?),
@@ -792,8 +811,14 @@ pub fn serve_cmd(args: &Args) -> Result<i32> {
         coalesce_max: args.get_usize("coalesce-max", 32)?,
         thread_per_conn: args.has("thread-per-conn"),
         self_check_ms: args.get_u64("self-check-ms", 500)?,
+        slo,
+        flight_dir: args.get("flight-dir").map(std::path::PathBuf::from),
+        telemetry_window_s: args.get_u64("telemetry-window", 900)?,
         ..ServeConfig::default()
     };
+    if let Some(dir) = &cfg.flight_dir {
+        eprintln!("flight recorder persisting dumps under {}", dir.display());
+    }
     let handle = Server::start(Arc::clone(&registry), &addr, cfg)?;
     println!("pefsl serve listening on http://{}", handle.addr());
     // `--addr-file` publishes the bound address (useful with `--addr :0`)

@@ -18,6 +18,9 @@
 //!                  [--admin-token T --addr-file PATH]
 //!                  [--trace-sample N --trace-out FILE]
 //!                  [--self-check-ms MS --fault-plan FILE]
+//!                  [--slo SPEC | --slo-file FILE] [--flight-dir DIR]
+//!                  [--telemetry-window S]
+//! pefsl top        [--addr HOST:PORT] [--interval MS] [--once] [--plain]
 //! pefsl models     [--dir DIR | --bundle DIR] [--check] [--json [PATH]]
 //! pefsl compile    [--graph PATH --weights PATH] [--tarch NAME]
 //! pefsl simulate   [--graph PATH --weights PATH] [--tarch NAME]
@@ -28,6 +31,7 @@
 
 pub mod args;
 pub mod commands;
+pub mod top;
 
 pub use args::Args;
 
@@ -62,6 +66,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "verify" => commands::verify_cmd(&args),
         "deploy" => commands::deploy_cmd(&args),
         "serve" => commands::serve_cmd(&args),
+        "top" => top::top_cmd(&args),
         "models" => commands::models_cmd(&args),
         "compile" => commands::compile_cmd(&args),
         "simulate" => commands::simulate(&args),
@@ -94,6 +99,8 @@ pub fn usage() -> String {
      \x20             hot-swap mid-stream\n\
      \x20 serve       HTTP serving front (pefsl::serve): infer/enroll/classify/\n\
      \x20             session endpoints, bounded admission, /metrics, hot deploy\n\
+     \x20 top         terminal dashboard over a running serve: RPS/latency\n\
+     \x20             sparklines, admission gates, SLO burn, journal tail\n\
      \x20 models      list bundle directories with their manifests\n\
      \x20 compile     compile a graph.json for a tarch, print per-layer cycles\n\
      \x20 simulate    run the bit-exact accelerator simulation on a test vector\n\
@@ -142,6 +149,15 @@ pub fn usage() -> String {
      \x20                    0 disables the breaker/auto-rollback prober)\n\
      \x20 --fault-plan FILE  serve: arm deterministic fault injection from a JSON\n\
      \x20                    plan (chaos runs; $PEFSL_FAULT_PLAN works everywhere)\n\
+     \x20 --slo SPEC         serve: SLO objectives, e.g. 'infer:p95<5ms,avail>99.9';\n\
+     \x20                    burn alerts journal + degrade /healthz\n\
+     \x20 --slo-file FILE    serve: same as --slo but from a JSON objectives file\n\
+     \x20 --flight-dir DIR   serve: persist flight-recorder dumps (anomaly snapshots\n\
+     \x20                    of traces+journal+series) under DIR; newest at /debug/flight\n\
+     \x20 --telemetry-window S  serve: per-second series retention (default 900)\n\
+     \x20 --interval MS      top: poll/redraw period (default 1000)\n\
+     \x20 --once             top: render one frame and exit (implies --plain)\n\
+     \x20 --plain            top: no screen clearing, frames append (pipeable)\n\
      \x20 --trace-sample N   serve: trace every Nth request (0 = only x-pefsl-trace)\n\
      \x20 --trace-out FILE   serve/demo: write a Chrome trace (chrome://tracing) on exit;\n\
      \x20                    serve implies --trace-sample 1 unless given\n\

@@ -1,0 +1,320 @@
+//! `pefsl top` — a terminal dashboard over a running `pefsl serve`.
+//!
+//! Polls `GET /metrics` (JSON) for the per-second telemetry summary and
+//! `GET /debug/events?since=SEQ` for the journal increment, then renders
+//! one plain-ANSI frame per interval: per-row RPS / p50 / p95 with a
+//! sparkline of the last minute's traffic, admission-gate state, SLO
+//! burn/budget, flight-recorder count, and the journal tail.  No curses,
+//! no raw mode — just `ESC[2J` redraws, so it works over any ssh session
+//! to the PYNQ.
+//!
+//! The rendering is a pure function of two JSON documents
+//! ([`render_frame`]), so the layout is unit-tested without a server.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+use crate::serve::client::HttpClient;
+
+use super::args::Args;
+
+/// Unicode eighth-block ramp; index 0 (space) = no traffic that second.
+const SPARK: [char; 9] = [' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Journal lines kept visible at the bottom of the frame.
+const EVENT_TAIL: usize = 8;
+
+/// u64 view of a JSON number (the parser stores every number as f64).
+fn as_u64(v: &Value) -> Option<u64> {
+    v.as_f64().map(|f| f.max(0.0) as u64)
+}
+
+pub fn top_cmd(args: &Args) -> Result<i32> {
+    let addr = args.get_str("addr", "127.0.0.1:7878").to_string();
+    let interval =
+        std::time::Duration::from_millis(args.get_u64("interval", 1000)?.max(100));
+    let once = args.has("once");
+    let plain = args.has("plain") || once;
+
+    let mut cursor: u64 = 0;
+    let mut tail: VecDeque<String> = VecDeque::new();
+    loop {
+        let frame = match poll_once(&addr, &mut cursor, &mut tail) {
+            Ok(f) => f,
+            Err(e) => format!("pefsl top — {addr}\n\n  (unreachable: {e:#})\n"),
+        };
+        if !plain {
+            // clear + home; plain mode just appends frames (pipeable)
+            print!("\x1b[2J\x1b[H");
+        }
+        println!("{frame}");
+        if once {
+            return Ok(0);
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// One poll cycle: fetch `/metrics` + the journal increment, roll the
+/// event tail forward, render.
+fn poll_once(addr: &str, cursor: &mut u64, tail: &mut VecDeque<String>) -> Result<String> {
+    let mut client = HttpClient::connect(addr)?;
+    let metrics = client.get("/metrics")?.json().context("parse /metrics")?;
+    let events = client
+        .get(&format!("/debug/events?since={cursor}"))?
+        .json()
+        .context("parse /debug/events")?;
+    *cursor = events.get("next").and_then(as_u64).unwrap_or(*cursor);
+    if let Some(evs) = events.get("events").and_then(Value::as_arr) {
+        for e in evs {
+            tail.push_back(event_line(e));
+            while tail.len() > EVENT_TAIL {
+                tail.pop_front();
+            }
+        }
+    }
+    Ok(render_frame(addr, &metrics, tail))
+}
+
+/// Render one dashboard frame from the `/metrics` JSON document and the
+/// rolled-up journal tail.  Pure — the unit tests feed canned documents.
+fn render_frame(addr: &str, metrics: &Value, tail: &VecDeque<String>) -> String {
+    let mut out = String::new();
+    let uptime = metrics.get("uptime_s").and_then(Value::as_f64).unwrap_or(0.0);
+    let conns = metrics.path(&["conns", "live"]).and_then(as_u64).unwrap_or(0);
+    let sessions = metrics.path(&["sessions", "live"]).and_then(as_u64).unwrap_or(0);
+    let total = metrics.get("total_requests").and_then(as_u64).unwrap_or(0);
+    let _ = writeln!(
+        out,
+        "pefsl top — http://{addr}   up {}   reqs {total}   conns {conns}   sessions {sessions}",
+        fmt_secs(uptime)
+    );
+
+    // traffic rows: model × endpoint with a last-minute sparkline
+    let _ = writeln!(
+        out,
+        "\n  {:<12} {:<14} {:>7} {:>9} {:>9}  traffic (last 60 s)",
+        "MODEL", "ENDPOINT", "RPS", "P50", "P95"
+    );
+    let rows = metrics.path(&["series", "rows"]).and_then(Value::as_arr);
+    match rows {
+        Some(rows) if !rows.is_empty() => {
+            for r in rows {
+                let model = r.get("model").and_then(Value::as_str).unwrap_or("?");
+                let endpoint = r.get("endpoint").and_then(Value::as_str).unwrap_or("?");
+                let rps = r.get("rps").and_then(Value::as_f64).unwrap_or(0.0);
+                let p50 = r.get("p50_us").and_then(Value::as_f64).unwrap_or(0.0);
+                let p95 = r.get("p95_us").and_then(Value::as_f64).unwrap_or(0.0);
+                let series: Vec<u64> = r
+                    .get("requests")
+                    .and_then(Value::as_arr)
+                    .map(|a| a.iter().filter_map(as_u64).collect())
+                    .unwrap_or_default();
+                let _ = writeln!(
+                    out,
+                    "  {model:<12} {endpoint:<14} {rps:>7.1} {:>9} {:>9}  {}",
+                    fmt_us(p50),
+                    fmt_us(p95),
+                    sparkline(&series)
+                );
+            }
+        }
+        _ => {
+            let _ = writeln!(out, "  (no traffic in the telemetry window yet)");
+        }
+    }
+
+    // admission gates: depth / in-flight / queued / rejected / retry hint
+    if let Some(gates) = metrics.get("admission").and_then(Value::as_arr) {
+        if !gates.is_empty() {
+            let _ = writeln!(
+                out,
+                "\n  {:<12} {:>6} {:>9} {:>7} {:>9} {:>8}",
+                "GATE", "depth", "in_flight", "queued", "rejected", "retry_s"
+            );
+            for g in gates {
+                let _ = writeln!(
+                    out,
+                    "  {:<12} {:>6} {:>9} {:>7} {:>9} {:>8}",
+                    g.get("model").and_then(Value::as_str).unwrap_or("?"),
+                    g.get("depth").and_then(as_u64).unwrap_or(0),
+                    g.get("in_flight").and_then(as_u64).unwrap_or(0),
+                    g.get("queued").and_then(as_u64).unwrap_or(0),
+                    g.get("rejected").and_then(as_u64).unwrap_or(0),
+                    g.get("retry_after_s").and_then(as_u64).unwrap_or(0),
+                );
+            }
+        }
+    }
+
+    // SLO objectives: burn rates + remaining error budget
+    if let Some(objs) = metrics.path(&["slo", "objectives"]).and_then(Value::as_arr) {
+        if !objs.is_empty() {
+            let _ = writeln!(
+                out,
+                "\n  {:<24} {:>10} {:>10} {:>8}  state",
+                "SLO", "burn_short", "burn_long", "budget"
+            );
+            for o in objs {
+                let alerting = o.get("alerting").and_then(Value::as_bool).unwrap_or(false);
+                let _ = writeln!(
+                    out,
+                    "  {:<24} {:>10.2} {:>10.2} {:>7.1}%  {}",
+                    o.get("objective").and_then(Value::as_str).unwrap_or("?"),
+                    o.get("short_burn").and_then(Value::as_f64).unwrap_or(0.0),
+                    o.get("long_burn").and_then(Value::as_f64).unwrap_or(0.0),
+                    o.get("budget_remaining").and_then(Value::as_f64).unwrap_or(1.0) * 100.0,
+                    if alerting { "BURNING" } else { "ok" },
+                );
+            }
+        }
+    }
+
+    // flight recorder + journal tail
+    let dumps = metrics.path(&["flight", "dumps"]).and_then(as_u64).unwrap_or(0);
+    let _ = writeln!(out, "\n  flight dumps: {dumps}    journal tail:");
+    if tail.is_empty() {
+        let _ = writeln!(out, "    (no events yet)");
+    }
+    for line in tail {
+        let _ = writeln!(out, "    {line}");
+    }
+    out
+}
+
+/// One journal event as a dashboard line: `#seq kind model — detail`.
+fn event_line(e: &Value) -> String {
+    format!(
+        "#{} {} {} — {}",
+        e.get("seq").and_then(as_u64).unwrap_or(0),
+        e.get("kind").and_then(Value::as_str).unwrap_or("?"),
+        e.get("model").and_then(Value::as_str).unwrap_or("-"),
+        e.get("detail").and_then(Value::as_str).unwrap_or(""),
+    )
+}
+
+/// Scale a series into the eighth-block ramp; all-zero input renders as
+/// spaces, the max value always renders as a full block.
+fn sparkline(values: &[u64]) -> String {
+    let max = values.iter().copied().max().unwrap_or(0);
+    if max == 0 {
+        return " ".repeat(values.len());
+    }
+    values
+        .iter()
+        .map(|&v| {
+            if v == 0 {
+                SPARK[0]
+            } else {
+                // 1..=8: any traffic at all shows at least the lowest bar
+                let idx = 1 + (v.saturating_sub(1) as usize * 7) / max.max(1) as usize;
+                SPARK[idx.min(8)]
+            }
+        })
+        .collect()
+}
+
+/// Microseconds → a compact human unit (`950µs`, `4.2ms`, `1.3s`).
+fn fmt_us(us: f64) -> String {
+    if us <= 0.0 {
+        "-".to_string()
+    } else if us < 1_000.0 {
+        format!("{us:.0}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.1}ms", us / 1_000.0)
+    } else {
+        format!("{:.1}s", us / 1_000_000.0)
+    }
+}
+
+/// Seconds → `42s` / `3m12s` / `2h05m`.
+fn fmt_secs(s: f64) -> String {
+    let s = s.max(0.0) as u64;
+    if s < 60 {
+        format!("{s}s")
+    } else if s < 3600 {
+        format!("{}m{:02}s", s / 60, s % 60)
+    } else {
+        format!("{}h{:02}m", s / 3600, (s % 3600) / 60)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_scales_to_max() {
+        assert_eq!(sparkline(&[]), "");
+        assert_eq!(sparkline(&[0, 0, 0]), "   ");
+        let s = sparkline(&[0, 1, 5, 10]);
+        let chars: Vec<char> = s.chars().collect();
+        assert_eq!(chars[0], ' ');
+        assert_eq!(chars[1], '▁', "minimum visible traffic gets the lowest bar");
+        assert_eq!(chars[3], '█', "the max always renders full");
+        assert!(chars[2] > chars[1] && chars[2] < chars[3]);
+    }
+
+    #[test]
+    fn unit_formatting() {
+        assert_eq!(fmt_us(0.0), "-");
+        assert_eq!(fmt_us(950.0), "950µs");
+        assert_eq!(fmt_us(4_200.0), "4.2ms");
+        assert_eq!(fmt_us(1_300_000.0), "1.3s");
+        assert_eq!(fmt_secs(42.0), "42s");
+        assert_eq!(fmt_secs(192.0), "3m12s");
+        assert_eq!(fmt_secs(7500.0), "2h05m");
+    }
+
+    #[test]
+    fn render_frame_from_canned_metrics() {
+        let doc = r#"{
+            "uptime_s": 93.0,
+            "total_requests": 1200,
+            "conns": {"live": 3},
+            "sessions": {"live": 2},
+            "series": {"rows": [
+                {"model": "smoke", "endpoint": "infer", "rps": 12.5,
+                 "p50_us": 1500.0, "p95_us": 4800.0,
+                 "requests": [0, 2, 8, 16]}
+            ]},
+            "admission": [
+                {"model": "smoke", "depth": 32, "in_flight": 4, "queued": 1,
+                 "rejected": 7, "retry_after_s": 1}
+            ],
+            "slo": {"objectives": [
+                {"objective": "infer:p95<5ms", "short_burn": 0.4,
+                 "long_burn": 0.2, "budget_remaining": 0.98, "alerting": false},
+                {"objective": "infer:avail>99.9", "short_burn": 4.0,
+                 "long_burn": 2.5, "budget_remaining": 0.1, "alerting": true}
+            ]},
+            "flight": {"dumps": 2}
+        }"#;
+        let metrics = crate::json::parse(doc).unwrap();
+        let mut tail = VecDeque::new();
+        tail.push_back("#12 breaker_open smoke — 3 consecutive failures".to_string());
+        let frame = render_frame("127.0.0.1:7878", &metrics, &tail);
+        assert!(frame.contains("up 1m33s"), "{frame}");
+        assert!(frame.contains("smoke"));
+        assert!(frame.contains("1.5ms") && frame.contains("4.8ms"), "{frame}");
+        assert!(frame.contains('█'), "sparkline max bar missing:\n{frame}");
+        assert!(frame.contains("infer:p95<5ms"));
+        assert!(frame.contains("BURNING") && frame.contains("ok"));
+        assert!(frame.contains("flight dumps: 2"));
+        assert!(frame.contains("breaker_open"));
+        // no stray ANSI escapes inside the frame body (the clear codes are
+        // the caller's job)
+        assert!(!frame.contains('\x1b'));
+    }
+
+    #[test]
+    fn render_frame_survives_empty_metrics() {
+        let metrics = crate::json::parse("{}").unwrap();
+        let frame = render_frame("x", &metrics, &VecDeque::new());
+        assert!(frame.contains("no traffic"));
+        assert!(frame.contains("no events"));
+    }
+}

@@ -46,6 +46,15 @@
 //!     session churn / admission saturation at `/debug/events`; and a
 //!     Chrome `trace_event` exporter ([`trace::chrome::export`]) behind
 //!     `--trace-out`;
+//!   - **`telemetry` — the time dimension of serving**: log-bucketed
+//!     latency histograms ([`telemetry::LatencyHistogram`], constant-work
+//!     mergeable quantiles + Prometheus `_bucket` families), a per-second
+//!     time-series ring over every serve counter
+//!     ([`telemetry::SeriesRing`]), SLO error-budget burn alerting
+//!     ([`telemetry::SloEngine`], `pefsl serve --slo`), an
+//!     anomaly-triggered flight recorder
+//!     ([`telemetry::FlightRecorder`], `/debug/flight`), and the
+//!     `pefsl top` terminal dashboard;
 //!   - **`fault` — deterministic fault injection + self-healing**: a
 //!     seeded [`fault::FaultPlan`] drives reproducible SEU bit flips,
 //!     worker panics/stalls, engine errors, deploy corruption and client
@@ -78,6 +87,7 @@ pub mod serve;
 pub mod sim;
 pub mod tarch;
 pub mod tcompiler;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 pub mod video;

@@ -11,15 +11,18 @@
 //! model actually is rather than by a fixed constant.
 //!
 //! [`Permit`] is a drop guard: it records the service time into the gate's
-//! [`LatencyStats`] window and releases the slot even if the handler
-//! panics (the connection loop catches the panic and answers 500, and the
-//! slot is not leaked).
+//! log-bucketed [`LatencyHistogram`] and releases the slot even if the
+//! handler panics (the connection loop catches the panic and answers 500,
+//! and the slot is not leaked).  The `Retry-After` p95 is a constant-work
+//! bucket walk — it runs on every rejected request, so it must never sort
+//! a sample window.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::metrics::{LatencySnapshot, LatencyStats};
+use crate::metrics::LatencySnapshot;
+use crate::telemetry::LatencyHistogram;
 use crate::trace::EventJournal;
 
 use super::http::HttpError;
@@ -30,7 +33,7 @@ pub struct Admission {
     inflight: AtomicUsize,
     admitted: AtomicU64,
     rejected: AtomicU64,
-    service: Mutex<LatencyStats>,
+    service: Mutex<LatencyHistogram>,
     /// True while the gate is rejecting; used to journal saturation
     /// *onsets* (one event per episode, not one per rejected request).
     saturated: AtomicBool,
@@ -45,7 +48,7 @@ impl Admission {
             inflight: AtomicUsize::new(0),
             admitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
-            service: Mutex::new(LatencyStats::new(256)),
+            service: Mutex::new(LatencyHistogram::new()),
             saturated: AtomicBool::new(false),
             model: String::new(),
             journal: None,
@@ -127,7 +130,8 @@ impl Admission {
     }
 
     /// Suggested client back-off: one p95 service time's worth of queue
-    /// drain, rounded up to whole seconds and clamped to [1, 30].
+    /// drain, rounded up to whole seconds and clamped to [1, 30].  Called
+    /// on every 429, so the p95 is the histogram's O(buckets) walk.
     pub fn retry_after_s(&self) -> u64 {
         let p95_us = self.service.lock().unwrap().p95_us();
         let drain_s = (p95_us * self.depth as f64 / 1e6).ceil();
@@ -151,9 +155,14 @@ impl Admission {
         self.rejected.load(Ordering::Relaxed)
     }
 
-    /// Service-time quantiles over the recent window.
+    /// Service-time quantiles — one constant-work bucket walk.
     pub fn service_snapshot(&self) -> LatencySnapshot {
         self.service.lock().unwrap().snapshot()
+    }
+
+    /// Cumulative service-time histogram for Prometheus `_bucket` export.
+    pub fn service_hist(&self) -> LatencyHistogram {
+        self.service.lock().unwrap().clone()
     }
 }
 

@@ -1,0 +1,303 @@
+//! The 1 Hz telemetry collector: samples the server's cumulative counters
+//! into per-second [`Tick`]s, scores SLOs, and fires the flight recorder.
+//!
+//! The serving hot paths only ever bump cheap cumulative counters and
+//! histograms; this thread does the time-series work off to the side.
+//! Once a second it:
+//!
+//! 1. scrapes every `(model, endpoint)` row ([`ServeMetrics::cumulative_rows`])
+//!    and diffs against its previous scrape into a [`Tick`] (sparse
+//!    histogram deltas included), pushed into the shared [`SeriesRing`];
+//! 2. feeds the tick to the [`SloEngine`]; burn-alert onsets/recoveries
+//!    are journaled (`slo_burn` / `slo_burn_recovered`) and flip
+//!    `/healthz` to `degraded`;
+//! 3. reads the journal increment through the `?since=` cursor machinery
+//!    and turns anomaly events (`breaker_open`, `admission_saturated`,
+//!    `slo_burn` — including the ones it just journaled) plus the series
+//!    ring's p99-spike detector into [`FlightRecorder`] triggers; a fired
+//!    dump seals the last traces + journal tail + series window + metrics
+//!    snapshot, and is itself journaled (`flight_dump`).
+//!
+//! [`ServeMetrics::cumulative_rows`]: super::observe::ServeMetrics::cumulative_rows
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::json::Value;
+use crate::telemetry::flight::{self, FlightConfig, FlightRecorder, FlightTrigger};
+use crate::telemetry::series::{ModelTick, RowTick, SeriesRing, Tick};
+use crate::telemetry::slo::SloEngine;
+
+use super::{metrics_json, ServeConfig, Shared};
+
+/// Spike trigger tuning: recent window seconds, multiple over the
+/// trailing p99, and the minimum samples each side needs.
+const SPIKE_RECENT_S: u64 = 60;
+const SPIKE_FACTOR: f64 = 3.0;
+const SPIKE_MIN_COUNT: u64 = 100;
+
+/// How many traces / journal events a flight dump seals.
+const DUMP_TRACES: usize = 32;
+const DUMP_JOURNAL: usize = 128;
+
+/// The telemetry state every handler shares (behind the server's `Arc`).
+pub(crate) struct ServeTelemetry {
+    pub series: Mutex<SeriesRing>,
+    pub slo: Mutex<SloEngine>,
+    pub flight: Mutex<FlightRecorder>,
+}
+
+impl ServeTelemetry {
+    pub fn new(cfg: &ServeConfig) -> ServeTelemetry {
+        let window_s = cfg.telemetry_window_s.max(1);
+        ServeTelemetry {
+            series: Mutex::new(SeriesRing::new(window_s)),
+            slo: Mutex::new(SloEngine::new(cfg.slo.clone(), cfg.slo_burn, window_s)),
+            flight: Mutex::new(FlightRecorder::new(FlightConfig {
+                dir: cfg.flight_dir.clone(),
+                ..FlightConfig::default()
+            })),
+        }
+    }
+}
+
+/// Diff state between consecutive scrapes (the collector thread owns it).
+#[derive(Default)]
+struct SamplerState {
+    /// `(model, endpoint)` → previous cumulative row counters + buckets.
+    prev_rows: BTreeMap<(String, String), PrevRow>,
+    /// model → previous cumulative per-model counters.
+    prev_models: BTreeMap<String, PrevModel>,
+    prev_faults: u64,
+    /// `?since=` cursor into the journal for trigger scanning.
+    journal_cursor: u64,
+}
+
+struct PrevRow {
+    requests: u64,
+    ok: u64,
+    rejected: u64,
+    unavailable: u64,
+    client_errors: u64,
+    server_errors: u64,
+    hist_counts: Vec<u64>,
+}
+
+#[derive(Default)]
+struct PrevModel {
+    expired: u64,
+    coalesced: u64,
+    respawns: u64,
+}
+
+fn unix_s() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+/// Background collector thread body: one [`collector_tick`] per second
+/// until shutdown, sleeping in small slices so drain is never delayed.
+pub(crate) fn collector_loop(shared: Arc<Shared>) {
+    let interval = Duration::from_secs(1);
+    let slice = Duration::from_millis(50);
+    let mut state = SamplerState::default();
+    // baseline scrape so the first tick reports deltas, not totals
+    state.journal_cursor = shared.journal.total();
+    scrape_baseline(&shared, &mut state);
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        let t0 = Instant::now();
+        collector_tick(&shared, &mut state, unix_s());
+        while t0.elapsed() < interval && !shared.shutdown.load(Ordering::SeqCst) {
+            std::thread::sleep(slice);
+        }
+    }
+}
+
+/// Prime the previous-scrape state without emitting a tick.
+fn scrape_baseline(shared: &Shared, state: &mut SamplerState) {
+    for row in shared.metrics.cumulative_rows() {
+        state.prev_rows.insert(
+            (row.model.clone(), row.endpoint.clone()),
+            PrevRow {
+                requests: row.requests,
+                ok: row.ok,
+                rejected: row.rejected,
+                unavailable: row.unavailable,
+                client_errors: row.client_errors,
+                server_errors: row.server_errors,
+                hist_counts: row.hist_counts,
+            },
+        );
+    }
+}
+
+/// One collector beat: sample → series → SLO → flight triggers.
+fn collector_tick(shared: &Shared, state: &mut SamplerState, t_s: u64) {
+    let tick = sample_tick(shared, state, t_s);
+
+    // SLO scoring first, so burn transitions land in the journal before
+    // the trigger scan below reads its increment.
+    let transitions = {
+        let mut slo = shared.telemetry.slo.lock().unwrap_or_else(PoisonError::into_inner);
+        slo.observe_tick(&tick)
+    };
+    for tr in &transitions {
+        let detail = format!(
+            "objective {} short_burn {:.2} long_burn {:.2}",
+            tr.objective, tr.short_burn, tr.long_burn
+        );
+        if tr.alerting {
+            shared.journal.record("slo_burn", &tr.endpoint, detail);
+        } else {
+            shared.journal.record("slo_burn_recovered", &tr.endpoint, detail);
+        }
+    }
+
+    {
+        let mut series = shared.telemetry.series.lock().unwrap_or_else(PoisonError::into_inner);
+        series.push(tick);
+    }
+
+    // Trigger scan: anomaly events since the last beat + p99 spike.
+    let increment = shared.journal.since(state.journal_cursor);
+    if let Some(last) = increment.last() {
+        state.journal_cursor = last.seq;
+    }
+    let mut triggers = flight::journal_triggers(&increment);
+    {
+        let series = shared.telemetry.series.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(spike) = series.p99_spike(SPIKE_RECENT_S, SPIKE_FACTOR, SPIKE_MIN_COUNT) {
+            triggers.push(FlightTrigger {
+                kind: flight::TRIGGER_P99_SPIKE.to_string(),
+                model: "-".to_string(),
+                detail: format!(
+                    "recent p99 {:.0} µs vs trailing {:.0} µs",
+                    spike.recent_p99_us, spike.trailing_p99_us
+                ),
+            });
+        }
+    }
+    for trigger in &triggers {
+        // Capture outside the recorder's lock: the evidence snapshot
+        // (metrics_json) itself reads the flight recorder, so capturing
+        // under `maybe_dump`'s closure would self-deadlock.  Only this
+        // thread fires dumps, so check-then-fire has no race.
+        {
+            let flight = shared.telemetry.flight.lock().unwrap_or_else(PoisonError::into_inner);
+            if flight.in_cooldown(t_s, &trigger.kind) {
+                continue;
+            }
+        }
+        let evidence = capture_dump(shared);
+        let fired = {
+            let mut flight =
+                shared.telemetry.flight.lock().unwrap_or_else(PoisonError::into_inner);
+            flight.maybe_dump(t_s, trigger, || evidence)
+        };
+        if let Some(path) = fired {
+            let at = path.as_deref().map_or_else(
+                || "memory only".to_string(),
+                |p| p.display().to_string(),
+            );
+            shared.journal.record(
+                "flight_dump",
+                &trigger.model,
+                format!("trigger {} ({}); dump at {at}", trigger.kind, trigger.detail),
+            );
+        }
+    }
+}
+
+/// Seal the server's current evidence into a flight dump body.
+fn capture_dump(shared: &Shared) -> Value {
+    let mut v = Value::obj();
+    v.set("traces", shared.trace.recent_json(DUMP_TRACES))
+        .set("journal", shared.journal.to_json(DUMP_JOURNAL))
+        .set(
+            "series",
+            shared.telemetry.series.lock().unwrap_or_else(PoisonError::into_inner).to_json(),
+        )
+        .set("metrics", metrics_json(shared));
+    v
+}
+
+/// Scrape every cumulative counter and diff against the previous scrape.
+fn sample_tick(shared: &Shared, state: &mut SamplerState, t_s: u64) -> Tick {
+    let mut rows = Vec::new();
+    for row in shared.metrics.cumulative_rows() {
+        let key = (row.model.clone(), row.endpoint.clone());
+        let prev = state.prev_rows.get(&key);
+        let d = |cur: u64, sel: fn(&PrevRow) -> u64| cur.saturating_sub(prev.map_or(0, sel));
+        let hist_delta: Vec<(u16, u32)> = row
+            .hist_counts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &n)| {
+                let before = prev.map_or(0, |p| p.hist_counts.get(i).copied().unwrap_or(0));
+                let delta = n.saturating_sub(before);
+                (delta > 0).then_some((i as u16, delta.min(u32::MAX as u64) as u32))
+            })
+            .collect();
+        let tick_row = RowTick {
+            model: row.model.clone(),
+            endpoint: row.endpoint.clone(),
+            requests: d(row.requests, |p| p.requests),
+            ok: d(row.ok, |p| p.ok),
+            rejected: d(row.rejected, |p| p.rejected),
+            unavailable: d(row.unavailable, |p| p.unavailable),
+            client_errors: d(row.client_errors, |p| p.client_errors),
+            server_errors: d(row.server_errors, |p| p.server_errors),
+            hist_delta,
+        };
+        if tick_row.requests > 0 || prev.is_some() {
+            rows.push(tick_row);
+        }
+        state.prev_rows.insert(
+            key,
+            PrevRow {
+                requests: row.requests,
+                ok: row.ok,
+                rejected: row.rejected,
+                unavailable: row.unavailable,
+                client_errors: row.client_errors,
+                server_errors: row.server_errors,
+                hist_counts: row.hist_counts,
+            },
+        );
+    }
+
+    let respawns_by_model: BTreeMap<String, u64> =
+        shared.registry.models().into_iter().map(|m| (m.name, m.worker_respawns)).collect();
+    let mut models = Vec::new();
+    for q in shared.sched.queues() {
+        let name = q.model().to_string();
+        let respawns_cum = respawns_by_model.get(&name).copied().unwrap_or(0);
+        let prev = state.prev_models.entry(name.clone()).or_default();
+        let tick = ModelTick {
+            model: name.clone(),
+            queued: q.queued() as u64,
+            in_flight: q.gate().in_flight() as u64,
+            expired: q.expired().saturating_sub(prev.expired),
+            coalesced: q.batched_images().saturating_sub(prev.coalesced),
+            respawns: respawns_cum.saturating_sub(prev.respawns),
+        };
+        prev.expired = q.expired();
+        prev.coalesced = q.batched_images();
+        prev.respawns = respawns_cum;
+        models.push(tick);
+    }
+
+    let faults_cum = shared.registry.fault().map_or(0, |inj| inj.injected_total());
+    let faults = faults_cum.saturating_sub(state.prev_faults);
+    state.prev_faults = faults_cum;
+
+    Tick {
+        t_s,
+        rows,
+        models,
+        conns: shared.live_conns.load(Ordering::Relaxed) as u64,
+        sessions: shared.sessions.len() as u64,
+        faults,
+    }
+}

@@ -30,9 +30,18 @@
 //!   with idle-expiry eviction; sessions pin the engine current at
 //!   creation, so enrolled features survive hot-swaps bit-identically;
 //! * **observability** ([`observe`]) — per-model, per-endpoint counters and
-//!   latency quantiles on `GET /metrics` (JSON, or Prometheus text
-//!   exposition via `?format=prometheus` / `Accept: text/plain`), built
-//!   from the shared [`crate::metrics::LatencySnapshot`] row shape;
+//!   constant-work log-bucketed latency histograms
+//!   ([`crate::telemetry::LatencyHistogram`]) on `GET /metrics` (JSON, or
+//!   Prometheus text exposition with native `_bucket` families via
+//!   `?format=prometheus` / `Accept: text/plain`);
+//! * **telemetry** ([`collector`](self)) — a 1 Hz background collector
+//!   samples every counter into a per-second time-series ring
+//!   ([`crate::telemetry::SeriesRing`]), scores `--slo` objectives into
+//!   error-budget burn alerts ([`crate::telemetry::SloEngine`], reflected
+//!   in `/healthz` as `degraded`), and on anomalies (breaker open,
+//!   admission saturation, SLO burn, p99 spike) seals traces + journal +
+//!   series into a flight-recorder dump (`--flight-dir`,
+//!   `GET /debug/flight`);
 //! * **tracing** ([`crate::trace`]) — per-request span traces (sampled
 //!   via `--trace-sample`, or forced by sending the `x-pefsl-trace`
 //!   header, which is echoed back) on `GET /debug/trace`, plus an
@@ -54,7 +63,8 @@
 //! | `GET /healthz`                   | liveness + per-model health/breaker table    |
 //! | `GET /metrics`                   | request/admission/session observability      |
 //! | `GET /debug/trace`               | recent request traces (`?n=K`)               |
-//! | `GET /debug/events`              | operational event journal (`?n=K`)           |
+//! | `GET /debug/events`              | operational event journal (`?n=K` tail, or `?since=SEQ` cursor) |
+//! | `GET /debug/flight`              | newest flight-recorder dump                  |
 //!
 //! Graceful shutdown (`ServerHandle::shutdown` or `POST /admin/shutdown`)
 //! stops accepting, lets every in-flight request complete, joins all
@@ -63,6 +73,7 @@
 
 pub mod admission;
 pub mod client;
+mod collector;
 pub mod http;
 pub mod observe;
 mod pool;
@@ -132,6 +143,17 @@ pub struct ServeConfig {
     /// Golden self-check probe interval, ms (0 disables the background
     /// prober and with it the breaker/auto-rollback machinery).
     pub self_check_ms: u64,
+    /// Service-level objectives (`--slo 'infer:p95<5ms,avail>99.9'` or
+    /// `--slo-file`).  Empty = no SLO scoring, `/healthz` never degrades
+    /// on burn.
+    pub slo: crate::telemetry::SloSpec,
+    /// Burn-alert windows/threshold for the SLO engine.
+    pub slo_burn: crate::telemetry::BurnConfig,
+    /// Where flight-recorder dumps persist (`--flight-dir`); `None`
+    /// keeps only the newest dump in memory for `GET /debug/flight`.
+    pub flight_dir: Option<std::path::PathBuf>,
+    /// Telemetry time-series retention, seconds (`--telemetry-window`).
+    pub telemetry_window_s: u64,
 }
 
 impl Default for ServeConfig {
@@ -149,6 +171,10 @@ impl Default for ServeConfig {
             keep_alive_idle: Duration::from_secs(60),
             thread_per_conn: false,
             self_check_ms: 500,
+            slo: crate::telemetry::SloSpec::default(),
+            slo_burn: crate::telemetry::BurnConfig::default(),
+            flight_dir: None,
+            telemetry_window_s: 900,
         }
     }
 }
@@ -170,6 +196,9 @@ struct Shared {
     conns_rejected: AtomicU64,
     /// True while the acceptor is rejecting (journals saturation onsets).
     conn_saturated: AtomicBool,
+    /// Time-series ring + SLO engine + flight recorder, fed by the 1 Hz
+    /// collector thread ([`collector::collector_loop`]).
+    telemetry: collector::ServeTelemetry,
 }
 
 impl Shared {
@@ -220,6 +249,7 @@ impl Server {
             cfg.coalesce_max,
             Arc::clone(&journal),
         );
+        let telemetry = collector::ServeTelemetry::new(&cfg);
         let shared = Arc::new(Shared {
             registry,
             sessions: SessionStore::new(cfg.idle_session).with_journal(Arc::clone(&journal)),
@@ -232,6 +262,7 @@ impl Server {
             live_conns: AtomicUsize::new(0),
             conns_rejected: AtomicU64::new(0),
             conn_saturated: AtomicBool::new(false),
+            telemetry,
             cfg,
         });
         let accept_shared = Arc::clone(&shared);
@@ -257,7 +288,12 @@ impl Server {
         } else {
             None
         };
-        Ok(ServerHandle { local, shared, accept: Some(accept), prober })
+        let collect_shared = Arc::clone(&shared);
+        let telemetry = thread::Builder::new()
+            .name("pefsl-telemetry".to_string())
+            .spawn(move || collector::collector_loop(collect_shared))
+            .context("spawn telemetry thread")?;
+        Ok(ServerHandle { local, shared, accept: Some(accept), prober, telemetry: Some(telemetry) })
     }
 }
 
@@ -292,6 +328,7 @@ pub struct ServerHandle {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     prober: Option<JoinHandle<()>>,
+    telemetry: Option<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -327,9 +364,13 @@ impl ServerHandle {
     pub fn join(mut self) -> Result<()> {
         let accept = self.accept.take().expect("join() consumes the handle once");
         let out = accept.join().map_err(|_| anyhow!("accept thread panicked"));
-        // the prober exits on the shutdown flag the drain already set
+        // the prober and collector exit on the shutdown flag the drain
+        // already set
         if let Some(p) = self.prober.take() {
             p.join().ok();
+        }
+        if let Some(t) = self.telemetry.take() {
+            t.join().ok();
         }
         out
     }
@@ -344,6 +385,9 @@ impl Drop for ServerHandle {
         }
         if let Some(p) = self.prober.take() {
             p.join().ok();
+        }
+        if let Some(t) = self.telemetry.take() {
+            t.join().ok();
         }
     }
 }
@@ -693,8 +737,36 @@ fn query_param<'a>(path: &'a str, key: &str) -> Option<&'a str> {
     None
 }
 
-fn query_usize(path: &str, key: &str) -> Option<usize> {
-    query_param(path, key)?.parse().ok()
+/// Strict `?key=N` count for the debug endpoints: absent → `default`;
+/// present but non-numeric or zero → `400` with a JSON error body
+/// (silently ignoring a typo'd `?n=` would quietly answer with the
+/// default tail and hide the caller's mistake).
+fn query_count(path: &str, key: &str, default: usize) -> Result<usize, HttpError> {
+    match query_param(path, key) {
+        None => Ok(default),
+        Some(raw) => match raw.parse::<usize>() {
+            Ok(n) if n > 0 => Ok(n),
+            _ => Err(HttpError::new(
+                400,
+                format!("query parameter '{key}' must be a positive integer, got '{raw}'"),
+            )),
+        },
+    }
+}
+
+/// Strict `?key=SEQ` cursor: absent → `None`; any non-negative integer is
+/// a valid cursor (`0` = everything still in the ring); anything else is
+/// a `400`.
+fn query_cursor(path: &str, key: &str) -> Result<Option<u64>, HttpError> {
+    match query_param(path, key) {
+        None => Ok(None),
+        Some(raw) => raw.parse::<u64>().map(Some).map_err(|_| {
+            HttpError::new(
+                400,
+                format!("query parameter '{key}' must be a non-negative integer, got '{raw}'"),
+            )
+        }),
+    }
 }
 
 fn require_method(req: &Request, method: &str) -> Result<(), HttpError> {
@@ -716,9 +788,16 @@ fn route(shared: &Shared, req: &Request, tr: &mut Tracer) -> Result<Response, Ht
             // fleet should drop out of its load balancer.
             let all_failed =
                 !models.is_empty() && models.iter().all(|m| m.health == HealthState::Failed);
+            // An SLO burning its error budget degrades health even while
+            // every model still answers — the point of the alert is to
+            // say "technically up, practically failing".
+            let slo_burning = {
+                let slo = shared.telemetry.slo.lock().unwrap_or_else(PoisonError::into_inner);
+                slo.degraded()
+            };
             let status = if all_failed {
                 "failed"
-            } else if models.iter().any(|m| m.health != HealthState::Ok) {
+            } else if slo_burning || models.iter().any(|m| m.health != HealthState::Ok) {
                 "degraded"
             } else {
                 "ok"
@@ -746,6 +825,7 @@ fn route(shared: &Shared, req: &Request, tr: &mut Tracer) -> Result<Response, Ht
                 .set("uptime_s", shared.started.elapsed().as_secs_f64())
                 .set("models", models.len())
                 .set("model_health", rows)
+                .set("slo_burning", slo_burning)
                 .set("sessions", shared.sessions.len());
             Ok(Response::json(if all_failed { 503 } else { 200 }, &v))
         }
@@ -766,13 +846,31 @@ fn route(shared: &Shared, req: &Request, tr: &mut Tracer) -> Result<Response, Ht
         }
         ["debug", "trace"] => {
             require_method(req, "GET")?;
-            let n = query_usize(&req.path, "n").unwrap_or(16).min(256);
+            let n = query_count(&req.path, "n", 16)?.min(256);
             Ok(Response::json(200, &shared.trace.recent_json(n)))
         }
         ["debug", "events"] => {
             require_method(req, "GET")?;
-            let n = query_usize(&req.path, "n").unwrap_or(64);
+            // `?since=SEQ` reads the increment past a poller's cursor
+            // (oldest-first, with the next cursor in the reply);
+            // `?n=K` reads the newest K as before.
+            if let Some(cursor) = query_cursor(&req.path, "since")? {
+                return Ok(Response::json(200, &shared.journal.since_json(cursor)));
+            }
+            let n = query_count(&req.path, "n", 64)?;
             Ok(Response::json(200, &shared.journal.to_json(n)))
+        }
+        ["debug", "flight"] => {
+            require_method(req, "GET")?;
+            let flight =
+                shared.telemetry.flight.lock().unwrap_or_else(PoisonError::into_inner);
+            match flight.latest_json() {
+                Some(dump) => Ok(Response::json(200, dump)),
+                None => Err(HttpError::new(
+                    404,
+                    "no flight dumps recorded yet (the recorder fires on anomalies)",
+                )),
+            }
         }
         ["admin", "deploy"] => {
             require_method(req, "POST")?;
@@ -1113,6 +1211,22 @@ fn metrics_json(shared: &Shared) -> Value {
         .set("live", shared.live_conns.load(Ordering::Relaxed))
         .set("rejected", shared.conns_rejected.load(Ordering::Relaxed))
         .set("max", shared.cfg.max_conns);
+    // Last minute of per-second telemetry + SLO status + flight-recorder
+    // state.  `series` is what `pefsl top` polls for its sparklines.
+    let series = shared
+        .telemetry
+        .series
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .summary_json(60);
+    let slo = shared.telemetry.slo.lock().unwrap_or_else(PoisonError::into_inner).to_json();
+    let flight = {
+        let f = shared.telemetry.flight.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut o = Value::obj();
+        o.set("dumps", f.dumps())
+            .set("dir", f.dir().map_or(Value::Null, |d| Value::from(d.display().to_string())));
+        o
+    };
     let mut v = Value::obj();
     v.set("total_requests", shared.metrics.total_requests())
         .set("endpoint_rows", shared.metrics.rows_created())
@@ -1121,6 +1235,9 @@ fn metrics_json(shared: &Shared) -> Value {
         .set("health", health)
         .set("conns", conns)
         .set("sessions", sessions)
+        .set("series", series)
+        .set("slo", slo)
+        .set("flight", flight)
         .set("uptime_s", shared.started.elapsed().as_secs_f64())
         .set("journal_events", shared.journal.total());
     v
@@ -1162,9 +1279,23 @@ fn metrics_prometheus(shared: &Shared) -> String {
     for (m, q) in &gates {
         let _ = writeln!(out, "pefsl_queue_expired_total{{model=\"{m}\"}} {}", q.expired());
     }
-    out.push_str("# TYPE pefsl_queue_wait_seconds summary\n");
+    out.push_str("# TYPE pefsl_queue_wait_seconds histogram\n");
     for (m, q) in &gates {
-        observe::write_summary(&mut out, "pefsl_queue_wait_seconds", m, &q.queue_wait_snapshot());
+        crate::telemetry::hist::write_prometheus_buckets(
+            &mut out,
+            "pefsl_queue_wait_seconds",
+            &format!("model=\"{m}\""),
+            &q.queue_wait_hist(),
+        );
+    }
+    out.push_str("# TYPE pefsl_admission_service_seconds histogram\n");
+    for (m, q) in &gates {
+        crate::telemetry::hist::write_prometheus_buckets(
+            &mut out,
+            "pefsl_admission_service_seconds",
+            &format!("model=\"{m}\""),
+            &q.gate().service_hist(),
+        );
     }
     out.push_str("# TYPE pefsl_coalesced_batches_total counter\n");
     for (m, q) in &gates {
@@ -1222,6 +1353,39 @@ fn metrics_prometheus(shared: &Shared) -> String {
     let _ = writeln!(out, "pefsl_uptime_seconds {}", shared.started.elapsed().as_secs_f64());
     out.push_str("# TYPE pefsl_journal_events_total counter\n");
     let _ = writeln!(out, "pefsl_journal_events_total {}", shared.journal.total());
+    let statuses =
+        shared.telemetry.slo.lock().unwrap_or_else(PoisonError::into_inner).statuses();
+    if !statuses.is_empty() {
+        out.push_str("# TYPE pefsl_slo_burn_rate gauge\n");
+        for st in &statuses {
+            let o = observe::escape_label(&st.objective);
+            let _ = writeln!(
+                out,
+                "pefsl_slo_burn_rate{{objective=\"{o}\",window=\"short\"}} {}",
+                st.short_burn
+            );
+            let _ = writeln!(
+                out,
+                "pefsl_slo_burn_rate{{objective=\"{o}\",window=\"long\"}} {}",
+                st.long_burn
+            );
+        }
+        out.push_str("# TYPE pefsl_slo_error_budget_remaining gauge\n");
+        for st in &statuses {
+            let o = observe::escape_label(&st.objective);
+            let v = st.budget_remaining;
+            let _ = writeln!(out, "pefsl_slo_error_budget_remaining{{objective=\"{o}\"}} {v}");
+        }
+        out.push_str("# TYPE pefsl_slo_alerting gauge\n");
+        for st in &statuses {
+            let o = observe::escape_label(&st.objective);
+            let v = u8::from(st.alerting);
+            let _ = writeln!(out, "pefsl_slo_alerting{{objective=\"{o}\"}} {v}");
+        }
+    }
+    out.push_str("# TYPE pefsl_flight_dumps_total counter\n");
+    let dumps = shared.telemetry.flight.lock().unwrap_or_else(PoisonError::into_inner).dumps();
+    let _ = writeln!(out, "pefsl_flight_dumps_total {dumps}");
     out
 }
 
@@ -1281,6 +1445,12 @@ mod tests {
         assert_eq!(cfg.keep_alive_idle, Duration::from_secs(60));
         assert!(!cfg.thread_per_conn, "the event-driven pool is the default");
         assert_eq!(cfg.self_check_ms, 500, "golden self-checks are on by default");
+        assert!(cfg.slo.is_empty(), "no SLOs unless --slo is given");
+        assert_eq!(cfg.slo_burn.short_s, 60);
+        assert_eq!(cfg.slo_burn.long_s, 300);
+        assert_eq!(cfg.slo_burn.threshold, 2.0);
+        assert!(cfg.flight_dir.is_none(), "flight dumps stay in memory by default");
+        assert_eq!(cfg.telemetry_window_s, 900, "15 min of per-second telemetry");
         assert!(pool_workers_resolve() >= 2);
     }
 
@@ -1311,8 +1481,23 @@ mod tests {
         assert_eq!(query_param("/debug/trace?a=1&n=7", "n"), Some("7"));
         assert_eq!(query_param("/debug/trace", "n"), None);
         assert_eq!(query_param("/metrics?format=prometheus", "format"), Some("prometheus"));
-        assert_eq!(query_usize("/debug/trace?n=12", "n"), Some(12));
-        assert_eq!(query_usize("/debug/trace?n=x", "n"), None);
+    }
+
+    #[test]
+    fn debug_query_params_are_strict() {
+        // counts: absent → default, junk or zero → 400 (not silently the
+        // default — the old lenient behavior hid caller typos)
+        assert_eq!(query_count("/debug/trace?n=12", "n", 16).unwrap(), 12);
+        assert_eq!(query_count("/debug/trace", "n", 16).unwrap(), 16);
+        assert_eq!(query_count("/debug/trace?n=x", "n", 16).unwrap_err().status, 400);
+        assert_eq!(query_count("/debug/trace?n=0", "n", 16).unwrap_err().status, 400);
+        assert_eq!(query_count("/debug/trace?n=-3", "n", 16).unwrap_err().status, 400);
+        assert_eq!(query_count("/debug/trace?n=", "n", 16).unwrap_err().status, 400);
+        // cursors: zero is a legitimate "from the beginning"
+        assert_eq!(query_cursor("/debug/events?since=0", "since").unwrap(), Some(0));
+        assert_eq!(query_cursor("/debug/events?since=41", "since").unwrap(), Some(41));
+        assert_eq!(query_cursor("/debug/events", "since").unwrap(), None);
+        assert_eq!(query_cursor("/debug/events?since=x", "since").unwrap_err().status, 400);
     }
 
     #[test]

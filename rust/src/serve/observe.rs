@@ -2,14 +2,21 @@
 //! `GET /metrics`.
 //!
 //! Every handled request is recorded under its `(model, endpoint)` key —
-//! status class (ok / rejected / client error / server error) plus
-//! end-to-end handler latency into a [`LatencyStats`] window.  `/metrics`
-//! renders the whole table as JSON using the shared
-//! [`LatencySnapshot::to_json`] row shape, so the serving endpoint and the
-//! `BENCH_*` emitters stay one formatting, or as Prometheus text
-//! exposition ([`ServeMetrics::to_prometheus`]) for scrapers.  Admission
-//! state (queue depth, in-flight, rejection counts) is merged in by the
-//! server, which owns the gates.
+//! status class (ok / rejected / unavailable / client error / server
+//! error) plus end-to-end handler latency into a log-bucketed
+//! [`LatencyHistogram`].  `/metrics` renders the whole table as JSON using
+//! the shared [`LatencySnapshot::to_json`] row shape, so the serving
+//! endpoint and the `BENCH_*` emitters stay one formatting, or as
+//! Prometheus text exposition ([`ServeMetrics::to_prometheus`]) with
+//! native `_bucket` histogram families.  Admission state (queue depth,
+//! in-flight, rejection counts) is merged in by the server, which owns
+//! the gates.
+//!
+//! Scrape cost is O(rows × buckets): the histogram answers every quantile
+//! from one walk of its fixed bucket array, never by cloning and sorting
+//! a sample window (see [`crate::telemetry::hist`]).  The 1 Hz telemetry
+//! sampler reads the same table via [`ServeMetrics::cumulative_rows`] and
+//! diffs consecutive scrapes into the per-second series ring.
 //!
 //! The hot path is allocation-free in the steady state: the table is
 //! nested (`model → endpoint → stats`) so [`ServeMetrics::record`] looks
@@ -27,7 +34,7 @@ use std::sync::{Mutex, PoisonError};
 use std::time::Duration;
 
 use crate::json::Value;
-use crate::metrics::{LatencySnapshot, LatencyStats};
+use crate::telemetry::hist::{write_prometheus_buckets, LatencyHistogram};
 
 /// Accumulated stats for one `(model, endpoint)` pair.
 #[derive(Debug)]
@@ -36,11 +43,13 @@ struct EndpointStats {
     ok: u64,
     /// 429s — admission rejections.
     rejected: u64,
+    /// 503s — breaker open / draining.
+    unavailable: u64,
     /// Other 4xx.
     client_errors: u64,
-    /// 5xx.
+    /// Other 5xx.
     server_errors: u64,
-    latency: LatencyStats,
+    latency: LatencyHistogram,
 }
 
 impl EndpointStats {
@@ -49,11 +58,28 @@ impl EndpointStats {
             requests: 0,
             ok: 0,
             rejected: 0,
+            unavailable: 0,
             client_errors: 0,
             server_errors: 0,
-            latency: LatencyStats::new(512),
+            latency: LatencyHistogram::new(),
         }
     }
+}
+
+/// One cumulative row exported for the telemetry sampler: every counter
+/// plus the raw histogram bucket counts, all monotone, so two consecutive
+/// exports diff into a per-second [`crate::telemetry::series::RowTick`].
+#[derive(Clone, Debug)]
+pub struct RowCumulative {
+    pub model: String,
+    pub endpoint: String,
+    pub requests: u64,
+    pub ok: u64,
+    pub rejected: u64,
+    pub unavailable: u64,
+    pub client_errors: u64,
+    pub server_errors: u64,
+    pub hist_counts: Vec<u64>,
 }
 
 /// The `/metrics` table: `(model, endpoint)` → counters + quantiles.
@@ -93,6 +119,7 @@ impl ServeMetrics {
         match status {
             200..=299 => stats.ok += 1,
             429 => stats.rejected += 1,
+            503 => stats.unavailable += 1,
             400..=499 => stats.client_errors += 1,
             _ => stats.server_errors += 1,
         }
@@ -112,6 +139,29 @@ impl ServeMetrics {
         self.rows_created.load(Ordering::Relaxed)
     }
 
+    /// Every row's cumulative counters + histogram buckets, for the
+    /// telemetry sampler to diff against its previous scrape.
+    pub fn cumulative_rows(&self) -> Vec<RowCumulative> {
+        let rows = self.rows.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut out = Vec::new();
+        for (model, by_endpoint) in rows.iter() {
+            for (endpoint, s) in by_endpoint {
+                out.push(RowCumulative {
+                    model: model.clone(),
+                    endpoint: endpoint.clone(),
+                    requests: s.requests,
+                    ok: s.ok,
+                    rejected: s.rejected,
+                    unavailable: s.unavailable,
+                    client_errors: s.client_errors,
+                    server_errors: s.server_errors,
+                    hist_counts: s.latency.counts().to_vec(),
+                });
+            }
+        }
+        out
+    }
+
     /// The table as `/metrics` JSON rows.
     pub fn to_json(&self) -> Value {
         let rows = self.rows.lock().unwrap_or_else(PoisonError::into_inner);
@@ -124,6 +174,7 @@ impl ServeMetrics {
                     .set("requests", s.requests)
                     .set("ok", s.ok)
                     .set("rejected", s.rejected)
+                    .set("unavailable", s.unavailable)
                     .set("client_errors", s.client_errors)
                     .set("server_errors", s.server_errors)
                     .set("latency", s.latency.snapshot().to_json());
@@ -135,13 +186,15 @@ impl ServeMetrics {
 
     /// The table as Prometheus text exposition (the request-level
     /// metrics; the server appends its admission/session gauges).
+    /// Request latency is a native histogram family — `_bucket` ladders
+    /// straight from the log-bucketed recorder, no quantile summaries.
     pub fn to_prometheus(&self) -> String {
         struct Row {
             model: String,
             endpoint: String,
             requests: u64,
-            outcomes: [(&'static str, u64); 4],
-            latency: LatencySnapshot,
+            outcomes: [(&'static str, u64); 5],
+            latency: LatencyHistogram,
         }
         let mut snap: Vec<Row> = Vec::new();
         {
@@ -155,10 +208,11 @@ impl ServeMetrics {
                         outcomes: [
                             ("ok", s.ok),
                             ("rejected", s.rejected),
+                            ("unavailable", s.unavailable),
                             ("client_error", s.client_errors),
                             ("server_error", s.server_errors),
                         ],
-                        latency: s.latency.snapshot(),
+                        latency: s.latency.clone(),
                     });
                 }
             }
@@ -186,43 +240,14 @@ impl ServeMetrics {
                 );
             }
         }
-        out.push_str("# TYPE pefsl_request_latency_seconds summary\n");
+        out.push_str("# TYPE pefsl_request_latency_seconds histogram\n");
         for r in &snap {
-            let (m, e) = (escape_label(&r.model), escape_label(&r.endpoint));
-            let l = &r.latency;
-            for (q, us) in [("0.5", l.p50_us), ("0.95", l.p95_us), ("0.99", l.p99_us)] {
-                let _ = writeln!(
-                    out,
-                    "pefsl_request_latency_seconds{{model=\"{m}\",endpoint=\"{e}\",quantile=\"{q}\"}} {}",
-                    us / 1e6,
-                );
-            }
-            let _ = writeln!(
-                out,
-                "pefsl_request_latency_seconds_sum{{model=\"{m}\",endpoint=\"{e}\"}} {}",
-                l.mean_us * l.count as f64 / 1e6,
-            );
-            let _ = writeln!(
-                out,
-                "pefsl_request_latency_seconds_count{{model=\"{m}\",endpoint=\"{e}\"}} {}",
-                l.count,
-            );
+            let labels =
+                format!("model=\"{}\",endpoint=\"{}\"", escape_label(&r.model), escape_label(&r.endpoint));
+            write_prometheus_buckets(&mut out, "pefsl_request_latency_seconds", &labels, &r.latency);
         }
         out
     }
-}
-
-/// Append one model-labelled Prometheus summary (quantile samples plus
-/// `_sum`/`_count`) from a latency snapshot.  The caller writes the
-/// `# TYPE` line; this emits the samples, converting µs to seconds to
-/// match the request-latency family.
-pub(crate) fn write_summary(out: &mut String, family: &str, model: &str, l: &LatencySnapshot) {
-    for (q, us) in [("0.5", l.p50_us), ("0.95", l.p95_us), ("0.99", l.p99_us)] {
-        let _ = writeln!(out, "{family}{{model=\"{model}\",quantile=\"{q}\"}} {}", us / 1e6);
-    }
-    let sum_s = l.mean_us * l.count as f64 / 1e6;
-    let _ = writeln!(out, "{family}_sum{{model=\"{model}\"}} {sum_s}");
-    let _ = writeln!(out, "{family}_count{{model=\"{model}\"}} {}", l.count);
 }
 
 /// Escape a Prometheus label value: backslash, double quote, newline.
@@ -251,21 +276,23 @@ mod tests {
         m.record("m", "classify", 429, Duration::from_micros(10));
         m.record("m", "classify", 404, Duration::from_micros(10));
         m.record("m", "classify", 500, Duration::from_micros(10));
+        m.record("m", "classify", 503, Duration::from_micros(10));
         m.record("-", "healthz", 200, Duration::from_micros(5));
-        assert_eq!(m.total_requests(), 6);
+        assert_eq!(m.total_requests(), 7);
         let v = m.to_json();
         let rows = v.as_arr().unwrap();
         assert_eq!(rows.len(), 2); // BTreeMap: ("-","healthz") sorts first
         let row = &rows[1];
         assert_eq!(row.get("model").unwrap().as_str(), Some("m"));
         assert_eq!(row.get("endpoint").unwrap().as_str(), Some("classify"));
-        assert_eq!(row.get("requests").unwrap().as_usize(), Some(5));
+        assert_eq!(row.get("requests").unwrap().as_usize(), Some(6));
         assert_eq!(row.get("ok").unwrap().as_usize(), Some(2));
         assert_eq!(row.get("rejected").unwrap().as_usize(), Some(1));
+        assert_eq!(row.get("unavailable").unwrap().as_usize(), Some(1));
         assert_eq!(row.get("client_errors").unwrap().as_usize(), Some(1));
         assert_eq!(row.get("server_errors").unwrap().as_usize(), Some(1));
         let lat = row.get("latency").unwrap();
-        assert_eq!(lat.get("count").unwrap().as_usize(), Some(5));
+        assert_eq!(lat.get("count").unwrap().as_usize(), Some(6));
         assert!(lat.get("p95_us").unwrap().as_f64().unwrap() >= 100.0);
     }
 
@@ -293,14 +320,22 @@ mod tests {
         let m = ServeMetrics::new();
         m.record("m", "infer", 200, Duration::from_micros(100));
         m.record("m", "infer", 429, Duration::from_micros(10));
+        m.record("m", "infer", 503, Duration::from_micros(10));
         let text = m.to_prometheus();
         assert!(text.contains("# TYPE pefsl_requests_total counter"), "{text}");
         assert!(text.contains("# TYPE pefsl_responses_total counter"), "{text}");
-        assert!(text.contains("# TYPE pefsl_request_latency_seconds summary"), "{text}");
-        assert!(text.contains("pefsl_requests_total{model=\"m\",endpoint=\"infer\"} 2"), "{text}");
+        assert!(text.contains("# TYPE pefsl_request_latency_seconds histogram"), "{text}");
+        assert!(text.contains("pefsl_requests_total{model=\"m\",endpoint=\"infer\"} 3"), "{text}");
         let rej = "pefsl_responses_total{model=\"m\",endpoint=\"infer\",outcome=\"rejected\"} 1";
         assert!(text.contains(rej), "{text}");
-        let cnt = "pefsl_request_latency_seconds_count{model=\"m\",endpoint=\"infer\"} 2";
+        let unavail = "pefsl_responses_total{model=\"m\",endpoint=\"infer\",outcome=\"unavailable\"} 1";
+        assert!(text.contains(unavail), "{text}");
+        // native histogram family: bucket ladder + +Inf + sum/count
+        assert!(
+            text.contains("pefsl_request_latency_seconds_bucket{model=\"m\",endpoint=\"infer\",le=\"+Inf\"} 3"),
+            "{text}"
+        );
+        let cnt = "pefsl_request_latency_seconds_count{model=\"m\",endpoint=\"infer\"} 3";
         assert!(text.contains(cnt), "{text}");
         // every sample line belongs to a pefsl_* family
         for line in text.lines() {
@@ -309,20 +344,20 @@ mod tests {
     }
 
     #[test]
-    fn label_values_are_escaped() {
-        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    fn cumulative_rows_export_counters_and_buckets() {
+        let m = ServeMetrics::new();
+        m.record("m", "infer", 200, Duration::from_micros(100));
+        m.record("m", "infer", 503, Duration::from_micros(10));
+        let rows = m.cumulative_rows();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!((r.requests, r.ok, r.unavailable), (2, 1, 1));
+        assert_eq!(r.hist_counts.iter().sum::<u64>(), 2);
+        assert_eq!(r.hist_counts.len(), crate::telemetry::hist::BUCKETS);
     }
 
     #[test]
-    fn summary_helper_emits_quantiles_sum_count() {
-        let mut stats = LatencyStats::new(16);
-        stats.record_us(1000.0);
-        stats.record_us(3000.0);
-        let mut out = String::new();
-        write_summary(&mut out, "pefsl_queue_wait_seconds", "m", &stats.snapshot());
-        assert!(out.contains("pefsl_queue_wait_seconds{model=\"m\",quantile=\"0.5\"}"), "{out}");
-        assert!(out.contains("pefsl_queue_wait_seconds{model=\"m\",quantile=\"0.95\"}"), "{out}");
-        assert!(out.contains("pefsl_queue_wait_seconds_count{model=\"m\"} 2"), "{out}");
-        assert!(out.contains("pefsl_queue_wait_seconds_sum{model=\"m\"} 0.004"), "{out}");
+    fn label_values_are_escaped() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
     }
 }

@@ -34,7 +34,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::engine::{Engine, InferRequest, InferResponse};
-use crate::metrics::{LatencySnapshot, LatencyStats};
+use crate::metrics::LatencySnapshot;
+use crate::telemetry::LatencyHistogram;
 use crate::trace::EventJournal;
 
 use super::admission::Admission;
@@ -124,7 +125,7 @@ pub struct ModelQueue {
     gate: Arc<Admission>,
     state: Mutex<QState>,
     cv: Condvar,
-    queue_wait: Mutex<LatencyStats>,
+    queue_wait: Mutex<LatencyHistogram>,
     batches: AtomicU64,
     batched_images: AtomicU64,
     expired: AtomicU64,
@@ -139,7 +140,7 @@ impl ModelQueue {
             gate,
             state: Mutex::new(QState { heap: BinaryHeap::new(), closed: false }),
             cv: Condvar::new(),
-            queue_wait: Mutex::new(LatencyStats::new(512)),
+            queue_wait: Mutex::new(LatencyHistogram::new()),
             batches: AtomicU64::new(0),
             batched_images: AtomicU64::new(0),
             expired: AtomicU64::new(0),
@@ -313,18 +314,26 @@ impl ModelQueue {
         self.state.lock().unwrap_or_else(PoisonError::into_inner).heap.len()
     }
 
-    /// Queue-wait quantiles over the recent window.
+    /// Queue-wait quantiles — a constant-work walk of the histogram's
+    /// fixed bucket array.
     pub fn queue_wait_snapshot(&self) -> LatencySnapshot {
         self.queue_wait.lock().unwrap_or_else(PoisonError::into_inner).snapshot()
+    }
+
+    /// Cumulative queue-wait histogram for Prometheus `_bucket` export.
+    pub fn queue_wait_hist(&self) -> LatencyHistogram {
+        self.queue_wait.lock().unwrap_or_else(PoisonError::into_inner).clone()
     }
 
     /// Suggested client back-off for work shed from this queue: the
     /// admission gate's p95-service estimate widened by the observed p95
     /// queue wait — a queue that drains slowly needs a longer back-off
     /// than service time alone suggests.  Clamped to the gate's [1, 30] s
-    /// range.
+    /// range.  Runs on every shed 429, so the p95 comes from the
+    /// histogram's O(buckets) walk, not a sort of the sample window.
     pub fn retry_after_s(&self) -> u64 {
-        let wait_s = (self.queue_wait_snapshot().p95_us / 1e6).ceil() as u64;
+        let p95_us = self.queue_wait.lock().unwrap_or_else(PoisonError::into_inner).p95_us();
+        let wait_s = (p95_us / 1e6).ceil() as u64;
         self.gate.retry_after_s().max(wait_s).min(30)
     }
 

@@ -1,0 +1,281 @@
+//! Anomaly-triggered flight recorder.
+//!
+//! When the self-healing machinery fires — a breaker opens, admission
+//! saturates, an SLO burn alert starts, or the recent p99 spikes against
+//! the trailing window — the one thing an operator wants the next
+//! morning is *everything the server knew at that moment*.  The flight
+//! recorder captures it: the last N traces, the journal tail, the full
+//! time-series window, and the instantaneous metrics snapshot, bundled
+//! into one self-contained JSON dump.  Dumps land in a bounded on-disk
+//! ring under `--flight-dir` (atomic tmp+rename writes, oldest pruned)
+//! and the newest is always available at `GET /debug/flight` even with
+//! no directory configured.
+//!
+//! Triggers are deduplicated per kind with a cooldown so a flapping
+//! breaker produces one dump per episode, not one per flap.  Like the
+//! rest of the telemetry layer, the recorder is clocked by explicit
+//! second stamps — tests drive a synthetic timeline.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::json::{self, Value};
+use crate::trace::journal::Event;
+
+/// Schema tag stamped into every dump.
+pub const FLIGHT_SCHEMA: &str = "pefsl.flight.v1";
+
+/// Journal event kinds that trigger a dump when they appear.
+pub const TRIGGER_KINDS: &[&str] = &["breaker_open", "admission_saturated", "slo_burn"];
+
+/// Synthetic trigger kind for the p99-spike detector (not a journal kind).
+pub const TRIGGER_P99_SPIKE: &str = "p99_spike";
+
+/// Why a dump fired.
+#[derive(Clone, Debug)]
+pub struct FlightTrigger {
+    /// Trigger kind — one of [`TRIGGER_KINDS`] or [`TRIGGER_P99_SPIKE`].
+    pub kind: String,
+    /// Model the trigger concerns (`"-"` for server-wide).
+    pub model: String,
+    /// Human-readable evidence (journal detail line or spike numbers).
+    pub detail: String,
+}
+
+/// Filter a journal increment down to the events that warrant a dump.
+pub fn journal_triggers(events: &[Event]) -> Vec<FlightTrigger> {
+    events
+        .iter()
+        .filter(|e| TRIGGER_KINDS.contains(&e.kind))
+        .map(|e| FlightTrigger { kind: e.kind.to_string(), model: e.model.clone(), detail: e.detail.clone() })
+        .collect()
+}
+
+/// Flight recorder knobs.
+#[derive(Clone, Debug)]
+pub struct FlightConfig {
+    /// Where dumps are persisted; `None` keeps only the in-memory latest.
+    pub dir: Option<PathBuf>,
+    /// On-disk ring size — newest `keep` dumps survive.
+    pub keep: usize,
+    /// Per-trigger-kind refractory period, seconds.
+    pub cooldown_s: u64,
+}
+
+impl Default for FlightConfig {
+    fn default() -> FlightConfig {
+        FlightConfig { dir: None, keep: 16, cooldown_s: 30 }
+    }
+}
+
+/// Bounded dump writer with per-kind cooldowns.
+pub struct FlightRecorder {
+    cfg: FlightConfig,
+    /// kind → last dump second.
+    last_fire: BTreeMap<String, u64>,
+    latest: Option<Value>,
+    dumps: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cfg: FlightConfig) -> FlightRecorder {
+        FlightRecorder { cfg, last_fire: BTreeMap::new(), latest: None, dumps: 0 }
+    }
+
+    /// Total dumps taken since start (cooldown-suppressed triggers don't
+    /// count).
+    pub fn dumps(&self) -> u64 {
+        self.dumps
+    }
+
+    /// Newest dump, if any — the body of `GET /debug/flight`.
+    pub fn latest_json(&self) -> Option<&Value> {
+        self.latest.as_ref()
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.cfg.dir.as_deref()
+    }
+
+    /// True while `kind` is inside its refractory period at `t_s` — a
+    /// [`FlightRecorder::maybe_dump`] now would be suppressed.  Callers
+    /// that build the capture under other locks use this to skip the
+    /// (potentially expensive) capture without holding the recorder's
+    /// lock across it.
+    pub fn in_cooldown(&self, t_s: u64, kind: &str) -> bool {
+        self.last_fire
+            .get(kind)
+            .is_some_and(|&last| t_s.saturating_sub(last) < self.cfg.cooldown_s)
+    }
+
+    /// Take a dump for `trigger` unless its kind is in cooldown.
+    /// `capture` runs only when the dump actually fires and must return
+    /// the evidence object (traces / journal tail / series window /
+    /// metrics snapshot — the recorder doesn't care, it just seals it).
+    /// Returns the on-disk path when a directory is configured.
+    pub fn maybe_dump(
+        &mut self,
+        t_s: u64,
+        trigger: &FlightTrigger,
+        capture: impl FnOnce() -> Value,
+    ) -> Option<Option<PathBuf>> {
+        if let Some(&last) = self.last_fire.get(&trigger.kind) {
+            if t_s.saturating_sub(last) < self.cfg.cooldown_s {
+                return None;
+            }
+        }
+        self.last_fire.insert(trigger.kind.clone(), t_s);
+        self.dumps += 1;
+        let mut dump = Value::obj();
+        let mut trig = Value::obj();
+        trig.set("kind", trigger.kind.as_str())
+            .set("model", trigger.model.as_str())
+            .set("detail", trigger.detail.as_str())
+            .set("t_s", t_s);
+        dump.set("schema", FLIGHT_SCHEMA).set("dump_seq", self.dumps).set("trigger", trig).set("captured", capture());
+        let path = self.persist(t_s, &trigger.kind, &dump);
+        self.latest = Some(dump);
+        Some(path)
+    }
+
+    /// Atomic write (tmp + rename) into the dump directory, then prune
+    /// the ring to `keep` newest.  I/O failures are swallowed — losing a
+    /// dump must never take down telemetry, and the in-memory latest
+    /// still serves `/debug/flight`.
+    fn persist(&mut self, t_s: u64, kind: &str, dump: &Value) -> Option<PathBuf> {
+        let dir = self.cfg.dir.clone()?;
+        if fs::create_dir_all(&dir).is_err() {
+            return None;
+        }
+        // t_s first so lexicographic order is chronological; dump_seq
+        // disambiguates multiple dumps in one second
+        let name = format!("flight-{t_s:012}-{:06}-{kind}.json", self.dumps);
+        let tmp = dir.join(format!(".{name}.tmp"));
+        let path = dir.join(&name);
+        let body = json::to_string_pretty(dump);
+        if fs::write(&tmp, body).is_err() {
+            return None;
+        }
+        if fs::rename(&tmp, &path).is_err() {
+            let _ = fs::remove_file(&tmp);
+            return None;
+        }
+        self.prune(&dir);
+        Some(path)
+    }
+
+    fn prune(&self, dir: &Path) {
+        let Ok(entries) = fs::read_dir(dir) else { return };
+        let mut dumps: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("flight-") && n.ends_with(".json"))
+            })
+            .collect();
+        if dumps.len() <= self.cfg.keep {
+            return;
+        }
+        dumps.sort();
+        let excess = dumps.len() - self.cfg.keep;
+        for old in &dumps[..excess] {
+            let _ = fs::remove_file(old);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pefsl_flight_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn trigger(kind: &str) -> FlightTrigger {
+        FlightTrigger { kind: kind.into(), model: "m".into(), detail: "test".into() }
+    }
+
+    fn capture() -> Value {
+        let mut v = Value::obj();
+        v.set("traces", Vec::<Value>::new());
+        v
+    }
+
+    #[test]
+    fn dump_fires_and_serves_latest() {
+        let mut fr = FlightRecorder::new(FlightConfig::default());
+        assert!(fr.latest_json().is_none());
+        let res = fr.maybe_dump(100, &trigger("breaker_open"), capture);
+        assert!(matches!(res, Some(None))); // fired, no dir configured
+        assert_eq!(fr.dumps(), 1);
+        let latest = fr.latest_json().unwrap();
+        assert_eq!(latest.get("schema").unwrap().as_str(), Some(FLIGHT_SCHEMA));
+        assert_eq!(latest.path(&["trigger", "kind"]).unwrap().as_str(), Some("breaker_open"));
+        assert!(latest.get("captured").is_some());
+    }
+
+    #[test]
+    fn cooldown_suppresses_per_kind() {
+        let mut fr =
+            FlightRecorder::new(FlightConfig { cooldown_s: 30, ..FlightConfig::default() });
+        assert!(fr.maybe_dump(100, &trigger("breaker_open"), capture).is_some());
+        // same kind inside cooldown: suppressed, capture never runs
+        assert!(fr
+            .maybe_dump(110, &trigger("breaker_open"), || panic!("must not capture"))
+            .is_none());
+        // different kind: its own cooldown, fires
+        assert!(fr.maybe_dump(110, &trigger("slo_burn"), capture).is_some());
+        // same kind after cooldown: fires again
+        assert!(fr.maybe_dump(130, &trigger("breaker_open"), capture).is_some());
+        assert_eq!(fr.dumps(), 3);
+    }
+
+    #[test]
+    fn persists_atomically_and_prunes_ring() {
+        let dir = tmpdir("ring");
+        let mut fr = FlightRecorder::new(FlightConfig {
+            dir: Some(dir.clone()),
+            keep: 3,
+            cooldown_s: 0,
+        });
+        let mut paths = Vec::new();
+        for t in 0..6 {
+            let p = fr.maybe_dump(t, &trigger("breaker_open"), capture).unwrap().unwrap();
+            paths.push(p);
+        }
+        // only the newest `keep` survive, no tmp litter
+        let names: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names.len(), 3, "{names:?}");
+        assert!(names.iter().all(|n| n.starts_with("flight-") && n.ends_with(".json")));
+        assert!(!paths[5].as_os_str().is_empty());
+        // newest file parses back to a complete dump
+        let body = fs::read_to_string(&paths[5]).unwrap();
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some(FLIGHT_SCHEMA));
+        assert_eq!(v.path(&["trigger", "t_s"]).unwrap().as_usize(), Some(5));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_triggers_filters_kinds() {
+        let j = crate::trace::journal::EventJournal::new(16);
+        j.record("deploy", "m", "m@v1");
+        j.record("breaker_open", "m", "3 consecutive self-check failures");
+        j.record("session_mint", "m", "tok");
+        j.record("admission_saturated", "-", "depth 64");
+        let trig = journal_triggers(&j.since(0));
+        assert_eq!(trig.len(), 2);
+        assert_eq!(trig[0].kind, "breaker_open");
+        assert_eq!(trig[1].kind, "admission_saturated");
+        assert!(trig[0].detail.contains("self-check"));
+    }
+}

@@ -1,0 +1,507 @@
+//! Log-bucketed latency histogram: constant-work, mergeable quantiles.
+//!
+//! [`crate::metrics::LatencyStats`] keeps raw samples and **sorts a clone
+//! of the whole window on every snapshot** — O(n log n) per `/metrics`
+//! scrape and per `Retry-After` derivation on the 429 path.  This
+//! histogram replaces that with a fixed array of logarithmically spaced
+//! buckets: recording is O(1), every quantile read walks the fixed bucket
+//! array (O([`BUCKETS`]), independent of how many samples were recorded),
+//! and two histograms merge bucket-wise — which is what lets the
+//! time-series engine diff cumulative scrapes into per-second windows.
+//!
+//! Resolution: [`SUB_OCTAVE`] buckets per doubling.  A quantile estimate
+//! is the geometric midpoint of its bucket, so the worst-case relative
+//! error against the exact sorted-sample quantile is
+//! `2^(1/(2·SUB_OCTAVE)) − 1` ≈ 4.4% — comfortably inside the ≤10%
+//! parity budget the serving metrics promise (`count`, `mean_us` and
+//! `max_us` stay exact; only the interior quantiles are bucketed).
+//! The covered range is 1 µs … ~2 minutes; values outside clamp into the
+//! first/last bucket and the exact observed min/max bound the estimates.
+
+use std::time::Duration;
+
+use crate::metrics::LatencySnapshot;
+
+/// Buckets per doubling of latency (resolution knob).
+pub const SUB_OCTAVE: usize = 8;
+/// Doublings covered above [`MIN_US`]: 1 µs · 2^27 ≈ 134 s.
+const OCTAVES: usize = 27;
+/// Total fixed bucket count — the constant in "constant-work scrape".
+pub const BUCKETS: usize = OCTAVES * SUB_OCTAVE;
+/// Lower edge of bucket 0, µs.
+const MIN_US: f64 = 1.0;
+
+/// Lower bound of bucket `i`, µs.
+#[inline]
+pub fn bucket_lo_us(i: usize) -> f64 {
+    MIN_US * 2f64.powf(i as f64 / SUB_OCTAVE as f64)
+}
+
+/// Upper bound of bucket `i`, µs.
+#[inline]
+pub fn bucket_hi_us(i: usize) -> f64 {
+    bucket_lo_us(i + 1)
+}
+
+/// The bucket index a value lands in (clamped to the covered range).
+#[inline]
+pub fn bucket_index(v_us: f64) -> usize {
+    if !(v_us > MIN_US) {
+        return 0;
+    }
+    let idx = ((v_us / MIN_US).log2() * SUB_OCTAVE as f64).floor() as usize;
+    idx.min(BUCKETS - 1)
+}
+
+/// Representative value reported for a quantile landing in bucket `i`:
+/// the geometric midpoint of the bucket's bounds.
+#[inline]
+fn bucket_mid_us(i: usize) -> f64 {
+    (bucket_lo_us(i) * bucket_hi_us(i)).sqrt()
+}
+
+/// Streaming latency recorder over fixed log-spaced buckets.  Drop-in for
+/// the quantile surface of [`crate::metrics::LatencyStats`]: `record`,
+/// `record_us`, `count`, `mean_us`, `p50/p95/p99_us`, and a `snapshot()`
+/// producing the exact same [`LatencySnapshot`] row shape — but the
+/// snapshot is a bucket walk, never a clone-and-sort, and the recorder is
+/// cumulative (no sample window to overwrite).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let us = if us.is_finite() && us >= 0.0 { us } else { 0.0 };
+        self.counts[bucket_index(us)] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum_us / self.total as f64 }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.max_us }
+    }
+
+    /// Quantile estimate, q in [0,1].  Uses the same rank convention as
+    /// `LatencyStats::quantile_us` (`round((n-1)·q)`, 0-indexed) so the
+    /// two surfaces agree to within one bucket's relative error.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((self.total - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64 + 1;
+        let mut cum = 0u64;
+        for (i, &n) in self.counts.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return bucket_mid_us(i).clamp(self.min_us, self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        self.quantile_us(0.95)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.quantile_us(0.99)
+    }
+
+    /// Every reported quantile from **one** walk of the fixed bucket
+    /// array.  Work is O([`BUCKETS`]) no matter how many samples were
+    /// recorded — this is what `/metrics` scrapes and `Retry-After`
+    /// derivations call.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        if self.total == 0 {
+            return LatencySnapshot::default();
+        }
+        let rank = |q: f64| ((self.total - 1) as f64 * q).round() as u64 + 1;
+        let (r50, r95, r99) = (rank(0.50), rank(0.95), rank(0.99));
+        let (mut p50, mut p95, mut p99) = (None, None, None);
+        let mut cum = 0u64;
+        for (i, &n) in self.counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            let mid = || bucket_mid_us(i).clamp(self.min_us, self.max_us);
+            if p50.is_none() && cum >= r50 {
+                p50 = Some(mid());
+            }
+            if p95.is_none() && cum >= r95 {
+                p95 = Some(mid());
+            }
+            if p99.is_none() && cum >= r99 {
+                p99 = Some(mid());
+                break;
+            }
+        }
+        LatencySnapshot {
+            count: self.total,
+            mean_us: self.mean_us(),
+            p50_us: p50.unwrap_or(self.max_us),
+            p95_us: p95.unwrap_or(self.max_us),
+            p99_us: p99.unwrap_or(self.max_us),
+            max_us: self.max_us,
+        }
+    }
+
+    /// Bucket-wise merge (the mergeability that makes cumulative scrapes
+    /// diffable into windows).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Cumulative per-bucket counts (length [`BUCKETS`]).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Samples at or below `threshold_us`, to bucket resolution: buckets
+    /// whose representative midpoint is ≤ the threshold count as "good".
+    /// This is what turns a `p95 < 5ms` SLO into per-bucket good/bad
+    /// event counts.
+    pub fn count_le_us(&self, threshold_us: f64) -> u64 {
+        count_le_us(&self.counts, threshold_us)
+    }
+
+    /// Sparse delta against an earlier cumulative scrape of the same
+    /// histogram: `(bucket, new_samples)` pairs.  `prev` must be a
+    /// previous [`LatencyHistogram::counts`] copy (or empty for "since
+    /// the beginning").  Counters are monotone, so the subtraction is
+    /// saturating only defensively.
+    pub fn delta(&self, prev: &[u64]) -> Vec<(u16, u32)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &n)| {
+                let before = prev.get(i).copied().unwrap_or(0);
+                let d = n.saturating_sub(before);
+                (d > 0).then_some((i as u16, d.min(u32::MAX as u64) as u32))
+            })
+            .collect()
+    }
+}
+
+/// Samples at or below `threshold_us` in a dense bucket-count array.
+pub fn count_le_us(counts: &[u64], threshold_us: f64) -> u64 {
+    let mut good = 0;
+    for (i, &n) in counts.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        if bucket_mid_us(i) <= threshold_us {
+            good += n;
+        }
+    }
+    good
+}
+
+/// Samples at or below `threshold_us` in a sparse `(bucket, count)` delta
+/// — the per-tick form the SLO engine scores without densifying.
+pub fn count_le_sparse(sparse: &[(u16, u32)], threshold_us: f64) -> u64 {
+    sparse
+        .iter()
+        .filter(|&&(i, _)| bucket_mid_us(i as usize) <= threshold_us)
+        .map(|&(_, n)| u64::from(n))
+        .sum()
+}
+
+/// Quantile over a dense bucket-count array (windowed views summed from
+/// sparse per-tick deltas).  Returns the bucket midpoint — no exact
+/// min/max is available for a window, so estimates are unclamped.
+pub fn quantile_from_counts(counts: &[u64], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = ((total - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64 + 1;
+    let mut cum = 0u64;
+    for (i, &n) in counts.iter().enumerate() {
+        cum += n;
+        if cum >= rank {
+            return bucket_mid_us(i);
+        }
+    }
+    bucket_mid_us(BUCKETS - 1)
+}
+
+/// Accumulate a sparse `(bucket, count)` delta into a dense window array.
+pub fn add_sparse(dense: &mut [u64], sparse: &[(u16, u32)]) {
+    for &(i, n) in sparse {
+        if let Some(slot) = dense.get_mut(i as usize) {
+            *slot += u64::from(n);
+        }
+    }
+}
+
+/// Append Prometheus `_bucket`/`_sum`/`_count` samples for one histogram
+/// under `family`, with an extra label set prefix (e.g.
+/// `model="m",endpoint="infer"`; pass `""` for none).  To keep the text
+/// exposition bounded, sub-octave buckets are merged to per-octave `le`
+/// boundaries (1 µs · 2^k, rendered in seconds) up to the highest
+/// non-empty octave, then `+Inf`.  Counts are cumulative as the format
+/// requires.
+pub fn write_prometheus_buckets(out: &mut String, family: &str, labels: &str, h: &LatencyHistogram) {
+    use std::fmt::Write as _;
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cum = 0u64;
+    let mut top = 0usize; // highest non-empty octave (exclusive)
+    for (i, &n) in h.counts().iter().enumerate() {
+        if n > 0 {
+            top = i / SUB_OCTAVE + 1;
+        }
+    }
+    for octave in 0..top {
+        for i in octave * SUB_OCTAVE..(octave + 1) * SUB_OCTAVE {
+            cum += h.counts()[i];
+        }
+        let le_s = bucket_lo_us((octave + 1) * SUB_OCTAVE) / 1e6;
+        let _ = writeln!(out, "{family}_bucket{{{labels}{sep}le=\"{le_s}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{family}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{family}_sum{{{labels}}} {}", h.mean_us() * h.count() as f64 / 1e6);
+    let _ = writeln!(out, "{family}_count{{{labels}}} {}", h.count());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::LatencyStats;
+    use crate::util::Prng;
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p95_us(), 0.0);
+        assert_eq!(h.snapshot(), LatencySnapshot::default());
+    }
+
+    #[test]
+    fn exact_fields_stay_exact() {
+        let mut h = LatencyHistogram::new();
+        for us in [100.0, 300.0, 500.0] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_us() - 300.0).abs() < 1e-9);
+        assert_eq!(h.snapshot().max_us, 500.0);
+        assert_eq!(h.snapshot().count, 3);
+    }
+
+    #[test]
+    fn bucket_index_covers_range() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(0.5), 0);
+        assert_eq!(bucket_index(1.0), 0);
+        assert_eq!(bucket_index(f64::NAN.max(0.0)), 0);
+        assert_eq!(bucket_index(1e12), BUCKETS - 1); // overflow clamps
+        // boundaries are monotone and tile
+        for i in 0..BUCKETS - 1 {
+            assert!(bucket_hi_us(i) > bucket_lo_us(i));
+            assert!((bucket_hi_us(i) - bucket_lo_us(i + 1)).abs() < 1e-9 * bucket_hi_us(i));
+        }
+    }
+
+    /// Acceptance: bucketed quantiles match the sort-based
+    /// `LatencySnapshot` within one bucket's relative error (≤10%) on
+    /// randomized inputs spanning the whole covered range.
+    #[test]
+    fn randomized_parity_with_sorted_quantiles() {
+        let mut rng = Prng::new(0x7e1e);
+        for trial in 0..20 {
+            let n = 50 + (trial * 97) % 2000;
+            let mut stats = LatencyStats::new(n + 1); // no window overwrite
+            let mut hist = LatencyHistogram::new();
+            for _ in 0..n {
+                // log-uniform in [1 µs, 10 s]
+                let us = 1.0 * 10f64.powf(rng.f32() as f64 * 7.0);
+                stats.record_us(us);
+                hist.record_us(us);
+            }
+            let want = stats.snapshot();
+            let got = hist.snapshot();
+            assert_eq!(got.count, want.count);
+            assert!((got.mean_us - want.mean_us).abs() < 1e-6 * want.mean_us);
+            assert_eq!(got.max_us, want.max_us);
+            for (g, w, q) in [
+                (got.p50_us, want.p50_us, "p50"),
+                (got.p95_us, want.p95_us, "p95"),
+                (got.p99_us, want.p99_us, "p99"),
+            ] {
+                let rel = (g - w).abs() / w.max(1e-12);
+                assert!(rel <= 0.10, "trial {trial} {q}: hist {g} vs sorted {w} ({rel:.3} rel)");
+            }
+        }
+    }
+
+    /// Satellite: the scrape is O(BUCKETS), not O(samples).  Structural:
+    /// the bucket array never grows with sample count.  Behavioral: a
+    /// snapshot over a million samples beats the clone-and-sort snapshot
+    /// of the same data (which is what the serve metrics used to do on
+    /// every scrape and 429).
+    #[test]
+    fn snapshot_cost_is_constant_in_sample_count() {
+        const N: usize = 1_000_000;
+        let mut hist = LatencyHistogram::new();
+        let mut stats = LatencyStats::new(N);
+        let mut rng = Prng::new(42);
+        for _ in 0..N {
+            let us = 1.0 + rng.f32() as f64 * 1e6;
+            hist.record_us(us);
+            stats.record_us(us);
+        }
+        // structural: storage is the fixed array regardless of N
+        assert_eq!(hist.counts().len(), BUCKETS);
+        // behavioral: walking BUCKETS beats sorting N samples
+        let t0 = std::time::Instant::now();
+        let hs = hist.snapshot();
+        let hist_cost = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let ss = stats.snapshot();
+        let sort_cost = t1.elapsed();
+        assert_eq!(hs.count, ss.count);
+        assert!(
+            hist_cost < sort_cost,
+            "O(buckets) snapshot ({hist_cost:?}) should beat clone+sort of {N} ({sort_cost:?})"
+        );
+    }
+
+    #[test]
+    fn merge_is_bucketwise_and_exact_fields_combine() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for us in [10.0, 20.0, 40.0] {
+            a.record_us(us);
+            all.record_us(us);
+        }
+        for us in [1000.0, 2000.0] {
+            b.record_us(us);
+            all.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.counts(), all.counts());
+        assert_eq!(a.snapshot(), all.snapshot());
+    }
+
+    #[test]
+    fn delta_is_sparse_and_reconstructs() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(5.0);
+        h.record_us(5.5);
+        let before = h.counts().to_vec();
+        h.record_us(5.0);
+        h.record_us(5000.0);
+        let d = h.delta(&before);
+        assert_eq!(d.iter().map(|&(_, n)| u64::from(n)).sum::<u64>(), 2);
+        let mut dense = vec![0u64; BUCKETS];
+        add_sparse(&mut dense, &d);
+        // the delta window's max is the newest sample, to bucket resolution
+        let top = quantile_from_counts(&dense, 1.0);
+        assert!((top - 5000.0).abs() / 5000.0 <= 0.10, "window max {top}");
+        // a full delta against an empty baseline reproduces the counts
+        let full = h.delta(&[]);
+        let mut dense2 = vec![0u64; BUCKETS];
+        add_sparse(&mut dense2, &full);
+        assert_eq!(dense2, h.counts());
+    }
+
+    #[test]
+    fn count_le_matches_threshold_semantics() {
+        let mut h = LatencyHistogram::new();
+        for us in [100.0, 200.0, 50_000.0] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count_le_us(5_000.0), 2);
+        assert_eq!(h.count_le_us(1e9), 3);
+        assert_eq!(h.count_le_us(0.5), 0);
+        // sparse form agrees with the dense form
+        let sparse = h.delta(&[]);
+        assert_eq!(count_le_sparse(&sparse, 5_000.0), 2);
+        assert_eq!(count_le_sparse(&sparse, 1e9), 3);
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative_and_bounded() {
+        let mut h = LatencyHistogram::new();
+        for us in [100.0, 150.0, 90_000.0] {
+            h.record_us(us);
+        }
+        let mut out = String::new();
+        write_prometheus_buckets(&mut out, "pefsl_request_latency_seconds", "model=\"m\"", &h);
+        assert!(out.contains("pefsl_request_latency_seconds_bucket{model=\"m\",le=\"+Inf\"} 3"));
+        assert!(out.contains("pefsl_request_latency_seconds_count{model=\"m\"} 3"));
+        // cumulative counts never decrease down the le ladder
+        let mut last = 0u64;
+        for line in out.lines().filter(|l| l.contains("_bucket{")) {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= last, "{out}");
+            last = n;
+        }
+        // bounded: far fewer lines than BUCKETS
+        assert!(out.lines().count() < 40, "{}", out.lines().count());
+    }
+
+    #[test]
+    fn quantile_rank_convention_matches_latency_stats() {
+        // two samples, p50: LatencyStats picks round(0.5)=idx 1 → the
+        // larger sample; the histogram must land in the same bucket
+        let mut stats = LatencyStats::new(8);
+        let mut hist = LatencyHistogram::new();
+        for us in [1.0, 1000.0] {
+            stats.record_us(us);
+            hist.record_us(us);
+        }
+        let rel = (hist.p50_us() - stats.p50_us()).abs() / stats.p50_us();
+        assert!(rel <= 0.10, "hist {} vs stats {}", hist.p50_us(), stats.p50_us());
+    }
+}

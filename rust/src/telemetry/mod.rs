@@ -1,0 +1,32 @@
+//! `pefsl::telemetry` — the time dimension of the serving stack.
+//!
+//! PRs 6–9 gave the server instantaneous counters (`/metrics`), per-request
+//! traces, an operational journal, and self-healing (breakers, rollbacks).
+//! This module adds what none of those can answer: *how the numbers move* —
+//! and captures the evidence automatically when they move the wrong way.
+//!
+//! - [`hist`] — log-bucketed latency histograms: O(1) record, constant-work
+//!   mergeable quantiles, the same [`LatencySnapshot`](crate::metrics::LatencySnapshot)
+//!   surface as the sort-based recorder they replace, plus native Prometheus
+//!   `_bucket` families.
+//! - [`series`] — a per-second ring (default 15 min) over every serve
+//!   counter, fed by a 1 Hz sampler that diffs the cumulative atomics.
+//! - [`slo`] — declared objectives (`--slo 'infer:p95<5ms,avail>99.9'`)
+//!   scored per second into error-budget burn rates with multiwindow
+//!   alerting; alerts flip `/healthz` to `degraded` and are journaled.
+//! - [`flight`] — anomaly-triggered black-box dumps (breaker open,
+//!   admission saturation, SLO burn, p99 spike): last traces + journal tail
+//!   + the series window, atomically persisted in a bounded on-disk ring.
+//!
+//! Everything is dependency-free and clocked by explicit second stamps, so
+//! the whole layer unit-tests on synthetic timelines without sleeping.
+
+pub mod flight;
+pub mod hist;
+pub mod series;
+pub mod slo;
+
+pub use flight::{FlightConfig, FlightRecorder, FlightTrigger};
+pub use hist::LatencyHistogram;
+pub use series::{ModelTick, RowTick, SeriesRing, Tick};
+pub use slo::{BurnConfig, SloEngine, SloSpec};

@@ -1,0 +1,484 @@
+//! Per-second time-series ring over the serve counters.
+//!
+//! The serving layer keeps *cumulative* counters (cheap, lock-light); the
+//! telemetry collector samples them once a second, diffs against the
+//! previous sample, and pushes the delta here as a [`Tick`].  The ring
+//! retains a bounded window (default 15 min) and answers the questions
+//! the instantaneous counters cannot: "requests per second over the last
+//! minute", "p99 over the last 60 s vs the trailing window" (the flight
+//! recorder's spike trigger), and the sparkline series `pefsl top` draws.
+//!
+//! Everything is driven by an explicit second-stamp `t_s` — there is no
+//! internal clock — so unit tests run on a synthetic timeline with no
+//! sleeps, and the serve collector feeds wall-clock seconds.
+
+use std::collections::VecDeque;
+
+use crate::json::Value;
+use crate::telemetry::hist::{self, BUCKETS};
+
+/// One second of per-(model, endpoint) request deltas.
+#[derive(Clone, Debug, Default)]
+pub struct RowTick {
+    pub model: String,
+    pub endpoint: String,
+    pub requests: u64,
+    pub ok: u64,
+    /// 429s (admission / queue-full rejects).
+    pub rejected: u64,
+    /// 503s (breaker open / draining).
+    pub unavailable: u64,
+    pub client_errors: u64,
+    pub server_errors: u64,
+    /// Sparse latency-histogram delta for this second: `(bucket, count)`.
+    pub hist_delta: Vec<(u16, u32)>,
+}
+
+/// One second of per-model queue/worker gauges and counter deltas.
+#[derive(Clone, Debug, Default)]
+pub struct ModelTick {
+    pub model: String,
+    /// Gauge: queue depth at sample time.
+    pub queued: u64,
+    /// Gauge: requests being executed at sample time.
+    pub in_flight: u64,
+    /// Delta: deadline-expired requests this second.
+    pub expired: u64,
+    /// Delta: requests answered from a coalesced batch this second.
+    pub coalesced: u64,
+    /// Delta: worker respawns this second.
+    pub respawns: u64,
+}
+
+/// One sampled second of the whole server.
+#[derive(Clone, Debug, Default)]
+pub struct Tick {
+    /// Second stamp (unix seconds in production, synthetic in tests).
+    pub t_s: u64,
+    pub rows: Vec<RowTick>,
+    pub models: Vec<ModelTick>,
+    /// Gauge: open connections.
+    pub conns: u64,
+    /// Gauge: live few-shot sessions.
+    pub sessions: u64,
+    /// Delta: faults injected this second.
+    pub faults: u64,
+}
+
+/// Bounded window of [`Tick`]s, newest at the back.
+#[derive(Debug)]
+pub struct SeriesRing {
+    window_s: u64,
+    ticks: VecDeque<Tick>,
+}
+
+impl SeriesRing {
+    pub fn new(window_s: u64) -> SeriesRing {
+        SeriesRing { window_s: window_s.max(1), ticks: VecDeque::new() }
+    }
+
+    pub fn window_s(&self) -> u64 {
+        self.window_s
+    }
+
+    pub fn len(&self) -> usize {
+        self.ticks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ticks.is_empty()
+    }
+
+    pub fn latest_t(&self) -> Option<u64> {
+        self.ticks.back().map(|t| t.t_s)
+    }
+
+    pub fn ticks(&self) -> impl Iterator<Item = &Tick> {
+        self.ticks.iter()
+    }
+
+    /// Append a tick and evict everything older than the window.  Ticks
+    /// must arrive in non-decreasing `t_s` order (the collector is a
+    /// single thread); an out-of-order tick is dropped rather than
+    /// corrupting the timeline.
+    pub fn push(&mut self, tick: Tick) {
+        if let Some(last) = self.latest_t() {
+            if tick.t_s < last {
+                return;
+            }
+        }
+        let horizon = tick.t_s.saturating_sub(self.window_s.saturating_sub(1));
+        self.ticks.push_back(tick);
+        while let Some(front) = self.ticks.front() {
+            if front.t_s < horizon {
+                self.ticks.pop_front();
+            } else {
+                break;
+            }
+        }
+        // second safety net: never hold more ticks than window seconds
+        while self.ticks.len() as u64 > self.window_s {
+            self.ticks.pop_front();
+        }
+    }
+
+    /// Sum the latency-histogram deltas over `[from_s, to_s]` into a
+    /// dense bucket array, optionally filtered by model and/or endpoint
+    /// (`None` = all).  Returns `(counts, total)`.
+    pub fn dense_window(
+        &self,
+        model: Option<&str>,
+        endpoint: Option<&str>,
+        from_s: u64,
+        to_s: u64,
+    ) -> (Vec<u64>, u64) {
+        let mut dense = vec![0u64; BUCKETS];
+        for tick in &self.ticks {
+            if tick.t_s < from_s || tick.t_s > to_s {
+                continue;
+            }
+            for row in &tick.rows {
+                if model.is_some_and(|m| m != row.model) {
+                    continue;
+                }
+                if endpoint.is_some_and(|e| e != row.endpoint) {
+                    continue;
+                }
+                hist::add_sparse(&mut dense, &row.hist_delta);
+            }
+        }
+        let total = dense.iter().sum();
+        (dense, total)
+    }
+
+    /// Windowed latency quantile (bucket-resolution) over `[from_s, to_s]`.
+    pub fn quantile_us(
+        &self,
+        model: Option<&str>,
+        endpoint: Option<&str>,
+        from_s: u64,
+        to_s: u64,
+        q: f64,
+    ) -> f64 {
+        let (dense, total) = self.dense_window(model, endpoint, from_s, to_s);
+        if total == 0 { 0.0 } else { hist::quantile_from_counts(&dense, q) }
+    }
+
+    /// Per-second request counts for the trailing `n` seconds ending at
+    /// the newest tick, oldest first; missing seconds read as 0 (the
+    /// collector may skip a second under load).
+    pub fn request_series(&self, model: Option<&str>, endpoint: Option<&str>, n: usize) -> Vec<u64> {
+        let Some(now) = self.latest_t() else {
+            return vec![0; n];
+        };
+        let start = now.saturating_sub(n.saturating_sub(1) as u64);
+        let mut out = vec![0u64; n];
+        for tick in &self.ticks {
+            if tick.t_s < start {
+                continue;
+            }
+            let slot = (tick.t_s - start) as usize;
+            if slot >= n {
+                continue;
+            }
+            for row in &tick.rows {
+                if model.is_some_and(|m| m != row.model) {
+                    continue;
+                }
+                if endpoint.is_some_and(|e| e != row.endpoint) {
+                    continue;
+                }
+                out[slot] += row.requests;
+            }
+        }
+        out
+    }
+
+    /// Distinct `(model, endpoint)` pairs seen anywhere in the window.
+    pub fn row_keys(&self) -> Vec<(String, String)> {
+        let mut keys: Vec<(String, String)> = Vec::new();
+        for tick in &self.ticks {
+            for row in &tick.rows {
+                let k = (row.model.clone(), row.endpoint.clone());
+                if !keys.contains(&k) {
+                    keys.push(k);
+                }
+            }
+        }
+        keys.sort();
+        keys
+    }
+
+    /// The flight recorder's p99-spike trigger: compare p99 over the most
+    /// recent `recent_s` seconds against p99 over the rest of the window.
+    /// Fires only when both sides have at least `min_count` samples and
+    /// the recent p99 exceeds `factor ×` the trailing p99.
+    pub fn p99_spike(&self, recent_s: u64, factor: f64, min_count: u64) -> Option<SpikeInfo> {
+        let now = self.latest_t()?;
+        let split = now.saturating_sub(recent_s.saturating_sub(1));
+        let (recent, recent_n) = self.dense_window(None, None, split, now);
+        if split == 0 {
+            return None;
+        }
+        let (trail, trail_n) = self.dense_window(None, None, 0, split - 1);
+        if recent_n < min_count || trail_n < min_count {
+            return None;
+        }
+        let recent_p99 = hist::quantile_from_counts(&recent, 0.99);
+        let trail_p99 = hist::quantile_from_counts(&trail, 0.99);
+        if trail_p99 > 0.0 && recent_p99 > factor * trail_p99 {
+            Some(SpikeInfo { recent_p99_us: recent_p99, trailing_p99_us: trail_p99 })
+        } else {
+            None
+        }
+    }
+
+    /// Full window as JSON — the flight recorder embeds this so a dump is
+    /// self-contained.  Sparse deltas render as `[[bucket, count], ...]`.
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("window_s", self.window_s);
+        let ticks: Vec<Value> = self
+            .ticks
+            .iter()
+            .map(|tick| {
+                let mut t = Value::obj();
+                t.set("t", tick.t_s)
+                    .set("conns", tick.conns)
+                    .set("sessions", tick.sessions)
+                    .set("faults", tick.faults);
+                let rows: Vec<Value> = tick
+                    .rows
+                    .iter()
+                    .map(|r| {
+                        let mut v = Value::obj();
+                        v.set("model", r.model.as_str())
+                            .set("endpoint", r.endpoint.as_str())
+                            .set("requests", r.requests)
+                            .set("ok", r.ok)
+                            .set("rejected", r.rejected)
+                            .set("unavailable", r.unavailable)
+                            .set("client_errors", r.client_errors)
+                            .set("server_errors", r.server_errors);
+                        let hist: Vec<Value> = r
+                            .hist_delta
+                            .iter()
+                            .map(|&(i, n)| {
+                                Value::Arr(vec![Value::from(i as usize), Value::from(n as u64)])
+                            })
+                            .collect();
+                        v.set("hist", hist);
+                        v
+                    })
+                    .collect();
+                t.set("rows", rows);
+                let models: Vec<Value> = tick
+                    .models
+                    .iter()
+                    .map(|m| {
+                        let mut v = Value::obj();
+                        v.set("model", m.model.as_str())
+                            .set("queued", m.queued)
+                            .set("in_flight", m.in_flight)
+                            .set("expired", m.expired)
+                            .set("coalesced", m.coalesced)
+                            .set("respawns", m.respawns);
+                        v
+                    })
+                    .collect();
+                t.set("models", models);
+                t
+            })
+            .collect();
+        o.set("ticks", ticks);
+        o
+    }
+
+    /// Compact per-row summary for the `/metrics` JSON body — what
+    /// `pefsl top` polls: per (model, endpoint) the last-`n`-seconds
+    /// request series plus windowed p50/p95 over those seconds.
+    pub fn summary_json(&self, n: usize) -> Value {
+        let mut o = Value::obj();
+        o.set("window_s", self.window_s).set("span_s", n);
+        let now = self.latest_t().unwrap_or(0);
+        let from = now.saturating_sub(n.saturating_sub(1) as u64);
+        let rows: Vec<Value> = self
+            .row_keys()
+            .into_iter()
+            .map(|(model, endpoint)| {
+                let mut v = Value::obj();
+                let series = self.request_series(Some(&model), Some(&endpoint), n);
+                let total: u64 = series.iter().sum();
+                v.set("model", model.as_str())
+                    .set("endpoint", endpoint.as_str())
+                    .set("total", total)
+                    .set("rps", total as f64 / n.max(1) as f64)
+                    .set("p50_us", self.quantile_us(Some(&model), Some(&endpoint), from, now, 0.50))
+                    .set("p95_us", self.quantile_us(Some(&model), Some(&endpoint), from, now, 0.95))
+                    .set(
+                        "requests",
+                        series.iter().map(|&x| Value::from(x)).collect::<Vec<_>>(),
+                    );
+                v
+            })
+            .collect();
+        o.set("rows", rows);
+        o
+    }
+}
+
+/// Evidence attached to a p99-spike flight trigger.
+#[derive(Clone, Copy, Debug)]
+pub struct SpikeInfo {
+    pub recent_p99_us: f64,
+    pub trailing_p99_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::hist::LatencyHistogram;
+
+    fn row(model: &str, endpoint: &str, requests: u64, lat_us: f64) -> RowTick {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..requests {
+            h.record_us(lat_us);
+        }
+        RowTick {
+            model: model.into(),
+            endpoint: endpoint.into(),
+            requests,
+            ok: requests,
+            hist_delta: h.delta(&[]),
+            ..RowTick::default()
+        }
+    }
+
+    fn tick(t_s: u64, rows: Vec<RowTick>) -> Tick {
+        Tick { t_s, rows, ..Tick::default() }
+    }
+
+    #[test]
+    fn window_evicts_old_ticks() {
+        let mut s = SeriesRing::new(5);
+        for t in 0..20 {
+            s.push(tick(t, vec![row("m", "infer", 1, 100.0)]));
+        }
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.ticks().next().unwrap().t_s, 15);
+        assert_eq!(s.latest_t(), Some(19));
+    }
+
+    #[test]
+    fn eviction_is_by_time_not_just_count() {
+        let mut s = SeriesRing::new(10);
+        s.push(tick(0, vec![]));
+        s.push(tick(1, vec![]));
+        // a gap: jump to t=100 — both old ticks leave the window
+        s.push(tick(100, vec![]));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.latest_t(), Some(100));
+    }
+
+    #[test]
+    fn out_of_order_tick_is_dropped() {
+        let mut s = SeriesRing::new(10);
+        s.push(tick(5, vec![]));
+        s.push(tick(3, vec![]));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.latest_t(), Some(5));
+    }
+
+    #[test]
+    fn request_series_fills_gaps_with_zero() {
+        let mut s = SeriesRing::new(60);
+        s.push(tick(10, vec![row("m", "infer", 4, 100.0)]));
+        s.push(tick(12, vec![row("m", "infer", 2, 100.0)]));
+        let series = s.request_series(Some("m"), Some("infer"), 4);
+        assert_eq!(series, vec![0, 4, 0, 2]); // seconds 9..=12
+    }
+
+    #[test]
+    fn windowed_quantile_reads_only_the_window() {
+        let mut s = SeriesRing::new(60);
+        s.push(tick(1, vec![row("m", "infer", 100, 100.0)]));
+        s.push(tick(50, vec![row("m", "infer", 100, 50_000.0)]));
+        // whole window mixes both; recent window sees only the slow one
+        let p50_recent = s.quantile_us(Some("m"), Some("infer"), 40, 50, 0.50);
+        assert!((p50_recent - 50_000.0).abs() / 50_000.0 < 0.10, "{p50_recent}");
+        let p50_old = s.quantile_us(Some("m"), Some("infer"), 0, 10, 0.50);
+        assert!((p50_old - 100.0).abs() / 100.0 < 0.10, "{p50_old}");
+    }
+
+    #[test]
+    fn filters_by_model_and_endpoint() {
+        let mut s = SeriesRing::new(60);
+        s.push(tick(1, vec![row("a", "infer", 3, 100.0), row("b", "enroll", 5, 100.0)]));
+        assert_eq!(s.request_series(Some("a"), None, 1), vec![3]);
+        assert_eq!(s.request_series(None, Some("enroll"), 1), vec![5]);
+        assert_eq!(s.request_series(None, None, 1), vec![8]);
+        assert_eq!(s.row_keys().len(), 2);
+    }
+
+    #[test]
+    fn p99_spike_fires_on_regression_only() {
+        let mut s = SeriesRing::new(300);
+        // 100 s of healthy traffic at ~1 ms
+        for t in 0..100 {
+            s.push(tick(t, vec![row("m", "infer", 20, 1_000.0)]));
+        }
+        assert!(s.p99_spike(10, 3.0, 50).is_none(), "healthy traffic must not trigger");
+        // 10 s of 50 ms tail
+        for t in 100..110 {
+            s.push(tick(t, vec![row("m", "infer", 20, 50_000.0)]));
+        }
+        let spike = s.p99_spike(10, 3.0, 50).expect("regression must trigger");
+        assert!(spike.recent_p99_us > 3.0 * spike.trailing_p99_us);
+    }
+
+    #[test]
+    fn p99_spike_needs_minimum_volume() {
+        let mut s = SeriesRing::new(300);
+        for t in 0..50 {
+            s.push(tick(t, vec![row("m", "infer", 1, 1_000.0)]));
+        }
+        s.push(tick(50, vec![row("m", "infer", 1, 90_000.0)]));
+        assert!(s.p99_spike(5, 3.0, 1000).is_none());
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let mut s = SeriesRing::new(60);
+        for t in 0..10 {
+            s.push(tick(t, vec![row("m", "infer", 5, 2_000.0)]));
+        }
+        let j = s.summary_json(10);
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("total").unwrap().as_usize(), Some(50));
+        assert_eq!(rows[0].get("requests").unwrap().as_arr().unwrap().len(), 10);
+        let p95 = rows[0].get("p95_us").unwrap().as_f64().unwrap();
+        assert!((p95 - 2_000.0).abs() / 2_000.0 < 0.10, "{p95}");
+    }
+
+    #[test]
+    fn to_json_window_is_self_contained() {
+        let mut s = SeriesRing::new(60);
+        s.push(Tick {
+            t_s: 7,
+            rows: vec![row("m", "infer", 2, 500.0)],
+            models: vec![ModelTick { model: "m".into(), queued: 3, ..ModelTick::default() }],
+            conns: 4,
+            sessions: 1,
+            faults: 0,
+        });
+        let j = s.to_json();
+        let ticks = j.get("ticks").unwrap().as_arr().unwrap();
+        assert_eq!(ticks.len(), 1);
+        assert_eq!(ticks[0].get("conns").unwrap().as_usize(), Some(4));
+        let models = ticks[0].get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models[0].get("queued").unwrap().as_usize(), Some(3));
+        let hist = ticks[0].get("rows").unwrap().as_arr().unwrap()[0].get("hist").unwrap();
+        assert!(!hist.as_arr().unwrap().is_empty());
+    }
+}

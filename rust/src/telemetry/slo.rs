@@ -1,0 +1,564 @@
+//! SLO objectives, error budgets, and burn-rate alerting.
+//!
+//! Objectives are declared per endpoint — `pefsl serve --slo
+//! 'infer:p95<5ms,avail>99.9'` — and scored against each per-second
+//! telemetry [`Tick`](crate::telemetry::series::Tick).  A latency
+//! objective `p95<5ms` grants an error budget of 5% of requests slower
+//! than 5 ms; an availability objective `avail>99.9` grants 0.1% of
+//! requests answering 5xx.  The engine tracks the **burn rate** — the
+//! fraction of budget consumed divided by the fraction granted — over a
+//! short and a long window (multiwindow burn alerting: the short window
+//! makes alerts fast, the long window makes them stay real).  An alert
+//! fires when *both* windows burn at ≥ the configured rate, recovers
+//! when both drop below it; onset and recovery transitions are returned
+//! so the serving layer can journal them, flip `/healthz` to `degraded`,
+//! and trigger a flight-recorder dump.
+//!
+//! Like the series ring, the engine is driven by explicit second stamps
+//! — tests run on a synthetic timeline with no sleeps.
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::json::Value;
+use crate::telemetry::hist;
+use crate::telemetry::series::Tick;
+
+/// What one objective measures.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ObjectiveKind {
+    /// `pQQ<T`: at most `1−q` of requests may be slower than `threshold_us`.
+    Latency { q: f64, threshold_us: f64 },
+    /// `avail>P`: at most `1−P/100` of requests may answer 5xx.
+    Availability { target_pct: f64 },
+}
+
+/// One declared objective, scoped to an endpoint (across all models).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Objective {
+    pub endpoint: String,
+    pub kind: ObjectiveKind,
+}
+
+impl Objective {
+    /// Display name, e.g. `infer:p95<5ms` or `infer:avail>99.9` — used in
+    /// journal events, `/metrics` labels, and `pefsl top`.
+    pub fn name(&self) -> String {
+        match &self.kind {
+            ObjectiveKind::Latency { q, threshold_us } => {
+                format!("{}:p{}<{}", self.endpoint, fmt_pct(q * 100.0), fmt_us(*threshold_us))
+            }
+            ObjectiveKind::Availability { target_pct } => {
+                format!("{}:avail>{}", self.endpoint, fmt_pct(*target_pct))
+            }
+        }
+    }
+
+    /// Error budget as a fraction of requests allowed to be "bad".
+    pub fn budget_frac(&self) -> f64 {
+        match &self.kind {
+            ObjectiveKind::Latency { q, .. } => (1.0 - q).max(1e-6),
+            ObjectiveKind::Availability { target_pct } => (1.0 - target_pct / 100.0).max(1e-6),
+        }
+    }
+
+    /// Score one tick into `(total, bad)` events for this objective.
+    fn score(&self, tick: &Tick) -> (u64, u64) {
+        let mut total = 0u64;
+        let mut bad = 0u64;
+        for row in &tick.rows {
+            if row.endpoint != self.endpoint {
+                continue;
+            }
+            match &self.kind {
+                ObjectiveKind::Latency { threshold_us, .. } => {
+                    // judged on completed requests with a recorded latency
+                    let n: u64 = row.hist_delta.iter().map(|&(_, c)| u64::from(c)).sum();
+                    total += n;
+                    bad += n - hist::count_le_sparse(&row.hist_delta, *threshold_us).min(n);
+                }
+                ObjectiveKind::Availability { .. } => {
+                    total += row.requests;
+                    bad += row.server_errors + row.unavailable;
+                }
+            }
+        }
+        (total, bad)
+    }
+}
+
+/// A full SLO declaration (one or more objectives).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloSpec {
+    pub objectives: Vec<Objective>,
+}
+
+impl SloSpec {
+    pub fn is_empty(&self) -> bool {
+        self.objectives.is_empty()
+    }
+
+    /// Parse the CLI form: groups `endpoint:obj,obj` separated by `;`,
+    /// objectives `pQQ<Xms|us|s` or `avail>PP.P` —
+    /// `infer:p95<5ms,avail>99.9;enroll:p99<20ms`.
+    pub fn parse(s: &str) -> Result<SloSpec> {
+        let mut objectives = Vec::new();
+        for group in s.split(';').map(str::trim).filter(|g| !g.is_empty()) {
+            let (endpoint, objs) = group
+                .split_once(':')
+                .ok_or_else(|| anyhow!("SLO group '{group}': expected 'endpoint:objectives'"))?;
+            let endpoint = endpoint.trim();
+            if endpoint.is_empty() {
+                bail!("SLO group '{group}': empty endpoint");
+            }
+            for obj in objs.split(',').map(str::trim).filter(|o| !o.is_empty()) {
+                objectives.push(Objective { endpoint: endpoint.to_string(), kind: parse_objective(obj)? });
+            }
+        }
+        if objectives.is_empty() {
+            bail!("SLO spec '{s}': no objectives");
+        }
+        Ok(SloSpec { objectives })
+    }
+
+    /// Parse the JSON file form:
+    /// `{"objectives": [{"endpoint": "infer", "objective": "p95<5ms"}, ...]}`
+    /// — the objective string is the same grammar as the CLI form.
+    pub fn from_json(v: &Value) -> Result<SloSpec> {
+        let mut objectives = Vec::new();
+        for (i, entry) in v.req_arr("objectives")?.iter().enumerate() {
+            let endpoint = entry.req_str("endpoint")?.to_string();
+            let obj = entry.req_str("objective")?;
+            objectives
+                .push(Objective { endpoint, kind: parse_objective(obj).map_err(|e| anyhow!("objectives[{i}]: {e}"))? });
+        }
+        if objectives.is_empty() {
+            bail!("SLO file: no objectives");
+        }
+        Ok(SloSpec { objectives })
+    }
+}
+
+fn parse_objective(s: &str) -> Result<ObjectiveKind> {
+    if let Some(rest) = s.strip_prefix('p') {
+        let (q_str, thr_str) = rest
+            .split_once('<')
+            .ok_or_else(|| anyhow!("latency objective '{s}': expected 'pQQ<threshold'"))?;
+        let q_pct: f64 = q_str.trim().parse().map_err(|_| anyhow!("objective '{s}': bad quantile '{q_str}'"))?;
+        if !(0.0 < q_pct && q_pct < 100.0) {
+            bail!("objective '{s}': quantile must be in (0, 100)");
+        }
+        let threshold_us = parse_duration_us(thr_str.trim())
+            .ok_or_else(|| anyhow!("objective '{s}': bad threshold '{thr_str}' (want e.g. 5ms, 800us, 1s)"))?;
+        Ok(ObjectiveKind::Latency { q: q_pct / 100.0, threshold_us })
+    } else if let Some(rest) = s.strip_prefix("avail") {
+        let rest = rest.strip_prefix("ability").unwrap_or(rest);
+        let pct_str = rest
+            .strip_prefix('>')
+            .ok_or_else(|| anyhow!("availability objective '{s}': expected 'avail>PP.P'"))?;
+        let target_pct: f64 =
+            pct_str.trim().parse().map_err(|_| anyhow!("objective '{s}': bad percentage '{pct_str}'"))?;
+        if !(0.0 < target_pct && target_pct < 100.0) {
+            bail!("objective '{s}': availability target must be in (0, 100)");
+        }
+        Ok(ObjectiveKind::Availability { target_pct })
+    } else {
+        bail!("objective '{s}': expected 'pQQ<threshold' or 'avail>PP.P'")
+    }
+}
+
+fn parse_duration_us(s: &str) -> Option<f64> {
+    let (num, mult) = if let Some(n) = s.strip_suffix("us") {
+        (n, 1.0)
+    } else if let Some(n) = s.strip_suffix("ms") {
+        (n, 1e3)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1e6)
+    } else {
+        return None;
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    (v > 0.0).then_some(v * mult)
+}
+
+fn fmt_pct(p: f64) -> String {
+    if p == p.trunc() { format!("{p:.0}") } else { format!("{p}") }
+}
+
+fn fmt_us(us: f64) -> String {
+    if us >= 1e6 && (us / 1e6) == (us / 1e6).trunc() {
+        format!("{:.0}s", us / 1e6)
+    } else if us >= 1e3 && (us / 1e3) == (us / 1e3).trunc() {
+        format!("{:.0}ms", us / 1e3)
+    } else {
+        format!("{us:.0}us")
+    }
+}
+
+/// Burn-rate alerting windows and threshold.
+#[derive(Clone, Copy, Debug)]
+pub struct BurnConfig {
+    /// Fast window, seconds (default 60).
+    pub short_s: u64,
+    /// Confirmation window, seconds (default 300).
+    pub long_s: u64,
+    /// Alert when both windows burn at ≥ this multiple of the sustainable
+    /// rate (default 2.0 — budget gone in half the window if sustained).
+    pub threshold: f64,
+}
+
+impl Default for BurnConfig {
+    fn default() -> BurnConfig {
+        BurnConfig { short_s: 60, long_s: 300, threshold: 2.0 }
+    }
+}
+
+/// Alert onset/recovery, returned from [`SloEngine::observe_tick`] for
+/// the serving layer to journal.
+#[derive(Clone, Debug)]
+pub struct SloTransition {
+    pub objective: String,
+    pub endpoint: String,
+    pub alerting: bool,
+    pub short_burn: f64,
+    pub long_burn: f64,
+}
+
+/// Point-in-time state of one objective.
+#[derive(Clone, Debug)]
+pub struct SloStatus {
+    pub objective: String,
+    pub endpoint: String,
+    pub budget_frac: f64,
+    pub short_burn: f64,
+    pub long_burn: f64,
+    /// Fraction of the window's error budget still unspent, in [0, 1].
+    pub budget_remaining: f64,
+    pub alerting: bool,
+}
+
+impl SloStatus {
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("objective", self.objective.as_str())
+            .set("endpoint", self.endpoint.as_str())
+            .set("budget_frac", self.budget_frac)
+            .set("short_burn", self.short_burn)
+            .set("long_burn", self.long_burn)
+            .set("budget_remaining", self.budget_remaining)
+            .set("alerting", self.alerting);
+        o
+    }
+}
+
+struct ObjectiveState {
+    objective: Objective,
+    /// Per-second `(t_s, total, bad)` scores, newest at the back.
+    ring: VecDeque<(u64, u64, u64)>,
+    alerting: bool,
+}
+
+impl ObjectiveState {
+    fn burn_over(&self, from_s: u64, budget: f64) -> f64 {
+        let (mut total, mut bad) = (0u64, 0u64);
+        for &(t, tot, b) in &self.ring {
+            if t >= from_s {
+                total += tot;
+                bad += b;
+            }
+        }
+        if total == 0 { 0.0 } else { (bad as f64 / total as f64) / budget }
+    }
+}
+
+/// Evaluates a [`SloSpec`] against the telemetry tick stream.
+pub struct SloEngine {
+    cfg: BurnConfig,
+    window_s: u64,
+    states: Vec<ObjectiveState>,
+}
+
+impl SloEngine {
+    /// `window_s` bounds the per-objective score ring (use the telemetry
+    /// window; budget-remaining is measured over it).
+    pub fn new(spec: SloSpec, cfg: BurnConfig, window_s: u64) -> SloEngine {
+        let window_s = window_s.max(cfg.long_s);
+        let states = spec
+            .objectives
+            .into_iter()
+            .map(|objective| ObjectiveState { objective, ring: VecDeque::new(), alerting: false })
+            .collect();
+        SloEngine { cfg, window_s, states }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// Score one tick; returns any alert onset/recovery transitions.
+    pub fn observe_tick(&mut self, tick: &Tick) -> Vec<SloTransition> {
+        let mut transitions = Vec::new();
+        for st in &mut self.states {
+            let (total, bad) = st.objective.score(tick);
+            st.ring.push_back((tick.t_s, total, bad));
+            let horizon = tick.t_s.saturating_sub(self.window_s.saturating_sub(1));
+            while st.ring.front().is_some_and(|&(t, _, _)| t < horizon) {
+                st.ring.pop_front();
+            }
+            let budget = st.objective.budget_frac();
+            let short = st.burn_over(tick.t_s.saturating_sub(self.cfg.short_s.saturating_sub(1)), budget);
+            let long = st.burn_over(tick.t_s.saturating_sub(self.cfg.long_s.saturating_sub(1)), budget);
+            let now_alerting = short >= self.cfg.threshold && long >= self.cfg.threshold;
+            if now_alerting != st.alerting {
+                st.alerting = now_alerting;
+                transitions.push(SloTransition {
+                    objective: st.objective.name(),
+                    endpoint: st.objective.endpoint.clone(),
+                    alerting: now_alerting,
+                    short_burn: short,
+                    long_burn: long,
+                });
+            }
+        }
+        transitions
+    }
+
+    /// Any objective currently in burn alert → `/healthz` `degraded`.
+    pub fn degraded(&self) -> bool {
+        self.states.iter().any(|s| s.alerting)
+    }
+
+    pub fn statuses(&self) -> Vec<SloStatus> {
+        let now = self.states.iter().filter_map(|s| s.ring.back().map(|&(t, _, _)| t)).max().unwrap_or(0);
+        self.states
+            .iter()
+            .map(|st| {
+                let budget = st.objective.budget_frac();
+                let short = st.burn_over(now.saturating_sub(self.cfg.short_s.saturating_sub(1)), budget);
+                let long = st.burn_over(now.saturating_sub(self.cfg.long_s.saturating_sub(1)), budget);
+                let window_burn = st.burn_over(0, budget);
+                SloStatus {
+                    objective: st.objective.name(),
+                    endpoint: st.objective.endpoint.clone(),
+                    budget_frac: budget,
+                    short_burn: short,
+                    long_burn: long,
+                    budget_remaining: (1.0 - window_burn).clamp(0.0, 1.0),
+                    alerting: st.alerting,
+                }
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("degraded", self.degraded())
+            .set("short_window_s", self.cfg.short_s)
+            .set("long_window_s", self.cfg.long_s)
+            .set("burn_threshold", self.cfg.threshold)
+            .set("objectives", self.statuses().iter().map(SloStatus::to_json).collect::<Vec<_>>());
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::hist::LatencyHistogram;
+    use crate::telemetry::series::RowTick;
+
+    fn latency_tick(t_s: u64, endpoint: &str, fast: u64, slow: u64) -> Tick {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..fast {
+            h.record_us(1_000.0); // 1 ms — under a 5 ms objective
+        }
+        for _ in 0..slow {
+            h.record_us(50_000.0); // 50 ms — over it
+        }
+        Tick {
+            t_s,
+            rows: vec![RowTick {
+                model: "m".into(),
+                endpoint: endpoint.into(),
+                requests: fast + slow,
+                ok: fast + slow,
+                hist_delta: h.delta(&[]),
+                ..RowTick::default()
+            }],
+            ..Tick::default()
+        }
+    }
+
+    fn avail_tick(t_s: u64, endpoint: &str, ok: u64, errors: u64) -> Tick {
+        Tick {
+            t_s,
+            rows: vec![RowTick {
+                model: "m".into(),
+                endpoint: endpoint.into(),
+                requests: ok + errors,
+                ok,
+                server_errors: errors,
+                ..RowTick::default()
+            }],
+            ..Tick::default()
+        }
+    }
+
+    #[test]
+    fn parse_cli_form() {
+        let spec = SloSpec::parse("infer:p95<5ms,avail>99.9;enroll:p99<20ms").unwrap();
+        assert_eq!(spec.objectives.len(), 3);
+        assert_eq!(
+            spec.objectives[0].kind,
+            ObjectiveKind::Latency { q: 0.95, threshold_us: 5_000.0 }
+        );
+        assert_eq!(spec.objectives[0].name(), "infer:p95<5ms");
+        assert_eq!(spec.objectives[1].kind, ObjectiveKind::Availability { target_pct: 99.9 });
+        assert_eq!(spec.objectives[1].name(), "infer:avail>99.9");
+        assert_eq!(spec.objectives[2].endpoint, "enroll");
+        // fractional quantile and unit variants
+        let spec = SloSpec::parse("infer:p99.9<800us,avail>99").unwrap();
+        assert_eq!(
+            spec.objectives[0].kind,
+            ObjectiveKind::Latency { q: 0.999, threshold_us: 800.0 }
+        );
+        let spec = SloSpec::parse("infer:p50<1s").unwrap();
+        assert_eq!(
+            spec.objectives[0].kind,
+            ObjectiveKind::Latency { q: 0.50, threshold_us: 1e6 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "infer",
+            "infer:p95",
+            "infer:p95<5",
+            "infer:p95<5parsecs",
+            "infer:p0<5ms",
+            "infer:p100<5ms",
+            "infer:avail>100",
+            "infer:avail>0",
+            "infer:avail=99",
+            ":p95<5ms",
+            "infer:q95<5ms",
+        ] {
+            assert!(SloSpec::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn parse_json_form() {
+        let text = r#"{"objectives": [
+            {"endpoint": "infer", "objective": "p95<5ms"},
+            {"endpoint": "infer", "objective": "avail>99.9"}
+        ]}"#;
+        let v = crate::json::parse(text).unwrap();
+        let spec = SloSpec::from_json(&v).unwrap();
+        assert_eq!(spec, SloSpec::parse("infer:p95<5ms,avail>99.9").unwrap());
+        assert!(SloSpec::from_json(&crate::json::parse(r#"{"objectives": []}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn budget_fractions() {
+        let spec = SloSpec::parse("infer:p95<5ms,avail>99.9").unwrap();
+        assert!((spec.objectives[0].budget_frac() - 0.05).abs() < 1e-9);
+        assert!((spec.objectives[1].budget_frac() - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burn_alert_fires_and_recovers() {
+        let spec = SloSpec::parse("infer:p95<5ms").unwrap();
+        let cfg = BurnConfig { short_s: 5, long_s: 15, threshold: 2.0 };
+        let mut eng = SloEngine::new(spec, cfg, 60);
+        // healthy: 2% violations against a 5% budget → burn 0.4
+        let mut transitions = Vec::new();
+        for t in 0..20 {
+            transitions.extend(eng.observe_tick(&latency_tick(t, "infer", 98, 2)));
+        }
+        assert!(transitions.is_empty(), "healthy traffic must not alert");
+        assert!(!eng.degraded());
+        // regression: 20% violations → burn 4.0; long window needs enough
+        // bad seconds for its blended burn to cross 2.0 as well
+        let mut onset = None;
+        for t in 20..40 {
+            for tr in eng.observe_tick(&latency_tick(t, "infer", 80, 20)) {
+                assert!(tr.alerting);
+                assert!(tr.short_burn >= 2.0 && tr.long_burn >= 2.0);
+                onset = Some(t);
+            }
+            if onset.is_some() {
+                break;
+            }
+        }
+        let onset = onset.expect("sustained burn must alert");
+        assert!(eng.degraded());
+        let status = &eng.statuses()[0];
+        assert!(status.alerting);
+        assert!(status.budget_remaining < 1.0);
+        // recovery: clean traffic drains both windows below threshold
+        let mut recovered = false;
+        for t in onset + 1..onset + 40 {
+            for tr in eng.observe_tick(&latency_tick(t, "infer", 100, 0)) {
+                assert!(!tr.alerting);
+                recovered = true;
+            }
+        }
+        assert!(recovered, "clean traffic must clear the alert");
+        assert!(!eng.degraded());
+    }
+
+    #[test]
+    fn availability_objective_counts_5xx() {
+        let spec = SloSpec::parse("infer:avail>99").unwrap(); // 1% budget
+        let cfg = BurnConfig { short_s: 5, long_s: 10, threshold: 2.0 };
+        let mut eng = SloEngine::new(spec, cfg, 60);
+        for t in 0..15 {
+            // 10% 5xx → burn 10× budget
+            eng.observe_tick(&avail_tick(t, "infer", 90, 10));
+        }
+        assert!(eng.degraded());
+        let st = &eng.statuses()[0];
+        assert!(st.short_burn >= 2.0 && st.long_burn >= 2.0);
+    }
+
+    #[test]
+    fn objectives_only_score_their_endpoint() {
+        let spec = SloSpec::parse("infer:avail>99").unwrap();
+        let cfg = BurnConfig { short_s: 5, long_s: 10, threshold: 2.0 };
+        let mut eng = SloEngine::new(spec, cfg, 60);
+        for t in 0..15 {
+            // errors live on 'enroll'; the 'infer' objective must not see them
+            eng.observe_tick(&avail_tick(t, "enroll", 0, 50));
+        }
+        assert!(!eng.degraded());
+        assert_eq!(eng.statuses()[0].short_burn, 0.0);
+    }
+
+    #[test]
+    fn no_traffic_means_no_burn() {
+        let spec = SloSpec::parse("infer:p95<5ms").unwrap();
+        let mut eng = SloEngine::new(spec, BurnConfig::default(), 900);
+        for t in 0..100 {
+            eng.observe_tick(&Tick { t_s: t, ..Tick::default() });
+        }
+        assert!(!eng.degraded());
+        let st = &eng.statuses()[0];
+        assert_eq!(st.short_burn, 0.0);
+        assert_eq!(st.budget_remaining, 1.0);
+    }
+
+    #[test]
+    fn to_json_shape() {
+        let spec = SloSpec::parse("infer:p95<5ms,avail>99.9").unwrap();
+        let eng = SloEngine::new(spec, BurnConfig::default(), 900);
+        let j = eng.to_json();
+        assert_eq!(j.get("degraded").unwrap().as_bool(), Some(false));
+        let objs = j.get("objectives").unwrap().as_arr().unwrap();
+        assert_eq!(objs.len(), 2);
+        assert_eq!(objs[0].get("objective").unwrap().as_str(), Some("infer:p95<5ms"));
+    }
+}

@@ -115,6 +115,30 @@ impl EventJournal {
             .set("events", Value::Arr(self.recent(n).iter().map(Event::to_json).collect()));
         o
     }
+
+    /// Events with `seq > cursor`, **oldest first** — the increment a
+    /// `?since=` poller has not yet seen.  If more events were recorded
+    /// since the cursor than the ring retains, the oldest are gone, but
+    /// the survivors carry their true sequence numbers so the gap is
+    /// visible to the caller.
+    pub fn since(&self, cursor: u64) -> Vec<Event> {
+        let ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        ring.iter().filter(|e| e.seq > cursor).cloned().collect()
+    }
+
+    /// JSON for a `?since=` poll: `{total, next, events[]}` with events
+    /// oldest first; pass `next` back as the cursor on the next poll.  A
+    /// cursor ahead of `total` (server restarted under the poller) resets
+    /// to the current total.
+    pub fn since_json(&self, cursor: u64) -> Value {
+        let events = self.since(cursor);
+        let next = events.last().map(|e| e.seq).unwrap_or_else(|| self.total());
+        let mut o = Value::obj();
+        o.set("total", self.total())
+            .set("next", next)
+            .set("events", Value::Arr(events.iter().map(Event::to_json).collect()));
+        o
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +170,54 @@ mod tests {
         assert_eq!(ev[0].detail, "tok9");
         assert_eq!(ev[3].detail, "tok6");
         assert_eq!(j.total(), 10);
+    }
+
+    #[test]
+    fn since_cursor_reads_increments_oldest_first() {
+        let j = EventJournal::new(8);
+        j.record("server_start", "-", "listening");
+        j.record("deploy", "m", "m@v1");
+        // first poll from zero sees everything, oldest first
+        let all = j.since(0);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].kind, "server_start");
+        assert_eq!(all[1].kind, "deploy");
+        // advancing the cursor yields only the increment
+        let cursor = all.last().unwrap().seq;
+        assert!(j.since(cursor).is_empty());
+        j.record("session_mint", "m", "tok");
+        let inc = j.since(cursor);
+        assert_eq!(inc.len(), 1);
+        assert_eq!(inc[0].kind, "session_mint");
+    }
+
+    #[test]
+    fn since_survives_ring_eviction_with_true_seqs() {
+        let j = EventJournal::new(4);
+        for i in 0..10 {
+            j.record("session_mint", "m", format!("tok{i}"));
+        }
+        // cursor 2 is long evicted; survivors still carry true seqs 7..=10
+        let ev = j.since(2);
+        assert_eq!(ev.len(), 4);
+        assert_eq!(ev[0].seq, 7);
+        assert_eq!(ev[3].seq, 10);
+    }
+
+    #[test]
+    fn since_json_carries_next_cursor() {
+        let j = EventJournal::new(8);
+        j.record("server_start", "-", "listening");
+        let v = j.since_json(0);
+        assert_eq!(v.get("next").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get("events").and_then(Value::as_arr).unwrap().len(), 1);
+        // caught-up poll: empty events, cursor holds
+        let v2 = j.since_json(1);
+        assert_eq!(v2.get("next").and_then(Value::as_usize), Some(1));
+        assert!(v2.get("events").and_then(Value::as_arr).unwrap().is_empty());
+        // a cursor from a previous server life resets to the live total
+        let v3 = j.since_json(999);
+        assert_eq!(v3.get("next").and_then(Value::as_usize), Some(1));
     }
 
     #[test]

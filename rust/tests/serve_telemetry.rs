@@ -1,0 +1,318 @@
+//! Integration suite for the serve-side telemetry stack (ISSUE 10):
+//!
+//! * the 1 Hz collector turns live traffic into `/metrics` time-series
+//!   rows, the SLO engine scores configured objectives, and the
+//!   Prometheus exposition carries native `_bucket` histogram families
+//!   plus SLO gauges — all scraped over the wire;
+//! * `/debug/events` supports `?since=` cursors for incremental polling
+//!   and the debug query params reject junk with a 400 instead of
+//!   silently falling back;
+//! * a fault-plan breaker episode (`self_check_failed` → `breaker_open`
+//!   → `rollback`) fires the flight recorder: `GET /debug/flight`
+//!   serves a sealed dump whose captured journal holds the episode,
+//!   whose trace ids reconcile against the live journal, and which also
+//!   lands as a `flight-*.json` file under `--flight-dir`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pefsl::bundle::Bundle;
+use pefsl::dse::BackboneSpec;
+use pefsl::engine::{BreakerConfig, Registry};
+use pefsl::fault::{FaultInjector, FaultPlan};
+use pefsl::json::{self, Value};
+use pefsl::serve::client::{HttpClient, RetryClient, RetryPolicy};
+use pefsl::serve::{ServeConfig, Server};
+use pefsl::tarch::Tarch;
+use pefsl::telemetry::SloSpec;
+use pefsl::util::Prng;
+
+const IMG_ELEMS: usize = 16 * 16 * 3;
+
+fn bundle(seed: u64, version: &str) -> Bundle {
+    let spec = BackboneSpec { image_size: 16, feature_maps: 4, ..BackboneSpec::headline() };
+    Bundle::pack("m", version, spec.build_graph(seed).unwrap(), Tarch::z7020_8x8()).unwrap()
+}
+
+fn infer_body(rng: &mut Prng, n: usize) -> Value {
+    let imgs: Vec<Value> = (0..n)
+        .map(|_| Value::Arr((0..IMG_ELEMS).map(|_| Value::Num(f64::from(rng.f32()))).collect()))
+        .collect();
+    let mut body = Value::obj();
+    body.set("images", Value::Arr(imgs));
+    body
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("pefsl_servetel_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Pull every `trace=HEX` id out of a journal event detail line.
+fn trace_ids(detail: &str) -> Vec<String> {
+    detail
+        .split("trace=")
+        .skip(1)
+        .map(|rest| rest.chars().take_while(char::is_ascii_hexdigit).collect())
+        .filter(|s: &String| !s.is_empty())
+        .collect()
+}
+
+/// The collector samples at 1 Hz, SLO gauges appear as soon as a spec is
+/// armed, and `?since=` cursors page the journal incrementally.
+#[test]
+fn collector_feeds_series_slo_and_prometheus_over_the_wire() {
+    let registry = Arc::new(Registry::new());
+    registry.deploy("m", &bundle(1, "v1")).unwrap();
+    let cfg = ServeConfig {
+        slo: SloSpec::parse("infer:p95<5s,avail>99.9").unwrap(),
+        ..ServeConfig::default()
+    };
+    let handle = Server::start(Arc::clone(&registry), "127.0.0.1:0", cfg).unwrap();
+    let addr = handle.addr().to_string();
+    let mut http = HttpClient::connect(&addr).unwrap();
+
+    let mut rng = Prng::new(11);
+    for _ in 0..8 {
+        let r = http.post("/v1/m/infer", &infer_body(&mut rng, 1)).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_text());
+    }
+
+    // The 1 Hz collector must fold the traffic into the series ring.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let metrics = loop {
+        let m = http.get("/metrics").unwrap().json().unwrap();
+        let rows = m.path(&["series", "rows"]).and_then(Value::as_arr).map_or(0, |r| {
+            r.iter()
+                .filter(|row| {
+                    row.req_str("endpoint").unwrap() == "infer"
+                        && row.req_usize("total").unwrap() >= 8
+                })
+                .count()
+        });
+        if rows > 0 {
+            break m;
+        }
+        assert!(Instant::now() < deadline, "collector never sampled the traffic: {m:?}");
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    let rows = metrics.path(&["series", "rows"]).unwrap().as_arr().unwrap();
+    let row = rows
+        .iter()
+        .find(|r| r.req_str("endpoint").unwrap() == "infer")
+        .expect("infer row in series summary")
+        .clone();
+    assert_eq!(row.req_str("model").unwrap(), "m");
+    assert!(row.req_usize("p50_us").unwrap() > 0, "histogram deltas feed quantiles: {row:?}");
+    assert!(row.get("requests").unwrap().as_arr().unwrap().len() <= 60, "per-second sparkline");
+    assert!(metrics.path(&["series", "window_s"]).unwrap().as_usize().unwrap() >= 60);
+
+    // SLO block: both objectives scored, nothing burning at p95<5s.
+    let slo = metrics.get("slo").expect("slo block in /metrics");
+    assert!(!slo.req_bool("degraded").unwrap());
+    let objectives = slo.get("objectives").unwrap().as_arr().unwrap();
+    assert_eq!(objectives.len(), 2, "{slo:?}");
+    for o in objectives {
+        assert!(!o.req_bool("alerting").unwrap());
+        assert!(o.get("budget_remaining").unwrap().as_f64().unwrap() > 0.0, "{o:?}");
+    }
+    // Flight block present, no dumps yet.
+    assert_eq!(metrics.path(&["flight", "dumps"]).unwrap().as_usize(), Some(0));
+
+    // Prometheus exposition: native histogram families + SLO gauges.
+    let text = http.get("/metrics?format=prometheus").unwrap().body_text();
+    for needle in [
+        "# TYPE pefsl_request_latency_seconds histogram",
+        "pefsl_request_latency_seconds_bucket{model=\"m\",endpoint=\"infer\",le=\"+Inf\"} 8",
+        "# TYPE pefsl_queue_wait_seconds histogram",
+        "pefsl_queue_wait_seconds_bucket{model=\"m\",le=\"+Inf\"}",
+        "# TYPE pefsl_admission_service_seconds histogram",
+        "# TYPE pefsl_slo_burn_rate gauge",
+        "pefsl_slo_burn_rate{objective=\"infer:p95<5s\",window=\"short\"}",
+        "pefsl_slo_burn_rate{objective=\"infer:avail>99.9\",window=\"long\"}",
+        "pefsl_slo_error_budget_remaining{objective=\"infer:p95<5s\"}",
+        "pefsl_slo_alerting{objective=\"infer:avail>99.9\"} 0",
+        "pefsl_flight_dumps_total 0",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+
+    // Journal cursor: ?since=0 returns everything plus a resume cursor;
+    // resuming from `next` returns only what happened after.
+    let page = http.get("/debug/events?since=0").unwrap().json().unwrap();
+    let total = page.req_usize("total").unwrap();
+    let next = page.req_usize("next").unwrap();
+    assert!(total >= 1, "server_start is journaled: {page:?}");
+    let events = page.req_arr("events").unwrap();
+    assert_eq!(events.len(), total, "since=0 returns everything still in the ring");
+    assert!(events.iter().any(|e| e.req_str("kind").unwrap() == "server_start"), "{page:?}");
+    let page2 = http.get(&format!("/debug/events?since={next}")).unwrap().json().unwrap();
+    for e in page2.get("events").unwrap().as_arr().unwrap() {
+        assert!(e.req_usize("seq").unwrap() > next, "cursor must exclude seen events");
+    }
+
+    // Strict query params: junk and zero are 400s, not silent defaults.
+    for path in ["/debug/trace?n=x", "/debug/trace?n=0", "/debug/events?since=abc"] {
+        let r = http.get(path).unwrap();
+        assert_eq!(r.status, 400, "{path} must 400: {}", r.body_text());
+        let v = r.json().unwrap();
+        assert!(v.req_str("error").unwrap().contains(path.split('?').nth(1).unwrap().split('=').next().unwrap()));
+    }
+
+    // No anomalies yet → no flight dump to serve.
+    let r = http.get("/debug/flight").unwrap();
+    assert_eq!(r.status, 404, "{}", r.body_text());
+
+    // /healthz carries the SLO verdict.
+    let h = http.get("/healthz").unwrap().json().unwrap();
+    assert_eq!(h.req_str("status").unwrap(), "ok");
+    assert!(!h.req_bool("slo_burning").unwrap());
+
+    handle.shutdown();
+    handle.join().unwrap();
+}
+
+/// A breaker episode under a fault plan seals a flight dump: served at
+/// `/debug/flight`, persisted under `--flight-dir`, journaled as
+/// `flight_dump`, and its captured evidence reconciles with the live
+/// journal's `self_check_failed → breaker_open → rollback` story.
+#[test]
+fn breaker_episode_fires_flight_recorder() {
+    let flight_dir = tmpdir("breaker");
+    let plan = FaultPlan {
+        seed: 3,
+        seu_act_rate: 1.0,
+        seu_arm_after_deploys: 1, // v1 builds clean; v2's engine is armed
+        ..FaultPlan::default()
+    };
+    let registry = Arc::new(Registry::new());
+    registry.set_fault(Arc::new(FaultInjector::new(plan).unwrap()));
+    registry.set_breaker_config(BreakerConfig {
+        failures_to_open: 2,
+        probes_to_close: 1,
+        cooldown: Duration::from_millis(40),
+    });
+    registry.deploy("m", &bundle(1, "v1")).unwrap();
+
+    let cfg = ServeConfig {
+        self_check_ms: 20,
+        flight_dir: Some(flight_dir.clone()),
+        ..ServeConfig::default()
+    };
+    let handle = Server::start(Arc::clone(&registry), "127.0.0.1:0", cfg).unwrap();
+    let addr = handle.addr().to_string();
+    let mut http = HttpClient::connect(&addr).unwrap();
+
+    let mut rng = Prng::new(5);
+    let r = http.post("/v1/m/infer", &infer_body(&mut rng, 1)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+
+    // Deploy the armed v2; the prober fails checks, opens the breaker,
+    // rolls back — and the collector's journal scan fires the recorder.
+    registry.deploy("m", &bundle(2, "v2")).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while registry.rollbacks_total() == 0 {
+        assert!(Instant::now() < deadline, "prober never rolled back");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // The retrying client rides out the shed window while we poll.
+    let mut retry = RetryClient::new(
+        addr.clone(),
+        RetryPolicy { max_attempts: 6, ..RetryPolicy::default() },
+    );
+    let dump = loop {
+        let r = retry.get("/debug/flight").unwrap();
+        if r.status == 200 {
+            break r.json().unwrap();
+        }
+        assert_eq!(r.status, 404, "{}", r.body_text());
+        assert!(Instant::now() < deadline, "flight recorder never fired");
+        std::thread::sleep(Duration::from_millis(100));
+    };
+
+    assert_eq!(dump.req_str("schema").unwrap(), "pefsl.flight.v1");
+    assert_eq!(dump.path(&["trigger", "kind"]).unwrap().as_str(), Some("breaker_open"));
+    assert_eq!(dump.path(&["trigger", "model"]).unwrap().as_str(), Some("m"));
+
+    // Sealed evidence: traces, journal tail, series window, metrics.
+    let captured = dump.get("captured").expect("captured evidence");
+    assert!(captured.get("traces").unwrap().as_arr().is_some());
+    assert!(captured.path(&["series", "rows"]).is_some());
+    assert!(captured.path(&["metrics", "health"]).is_some());
+    let sealed: Vec<Value> =
+        captured.path(&["journal", "events"]).unwrap().as_arr().unwrap().to_vec();
+    let sealed_has = |k: &str| sealed.iter().any(|e| e.req_str("kind").unwrap() == k);
+    // breaker_open is journaled before the collector can see it, and at
+    // least one self_check_failed precedes it; rollback follows within
+    // microseconds (a pointer swap) so the capture — which runs strictly
+    // after the trigger scan — has it too.
+    for kind in ["self_check_failed", "breaker_open", "rollback"] {
+        assert!(sealed_has(kind), "dump journal missing '{kind}': {sealed:?}");
+    }
+
+    // Reconcile: every trace id cited by the sealed episode must appear
+    // in the live journal's telling of the same episode.
+    let live = loop {
+        let v = retry.get("/debug/events?n=256").unwrap().json().unwrap();
+        let evs: Vec<Value> = v.req_arr("events").unwrap().to_vec();
+        let has = |k: &str| evs.iter().any(|e| e.req_str("kind").unwrap() == k);
+        if ["self_check_failed", "breaker_open", "rollback", "flight_dump"].iter().all(|k| has(k))
+        {
+            break evs;
+        }
+        assert!(Instant::now() < deadline, "live journal incomplete: {v:?}");
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    let live_ids: Vec<String> =
+        live.iter().flat_map(|e| trace_ids(e.req_str("detail").unwrap())).collect();
+    let episode_ids: Vec<String> = sealed
+        .iter()
+        .filter(|e| {
+            matches!(
+                e.req_str("kind").unwrap(),
+                "self_check_failed" | "breaker_open" | "rollback"
+            )
+        })
+        .flat_map(|e| trace_ids(e.req_str("detail").unwrap()))
+        .collect();
+    assert!(!episode_ids.is_empty(), "episode events carry trace ids: {sealed:?}");
+    for id in &episode_ids {
+        assert!(live_ids.contains(id), "sealed trace id {id} absent from live journal");
+    }
+
+    // The dump also landed on disk, newest-last, and parses back whole.
+    let flight_dump = live
+        .iter()
+        .find(|e| e.req_str("kind").unwrap() == "flight_dump")
+        .expect("flight_dump journaled");
+    assert!(flight_dump.req_str("detail").unwrap().contains("breaker_open"));
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&flight_dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("flight-") && n.ends_with(".json"))
+        })
+        .collect();
+    assert!(!files.is_empty(), "no dump written under --flight-dir");
+    files.sort();
+    let body = std::fs::read_to_string(files.last().unwrap()).unwrap();
+    let on_disk = json::parse(&body).unwrap();
+    assert_eq!(on_disk.req_str("schema").unwrap(), "pefsl.flight.v1");
+    assert_eq!(on_disk.path(&["trigger", "kind"]).unwrap().as_str(), Some("breaker_open"));
+
+    // Counters agree end to end.
+    let m = retry.get("/metrics").unwrap().json().unwrap();
+    assert!(m.path(&["flight", "dumps"]).unwrap().as_usize().unwrap() >= 1);
+    let text = retry.get("/metrics?format=prometheus").unwrap().body_text();
+    assert!(text.contains("pefsl_flight_dumps_total"), "{text}");
+    assert!(!text.contains("pefsl_flight_dumps_total 0"), "dump not counted: {text}");
+
+    handle.shutdown();
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&flight_dir);
+}

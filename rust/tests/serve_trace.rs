@@ -291,7 +291,11 @@ fn prometheus_metrics_negotiated_over_the_wire() {
     assert!(text.contains("# TYPE pefsl_requests_total counter"), "{text}");
     let row = "pefsl_requests_total{model=\"m\",endpoint=\"infer\"} 1";
     assert!(text.contains(row), "{text}");
-    assert!(text.contains("# TYPE pefsl_request_latency_seconds summary"), "{text}");
+    assert!(text.contains("# TYPE pefsl_request_latency_seconds histogram"), "{text}");
+    assert!(
+        text.contains("pefsl_request_latency_seconds_bucket{model=\"m\",endpoint=\"infer\",le=\"+Inf\"} 1"),
+        "{text}"
+    );
     assert!(text.contains("pefsl_admission_depth{model=\"m\"}"), "{text}");
     assert!(text.contains("pefsl_uptime_seconds"), "{text}");
 
